@@ -1,0 +1,238 @@
+//! Mega-element FSL on the TREC-shaped text task (§6, §7.4, Tables 8/9).
+//!
+//! The embedding-bag model's table rows (τ = 18 weights each) are the
+//! natural mega-elements. Per round, each client:
+//!  1. (round 0) privately retrieves its vocabulary's embedding rows via
+//!     mega-PSR — one DPF per cuckoo bin, payload = a whole row;
+//!  2. locally trains (L2 `embbag_grad` artifact via PJRT);
+//!  3. selects top-k *rows* by summed |Δ| (the paper's §7.4 grouping);
+//!  4. uploads Δ-rows via mega-SSA; the dense non-embedding parameters go
+//!     through the trivial-SA baseline, mirroring the §7.5 cost split.
+//!
+//! Prints the Table 9 census, per-round loss, and final accuracy.
+//!
+//! ```sh
+//! cargo run --release --example mega_element -- rounds=25 c=0.1
+//! ```
+
+use anyhow::{anyhow, Result};
+use fsl::baseline::trivial_sa;
+use fsl::coordinator::top_k_groups;
+use fsl::crypto::rng::Rng;
+use fsl::data::{TextDataset, TrecCensus};
+use fsl::group::{fixed_decode, fixed_encode, MegaElem};
+use fsl::hashing::CuckooParams;
+use fsl::metrics::bits_to_mb;
+use fsl::protocol::{mega, psr, ssa, Session, SessionParams};
+use fsl::runtime::Executor;
+use std::collections::HashMap;
+
+const TAU: usize = 18; // embedding dim = mega-element size
+
+fn kv() -> HashMap<String, String> {
+    std::env::args()
+        .skip(1)
+        .filter_map(|a| a.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
+        .collect()
+}
+
+fn get<T: std::str::FromStr>(kv: &HashMap<String, String>, key: &str, default: T) -> T {
+    kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let kv = kv();
+    let artifacts: String = get(&kv, "artifacts", "artifacts".to_string());
+    let rounds: usize = get(&kv, "rounds", 60);
+    let c: f64 = get(&kv, "c", 0.10); // compression over embedding rows
+    let lr: f32 = get(&kv, "lr", 1.0);
+    let seed: u64 = get(&kv, "seed", 7);
+
+    let exec = Executor::new(&artifacts)?;
+    let m_total = exec.manifest().int("embbag_grad", "params")? as usize;
+    let m_emb = exec.manifest().int("embbag_grad", "embedding_params")? as usize;
+    let vocab = exec.manifest().int("embbag_grad", "vocab")? as usize;
+    let batch = exec.manifest().int("embbag_grad", "batch")? as usize;
+    let classes = 6usize;
+    let rows = vocab; // one mega-element per vocabulary row
+    let k_rows = ((rows as f64 * c).round() as usize).max(1);
+
+    // Table 9 census + data.
+    let census = TrecCensus::default();
+    println!("# Table 9 census: vocab={} clients={} train={} per-client words={} samples={}",
+        census.vocab, census.clients, census.train_samples,
+        census.words_per_client, census.samples_per_client);
+    let data = TextDataset::synthesize(census, seed);
+
+    // Seeded init of the flat parameter vector.
+    let mut prng = Rng::new(seed ^ 0x22);
+    let mut params: Vec<f32> = Vec::with_capacity(m_total);
+    params.extend((0..m_emb).map(|_| prng.gen_normal() as f32 * 0.05));
+    let shapes = [(TAU, 64), (64usize, 0usize), (64, classes), (classes, 0)];
+    for (a, b) in shapes {
+        if b > 0 {
+            let s = (2.0 / a as f64).sqrt() as f32;
+            params.extend((0..a * b).map(|_| prng.gen_normal() as f32 * s));
+        } else {
+            params.extend(std::iter::repeat(0f32).take(a));
+        }
+    }
+    assert_eq!(params.len(), m_total);
+
+    // --- Round-0 demonstration: mega-PSR retrieval of client 0's rows ---
+    let mega_weights: Vec<MegaElem<TAU>> = mega::group_weights::<TAU>(
+        &params[..m_emb].iter().map(|&f| fixed_encode(f)).collect::<Vec<_>>(),
+    );
+    let client_rows: Vec<u64> = data.client_vocab[0].iter().map(|&w| w as u64).collect();
+    let psr_session = Session::new_full(SessionParams {
+        m: rows as u64,
+        k: client_rows.len(),
+        cuckoo: CuckooParams::default().with_seed(seed ^ 0x77),
+    });
+    let mut rng = Rng::new(seed);
+    let (ctx, batch_keys) = psr::client_query::<MegaElem<TAU>>(&psr_session, &client_rows, &mut rng)
+        .map_err(|e| anyhow!("{e}"))?;
+    let a0 = psr::server_answer(&psr_session, &mega_weights, &batch_keys.server_keys(0));
+    let a1 = psr::server_answer(&psr_session, &mega_weights, &batch_keys.server_keys(1));
+    let got = psr::client_reconstruct(&ctx, psr_session.simple.num_bins(), &client_rows, &a0, &a1);
+    for (i, &r) in client_rows.iter().enumerate() {
+        assert_eq!(got[i], mega_weights[r as usize]);
+    }
+    println!(
+        "# mega-PSR: client 0 retrieved {} embedding rows ({:.3} MB keys vs {:.3} MB full download)",
+        client_rows.len(),
+        bits_to_mb(batch_keys.upload_bits()),
+        bits_to_mb(m_emb * 64),
+    );
+
+    // ------------------------------ training ----------------------------
+    println!("# round,loss,emb_upload_mb,other_upload_mb,accuracy");
+    let mut accuracy = 0.0f32;
+    for round in 0..rounds {
+        let mut rng = Rng::new(seed ^ (round as u64 + 1).wrapping_mul(0x9e37));
+        let session = Session::new_full(SessionParams {
+            m: rows as u64,
+            k: k_rows,
+            cuckoo: CuckooParams::default().with_seed(seed ^ round as u64),
+        });
+
+        let mut mega_clients: Vec<(Vec<u64>, Vec<MegaElem<TAU>>)> = Vec::new();
+        let mut other_uploads: Vec<trivial_sa::TrivialUpload<u64>> = Vec::new();
+        let mut loss_sum = 0.0f32;
+
+        for cidx in 0..census.clients {
+            // Local batch from this client's examples.
+            let examples: Vec<(u8, Vec<u32>)> = data
+                .client_examples(cidx)
+                .map(|(_, l, w)| (*l, w.clone()))
+                .collect();
+            let items: Vec<(u8, Vec<u32>)> = (0..batch)
+                .map(|_| examples[rng.gen_range(examples.len() as u64) as usize].clone())
+                .collect();
+            let (bow, y) = data.batch(&items);
+            let step = exec.train_step("embbag_grad", &params, &bow, &y)?;
+            loss_sum += step.loss;
+
+            // Dense local delta = -lr * grad (one local iteration).
+            let delta: Vec<f32> = step.grad.iter().map(|g| -lr * g).collect();
+
+            // Embedding rows: group top-k by summed magnitude (§7.4).
+            let emb_delta = &delta[..m_emb];
+            let sel_rows = top_k_groups(emb_delta, TAU, k_rows);
+            let payloads: Vec<MegaElem<TAU>> = sel_rows
+                .iter()
+                .map(|&r| {
+                    let mut e = [0u64; TAU];
+                    for (d, slot) in e.iter_mut().enumerate() {
+                        let idx = r as usize * TAU + d;
+                        if idx < m_emb {
+                            *slot = fixed_encode(emb_delta[idx]);
+                        }
+                    }
+                    MegaElem(e)
+                })
+                .collect();
+            mega_clients.push((sel_rows, payloads));
+
+            // Non-embedding parameters: dense trivial SA (the §7.5 split).
+            let other = &delta[m_emb..];
+            let other_sel: Vec<u64> = (0..other.len() as u64).collect();
+            let other_deltas: Vec<u64> = other.iter().map(|&f| fixed_encode(f)).collect();
+            other_uploads.push(trivial_sa::client_upload(
+                other.len(),
+                &other_sel,
+                &other_deltas,
+                rng.gen_seed(),
+            ));
+        }
+
+        // Server side: mega-SSA for embeddings + trivial SA for the rest.
+        let keys0: Vec<_> = mega_clients
+            .iter()
+            .map(|(sel, dl)| ssa::client_update(&session, sel, dl, &mut rng).map_err(|e| anyhow!("{e}")))
+            .collect::<Result<Vec<_>>>()?;
+        let share0 = ssa::server_aggregate(&session, &keys0.iter().map(|b| b.server_keys(0)).collect::<Vec<_>>());
+        let share1 = ssa::server_aggregate(&session, &keys0.iter().map(|b| b.server_keys(1)).collect::<Vec<_>>());
+        let mega_delta = ssa::reconstruct(&share0, &share1);
+        let other_delta = trivial_sa::aggregate(m_total - m_emb, &other_uploads);
+
+        // FedAvg apply.
+        let scale = 1.0 / census.clients as f32;
+        for (r, e) in mega_delta.iter().enumerate() {
+            for (d, &v) in e.0.iter().enumerate() {
+                let idx = r * TAU + d;
+                if v != 0 && idx < m_emb {
+                    params[idx] += fixed_decode(v) * scale;
+                }
+            }
+        }
+        for (i, &v) in other_delta.iter().enumerate() {
+            if v != 0 {
+                params[m_emb + i] += fixed_decode(v) * scale;
+            }
+        }
+
+        // Communication accounting (per client).
+        let emb_mb = bits_to_mb(keys0[0].upload_bits());
+        let other_mb = bits_to_mb(trivial_sa::upload_bits::<u64>(m_total - m_emb));
+
+        // Accuracy every 5 rounds and at the end.
+        let evaluate = (round + 1) % 5 == 0 || round + 1 == rounds;
+        if evaluate {
+            let mut correct = 0usize;
+            for chunk in data.test.chunks(batch) {
+                let mut items = chunk.to_vec();
+                while items.len() < batch {
+                    items.push(chunk[0].clone());
+                }
+                let (bow, _) = data.batch(&items);
+                let logits = exec.infer("embbag_infer", &params, &bow)?;
+                for (row, (label, _)) in chunk.iter().enumerate() {
+                    let rl = &logits[row * classes..(row + 1) * classes];
+                    let pred = rl
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    correct += usize::from(pred == *label as usize);
+                }
+            }
+            accuracy = correct as f32 / data.test.len() as f32;
+        }
+        println!(
+            "{},{:.4},{:.3},{:.3},{}",
+            round,
+            loss_sum / census.clients as f32,
+            emb_mb,
+            other_mb,
+            if evaluate { format!("{accuracy:.4}") } else { String::new() }
+        );
+    }
+    println!(
+        "# final accuracy {:.2}% at c={:.2}% row compression (mega-element τ={TAU})",
+        accuracy * 100.0,
+        c * 100.0
+    );
+    Ok(())
+}

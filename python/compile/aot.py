@@ -1,0 +1,160 @@
+"""AOT lowering: JAX (L2 + L1) → HLO *text* artifacts for the rust PJRT
+runtime.
+
+HLO text, NOT ``lowered.compile()`` / serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; python never touches the round path.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # u64 ring arithmetic in HLO
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_specs():
+    """Every artifact: name → (function, example-arg specs, metadata)."""
+    f32, u64 = jnp.float32, jnp.uint64
+    m_mlp = model.mlp_num_params()
+    m_emb = model.embbag_num_params()
+    return {
+        "mlp_grad": dict(
+            fn=lambda p, x, y: model.mlp_grad(p, x, y),
+            specs=[
+                _spec((m_mlp,), f32),
+                _spec((model.MLP_BATCH, 784), f32),
+                _spec((model.MLP_BATCH, 10), f32),
+            ],
+            meta=dict(
+                kind="train_step",
+                params=m_mlp,
+                batch=model.MLP_BATCH,
+                inputs=["flat_params", "x", "y_onehot"],
+                outputs=["loss", "grad"],
+            ),
+        ),
+        "embbag_grad": dict(
+            fn=lambda p, x, y: model.embbag_grad(p, x, y),
+            specs=[
+                _spec((m_emb,), f32),
+                _spec((model.EMB_BATCH, model.EMB_VOCAB), f32),
+                _spec((model.EMB_BATCH, model.EMB_CLASSES), f32),
+            ],
+            meta=dict(
+                kind="train_step",
+                params=m_emb,
+                batch=model.EMB_BATCH,
+                vocab=model.EMB_VOCAB,
+                emb_dim=model.EMB_DIM,
+                embedding_params=model.embbag_embedding_params(),
+                inputs=["flat_params", "bow", "y_onehot"],
+                outputs=["loss", "grad"],
+            ),
+        ),
+        "mlp_infer": dict(
+            fn=lambda p, x: (model.mlp_forward(p, x),),
+            specs=[_spec((m_mlp,), f32), _spec((model.MLP_BATCH, 784), f32)],
+            meta=dict(
+                kind="infer",
+                params=m_mlp,
+                batch=model.MLP_BATCH,
+                classes=10,
+                inputs=["flat_params", "x"],
+                outputs=["logits"],
+            ),
+        ),
+        "embbag_infer": dict(
+            fn=lambda p, x: (model.embbag_forward(p, x),),
+            specs=[
+                _spec((m_emb,), f32),
+                _spec((model.EMB_BATCH, model.EMB_VOCAB), f32),
+            ],
+            meta=dict(
+                kind="infer",
+                params=m_emb,
+                batch=model.EMB_BATCH,
+                classes=model.EMB_CLASSES,
+                inputs=["flat_params", "bow"],
+                outputs=["logits"],
+            ),
+        ),
+        "binned_ip": dict(
+            fn=lambda w, s: (model.psr_binned_ip(w, s),),
+            specs=[
+                _spec((model.IP_BINS, model.IP_THETA), u64),
+                _spec((model.IP_BINS, model.IP_THETA), u64),
+            ],
+            meta=dict(
+                kind="server_ip",
+                bins=model.IP_BINS,
+                theta=model.IP_THETA,
+                inputs=["weights_slab", "share_slab"],
+                outputs=["bin_answers"],
+            ),
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    for name, spec in artifact_specs().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(spec["fn"]).lower(*spec["specs"])
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = dict(
+            file=f"{name}.hlo.txt",
+            arg_shapes=[list(s.shape) for s in spec["specs"]],
+            arg_dtypes=[str(s.dtype) for s in spec["specs"]],
+            **spec["meta"],
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    existing = {}
+    if args.only and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            existing = json.load(f)
+    existing.update(manifest)
+    with open(manifest_path, "w") as f:
+        json.dump(existing, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target
+and real-TPU performance is estimated structurally (DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from .binned_ip import binned_inner_product
+from .matmul import matmul
+
+__all__ = ["binned_inner_product", "matmul"]

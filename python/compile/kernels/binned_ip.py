@@ -1,0 +1,57 @@
+"""Binned masked inner product — the PSR servers' per-bin hot loop.
+
+After the DPF full-domain evaluation (L3, AES-bound), each PSR answer is
+``out[j] = Σ_d w[j, d] · share[j, d]`` over the ring Z_2^64 — B
+independent Θ-length dot products (Fig. 4, server side). That reduction
+is dense VPU work, so it lives here as a Pallas kernel: bins are tiled
+along the grid axis, each block holding a ``(BLOCK_B, Θ)`` slab of the
+(bin-major) weight table and share matrix in VMEM.
+
+Integer (wrapping) arithmetic: XLA u64 ops wrap mod 2^64, matching the
+L3 `Group` impl for u64 exactly — the kernel is bit-identical to the
+rust inner product, which is what the cross-language test asserts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 256
+
+
+def _binned_ip_kernel(w_ref, s_ref, o_ref):
+    o_ref[...] = (w_ref[...] * s_ref[...]).sum(axis=-1)
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def binned_inner_product(w, shares, *, block_b=BLOCK_B):
+    """Per-bin wrapping dot product: ``out[j] = Σ_d w[j,d]·shares[j,d]``.
+
+    ``w`` and ``shares`` are ``uint64[B, Θ]`` (bins padded with zeros up
+    to Θ — zero weights annihilate the padding shares). Returns
+    ``uint64[B]``.
+    """
+    assert w.shape == shares.shape, (w.shape, shares.shape)
+    b, theta = w.shape
+    bb = min(block_b, _ceil_to(b, 8))
+    bp = _ceil_to(b, bb)
+    wp = jnp.pad(w.astype(jnp.uint64), ((0, bp - b), (0, 0)))
+    sp = jnp.pad(shares.astype(jnp.uint64), ((0, bp - b), (0, 0)))
+    out = pl.pallas_call(
+        _binned_ip_kernel,
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, theta), lambda i: (i, 0)),
+            pl.BlockSpec((bb, theta), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.uint64),
+        interpret=True,
+    )(wp, sp)
+    return out[:b]

@@ -1,0 +1,89 @@
+"""Tiled matmul Pallas kernel — the MXU hot-spot of the L2 models.
+
+The FSL models (MLP for the Table-7 image task, embedding-bag text
+classifier for Tables 8/9) spend their FLOPs in dense matmuls. On TPU
+this kernel tiles ``(M, K) @ (K, N)`` into VMEM-resident blocks streamed
+by ``BlockSpec`` over a grid — the Pallas analogue of the paper's
+threadblock scheme (DESIGN.md §Hardware-Adaptation). ``interpret=True``
+keeps it executable on the CPU PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes sized for ~16 MiB VMEM: three f32 tiles of 256x256 ≈ 768 KiB,
+# leaving headroom for double buffering.
+BLOCK_M = 256
+BLOCK_N = 256
+BLOCK_K = 256
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step; k is innermost, so the same output block
+    is revisited and used as the accumulator."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def _matmul_impl(x, y, *, block_m=BLOCK_M, block_n=BLOCK_N, block_k=BLOCK_K):
+    """``x @ y`` via the tiled Pallas kernel (f32), padding ragged edges.
+
+    Pads each dimension up to its block multiple (zeros do not change the
+    product), runs the grid, then slices the result back.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 8))
+    bk = min(block_k, _ceil_to(k, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+# jax.grad cannot differentiate through pallas_call directly; give the
+# kernel the standard matmul VJP, with both cotangent products routed back
+# through the Pallas kernel so fwd AND bwd hit the MXU path.
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable tiled-Pallas matmul ``x @ y`` (f32)."""
+    return _matmul_impl(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_impl(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return _matmul_impl(g, y.T), _matmul_impl(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

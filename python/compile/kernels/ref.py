@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the L1 kernels — the correctness ground truth.
+
+Every Pallas kernel has a reference implementation here; the pytest
+suite (including hypothesis shape/dtype sweeps) asserts allclose /
+bit-equality between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """f32 matmul oracle."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def binned_inner_product_ref(w, shares):
+    """Wrapping u64 per-bin dot product oracle."""
+    return (w.astype(jnp.uint64) * shares.astype(jnp.uint64)).sum(
+        axis=-1, dtype=jnp.uint64
+    )

@@ -1,0 +1,173 @@
+"""L2: the FSL learning workloads as JAX functions over *flat* parameter
+vectors (the protocol's global weight vector ``w ∈ G^m`` is flat — the
+L3 coordinator moves f32 weights through fixed-point Z_2^64 encoding).
+
+Two models, matching the paper's evaluation tasks:
+
+* ``mlp_*`` — the Table-7 image classifier (28×28 → 10 classes), sized
+  near the paper's 1.66M-weight MNIST CNN (1,863,690 weights).
+* ``embbag_*`` — the Table-8/9 text classifier: an embedding-bag +
+  MLP stand-in for TextCNN, with the DIN/TREC-flavoured vocabulary
+  (8,256 words) and embedding dim 18 (= the mega-element τ).
+
+All matmuls route through the L1 Pallas kernel; ``jax.grad`` provides
+the backward pass, so the AOT artifact is a single fused fwd+bwd HLO.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul
+
+# ---------------------------------------------------------------- MLP ----
+
+MLP_LAYERS = [(784, 1024), (1024, 1024), (1024, 10)]
+MLP_BATCH = 50
+
+
+def mlp_num_params() -> int:
+    """Total flat parameter count (1,863,690)."""
+    return sum(i * o + o for i, o in MLP_LAYERS)
+
+
+def _mlp_slices():
+    off = 0
+    for i, o in MLP_LAYERS:
+        yield off, i, o
+        off += i * o + o
+
+
+def mlp_init(key) -> jnp.ndarray:
+    """He-initialised flat parameter vector."""
+    chunks = []
+    for i, o in MLP_LAYERS:
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (i, o), jnp.float32) * jnp.sqrt(2.0 / i)
+        chunks.append(w.reshape(-1))
+        chunks.append(jnp.zeros((o,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def mlp_forward(flat, x):
+    """Logits for a batch ``x : f32[B, 784]``."""
+    h = x.astype(jnp.float32)
+    for idx, (off, i, o) in enumerate(_mlp_slices()):
+        w = jax.lax.dynamic_slice(flat, (off,), (i * o,)).reshape(i, o)
+        b = jax.lax.dynamic_slice(flat, (off + i * o,), (o,))
+        h = matmul(h, w) + b
+        if idx + 1 < len(MLP_LAYERS):
+            h = jax.nn.relu(h)
+    return h
+
+
+def _xent(logits, y_onehot):
+    logp = jax.nn.log_softmax(logits)
+    return -(y_onehot * logp).sum(axis=-1).mean()
+
+
+def mlp_loss(flat, x, y_onehot):
+    """Mean cross-entropy."""
+    return _xent(mlp_forward(flat, x), y_onehot)
+
+
+def mlp_grad(flat, x, y_onehot):
+    """The AOT training-step artifact: (loss, flat gradient)."""
+    loss, g = jax.value_and_grad(mlp_loss)(flat, x, y_onehot)
+    return loss, g
+
+
+# ---------------------------------------------------- embedding-bag ----
+
+EMB_VOCAB = 8256  # TREC full-train vocabulary (Table 9)
+EMB_DIM = 18  # = the DIN embedding dim / mega-element τ (§6, §7.5)
+EMB_HIDDEN = 64
+EMB_CLASSES = 6  # TREC has 6 coarse question classes
+EMB_BATCH = 64
+
+
+def embbag_num_params() -> int:
+    """Total flat parameter count (150,214)."""
+    return (
+        EMB_VOCAB * EMB_DIM
+        + EMB_DIM * EMB_HIDDEN
+        + EMB_HIDDEN
+        + EMB_HIDDEN * EMB_CLASSES
+        + EMB_CLASSES
+    )
+
+
+def embbag_embedding_params() -> int:
+    """Parameters in the embedding table (the mega-element domain)."""
+    return EMB_VOCAB * EMB_DIM
+
+
+def embbag_init(key) -> jnp.ndarray:
+    chunks = []
+    shapes = [
+        (EMB_VOCAB, EMB_DIM),
+        (EMB_DIM, EMB_HIDDEN),
+        (EMB_HIDDEN,),
+        (EMB_HIDDEN, EMB_CLASSES),
+        (EMB_CLASSES,),
+    ]
+    for s in shapes:
+        key, sub = jax.random.split(key)
+        if len(s) == 2:
+            chunks.append(
+                (jax.random.normal(sub, s, jnp.float32) * jnp.sqrt(2.0 / s[0])).reshape(-1)
+            )
+        else:
+            chunks.append(jnp.zeros(s, jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+def embbag_forward(flat, bow):
+    """Logits for a bag-of-words batch ``bow : f32[B, V]`` (counts)."""
+    off = 0
+    emb = jax.lax.dynamic_slice(flat, (off,), (EMB_VOCAB * EMB_DIM,)).reshape(
+        EMB_VOCAB, EMB_DIM
+    )
+    off += EMB_VOCAB * EMB_DIM
+    w1 = jax.lax.dynamic_slice(flat, (off,), (EMB_DIM * EMB_HIDDEN,)).reshape(
+        EMB_DIM, EMB_HIDDEN
+    )
+    off += EMB_DIM * EMB_HIDDEN
+    b1 = jax.lax.dynamic_slice(flat, (off,), (EMB_HIDDEN,))
+    off += EMB_HIDDEN
+    w2 = jax.lax.dynamic_slice(flat, (off,), (EMB_HIDDEN * EMB_CLASSES,)).reshape(
+        EMB_HIDDEN, EMB_CLASSES
+    )
+    off += EMB_HIDDEN * EMB_CLASSES
+    b2 = jax.lax.dynamic_slice(flat, (off,), (EMB_CLASSES,))
+
+    # Embedding-bag: sum of word vectors = bow @ emb (an MXU matmul —
+    # exactly why embedding rows group naturally into mega-elements).
+    e = matmul(bow.astype(jnp.float32), emb)
+    h = jax.nn.relu(matmul(e, w1) + b1)
+    return matmul(h, w2) + b2
+
+
+def embbag_loss(flat, bow, y_onehot):
+    """Mean cross-entropy."""
+    return _xent(embbag_forward(flat, bow), y_onehot)
+
+
+def embbag_grad(flat, bow, y_onehot):
+    """The AOT training-step artifact: (loss, flat gradient)."""
+    loss, g = jax.value_and_grad(embbag_loss)(flat, bow, y_onehot)
+    return loss, g
+
+
+# ------------------------------------------------ server-side graphs ----
+
+# Padded bin-matrix shape for the PSR inner-product artifact: the L3
+# runtime chunks/pads sessions into (BINS, THETA) slabs.
+IP_BINS = 2048
+IP_THETA = 32
+
+
+def psr_binned_ip(w, shares):
+    """Server answer slab: per-bin wrapping-u64 inner products (L1 kernel)."""
+    from .kernels import binned_inner_product
+
+    return binned_inner_product(w, shares)

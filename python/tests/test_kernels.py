@@ -1,0 +1,119 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import binned_inner_product, matmul
+from compile.kernels.matmul import _matmul_impl
+from compile.kernels.ref import binned_inner_product_ref, matmul_ref
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is optional
+    HAVE_HYPOTHESIS = False
+
+
+def rand(shape, seed, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+class TestMatmul:
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [
+            (4, 4, 4),
+            (8, 16, 8),
+            (50, 784, 1024),  # the MLP first layer
+            (64, 18, 64),  # the embbag hidden layer
+            (1, 7, 3),  # ragged, sub-block
+            (300, 260, 270),  # straddles block edges
+        ],
+    )
+    def test_matches_ref(self, m, k, n):
+        x, y = rand((m, k), 1), rand((k, n), 2)
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, y)),
+            np.asarray(matmul_ref(x, y)),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_non_square_blocks(self):
+        x, y = rand((16, 512), 3), rand((512, 16), 4)
+        got = _matmul_impl(x, y, block_m=8, block_n=8, block_k=128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(matmul_ref(x, y)), rtol=1e-4, atol=1e-4)
+
+    def test_zero_inputs(self):
+        x = np.zeros((8, 8), np.float32)
+        y = rand((8, 8), 5)
+        np.testing.assert_array_equal(np.asarray(matmul(x, y)), np.zeros((8, 8)))
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=25, deadline=None)
+        @given(
+            m=st.integers(1, 40),
+            k=st.integers(1, 40),
+            n=st.integers(1, 40),
+            seed=st.integers(0, 2**16),
+        )
+        def test_hypothesis_shapes(self, m, k, n, seed):
+            x, y = rand((m, k), seed), rand((k, n), seed + 1)
+            np.testing.assert_allclose(
+                np.asarray(matmul(x, y)),
+                np.asarray(matmul_ref(x, y)),
+                rtol=1e-4,
+                atol=1e-4,
+            )
+
+
+class TestBinnedInnerProduct:
+    @pytest.mark.parametrize("b,theta", [(4, 8), (256, 32), (2048, 32), (7, 9)])
+    def test_matches_ref(self, b, theta):
+        rng = np.random.default_rng(b * 1000 + theta)
+        w = rng.integers(0, 2**63, (b, theta), dtype=np.uint64)
+        s = rng.integers(0, 2**63, (b, theta), dtype=np.uint64)
+        got = np.asarray(binned_inner_product(jnp.asarray(w), jnp.asarray(s)))
+        want = np.asarray(binned_inner_product_ref(jnp.asarray(w), jnp.asarray(s)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_wrapping_semantics(self):
+        # u64 products must wrap mod 2^64 exactly like the rust Group impl.
+        w = jnp.array([[np.uint64(2**63)]], dtype=jnp.uint64)
+        s = jnp.array([[np.uint64(3)]], dtype=jnp.uint64)
+        got = np.asarray(binned_inner_product(w, s))[0]
+        assert got == np.uint64((2**63 * 3) % 2**64) == np.uint64(2**63)
+
+    def test_point_function_shape(self):
+        # The PIR use: share row is a unit vector -> answer is the weight.
+        w = jnp.arange(64, dtype=jnp.uint64).reshape(4, 16) + jnp.uint64(100)
+        s = jnp.zeros((4, 16), jnp.uint64).at[2, 5].set(1)
+        got = np.asarray(binned_inner_product(w, s))
+        assert got[2] == 100 + 2 * 16 + 5
+        assert got[0] == got[1] == got[3] == 0
+
+    if HAVE_HYPOTHESIS:
+
+        @settings(max_examples=25, deadline=None)
+        @given(
+            b=st.integers(1, 64),
+            theta=st.integers(1, 48),
+            seed=st.integers(0, 2**16),
+        )
+        def test_hypothesis_shapes(self, b, theta, seed):
+            rng = np.random.default_rng(seed)
+            w = rng.integers(0, 2**64, (b, theta), dtype=np.uint64)
+            s = rng.integers(0, 2**64, (b, theta), dtype=np.uint64)
+            got = np.asarray(binned_inner_product(jnp.asarray(w), jnp.asarray(s)))
+            want = np.asarray(
+                binned_inner_product_ref(jnp.asarray(w), jnp.asarray(s))
+            )
+            np.testing.assert_array_equal(got, want)

@@ -1,0 +1,81 @@
+"""L2 model shape/grad sanity + training smoke tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+
+
+def test_mlp_param_count():
+    flat = model.mlp_init(jax.random.PRNGKey(0))
+    assert flat.shape == (model.mlp_num_params(),)
+    # Near the paper's 1,663,370-weight MNIST model.
+    assert 1_500_000 < model.mlp_num_params() < 2_000_000
+
+
+def test_mlp_forward_shapes():
+    flat = model.mlp_init(jax.random.PRNGKey(1))
+    x = jnp.zeros((model.MLP_BATCH, 784), jnp.float32)
+    logits = model.mlp_forward(flat, x)
+    assert logits.shape == (model.MLP_BATCH, 10)
+
+
+def test_mlp_grad_decreases_loss():
+    key = jax.random.PRNGKey(2)
+    flat = model.mlp_init(key)
+    x = jax.random.normal(key, (model.MLP_BATCH, 784), jnp.float32)
+    y = jax.nn.one_hot(jnp.arange(model.MLP_BATCH) % 10, 10)
+    loss0, g = model.mlp_grad(flat, x, y)
+    assert g.shape == flat.shape
+    assert np.isfinite(float(loss0))
+    loss1, _ = model.mlp_grad(flat - 0.05 * g, x, y)
+    assert float(loss1) < float(loss0)
+
+
+def test_embbag_param_count():
+    flat = model.embbag_init(jax.random.PRNGKey(3))
+    assert flat.shape == (model.embbag_num_params(),)
+    # Embedding dominates, mirroring the DIN census (98% embedding).
+    frac = model.embbag_embedding_params() / model.embbag_num_params()
+    assert frac > 0.97
+
+
+def test_embbag_grad_sparsity_pattern():
+    # Words absent from the batch must receive zero embedding gradient —
+    # the property that makes submodel (top-k row) updates exact.
+    key = jax.random.PRNGKey(4)
+    flat = model.embbag_init(key)
+    bow = jnp.zeros((model.EMB_BATCH, model.EMB_VOCAB), jnp.float32)
+    bow = bow.at[:, :32].set(1.0)  # only the first 32 words occur
+    y = jax.nn.one_hot(jnp.arange(model.EMB_BATCH) % model.EMB_CLASSES, model.EMB_CLASSES)
+    _, g = model.embbag_grad(flat, bow, y)
+    emb_grad = np.asarray(g[: model.embbag_embedding_params()]).reshape(
+        model.EMB_VOCAB, model.EMB_DIM
+    )
+    assert np.abs(emb_grad[:32]).sum() > 0
+    np.testing.assert_array_equal(emb_grad[32:], 0.0)
+
+
+def test_embbag_training_learns():
+    # A separable synthetic task must be learnable in a few steps.
+    key = jax.random.PRNGKey(5)
+    flat = model.embbag_init(key)
+    rng = np.random.default_rng(0)
+    # Class c ⇔ word block [c*50, (c+1)*50).
+    labels = rng.integers(0, model.EMB_CLASSES, model.EMB_BATCH)
+    bow = np.zeros((model.EMB_BATCH, model.EMB_VOCAB), np.float32)
+    for i, c in enumerate(labels):
+        words = rng.integers(c * 50, (c + 1) * 50, 8)
+        for w in words:
+            bow[i, w] += 1.0
+    y = jax.nn.one_hot(jnp.asarray(labels), model.EMB_CLASSES)
+    bow = jnp.asarray(bow)
+    losses = []
+    for _ in range(30):
+        loss, g = model.embbag_grad(flat, bow, y)
+        flat = flat - 0.5 * g
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses[::10]

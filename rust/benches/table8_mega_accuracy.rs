@@ -1,0 +1,110 @@
+//! Table 8 — FSL accuracy with top-k *mega-element* (embedding-row)
+//! selection on the text task, across very aggressive compression rates.
+//!
+//! Paper: 84.73 (0.0125%) / 88.60 (0.1%) / 89.67 (1%) / 89.73 (10%) —
+//! robust down to extreme compression, collapsing only at the very
+//! bottom. The sweep runs the embedding-bag model with top-k rows (τ=18)
+//! over the embedding layer only (the paper computes c w.r.t. the
+//! embedding layer). Plaintext FedAvg loop (provably equal to the secure
+//! path; see `secure_equals_plain`). FSL_FULL=1 widens the sweep.
+
+use anyhow::Result;
+use fsl::coordinator::top_k_groups;
+use fsl::crypto::rng::Rng;
+use fsl::data::{TextDataset, TrecCensus};
+use fsl::runtime::Executor;
+
+const TAU: usize = 18;
+
+fn main() -> Result<()> {
+    let full = std::env::var("FSL_FULL").is_ok();
+    let exec = Executor::new("artifacts")?;
+    let m_total = exec.manifest().int("embbag_grad", "params")? as usize;
+    let m_emb = exec.manifest().int("embbag_grad", "embedding_params")? as usize;
+    let batch = exec.manifest().int("embbag_grad", "batch")? as usize;
+    let classes = 6usize;
+    let rows = m_emb / TAU;
+
+    let rates: Vec<f64> = if full {
+        vec![0.000125, 0.001, 0.01, 0.10, 1.0]
+    } else {
+        vec![0.001, 0.01, 0.10]
+    };
+    let rounds = if full { 150 } else { 60 };
+    let census = TrecCensus::default();
+    let data = TextDataset::synthesize(census, 5);
+
+    println!("# Table 8 (text task): accuracy vs mega-element compression (over embedding layer)");
+    println!("# paper TREC: 84.73 (0.0125%) / 88.60 (0.1%) / 89.67 (1%) / 89.73 (10%)");
+    println!("{:>10} {:>10}", "c(emb)", "accuracy");
+
+    for &c in &rates {
+        let k_rows = ((rows as f64 * c).round() as usize).max(1);
+        let seed = 7u64;
+        let mut prng = Rng::new(seed ^ 0x22);
+        let mut params: Vec<f32> = Vec::with_capacity(m_total);
+        params.extend((0..m_emb).map(|_| prng.gen_normal() as f32 * 0.05));
+        params.extend((0..TAU * 64).map(|_| prng.gen_normal() as f32 * 0.33));
+        params.extend(std::iter::repeat(0f32).take(64));
+        params.extend((0..64 * classes).map(|_| prng.gen_normal() as f32 * 0.18));
+        params.extend(std::iter::repeat(0f32).take(classes));
+        assert_eq!(params.len(), m_total);
+
+        let mut rng = Rng::new(seed);
+        for _round in 0..rounds {
+            // All 4 clients participate (paper: full participation on TREC).
+            let mut sum = vec![0f32; m_total];
+            for cidx in 0..census.clients {
+                let examples: Vec<(u8, Vec<u32>)> = data
+                    .client_examples(cidx)
+                    .map(|(_, l, w)| (*l, w.clone()))
+                    .collect();
+                let items: Vec<(u8, Vec<u32>)> = (0..batch)
+                    .map(|_| examples[rng.gen_range(examples.len() as u64) as usize].clone())
+                    .collect();
+                let (bow, y) = data.batch(&items);
+                let step = exec.train_step("embbag_grad", &params, &bow, &y)?;
+                let delta: Vec<f32> = step.grad.iter().map(|g| -1.0 * g).collect();
+                // Embedding: top-k rows only; other params: dense.
+                let sel = top_k_groups(&delta[..m_emb], TAU, k_rows);
+                for &r in &sel {
+                    for d in 0..TAU {
+                        let idx = r as usize * TAU + d;
+                        sum[idx] += delta[idx];
+                    }
+                }
+                for i in m_emb..m_total {
+                    sum[i] += delta[i];
+                }
+            }
+            let scale = 1.0 / census.clients as f32;
+            for (p, s) in params.iter_mut().zip(&sum) {
+                *p += s * scale;
+            }
+        }
+        // Evaluate.
+        let mut correct = 0usize;
+        for chunk in data.test.chunks(batch) {
+            let mut items = chunk.to_vec();
+            while items.len() < batch {
+                items.push(chunk[0].clone());
+            }
+            let (bow, _) = data.batch(&items);
+            let logits = exec.infer("embbag_infer", &params, &bow)?;
+            for (row, (label, _)) in chunk.iter().enumerate() {
+                let rl = &logits[row * classes..(row + 1) * classes];
+                let pred = rl
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                correct += usize::from(pred == *label as usize);
+            }
+        }
+        let acc = correct as f32 / data.test.len() as f32;
+        println!("{:>10} {:>10.2}", format!("{:.4}%", c * 100.0), acc * 100.0);
+    }
+    println!("# shape: accuracy robust across orders of magnitude of compression, degrading only at the extreme low end.");
+    Ok(())
+}

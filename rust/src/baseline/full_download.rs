@@ -1,0 +1,39 @@
+//! Trivial PSR baseline: download the entire model.
+//!
+//! §2's non-triviality yardstick for retrieval — `m·⌈log 𝔾⌉` downlink
+//! bits, zero uplink (beyond the request). The paper notes FL clients are
+//! usually uplink-constrained, which is why PSR matters less than SSA.
+
+use crate::group::Group;
+
+/// Downlink bits to ship the whole weight vector.
+pub fn download_bits<G: Group>(m: usize) -> usize {
+    m * G::bit_len()
+}
+
+/// The trivial protocol itself (returns a copy — the client "selects
+/// locally").
+pub fn retrieve_all<G: Group>(weights: &[G]) -> Vec<G> {
+    weights.to_vec()
+}
+
+/// Client-side local selection after the trivial download.
+pub fn select_local<G: Group>(downloaded: &[G], selections: &[u64]) -> Vec<G> {
+    selections
+        .iter()
+        .map(|&s| downloaded[s as usize].clone())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivial_selection() {
+        let w: Vec<u64> = (0..100).map(|i| i * 3).collect();
+        let d = retrieve_all(&w);
+        assert_eq!(select_local(&d, &[0, 7, 99]), vec![0, 21, 297]);
+        assert_eq!(download_bits::<u128>(1 << 20) / 8 / 1024 / 1024, 16);
+    }
+}

@@ -1,0 +1,12 @@
+//! Baselines the paper compares against.
+//!
+//! * [`trivial_sa`] — the "naïve secure aggregation protocol in the
+//!   two-server setting" of Table 6: dense additive masking of the full
+//!   model (`m·l + λ` bits of client upload).
+//! * [`full_download`] — the trivial PIR answer to PSR: ship all of `w`.
+//! * [`niu`] — communication cost model of Niu et al. \[37\] on the DIN
+//!   recommendation workload (§7.5).
+
+pub mod full_download;
+pub mod niu;
+pub mod trivial_sa;

@@ -1,0 +1,81 @@
+//! Client-side round work: local training (L2 artifact through PJRT) and
+//! sparse-update construction.
+
+use super::topk::top_k_magnitude;
+use crate::crypto::rng::Rng;
+use crate::group::fixed_encode;
+use crate::runtime::Executor;
+use anyhow::Result;
+
+/// What a client hands to the SSA layer after local work.
+#[derive(Debug, Clone)]
+pub struct ClientRoundOutput {
+    /// Ascending selected indices (the submodel `s^(i)`).
+    pub selections: Vec<u64>,
+    /// Fixed-point encoded updates, aligned with `selections`.
+    pub deltas: Vec<u64>,
+    /// Mean training loss over the local iterations.
+    pub loss: f32,
+}
+
+/// Run `local_iters` SGD steps on this client's shard and return the
+/// dense parameter delta (new − start) plus the mean loss.
+///
+/// `batch_of` supplies `(x, y_onehot)` for a requested iteration — the
+/// datasets differ between tasks, the loop does not.
+pub fn local_train(
+    exec: &Executor,
+    artifact: &str,
+    start: &[f32],
+    local_iters: usize,
+    lr: f32,
+    mut batch_of: impl FnMut(usize, &mut Rng) -> (Vec<f32>, Vec<f32>),
+    rng: &mut Rng,
+) -> Result<(Vec<f32>, f32)> {
+    let mut params = start.to_vec();
+    let mut loss_sum = 0.0f32;
+    for it in 0..local_iters {
+        let (x, y) = batch_of(it, rng);
+        let step = exec.train_step(artifact, &params, &x, &y)?;
+        loss_sum += step.loss;
+        for (p, g) in params.iter_mut().zip(&step.grad) {
+            *p -= lr * g;
+        }
+    }
+    let delta: Vec<f32> = params
+        .iter()
+        .zip(start)
+        .map(|(new, old)| new - old)
+        .collect();
+    Ok((delta, loss_sum / local_iters.max(1) as f32))
+}
+
+/// Top-k sparsify a dense delta into the SSA client input (selections +
+/// fixed-point payloads).
+pub fn sparse_delta(delta: &[f32], k: usize) -> ClientRoundOutput {
+    let selections = top_k_magnitude(delta, k);
+    let deltas = selections
+        .iter()
+        .map(|&i| fixed_encode(delta[i as usize]))
+        .collect();
+    ClientRoundOutput {
+        selections,
+        deltas,
+        loss: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::group::fixed_decode;
+
+    #[test]
+    fn sparse_delta_roundtrips_values() {
+        let delta = vec![0.0f32, 2.5, -0.25, 0.0, 0.125];
+        let out = sparse_delta(&delta, 2);
+        assert_eq!(out.selections, vec![1, 2]);
+        assert!((fixed_decode(out.deltas[0]) - 2.5).abs() < 1e-6);
+        assert!((fixed_decode(out.deltas[1]) + 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,98 @@
+//! Coordinator configuration (the CLI maps straight onto this).
+
+use crate::hashing::CuckooParams;
+
+/// End-to-end FSL training configuration.
+#[derive(Clone, Debug)]
+pub struct FslConfig {
+    /// Total clients in the population.
+    pub num_clients: usize,
+    /// Fraction of clients sampled per round (the paper: 10% MNIST/CIFAR,
+    /// 100% TREC).
+    pub participation: f64,
+    /// Global communication rounds.
+    pub rounds: usize,
+    /// Local SGD iterations per round (paper: 1 MNIST/CIFAR, 2 TREC).
+    pub local_iters: usize,
+    /// SGD learning rate.
+    pub lr: f32,
+    /// Learning-rate decay applied every `lr_decay_every` rounds.
+    pub lr_decay: f32,
+    pub lr_decay_every: usize,
+    /// Top-k compression rate c = k/m.
+    pub compression: f64,
+    /// Cuckoo parameters shared by all parties.
+    pub cuckoo: CuckooParams,
+    /// Master seed for all round randomness.
+    pub seed: u64,
+    /// Simulated one-way channel latency in microseconds (paper: ≈3ms).
+    pub latency_us: u64,
+    /// Evaluate test accuracy every this many rounds (0 = never).
+    pub eval_every: usize,
+}
+
+impl Default for FslConfig {
+    fn default() -> Self {
+        FslConfig {
+            num_clients: 10,
+            participation: 1.0,
+            rounds: 50,
+            local_iters: 1,
+            lr: 0.05,
+            lr_decay: 0.99,
+            lr_decay_every: 10,
+            compression: 0.10,
+            cuckoo: CuckooParams::default(),
+            seed: 42,
+            latency_us: 0,
+            eval_every: 10,
+        }
+    }
+}
+
+impl FslConfig {
+    /// Participants per round (≥ 1).
+    pub fn participants(&self) -> usize {
+        ((self.num_clients as f64 * self.participation).round() as usize)
+            .clamp(1, self.num_clients)
+    }
+
+    /// Learning rate at a given round.
+    pub fn lr_at(&self, round: usize) -> f32 {
+        let decays = if self.lr_decay_every == 0 {
+            0
+        } else {
+            round / self.lr_decay_every
+        };
+        self.lr * self.lr_decay.powi(decays as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn participants_clamped() {
+        let mut c = FslConfig::default();
+        c.num_clients = 100;
+        c.participation = 0.1;
+        assert_eq!(c.participants(), 10);
+        c.participation = 0.0;
+        assert_eq!(c.participants(), 1);
+        c.participation = 2.0;
+        assert_eq!(c.participants(), 100);
+    }
+
+    #[test]
+    fn lr_decay_schedule() {
+        let mut c = FslConfig::default();
+        c.lr = 0.1;
+        c.lr_decay = 0.5;
+        c.lr_decay_every = 10;
+        assert_eq!(c.lr_at(0), 0.1);
+        assert_eq!(c.lr_at(9), 0.1);
+        assert_eq!(c.lr_at(10), 0.05);
+        assert_eq!(c.lr_at(25), 0.025);
+    }
+}

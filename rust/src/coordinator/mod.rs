@@ -1,0 +1,25 @@
+//! The FSL round coordinator — two server threads, n clients, the full
+//! Figure-1 loop: select → retrieve (PSR / broadcast) → local train (L2
+//! artifact via PJRT) → top-k sparsify → SSA upload → reconstruct →
+//! apply.
+//!
+//! Threading model: `S_0` (leader) and `S_1` (worker) each run on their
+//! own thread, joined by metered channels ([`crate::net`]); clients run
+//! on the driver thread (the paper's clients are sequential mobile
+//! devices — their *per-client* times are what Table 5 reports).
+
+mod client;
+mod config;
+mod psr_round;
+mod round;
+mod server;
+mod topk;
+mod verified;
+
+pub use client::{local_train, sparse_delta, ClientRoundOutput};
+pub use config::FslConfig;
+pub use psr_round::{run_psr_round, PsrRoundResult};
+pub use round::{run_fsl_training, run_plain_training, RoundStats, TrainingLog};
+pub use server::{run_ssa_round, SsaRoundResult};
+pub use topk::{top_k_groups, top_k_magnitude};
+pub use verified::{run_verified_ssa_round, VerifiedSsaResult};

@@ -1,0 +1,182 @@
+//! The end-to-end FSL training loop (Fig. 1).
+
+use super::client::{local_train, sparse_delta};
+use super::config::FslConfig;
+use super::server::run_ssa_round;
+use crate::crypto::rng::Rng;
+use crate::group::{fixed_decode, Group};
+use crate::hashing::CuckooParams;
+use crate::protocol::{Session, SessionParams};
+use crate::runtime::Executor;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// Per-round record (printed by the examples, logged in EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct RoundStats {
+    pub round: usize,
+    pub mean_loss: f32,
+    pub upload_mb_per_client: f64,
+    pub gen_time: Duration,
+    pub server_time: Duration,
+    pub train_time: Duration,
+    pub accuracy: Option<f32>,
+}
+
+/// Whole-run record.
+#[derive(Debug, Clone, Default)]
+pub struct TrainingLog {
+    pub rounds: Vec<RoundStats>,
+    pub final_params: Vec<f32>,
+}
+
+impl TrainingLog {
+    /// Final evaluated accuracy, if any round evaluated.
+    pub fn last_accuracy(&self) -> Option<f32> {
+        self.rounds.iter().rev().find_map(|r| r.accuracy)
+    }
+}
+
+/// Drive the full secure-FSL training loop.
+///
+/// * `batch_of(client, iter, rng)` supplies local batches.
+/// * `eval_fn(params)` returns test accuracy when invoked (every
+///   `cfg.eval_every` rounds and on the last round).
+///
+/// Each round: sample participants → local SGD (PJRT train-step artifact)
+/// → top-k sparsify → SSA over the two server threads → FedAvg apply.
+pub fn run_fsl_training(
+    exec: &Executor,
+    cfg: &FslConfig,
+    train_artifact: &str,
+    mut params: Vec<f32>,
+    mut batch_of: impl FnMut(usize, usize, &mut Rng) -> (Vec<f32>, Vec<f32>),
+    mut eval_fn: impl FnMut(&[f32]) -> Result<f32>,
+    mut on_round: impl FnMut(&RoundStats),
+) -> Result<TrainingLog> {
+    let m = params.len();
+    let k = ((m as f64 * cfg.compression).round() as usize).clamp(1, m);
+    let mut log = TrainingLog::default();
+
+    // One session per task: the paper reuses T_cuckoo/T_simple across
+    // rounds (§4) — the hash functions are public parameters, and
+    // rebuilding the simple table per round costs ~0.5 s at m ≈ 2 * 10^6
+    // (§Perf iteration 4).
+    let session = Session::new_full(SessionParams {
+        m: m as u64,
+        k,
+        cuckoo: CuckooParams {
+            hash_seed: cfg.seed ^ 0xABCD,
+            ..cfg.cuckoo
+        },
+    });
+
+    for round in 0..cfg.rounds {
+        let mut rng = Rng::new(cfg.seed ^ (round as u64).wrapping_mul(0x9e37_79b9));
+        let lr = cfg.lr_at(round);
+
+        // Client selection.
+        let p = cfg.participants();
+        let participants = rng.sample_distinct(p, cfg.num_clients as u64);
+
+        // Local training + top-k sparsification.
+        let t_train = Instant::now();
+        let mut client_inputs: Vec<(Vec<u64>, Vec<u64>)> = Vec::with_capacity(p);
+        let mut loss_sum = 0.0f32;
+        for &c in &participants {
+            let (delta, loss) = local_train(
+                exec,
+                train_artifact,
+                &params,
+                cfg.local_iters,
+                lr,
+                |it, r| batch_of(c as usize, it, r),
+                &mut rng,
+            )?;
+            loss_sum += loss;
+            let out = sparse_delta(&delta, k);
+            client_inputs.push((out.selections, out.deltas));
+        }
+        let train_time = t_train.elapsed();
+
+        // Secure aggregation round over the shared per-task session.
+        let res = run_ssa_round::<u64>(
+            &session,
+            &client_inputs,
+            &mut rng,
+            Duration::from_micros(cfg.latency_us),
+        )?;
+
+        // FedAvg apply: params += decode(Δw) / P.
+        let scale = 1.0 / p as f32;
+        for (w, d) in params.iter_mut().zip(&res.delta) {
+            if *d != 0 {
+                *w += fixed_decode(*d) * scale;
+            }
+        }
+
+        let do_eval = (cfg.eval_every > 0 && (round + 1) % cfg.eval_every == 0)
+            || round + 1 == cfg.rounds;
+        let accuracy = if do_eval { Some(eval_fn(&params)?) } else { None };
+
+        let stats = RoundStats {
+            round,
+            mean_loss: loss_sum / p as f32,
+            upload_mb_per_client: crate::metrics::mb(res.client_upload_bytes) / p as f64,
+            gen_time: res.gen_time,
+            server_time: res.server_time,
+            train_time,
+            accuracy,
+        };
+        on_round(&stats);
+        log.rounds.push(stats);
+    }
+    log.final_params = params;
+    Ok(log)
+}
+
+/// Non-secure reference loop (plaintext FedAvg with the same top-k) —
+/// used by tests and the ablation bench to show the secure path is
+/// *lossless*: both loops produce bit-identical models given the same
+/// seeds, because SSA reconstructs exactly the fixed-point top-k sums.
+pub fn run_plain_training(
+    exec: &Executor,
+    cfg: &FslConfig,
+    train_artifact: &str,
+    mut params: Vec<f32>,
+    mut batch_of: impl FnMut(usize, usize, &mut Rng) -> (Vec<f32>, Vec<f32>),
+) -> Result<Vec<f32>> {
+    let m = params.len();
+    let k = ((m as f64 * cfg.compression).round() as usize).clamp(1, m);
+    for round in 0..cfg.rounds {
+        let mut rng = Rng::new(cfg.seed ^ (round as u64).wrapping_mul(0x9e37_79b9));
+        let lr = cfg.lr_at(round);
+        let p = cfg.participants();
+        let participants = rng.sample_distinct(p, cfg.num_clients as u64);
+        let mut sum = vec![0u64; m];
+        for &c in &participants {
+            let (delta, _) = local_train(
+                exec,
+                train_artifact,
+                &params,
+                cfg.local_iters,
+                lr,
+                |it, r| batch_of(c as usize, it, r),
+                &mut rng,
+            )?;
+            let out = sparse_delta(&delta, k);
+            for (&i, &d) in out.selections.iter().zip(&out.deltas) {
+                sum[i as usize] = sum[i as usize].add(&d);
+            }
+        }
+        // Burn the same RNG draws the secure path spends on DPF seeds is
+        // not needed: SSA randomness does not influence the model.
+        let scale = 1.0 / p as f32;
+        for (w, d) in params.iter_mut().zip(&sum) {
+            if *d != 0 {
+                *w += fixed_decode(*d) * scale;
+            }
+        }
+    }
+    Ok(params)
+}

@@ -1,0 +1,76 @@
+//! Top-k sparsification (Aji & Heafield \[1\], the paper's §7 submodel
+//! selection strategy).
+
+/// Indices of the `k` largest-magnitude entries, ascending. Uses a
+/// partial selection (`select_nth_unstable`) — O(m) expected, not a sort.
+pub fn top_k_magnitude(delta: &[f32], k: usize) -> Vec<u64> {
+    let k = k.min(delta.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == delta.len() {
+        return (0..delta.len() as u64).collect();
+    }
+    let mut idx: Vec<u32> = (0..delta.len() as u32).collect();
+    let kth = delta.len() - k;
+    idx.select_nth_unstable_by(kth, |&a, &b| {
+        delta[a as usize]
+            .abs()
+            .partial_cmp(&delta[b as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut out: Vec<u64> = idx[kth..].iter().map(|&i| i as u64).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Group-structured top-k for mega-elements (§7.4): score each τ-wide
+/// group by the sum of absolute values, return the top `k_groups` group
+/// indices, ascending.
+pub fn top_k_groups(delta: &[f32], tau: usize, k_groups: usize) -> Vec<u64> {
+    let n_groups = delta.len().div_ceil(tau);
+    let scores: Vec<f32> = (0..n_groups)
+        .map(|g| {
+            delta[g * tau..((g + 1) * tau).min(delta.len())]
+                .iter()
+                .map(|v| v.abs())
+                .sum()
+        })
+        .collect();
+    top_k_magnitude(&scores, k_groups.min(n_groups))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_largest_magnitudes() {
+        let d = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 4.0];
+        assert_eq!(top_k_magnitude(&d, 3), vec![1, 3, 5]);
+        assert_eq!(top_k_magnitude(&d, 1), vec![1]);
+    }
+
+    #[test]
+    fn edge_cases() {
+        let d = vec![1.0f32, 2.0];
+        assert_eq!(top_k_magnitude(&d, 0), Vec::<u64>::new());
+        assert_eq!(top_k_magnitude(&d, 2), vec![0, 1]);
+        assert_eq!(top_k_magnitude(&d, 5), vec![0, 1]);
+        assert_eq!(top_k_magnitude(&[], 3), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn group_scoring() {
+        // groups of 3: |sums| = [0.6, 9.0, 0.3]
+        let d = vec![0.1f32, 0.2, 0.3, -3.0, 3.0, 3.0, 0.1, 0.1, 0.1];
+        assert_eq!(top_k_groups(&d, 3, 1), vec![1]);
+        assert_eq!(top_k_groups(&d, 3, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn ragged_tail_group() {
+        let d = vec![0.0f32, 0.0, 0.0, 0.0, 10.0]; // tau=2 → 3 groups
+        assert_eq!(top_k_groups(&d, 2, 1), vec![2]);
+    }
+}

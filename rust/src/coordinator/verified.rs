@@ -1,0 +1,146 @@
+//! Malicious-model SSA round (§2.2 / §3.1): before aggregating, the two
+//! servers run the sketching check on every client's bins and drop any
+//! client whose upload is not a well-formed batch of point functions —
+//! the ideal functionality's "selective vote" behaviour. Honest clients'
+//! updates are aggregated exactly; a cheating client cannot poison
+//! positions it did not legitimately vote for.
+//!
+//! Payloads live in 𝔽_p (sketching needs the field's multiplicative
+//! structure, as in Boneh et al. \[9\]); the cross-server multiplication is
+//! the idealised [`crate::sketch::SecureMul`] — the paper likewise omits
+//! the sketch round from its evaluation.
+
+use crate::crypto::field::Fp;
+use crate::crypto::rng::Rng;
+use crate::protocol::{ssa, Session};
+use crate::sketch::{self, SecureMul};
+use anyhow::{anyhow, Result};
+
+/// Result of a verified round: the aggregate over accepted clients plus
+/// the indices of rejected ones.
+pub struct VerifiedSsaResult {
+    pub delta: Vec<Fp>,
+    pub rejected: Vec<usize>,
+}
+
+/// Run one malicious-model SSA round in-process. `uploads[i]` is client
+/// i's key batch (possibly adversarially malformed — construct it
+/// directly rather than through `ssa::client_update` to attack).
+pub fn run_verified_ssa_round(
+    session: &Session,
+    uploads: &[crate::dpf::MasterKeyBatch<Fp>],
+    server_shared_seed: u64,
+) -> Result<VerifiedSsaResult> {
+    let mut rng = Rng::new(server_shared_seed);
+    let mut mul = SecureMul::new(server_shared_seed ^ SKETCH_TAG);
+    let mut rejected = Vec::new();
+    let mut acc0 = vec![Fp::zero(); session.domain_size()];
+    let mut acc1 = vec![Fp::zero(); session.domain_size()];
+    for (i, batch) in uploads.iter().enumerate() {
+        let keys0 = batch.server_keys(0);
+        let keys1 = batch.server_keys(1);
+        if keys0.len() != session.simple.num_bins() + session.params.cuckoo.sigma {
+            rejected.push(i);
+            continue;
+        }
+        if !sketch::verify_client_bins(session, &keys0, &keys1, &mut rng, &mut mul) {
+            rejected.push(i);
+            continue;
+        }
+        ssa::server_aggregate_into(session, &keys0, &mut acc0);
+        ssa::server_aggregate_into(session, &keys1, &mut acc1);
+    }
+    if acc0.is_empty() {
+        return Err(anyhow!("empty domain"));
+    }
+    Ok(VerifiedSsaResult {
+        delta: ssa::reconstruct(&acc0, &acc1),
+        rejected,
+    })
+}
+
+/// Domain separator for the servers' shared sketching randomness.
+const SKETCH_TAG: u64 = 0x53_4b_45_54_43_48; // "SKETCH"
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpf::{gen_batch_with_master, BinPoint};
+    use crate::hashing::CuckooParams;
+    use crate::protocol::{SessionParams, ssa};
+
+    fn session() -> Session {
+        Session::new_full(SessionParams {
+            m: 512,
+            k: 16,
+            cuckoo: CuckooParams::default(),
+        })
+    }
+
+    #[test]
+    fn honest_clients_all_accepted() {
+        let s = session();
+        let mut rng = Rng::new(800);
+        let mut uploads = Vec::new();
+        let mut expected = vec![Fp::zero(); 512];
+        for _ in 0..3 {
+            let sel = rng.sample_distinct(16, 512);
+            let dl: Vec<Fp> = sel.iter().map(|&x| Fp::new(x + 1)).collect();
+            for (&i, d) in sel.iter().zip(&dl) {
+                expected[i as usize] = expected[i as usize].add(*d);
+            }
+            uploads.push(ssa::client_update(&s, &sel, &dl, &mut rng).unwrap());
+        }
+        let res = run_verified_ssa_round(&s, &uploads, 801).unwrap();
+        assert!(res.rejected.is_empty());
+        assert_eq!(res.delta, expected);
+    }
+
+    #[test]
+    fn malicious_client_rejected_and_excluded() {
+        let s = session();
+        let mut rng = Rng::new(802);
+        // Honest client.
+        let sel = rng.sample_distinct(16, 512);
+        let dl: Vec<Fp> = sel.iter().map(|_| Fp::new(7)).collect();
+        let honest = ssa::client_update(&s, &sel, &dl, &mut rng).unwrap();
+        let mut expected = vec![Fp::zero(); 512];
+        for &i in &sel {
+            expected[i as usize] = Fp::new(7);
+        }
+        // Malicious client: corrupt a first-level correction word of one
+        // real key. Off the α-path both parties apply the (identically
+        // corrupted) CW and still cancel, but ON the path only one party
+        // applies it — every leaf under that node diverges, so the share
+        // vector has a whole subtree of non-zeros instead of one point.
+        let num_bins = s.simple.num_bins();
+        let bins: Vec<BinPoint<Fp>> = (0..num_bins)
+            .map(|j| {
+                let depth = crate::dpf::depth_for(s.simple.bin(j).len().max(2));
+                if j == 0 {
+                    BinPoint { depth, point: Some((0, Fp::new(1000))) }
+                } else {
+                    BinPoint { depth, point: None }
+                }
+            })
+            .collect();
+        let mut evil = gen_batch_with_master(&bins, [9; 16], [13; 16]);
+        evil.publics[0].cws[0].seed[5] ^= 0x40;
+
+        let res = run_verified_ssa_round(&s, &[honest, evil], 803).unwrap();
+        assert_eq!(res.rejected, vec![1], "malicious client must be rejected");
+        assert_eq!(res.delta, expected, "aggregate must exclude the cheater");
+    }
+
+    #[test]
+    fn wrong_key_count_rejected() {
+        let s = session();
+        let mut rng = Rng::new(804);
+        let sel = rng.sample_distinct(16, 512);
+        let dl: Vec<Fp> = sel.iter().map(|_| Fp::one()).collect();
+        let mut upload = ssa::client_update(&s, &sel, &dl, &mut rng).unwrap();
+        upload.publics.pop(); // drop one bin
+        let res = run_verified_ssa_round(&s, &[upload], 805).unwrap();
+        assert_eq!(res.rejected, vec![0]);
+    }
+}

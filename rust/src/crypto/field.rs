@@ -1,0 +1,169 @@
+//! The prime field 𝔽_p with p = 2^61 − 1 (Mersenne), used by the
+//! malicious-secure sketching check (§3.1, following Boneh et al. \[9\]).
+//!
+//! Sketching works over a prime field (it needs multiplicative structure);
+//! the DPF payload group stays a ring. 2^61−1 keeps products inside u128.
+
+/// p = 2^61 − 1.
+pub const P: u64 = (1 << 61) - 1;
+
+/// Field element of 𝔽_{2^61−1}, always kept reduced.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct Fp(pub u64);
+
+#[inline]
+fn reduce(x: u128) -> u64 {
+    // x < 2^122; fold twice.
+    let lo = (x & P as u128) as u64;
+    let hi = (x >> 61) as u64;
+    let mut r = lo.wrapping_add(hi & P).wrapping_add(hi >> 61);
+    if r >= P {
+        r -= P;
+    }
+    if r >= P {
+        r -= P;
+    }
+    r
+}
+
+impl Fp {
+    /// Canonical embedding of a u64.
+    pub fn new(x: u64) -> Self {
+        Fp(reduce(x as u128))
+    }
+    /// Additive identity.
+    pub fn zero() -> Self {
+        Fp(0)
+    }
+    /// Multiplicative identity.
+    pub fn one() -> Self {
+        Fp(1)
+    }
+    /// Field addition.
+    pub fn add(self, o: Fp) -> Fp {
+        let mut r = self.0 + o.0;
+        if r >= P {
+            r -= P;
+        }
+        Fp(r)
+    }
+    /// Field subtraction.
+    pub fn sub(self, o: Fp) -> Fp {
+        Fp(if self.0 >= o.0 {
+            self.0 - o.0
+        } else {
+            self.0 + P - o.0
+        })
+    }
+    /// Field negation.
+    pub fn neg(self) -> Fp {
+        if self.0 == 0 {
+            Fp(0)
+        } else {
+            Fp(P - self.0)
+        }
+    }
+    /// Field multiplication.
+    pub fn mul(self, o: Fp) -> Fp {
+        Fp(reduce(self.0 as u128 * o.0 as u128))
+    }
+    /// Exponentiation by squaring.
+    pub fn pow(self, mut e: u64) -> Fp {
+        let mut base = self;
+        let mut acc = Fp::one();
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc.mul(base);
+            }
+            base = base.mul(base);
+            e >>= 1;
+        }
+        acc
+    }
+    /// Multiplicative inverse (Fermat).
+    pub fn inv(self) -> Fp {
+        assert_ne!(self.0, 0, "inverse of zero");
+        self.pow(P - 2)
+    }
+    /// Uniform field element from an RNG.
+    pub fn random(rng: &mut super::rng::Rng) -> Fp {
+        Fp(rng.gen_range(P))
+    }
+}
+
+// 𝔽_p is itself a finite Abelian group — DPF payloads over it are what
+// the malicious-secure sketching check (§3.1) verifies, since additive
+// shares must live in the same algebra the sketch computes in.
+impl crate::group::Group for Fp {
+    fn zero() -> Self {
+        Fp(0)
+    }
+    fn add(&self, other: &Self) -> Self {
+        Fp::add(*self, *other)
+    }
+    fn neg(&self) -> Self {
+        Fp::neg(*self)
+    }
+    fn ring_mul(&self, other: &Self) -> Self {
+        self.mul(*other)
+    }
+    fn one() -> Self {
+        Fp::one()
+    }
+    fn convert(seed: &[u8; 16]) -> Self {
+        Fp::new(u64::from_le_bytes(seed[..8].try_into().unwrap()))
+    }
+    fn bit_len() -> usize {
+        61
+    }
+    fn byte_len() -> usize {
+        8
+    }
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.0.to_le_bytes());
+    }
+    fn decode(bytes: &[u8]) -> Option<Self> {
+        Some(Fp::new(u64::from_le_bytes(bytes.get(..8)?.try_into().ok()?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+
+    #[test]
+    fn ring_axioms() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let a = Fp::random(&mut rng);
+            let b = Fp::random(&mut rng);
+            let c = Fp::random(&mut rng);
+            assert_eq!(a.add(b), b.add(a));
+            assert_eq!(a.mul(b), b.mul(a));
+            assert_eq!(a.mul(b.add(c)), a.mul(b).add(a.mul(c)));
+            assert_eq!(a.sub(a), Fp::zero());
+            assert_eq!(a.add(a.neg()), Fp::zero());
+        }
+    }
+
+    #[test]
+    fn inverse() {
+        let mut rng = Rng::new(12);
+        for _ in 0..50 {
+            let a = Fp::random(&mut rng);
+            if a.0 != 0 {
+                assert_eq!(a.mul(a.inv()), Fp::one());
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_edge_cases() {
+        assert_eq!(Fp::new(P).0, 0);
+        assert_eq!(Fp::new(P + 1).0, 1);
+        assert_eq!(Fp::new(u64::MAX).0, reduce(u64::MAX as u128));
+        assert_eq!(Fp(P - 1).add(Fp(1)).0, 0);
+        assert_eq!(Fp(P - 1).mul(Fp(P - 1)), Fp::one()); // (-1)^2 = 1
+    }
+}

@@ -1,0 +1,99 @@
+//! Keyed hash functions for cuckoo / simple hashing.
+//!
+//! The η hash functions `h_d : Z_m → Z_B` are instantiated as independently
+//! keyed 64-bit finalisation mixers. All parties derive the same keys from
+//! a public per-round seed, which is what keeps the client's cuckoo table
+//! and the servers' simple table *aligned* (§4).
+
+/// One keyed hash function `h : u64 → [0, range)`.
+#[derive(Clone, Copy, Debug)]
+pub struct HashFn {
+    k0: u64,
+    k1: u64,
+    range: u64,
+}
+
+#[inline]
+fn mix(mut x: u64) -> u64 {
+    // murmur3 / splitmix finaliser — full avalanche.
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    x ^= x >> 33;
+    x
+}
+
+impl HashFn {
+    /// Derive a keyed hash with output range `[0, range)`.
+    pub fn new(k0: u64, k1: u64, range: u64) -> Self {
+        assert!(range > 0);
+        HashFn { k0, k1, range }
+    }
+
+    /// Evaluate the hash.
+    #[inline]
+    pub fn eval(&self, x: u64) -> u64 {
+        let h = mix(x.wrapping_add(self.k0)) ^ mix(x.rotate_left(32) ^ self.k1);
+        ((mix(h) as u128 * self.range as u128) >> 64) as u64
+    }
+
+    /// Output range.
+    pub fn range(&self) -> u64 {
+        self.range
+    }
+}
+
+/// Derive the η aligned hash functions from a public seed.
+pub fn derive_hash_fns(seed: u64, eta: usize, range: u64) -> Vec<HashFn> {
+    let mut rng = super::rng::Rng::new(seed ^ 0x9d5f_3c2a_17b4_e681);
+    (0..eta)
+        .map(|_| HashFn::new(rng.next_u64(), rng.next_u64(), range))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_range_and_deterministic() {
+        let h = HashFn::new(1, 2, 97);
+        for x in 0..1000 {
+            let v = h.eval(x);
+            assert!(v < 97);
+            assert_eq!(v, h.eval(x));
+        }
+    }
+
+    #[test]
+    fn keys_give_independent_functions() {
+        let fns = derive_hash_fns(42, 3, 1 << 20);
+        let x = 12345u64;
+        assert_ne!(fns[0].eval(x), fns[1].eval(x));
+        // Same seed → same functions (alignment property).
+        let fns2 = derive_hash_fns(42, 3, 1 << 20);
+        for (a, b) in fns.iter().zip(&fns2) {
+            for x in 0..100 {
+                assert_eq!(a.eval(x), b.eval(x));
+            }
+        }
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let h = HashFn::new(7, 8, 16);
+        let mut counts = [0usize; 16];
+        let n = 160_000;
+        for x in 0..n {
+            counts[h.eval(x as u64) as usize] += 1;
+        }
+        let expect = n / 16;
+        for &c in &counts {
+            assert!(
+                (c as f64 - expect as f64).abs() < expect as f64 * 0.05,
+                "bucket count {c} vs {expect}"
+            );
+        }
+    }
+}

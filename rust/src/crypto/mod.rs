@@ -1,0 +1,7 @@
+//! Light-weight symmetric primitives — the only cryptography the paper
+//! needs (its headline claim: no public-key operations on the round path).
+
+pub mod field;
+pub mod hash;
+pub mod prg;
+pub mod rng;

@@ -1,0 +1,194 @@
+//! AES-128 based length-doubling PRG for the GGM tree (BGI16 §3), plus a
+//! CTR-mode stream expander for `Convert` into wide groups.
+//!
+//! `G(s) = (AES_{K0}(s) ⊕ s, AES_{K1}(s) ⊕ s)` — the fixed-key
+//! Matyas–Meyer–Oseas construction. The two fixed keys are expanded once
+//! (`once_cell`-free: `std::sync::OnceLock`), so each tree level costs two
+//! AES block calls, hardware-accelerated through the `aes` crate.
+//! Control bits `t_L, t_R` are taken from the low bit of each child seed
+//! (and then zeroed), exactly as in the reference DPF implementations.
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes128;
+use std::sync::OnceLock;
+
+/// λ-bit PRG seed.
+pub type Seed = [u8; 16];
+
+fn fixed_ciphers() -> &'static (Aes128, Aes128) {
+    static CIPHERS: OnceLock<(Aes128, Aes128)> = OnceLock::new();
+    CIPHERS.get_or_init(|| {
+        // Nothing-up-my-sleeve fixed keys (digits of π and e).
+        let k0 = [
+            0x24, 0x3f, 0x6a, 0x88, 0x85, 0xa3, 0x08, 0xd3, 0x13, 0x19, 0x8a, 0x2e, 0x03, 0x70,
+            0x73, 0x44,
+        ];
+        let k1 = [
+            0xa4, 0x09, 0x38, 0x22, 0x29, 0x9f, 0x31, 0xd0, 0x08, 0x2e, 0xfa, 0x98, 0xec, 0x4e,
+            0x6c, 0x89,
+        ];
+        (
+            Aes128::new_from_slice(&k0).unwrap(),
+            Aes128::new_from_slice(&k1).unwrap(),
+        )
+    })
+}
+
+/// One child of the GGM double: seed + control bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Child {
+    pub seed: Seed,
+    pub t: bool,
+}
+
+/// Length-doubling PRG: seed ↦ (left child, right child).
+#[inline]
+pub fn double(seed: &Seed) -> (Child, Child) {
+    let (c0, c1) = fixed_ciphers();
+    let mut l = aes::Block::clone_from_slice(seed);
+    let mut r = aes::Block::clone_from_slice(seed);
+    c0.encrypt_block(&mut l);
+    c1.encrypt_block(&mut r);
+    let mut ls: Seed = l.into();
+    let mut rs: Seed = r.into();
+    for i in 0..16 {
+        ls[i] ^= seed[i];
+        rs[i] ^= seed[i];
+    }
+    let tl = ls[0] & 1 == 1;
+    let tr = rs[0] & 1 == 1;
+    ls[0] &= 0xfe;
+    rs[0] &= 0xfe;
+    (Child { seed: ls, t: tl }, Child { seed: rs, t: tr })
+}
+
+/// Expand only one child — same output as `double(..).0/.1` but a single
+/// AES call. Used by the point-wise `Eval` walk.
+#[inline]
+pub fn expand_one(seed: &Seed, right: bool) -> Child {
+    let (c0, c1) = fixed_ciphers();
+    let mut b = aes::Block::clone_from_slice(seed);
+    if right {
+        c1.encrypt_block(&mut b);
+    } else {
+        c0.encrypt_block(&mut b);
+    }
+    let mut s: Seed = b.into();
+    for i in 0..16 {
+        s[i] ^= seed[i];
+    }
+    let t = s[0] & 1 == 1;
+    s[0] &= 0xfe;
+    Child { seed: s, t }
+}
+
+/// Batched one-sided expansion: encrypt many independent seeds with the
+/// fixed key for `right ∈ {left, right}` in one call, letting the AES-NI
+/// units pipeline across blocks (the full-domain-eval hot path expands an
+/// entire GGM level at once). `out[i]` = the child of `seeds[i]`.
+pub fn expand_many(seeds: &[Seed], right: bool, out: &mut Vec<Child>) {
+    let (c0, c1) = fixed_ciphers();
+    let cipher = if right { c1 } else { c0 };
+    out.clear();
+    out.reserve(seeds.len());
+    // Stack-resident chunk buffer: no heap traffic on the hot path, and
+    // `encrypt_blocks` pipelines the whole chunk through AES-NI.
+    const CHUNK: usize = 64;
+    let mut buf = [aes::Block::default(); CHUNK];
+    for chunk in seeds.chunks(CHUNK) {
+        for (b, s) in buf.iter_mut().zip(chunk) {
+            b.copy_from_slice(s);
+        }
+        cipher.encrypt_blocks(&mut buf[..chunk.len()]);
+        for (b, seed) in buf.iter().zip(chunk) {
+            let mut s: Seed = (*b).into();
+            for i in 0..16 {
+                s[i] ^= seed[i];
+            }
+            let t = s[0] & 1 == 1;
+            s[0] &= 0xfe;
+            out.push(Child { seed: s, t });
+        }
+    }
+}
+
+/// AES-CTR stream expansion of a seed to `n_bytes` pseudorandom bytes
+/// (the `Convert` map for wide groups, and the master-seed → per-bin seed
+/// derivation PRF).
+pub fn expand_stream(seed: &Seed, n_bytes: usize) -> Vec<u8> {
+    let cipher = Aes128::new_from_slice(seed).unwrap();
+    let mut out = vec![0u8; n_bytes.div_ceil(16) * 16];
+    for (ctr, chunk) in out.chunks_exact_mut(16).enumerate() {
+        let mut block = [0u8; 16];
+        block[..8].copy_from_slice(&(ctr as u64).to_le_bytes());
+        let mut b = aes::Block::clone_from_slice(&block);
+        cipher.encrypt_block(&mut b);
+        chunk.copy_from_slice(&b);
+    }
+    out.truncate(n_bytes);
+    out
+}
+
+/// PRF(msk, i) → λ-bit seed, used to derive per-bin DPF root seeds from a
+/// single master seed (§4 "Master seed for each client").
+pub fn prf_seed(master: &Seed, index: u64) -> Seed {
+    let cipher = Aes128::new_from_slice(master).unwrap();
+    let mut block = [0u8; 16];
+    block[..8].copy_from_slice(&index.to_le_bytes());
+    let mut b = aes::Block::clone_from_slice(&block);
+    cipher.encrypt_block(&mut b);
+    b.into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn double_deterministic() {
+        let s = [42u8; 16];
+        assert_eq!(double(&s), double(&s));
+    }
+
+    #[test]
+    fn double_children_differ_and_low_bit_cleared() {
+        let s = [1u8; 16];
+        let (l, r) = double(&s);
+        assert_ne!(l.seed, r.seed);
+        assert_eq!(l.seed[0] & 1, 0);
+        assert_eq!(r.seed[0] & 1, 0);
+    }
+
+    #[test]
+    fn expand_one_matches_double() {
+        let s = [9u8; 16];
+        let (l, r) = double(&s);
+        assert_eq!(expand_one(&s, false), l);
+        assert_eq!(expand_one(&s, true), r);
+    }
+
+    #[test]
+    fn seed_sensitivity() {
+        let a = [0u8; 16];
+        let mut b = a;
+        b[15] = 1;
+        assert_ne!(double(&a).0.seed, double(&b).0.seed);
+    }
+
+    #[test]
+    fn stream_lengths_and_determinism() {
+        let s = [7u8; 16];
+        for n in [0usize, 1, 15, 16, 17, 100] {
+            assert_eq!(expand_stream(&s, n).len(), n);
+        }
+        assert_eq!(expand_stream(&s, 64), expand_stream(&s, 64));
+        assert_eq!(expand_stream(&s, 64)[..32], expand_stream(&s, 32)[..]);
+    }
+
+    #[test]
+    fn prf_distinct_indices() {
+        let msk = [3u8; 16];
+        assert_ne!(prf_seed(&msk, 0), prf_seed(&msk, 1));
+        assert_eq!(prf_seed(&msk, 5), prf_seed(&msk, 5));
+    }
+}

@@ -1,0 +1,18 @@
+//! Synthetic datasets standing in for MNIST / CIFAR10 / TREC (§7.3).
+//!
+//! This environment has no network access, so the accuracy experiments
+//! run on deterministic generators with the *shapes* of the paper's
+//! tasks: a 784-feature 10-class image task (class-conditional Gaussians
+//! over random class prototypes — learnable but not trivial) and a
+//! 6-class bag-of-words text task with the TREC census of Table 9
+//! (8,256-word vocabulary, per-client vocabulary skew). What the
+//! experiments measure — the top-k-compression-vs-accuracy *curve* — is
+//! preserved; absolute accuracies are task-specific (see DESIGN.md §5).
+
+mod image;
+mod partition;
+mod text;
+
+pub use image::{ImageDataset, IMAGE_CLASSES, IMAGE_DIM};
+pub use partition::partition_iid;
+pub use text::{TextDataset, TrecCensus};

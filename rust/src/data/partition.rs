@@ -1,0 +1,49 @@
+//! Federated data partitioning (the paper follows McMahan et al. \[33\]:
+//! shuffle, then split evenly across clients — IID).
+
+use crate::crypto::rng::Rng;
+
+/// Shuffle `n` example indices and split them evenly across `clients`.
+/// Remainder examples go to the first clients (sizes differ by ≤ 1).
+pub fn partition_iid(n: usize, clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(clients > 0);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let base = n / clients;
+    let extra = n % clients;
+    let mut out = Vec::with_capacity(clients);
+    let mut off = 0;
+    for c in 0..clients {
+        let take = base + usize::from(c < extra);
+        out.push(idx[off..off + take].to_vec());
+        off += take;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_everything_once() {
+        let mut rng = Rng::new(140);
+        let parts = partition_iid(103, 10, &mut rng);
+        assert_eq!(parts.len(), 10);
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        // Sizes differ by at most one.
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
+        assert!(sizes.iter().all(|&s| s == 10 || s == 11));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = partition_iid(50, 5, &mut Rng::new(1));
+        let b = partition_iid(50, 5, &mut Rng::new(1));
+        let c = partition_iid(50, 5, &mut Rng::new(2));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

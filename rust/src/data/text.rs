@@ -1,0 +1,198 @@
+//! TREC-shaped synthetic text task (Table 9 census).
+
+use crate::crypto::rng::Rng;
+
+/// The paper's Table 9: TREC statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct TrecCensus {
+    pub vocab: usize,
+    pub classes: usize,
+    pub clients: usize,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub words_per_client: usize,
+    pub samples_per_client: usize,
+}
+
+impl Default for TrecCensus {
+    fn default() -> Self {
+        TrecCensus {
+            vocab: 8256,
+            classes: 6,
+            clients: 4,
+            train_samples: 5452,
+            test_samples: 500,
+            words_per_client: 3365,
+            samples_per_client: 1363,
+        }
+    }
+}
+
+/// Bag-of-words dataset with per-client vocabulary skew: each client sees
+/// a ~words_per_client subset of the vocabulary — exactly the structure
+/// that makes *submodel* (embedding-row) learning effective.
+#[derive(Clone, Debug)]
+pub struct TextDataset {
+    pub census: TrecCensus,
+    /// Sparse examples: (client, label, word ids).
+    pub examples: Vec<(usize, u8, Vec<u32>)>,
+    /// Per-client vocabulary (sorted word ids).
+    pub client_vocab: Vec<Vec<u32>>,
+    /// Held-out test set: (label, word ids).
+    pub test: Vec<(u8, Vec<u32>)>,
+}
+
+impl TextDataset {
+    /// Deterministic synthesis. Class signal: each class owns a band of
+    /// "topic" words; an example draws most tokens from its class band
+    /// (within the client's vocabulary) plus common filler words.
+    pub fn synthesize(census: TrecCensus, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let band = census.vocab / census.classes;
+
+        // Per-client vocabulary: a random subset, biased to include some
+        // of every class band (so every client can learn every class).
+        let mut client_vocab = Vec::with_capacity(census.clients);
+        for _ in 0..census.clients {
+            let mut v = rng.sample_distinct(census.words_per_client, census.vocab as u64);
+            v.sort_unstable();
+            client_vocab.push(v.iter().map(|&x| x as u32).collect::<Vec<u32>>());
+        }
+
+        let sample = |rng: &mut Rng, vocab: &[u32], label: usize, len: usize| -> Vec<u32> {
+            let lo = (label * band) as u32;
+            let hi = ((label + 1) * band) as u32;
+            // Words of this client's vocab inside the class band.
+            let in_band: Vec<u32> = vocab.iter().copied().filter(|&w| w >= lo && w < hi).collect();
+            let mut words = Vec::with_capacity(len);
+            for _ in 0..len {
+                if !in_band.is_empty() && rng.gen_f64() < 0.7 {
+                    words.push(in_band[rng.gen_range(in_band.len() as u64) as usize]);
+                } else {
+                    words.push(vocab[rng.gen_range(vocab.len() as u64) as usize]);
+                }
+            }
+            words
+        };
+
+        let mut examples = Vec::with_capacity(census.clients * census.samples_per_client);
+        for (c, vocab) in client_vocab.iter().enumerate() {
+            for _ in 0..census.samples_per_client {
+                let label = rng.gen_range(census.classes as u64) as usize;
+                let len = 6 + rng.gen_range(10) as usize;
+                examples.push((c, label as u8, sample(&mut rng, vocab, label, len)));
+            }
+        }
+        // Test set over the full vocabulary.
+        let full: Vec<u32> = (0..census.vocab as u32).collect();
+        let mut test = Vec::with_capacity(census.test_samples);
+        for _ in 0..census.test_samples {
+            let label = rng.gen_range(census.classes as u64) as usize;
+            let len = 6 + rng.gen_range(10) as usize;
+            test.push((label as u8, sample(&mut rng, &full, label, len)));
+        }
+        TextDataset {
+            census,
+            examples,
+            client_vocab,
+            test,
+        }
+    }
+
+    /// A client's examples.
+    pub fn client_examples(&self, client: usize) -> impl Iterator<Item = &(usize, u8, Vec<u32>)> {
+        self.examples.iter().filter(move |(c, _, _)| *c == client)
+    }
+
+    /// Assemble a dense bag-of-words batch `(bow, y_onehot)` from
+    /// examples (count encoding, matching the L2 `embbag` input).
+    pub fn batch(&self, items: &[(u8, Vec<u32>)]) -> (Vec<f32>, Vec<f32>) {
+        let v = self.census.vocab;
+        let c = self.census.classes;
+        let mut bow = vec![0f32; items.len() * v];
+        let mut y = vec![0f32; items.len() * c];
+        for (row, (label, words)) in items.iter().enumerate() {
+            for &w in words {
+                bow[row * v + w as usize] += 1.0;
+            }
+            y[row * c + *label as usize] = 1.0;
+        }
+        (bow, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_census() -> TrecCensus {
+        TrecCensus {
+            vocab: 600,
+            classes: 6,
+            clients: 4,
+            train_samples: 400,
+            test_samples: 60,
+            words_per_client: 250,
+            samples_per_client: 100,
+        }
+    }
+
+    #[test]
+    fn census_shapes() {
+        let d = TextDataset::synthesize(small_census(), 11);
+        assert_eq!(d.client_vocab.len(), 4);
+        assert_eq!(d.examples.len(), 400);
+        assert_eq!(d.test.len(), 60);
+        for v in &d.client_vocab {
+            assert_eq!(v.len(), 250);
+            assert!(v.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn client_examples_use_client_vocab() {
+        let d = TextDataset::synthesize(small_census(), 12);
+        for (c, _, words) in &d.examples {
+            let vocab = &d.client_vocab[*c];
+            assert!(words.iter().all(|w| vocab.binary_search(w).is_ok()));
+        }
+    }
+
+    #[test]
+    fn labels_correlate_with_bands() {
+        let d = TextDataset::synthesize(small_census(), 13);
+        let band = 600 / 6;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for (_, label, words) in &d.examples {
+            for &w in words {
+                total += 1;
+                if (w as usize) / band == *label as usize {
+                    hits += 1;
+                }
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.5, "class signal too weak: {frac}");
+    }
+
+    #[test]
+    fn default_census_matches_table9() {
+        let c = TrecCensus::default();
+        assert_eq!(c.vocab, 8256);
+        assert_eq!(c.clients, 4);
+        assert_eq!(c.train_samples, 5452);
+        assert_eq!(c.samples_per_client, 1363);
+    }
+
+    #[test]
+    fn batch_encoding() {
+        let d = TextDataset::synthesize(small_census(), 14);
+        let items = vec![(2u8, vec![5u32, 5, 9])];
+        let (bow, y) = d.batch(&items);
+        assert_eq!(bow[5], 2.0);
+        assert_eq!(bow[9], 1.0);
+        assert_eq!(y[2], 1.0);
+        assert_eq!(y.iter().sum::<f32>(), 1.0);
+    }
+}

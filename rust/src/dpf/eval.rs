@@ -1,0 +1,195 @@
+//! DPF evaluation: single-point walk and full-domain traversal.
+
+use super::key::DpfKey;
+use crate::crypto::prg::{double, expand_one, Seed};
+use crate::group::Group;
+
+/// `Eval(b, k_b, x)` — one root-to-leaf walk (`depth` AES calls).
+pub fn eval<G: Group>(key: &DpfKey<G>, x: u64) -> G {
+    debug_assert!(x < (1u64 << key.depth));
+    let mut s = key.root_seed;
+    let mut t = key.party == 1;
+    for level in 0..key.depth {
+        let bit = (x >> (key.depth - 1 - level)) & 1 == 1;
+        let child = expand_one(&s, bit);
+        let cw = &key.cws[level];
+        s = child.seed;
+        let mut ct = child.t;
+        if t {
+            for i in 0..16 {
+                s[i] ^= cw.seed[i];
+            }
+            ct ^= if bit { cw.t_right } else { cw.t_left };
+        }
+        t = ct;
+    }
+    leaf_share(key, &s, t)
+}
+
+#[inline]
+fn leaf_share<G: Group>(key: &DpfKey<G>, s: &Seed, t: bool) -> G {
+    // (-1)^b · (Convert(s) + t·CW_out).
+    let mut v = G::convert(s);
+    if t {
+        v.add_assign(&key.cw_out);
+    }
+    v.cneg(key.party == 1)
+}
+
+/// Full-domain evaluation (§7.2 optimisation): one breadth-first traversal
+/// shares every internal PRG call across the whole domain — `O(2^depth)`
+/// AES doubles instead of `O(depth · 2^depth)` point walks.
+///
+/// Returns the first `num_points` leaf shares (the simple-hash bin size Θ
+/// need not be a power of two).
+pub fn full_eval<G: Group>(key: &DpfKey<G>, num_points: usize) -> Vec<G> {
+    debug_assert!(num_points <= 1usize << key.depth);
+    // Level-order frontier of (seed, t). Prune subtrees that lie entirely
+    // beyond num_points so truncated domains don't pay for the full tree.
+    // Scalar AES (expand via `double`) measured fastest on this core: the
+    // OoO window already pipelines AES-NI across iterations, and wide
+    // `encrypt_blocks` batches only added copies (EXPERIMENTS.md §Perf).
+    let mut frontier: Vec<(Seed, bool)> = vec![(key.root_seed, key.party == 1)];
+    for level in 0..key.depth {
+        let cw = &key.cws[level];
+        // Leaves under one node at this level, after expanding.
+        let span = 1usize << (key.depth - level - 1);
+        let needed = num_points.div_ceil(span).max(1);
+        let mut next = Vec::with_capacity((frontier.len() * 2).min(needed + 1));
+        'outer: for (s, t) in &frontier {
+            let (l, r) = double(s);
+            for (bit, child) in [(false, l), (true, r)] {
+                if next.len() >= needed {
+                    break 'outer;
+                }
+                let mut cs = child.seed;
+                let mut ct = child.t;
+                if *t {
+                    for i in 0..16 {
+                        cs[i] ^= cw.seed[i];
+                    }
+                    ct ^= if bit { cw.t_right } else { cw.t_left };
+                }
+                next.push((cs, ct));
+            }
+        }
+        frontier = next;
+    }
+    frontier
+        .iter()
+        .take(num_points)
+        .map(|(s, t)| leaf_share(key, s, *t))
+        .collect()
+}
+
+
+/// Reusable buffers for repeated [`full_eval_with`] calls — the SSA/PSR
+/// servers evaluate thousands of small bin trees per client, and per-bin
+/// heap churn (frontier + output vectors) measurably costs (§Perf
+/// iteration 3). One workspace per server pass amortises it away.
+#[derive(Default)]
+pub struct EvalWorkspace {
+    cur: Vec<(Seed, bool)>,
+    next: Vec<(Seed, bool)>,
+}
+
+/// Allocation-free variant of [`full_eval`]: leaf shares are appended to
+/// `out` (cleared first), frontier storage lives in `ws`.
+pub fn full_eval_with<G: Group>(
+    key: &DpfKey<G>,
+    num_points: usize,
+    ws: &mut EvalWorkspace,
+    out: &mut Vec<G>,
+) {
+    full_eval_parts(
+        key.party,
+        key.depth,
+        &key.root_seed,
+        &key.cws,
+        &key.cw_out,
+        num_points,
+        ws,
+        out,
+    );
+}
+
+/// Full-domain evaluation from borrowed key components — the server-side
+/// hot path evaluates straight off a client's decoded [`PublicPart`]s plus
+/// a PRF-derived root seed, without materialising per-server `DpfKey`s
+/// (cloning every bin's correction words cost ~20 MB of memcpy per client
+/// per server at m ≈ 2·10^6 — §Perf iteration 5).
+///
+/// [`PublicPart`]: super::master::PublicPart
+#[allow(clippy::too_many_arguments)]
+pub fn full_eval_parts<G: Group>(
+    party: u8,
+    depth: usize,
+    root_seed: &Seed,
+    cws: &[super::key::CorrectionWord],
+    cw_out: &G,
+    num_points: usize,
+    ws: &mut EvalWorkspace,
+    out: &mut Vec<G>,
+) {
+    debug_assert!(num_points <= 1usize << depth);
+    // Breadth-first with reused ping-pong buffers. A DFS variant (only a
+    // depth-sized stack) was tried and measured ~25% SLOWER — the
+    // level-order loop keeps the AES stream independent across iterations
+    // so the OoO core pipelines it; DFS serialises parent→child
+    // dependencies (§Perf iteration 6, reverted).
+    ws.cur.clear();
+    ws.cur.push((*root_seed, party == 1));
+    for (level, cw) in cws.iter().enumerate().take(depth) {
+        let span = 1usize << (depth - level - 1);
+        let needed = num_points.div_ceil(span).max(1);
+        ws.next.clear();
+        'outer: for i in 0..ws.cur.len() {
+            let (s, t) = ws.cur[i];
+            let (l, r) = double(&s);
+            for (bit, child) in [(false, l), (true, r)] {
+                if ws.next.len() >= needed {
+                    break 'outer;
+                }
+                let mut cs = child.seed;
+                let mut ct = child.t;
+                if t {
+                    for b in 0..16 {
+                        cs[b] ^= cw.seed[b];
+                    }
+                    ct ^= if bit { cw.t_right } else { cw.t_left };
+                }
+                ws.next.push((cs, ct));
+            }
+        }
+        std::mem::swap(&mut ws.cur, &mut ws.next);
+    }
+    let neg = party == 1;
+    out.clear();
+    out.extend(ws.cur.iter().take(num_points).map(|(s, t)| {
+        let mut v = G::convert(s);
+        if *t {
+            v.add_assign(cw_out);
+        }
+        v.cneg(neg)
+    }));
+}
+
+/// Batched full-domain evaluation of MANY small trees at once — the SSA /
+/// PSR server path evaluates one DPF per cuckoo bin, and each bin's tree
+/// is tiny (⌈log Θ⌉ ≈ 6–9 levels). Expanding them level-synchronously
+/// turns B separate walks into `max_depth` pairs of wide AES batches the
+/// AES-NI pipeline can chew through.
+///
+/// `num_points[j]` bounds bin `j`'s output length (its Θ_j). Returns one
+/// share vector per key.
+pub fn full_eval_batch<G: Group>(keys: &[DpfKey<G>], num_points: &[usize]) -> Vec<Vec<G>> {
+    assert_eq!(keys.len(), num_points.len());
+    // Measured on this testbed: a level-synchronous cross-bin AES batch
+    // is NOT faster than per-bin walks (scalar AES-NI already saturates
+    // via out-of-order pipelining), so the batch API keeps the simple
+    // per-key implementation. See EXPERIMENTS.md §Perf iterations 1-2.
+    keys.iter()
+        .zip(num_points)
+        .map(|(k, &n)| full_eval(k, n))
+        .collect()
+}

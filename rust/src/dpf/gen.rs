@@ -1,0 +1,84 @@
+//! DPF key generation (BGI16 Gen, fig. 4 of \[11\]).
+
+use super::key::{CorrectionWord, DpfKey};
+use crate::crypto::prg::{double, Seed};
+use crate::group::Group;
+
+/// `Gen(1^λ, α, β)` with caller-provided root seeds.
+///
+/// Walks the GGM tree along the path to `α` (MSB-first over `depth` bits),
+/// emitting one correction word per level, then pins `β` into the final
+/// output correction word. Deterministic in `(s0, s1)` so the master-seed
+/// optimisation (PRF-derived seeds, §4) works unchanged.
+pub fn gen<G: Group>(
+    depth: usize,
+    alpha: u64,
+    beta: &G,
+    s0: Seed,
+    s1: Seed,
+) -> (DpfKey<G>, DpfKey<G>) {
+    assert!(depth >= 1 && depth <= 63, "depth {depth} out of range");
+    assert!(
+        alpha < (1u64 << depth),
+        "α = {alpha} outside domain 2^{depth}"
+    );
+
+    let mut seeds = [s0, s1];
+    let mut ts = [false, true];
+    let mut cws = Vec::with_capacity(depth);
+
+    for level in 0..depth {
+        let bit = (alpha >> (depth - 1 - level)) & 1 == 1;
+        let (l0, r0) = double(&seeds[0]);
+        let (l1, r1) = double(&seeds[1]);
+
+        // Children we "lose" (off the α-path) must collapse to equality
+        // after correction; children we "keep" continue the walk.
+        let (keep0, keep1, lose0, lose1) = if bit {
+            (r0, r1, l0, l1)
+        } else {
+            (l0, l1, r0, r1)
+        };
+
+        let mut cw_seed = lose0.seed;
+        for i in 0..16 {
+            cw_seed[i] ^= lose1.seed[i];
+        }
+        let cw = CorrectionWord {
+            seed: cw_seed,
+            // t-corrections arrange that off-path t's agree and the on-path
+            // t's differ (t ⊕ α_i ⊕ 1 on the kept side).
+            t_left: l0.t ^ l1.t ^ bit ^ true,
+            t_right: r0.t ^ r1.t ^ bit,
+        };
+        let cw_t_keep = if bit { cw.t_right } else { cw.t_left };
+        cws.push(cw);
+
+        for b in 0..2 {
+            let keep = if b == 0 { keep0 } else { keep1 };
+            let mut s = keep.seed;
+            if ts[b] {
+                for i in 0..16 {
+                    s[i] ^= cw.seed[i];
+                }
+            }
+            let t = keep.t ^ (ts[b] & cw_t_keep);
+            seeds[b] = s;
+            ts[b] = t;
+        }
+    }
+
+    // CW^{n+1} = (-1)^{t1} · (β − Convert(s0) + Convert(s1)).
+    let conv0 = G::convert(&seeds[0]);
+    let conv1 = G::convert(&seeds[1]);
+    let cw_out = beta.sub(&conv0).add(&conv1).cneg(ts[1]);
+
+    let mk = |party: u8, root: Seed| DpfKey {
+        party,
+        depth,
+        root_seed: root,
+        cws: cws.clone(),
+        cw_out: cw_out.clone(),
+    };
+    (mk(0, s0), mk(1, s1))
+}

@@ -1,0 +1,89 @@
+//! DPF key material and its wire encoding.
+
+use crate::crypto::prg::Seed;
+use crate::group::Group;
+
+/// Per-level correction word: a λ-bit seed correction plus two control-bit
+/// corrections (left / right).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CorrectionWord {
+    pub seed: Seed,
+    pub t_left: bool,
+    pub t_right: bool,
+}
+
+/// One party's DPF key for `f_{α,β} : {0,1}^depth → 𝔾`.
+///
+/// `cws` + `cw_out` form the *public part* (identical in both keys);
+/// `root_seed` is the *private part* (§4 "Efficiency"). The party id `b`
+/// fixes the sign convention `(-1)^b` on outputs.
+#[derive(Clone, Debug)]
+pub struct DpfKey<G: Group> {
+    pub party: u8,
+    pub depth: usize,
+    pub root_seed: Seed,
+    pub cws: Vec<CorrectionWord>,
+    pub cw_out: G,
+}
+
+impl<G: Group> DpfKey<G> {
+    /// Total key size in bits: `depth·(λ+2) + λ + ⌈log 𝔾⌉` (paper §3.1).
+    pub fn size_bits(&self) -> usize {
+        self.public_size_bits() + self.private_size_bits()
+    }
+
+    /// Public-part bits: `depth·(λ+2) + ⌈log 𝔾⌉`.
+    pub fn public_size_bits(&self) -> usize {
+        self.depth * (128 + 2) + G::bit_len()
+    }
+
+    /// Private-part bits: the λ-bit root seed.
+    pub fn private_size_bits(&self) -> usize {
+        128
+    }
+
+    /// Wire encoding (party, depth, root seed, CWs, output CW).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 + 2 + 16 + self.cws.len() * 17 + G::byte_len());
+        out.push(self.party);
+        out.push(self.depth as u8);
+        out.extend_from_slice(&self.root_seed);
+        for cw in &self.cws {
+            out.extend_from_slice(&cw.seed);
+            out.push(cw.t_left as u8 | ((cw.t_right as u8) << 1));
+        }
+        self.cw_out.encode(&mut out);
+        out
+    }
+
+    /// Parse a wire encoding; `None` on malformed input.
+    pub fn from_bytes(bytes: &[u8]) -> Option<Self> {
+        let party = *bytes.first()?;
+        let depth = *bytes.get(1)? as usize;
+        if party > 1 {
+            return None;
+        }
+        let mut off = 2;
+        let root_seed: Seed = bytes.get(off..off + 16)?.try_into().ok()?;
+        off += 16;
+        let mut cws = Vec::with_capacity(depth);
+        for _ in 0..depth {
+            let seed: Seed = bytes.get(off..off + 16)?.try_into().ok()?;
+            let bits = *bytes.get(off + 16)?;
+            off += 17;
+            cws.push(CorrectionWord {
+                seed,
+                t_left: bits & 1 == 1,
+                t_right: bits & 2 == 2,
+            });
+        }
+        let cw_out = G::decode(bytes.get(off..)?)?;
+        Some(DpfKey {
+            party,
+            depth,
+            root_seed,
+            cws,
+            cw_out,
+        })
+    }
+}

@@ -1,0 +1,155 @@
+//! Master-seed batched key generation (§4 "Master seed for each client").
+//!
+//! A client producing one DPF per cuckoo bin would naively upload `B` root
+//! seeds to each server. Instead it samples two λ-bit master seeds
+//! `msk_0, msk_1`, derives bin `j`'s root seeds as `PRF(msk_b, j)`, and
+//! uploads only `msk_b` to server `b` plus the (shared) public parts. This
+//! cuts client upload to `B·(⌈log Θ⌉(λ+2) + ⌈log 𝔾⌉) + λ` bits per server
+//! pair — the formula the paper's §4 Efficiency paragraph reports.
+
+use super::gen::gen;
+use super::key::{CorrectionWord, DpfKey};
+use crate::crypto::prg::{prf_seed, Seed};
+use crate::group::Group;
+
+/// What a client wants to place in one bin: domain depth plus an optional
+/// `(α, β)` point (`None` ⇒ dummy key `Gen(1^λ, 0, 0)`, §4).
+#[derive(Clone, Debug)]
+pub struct BinPoint<G: Group> {
+    pub depth: usize,
+    pub point: Option<(u64, G)>,
+}
+
+/// The public (seed-free) half of a DPF key — identical for both parties.
+#[derive(Clone, Debug)]
+pub struct PublicPart<G: Group> {
+    pub depth: usize,
+    pub cws: Vec<CorrectionWord>,
+    pub cw_out: G,
+}
+
+impl<G: Group> PublicPart<G> {
+    /// Size in bits: `depth·(λ+2) + ⌈log 𝔾⌉`.
+    pub fn size_bits(&self) -> usize {
+        self.depth * (128 + 2) + G::bit_len()
+    }
+}
+
+/// A client's whole upload for one protocol run: two master seeds plus one
+/// public part per bin.
+#[derive(Clone, Debug)]
+pub struct MasterKeyBatch<G: Group> {
+    pub msk: [Seed; 2],
+    pub publics: Vec<PublicPart<G>>,
+}
+
+impl<G: Group> MasterKeyBatch<G> {
+    /// Reassemble server `b`'s concrete DPF keys from its master seed and
+    /// the shared public parts.
+    pub fn server_keys(&self, b: u8) -> Vec<DpfKey<G>> {
+        assert!(b < 2);
+        self.publics
+            .iter()
+            .enumerate()
+            .map(|(j, p)| DpfKey {
+                party: b,
+                depth: p.depth,
+                root_seed: prf_seed(&self.msk[b as usize], j as u64),
+                cws: p.cws.clone(),
+                cw_out: p.cw_out.clone(),
+            })
+            .collect()
+    }
+
+    /// Client upload in bits for the master-seed scheme: the public parts
+    /// (sent once, to one server) plus one λ-bit master seed per server.
+    pub fn upload_bits(&self) -> usize {
+        self.publics.iter().map(|p| p.size_bits()).sum::<usize>() + 2 * 128
+    }
+}
+
+/// Generate the batch. Root seeds for bin `j` are `PRF(msk_b, j)`; dummy
+/// bins get `Gen(1^λ, 0, 0)` keys, indistinguishable from real ones.
+pub fn gen_batch_with_master<G: Group>(
+    bins: &[BinPoint<G>],
+    msk0: Seed,
+    msk1: Seed,
+) -> MasterKeyBatch<G> {
+    let publics = bins
+        .iter()
+        .enumerate()
+        .map(|(j, bin)| {
+            let s0 = prf_seed(&msk0, j as u64);
+            let s1 = prf_seed(&msk1, j as u64);
+            let (alpha, beta) = match &bin.point {
+                Some((a, b)) => (*a, b.clone()),
+                None => (0, G::zero()),
+            };
+            let (k0, _k1) = gen(bin.depth, alpha, &beta, s0, s1);
+            PublicPart {
+                depth: k0.depth,
+                cws: k0.cws,
+                cw_out: k0.cw_out,
+            }
+        })
+        .collect();
+    MasterKeyBatch {
+        msk: [msk0, msk1],
+        publics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+    use crate::dpf::{eval, full_eval};
+
+    #[test]
+    fn batch_reconstructs_per_bin_points() {
+        let mut rng = Rng::new(20);
+        let bins: Vec<BinPoint<u64>> = vec![
+            BinPoint { depth: 5, point: Some((3, 111)) },
+            BinPoint { depth: 5, point: None },
+            BinPoint { depth: 7, point: Some((100, 222)) },
+            BinPoint { depth: 3, point: Some((0, 333)) },
+        ];
+        let batch = gen_batch_with_master(&bins, rng.gen_seed(), rng.gen_seed());
+        let k0 = batch.server_keys(0);
+        let k1 = batch.server_keys(1);
+        for (j, bin) in bins.iter().enumerate() {
+            let n = 1usize << bin.depth;
+            let f0 = full_eval(&k0[j], n);
+            let f1 = full_eval(&k1[j], n);
+            for x in 0..n {
+                let sum = f0[x].add(&f1[x]);
+                match &bin.point {
+                    Some((a, b)) if *a == x as u64 => assert_eq!(sum, *b),
+                    _ => assert_eq!(sum, 0),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn master_seed_matches_direct_gen() {
+        let mut rng = Rng::new(21);
+        let (msk0, msk1) = (rng.gen_seed(), rng.gen_seed());
+        let bins = vec![BinPoint { depth: 6, point: Some((9u64, 42u64)) }];
+        let batch = gen_batch_with_master(&bins, msk0, msk1);
+        let s0 = prf_seed(&msk0, 0);
+        let s1 = prf_seed(&msk1, 0);
+        let (d0, d1) = crate::dpf::gen(6, 9, &42u64, s0, s1);
+        assert_eq!(eval(&batch.server_keys(0)[0], 9), eval(&d0, 9));
+        assert_eq!(eval(&batch.server_keys(1)[0], 9), eval(&d1, 9));
+    }
+
+    #[test]
+    fn upload_accounting() {
+        let bins: Vec<BinPoint<u128>> =
+            (0..10).map(|_| BinPoint { depth: 9, point: None }).collect();
+        let batch = gen_batch_with_master(&bins, [0; 16], [1; 16]);
+        // 10 bins · (9·130 + 128) + 2λ.
+        assert_eq!(batch.upload_bits(), 10 * (9 * 130 + 128) + 256);
+    }
+}

@@ -1,0 +1,186 @@
+//! Distributed Point Function (BGI16 \[11\], as used in §3.1).
+//!
+//! A DPF secret-shares the point function `f_{α,β} : {0,1}^n → 𝔾`
+//! (`f(α) = β`, `f(x) = 0` elsewhere) into two keys. Each key walks a GGM
+//! tree of AES-PRG doubles, applying per-level *correction words*; the two
+//! walks agree (and cancel) off the special path and diverge on it, so the
+//! leaf shares sum to `β` exactly at `α` and to `0` everywhere else.
+//!
+//! Key size matches the paper: `n(λ+2) + λ + ⌈log 𝔾⌉` bits — a *public
+//! part* (`n(λ+2) + ⌈log 𝔾⌉` bits of correction words, identical in both
+//! keys) and a *private part* (the λ-bit root seed, which differs).
+//!
+//! * [`gen`] / [`Dpf::gen`] — key generation (client side).
+//! * [`eval`] — single-point evaluation.
+//! * [`full_eval`] — full-domain evaluation (server side; the §7.2
+//!   "full-domain evaluation" optimisation — one tree traversal instead of
+//!   Θ independent walks).
+//! * [`gen_batch_with_master`] — master-seed derivation of per-bin root
+//!   seeds (§4).
+
+mod eval;
+mod gen;
+mod key;
+mod master;
+
+pub use eval::{eval, full_eval, full_eval_batch, full_eval_parts, full_eval_with, EvalWorkspace};
+pub use gen::gen;
+pub use key::{CorrectionWord, DpfKey};
+pub use master::{gen_batch_with_master, BinPoint, MasterKeyBatch, PublicPart};
+
+use crate::crypto::prg::Seed;
+use crate::group::Group;
+
+/// Convenience façade bundling the DPF algorithms for a fixed group.
+pub struct Dpf<G: Group>(std::marker::PhantomData<G>);
+
+impl<G: Group> Dpf<G> {
+    /// `Gen(1^λ, α, β)` with explicit root seeds (deterministic; callers
+    /// draw seeds from [`crate::crypto::rng::Rng`] or a master PRF).
+    pub fn gen(depth: usize, alpha: u64, beta: &G, s0: Seed, s1: Seed) -> (DpfKey<G>, DpfKey<G>) {
+        gen(depth, alpha, beta, s0, s1)
+    }
+
+    /// `Eval(b, k_b, x)`.
+    pub fn eval(key: &DpfKey<G>, x: u64) -> G {
+        eval(key, x)
+    }
+
+    /// Evaluate on the whole domain, truncated to `num_points` outputs.
+    pub fn full_eval(key: &DpfKey<G>, num_points: usize) -> Vec<G> {
+        full_eval(key, num_points)
+    }
+}
+
+/// Smallest depth whose domain `2^depth` covers `n` points (depth ≥ 1).
+pub fn depth_for(n: usize) -> usize {
+    debug_assert!(n >= 1);
+    usize::BITS as usize - (n.max(2) - 1).leading_zeros() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+
+    fn gen_pair<G: Group>(depth: usize, alpha: u64, beta: &G, seed: u64) -> (DpfKey<G>, DpfKey<G>) {
+        let mut rng = Rng::new(seed);
+        gen(depth, alpha, beta, rng.gen_seed(), rng.gen_seed())
+    }
+
+    #[test]
+    fn point_function_correctness_u64() {
+        for depth in 1..=8 {
+            let domain = 1u64 << depth;
+            let alpha = domain / 2;
+            let beta = 0xabcd_1234_u64;
+            let (k0, k1) = gen_pair(depth, alpha, &beta, depth as u64);
+            for x in 0..domain {
+                let sum = eval(&k0, x).add(&eval(&k1, x));
+                if x == alpha {
+                    assert_eq!(sum, beta, "depth {depth} at α");
+                } else {
+                    assert_eq!(sum, 0, "depth {depth} at {x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn point_function_correctness_u128() {
+        let beta = u128::MAX - 12345;
+        let (k0, k1) = gen_pair(9, 300, &beta, 7);
+        for x in [0u64, 1, 299, 300, 301, 511] {
+            let sum = eval(&k0, x).add(&eval(&k1, x));
+            assert_eq!(sum, if x == 300 { beta } else { 0 });
+        }
+    }
+
+    #[test]
+    fn point_function_mega_element() {
+        use crate::group::MegaElem;
+        let beta = MegaElem::<18>([3u64; 18]);
+        let (k0, k1) = gen_pair(9, 17, &beta, 8);
+        assert_eq!(eval(&k0, 17).add(&eval(&k1, 17)), beta);
+        assert_eq!(eval(&k0, 18).add(&eval(&k1, 18)), MegaElem::zero());
+    }
+
+    #[test]
+    fn full_eval_matches_pointwise() {
+        let beta = 999u64;
+        let (k0, k1) = gen_pair(9, 123, &beta, 9);
+        for key in [&k0, &k1] {
+            let fe = full_eval(key, 512);
+            for x in 0..512u64 {
+                assert_eq!(fe[x as usize], eval(key, x), "x={x}");
+            }
+        }
+        // Truncated domains too (Θ need not be a power of two).
+        let fe = full_eval(&k0, 300);
+        assert_eq!(fe.len(), 300);
+        assert_eq!(fe[200], eval(&k0, 200));
+    }
+
+    #[test]
+    fn dummy_keys_evaluate_to_zero() {
+        // §4 "Handling dummy bins": Gen(1^λ, 0, 0) — shares must cancel on
+        // the whole domain, including at α = 0.
+        let (k0, k1) = gen_pair(9, 0, &0u64, 10);
+        for x in 0..512u64 {
+            assert_eq!(eval(&k0, x).add(&eval(&k1, x)), 0);
+        }
+    }
+
+    #[test]
+    fn single_key_reveals_nothing_obvious() {
+        // Sanity (not a security proof): one key's full-domain eval should
+        // not be the point function in the clear; its values at and off α
+        // are pseudorandom non-zeros.
+        let beta = 5u64;
+        let (k0, _k1) = gen_pair(9, 100, &beta, 11);
+        let fe = full_eval(&k0, 512);
+        let nonzero = fe.iter().filter(|v| **v != 0).count();
+        assert!(nonzero > 500, "share leaks structure: {nonzero} nonzero");
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_keys() {
+        let (a0, _) = gen_pair(9, 5, &1u64, 12);
+        let (b0, _) = gen_pair(9, 5, &1u64, 13);
+        assert_ne!(a0.to_bytes(), b0.to_bytes());
+    }
+
+    #[test]
+    fn depth_for_covers() {
+        assert_eq!(depth_for(1), 1);
+        assert_eq!(depth_for(2), 1);
+        assert_eq!(depth_for(3), 2);
+        assert_eq!(depth_for(512), 9);
+        assert_eq!(depth_for(513), 10);
+        for n in 1..200 {
+            assert!(1usize << depth_for(n) >= n);
+        }
+    }
+
+    #[test]
+    fn key_size_matches_paper_formula() {
+        // n(λ+2) + λ + ⌈log 𝔾⌉ bits.
+        let (k0, _) = gen_pair(9, 5, &0u128, 14);
+        let expect_bits = 9 * (128 + 2) + 128 + 128;
+        assert_eq!(k0.size_bits(), expect_bits);
+        assert_eq!(k0.public_size_bits(), 9 * (128 + 2) + 128);
+        assert_eq!(k0.private_size_bits(), 128);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let (k0, k1) = gen_pair::<u128>(9, 77, &42u128, 15);
+        for k in [k0, k1] {
+            let bytes = k.to_bytes();
+            let back = DpfKey::<u128>::from_bytes(&bytes).unwrap();
+            assert_eq!(back.to_bytes(), bytes);
+            assert_eq!(eval(&back, 77), eval(&k, 77));
+            assert_eq!(eval(&back, 78), eval(&k, 78));
+        }
+    }
+}

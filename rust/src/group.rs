@@ -1,0 +1,267 @@
+//! Finite Abelian groups 𝔾 used as DPF payloads.
+//!
+//! The paper works over an arbitrary finite Abelian group 𝔾 with
+//! `l = ⌈log|𝔾|⌉` bits per weight (the evaluation uses `l = 128`). We
+//! provide `Z_{2^64}` and `Z_{2^128}` (wrapping integer rings) plus a
+//! fixed-width "mega-element" vector group for the §6 grouping
+//! optimisation (τ weights share one DPF payload).
+
+/// An additively written finite Abelian group, usable as a DPF output.
+///
+/// `convert` is the BGI16 `Convert` map: it deterministically stretches a
+/// λ-bit PRG seed into a pseudorandom group element (for vector groups the
+/// seed is expanded with AES-CTR).
+pub trait Group: Clone + PartialEq + Eq + std::fmt::Debug + Send + Sync + 'static {
+    /// The identity element.
+    fn zero() -> Self;
+    /// Group operation.
+    fn add(&self, other: &Self) -> Self;
+    /// Inverse.
+    fn neg(&self) -> Self;
+    /// `self + (-other)`.
+    fn sub(&self, other: &Self) -> Self {
+        self.add(&other.neg())
+    }
+    /// In-place add (hot path: server-side aggregation).
+    fn add_assign(&mut self, other: &Self) {
+        *self = self.add(other);
+    }
+    /// BGI16 `Convert`: seed ↦ pseudorandom group element.
+    fn convert(seed: &[u8; 16]) -> Self;
+    /// Ring multiplication (component-wise for vector groups). Used by the
+    /// PSR servers' inner product `Σ_x w_x · [f(x)]_b`, which is linear in
+    /// the share because multiplication distributes over addition.
+    fn ring_mul(&self, other: &Self) -> Self;
+    /// Multiplicative identity of the ring (all-ones for vector groups) —
+    /// the PSR payload `β = 1`.
+    fn one() -> Self;
+    /// Bit width `⌈log|𝔾|⌉` for communication accounting.
+    fn bit_len() -> usize;
+    /// Byte width of the wire encoding.
+    fn byte_len() -> usize {
+        Self::bit_len().div_ceil(8)
+    }
+    /// Serialise to exactly [`Group::byte_len`] bytes.
+    fn encode(&self, out: &mut Vec<u8>);
+    /// Deserialise from exactly [`Group::byte_len`] bytes.
+    fn decode(bytes: &[u8]) -> Option<Self>;
+    /// Conditional negation: `(-1)^t · self`.
+    fn cneg(&self, t: bool) -> Self {
+        if t {
+            self.neg()
+        } else {
+            self.clone()
+        }
+    }
+}
+
+impl Group for u64 {
+    fn zero() -> Self {
+        0
+    }
+    fn add(&self, other: &Self) -> Self {
+        self.wrapping_add(*other)
+    }
+    fn neg(&self) -> Self {
+        self.wrapping_neg()
+    }
+    fn ring_mul(&self, other: &Self) -> Self {
+        self.wrapping_mul(*other)
+    }
+    fn one() -> Self {
+        1
+    }
+    fn convert(seed: &[u8; 16]) -> Self {
+        u64::from_le_bytes(seed[..8].try_into().unwrap())
+    }
+    fn bit_len() -> usize {
+        64
+    }
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn decode(bytes: &[u8]) -> Option<Self> {
+        Some(u64::from_le_bytes(bytes.get(..8)?.try_into().ok()?))
+    }
+}
+
+impl Group for u128 {
+    fn zero() -> Self {
+        0
+    }
+    fn add(&self, other: &Self) -> Self {
+        self.wrapping_add(*other)
+    }
+    fn neg(&self) -> Self {
+        self.wrapping_neg()
+    }
+    fn ring_mul(&self, other: &Self) -> Self {
+        self.wrapping_mul(*other)
+    }
+    fn one() -> Self {
+        1
+    }
+    fn convert(seed: &[u8; 16]) -> Self {
+        u128::from_le_bytes(*seed)
+    }
+    fn bit_len() -> usize {
+        128
+    }
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn decode(bytes: &[u8]) -> Option<Self> {
+        Some(u128::from_le_bytes(bytes.get(..16)?.try_into().ok()?))
+    }
+}
+
+/// Mega-element group (§6): τ = `T` weights grouped into one payload, each
+/// a `Z_{2^64}` coordinate. Component-wise addition.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct MegaElem<const T: usize>(pub [u64; T]);
+
+impl<const T: usize> Default for MegaElem<T> {
+    fn default() -> Self {
+        MegaElem([0u64; T])
+    }
+}
+
+impl<const T: usize> Group for MegaElem<T> {
+    fn zero() -> Self {
+        MegaElem([0u64; T])
+    }
+    fn add(&self, other: &Self) -> Self {
+        let mut out = [0u64; T];
+        for i in 0..T {
+            out[i] = self.0[i].wrapping_add(other.0[i]);
+        }
+        MegaElem(out)
+    }
+    fn neg(&self) -> Self {
+        let mut out = [0u64; T];
+        for i in 0..T {
+            out[i] = self.0[i].wrapping_neg();
+        }
+        MegaElem(out)
+    }
+    fn ring_mul(&self, other: &Self) -> Self {
+        let mut out = [0u64; T];
+        for i in 0..T {
+            out[i] = self.0[i].wrapping_mul(other.0[i]);
+        }
+        MegaElem(out)
+    }
+    fn one() -> Self {
+        MegaElem([1u64; T])
+    }
+    fn add_assign(&mut self, other: &Self) {
+        for i in 0..T {
+            self.0[i] = self.0[i].wrapping_add(other.0[i]);
+        }
+    }
+    fn convert(seed: &[u8; 16]) -> Self {
+        // Expand the λ-bit seed to τ·64 bits with AES-CTR (PRG stream).
+        let mut out = [0u64; T];
+        let stream = crate::crypto::prg::expand_stream(seed, T * 8);
+        for (i, chunk) in stream.chunks_exact(8).enumerate().take(T) {
+            out[i] = u64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        MegaElem(out)
+    }
+    fn bit_len() -> usize {
+        64 * T
+    }
+    fn encode(&self, out: &mut Vec<u8>) {
+        for v in &self.0 {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn decode(bytes: &[u8]) -> Option<Self> {
+        let mut out = [0u64; T];
+        for i in 0..T {
+            out[i] = u64::from_le_bytes(bytes.get(i * 8..i * 8 + 8)?.try_into().ok()?);
+        }
+        Some(MegaElem(out))
+    }
+}
+
+/// Fixed-point encoding of an `f32` weight update into `Z_{2^64}`.
+///
+/// Additive aggregation over the ring matches float summation up to the
+/// quantisation step `2^-FRAC`. The coordinator uses this to move model
+/// deltas through the SSA protocol losslessly w.r.t. the fixed-point grid
+/// (the paper's scheme is *lossless* over 𝔾; floats enter only at the
+/// learning layer).
+pub const FRAC_BITS: u32 = 24;
+
+/// Encode a float into the ring (two's-complement fixed point).
+pub fn fixed_encode(x: f32) -> u64 {
+    let scaled = (x as f64 * f64::from(1u32 << FRAC_BITS)).round() as i64;
+    scaled as u64
+}
+
+/// Decode a ring element back to a float.
+pub fn fixed_decode(x: u64) -> f32 {
+    (x as i64) as f64 as f32 / f64::from(1u32 << FRAC_BITS) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_group_laws() {
+        let a = 0xdead_beef_u64;
+        let b = 0x1234_5678_u64;
+        assert_eq!(a.add(&b), b.add(&a));
+        assert_eq!(a.add(&a.neg()), 0);
+        assert_eq!(a.sub(&b).add(&b), a);
+        assert_eq!(u64::zero().add(&a), a);
+    }
+
+    #[test]
+    fn u128_group_laws() {
+        let a = u128::MAX - 5;
+        let b = 77u128;
+        assert_eq!(a.add(&b), b.add(&a));
+        assert_eq!(a.add(&a.neg()), 0);
+        assert_eq!(a.cneg(true), a.neg());
+        assert_eq!(a.cneg(false), a);
+    }
+
+    #[test]
+    fn mega_elem_group_laws() {
+        let a = MegaElem::<4>([1, u64::MAX, 3, 4]);
+        let b = MegaElem::<4>([5, 6, 7, 8]);
+        assert_eq!(a.add(&b), b.add(&a));
+        assert_eq!(a.add(&a.neg()), MegaElem::zero());
+        let mut c = a;
+        c.add_assign(&b);
+        assert_eq!(c, a.add(&b));
+        assert_eq!(MegaElem::<4>::bit_len(), 256);
+    }
+
+    #[test]
+    fn convert_is_deterministic_and_seed_sensitive() {
+        let s1 = [7u8; 16];
+        let mut s2 = s1;
+        s2[0] ^= 1;
+        assert_eq!(u64::convert(&s1), u64::convert(&s1));
+        assert_ne!(
+            MegaElem::<8>::convert(&s1),
+            MegaElem::<8>::convert(&s2)
+        );
+    }
+
+    #[test]
+    fn fixed_point_roundtrip() {
+        for &x in &[0.0f32, 1.5, -2.25, 0.125, -1000.0, 3.0e4] {
+            let d = fixed_decode(fixed_encode(x));
+            assert!((d - x).abs() < 1e-4, "{x} -> {d}");
+        }
+        // Additive homomorphism on the grid.
+        let a = fixed_encode(1.25);
+        let b = fixed_encode(-0.75);
+        assert!((fixed_decode(a.add(&b)) - 0.5).abs() < 1e-6);
+    }
+}

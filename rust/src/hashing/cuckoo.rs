@@ -1,0 +1,229 @@
+//! Client-side cuckoo hash table with optional stash.
+
+use super::params::CuckooParams;
+use crate::crypto::hash::{derive_hash_fns, HashFn};
+use crate::crypto::rng::Rng;
+
+/// Cuckoo insertion failure: the eviction chain exceeded `max_kicks` and
+/// the stash was already full.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CuckooError {
+    pub element: u64,
+}
+
+impl std::fmt::Display for CuckooError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cuckoo insertion failed for element {}", self.element)
+    }
+}
+
+impl std::error::Error for CuckooError {}
+
+/// A client's cuckoo table over its k selected indices. Each occupied bin
+/// holds exactly one element; overflow goes to the σ-slot stash.
+#[derive(Clone, Debug)]
+pub struct CuckooTable {
+    bins: Vec<Option<u64>>,
+    stash: Vec<u64>,
+    fns: Vec<HashFn>,
+    params: CuckooParams,
+}
+
+impl CuckooTable {
+    /// Build a table with `B = ⌈ε·|elements|⌉` bins and insert all of
+    /// `elements` (distinct `u64`s < m). Eviction choices are randomised
+    /// by `rng` so failure-probability experiments can re-sample.
+    pub fn build(
+        elements: &[u64],
+        params: &CuckooParams,
+        rng: &mut Rng,
+    ) -> Result<Self, CuckooError> {
+        Self::build_with_bins(elements, params.num_bins(elements.len()), params, rng)
+    }
+
+    /// Build with an explicit bin count — REQUIRED whenever the table must
+    /// align with a shared simple table sized from the session's `k`
+    /// (a client selecting fewer than `k` indices must still use the
+    /// session's `B`, or the hash ranges diverge and alignment breaks).
+    pub fn build_with_bins(
+        elements: &[u64],
+        num_bins: usize,
+        params: &CuckooParams,
+        rng: &mut Rng,
+    ) -> Result<Self, CuckooError> {
+        let fns = derive_hash_fns(params.hash_seed, params.eta, num_bins as u64);
+        let mut table = CuckooTable {
+            bins: vec![None; num_bins],
+            stash: Vec::with_capacity(params.sigma),
+            fns,
+            params: *params,
+        };
+        for &e in elements {
+            table.insert(e, rng)?;
+        }
+        Ok(table)
+    }
+
+    fn insert(&mut self, element: u64, rng: &mut Rng) -> Result<(), CuckooError> {
+        let mut cur = element;
+        for _ in 0..self.params.max_kicks {
+            // Take the first empty candidate bin, if any.
+            for d in 0..self.params.eta {
+                let j = self.fns[d].eval(cur) as usize;
+                if self.bins[j].is_none() {
+                    self.bins[j] = Some(cur);
+                    return Ok(());
+                }
+            }
+            // All candidates occupied: evict a random one.
+            let d = rng.gen_range(self.params.eta as u64) as usize;
+            let j = self.fns[d].eval(cur) as usize;
+            let evicted = self.bins[j].replace(cur).expect("occupied bin");
+            cur = evicted;
+        }
+        if self.stash.len() < self.params.sigma {
+            self.stash.push(cur);
+            Ok(())
+        } else {
+            Err(CuckooError { element: cur })
+        }
+    }
+
+    /// Bin contents (`None` ⇒ dummy bin).
+    pub fn bins(&self) -> &[Option<u64>] {
+        &self.bins
+    }
+
+    /// Stash contents (≤ σ elements).
+    pub fn stash(&self) -> &[u64] {
+        &self.stash
+    }
+
+    /// Number of bins B.
+    pub fn num_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    /// The η candidate bins of an element (deduplicated, order-preserving).
+    pub fn candidate_bins(&self, element: u64) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.params.eta);
+        for f in &self.fns {
+            let j = f.eval(element) as usize;
+            if !out.contains(&j) {
+                out.push(j);
+            }
+        }
+        out
+    }
+
+    /// Where an element landed: `Some(Ok(bin))`, `Some(Err(stash_slot))`,
+    /// or `None` if absent.
+    pub fn locate(&self, element: u64) -> Option<Result<usize, usize>> {
+        for f in &self.fns {
+            let j = f.eval(element) as usize;
+            if self.bins[j] == Some(element) {
+                return Some(Ok(j));
+            }
+        }
+        self.stash.iter().position(|&e| e == element).map(Err)
+    }
+
+    /// The shared hash functions (aligned with the simple table).
+    pub fn hash_fns(&self) -> &[HashFn] {
+        &self.fns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn build_ok(k: usize, seed: u64) -> CuckooTable {
+        let params = CuckooParams::default();
+        let mut rng = Rng::new(seed);
+        let elements: Vec<u64> = rng.sample_distinct(k, (k as u64) * 100);
+        CuckooTable::build(&elements, &params, &mut rng).expect("cuckoo build")
+    }
+
+    #[test]
+    fn every_element_lands_in_a_candidate_bin() {
+        let params = CuckooParams::default();
+        let mut rng = Rng::new(60);
+        let elements: Vec<u64> = rng.sample_distinct(500, 50_000);
+        let t = CuckooTable::build(&elements, &params, &mut rng).unwrap();
+        for &e in &elements {
+            match t.locate(e).expect("present") {
+                Ok(bin) => assert!(t.candidate_bins(e).contains(&bin)),
+                Err(_) => panic!("unexpected stash use"),
+            }
+        }
+    }
+
+    #[test]
+    fn bins_hold_at_most_one() {
+        let t = build_ok(1000, 61);
+        let occupied = t.bins().iter().filter(|b| b.is_some()).count();
+        let stash = t.stash().len();
+        assert_eq!(occupied + stash, 1000);
+        // No duplicates.
+        let mut seen = std::collections::HashSet::new();
+        for b in t.bins().iter().flatten() {
+            assert!(seen.insert(*b));
+        }
+    }
+
+    #[test]
+    fn bin_count_follows_epsilon() {
+        let t = build_ok(1000, 62);
+        assert_eq!(t.num_bins(), (1.27f64 * 1000.0).ceil() as usize);
+    }
+
+    #[test]
+    fn stash_catches_overflow() {
+        // Absurdly small table (ε near 1, η = 2) forces stash use.
+        let params = CuckooParams {
+            epsilon: 1.0,
+            eta: 2,
+            sigma: 8,
+            hash_seed: 7,
+            max_kicks: 50,
+        };
+        let mut rng = Rng::new(63);
+        let elements: Vec<u64> = (0..64).collect();
+        let t = CuckooTable::build(&elements, &params, &mut rng).unwrap();
+        // Everything still locatable.
+        for &e in &elements {
+            assert!(t.locate(e).is_some());
+        }
+        assert!(!t.stash().is_empty(), "expected stash pressure");
+    }
+
+    #[test]
+    fn failure_without_stash_is_reported() {
+        let params = CuckooParams {
+            epsilon: 1.0,
+            eta: 2,
+            sigma: 0,
+            hash_seed: 7,
+            max_kicks: 20,
+        };
+        let mut rng = Rng::new(64);
+        let elements: Vec<u64> = (0..512).collect();
+        assert!(CuckooTable::build(&elements, &params, &mut rng).is_err());
+    }
+
+    #[test]
+    fn default_params_never_fail_small_scale() {
+        // Empirical stand-in for the κ=40 failure bound at small k: 200
+        // independent builds, zero failures.
+        let params = CuckooParams::default();
+        for seed in 0..200 {
+            let mut rng = Rng::new(seed);
+            let elements = rng.sample_distinct(300, 1 << 15);
+            assert!(
+                CuckooTable::build(&elements, &params, &mut rng).is_ok(),
+                "seed {seed}"
+            );
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Cuckoo hashing + aligned simple hashing — the probabilistic batch code
+//! (§3.2) that reduces multi-query PIR to one DPF per bin (§4).
+//!
+//! Both tables are built with the *same* public hash functions
+//! (`h_1..h_η : Z_m → Z_B`), which guarantees the alignment invariant the
+//! protocols rely on: if the client's cuckoo table stores element `u` in
+//! bin `j`, then `u ∈ T_simple[j]`.
+
+mod cuckoo;
+mod params;
+mod simple;
+
+pub use cuckoo::{CuckooError, CuckooTable};
+pub use params::{scale_factor_for, CuckooParams};
+pub use simple::SimpleTable;

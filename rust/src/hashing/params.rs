@@ -1,0 +1,85 @@
+//! Cuckoo parameterisation (ε scale factor, η hash count, σ stash size).
+
+/// Parameters shared by all parties in a round (Table 1: ε, η, σ).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CuckooParams {
+    /// Scale factor ε > 1: the table has `B = ⌈ε·k⌉` bins.
+    pub epsilon: f64,
+    /// Number of hash functions η (the paper uses η = 3 throughout).
+    pub eta: usize,
+    /// Stash size σ (experiments run stash-less, σ = 0).
+    pub sigma: usize,
+    /// Public seed from which all parties derive the η hash functions.
+    pub hash_seed: u64,
+    /// Maximum eviction chain length before an element goes to the stash.
+    pub max_kicks: usize,
+}
+
+impl Default for CuckooParams {
+    fn default() -> Self {
+        CuckooParams {
+            epsilon: 1.27,
+            eta: 3,
+            sigma: 0,
+            hash_seed: 0xf5_1a_9b_03,
+            max_kicks: 500,
+        }
+    }
+}
+
+impl CuckooParams {
+    /// Number of bins for `k` inserted elements.
+    pub fn num_bins(&self, k: usize) -> usize {
+        ((self.epsilon * k as f64).ceil() as usize).max(1)
+    }
+
+    /// Builder-style override of ε.
+    pub fn with_epsilon(mut self, epsilon: f64) -> Self {
+        self.epsilon = epsilon;
+        self
+    }
+
+    /// Builder-style override of σ.
+    pub fn with_sigma(mut self, sigma: usize) -> Self {
+        self.sigma = sigma;
+        self
+    }
+
+    /// Builder-style override of the public hash seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.hash_seed = seed;
+        self
+    }
+}
+
+/// The paper's Table 3: empirically calibrated scale factor per input
+/// size, keeping the (stash-less) failure probability ≤ 2^-κ (κ = 40).
+/// `benches/table3_scale_factor.rs` re-derives these by measurement.
+pub fn scale_factor_for(input_size: usize) -> f64 {
+    match input_size {
+        0..=1_048_576 => 1.25,          // ≤ 2^20 (paper: 1.25 / 1.25 / 1.27)
+        ..=33_554_432 => 1.28,          // ≤ 2^25 (paper: 1.28)
+        _ => 1.30,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_count_rounds_up() {
+        let p = CuckooParams::default().with_epsilon(1.25);
+        assert_eq!(p.num_bins(4), 5);
+        assert_eq!(p.num_bins(100), 125);
+        assert_eq!(p.num_bins(1), 2);
+        assert_eq!(p.num_bins(0), 1);
+    }
+
+    #[test]
+    fn table3_bands() {
+        assert_eq!(scale_factor_for(1 << 10), 1.25);
+        assert_eq!(scale_factor_for(1 << 15), 1.25);
+        assert_eq!(scale_factor_for(1 << 25), 1.28);
+    }
+}

@@ -1,0 +1,148 @@
+//! Server-side simple hashing, aligned with the clients' cuckoo tables.
+//!
+//! Every index in the domain `{0..m}` (or, with the PSU optimisation, in
+//! the revealed union set) is inserted into *all* of its η candidate bins,
+//! so whatever bin a client's cuckoo table picked for element `u`, the
+//! servers' bin `j` contains `u` at a well-defined position `pos_j(u)`.
+
+use super::params::CuckooParams;
+use crate::crypto::hash::{derive_hash_fns, HashFn};
+
+/// The shared simple table: bin `j` lists the domain elements hashing to
+/// `j` under any of the η functions (deduplicated per bin, sorted by
+/// insertion order = domain order, so every party computes identical
+/// positions).
+#[derive(Clone, Debug)]
+pub struct SimpleTable {
+    bins: Vec<Vec<u64>>,
+    fns: Vec<HashFn>,
+}
+
+impl SimpleTable {
+    /// Build over an explicit domain (ascending, distinct). `num_bins`
+    /// must equal the clients' cuckoo bin count for alignment.
+    pub fn build(domain: impl Iterator<Item = u64>, num_bins: usize, params: &CuckooParams) -> Self {
+        assert!(params.eta <= 8, "η > 8 unsupported");
+        let fns = derive_hash_fns(params.hash_seed, params.eta, num_bins as u64);
+        let mut bins: Vec<Vec<u64>> = vec![Vec::new(); num_bins];
+        for x in domain {
+            let mut placed: [usize; 8] = [usize::MAX; 8];
+            let mut np = 0;
+            for f in &fns {
+                let j = f.eval(x) as usize;
+                // An element whose hashes collide occupies the bin once
+                // (the paper's Figure 2 note on element "2").
+                if !placed[..np].contains(&j) {
+                    bins[j].push(x);
+                    placed[np] = j;
+                    np += 1;
+                }
+            }
+        }
+        // Canonical per-bin order (ascending) regardless of iteration
+        // order, so every party computes identical positions.
+        for b in &mut bins {
+            b.sort_unstable();
+            b.dedup();
+        }
+        SimpleTable { bins, fns }
+    }
+
+    /// Build over the full model domain `{0..m}`.
+    pub fn build_full(m: u64, num_bins: usize, params: &CuckooParams) -> Self {
+        Self::build(0..m, num_bins, params)
+    }
+
+    /// Bin contents.
+    pub fn bin(&self, j: usize) -> &[u64] {
+        &self.bins[j]
+    }
+
+    /// Number of bins.
+    pub fn num_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    /// Maximum bin size Θ (Table 4).
+    pub fn max_bin_size(&self) -> usize {
+        self.bins.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Position of `x` within bin `j` (the client's `pos_j`).
+    pub fn position(&self, j: usize, x: u64) -> Option<usize> {
+        // Bins are in ascending domain order → binary search.
+        self.bins[j].binary_search(&x).ok()
+    }
+
+    /// The η candidate bins of `x` (deduplicated, order-preserving) —
+    /// mirrors [`super::CuckooTable::candidate_bins`].
+    pub fn candidate_bins(&self, x: u64) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.fns.len());
+        for f in &self.fns {
+            let j = f.eval(x) as usize;
+            if !out.contains(&j) {
+                out.push(j);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+    use crate::hashing::CuckooTable;
+
+    #[test]
+    fn every_domain_element_in_its_candidate_bins() {
+        let params = CuckooParams::default();
+        let t = SimpleTable::build_full(1 << 10, 256, &params);
+        for x in 0..(1u64 << 10) {
+            for j in t.candidate_bins(x) {
+                assert!(t.position(j, x).is_some(), "{x} missing from bin {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn bins_are_sorted_and_deduped() {
+        let params = CuckooParams::default();
+        let t = SimpleTable::build_full(4096, 512, &params);
+        for j in 0..t.num_bins() {
+            let b = t.bin(j);
+            assert!(b.windows(2).all(|w| w[0] < w[1]), "bin {j} unsorted/dup");
+        }
+    }
+
+    #[test]
+    fn alignment_with_cuckoo() {
+        // The invariant both protocols rely on: whatever bin the cuckoo
+        // table chose for u, the simple table's same-numbered bin holds u.
+        let params = CuckooParams::default();
+        let mut rng = Rng::new(70);
+        let k = 200;
+        let m = 1u64 << 12;
+        let elements = rng.sample_distinct(k, m);
+        let cuckoo = CuckooTable::build(&elements, &params, &mut rng).unwrap();
+        let simple = SimpleTable::build_full(m, cuckoo.num_bins(), &params);
+        for (j, slot) in cuckoo.bins().iter().enumerate() {
+            if let Some(u) = slot {
+                assert!(
+                    simple.position(j, *u).is_some(),
+                    "cuckoo bin {j} element {u} not in simple bin"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn subset_domain_shrinks_theta() {
+        // The PSU optimisation: a smaller domain gives smaller Θ.
+        let params = CuckooParams::default();
+        let full = SimpleTable::build_full(1 << 12, 128, &params);
+        let union: Vec<u64> = (0..(1u64 << 12)).step_by(8).collect();
+        let small = SimpleTable::build(union.into_iter(), 128, &params);
+        assert!(small.max_bin_size() < full.max_bin_size());
+    }
+}

@@ -1,0 +1,33 @@
+//! `fsl` — Practical and Light-weight Secure Aggregation for Federated
+//! Submodel Learning (Cui, Chen, Ye, Wang — 2021).
+//!
+//! Two-server secure Federated Submodel Learning built from Distributed
+//! Point Functions (DPF) and cuckoo hashing:
+//!
+//! * **PSR** — private submodel retrieval (multi-query PIR over the global
+//!   weight vector) — [`protocol::psr`].
+//! * **SSA** — secure submodel aggregation (oblivious sparse updates at
+//!   hidden positions) — [`protocol::ssa`].
+//! * Optimisations: updatable DPF ([`udpf`]), private set union
+//!   ([`protocol::psu`]), mega-element grouping ([`protocol::mega`]).
+//!
+//! The crate is the **L3 rust coordinator** of a three-layer stack: the FSL
+//! model itself (L2, JAX) and its compute hot-spots (L1, Pallas) are
+//! AOT-compiled to HLO text at build time and executed from rust through
+//! the PJRT CPU client ([`runtime`]). Python never runs on the round path.
+
+pub mod baseline;
+pub mod coordinator;
+pub mod crypto;
+pub mod data;
+pub mod dpf;
+pub mod group;
+pub mod hashing;
+pub mod metrics;
+pub mod net;
+pub mod protocol;
+pub mod runtime;
+pub mod sketch;
+pub mod udpf;
+
+pub use group::Group;

@@ -1,0 +1,250 @@
+//! `fsl` — CLI launcher for the secure Federated Submodel Learning stack.
+//!
+//! Subcommands:
+//! * `train`  — end-to-end secure FSL training (MLP on the synthetic
+//!   image task) with per-round loss/accuracy logging.
+//! * `ssa`    — one SSA micro-round at a given (m, c): Table-5-style
+//!   timings and Table-6-style communication.
+//! * `psr`    — one PSR retrieval round at a given (m, k).
+//! * `params` — print cuckoo/table diagnostics for (m, c) (Tables 3/4).
+//!
+//! Arguments are `key=value` pairs, e.g.
+//! `fsl train rounds=30 clients=10 c=0.1 artifacts=artifacts`.
+
+use anyhow::{anyhow, Result};
+use fsl::coordinator::{run_fsl_training, FslConfig};
+use fsl::crypto::rng::Rng;
+use fsl::data::{partition_iid, ImageDataset, IMAGE_CLASSES};
+use fsl::hashing::{CuckooParams, SimpleTable};
+use fsl::metrics::bits_to_mb;
+use fsl::protocol::{psr, Session, SessionParams};
+use fsl::runtime::Executor;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn parse_kv(args: &[String]) -> HashMap<String, String> {
+    args.iter()
+        .filter_map(|a| a.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+fn get<T: std::str::FromStr>(kv: &HashMap<String, String>, key: &str, default: T) -> T {
+    kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let kv = parse_kv(&args[1.min(args.len())..]);
+    match cmd {
+        "train" => cmd_train(&kv),
+        "ssa" => cmd_ssa(&kv),
+        "psr" => cmd_psr(&kv),
+        "params" => cmd_params(&kv),
+        _ => {
+            eprintln!(
+                "usage: fsl <train|ssa|psr|params> [key=value ...]\n\
+                 examples:\n\
+                 \u{20}  fsl train rounds=20 clients=10 c=0.1\n\
+                 \u{20}  fsl ssa m=32768 c=0.1 clients=4\n\
+                 \u{20}  fsl psr m=32768 k=512\n\
+                 \u{20}  fsl params m=1048576 c=0.1"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(kv: &HashMap<String, String>) -> Result<()> {
+    let artifacts: String = get(kv, "artifacts", "artifacts".to_string());
+    let cfg = FslConfig {
+        num_clients: get(kv, "clients", 10),
+        participation: get(kv, "participation", 1.0),
+        rounds: get(kv, "rounds", 20),
+        local_iters: get(kv, "local_iters", 1),
+        lr: get(kv, "lr", 0.05),
+        compression: get(kv, "c", 0.10),
+        seed: get(kv, "seed", 42),
+        eval_every: get(kv, "eval_every", 5),
+        ..FslConfig::default()
+    };
+    let exec = Executor::new(&artifacts)?;
+    let m = exec.manifest().int("mlp_grad", "params")? as usize;
+    let batch = exec.manifest().int("mlp_grad", "batch")? as usize;
+
+    let (train, test) = ImageDataset::synthesize_split(
+        get(kv, "train_n", 2000),
+        get(kv, "test_n", 500),
+        cfg.seed,
+        1.0,
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let shards = partition_iid(train.n, cfg.num_clients, &mut rng);
+
+    let params = init_mlp_params(m, cfg.seed);
+    println!(
+        "secure FSL training: m={m} clients={} rounds={} c={:.1}%",
+        cfg.num_clients,
+        cfg.rounds,
+        cfg.compression * 100.0
+    );
+    let log = run_fsl_training(
+        &exec,
+        &cfg,
+        "mlp_grad",
+        params,
+        |client, _it, r| {
+            let shard = &shards[client];
+            let idx: Vec<usize> = (0..batch)
+                .map(|_| shard[r.gen_range(shard.len() as u64) as usize])
+                .collect();
+            train.batch(&idx)
+        },
+        |p| eval_mlp(&exec, p, &test, batch),
+        |s| {
+            println!(
+                "round {:>3}  loss {:.4}  up/client {:.3} MB  gen {:?}  srv {:?}{}",
+                s.round,
+                s.mean_loss,
+                s.upload_mb_per_client,
+                s.gen_time,
+                s.server_time,
+                s.accuracy
+                    .map(|a| format!("  acc {:.2}%", a * 100.0))
+                    .unwrap_or_default()
+            );
+        },
+    )?;
+    println!(
+        "done; final accuracy {:.2}%",
+        log.last_accuracy().unwrap_or(0.0) * 100.0
+    );
+    Ok(())
+}
+
+/// He-style init matching python's mlp_init shapes (seeded, rust-side).
+pub fn init_mlp_params(m: usize, seed: u64) -> Vec<f32> {
+    let layers = [(784usize, 1024usize), (1024, 1024), (1024, 10)];
+    let mut rng = Rng::new(seed ^ 0x1111);
+    let mut out = Vec::with_capacity(m);
+    for (i, o) in layers {
+        let scale = (2.0 / i as f64).sqrt() as f32;
+        out.extend((0..i * o).map(|_| rng.gen_normal() as f32 * scale));
+        out.extend(std::iter::repeat(0f32).take(o));
+    }
+    assert_eq!(out.len(), m);
+    out
+}
+
+/// Batched accuracy of the MLP on a test set.
+fn eval_mlp(exec: &Executor, params: &[f32], test: &ImageDataset, batch: usize) -> Result<f32> {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in (0..test.n).collect::<Vec<_>>().chunks(batch) {
+        let mut idx = chunk.to_vec();
+        while idx.len() < batch {
+            idx.push(chunk[0]); // pad; padded rows excluded below
+        }
+        let (x, _) = test.batch(&idx);
+        let logits = exec.infer("mlp_infer", params, &x)?;
+        for (row, &i) in chunk.iter().enumerate() {
+            let row_logits = &logits[row * IMAGE_CLASSES..(row + 1) * IMAGE_CLASSES];
+            let pred = row_logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(pred == test.y[i] as usize);
+            total += 1;
+        }
+    }
+    Ok(correct as f32 / total.max(1) as f32)
+}
+
+fn cmd_ssa(kv: &HashMap<String, String>) -> Result<()> {
+    let m: u64 = get(kv, "m", 1 << 15);
+    let c: f64 = get(kv, "c", 0.1);
+    let n: usize = get(kv, "clients", 1);
+    let k = ((m as f64 * c) as usize).max(1);
+    let session = Session::new_full(SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams::default().with_seed(get(kv, "seed", 7)),
+    });
+    println!(
+        "SSA micro-round: m={m} k={k} (c={:.1}%) Θ={}",
+        c * 100.0,
+        session.theta()
+    );
+    let mut rng = Rng::new(get(kv, "seed", 7));
+    let clients: Vec<(Vec<u64>, Vec<u64>)> = (0..n)
+        .map(|_| {
+            let sel = rng.sample_distinct(k, m);
+            let dl = sel.iter().map(|&x| x + 1).collect();
+            (sel, dl)
+        })
+        .collect();
+    let res =
+        fsl::coordinator::run_ssa_round(&session, &clients, &mut rng, std::time::Duration::ZERO)?;
+    let paper_bits = session.simple.num_bins() * (9 * 130 + 128) + 256;
+    println!(
+        "gen {:?}  server eval+agg {:?}\nupload/client: measured {:.3} MB, paper model {:.3} MB, trivial SA {:.3} MB",
+        res.gen_time,
+        res.server_time,
+        fsl::metrics::mb(res.client_upload_bytes) / n as f64,
+        bits_to_mb(paper_bits),
+        bits_to_mb(m as usize * 128 + 128),
+    );
+    Ok(())
+}
+
+fn cmd_psr(kv: &HashMap<String, String>) -> Result<()> {
+    let m: u64 = get(kv, "m", 1 << 15);
+    let k: usize = get(kv, "k", 512);
+    let session = Session::new_full(SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams::default().with_seed(get(kv, "seed", 7)),
+    });
+    let mut rng = Rng::new(get(kv, "seed", 7));
+    let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+    let sel = rng.sample_distinct(k, m);
+    let t0 = Instant::now();
+    let (ctx, batch) =
+        psr::client_query::<u64>(&session, &sel, &mut rng).map_err(|e| anyhow!("{e}"))?;
+    let t_gen = t0.elapsed();
+    let t1 = Instant::now();
+    let a0 = psr::server_answer(&session, &weights, &batch.server_keys(0));
+    let a1 = psr::server_answer(&session, &weights, &batch.server_keys(1));
+    let t_ans = t1.elapsed();
+    let got = psr::client_reconstruct(&ctx, session.simple.num_bins(), &sel, &a0, &a1);
+    for (i, &s) in sel.iter().enumerate() {
+        assert_eq!(got[i], weights[s as usize]);
+    }
+    println!(
+        "PSR m={m} k={k}: gen {t_gen:?}, both-server answer {t_ans:?}, upload {:.3} MB, verified ✓",
+        bits_to_mb(batch.upload_bits())
+    );
+    Ok(())
+}
+
+fn cmd_params(kv: &HashMap<String, String>) -> Result<()> {
+    let m: u64 = get(kv, "m", 1 << 20);
+    let c: f64 = get(kv, "c", 0.1);
+    let k = ((m as f64 * c) as usize).max(1);
+    let params = CuckooParams::default();
+    let bins = params.num_bins(k);
+    let t0 = Instant::now();
+    let table = SimpleTable::build_full(m, bins, &params);
+    println!(
+        "m={m} k={k} ε={} η={} → B={bins} Θ={} (⌈logΘ⌉={}) built in {:?}",
+        params.epsilon,
+        params.eta,
+        table.max_bin_size(),
+        fsl::dpf::depth_for(table.max_bin_size().max(2)),
+        t0.elapsed()
+    );
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Communication and timing meters.
+//!
+//! Every protocol message is accounted twice: *measured* bytes (what our
+//! wire encoding actually ships) and *paper-model* bits (the formulas of
+//! §4/§6, e.g. `εk(⌈log Θ⌉(λ+2) + ⌈log 𝔾⌉) + λ`), so the Table 6 bench can
+//! report both and show they agree.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Direction-tagged byte counters for one party.
+#[derive(Debug, Default)]
+pub struct CommMeter {
+    pub sent_bytes: AtomicU64,
+    pub recv_bytes: AtomicU64,
+    pub messages: AtomicU64,
+}
+
+impl CommMeter {
+    /// New zeroed meter behind an `Arc` (shared with channel endpoints).
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Record an outgoing message.
+    pub fn record_send(&self, bytes: usize) {
+        self.sent_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an incoming message.
+    pub fn record_recv(&self, bytes: usize) {
+        self.recv_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Total uploaded bytes.
+    pub fn sent(&self) -> u64 {
+        self.sent_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Total downloaded bytes.
+    pub fn recv(&self) -> u64 {
+        self.recv_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Reset all counters.
+    pub fn reset(&self) {
+        self.sent_bytes.store(0, Ordering::Relaxed);
+        self.recv_bytes.store(0, Ordering::Relaxed);
+        self.messages.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Simple named stopwatch accumulator (per-phase round timings).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+}
+
+impl PhaseTimer {
+    /// Time a closure under a phase name.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.phases.push((name.to_string(), t0.elapsed()));
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn record(&mut self, name: &str, d: Duration) {
+        self.phases.push((name.to_string(), d));
+    }
+
+    /// Total duration of all phases with this name.
+    pub fn total(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    /// All recorded `(phase, duration)` pairs, in order.
+    pub fn phases(&self) -> &[(String, Duration)] {
+        &self.phases
+    }
+}
+
+/// Pretty-print bytes as MB with 3 decimals (paper tables use MB).
+pub fn mb(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+/// Bits → MB.
+pub fn bits_to_mb(bits: usize) -> f64 {
+    bits as f64 / 8.0 / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_accumulates() {
+        let m = CommMeter::shared();
+        m.record_send(100);
+        m.record_send(24);
+        m.record_recv(7);
+        assert_eq!(m.sent(), 124);
+        assert_eq!(m.recv(), 7);
+        m.reset();
+        assert_eq!(m.sent(), 0);
+    }
+
+    #[test]
+    fn timer_accumulates_by_name() {
+        let mut t = PhaseTimer::default();
+        t.record("gen", Duration::from_millis(5));
+        t.record("gen", Duration::from_millis(7));
+        t.record("eval", Duration::from_millis(1));
+        assert_eq!(t.total("gen"), Duration::from_millis(12));
+        assert_eq!(t.phases().len(), 3);
+    }
+
+    #[test]
+    fn unit_helpers() {
+        assert!((mb(1024 * 1024) - 1.0).abs() < 1e-9);
+        assert!((bits_to_mb(8 * 1024 * 1024) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,141 @@
+//! Simulated secure P2P channels (§2 assumes authenticated encrypted
+//! channels client↔S0, client↔S1, S0↔S1; §7 runs on a ≈3ms LAN).
+//!
+//! In-process `mpsc` channels carry length-delimited byte messages, meter
+//! every transfer through [`crate::metrics::CommMeter`], and optionally
+//! inject the paper's LAN latency so end-to-end round times are honest.
+
+use crate::metrics::CommMeter;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One endpoint of a bidirectional metered channel.
+pub struct Endpoint {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    pub meter: Arc<CommMeter>,
+    latency: Duration,
+}
+
+impl Endpoint {
+    /// Send a message (blocking enqueue + simulated one-way latency).
+    pub fn send(&self, msg: Vec<u8>) -> anyhow::Result<()> {
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        self.meter.record_send(msg.len());
+        self.tx
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("channel closed"))
+    }
+
+    /// Receive the next message (blocking).
+    pub fn recv(&self) -> anyhow::Result<Vec<u8>> {
+        let msg = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("channel closed"))?;
+        self.meter.record_recv(msg.len());
+        Ok(msg)
+    }
+
+    /// Receive with a timeout (failure-injection tests).
+    pub fn recv_timeout(&self, timeout: Duration) -> anyhow::Result<Vec<u8>> {
+        let msg = self.rx.recv_timeout(timeout)?;
+        self.meter.record_recv(msg.len());
+        Ok(msg)
+    }
+}
+
+/// Create a connected pair of endpoints with independent meters.
+pub fn pair(latency: Duration) -> (Endpoint, Endpoint) {
+    let (txa, rxb) = channel();
+    let (txb, rxa) = channel();
+    (
+        Endpoint {
+            tx: txa,
+            rx: rxa,
+            meter: CommMeter::shared(),
+            latency,
+        },
+        Endpoint {
+            tx: txb,
+            rx: rxb,
+            meter: CommMeter::shared(),
+            latency,
+        },
+    )
+}
+
+/// The full §2 topology for one client: channels to both servers plus the
+/// server↔server channel. Returned as (client side, server0 side,
+/// server1 side) endpoint bundles.
+pub struct ClientLinks {
+    pub to_s0: Endpoint,
+    pub to_s1: Endpoint,
+}
+
+/// Build the three-party channel set for `n` clients.
+pub fn topology(
+    n: usize,
+    latency: Duration,
+) -> (Vec<ClientLinks>, Vec<(Endpoint, Endpoint)>, (Endpoint, Endpoint)) {
+    let mut clients = Vec::with_capacity(n);
+    let mut server_sides = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (c0, s0) = pair(latency);
+        let (c1, s1) = pair(latency);
+        clients.push(ClientLinks { to_s0: c0, to_s1: c1 });
+        server_sides.push((s0, s1));
+    }
+    let inter = pair(latency);
+    (clients, server_sides, inter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_metering() {
+        let (a, b) = pair(Duration::ZERO);
+        a.send(vec![1, 2, 3]).unwrap();
+        assert_eq!(b.recv().unwrap(), vec![1, 2, 3]);
+        b.send(vec![9; 10]).unwrap();
+        assert_eq!(a.recv().unwrap().len(), 10);
+        assert_eq!(a.meter.sent(), 3);
+        assert_eq!(a.meter.recv(), 10);
+        assert_eq!(b.meter.sent(), 10);
+        assert_eq!(b.meter.recv(), 3);
+    }
+
+    #[test]
+    fn cross_thread() {
+        let (a, b) = pair(Duration::ZERO);
+        let h = std::thread::spawn(move || {
+            let m = b.recv().unwrap();
+            b.send(m.iter().map(|x| x * 2).collect()).unwrap();
+        });
+        a.send(vec![5, 6]).unwrap();
+        assert_eq!(a.recv().unwrap(), vec![10, 12]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_on_silence() {
+        let (a, _b) = pair(Duration::ZERO);
+        assert!(a.recv_timeout(Duration::from_millis(10)).is_err());
+    }
+
+    #[test]
+    fn topology_shape() {
+        let (clients, servers, _inter) = topology(3, Duration::ZERO);
+        assert_eq!(clients.len(), 3);
+        assert_eq!(servers.len(), 3);
+        clients[0].to_s0.send(vec![1]).unwrap();
+        assert_eq!(servers[0].0.recv().unwrap(), vec![1]);
+        clients[2].to_s1.send(vec![2]).unwrap();
+        assert_eq!(servers[2].1.recv().unwrap(), vec![2]);
+    }
+}

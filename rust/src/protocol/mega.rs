@@ -1,0 +1,131 @@
+//! Mega-element grouping (§6, Fig. 5 and Eq. (1)).
+//!
+//! Structured models (embedding layers) update whole τ-element rows at
+//! once; grouping τ weights into one DPF payload amortises the per-key
+//! `⌈log Θ⌉(λ+2)` overhead across τ·l payload bits:
+//!
+//! `R(π_mega) = c · ε((λ+2)⌈log Θ⌉ + L) / (τ·l)`, `L = τ·l`.
+//!
+//! With the paper's constants (ε=1.25, l=λ=128, ⌈log Θ⌉=9, τ=18) the
+//! protocol stays non-trivial up to c ≈ 53.1% — the Table-2 "allow
+//! grouping top-k" row.
+
+use crate::group::{Group, MegaElem};
+
+/// Map a flat weight index to its (mega index, offset within the group).
+pub fn to_mega_index(flat: u64, tau: usize) -> (u64, usize) {
+    (flat / tau as u64, (flat % tau as u64) as usize)
+}
+
+/// Mega-domain size for `m` flat weights.
+pub fn mega_domain(m: u64, tau: usize) -> u64 {
+    m.div_ceil(tau as u64)
+}
+
+/// Group a flat `Z_{2^64}` weight vector into mega-elements (zero-padded
+/// tail). `T` must equal the runtime τ.
+pub fn group_weights<const T: usize>(weights: &[u64]) -> Vec<MegaElem<T>> {
+    weights
+        .chunks(T)
+        .map(|chunk| {
+            let mut e = [0u64; T];
+            e[..chunk.len()].copy_from_slice(chunk);
+            MegaElem(e)
+        })
+        .collect()
+}
+
+/// Flatten mega-elements back to a weight vector of length `m`.
+pub fn ungroup_weights<const T: usize>(mega: &[MegaElem<T>], m: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(mega.len() * T);
+    for e in mega {
+        out.extend_from_slice(&e.0);
+    }
+    out.truncate(m);
+    out
+}
+
+/// Convert a sparse flat update (`indices`, `deltas`) into a sparse mega
+/// update: distinct mega indices with dense τ-wide payloads.
+pub fn sparsify_mega<const T: usize>(indices: &[u64], deltas: &[u64]) -> (Vec<u64>, Vec<MegaElem<T>>) {
+    assert_eq!(indices.len(), deltas.len());
+    let mut map: std::collections::BTreeMap<u64, MegaElem<T>> = std::collections::BTreeMap::new();
+    for (&i, &d) in indices.iter().zip(deltas) {
+        let (mi, off) = to_mega_index(i, T);
+        let e = map.entry(mi).or_insert_with(MegaElem::zero);
+        e.0[off] = e.0[off].wrapping_add(d);
+    }
+    map.into_iter().unzip()
+}
+
+/// §6 Eq. (1): communication advantage rate of the mega-element SSA
+/// protocol versus trivial full-model aggregation (< 1 ⇒ non-trivial).
+pub fn advantage_rate_mega(
+    c: f64,
+    epsilon: f64,
+    log_theta: usize,
+    lambda: usize,
+    l: usize,
+    tau: usize,
+) -> f64 {
+    let big_l = (tau * l) as f64;
+    c * epsilon * ((lambda as f64 + 2.0) * log_theta as f64 + big_l) / (tau as f64 * l as f64)
+}
+
+/// §6: advantage rate of the *basic* SSA protocol (τ = 1 special case);
+/// the paper's `R(π_ssa) ≈ 12.68·c` with default constants.
+pub fn advantage_rate_basic(c: f64, epsilon: f64, log_theta: usize, lambda: usize, l: usize) -> f64 {
+    advantage_rate_mega(c, epsilon, log_theta, lambda, l, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_roundtrip() {
+        let w: Vec<u64> = (0..100).collect();
+        let mega = group_weights::<18>(&w);
+        assert_eq!(mega.len(), 6);
+        assert_eq!(ungroup_weights(&mega, 100), w);
+    }
+
+    #[test]
+    fn mega_indexing() {
+        assert_eq!(to_mega_index(0, 18), (0, 0));
+        assert_eq!(to_mega_index(17, 18), (0, 17));
+        assert_eq!(to_mega_index(18, 18), (1, 0));
+        assert_eq!(mega_domain(100, 18), 6);
+        assert_eq!(mega_domain(108, 18), 6);
+    }
+
+    #[test]
+    fn sparse_mega_conversion() {
+        let idx = vec![0u64, 17, 18, 54, 55];
+        let dl = vec![1u64, 2, 3, 4, 5];
+        let (mi, md) = sparsify_mega::<18>(&idx, &dl);
+        assert_eq!(mi, vec![0, 1, 3]);
+        assert_eq!(md[0].0[0], 1);
+        assert_eq!(md[0].0[17], 2);
+        assert_eq!(md[1].0[0], 3);
+        assert_eq!(md[2].0[0], 4);
+        assert_eq!(md[2].0[1], 5);
+    }
+
+    #[test]
+    fn paper_rate_numbers() {
+        // §6: R(π_ssa) ≈ 12.68·c ⇒ non-trivial iff c ≲ 7.8%.
+        let r = advantage_rate_basic(0.078, 1.25, 9, 128, 128);
+        assert!((r - 12.68 * 0.078 / 1.0).abs() < 0.03, "rate {r}");
+        assert!(advantage_rate_basic(0.077, 1.25, 9, 128, 128) < 1.0);
+        assert!(advantage_rate_basic(0.085, 1.25, 9, 128, 128) > 1.0);
+        // §6 mega: τ=18 ⇒ non-trivial up to c ≈ 53.1%.
+        assert!(advantage_rate_mega(0.53, 1.25, 9, 128, 128, 18) < 1.0);
+        assert!(advantage_rate_mega(0.55, 1.25, 9, 128, 128, 18) > 1.0);
+        // §6 PSU: ⌈log Θ⌉ = 5 ⇒ non-trivial up to c ≈ 13.2% (the paper
+        // rounds this band to "≲ 13.4%"; the exact Eq.(1) crossover with
+        // ε=1.25, λ=l=128 is 128/(1.25·778) = 13.16%).
+        assert!(advantage_rate_basic(0.131, 1.25, 5, 128, 128) < 1.0);
+        assert!(advantage_rate_basic(0.14, 1.25, 5, 128, 128) > 1.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! The paper's two protocols (Figure 4) plus its §6 optimisations.
+//!
+//! * [`psr`] — Private Submodel Retrieval: multi-query PIR via cuckoo
+//!   batching + one DPF-PIR per bin.
+//! * [`ssa`] — Secure Submodel Aggregation: the same batching, with the
+//!   DPF payload carrying the weight update `Δw_u`.
+//! * [`psu`] — Private Set Union: shrink the alignment domain to
+//!   `∪_i s^(i)` (§6).
+//! * [`mega`] — mega-element grouping: τ weights per DPF payload (§6).
+//! * [`session`] — shared per-round state (tables, parameters, domains).
+//! * [`udpf_ssa`] — SSA over updatable DPF keys for fixed submodels (§6).
+
+pub mod mega;
+pub mod msg;
+pub mod psr;
+pub mod psu;
+pub mod session;
+pub mod ssa;
+pub mod udpf_ssa;
+
+pub use session::{Session, SessionParams};

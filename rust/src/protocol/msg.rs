@@ -1,0 +1,195 @@
+//! Wire encodings for protocol messages.
+//!
+//! Everything crossing a [`crate::net::Endpoint`] is a length-prefixed
+//! byte message built here, so the Table-6 communication numbers come from
+//! the real encodings (and are cross-checked against the paper's bit
+//! formulas in `metrics`).
+
+use crate::dpf::{CorrectionWord, MasterKeyBatch, PublicPart};
+use crate::group::Group;
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(bytes: &[u8], off: &mut usize) -> Option<u32> {
+    let v = u32::from_le_bytes(bytes.get(*off..*off + 4)?.try_into().ok()?);
+    *off += 4;
+    Some(v)
+}
+
+/// Encode a client's full key upload (master seed for one server + the
+/// shared public parts). `include_publics = false` encodes the short
+/// message to the second server (just the master seed — the public parts
+/// travel once and are forwarded server-to-server, §4 Efficiency).
+pub fn encode_key_upload<G: Group>(
+    batch: &MasterKeyBatch<G>,
+    server: u8,
+    include_publics: bool,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.push(server);
+    out.extend_from_slice(&batch.msk[server as usize]);
+    out.push(include_publics as u8);
+    if include_publics {
+        put_u32(&mut out, batch.publics.len() as u32);
+        for p in &batch.publics {
+            out.push(p.depth as u8);
+            for cw in &p.cws {
+                out.extend_from_slice(&cw.seed);
+                out.push(cw.t_left as u8 | ((cw.t_right as u8) << 1));
+            }
+            p.cw_out.encode(&mut out);
+        }
+    }
+    out
+}
+
+/// Decoded key upload.
+pub struct KeyUpload<G: Group> {
+    pub server: u8,
+    pub msk: [u8; 16],
+    pub publics: Option<Vec<PublicPart<G>>>,
+}
+
+/// Parse [`encode_key_upload`] output.
+pub fn decode_key_upload<G: Group>(bytes: &[u8]) -> Option<KeyUpload<G>> {
+    let server = *bytes.first()?;
+    let msk: [u8; 16] = bytes.get(1..17)?.try_into().ok()?;
+    let has_publics = *bytes.get(17)? == 1;
+    let mut off = 18;
+    let publics = if has_publics {
+        let count = get_u32(bytes, &mut off)? as usize;
+        // Each public part is ≥ 1 byte (depth tag); bound before allocating.
+        if count > bytes.len().saturating_sub(off) {
+            return None;
+        }
+        let mut publics = Vec::with_capacity(count);
+        for _ in 0..count {
+            let depth = *bytes.get(off)? as usize;
+            off += 1;
+            let mut cws = Vec::with_capacity(depth);
+            for _ in 0..depth {
+                let seed: [u8; 16] = bytes.get(off..off + 16)?.try_into().ok()?;
+                let bits = *bytes.get(off + 16)?;
+                off += 17;
+                cws.push(CorrectionWord {
+                    seed,
+                    t_left: bits & 1 == 1,
+                    t_right: bits & 2 == 2,
+                });
+            }
+            let cw_out = G::decode(bytes.get(off..)?)?;
+            off += G::byte_len();
+            publics.push(PublicPart { depth, cws, cw_out });
+        }
+        Some(publics)
+    } else {
+        None
+    };
+    Some(KeyUpload {
+        server,
+        msk,
+        publics,
+    })
+}
+
+/// Encode a vector of group elements (PSR answers, SSA share vectors).
+pub fn encode_shares<G: Group>(shares: &[G]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + shares.len() * G::byte_len());
+    put_u32(&mut out, shares.len() as u32);
+    for s in shares {
+        s.encode(&mut out);
+    }
+    out
+}
+
+/// Parse [`encode_shares`] output.
+pub fn decode_shares<G: Group>(bytes: &[u8]) -> Option<Vec<G>> {
+    let mut off = 0;
+    let count = get_u32(bytes, &mut off)? as usize;
+    // Length sanity BEFORE allocating: a malicious count must not OOM us.
+    if count.checked_mul(G::byte_len())? > bytes.len().saturating_sub(off) {
+        return None;
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(G::decode(bytes.get(off..)?)?);
+        off += G::byte_len();
+    }
+    Some(out)
+}
+
+/// Encode a sorted index list (PSU messages, union broadcasts).
+pub fn encode_indices(indices: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + indices.len() * 8);
+    put_u32(&mut out, indices.len() as u32);
+    for &i in indices {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    out
+}
+
+/// Parse [`encode_indices`] output.
+pub fn decode_indices(bytes: &[u8]) -> Option<Vec<u64>> {
+    let mut off = 0;
+    let count = get_u32(bytes, &mut off)? as usize;
+    if count.checked_mul(8)? > bytes.len().saturating_sub(off) {
+        return None;
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(u64::from_le_bytes(bytes.get(off..off + 8)?.try_into().ok()?));
+        off += 8;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+    use crate::dpf::{gen_batch_with_master, BinPoint};
+
+    #[test]
+    fn key_upload_roundtrip() {
+        let mut rng = Rng::new(80);
+        let bins: Vec<BinPoint<u128>> = vec![
+            BinPoint { depth: 9, point: Some((5, 1)) },
+            BinPoint { depth: 9, point: None },
+            BinPoint { depth: 4, point: Some((3, 99)) },
+        ];
+        let batch = gen_batch_with_master(&bins, rng.gen_seed(), rng.gen_seed());
+        let long = encode_key_upload(&batch, 0, true);
+        let short = encode_key_upload(&batch, 1, false);
+        assert!(short.len() < long.len());
+        let du = decode_key_upload::<u128>(&long).unwrap();
+        assert_eq!(du.msk, batch.msk[0]);
+        let pubs = du.publics.unwrap();
+        assert_eq!(pubs.len(), 3);
+        assert_eq!(pubs[0].cw_out, batch.publics[0].cw_out);
+        let ds = decode_key_upload::<u128>(&short).unwrap();
+        assert!(ds.publics.is_none());
+        assert_eq!(ds.msk, batch.msk[1]);
+    }
+
+    #[test]
+    fn shares_roundtrip() {
+        let shares: Vec<u64> = vec![1, u64::MAX, 42];
+        assert_eq!(decode_shares::<u64>(&encode_shares(&shares)).unwrap(), shares);
+        let empty: Vec<u128> = vec![];
+        assert_eq!(decode_shares::<u128>(&encode_shares(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn indices_roundtrip() {
+        let idx = vec![0u64, 7, 1 << 40];
+        assert_eq!(decode_indices(&encode_indices(&idx)).unwrap(), idx);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(decode_key_upload::<u64>(&[0, 1, 2]).is_none());
+        assert!(decode_shares::<u64>(&[9, 0, 0, 0, 1]).is_none());
+    }
+}

@@ -1,0 +1,244 @@
+//! Private Submodel Retrieval (Fig. 4, top half).
+//!
+//! Client: insert the k selections into a cuckoo table; per bin `j`,
+//! generate DPF keys for `f_{pos_j, 1}` (dummy `f_{0,0}` for empty bins);
+//! per stash slot, keys over the whole alignment domain. Upload one master
+//! seed per server plus the shared public parts.
+//!
+//! Server `b`: full-domain-evaluate each bin key over its simple bin and
+//! answer with the inner products `[w'_j]_b = Σ_d w_{T_simple[j][d]} ·
+//! [f(d)]_b`. The two answers sum to exactly the requested weights.
+
+use super::session::Session;
+use crate::crypto::rng::Rng;
+use crate::dpf::{self, gen_batch_with_master, BinPoint, DpfKey, MasterKeyBatch};
+use crate::group::Group;
+use crate::hashing::{CuckooError, CuckooTable};
+
+/// Client-side retrieval context kept between query and reconstruct.
+pub struct PsrClientCtx {
+    pub cuckoo: CuckooTable,
+}
+
+/// Build the client's query: the cuckoo table and the batched DPF keys
+/// (B bin keys + σ stash keys, in that order).
+pub fn client_query<G: Group>(
+    session: &Session,
+    selections: &[u64],
+    rng: &mut Rng,
+) -> Result<(PsrClientCtx, MasterKeyBatch<G>), CuckooError> {
+    let bins = build_bin_points(session, selections, rng, |_u| G::one())?;
+    let batch = gen_batch_with_master(&bins.points, rng.gen_seed(), rng.gen_seed());
+    Ok((PsrClientCtx { cuckoo: bins.cuckoo }, batch))
+}
+
+pub(crate) struct BinPoints<G: Group> {
+    pub cuckoo: CuckooTable,
+    pub points: Vec<BinPoint<G>>,
+}
+
+/// Shared between PSR and SSA: place each selection in its bin and emit
+/// one `BinPoint` per bin (+ stash), with payload chosen by `beta_of`.
+pub(crate) fn build_bin_points<G: Group>(
+    session: &Session,
+    selections: &[u64],
+    rng: &mut Rng,
+    beta_of: impl Fn(u64) -> G,
+) -> Result<BinPoints<G>, CuckooError> {
+    let cuckoo = CuckooTable::build_with_bins(
+        selections,
+        session.simple.num_bins(),
+        &session.params.cuckoo,
+        rng,
+    )?;
+    let simple = &session.simple;
+    assert_eq!(cuckoo.num_bins(), simple.num_bins(), "table misalignment");
+
+    let stash_depth = dpf::depth_for(session.domain_size());
+    let mut points = Vec::with_capacity(cuckoo.num_bins() + session.params.cuckoo.sigma);
+
+    for (j, slot) in cuckoo.bins().iter().enumerate() {
+        let theta_j = simple.bin(j).len().max(2);
+        let depth = dpf::depth_for(theta_j);
+        let point = slot.map(|u| {
+            let pos = simple
+                .position(j, u)
+                .expect("alignment invariant: cuckoo element present in simple bin");
+            (pos as u64, beta_of(u))
+        });
+        points.push(BinPoint { depth, point });
+    }
+    // Stash slots: keys over the whole domain (occupied or dummy), always
+    // σ of them so the upload shape is data-independent (Fig. 3).
+    for t in 0..session.params.cuckoo.sigma {
+        let point = cuckoo.stash().get(t).map(|&u| {
+            let pos = session
+                .domain_index_of(u)
+                .expect("stash element outside domain");
+            (pos, beta_of(u))
+        });
+        points.push(BinPoint {
+            depth: stash_depth,
+            point,
+        });
+    }
+    Ok(BinPoints { cuckoo, points })
+}
+
+/// Server `b` answers a PSR query: one share per bin (then per stash key).
+/// `weights[i]` is the group encoding of global weight `i`.
+pub fn server_answer<G: Group>(session: &Session, weights: &[G], keys: &[DpfKey<G>]) -> Vec<G> {
+    assert_eq!(weights.len(), session.params.m as usize, "weight vector size");
+    let num_bins = session.simple.num_bins();
+    let sigma = session.params.cuckoo.sigma;
+    assert_eq!(keys.len(), num_bins + sigma, "key count");
+
+    let mut answers = Vec::with_capacity(keys.len());
+    // Reused workspace + output buffer across bins, then one inner
+    // product per bin (the L1 `binned_ip` kernel computes the same slab
+    // product on the PJRT path; see `runtime::Executor::binned_ip`).
+    let mut ws = dpf::EvalWorkspace::default();
+    let mut ev: Vec<G> = Vec::new();
+    for (j, key) in keys.iter().take(num_bins).enumerate() {
+        let bin = session.simple.bin(j);
+        dpf::full_eval_with(key, bin.len(), &mut ws, &mut ev);
+        let mut acc = G::zero();
+        for (d, &idx) in bin.iter().enumerate() {
+            acc.add_assign(&weights[idx as usize].ring_mul(&ev[d]));
+        }
+        answers.push(acc);
+    }
+    for key in keys.iter().skip(num_bins) {
+        let n = session.domain_size();
+        let evals = dpf::full_eval(key, n);
+        let mut acc = G::zero();
+        for (pos, ev) in evals.iter().enumerate() {
+            let idx = session.domain_value(pos);
+            acc.add_assign(&weights[idx as usize].ring_mul(ev));
+        }
+        answers.push(acc);
+    }
+    answers
+}
+
+/// Client combines the two servers' answers into its submodel, in the
+/// order of `selections`.
+pub fn client_reconstruct<G: Group>(
+    ctx: &PsrClientCtx,
+    num_bins: usize,
+    selections: &[u64],
+    ans0: &[G],
+    ans1: &[G],
+) -> Vec<G> {
+    assert_eq!(ans0.len(), ans1.len());
+    selections
+        .iter()
+        .map(|&s| {
+            let slot = match ctx.cuckoo.locate(s).expect("selection not in table") {
+                Ok(bin) => bin,
+                Err(stash_slot) => num_bins + stash_slot,
+            };
+            ans0[slot].add(&ans1[slot])
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::CuckooParams;
+    use crate::protocol::session::SessionParams;
+
+    fn session(m: u64, k: usize, sigma: usize) -> Session {
+        Session::new_full(SessionParams {
+            m,
+            k,
+            cuckoo: CuckooParams::default().with_sigma(sigma),
+        })
+    }
+
+    fn weights_u64(m: u64, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        (0..m).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn end_to_end_retrieval() {
+        let s = session(1 << 12, 64, 0);
+        let w = weights_u64(1 << 12, 90);
+        let mut rng = Rng::new(91);
+        let sel = rng.sample_distinct(64, 1 << 12);
+        let (ctx, batch) = client_query::<u64>(&s, &sel, &mut rng).unwrap();
+        let a0 = server_answer(&s, &w, &batch.server_keys(0));
+        let a1 = server_answer(&s, &w, &batch.server_keys(1));
+        let got = client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
+        for (i, &sl) in sel.iter().enumerate() {
+            assert_eq!(got[i], w[sl as usize], "selection {sl}");
+        }
+    }
+
+    #[test]
+    fn end_to_end_with_stash() {
+        // Force stash pressure with a tight table.
+        let params = CuckooParams {
+            epsilon: 1.05,
+            eta: 2,
+            sigma: 24,
+            hash_seed: 3,
+            max_kicks: 30,
+        };
+        let s = Session::new_full(SessionParams {
+            m: 1 << 10,
+            k: 100,
+            cuckoo: params,
+        });
+        let w = weights_u64(1 << 10, 92);
+        let mut rng = Rng::new(93);
+        let sel = rng.sample_distinct(100, 1 << 10);
+        let (ctx, batch) = client_query::<u64>(&s, &sel, &mut rng).unwrap();
+        assert!(!ctx.cuckoo.stash().is_empty(), "test needs stash pressure");
+        let a0 = server_answer(&s, &w, &batch.server_keys(0));
+        let a1 = server_answer(&s, &w, &batch.server_keys(1));
+        let got = client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
+        for (i, &sl) in sel.iter().enumerate() {
+            assert_eq!(got[i], w[sl as usize]);
+        }
+    }
+
+    #[test]
+    fn answers_are_proper_shares() {
+        // A single server's answer must not equal the plaintext weights.
+        let s = session(1 << 10, 32, 0);
+        let w = weights_u64(1 << 10, 94);
+        let mut rng = Rng::new(95);
+        let sel = rng.sample_distinct(32, 1 << 10);
+        let (ctx, batch) = client_query::<u64>(&s, &sel, &mut rng).unwrap();
+        let a0 = server_answer(&s, &w, &batch.server_keys(0));
+        let hits = sel
+            .iter()
+            .filter(|&&sl| {
+                let j = match ctx.cuckoo.locate(sl).unwrap() {
+                    Ok(b) => b,
+                    Err(t) => s.simple.num_bins() + t,
+                };
+                a0[j] == w[sl as usize]
+            })
+            .count();
+        assert!(hits <= 1, "share leaks plaintext ({hits} hits)");
+    }
+
+    #[test]
+    fn u128_payloads() {
+        let s = session(512, 16, 0);
+        let mut rng = Rng::new(96);
+        let w: Vec<u128> = (0..512).map(|_| rng.next_u64() as u128).collect();
+        let sel = rng.sample_distinct(16, 512);
+        let (ctx, batch) = client_query::<u128>(&s, &sel, &mut rng).unwrap();
+        let a0 = server_answer(&s, &w, &batch.server_keys(0));
+        let a1 = server_answer(&s, &w, &batch.server_keys(1));
+        let got = client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
+        for (i, &sl) in sel.iter().enumerate() {
+            assert_eq!(got[i], w[sl as usize]);
+        }
+    }
+}

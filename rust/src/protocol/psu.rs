@@ -1,0 +1,225 @@
+//! Private Set Union (§6, "Basic protocol with PSU").
+//!
+//! The optimisation: before aggregation, all parties learn the *union*
+//! `U = ∪_i s^(i)` and rebuild the simple table over `U` instead of
+//! `{0..m}` — shrinking Θ (the paper measures 9 → 5 bins bits) and hence
+//! every DPF key.
+//!
+//! Construction (symmetric-key, two-server — in the spirit of \[29\]):
+//! clients share a blinding key `K` (derived from common randomness the
+//! servers never see). Each client sends `{PRP_K(x) : x ∈ s^(i)}`, padded
+//! to exactly k items with client-unique dummies, to `S_0`. `S_0` shuffles
+//! the combined multiset (breaking client↔item linkage) and forwards it to
+//! `S_1`, which deduplicates and broadcasts the blinded union; clients
+//! unblind with `K⁻¹` and drop dummies. Leakage beyond the ideal
+//! functionality: the *unlinkable* multiplicity histogram seen by `S_1`
+//! (documented; the paper's PSU is likewise leakage-parameterised — it
+//! assumes "the leakage of the union set reveals negligible useful
+//! information").
+
+use crate::crypto::prg::expand_stream;
+use crate::crypto::rng::Rng;
+
+/// A small-domain PRP over `[0, 2^bits)` via a 4-round Feistel network
+/// with AES-CTR round functions, cycle-walked down to `[0, domain)`.
+#[derive(Clone, Debug)]
+pub struct SmallPrp {
+    round_keys: [[u8; 16]; 4],
+    bits: u32,
+    domain: u64,
+}
+
+impl SmallPrp {
+    /// Build a PRP on `[0, domain)` from a λ-bit key.
+    pub fn new(key: &[u8; 16], domain: u64) -> Self {
+        assert!(domain >= 2);
+        let bits = 64 - (domain - 1).leading_zeros();
+        // Derive 4 independent round keys from the master key.
+        let stream = expand_stream(key, 64);
+        let mut round_keys = [[0u8; 16]; 4];
+        for (i, rk) in round_keys.iter_mut().enumerate() {
+            rk.copy_from_slice(&stream[i * 16..(i + 1) * 16]);
+        }
+        SmallPrp {
+            // Even bit count → balanced Feistel halves.
+            bits: (bits.max(2) + 1) & !1,
+            round_keys,
+            domain,
+        }
+    }
+
+    fn round(&self, r: usize, x: u64) -> u64 {
+        let mut seed = self.round_keys[r];
+        seed[8..].copy_from_slice(&x.to_le_bytes());
+        let out = expand_stream(&seed, 8);
+        u64::from_le_bytes(out.try_into().unwrap())
+    }
+
+    fn feistel(&self, x: u64, inverse: bool) -> u64 {
+        let half = self.bits / 2;
+        let mask = (1u64 << half) - 1;
+        let (mut l, mut r) = (x >> half, x & mask);
+        if !inverse {
+            for i in 0..4 {
+                let (nl, nr) = (r, l ^ (self.round(i, r) & mask));
+                l = nl;
+                r = nr;
+            }
+        } else {
+            for i in (0..4).rev() {
+                let (nl, nr) = (r ^ (self.round(i, l) & mask), l);
+                l = nl;
+                r = nr;
+            }
+        }
+        (l << half) | r
+    }
+
+    /// Forward permutation (cycle-walking keeps outputs in-domain).
+    pub fn permute(&self, x: u64) -> u64 {
+        assert!(x < self.domain);
+        let mut y = self.feistel(x, false);
+        while y >= self.domain {
+            y = self.feistel(y, false);
+        }
+        y
+    }
+
+    /// Inverse permutation.
+    pub fn invert(&self, y: u64) -> u64 {
+        assert!(y < self.domain);
+        let mut x = self.feistel(y, true);
+        while x >= self.domain {
+            x = self.feistel(x, true);
+        }
+        x
+    }
+}
+
+/// Blind one client's padded selection set. Dummies are drawn from a
+/// client-unique high range `[m, m + k)` of the extended PRP domain, so
+/// they never collide with real indices or other clients' dummies.
+pub fn client_blind(
+    key: &[u8; 16],
+    m: u64,
+    k: usize,
+    client_id: u64,
+    selections: &[u64],
+) -> Vec<u64> {
+    assert!(selections.len() <= k);
+    // Extended domain: real indices ∪ per-client dummy slots.
+    let n_clients_hint = 1u64 << 20;
+    let domain = m + n_clients_hint * k as u64;
+    let prp = SmallPrp::new(key, domain);
+    let mut out: Vec<u64> = selections.iter().map(|&x| prp.permute(x)).collect();
+    for d in 0..(k - selections.len()) {
+        out.push(prp.permute(m + client_id * k as u64 + d as u64));
+    }
+    out
+}
+
+/// `S_0`: shuffle the combined blinded multiset (unlinkability).
+pub fn server0_shuffle(mut items: Vec<u64>, rng: &mut Rng) -> Vec<u64> {
+    rng.shuffle(&mut items);
+    items
+}
+
+/// `S_1`: deduplicate; the result is the blinded union (plus blinded
+/// dummies, which clients drop after unblinding).
+pub fn server1_dedup(mut items: Vec<u64>) -> Vec<u64> {
+    items.sort_unstable();
+    items.dedup();
+    items
+}
+
+/// Client: unblind the broadcast union, drop dummies, sort.
+pub fn client_unblind(key: &[u8; 16], m: u64, k: usize, blinded_union: &[u64]) -> Vec<u64> {
+    let n_clients_hint = 1u64 << 20;
+    let domain = m + n_clients_hint * k as u64;
+    let prp = SmallPrp::new(key, domain);
+    let mut out: Vec<u64> = blinded_union
+        .iter()
+        .map(|&y| prp.invert(y))
+        .filter(|&x| x < m)
+        .collect();
+    out.sort_unstable();
+    out
+}
+
+/// Run the whole PSU among `n` clients in-process (used by the coordinator
+/// and benches); returns the revealed union, ascending.
+pub fn run_psu(
+    key: &[u8; 16],
+    m: u64,
+    k: usize,
+    client_sets: &[Vec<u64>],
+    rng: &mut Rng,
+) -> Vec<u64> {
+    let mut pooled = Vec::with_capacity(client_sets.len() * k);
+    for (cid, set) in client_sets.iter().enumerate() {
+        pooled.extend(client_blind(key, m, k, cid as u64, set));
+    }
+    let shuffled = server0_shuffle(pooled, rng);
+    let blinded_union = server1_dedup(shuffled);
+    client_unblind(key, m, k, &blinded_union)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prp_is_a_permutation() {
+        let prp = SmallPrp::new(&[5u8; 16], 1000);
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..1000 {
+            let y = prp.permute(x);
+            assert!(y < 1000);
+            assert!(seen.insert(y), "collision at {x}");
+            assert_eq!(prp.invert(y), x);
+        }
+    }
+
+    #[test]
+    fn prp_nontrivial() {
+        let prp = SmallPrp::new(&[6u8; 16], 1 << 16);
+        let fixed = (0..1000u64).filter(|&x| prp.permute(x) == x).count();
+        assert!(fixed < 5, "{fixed} fixed points");
+    }
+
+    #[test]
+    fn union_is_exact() {
+        let key = [9u8; 16];
+        let m = 1u64 << 14;
+        let k = 50;
+        let mut rng = Rng::new(110);
+        let sets: Vec<Vec<u64>> = (0..8)
+            .map(|_| rng.sample_distinct(k - 5, m)) // under-filled → dummies
+            .collect();
+        let mut expected: Vec<u64> = sets.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        expected.dedup();
+        let got = run_psu(&key, m, k, &sets, &mut rng);
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn dummies_never_leak_into_union() {
+        let key = [1u8; 16];
+        let m = 4096;
+        let mut rng = Rng::new(111);
+        let sets = vec![vec![1u64, 2, 3], vec![3u64, 4]];
+        let got = run_psu(&key, m, 16, &sets, &mut rng);
+        assert_eq!(got, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn padded_sizes_are_uniform() {
+        // Each client's message has exactly k items regardless of |s|.
+        let key = [2u8; 16];
+        for len in [0usize, 3, 16] {
+            let set: Vec<u64> = (0..len as u64).collect();
+            assert_eq!(client_blind(&key, 1 << 12, 16, 7, &set).len(), 16);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Shared per-round session state.
+//!
+//! Before either protocol runs, all parties agree on (System Setup,
+//! Fig. 4): the counts `(n, m, k)`, the cuckoo parameters `(ε, η, σ)`,
+//! `B = ⌈εk⌉` bins, and they deterministically build the aligned simple
+//! table over the alignment domain (the full index set `{0..m}`, or the
+//! PSU union).
+
+use crate::hashing::{CuckooParams, SimpleTable};
+use std::sync::Arc;
+
+/// Public, agreed-upon round parameters.
+#[derive(Clone, Debug)]
+pub struct SessionParams {
+    /// Global model size m.
+    pub m: u64,
+    /// Per-client submodel size k.
+    pub k: usize,
+    /// Cuckoo parameters (ε, η, σ, public hash seed).
+    pub cuckoo: CuckooParams,
+}
+
+impl SessionParams {
+    /// Number of cuckoo/simple bins `B = ⌈εk⌉`.
+    pub fn num_bins(&self) -> usize {
+        self.cuckoo.num_bins(self.k)
+    }
+}
+
+/// A session binds parameters to the alignment domain and the (shared,
+/// deterministic) simple table. Both servers and all clients hold an
+/// identical copy — it is public data.
+#[derive(Clone)]
+pub struct Session {
+    pub params: SessionParams,
+    /// Alignment domain, ascending. `None` ⇒ the dense full domain
+    /// `{0..m}` (kept implicit to avoid materialising 2^25 u64s).
+    pub domain: Option<Arc<Vec<u64>>>,
+    pub simple: Arc<SimpleTable>,
+}
+
+impl Session {
+    /// Full-domain session (basic protocols).
+    pub fn new_full(params: SessionParams) -> Self {
+        let simple = SimpleTable::build_full(params.m, params.num_bins(), &params.cuckoo);
+        Session {
+            simple: Arc::new(simple),
+            domain: None,
+            params,
+        }
+    }
+
+    /// Union-domain session (PSU optimisation, §6). `union` must be the
+    /// ascending, deduplicated output of the PSU protocol.
+    pub fn new_union(params: SessionParams, union: Vec<u64>) -> Self {
+        debug_assert!(union.windows(2).all(|w| w[0] < w[1]), "union not sorted");
+        let simple = SimpleTable::build(
+            union.iter().copied(),
+            params.num_bins(),
+            &params.cuckoo,
+        );
+        Session {
+            simple: Arc::new(simple),
+            domain: Some(Arc::new(union)),
+            params,
+        }
+    }
+
+    /// Size of the alignment domain (m, or |∪ s^(i)| with PSU).
+    pub fn domain_size(&self) -> usize {
+        match &self.domain {
+            Some(d) => d.len(),
+            None => self.params.m as usize,
+        }
+    }
+
+    /// Position of a model index within the alignment domain, if present.
+    pub fn domain_index_of(&self, x: u64) -> Option<u64> {
+        match &self.domain {
+            Some(d) => d.binary_search(&x).ok().map(|p| p as u64),
+            None => (x < self.params.m).then_some(x),
+        }
+    }
+
+    /// Model index at a domain position.
+    pub fn domain_value(&self, pos: usize) -> u64 {
+        match &self.domain {
+            Some(d) => d[pos],
+            None => pos as u64,
+        }
+    }
+
+    /// Maximum simple-table bin size Θ for this session.
+    pub fn theta(&self) -> usize {
+        self.simple.max_bin_size()
+    }
+
+    /// `⌈log Θ⌉` — the per-bin DPF depth bound the paper's formulas use.
+    pub fn log_theta(&self) -> usize {
+        crate::dpf::depth_for(self.theta().max(2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::CuckooParams;
+
+    fn params(m: u64, k: usize) -> SessionParams {
+        SessionParams {
+            m,
+            k,
+            cuckoo: CuckooParams::default(),
+        }
+    }
+
+    #[test]
+    fn full_session_builds_aligned_table() {
+        let s = Session::new_full(params(1 << 12, 128));
+        assert_eq!(s.simple.num_bins(), s.params.num_bins());
+        assert!(s.theta() > 0);
+    }
+
+    #[test]
+    fn log_theta_covers_theta() {
+        let s = Session::new_full(params(1 << 12, 64));
+        assert!(1usize << s.log_theta() >= s.theta());
+    }
+
+    #[test]
+    fn union_session_smaller_theta() {
+        let p = params(1 << 14, 100);
+        let full = Session::new_full(p.clone());
+        let union: Vec<u64> = (0..(1u64 << 14)).step_by(16).collect();
+        let small = Session::new_union(p, union);
+        assert!(small.theta() <= full.theta());
+    }
+}

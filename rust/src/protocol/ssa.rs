@@ -1,0 +1,320 @@
+//! Secure Submodel Aggregation (Fig. 4, bottom half).
+//!
+//! Client: same cuckoo batching as PSR, but bin `j`'s DPF carries
+//! `f_{pos_j, Δw_u}` — the weight *update* as payload. Server `b`
+//! full-domain-evaluates every bin key and scatters the shares back to
+//! global positions: `[Δw]_b[T_simple[j][d]] += [f_j(d)]_b`. Because each
+//! domain element appears in exactly its η candidate bins, this scatter is
+//! the transpose of the paper's per-position gather
+//! `Σ_d Eval(k[h_d(j)], pos_{h_d(j)})` — same sums, one pass, linear time.
+//! Finally the servers exchange share vectors and reconstruct `Δw`.
+
+use super::psr::build_bin_points;
+use super::session::Session;
+use crate::crypto::rng::Rng;
+use crate::dpf::{self, gen_batch_with_master, DpfKey, MasterKeyBatch};
+use crate::group::Group;
+use crate::hashing::CuckooError;
+
+/// Build a client's SSA upload. `selections[i]`'s update is `deltas[i]`.
+pub fn client_update<G: Group>(
+    session: &Session,
+    selections: &[u64],
+    deltas: &[G],
+    rng: &mut Rng,
+) -> Result<MasterKeyBatch<G>, CuckooError> {
+    assert_eq!(selections.len(), deltas.len());
+    let delta_of: std::collections::HashMap<u64, G> = selections
+        .iter()
+        .copied()
+        .zip(deltas.iter().cloned())
+        .collect();
+    let bins = build_bin_points(session, selections, rng, |u| delta_of[&u].clone())?;
+    Ok(gen_batch_with_master(&bins.points, rng.gen_seed(), rng.gen_seed()))
+}
+
+/// Server `b`: evaluate one client's keys and accumulate its share of the
+/// global update into `acc` (length = domain size).
+pub fn server_aggregate_into<G: Group>(session: &Session, keys: &[DpfKey<G>], acc: &mut [G]) {
+    let num_bins = session.simple.num_bins();
+    let sigma = session.params.cuckoo.sigma;
+    assert_eq!(keys.len(), num_bins + sigma, "key count");
+    assert_eq!(acc.len(), session.domain_size(), "accumulator size");
+
+    // Reused workspace + output buffer: zero heap churn across the B bin
+    // evaluations (§Perf iteration 3).
+    let mut ws = dpf::EvalWorkspace::default();
+    let mut ev: Vec<G> = Vec::new();
+    for (j, key) in keys.iter().take(num_bins).enumerate() {
+        let bin = session.simple.bin(j);
+        dpf::full_eval_with(key, bin.len(), &mut ws, &mut ev);
+        for (d, &idx) in bin.iter().enumerate() {
+            let pos = session
+                .domain_index_of(idx)
+                .expect("simple bin element outside domain") as usize;
+            acc[pos].add_assign(&ev[d]);
+        }
+    }
+    for key in keys.iter().skip(num_bins) {
+        let evals = dpf::full_eval(key, acc.len());
+        for (pos, ev) in evals.iter().enumerate() {
+            acc[pos].add_assign(ev);
+        }
+    }
+}
+
+/// Server `b`: aggregate one client's contribution straight from its
+/// decoded public parts + master seed, without materialising `DpfKey`s
+/// (no correction-word clones — §Perf iteration 5). Stash keys are the
+/// trailing `σ` parts, evaluated over the whole domain.
+pub fn server_aggregate_publics<G: Group>(
+    session: &Session,
+    publics: &[crate::dpf::PublicPart<G>],
+    msk: &crate::crypto::prg::Seed,
+    party: u8,
+    acc: &mut [G],
+) {
+    let num_bins = session.simple.num_bins();
+    let sigma = session.params.cuckoo.sigma;
+    assert_eq!(publics.len(), num_bins + sigma, "public part count");
+    assert_eq!(acc.len(), session.domain_size(), "accumulator size");
+    let mut ws = dpf::EvalWorkspace::default();
+    let mut ev: Vec<G> = Vec::new();
+    for (j, p) in publics.iter().enumerate() {
+        let root = crate::crypto::prg::prf_seed(msk, j as u64);
+        let n = if j < num_bins {
+            session.simple.bin(j).len()
+        } else {
+            session.domain_size()
+        };
+        dpf::full_eval_parts(party, p.depth, &root, &p.cws, &p.cw_out, n, &mut ws, &mut ev);
+        if j < num_bins {
+            for (d, &idx) in session.simple.bin(j).iter().enumerate() {
+                let pos = session.domain_index_of(idx).expect("in domain") as usize;
+                acc[pos].add_assign(&ev[d]);
+            }
+        } else {
+            for (pos, v) in ev.iter().enumerate() {
+                acc[pos].add_assign(v);
+            }
+        }
+    }
+}
+
+/// Convenience: aggregate many clients' key sets into a fresh share
+/// vector.
+pub fn server_aggregate<G: Group>(session: &Session, clients: &[Vec<DpfKey<G>>]) -> Vec<G> {
+    let mut acc = vec![G::zero(); session.domain_size()];
+    for keys in clients {
+        server_aggregate_into(session, keys, &mut acc);
+    }
+    acc
+}
+
+/// Multi-threaded server aggregation (the paper enables multi-threading
+/// for all experiments, §7.2). Bins are sharded across `threads` workers —
+/// each worker walks a disjoint bin range of *every* client's key set, so
+/// scatter targets never collide and no locking is needed; per-worker
+/// partial accumulators are merged at the end.
+pub fn server_aggregate_parallel<G: Group>(
+    session: &Session,
+    clients: &[Vec<DpfKey<G>>],
+    threads: usize,
+) -> Vec<G> {
+    let threads = threads.max(1);
+    if threads == 1 || clients.is_empty() {
+        return server_aggregate(session, clients);
+    }
+    let num_bins = session.simple.num_bins();
+    let domain = session.domain_size();
+    let chunk = num_bins.div_ceil(threads);
+    let mut partials: Vec<Vec<G>> = Vec::with_capacity(threads);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let lo = (t * chunk).min(num_bins);
+            let hi = ((t + 1) * chunk).min(num_bins);
+            handles.push(scope.spawn(move || {
+                let mut acc = vec![G::zero(); domain];
+                for keys in clients {
+                    for (j, key) in keys[lo..hi].iter().enumerate() {
+                        let bin = session.simple.bin(lo + j);
+                        let evals = dpf::full_eval(key, bin.len());
+                        for (d, &idx) in bin.iter().enumerate() {
+                            let pos =
+                                session.domain_index_of(idx).expect("element in domain") as usize;
+                            acc[pos].add_assign(&evals[d]);
+                        }
+                    }
+                }
+                acc
+            }));
+        }
+        for h in handles {
+            partials.push(h.join().expect("aggregation worker panicked"));
+        }
+    });
+    // Merge partials; stash keys (outside the bin range) processed serially.
+    let mut acc = partials.pop().unwrap_or_else(|| vec![G::zero(); domain]);
+    for p in &partials {
+        for (a, v) in acc.iter_mut().zip(p) {
+            a.add_assign(v);
+        }
+    }
+    for keys in clients {
+        for key in keys.iter().skip(num_bins) {
+            let evals = dpf::full_eval(key, domain);
+            for (pos, ev) in evals.iter().enumerate() {
+                acc[pos].add_assign(ev);
+            }
+        }
+    }
+    acc
+}
+
+/// Reconstruct `Δw` from the two servers' share vectors (the final
+/// `S_0`/`S_1` exchange in Fig. 4).
+pub fn reconstruct<G: Group>(share0: &[G], share1: &[G]) -> Vec<G> {
+    assert_eq!(share0.len(), share1.len());
+    share0
+        .iter()
+        .zip(share1)
+        .map(|(a, b)| a.add(b))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::CuckooParams;
+    use crate::protocol::session::SessionParams;
+
+    fn session(m: u64, k: usize) -> Session {
+        Session::new_full(SessionParams {
+            m,
+            k,
+            cuckoo: CuckooParams::default(),
+        })
+    }
+
+    #[test]
+    fn single_client_sparse_update() {
+        let s = session(1 << 10, 32);
+        let mut rng = Rng::new(100);
+        let sel = rng.sample_distinct(32, 1 << 10);
+        let deltas: Vec<u64> = (0..32).map(|i| 1000 + i).collect();
+        let batch = client_update(&s, &sel, &deltas, &mut rng).unwrap();
+        let sh0 = server_aggregate(&s, &[batch.server_keys(0)]);
+        let sh1 = server_aggregate(&s, &[batch.server_keys(1)]);
+        let dw = reconstruct(&sh0, &sh1);
+        for x in 0..(1u64 << 10) {
+            match sel.iter().position(|&sl| sl == x) {
+                Some(i) => assert_eq!(dw[x as usize], deltas[i], "at {x}"),
+                None => assert_eq!(dw[x as usize], 0, "at {x}"),
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let s = session(1 << 11, 64);
+        let mut rng = Rng::new(105);
+        let mut all0 = Vec::new();
+        for _ in 0..6 {
+            let sel = rng.sample_distinct(64, 1 << 11);
+            let deltas: Vec<u64> = sel.iter().map(|&x| x ^ 0xabc).collect();
+            let batch = client_update(&s, &sel, &deltas, &mut rng).unwrap();
+            all0.push(batch.server_keys(0));
+        }
+        let serial = server_aggregate(&s, &all0);
+        for threads in [2, 3, 8, 64] {
+            assert_eq!(server_aggregate_parallel(&s, &all0, threads), serial);
+        }
+    }
+
+    #[test]
+    fn multi_client_overlapping_updates() {
+        // Clients with overlapping selections: updates must *sum*.
+        let s = session(512, 16);
+        let mut rng = Rng::new(101);
+        let mut expected = vec![0u64; 512];
+        let mut all_keys0 = Vec::new();
+        let mut all_keys1 = Vec::new();
+        for c in 0..5 {
+            let sel = rng.sample_distinct(16, 512);
+            let deltas: Vec<u64> = sel.iter().map(|&x| x * 10 + c).collect();
+            for (i, &x) in sel.iter().enumerate() {
+                expected[x as usize] = expected[x as usize].wrapping_add(deltas[i]);
+            }
+            let batch = client_update(&s, &sel, &deltas, &mut rng).unwrap();
+            all_keys0.push(batch.server_keys(0));
+            all_keys1.push(batch.server_keys(1));
+        }
+        let dw = reconstruct(
+            &server_aggregate(&s, &all_keys0),
+            &server_aggregate(&s, &all_keys1),
+        );
+        assert_eq!(dw, expected);
+    }
+
+    #[test]
+    fn shares_alone_are_pseudorandom() {
+        let s = session(256, 8);
+        let mut rng = Rng::new(102);
+        let sel = rng.sample_distinct(8, 256);
+        let deltas = vec![7u64; 8];
+        let batch = client_update(&s, &sel, &deltas, &mut rng).unwrap();
+        let sh0 = server_aggregate(&s, &[batch.server_keys(0)]);
+        // A single share vector should be dense noise, not sparse.
+        let zeros = sh0.iter().filter(|v| **v == 0).count();
+        assert!(zeros < 5, "share vector suspiciously sparse: {zeros} zeros");
+    }
+
+    #[test]
+    fn works_over_union_domain() {
+        // PSU-optimised session: domain is a strict subset of {0..m}.
+        let m = 1u64 << 12;
+        let union: Vec<u64> = (0..m).step_by(3).collect();
+        let params = SessionParams {
+            m,
+            k: 16,
+            cuckoo: CuckooParams::default(),
+        };
+        let s = Session::new_union(params, union.clone());
+        let mut rng = Rng::new(103);
+        let sel: Vec<u64> = (0..16).map(|i| union[i * 7]).collect();
+        let deltas: Vec<u64> = (0..16).map(|i| 5000 + i).collect();
+        let batch = client_update(&s, &sel, &deltas, &mut rng).unwrap();
+        let dw = reconstruct(
+            &server_aggregate(&s, &[batch.server_keys(0)]),
+            &server_aggregate(&s, &[batch.server_keys(1)]),
+        );
+        assert_eq!(dw.len(), union.len());
+        for (pos, &idx) in union.iter().enumerate() {
+            match sel.iter().position(|&sl| sl == idx) {
+                Some(i) => assert_eq!(dw[pos], deltas[i]),
+                None => assert_eq!(dw[pos], 0),
+            }
+        }
+    }
+
+    #[test]
+    fn fig2_worked_example() {
+        // The paper's running example: insert {1,4} into the cuckoo table
+        // over domain {1..5}; aggregation must place Δw at positions 1,4.
+        let s = Session::new_full(SessionParams {
+            m: 6,
+            k: 2,
+            cuckoo: CuckooParams::default(),
+        });
+        let mut rng = Rng::new(104);
+        let sel = vec![1u64, 4];
+        let deltas = vec![10u64, 40];
+        let batch = client_update(&s, &sel, &deltas, &mut rng).unwrap();
+        let dw = reconstruct(
+            &server_aggregate(&s, &[batch.server_keys(0)]),
+            &server_aggregate(&s, &[batch.server_keys(1)]),
+        );
+        assert_eq!(dw, vec![0, 10, 0, 0, 40, 0]);
+    }
+}

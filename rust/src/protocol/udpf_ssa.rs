@@ -1,0 +1,239 @@
+//! SSA with Updatable DPF for fixed submodels (§6, Table 2 row 3).
+//!
+//! When a client's selection `s^(i)` is fixed for a whole training task
+//! (personalisation / HeteroFL-style setups), round 1 pays the full basic
+//! SSA upload, and every later round pays only one `⌈log 𝔾⌉`-bit *hint*
+//! per bin — `R^{(1)} = R(π_ssa)`, `R^{(>1)} = c`.
+
+use super::session::Session;
+use crate::crypto::rng::Rng;
+use crate::dpf;
+use crate::group::Group;
+use crate::hashing::{CuckooError, CuckooTable};
+use crate::udpf::{self, Hint, UdpfClientState, UdpfKey};
+
+/// Client state for a fixed-submodel training task.
+pub struct UdpfSsaClient<G: Group> {
+    cuckoo: CuckooTable,
+    /// Per-bin U-DPF client state (bins then stash slots).
+    states: Vec<UdpfClientState>,
+    _marker: std::marker::PhantomData<G>,
+}
+
+/// One server's retained key set for a client.
+pub struct UdpfSsaServerKeys<G: Group> {
+    pub keys: Vec<UdpfKey<G>>,
+}
+
+/// Round-1 setup: build cuckoo table + U-DPF keys carrying the first
+/// round's deltas (epoch 0). Returns the client handle and both servers'
+/// key sets.
+pub fn client_setup<G: Group>(
+    session: &Session,
+    selections: &[u64],
+    deltas: &[G],
+    rng: &mut Rng,
+) -> Result<(UdpfSsaClient<G>, UdpfSsaServerKeys<G>, UdpfSsaServerKeys<G>), CuckooError> {
+    assert_eq!(selections.len(), deltas.len());
+    let delta_of: std::collections::HashMap<u64, &G> =
+        selections.iter().copied().zip(deltas.iter()).collect();
+    let cuckoo = CuckooTable::build_with_bins(
+        selections,
+        session.simple.num_bins(),
+        &session.params.cuckoo,
+        rng,
+    )?;
+    let simple = &session.simple;
+    let stash_depth = dpf::depth_for(session.domain_size());
+
+    let mut states = Vec::new();
+    let mut keys0 = Vec::new();
+    let mut keys1 = Vec::new();
+    let mut emit = |depth: usize, point: Option<(u64, &G)>, rng: &mut Rng| {
+        let (alpha, beta) = match point {
+            Some((a, b)) => (a, b.clone()),
+            None => (0, G::zero()),
+        };
+        let (k0, k1, st) = udpf::gen(depth, alpha, &beta, rng.gen_seed(), rng.gen_seed());
+        states.push(st);
+        keys0.push(k0);
+        keys1.push(k1);
+    };
+
+    for (j, slot) in cuckoo.bins().iter().enumerate() {
+        let depth = dpf::depth_for(simple.bin(j).len().max(2));
+        let point = slot.map(|u| {
+            let pos = simple.position(j, u).expect("alignment invariant") as u64;
+            (pos, delta_of[&u])
+        });
+        emit(depth, point, rng);
+    }
+    for t in 0..session.params.cuckoo.sigma {
+        let point = cuckoo.stash().get(t).map(|&u| {
+            (
+                session.domain_index_of(u).expect("stash element in domain"),
+                delta_of[&u],
+            )
+        });
+        emit(stash_depth, point, rng);
+    }
+
+    Ok((
+        UdpfSsaClient {
+            cuckoo,
+            states,
+            _marker: std::marker::PhantomData,
+        },
+        UdpfSsaServerKeys { keys: keys0 },
+        UdpfSsaServerKeys { keys: keys1 },
+    ))
+}
+
+impl<G: Group> UdpfSsaClient<G> {
+    /// Round `epoch ≥ 1`: produce one hint per bin/stash slot for the new
+    /// deltas (dummy bins get β = 0 hints so the message shape is
+    /// selection-independent).
+    pub fn epoch_hints(
+        &self,
+        session: &Session,
+        selections: &[u64],
+        deltas: &[G],
+        epoch: u64,
+    ) -> Vec<Hint<G>> {
+        assert_eq!(selections.len(), deltas.len());
+        let delta_of: std::collections::HashMap<u64, &G> =
+            selections.iter().copied().zip(deltas.iter()).collect();
+        let num_bins = self.cuckoo.num_bins();
+        let mut hints = Vec::with_capacity(self.states.len());
+        for (slot, st) in self.states.iter().enumerate() {
+            let beta = if slot < num_bins {
+                match self.cuckoo.bins()[slot] {
+                    Some(u) => delta_of[&u].clone(),
+                    None => G::zero(),
+                }
+            } else {
+                match self.cuckoo.stash().get(slot - num_bins) {
+                    Some(u) => delta_of[u].clone(),
+                    None => G::zero(),
+                }
+            };
+            hints.push(udpf::next_hint(st, &beta, epoch));
+        }
+        let _ = session;
+        hints
+    }
+
+    /// Total hint upload in bits for one epoch (the §6 `k·l` figure, up to
+    /// the ε padding of dummy bins).
+    pub fn hint_bits(&self) -> usize {
+        self.states.len() * G::bit_len()
+    }
+}
+
+impl<G: Group> UdpfSsaServerKeys<G> {
+    /// Apply one epoch's hints in place.
+    pub fn apply_hints(&mut self, hints: &[Hint<G>]) {
+        assert_eq!(hints.len(), self.keys.len());
+        for (k, h) in self.keys.iter_mut().zip(hints) {
+            udpf::update(k, h);
+        }
+    }
+
+    /// Evaluate + scatter this client's contribution for `epoch` into the
+    /// global share accumulator (mirrors [`super::ssa::server_aggregate_into`]).
+    pub fn aggregate_into(&self, session: &Session, epoch: u64, acc: &mut [G]) {
+        let num_bins = session.simple.num_bins();
+        assert_eq!(acc.len(), session.domain_size());
+        for (j, key) in self.keys.iter().take(num_bins).enumerate() {
+            let bin = session.simple.bin(j);
+            let evals = udpf::full_eval(key, bin.len(), epoch);
+            for (d, &idx) in bin.iter().enumerate() {
+                let pos = session.domain_index_of(idx).expect("in domain") as usize;
+                acc[pos].add_assign(&evals[d]);
+            }
+        }
+        for key in self.keys.iter().skip(num_bins) {
+            let evals = udpf::full_eval(key, acc.len(), epoch);
+            for (pos, ev) in evals.iter().enumerate() {
+                acc[pos].add_assign(ev);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::CuckooParams;
+    use crate::protocol::session::SessionParams;
+    use crate::protocol::ssa;
+
+    fn session(m: u64, k: usize) -> Session {
+        Session::new_full(SessionParams {
+            m,
+            k,
+            cuckoo: CuckooParams::default(),
+        })
+    }
+
+    #[test]
+    fn multi_epoch_fixed_submodel() {
+        let s = session(512, 16);
+        let mut rng = Rng::new(120);
+        let sel = rng.sample_distinct(16, 512);
+        let d0: Vec<u64> = (0..16).map(|i| 100 + i).collect();
+        let (client, mut sk0, mut sk1) = client_setup(&s, &sel, &d0, &mut rng).unwrap();
+
+        // Epoch 0 straight from setup.
+        let mut a0 = vec![0u64; 512];
+        let mut a1 = vec![0u64; 512];
+        sk0.aggregate_into(&s, 0, &mut a0);
+        sk1.aggregate_into(&s, 0, &mut a1);
+        let dw = ssa::reconstruct(&a0, &a1);
+        for (i, &x) in sel.iter().enumerate() {
+            assert_eq!(dw[x as usize], d0[i]);
+        }
+
+        // Epochs 1..4 via hints only.
+        for epoch in 1..4u64 {
+            let de: Vec<u64> = (0..16).map(|i| epoch * 1000 + i).collect();
+            let hints = client.epoch_hints(&s, &sel, &de, epoch);
+            assert_eq!(hints.len(), s.simple.num_bins());
+            sk0.apply_hints(&hints);
+            sk1.apply_hints(&hints);
+            let mut a0 = vec![0u64; 512];
+            let mut a1 = vec![0u64; 512];
+            sk0.aggregate_into(&s, epoch, &mut a0);
+            sk1.aggregate_into(&s, epoch, &mut a1);
+            let dw = ssa::reconstruct(&a0, &a1);
+            for x in 0..512u64 {
+                match sel.iter().position(|&sl| sl == x) {
+                    Some(i) => assert_eq!(dw[x as usize], de[i], "epoch {epoch} x {x}"),
+                    None => assert_eq!(dw[x as usize], 0, "epoch {epoch} x {x}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hint_size_is_k_l() {
+        let s = session(1 << 12, 64);
+        let mut rng = Rng::new(121);
+        let sel = rng.sample_distinct(64, 1 << 12);
+        let d: Vec<u64> = vec![1; 64];
+        let (client, _k0, _k1) = client_setup(&s, &sel, &d, &mut rng).unwrap();
+        // εk bins · l bits ≈ the paper's k·l (ε-padded).
+        assert_eq!(client.hint_bits(), s.simple.num_bins() * 64);
+    }
+
+    #[test]
+    fn hints_much_smaller_than_rekeying() {
+        let s = session(1 << 12, 64);
+        let mut rng = Rng::new(122);
+        let sel = rng.sample_distinct(64, 1 << 12);
+        let d: Vec<u64> = vec![1; 64];
+        let (client, _sk0, _sk1) = client_setup(&s, &sel, &d, &mut rng).unwrap();
+        let rekey_bits: usize = s.simple.num_bins() * (s.log_theta() * 130 + 64) + 256;
+        assert!(client.hint_bits() * 10 < rekey_bits);
+    }
+}

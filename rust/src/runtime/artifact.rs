@@ -1,0 +1,289 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes `manifest.json` next to the `*.hlo.txt` files. The
+//! vendored crate set has no serde façade, so we parse the (flat,
+//! machine-generated) JSON with a minimal tokenizer — enough for the
+//! schema we ourselves emit, rejecting anything unexpected.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one artifact.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: String,
+    /// Flat key/value metadata (ints kept as i64).
+    pub ints: BTreeMap<String, i64>,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub arg_dtypes: Vec<String>,
+}
+
+/// The parsed manifest: artifact name → metadata.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        let value = json::parse(&mut json::Lexer::new(&text))?;
+        let top = value.as_object().ok_or_else(|| anyhow!("manifest: expected object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, v) in top {
+            let obj = v
+                .as_object()
+                .ok_or_else(|| anyhow!("manifest[{name}]: expected object"))?;
+            let mut meta = ArtifactMeta::default();
+            for (k, v) in obj {
+                match (k.as_str(), v) {
+                    ("file", json::Value::Str(s)) => meta.file = s.clone(),
+                    ("kind", json::Value::Str(s)) => meta.kind = s.clone(),
+                    ("arg_shapes", json::Value::Arr(rows)) => {
+                        for row in rows {
+                            let dims = row
+                                .as_arr()
+                                .ok_or_else(|| anyhow!("arg_shapes: expected array"))?
+                                .iter()
+                                .map(|d| d.as_i64().map(|x| x as usize))
+                                .collect::<Option<Vec<_>>>()
+                                .ok_or_else(|| anyhow!("arg_shapes: expected ints"))?;
+                            meta.arg_shapes.push(dims);
+                        }
+                    }
+                    ("arg_dtypes", json::Value::Arr(items)) => {
+                        for it in items {
+                            if let json::Value::Str(s) = it {
+                                meta.arg_dtypes.push(s.clone());
+                            }
+                        }
+                    }
+                    (_, json::Value::Num(n)) => {
+                        meta.ints.insert(k.clone(), *n as i64);
+                    }
+                    (_, json::Value::Arr(_) | json::Value::Str(_)) => {} // other metadata: ignored
+                    _ => {}
+                }
+            }
+            entries.insert(name.clone(), meta);
+        }
+        Ok(ArtifactManifest { dir, entries })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let meta = self
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?;
+        Ok(self.dir.join(&meta.file))
+    }
+
+    /// Integer metadata field.
+    pub fn int(&self, name: &str, key: &str) -> Result<i64> {
+        self.entries
+            .get(name)
+            .and_then(|m| m.ints.get(key))
+            .copied()
+            .ok_or_else(|| anyhow!("manifest[{name}].{key} missing"))
+    }
+}
+
+/// Minimal JSON parser (objects / arrays / strings / numbers / null-bool),
+/// sufficient for the machine-written manifest.
+mod json {
+    use anyhow::{anyhow, Result};
+
+    #[derive(Debug, Clone)]
+    pub enum Value {
+        Obj(Vec<(String, Value)>),
+        Arr(Vec<Value>),
+        Str(String),
+        Num(f64),
+        Bool(#[allow(dead_code)] bool),
+        Null,
+    }
+
+    impl Value {
+        pub fn as_object(&self) -> Option<&[(String, Value)]> {
+            match self {
+                Value::Obj(o) => Some(o),
+                _ => None,
+            }
+        }
+        pub fn as_arr(&self) -> Option<&[Value]> {
+            match self {
+                Value::Arr(a) => Some(a),
+                _ => None,
+            }
+        }
+        pub fn as_i64(&self) -> Option<i64> {
+            match self {
+                Value::Num(n) => Some(*n as i64),
+                _ => None,
+            }
+        }
+    }
+
+    pub struct Lexer<'a> {
+        s: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Lexer<'a> {
+        pub fn new(s: &'a str) -> Self {
+            Lexer { s: s.as_bytes(), pos: 0 }
+        }
+        fn skip_ws(&mut self) {
+            while self.pos < self.s.len() && self.s[self.pos].is_ascii_whitespace() {
+                self.pos += 1;
+            }
+        }
+        fn peek(&mut self) -> Option<u8> {
+            self.skip_ws();
+            self.s.get(self.pos).copied()
+        }
+        fn bump(&mut self) -> Option<u8> {
+            let c = self.peek()?;
+            self.pos += 1;
+            Some(c)
+        }
+        fn expect(&mut self, c: u8) -> Result<()> {
+            match self.bump() {
+                Some(got) if got == c => Ok(()),
+                got => Err(anyhow!("expected {:?}, got {:?} at {}", c as char, got, self.pos)),
+            }
+        }
+        fn string(&mut self) -> Result<String> {
+            self.expect(b'"')?;
+            let mut out = String::new();
+            loop {
+                match self.s.get(self.pos).copied() {
+                    Some(b'"') => {
+                        self.pos += 1;
+                        return Ok(out);
+                    }
+                    Some(b'\\') => {
+                        self.pos += 1;
+                        match self.s.get(self.pos).copied() {
+                            Some(b'n') => out.push('\n'),
+                            Some(b't') => out.push('\t'),
+                            Some(c) => out.push(c as char),
+                            None => return Err(anyhow!("eof in escape")),
+                        }
+                        self.pos += 1;
+                    }
+                    Some(c) => {
+                        out.push(c as char);
+                        self.pos += 1;
+                    }
+                    None => return Err(anyhow!("eof in string")),
+                }
+            }
+        }
+    }
+
+    pub fn parse(lex: &mut Lexer) -> Result<Value> {
+        match lex.peek().ok_or_else(|| anyhow!("unexpected eof"))? {
+            b'{' => {
+                lex.bump();
+                let mut obj = Vec::new();
+                if lex.peek() == Some(b'}') {
+                    lex.bump();
+                    return Ok(Value::Obj(obj));
+                }
+                loop {
+                    let key = lex.string()?;
+                    lex.expect(b':')?;
+                    obj.push((key, parse(lex)?));
+                    match lex.bump() {
+                        Some(b',') => continue,
+                        Some(b'}') => return Ok(Value::Obj(obj)),
+                        c => return Err(anyhow!("bad object sep {c:?}")),
+                    }
+                }
+            }
+            b'[' => {
+                lex.bump();
+                let mut arr = Vec::new();
+                if lex.peek() == Some(b']') {
+                    lex.bump();
+                    return Ok(Value::Arr(arr));
+                }
+                loop {
+                    arr.push(parse(lex)?);
+                    match lex.bump() {
+                        Some(b',') => continue,
+                        Some(b']') => return Ok(Value::Arr(arr)),
+                        c => return Err(anyhow!("bad array sep {c:?}")),
+                    }
+                }
+            }
+            b'"' => Ok(Value::Str(lex.string()?)),
+            b't' => {
+                lex.pos += 4;
+                Ok(Value::Bool(true))
+            }
+            b'f' => {
+                lex.pos += 5;
+                Ok(Value::Bool(false))
+            }
+            b'n' => {
+                lex.pos += 4;
+                Ok(Value::Null)
+            }
+            _ => {
+                lex.skip_ws();
+                let start = lex.pos;
+                while lex
+                    .s
+                    .get(lex.pos)
+                    .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+                {
+                    lex.pos += 1;
+                }
+                let txt = std::str::from_utf8(&lex.s[start..lex.pos])?;
+                Ok(Value::Num(txt.parse()?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_manifest_shape() {
+        let dir = std::env::temp_dir().join("fsl_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"mlp_grad": {"file": "mlp_grad.hlo.txt", "kind": "train_step",
+                 "params": 1863690, "batch": 50,
+                 "arg_shapes": [[1863690], [50, 784], [50, 10]],
+                 "arg_dtypes": ["float32", "float32", "float32"],
+                 "inputs": ["flat_params", "x", "y_onehot"],
+                 "outputs": ["loss", "grad"]}}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.int("mlp_grad", "params").unwrap(), 1_863_690);
+        assert_eq!(m.entries["mlp_grad"].arg_shapes[1], vec![50, 784]);
+        assert_eq!(m.entries["mlp_grad"].kind, "train_step");
+        assert!(m.hlo_path("mlp_grad").unwrap().ends_with("mlp_grad.hlo.txt"));
+        assert!(m.hlo_path("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_manifest() {
+        assert!(ArtifactManifest::load("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! One `PjRtClient` per process; each artifact compiles once
+//! (`HloModuleProto::from_text_file` → `XlaComputation` → compile) and is
+//! then invoked from the round loop with concrete literals.
+
+use super::artifact::ArtifactManifest;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Output of one training-step invocation.
+#[derive(Debug)]
+pub struct TrainStep {
+    pub loss: f32,
+    pub grad: Vec<f32>,
+}
+
+/// The PJRT runtime: client + compiled executables, keyed by artifact
+/// name. Compilation is lazy and cached; `Executor` is `Sync` so the two
+/// server threads can share one instance.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Executor {
+    /// Create a CPU PJRT client over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Executor {
+            client,
+            manifest,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The parsed manifest.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        // Compile on first use.
+        {
+            let mut cache = self.compiled.lock().unwrap();
+            if !cache.contains_key(name) {
+                let path = self.manifest.hlo_path(name)?;
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+                cache.insert(name.to_string(), exe);
+            }
+        }
+        let cache = self.compiled.lock().unwrap();
+        let exe = cache.get(name).expect("just inserted");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        Ok(result)
+    }
+
+    /// Run a `*_grad` training-step artifact: `(flat, x, y1h) → (loss,
+    /// grad)`.
+    pub fn train_step(&self, name: &str, flat: &[f32], x: &[f32], y1h: &[f32]) -> Result<TrainStep> {
+        let meta = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} missing"))?;
+        let shapes = &meta.arg_shapes;
+        anyhow::ensure!(shapes.len() == 3, "{name}: expected 3 args");
+        anyhow::ensure!(flat.len() == shapes[0][0], "{name}: params len");
+        anyhow::ensure!(x.len() == shapes[1].iter().product::<usize>(), "{name}: x len");
+        anyhow::ensure!(y1h.len() == shapes[2].iter().product::<usize>(), "{name}: y len");
+
+        let lit_flat = xla::Literal::vec1(flat);
+        let lit_x = xla::Literal::vec1(x)
+            .reshape(&[shapes[1][0] as i64, shapes[1][1] as i64])
+            .context("reshape x")?;
+        let lit_y = xla::Literal::vec1(y1h)
+            .reshape(&[shapes[2][0] as i64, shapes[2][1] as i64])
+            .context("reshape y")?;
+
+        let out = self.run(name, &[lit_flat, lit_x, lit_y])?;
+        let (loss_lit, grad_lit) = out.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        let loss = loss_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let grad = grad_lit.to_vec::<f32>().map_err(|e| anyhow!("grad: {e:?}"))?;
+        Ok(TrainStep { loss, grad })
+    }
+
+    /// Run the `binned_ip` server artifact on one `(BINS, THETA)` slab.
+    /// Inputs are row-major u64 slabs; output is the per-bin answer.
+    pub fn binned_ip(&self, weights_slab: &[u64], share_slab: &[u64]) -> Result<Vec<u64>> {
+        let bins = self.manifest.int("binned_ip", "bins")? as i64;
+        let theta = self.manifest.int("binned_ip", "theta")? as i64;
+        let expect = (bins * theta) as usize;
+        anyhow::ensure!(weights_slab.len() == expect, "weights slab size");
+        anyhow::ensure!(share_slab.len() == expect, "share slab size");
+        let w = xla::Literal::vec1(weights_slab)
+            .reshape(&[bins, theta])
+            .context("reshape w")?;
+        let s = xla::Literal::vec1(share_slab)
+            .reshape(&[bins, theta])
+            .context("reshape s")?;
+        let out = self.run("binned_ip", &[w, s])?;
+        let ans = out.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
+        ans.to_vec::<u64>().map_err(|e| anyhow!("answers: {e:?}"))
+    }
+
+    /// Run an `*_infer` artifact: `(flat, x) → logits` (row-major,
+    /// `batch × classes`).
+    pub fn infer(&self, name: &str, flat: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} missing"))?;
+        let shapes = meta.arg_shapes.clone();
+        anyhow::ensure!(shapes.len() == 2, "{name}: expected 2 args");
+        anyhow::ensure!(flat.len() == shapes[0][0], "{name}: params len");
+        anyhow::ensure!(x.len() == shapes[1].iter().product::<usize>(), "{name}: x len");
+        let lit_flat = xla::Literal::vec1(flat);
+        let lit_x = xla::Literal::vec1(x)
+            .reshape(&[shapes[1][0] as i64, shapes[1][1] as i64])
+            .context("reshape x")?;
+        let out = self.run(name, &[lit_flat, lit_x])?;
+        let logits = out.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
+        logits.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))
+    }
+
+    /// Slab geometry of the `binned_ip` artifact: (bins, theta).
+    pub fn binned_ip_shape(&self) -> Result<(usize, usize)> {
+        Ok((
+            self.manifest.int("binned_ip", "bins")? as usize,
+            self.manifest.int("binned_ip", "theta")? as usize,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Executor tests live in rust/tests/runtime_integration.rs — they need
+    // the artifacts built by `make artifacts`.
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! request path. Python never runs here — `make artifacts` is the only
+//! python invocation in the whole system.
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactManifest, ArtifactMeta};
+pub use executor::{Executor, TrainStep};

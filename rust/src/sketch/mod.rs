@@ -1,0 +1,248 @@
+//! Malicious-secure sketching (§3.1, following Boneh et al. \[9\]).
+//!
+//! A malicious *client* can upload DPF keys whose full-domain evaluation is
+//! not a point function at all (e.g. two non-zero positions), poisoning the
+//! aggregate. The sketching check lets the two servers verify, from their
+//! additive shares `v_0, v_1` of the evaluation vector `v = v_0 + v_1`,
+//! that `v = β·e_α` for *some* `α` — touching each share once and
+//! exchanging O(1) field elements.
+//!
+//! Identity (over 𝔽_p, p = 2^61−1): sample random `r ∈ 𝔽_p^Θ`, put
+//! `z = ⟨r, v⟩` and `z* = ⟨r∘r, v⟩`. If `v = β·e_α` then
+//! `z² − β·z* = β²r_α² − β²r_α² = 0`; if `v` has ≥2 non-zeros (or the wrong
+//! β) the identity fails except with probability ≤ 2/p over `r`.
+//!
+//! The cross-term `z_0·z_1` in `z² = z_0² + 2z_0z_1 + z_1²` needs one
+//! secure multiplication between the servers. Following the paper — which
+//! *omits the sketching round from its evaluation* ("we omit the sketching
+//! check by servers") — we expose the check through an idealised
+//! [`SecureMul`] oracle (in-process Beaver triple dealt from server-shared
+//! randomness that the client never sees). Soundness and the communication
+//! account (3 field elements per verification) match \[9\]; the full
+//! extractable-DPF machinery is out of the paper's reproduced scope.
+
+use crate::crypto::field::Fp;
+use crate::crypto::rng::Rng;
+
+/// Idealised two-server secure multiplication: holds Beaver triples dealt
+/// from randomness shared by the two servers only.
+pub struct SecureMul {
+    rng: Rng,
+}
+
+impl SecureMul {
+    /// `seed` is the server-server shared randomness (unknown to clients).
+    pub fn new(seed: u64) -> Self {
+        SecureMul { rng: Rng::new(seed) }
+    }
+
+    /// Multiply secret-shared `x = x0+x1`, `y = y0+y1`, returning shares of
+    /// `x·y`. Models one Beaver-triple round (2 field elements each way).
+    pub fn mul(&mut self, x0: Fp, x1: Fp, y0: Fp, y1: Fp) -> (Fp, Fp) {
+        // Deal a triple (a, b, c=ab) as additive shares.
+        let a = Fp::random(&mut self.rng);
+        let b = Fp::random(&mut self.rng);
+        let c = a.mul(b);
+        let a0 = Fp::random(&mut self.rng);
+        let b0 = Fp::random(&mut self.rng);
+        let c0 = Fp::random(&mut self.rng);
+        let (a1, b1, c1) = (a.sub(a0), b.sub(b0), c.sub(c0));
+        // Open d = x−a, e = y−b (the values actually exchanged).
+        let d = x0.add(x1).sub(a);
+        let e = y0.add(y1).sub(b);
+        // Shares of xy = c + d·b + e·a + d·e (d·e assigned to party 0).
+        let z0 = c0.add(d.mul(b0)).add(e.mul(a0)).add(d.mul(e));
+        let z1 = c1.add(d.mul(b1)).add(e.mul(a1));
+        (z0, z1)
+    }
+}
+
+/// One server's sketch of its share vector: `z_b = ⟨r, v_b⟩`,
+/// `z*_b = ⟨r∘r, v_b⟩`.
+#[derive(Clone, Copy, Debug)]
+pub struct Sketch {
+    pub z: Fp,
+    pub zs: Fp,
+}
+
+/// Compute one server's sketch of its evaluation-vector share under the
+/// coins `r` (sampled *after* the keys are fixed). Shares must live in
+/// 𝔽_p — verified keys carry their payload over [`Fp`] (the paper's 𝔾 is
+/// generic; sketching needs the field's multiplicative structure, exactly
+/// as in Boneh et al. \[9\]).
+pub fn sketch_share(share: &[Fp], r: &[Fp]) -> Sketch {
+    assert_eq!(share.len(), r.len());
+    let mut z = Fp::zero();
+    let mut zs = Fp::zero();
+    for (x, ri) in share.iter().zip(r) {
+        z = z.add(ri.mul(*x));
+        zs = zs.add(ri.mul(*ri).mul(*x));
+    }
+    Sketch { z, zs }
+}
+
+/// Sample the per-verification public coins.
+pub fn sample_coins(rng: &mut Rng, theta: usize) -> Vec<Fp> {
+    (0..theta).map(|_| Fp::random(rng)).collect()
+}
+
+/// Joint verification that `v_0 + v_1 = β·e_α` for some α, given each
+/// server's sketch and a claimed payload β (β=1 for PSR bins; for SSA the
+/// servers check the *unit-vector times secret β* variant by verifying
+/// `z²  = z*·(z₊)` with β recovered obliviously — here we take the public-β
+/// form used for PSR and the β-agnostic form `z·z − z*·β̂ = 0` with β̂
+/// reconstructed from a second random projection for SSA).
+pub fn verify(mul: &mut SecureMul, s0: Sketch, s1: Sketch, beta: Fp) -> bool {
+    // Shares of z² via one secure multiplication.
+    let (q0, q1) = mul.mul(s0.z, s1.z, s0.z, s1.z);
+    // Shares of z² − β·z*.
+    let d0 = q0.sub(beta.mul(s0.zs));
+    let d1 = q1.sub(beta.mul(s1.zs));
+    // Servers open the (blinded-zero) difference.
+    d0.add(d1) == Fp::zero()
+}
+
+/// β-agnostic verification for SSA payloads: checks `z² = z*·β` where β is
+/// itself reconstructed from the shares' third projection `⟨1, v⟩ = β`.
+/// Requires only that the vector be `β·e_α` for *some* (α, β).
+pub fn verify_unknown_beta(
+    mul: &mut SecureMul,
+    share0: &[Fp],
+    share1: &[Fp],
+    r: &[Fp],
+) -> bool {
+    let s0 = sketch_share(share0, r);
+    let s1 = sketch_share(share1, r);
+    // β shares via the all-ones projection.
+    let b0 = share0.iter().fold(Fp::zero(), |acc, v| acc.add(*v));
+    let b1 = share1.iter().fold(Fp::zero(), |acc, v| acc.add(*v));
+    let (q0, q1) = mul.mul(s0.z, s1.z, s0.z, s1.z); // z²
+    let (p0, p1) = mul.mul(b0, b1, s0.zs, s1.zs); // β·z*
+    q0.sub(p0).add(q1.sub(p1)) == Fp::zero()
+}
+
+/// Verify every bin of one client's SSA upload (𝔽_p payloads): the two
+/// servers full-domain-evaluate each bin, sketch their shares under fresh
+/// public coins, and run the β-agnostic degree-2 check. Returns `false`
+/// if ANY bin fails — the §2.2 malicious-client functionality: a client
+/// whose vote predicate rejects is excluded from the aggregate.
+pub fn verify_client_bins(
+    session: &crate::protocol::Session,
+    keys0: &[crate::dpf::DpfKey<Fp>],
+    keys1: &[crate::dpf::DpfKey<Fp>],
+    rng: &mut Rng,
+    mul: &mut SecureMul,
+) -> bool {
+    assert_eq!(keys0.len(), keys1.len());
+    let num_bins = session.simple.num_bins();
+    for (j, (k0, k1)) in keys0.iter().zip(keys1).enumerate() {
+        let theta = if j < num_bins {
+            session.simple.bin(j).len().max(1)
+        } else {
+            session.domain_size()
+        };
+        let v0 = crate::dpf::full_eval(k0, theta);
+        let v1 = crate::dpf::full_eval(k1, theta);
+        let r = sample_coins(rng, theta);
+        if !verify_unknown_beta(mul, &v0, &v1, &r) {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpf::{full_eval, Dpf};
+
+    fn shares_for(alpha: u64, beta: u64, theta: usize, seed: u64) -> (Vec<Fp>, Vec<Fp>) {
+        let mut rng = Rng::new(seed);
+        let depth = crate::dpf::depth_for(theta);
+        let (k0, k1) =
+            Dpf::<Fp>::gen(depth, alpha, &Fp::new(beta), rng.gen_seed(), rng.gen_seed());
+        (full_eval(&k0, theta), full_eval(&k1, theta))
+    }
+
+    #[test]
+    fn secure_mul_is_correct() {
+        let mut mul = SecureMul::new(77);
+        let mut rng = Rng::new(78);
+        for _ in 0..50 {
+            let x = Fp::random(&mut rng);
+            let y = Fp::random(&mut rng);
+            let x0 = Fp::random(&mut rng);
+            let y0 = Fp::random(&mut rng);
+            let (z0, z1) = mul.mul(x0, x.sub(x0), y0, y.sub(y0));
+            assert_eq!(z0.add(z1), x.mul(y));
+        }
+    }
+
+    #[test]
+    fn honest_unit_vector_passes() {
+        let (v0, v1) = shares_for(13, 1, 100, 40);
+        let mut rng = Rng::new(41);
+        let r = sample_coins(&mut rng, 100);
+        let mut mul = SecureMul::new(42);
+        assert!(verify(
+            &mut mul,
+            sketch_share(&v0, &r),
+            sketch_share(&v1, &r),
+            Fp::one()
+        ));
+    }
+
+    #[test]
+    fn honest_scaled_vector_passes_unknown_beta() {
+        let (v0, v1) = shares_for(7, 123_456, 64, 43);
+        let mut rng = Rng::new(44);
+        let r = sample_coins(&mut rng, 64);
+        let mut mul = SecureMul::new(45);
+        assert!(verify_unknown_beta(&mut mul, &v0, &v1, &r));
+    }
+
+    #[test]
+    fn two_nonzero_positions_fail() {
+        // Adversarial client: sum of two point functions — v has two
+        // non-zeros; the degree-2 identity must catch it.
+        let (a0, a1) = shares_for(3, 1, 64, 46);
+        let (b0, b1) = shares_for(9, 1, 64, 47);
+        let v0: Vec<Fp> = a0.iter().zip(&b0).map(|(x, y)| x.add(*y)).collect();
+        let v1: Vec<Fp> = a1.iter().zip(&b1).map(|(x, y)| x.add(*y)).collect();
+        let mut rng = Rng::new(48);
+        let r = sample_coins(&mut rng, 64);
+        let mut mul = SecureMul::new(49);
+        assert!(!verify(
+            &mut mul,
+            sketch_share(&v0, &r),
+            sketch_share(&v1, &r),
+            Fp::one()
+        ));
+        assert!(!verify_unknown_beta(&mut mul, &v0, &v1, &r));
+    }
+
+    #[test]
+    fn wrong_beta_fails() {
+        let (v0, v1) = shares_for(5, 2, 64, 50);
+        let mut rng = Rng::new(51);
+        let r = sample_coins(&mut rng, 64);
+        let mut mul = SecureMul::new(52);
+        // Claimed β=1 but actual payload is 2.
+        assert!(!verify(
+            &mut mul,
+            sketch_share(&v0, &r),
+            sketch_share(&v1, &r),
+            Fp::one()
+        ));
+    }
+
+    #[test]
+    fn zero_vector_passes() {
+        // Dummy bins (β = 0) are legitimate point functions.
+        let (v0, v1) = shares_for(0, 0, 64, 53);
+        let mut rng = Rng::new(54);
+        let r = sample_coins(&mut rng, 64);
+        let mut mul = SecureMul::new(55);
+        assert!(verify_unknown_beta(&mut mul, &v0, &v1, &r));
+    }
+}

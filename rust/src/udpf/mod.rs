@@ -1,0 +1,262 @@
+//! Updatable DPF (§5) — the fixed-submodel optimisation.
+//!
+//! A U-DPF lets a client move its keys from `f_{α,β}` to `f_{α,β'}` by
+//! sending each server a *hint* of only `⌈log 𝔾⌉` bits, instead of fresh
+//! `depth·(λ+2)+λ+⌈log 𝔾⌉`-bit keys. The construction swaps the BGI16
+//! leaf `Convert(s)` for a random-oracle hash `H(s, e)` keyed by the epoch
+//! `e`, so the final correction word can be recomputed (and *only* it
+//! changes) per epoch:
+//!
+//! `CW^{(n+1)}_e ← (−1)^{t_1} · (β_e − H(s_0, e) + H(s_1, e))`.
+//!
+//! Replaying an old `CW^{(n+1)}` against a new epoch yields garbage, and
+//! each epoch's leaf masks `H(s_b, e)` are fresh, which is exactly why the
+//! plain DPF's `Convert` (epoch-independent) fails the §5 security game.
+
+use crate::crypto::prg::{expand_one, Seed};
+use crate::dpf::{gen as dpf_gen, DpfKey};
+use crate::group::Group;
+use sha2::{Digest, Sha256};
+
+/// Random oracle `H : {0,1}^λ × ℕ → 𝔾` (SHA-256 → seed → `Convert`).
+pub fn ro_hash<G: Group>(seed: &Seed, epoch: u64) -> G {
+    let mut h = Sha256::new();
+    h.update(b"fsl-udpf-ro");
+    h.update(seed);
+    h.update(epoch.to_le_bytes());
+    let digest = h.finalize();
+    let mut s = [0u8; 16];
+    s.copy_from_slice(&digest[..16]);
+    G::convert(&s)
+}
+
+/// One party's updatable DPF key: a standard key whose output correction
+/// word is interpreted against the epoch-keyed oracle.
+#[derive(Clone, Debug)]
+pub struct UdpfKey<G: Group> {
+    pub inner: DpfKey<G>,
+}
+
+/// Client-side state retained across epochs: the two final seeds and the
+/// final control bit of party 1 (needed to aim the next hint).
+#[derive(Clone, Debug)]
+pub struct UdpfClientState {
+    pub leaf_seed0: Seed,
+    pub leaf_seed1: Seed,
+    pub t1: bool,
+}
+
+/// The per-epoch update hint — `⌈log 𝔾⌉` bits on the wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hint<G: Group> {
+    pub epoch: u64,
+    pub cw_out: G,
+}
+
+impl<G: Group> Hint<G> {
+    /// Wire size in bits (the `k·l` per-round cost of §6's U-DPF row).
+    pub fn size_bits(&self) -> usize {
+        G::bit_len()
+    }
+}
+
+/// `Gen(1^λ, α, β)` for epoch 0. Returns both keys plus the client state
+/// used by [`next_hint`].
+pub fn gen<G: Group>(
+    depth: usize,
+    alpha: u64,
+    beta: &G,
+    s0: Seed,
+    s1: Seed,
+) -> (UdpfKey<G>, UdpfKey<G>, UdpfClientState) {
+    // Reuse the DPF tree walk, then recompute the final CW against H(·, 0).
+    let (mut k0, mut k1) = dpf_gen::<G>(depth, alpha, beta, s0, s1);
+    let state = walk_to_leaf_state(&k0, &k1, alpha);
+    let cw = beta
+        .sub(&ro_hash::<G>(&state.leaf_seed0, 0))
+        .add(&ro_hash::<G>(&state.leaf_seed1, 0))
+        .cneg(state.t1);
+    k0.cw_out = cw.clone();
+    k1.cw_out = cw;
+    (UdpfKey { inner: k0 }, UdpfKey { inner: k1 }, state)
+}
+
+fn walk_to_leaf_state<G: Group>(k0: &DpfKey<G>, k1: &DpfKey<G>, alpha: u64) -> UdpfClientState {
+    // The client knows both keys; replay the two walks along α to recover
+    // the final seeds/control bits (identical to what Gen computed).
+    let walk = |k: &DpfKey<G>| {
+        let mut s = k.root_seed;
+        let mut t = k.party == 1;
+        for level in 0..k.depth {
+            let bit = (alpha >> (k.depth - 1 - level)) & 1 == 1;
+            let child = expand_one(&s, bit);
+            let cw = &k.cws[level];
+            s = child.seed;
+            let mut ct = child.t;
+            if t {
+                for i in 0..16 {
+                    s[i] ^= cw.seed[i];
+                }
+                ct ^= if bit { cw.t_right } else { cw.t_left };
+            }
+            t = ct;
+        }
+        (s, t)
+    };
+    let (s0, _t0) = walk(k0);
+    let (s1, t1) = walk(k1);
+    UdpfClientState {
+        leaf_seed0: s0,
+        leaf_seed1: s1,
+        t1,
+    }
+}
+
+/// `Next(k_0, k_1, β', e)` — client computes the epoch-`e` hint.
+pub fn next_hint<G: Group>(state: &UdpfClientState, beta: &G, epoch: u64) -> Hint<G> {
+    Hint {
+        epoch,
+        cw_out: beta
+            .sub(&ro_hash::<G>(&state.leaf_seed0, epoch))
+            .add(&ro_hash::<G>(&state.leaf_seed1, epoch))
+            .cneg(state.t1),
+    }
+}
+
+/// `Update(k_b, hint, e)` — server swaps in the new output CW.
+pub fn update<G: Group>(key: &mut UdpfKey<G>, hint: &Hint<G>) {
+    key.inner.cw_out = hint.cw_out.clone();
+}
+
+/// `Eval(b, k_b, x, e)` — as DPF eval but with the epoch-keyed leaf hash.
+pub fn eval<G: Group>(key: &UdpfKey<G>, x: u64, epoch: u64) -> G {
+    let k = &key.inner;
+    let mut s = k.root_seed;
+    let mut t = k.party == 1;
+    for level in 0..k.depth {
+        let bit = (x >> (k.depth - 1 - level)) & 1 == 1;
+        let child = expand_one(&s, bit);
+        let cw = &k.cws[level];
+        s = child.seed;
+        let mut ct = child.t;
+        if t {
+            for i in 0..16 {
+                s[i] ^= cw.seed[i];
+            }
+            ct ^= if bit { cw.t_right } else { cw.t_left };
+        }
+        t = ct;
+    }
+    let mut v = ro_hash::<G>(&s, epoch);
+    if t {
+        v.add_assign(&k.cw_out);
+    }
+    v.cneg(k.party == 1)
+}
+
+/// Full-domain evaluation for epoch `e` (server-side SSA path).
+pub fn full_eval<G: Group>(key: &UdpfKey<G>, num_points: usize, epoch: u64) -> Vec<G> {
+    use crate::crypto::prg::double;
+    let k = &key.inner;
+    let mut frontier: Vec<(Seed, bool)> = vec![(k.root_seed, k.party == 1)];
+    for level in 0..k.depth {
+        let cw = &k.cws[level];
+        let span = 1usize << (k.depth - level - 1);
+        let needed = num_points.div_ceil(span).max(1);
+        let mut next = Vec::with_capacity((frontier.len() * 2).min(needed + 1));
+        'outer: for (s, t) in &frontier {
+            let (l, r) = double(s);
+            for (bit, child) in [(false, l), (true, r)] {
+                if next.len() >= needed {
+                    break 'outer;
+                }
+                let mut cs = child.seed;
+                let mut ct = child.t;
+                if *t {
+                    for i in 0..16 {
+                        cs[i] ^= cw.seed[i];
+                    }
+                    ct ^= if bit { cw.t_right } else { cw.t_left };
+                }
+                next.push((cs, ct));
+            }
+        }
+        frontier = next;
+    }
+    frontier
+        .iter()
+        .take(num_points)
+        .map(|(s, t)| {
+            let mut v = ro_hash::<G>(s, epoch);
+            if *t {
+                v.add_assign(&k.cw_out);
+            }
+            v.cneg(k.party == 1)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+
+    #[test]
+    fn epoch0_correctness() {
+        let mut rng = Rng::new(30);
+        let beta = 4242u64;
+        let (k0, k1, _st) = gen(8, 55, &beta, rng.gen_seed(), rng.gen_seed());
+        for x in 0..256u64 {
+            let sum = eval(&k0, x, 0).add(&eval(&k1, x, 0));
+            assert_eq!(sum, if x == 55 { beta } else { 0 });
+        }
+    }
+
+    #[test]
+    fn update_moves_beta_keeps_alpha() {
+        let mut rng = Rng::new(31);
+        let (mut k0, mut k1, st) = gen(8, 99, &7u64, rng.gen_seed(), rng.gen_seed());
+        for epoch in 1..6u64 {
+            let beta_e = 1000 + epoch;
+            let hint = next_hint(&st, &beta_e, epoch);
+            assert_eq!(hint.size_bits(), 64);
+            update(&mut k0, &hint);
+            update(&mut k1, &hint);
+            for x in [0u64, 98, 99, 100, 255] {
+                let sum = eval(&k0, x, epoch).add(&eval(&k1, x, epoch));
+                assert_eq!(sum, if x == 99 { beta_e } else { 0 }, "epoch {epoch} x {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn stale_cw_with_new_epoch_is_garbage() {
+        // Evaluating epoch 1 against the epoch-0 CW must NOT reconstruct β
+        // at α (this is the property the plain-Convert construction lacks).
+        let mut rng = Rng::new(32);
+        let (k0, k1, _st) = gen(8, 10, &5u64, rng.gen_seed(), rng.gen_seed());
+        let sum = eval(&k0, 10, 1).add(&eval(&k1, 10, 1));
+        assert_ne!(sum, 5);
+        // Off-path points still cancel (their leaves agree bit-for-bit).
+        assert_eq!(eval(&k0, 11, 1).add(&eval(&k1, 11, 1)), 0);
+    }
+
+    #[test]
+    fn full_eval_matches_pointwise() {
+        let mut rng = Rng::new(33);
+        let (mut k0, _k1, st) = gen(9, 300, &1u64, rng.gen_seed(), rng.gen_seed());
+        let hint = next_hint(&st, &77u64, 3);
+        update(&mut k0, &hint);
+        let fe = full_eval(&k0, 400, 3);
+        for x in [0u64, 150, 300, 399] {
+            assert_eq!(fe[x as usize], eval(&k0, x, 3));
+        }
+    }
+
+    #[test]
+    fn hints_differ_across_epochs() {
+        let mut rng = Rng::new(34);
+        let (_k0, _k1, st) = gen(8, 4, &9u64, rng.gen_seed(), rng.gen_seed());
+        assert_ne!(next_hint(&st, &9u64, 1), next_hint(&st, &9u64, 2));
+    }
+}

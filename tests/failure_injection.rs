@@ -1,0 +1,120 @@
+//! Failure injection: malicious clients, malformed messages, silent
+//! parties.
+
+use fsl::crypto::field::Fp;
+use fsl::crypto::rng::Rng;
+use fsl::dpf::{full_eval, gen};
+use fsl::net;
+use fsl::protocol::msg;
+use fsl::sketch;
+use std::time::Duration;
+
+#[test]
+fn sketch_rejects_double_vote() {
+    // Malicious client sums two DPF key pairs (votes twice in one bin):
+    // the servers' sketching check must reject w.h.p.
+    let mut rng = Rng::new(700);
+    let depth = 7;
+    let theta = 100;
+    let mut v0 = vec![Fp::zero(); theta];
+    let mut v1 = vec![Fp::zero(); theta];
+    for alpha in [3u64, 77] {
+        let (k0, k1) = gen::<Fp>(depth, alpha, &Fp::one(), rng.gen_seed(), rng.gen_seed());
+        for (acc, v) in v0.iter_mut().zip(full_eval(&k0, theta)) {
+            *acc = Fp::add(*acc, v);
+        }
+        for (acc, v) in v1.iter_mut().zip(full_eval(&k1, theta)) {
+            *acc = Fp::add(*acc, v);
+        }
+    }
+    let r = sketch::sample_coins(&mut rng, theta);
+    let mut mul = sketch::SecureMul::new(701);
+    assert!(!sketch::verify_unknown_beta(&mut mul, &v0, &v1, &r));
+}
+
+#[test]
+fn sketch_accepts_every_honest_bin_of_a_real_query() {
+    // End-to-end: sketch every bin of an honest client's SSA upload.
+    use fsl::hashing::CuckooParams;
+    use fsl::protocol::{ssa, Session, SessionParams};
+    let session = Session::new_full(SessionParams {
+        m: 1 << 10,
+        k: 16,
+        cuckoo: CuckooParams::default(),
+    });
+    let mut rng = Rng::new(702);
+    let sel = rng.sample_distinct(16, 1 << 10);
+    let dl: Vec<Fp> = sel.iter().map(|&x| Fp::new(x + 1)).collect();
+    let batch = ssa::client_update(&session, &sel, &dl, &mut rng).unwrap();
+    let keys0 = batch.server_keys(0);
+    let keys1 = batch.server_keys(1);
+    let mut mul = sketch::SecureMul::new(703);
+    for (j, (k0, k1)) in keys0.iter().zip(&keys1).enumerate() {
+        let theta = session.simple.bin(j).len().max(1);
+        let v0 = full_eval(k0, theta);
+        let v1 = full_eval(k1, theta);
+        let r = sketch::sample_coins(&mut rng, theta);
+        assert!(
+            sketch::verify_unknown_beta(&mut mul, &v0, &v1, &r),
+            "honest bin {j} rejected"
+        );
+    }
+}
+
+#[test]
+fn malformed_uploads_are_rejected_not_crashing() {
+    // Every decoder must return None on garbage, never panic.
+    let mut rng = Rng::new(704);
+    for len in [0usize, 1, 4, 17, 100] {
+        let garbage: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = msg::decode_key_upload::<u64>(&garbage);
+        let _ = msg::decode_shares::<u128>(&garbage);
+        let _ = msg::decode_indices(&garbage);
+    }
+    // Truncations of a valid message.
+    use fsl::dpf::{gen_batch_with_master, BinPoint};
+    let bins: Vec<BinPoint<u64>> = vec![BinPoint { depth: 9, point: Some((3, 5)) }];
+    let batch = gen_batch_with_master(&bins, [1; 16], [2; 16]);
+    let valid = msg::encode_key_upload(&batch, 0, true);
+    for cut in [1, 10, 20, valid.len() - 1] {
+        assert!(
+            msg::decode_key_upload::<u64>(&valid[..cut]).is_none(),
+            "truncation at {cut} accepted"
+        );
+    }
+}
+
+#[test]
+fn silent_server_times_out() {
+    let (a, _b) = net::pair(Duration::ZERO);
+    let t0 = std::time::Instant::now();
+    let res = a.recv_timeout(Duration::from_millis(50));
+    assert!(res.is_err());
+    assert!(t0.elapsed() >= Duration::from_millis(45));
+}
+
+#[test]
+fn dropped_channel_is_an_error_not_a_hang() {
+    let (a, b) = net::pair(Duration::ZERO);
+    drop(b);
+    assert!(a.send(vec![1, 2, 3]).is_err());
+    assert!(a.recv().is_err());
+}
+
+#[test]
+fn wrong_beta_claim_rejected() {
+    // A client claiming β=1 in PSR but embedding β=2 is caught by the
+    // public-β sketch (vote manipulation, §2.2 malicious-client model).
+    let mut rng = Rng::new(705);
+    let (k0, k1) = gen::<Fp>(6, 9, &Fp::new(2), rng.gen_seed(), rng.gen_seed());
+    let v0 = full_eval(&k0, 64);
+    let v1 = full_eval(&k1, 64);
+    let r = sketch::sample_coins(&mut rng, 64);
+    let s0 = sketch::sketch_share(&v0, &r);
+    let s1 = sketch::sketch_share(&v1, &r);
+    let mut mul = sketch::SecureMul::new(706);
+    assert!(!sketch::verify(&mut mul, s0, s1, Fp::one()));
+    // With the true β it verifies — the key itself is well-formed.
+    let mut mul2 = sketch::SecureMul::new(707);
+    assert!(sketch::verify(&mut mul2, s0, s1, Fp::new(2)));
+}

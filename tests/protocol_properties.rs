@@ -1,0 +1,196 @@
+//! Property-style randomized sweeps over the protocol invariants.
+//!
+//! No proptest crate is available offline, so these are seed-swept
+//! properties: each test draws many random configurations (η, ε, σ, m, k,
+//! payload group) and asserts the protocol invariants hold for all of
+//! them. Failures print the offending seed for reproduction.
+
+use fsl::crypto::rng::Rng;
+use fsl::group::{Group, MegaElem};
+use fsl::hashing::{CuckooParams, CuckooTable};
+use fsl::protocol::{mega, psr, psu, ssa, Session, SessionParams};
+
+fn random_params(rng: &mut Rng) -> CuckooParams {
+    CuckooParams {
+        epsilon: 1.2 + rng.gen_f64() * 0.4,
+        eta: 2 + rng.gen_range(3) as usize, // 2..=4
+        sigma: if rng.gen_f64() < 0.3 { 4 } else { 0 },
+        hash_seed: rng.next_u64(),
+        max_kicks: 500,
+    }
+}
+
+#[test]
+fn prop_psr_always_correct() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let m = 256 + rng.gen_range(4096);
+        let k = (1 + rng.gen_range(64)) as usize;
+        let k = k.min(m as usize / 4).max(1);
+        let session = Session::new_full(SessionParams {
+            m,
+            k,
+            cuckoo: random_params(&mut rng),
+        });
+        let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+        let sel = rng.sample_distinct(k, m);
+        let Ok((ctx, batch)) = psr::client_query::<u64>(&session, &sel, &mut rng) else {
+            continue; // rare cuckoo failure with tight random ε — skip
+        };
+        let a0 = psr::server_answer(&session, &weights, &batch.server_keys(0));
+        let a1 = psr::server_answer(&session, &weights, &batch.server_keys(1));
+        let got = psr::client_reconstruct(&ctx, session.simple.num_bins(), &sel, &a0, &a1);
+        for (i, &s) in sel.iter().enumerate() {
+            assert_eq!(got[i], weights[s as usize], "seed {seed} sel {s}");
+        }
+    }
+}
+
+#[test]
+fn prop_ssa_sums_match_plaintext() {
+    for seed in 100..130u64 {
+        let mut rng = Rng::new(seed);
+        let m = 128 + rng.gen_range(2048);
+        let k = ((1 + rng.gen_range(32)) as usize).min(m as usize / 4).max(1);
+        let session = Session::new_full(SessionParams {
+            m,
+            k,
+            cuckoo: random_params(&mut rng),
+        });
+        let n = 1 + rng.gen_range(5) as usize;
+        let mut expected = vec![0u64; m as usize];
+        let mut keys0 = Vec::new();
+        let mut keys1 = Vec::new();
+        let mut ok = true;
+        for _ in 0..n {
+            let sel = rng.sample_distinct(k, m);
+            let dl: Vec<u64> = sel.iter().map(|_| rng.next_u64()).collect();
+            match ssa::client_update(&session, &sel, &dl, &mut rng) {
+                Ok(batch) => {
+                    for (&i, &d) in sel.iter().zip(&dl) {
+                        expected[i as usize] = expected[i as usize].wrapping_add(d);
+                    }
+                    keys0.push(batch.server_keys(0));
+                    keys1.push(batch.server_keys(1));
+                }
+                Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        let dw = ssa::reconstruct(
+            &ssa::server_aggregate(&session, &keys0),
+            &ssa::server_aggregate(&session, &keys1),
+        );
+        assert_eq!(dw, expected, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_ssa_mega_elements() {
+    for seed in 200..215u64 {
+        let mut rng = Rng::new(seed);
+        let rows = 64 + rng.gen_range(512);
+        let k = ((1 + rng.gen_range(16)) as usize).min(rows as usize / 4).max(1);
+        let session = Session::new_full(SessionParams {
+            m: rows,
+            k,
+            cuckoo: CuckooParams::default().with_seed(seed),
+        });
+        let sel = rng.sample_distinct(k, rows);
+        let dl: Vec<MegaElem<6>> = sel
+            .iter()
+            .map(|_| {
+                let mut e = [0u64; 6];
+                for v in &mut e {
+                    *v = rng.next_u64();
+                }
+                MegaElem(e)
+            })
+            .collect();
+        let batch = ssa::client_update(&session, &sel, &dl, &mut rng).unwrap();
+        let dw = ssa::reconstruct(
+            &ssa::server_aggregate(&session, &[batch.server_keys(0)]),
+            &ssa::server_aggregate(&session, &[batch.server_keys(1)]),
+        );
+        for (pos, val) in dw.iter().enumerate() {
+            match sel.iter().position(|&s| s == pos as u64) {
+                Some(i) => assert_eq!(*val, dl[i], "seed {seed}"),
+                None => assert_eq!(*val, MegaElem::zero(), "seed {seed}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mega_group_roundtrip() {
+    for seed in 300..340u64 {
+        let mut rng = Rng::new(seed);
+        let m = 1 + rng.gen_range(500) as usize;
+        let w: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+        let g = mega::group_weights::<7>(&w);
+        assert_eq!(mega::ungroup_weights(&g, m), w, "seed {seed} m {m}");
+    }
+}
+
+#[test]
+fn prop_psu_equals_set_union() {
+    for seed in 400..420u64 {
+        let mut rng = Rng::new(seed);
+        let m = 512 + rng.gen_range(8192);
+        let k = (4 + rng.gen_range(32)) as usize;
+        let n = 2 + rng.gen_range(6) as usize;
+        let key = rng.gen_seed();
+        let sets: Vec<Vec<u64>> = (0..n)
+            .map(|_| {
+                let take = 1 + rng.gen_range(k as u64 - 1) as usize;
+                rng.sample_distinct(take, m)
+            })
+            .collect();
+        let mut expected: Vec<u64> = sets.iter().flatten().copied().collect();
+        expected.sort_unstable();
+        expected.dedup();
+        assert_eq!(psu::run_psu(&key, m, k, &sets, &mut rng), expected, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_cuckoo_locate_total() {
+    // Every inserted element is locatable; every absent element is not.
+    for seed in 500..540u64 {
+        let mut rng = Rng::new(seed);
+        let k = 1 + rng.gen_range(300) as usize;
+        let m = (k as u64) * 8;
+        let params = random_params(&mut rng);
+        let elements = rng.sample_distinct(k, m);
+        let Ok(table) = CuckooTable::build(&elements, &params, &mut rng) else {
+            continue;
+        };
+        for &e in &elements {
+            assert!(table.locate(e).is_some(), "seed {seed} lost {e}");
+        }
+        for probe in 0..20 {
+            let x = m + probe; // guaranteed absent
+            assert!(table.locate(x).is_none(), "seed {seed} ghost {x}");
+        }
+    }
+}
+
+#[test]
+fn prop_dpf_key_sizes_follow_formula() {
+    use fsl::dpf::{gen, DpfKey};
+    for seed in 600..640u64 {
+        let mut rng = Rng::new(seed);
+        let depth = 1 + rng.gen_range(16) as usize;
+        let alpha = rng.gen_range(1 << depth);
+        let (k0, _k1) = gen::<u128>(depth, alpha, &7u128, rng.gen_seed(), rng.gen_seed());
+        assert_eq!(k0.size_bits(), depth * 130 + 128 + 128, "seed {seed}");
+        let bytes = k0.to_bytes();
+        let parsed = DpfKey::<u128>::from_bytes(&bytes).unwrap();
+        assert_eq!(parsed.to_bytes(), bytes);
+    }
+}

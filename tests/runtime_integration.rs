@@ -1,0 +1,123 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run (the Makefile test target
+//! guarantees it). They verify the rust↔HLO boundary: shapes, dtypes,
+//! numeric agreement with the rust-side ring arithmetic, and gradient
+//! sanity.
+
+use fsl::crypto::rng::Rng;
+use fsl::runtime::Executor;
+
+fn executor() -> Executor {
+    Executor::new("artifacts").expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    let exec = executor();
+    for name in ["mlp_grad", "embbag_grad", "mlp_infer", "embbag_infer", "binned_ip"] {
+        assert!(
+            exec.manifest().entries.contains_key(name),
+            "missing artifact {name}"
+        );
+        assert!(exec.manifest().hlo_path(name).unwrap().exists());
+    }
+    assert_eq!(exec.manifest().int("mlp_grad", "params").unwrap(), 1_863_690);
+    assert_eq!(exec.manifest().int("embbag_grad", "params").unwrap(), 150_214);
+}
+
+#[test]
+fn binned_ip_matches_rust_ring_arithmetic() {
+    // The L1 Pallas kernel (via HLO) must be bit-identical to the rust u64
+    // wrapping inner product — this is the cross-language contract the PSR
+    // server path relies on.
+    let exec = executor();
+    let (bins, theta) = exec.binned_ip_shape().unwrap();
+    let mut rng = Rng::new(160);
+    let w: Vec<u64> = (0..bins * theta).map(|_| rng.next_u64()).collect();
+    let s: Vec<u64> = (0..bins * theta).map(|_| rng.next_u64()).collect();
+    let got = exec.binned_ip(&w, &s).unwrap();
+    assert_eq!(got.len(), bins);
+    for j in 0..bins {
+        let mut want = 0u64;
+        for d in 0..theta {
+            want = want.wrapping_add(w[j * theta + d].wrapping_mul(s[j * theta + d]));
+        }
+        assert_eq!(got[j], want, "bin {j}");
+    }
+}
+
+#[test]
+fn mlp_train_step_gradient_descends() {
+    let exec = executor();
+    let m = exec.manifest().int("mlp_grad", "params").unwrap() as usize;
+    let batch = exec.manifest().int("mlp_grad", "batch").unwrap() as usize;
+    let mut rng = Rng::new(161);
+    let params: Vec<f32> = (0..m).map(|_| rng.gen_normal() as f32 * 0.02).collect();
+    let x: Vec<f32> = (0..batch * 784).map(|_| rng.gen_f64() as f32).collect();
+    let mut y = vec![0f32; batch * 10];
+    for r in 0..batch {
+        y[r * 10 + r % 10] = 1.0;
+    }
+    let s0 = exec.train_step("mlp_grad", &params, &x, &y).unwrap();
+    assert!(s0.loss.is_finite() && s0.loss > 0.0);
+    assert_eq!(s0.grad.len(), m);
+    // One SGD step must reduce the loss on the same batch.
+    let stepped: Vec<f32> = params
+        .iter()
+        .zip(&s0.grad)
+        .map(|(p, g)| p - 0.1 * g)
+        .collect();
+    let s1 = exec.train_step("mlp_grad", &stepped, &x, &y).unwrap();
+    assert!(s1.loss < s0.loss, "{} !< {}", s1.loss, s0.loss);
+}
+
+#[test]
+fn infer_matches_grad_loss_direction() {
+    // Softmax CE consistency: training on a single repeated batch drives
+    // the infer logits toward the labels.
+    let exec = executor();
+    let m = exec.manifest().int("embbag_grad", "params").unwrap() as usize;
+    let batch = exec.manifest().int("embbag_grad", "batch").unwrap() as usize;
+    let vocab = exec.manifest().int("embbag_grad", "vocab").unwrap() as usize;
+    let mut rng = Rng::new(162);
+    let mut params: Vec<f32> = (0..m).map(|_| rng.gen_normal() as f32 * 0.05).collect();
+    let mut bow = vec![0f32; batch * vocab];
+    let mut y = vec![0f32; batch * 6];
+    for r in 0..batch {
+        let class = r % 6;
+        for w in 0..8 {
+            bow[r * vocab + class * 100 + w] = 1.0;
+        }
+        y[r * 6 + class] = 1.0;
+    }
+    for _ in 0..10 {
+        let st = exec.train_step("embbag_grad", &params, &bow, &y).unwrap();
+        for (p, g) in params.iter_mut().zip(&st.grad) {
+            *p -= 0.5 * g;
+        }
+    }
+    let logits = exec.infer("embbag_infer", &params, &bow).unwrap();
+    let mut correct = 0;
+    for r in 0..batch {
+        let rl = &logits[r * 6..(r + 1) * 6];
+        let pred = rl
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        correct += usize::from(pred == r % 6);
+    }
+    assert!(correct * 2 > batch, "only {correct}/{batch} learned");
+}
+
+#[test]
+fn executor_rejects_bad_shapes() {
+    let exec = executor();
+    let err = exec.train_step("mlp_grad", &[0.0; 10], &[0.0; 10], &[0.0; 10]);
+    assert!(err.is_err());
+    let err = exec.binned_ip(&[1u64; 3], &[1u64; 3]);
+    assert!(err.is_err());
+    assert!(exec.infer("nonexistent", &[], &[]).is_err());
+}

@@ -1,0 +1,25 @@
+# Convenience targets. The rust side needs none of these: a clean
+# checkout builds and tests with `cargo build --release && cargo test -q`
+# (the runtime falls back to its built-in manifest + reference backend).
+
+.PHONY: artifacts test bench doc fmt clean
+
+# AOT-lower the L2/L1 graphs to HLO text + manifest.json (needs jax).
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+doc:
+	cargo doc --no-deps
+
+fmt:
+	cargo fmt --all --check
+
+clean:
+	cargo clean
+	rm -rf artifacts

@@ -4,7 +4,7 @@ use super::client::{local_train, sparse_delta};
 use super::config::FslConfig;
 use super::server::run_ssa_round;
 use crate::crypto::rng::Rng;
-use crate::group::{fixed_decode, Group};
+use crate::group::fixed_decode;
 use crate::hashing::CuckooParams;
 use crate::protocol::{Session, SessionParams};
 use crate::runtime::Executor;
@@ -165,8 +165,11 @@ pub fn run_plain_training(
                 &mut rng,
             )?;
             let out = sparse_delta(&delta, k);
+            // Ring addition in Z_2^64: wrapping explicitly — a bare `+`
+            // panics on the two's-complement encodings of negative deltas
+            // under debug overflow checks.
             for (&i, &d) in out.selections.iter().zip(&out.deltas) {
-                sum[i as usize] = sum[i as usize].add(&d);
+                sum[i as usize] = sum[i as usize].wrapping_add(d);
             }
         }
         // Burn the same RNG draws the secure path spends on DPF seeds is

@@ -7,7 +7,8 @@
 /// p = 2^61 − 1.
 pub const P: u64 = (1 << 61) - 1;
 
-/// Field element of 𝔽_{2^61−1}, always kept reduced.
+/// Field element of 𝔽_{2^61−1}, always kept reduced (the wrapped value
+/// is the canonical representative in `[0, p)`).
 #[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
 pub struct Fp(pub u64);
 

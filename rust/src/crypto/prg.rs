@@ -37,7 +37,9 @@ fn fixed_ciphers() -> &'static (Aes128, Aes128) {
 /// One child of the GGM double: seed + control bit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Child {
+    /// The child's λ-bit seed (low bit of byte 0 cleared).
     pub seed: Seed,
+    /// The control bit extracted from the raw child seed.
     pub t: bool,
 }
 

@@ -7,8 +7,11 @@ use crate::group::Group;
 /// corrections (left / right).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CorrectionWord {
+    /// λ-bit seed correction XORed into the kept child when `t` is set.
     pub seed: Seed,
+    /// Control-bit correction for the left child.
     pub t_left: bool,
+    /// Control-bit correction for the right child.
     pub t_right: bool,
 }
 
@@ -19,10 +22,15 @@ pub struct CorrectionWord {
 /// fixes the sign convention `(-1)^b` on outputs.
 #[derive(Clone, Debug)]
 pub struct DpfKey<G: Group> {
+    /// Party id b ∈ {0, 1}; fixes the output sign convention `(-1)^b`.
     pub party: u8,
+    /// Tree depth n (domain is `{0,1}^n`).
     pub depth: usize,
+    /// This party's private λ-bit root seed.
     pub root_seed: Seed,
+    /// Per-level correction words (shared by both parties).
     pub cws: Vec<CorrectionWord>,
+    /// Output correction word `CW^{(n+1)}` (shared by both parties).
     pub cw_out: G,
 }
 

@@ -16,15 +16,20 @@ use crate::group::Group;
 /// `(α, β)` point (`None` ⇒ dummy key `Gen(1^λ, 0, 0)`, §4).
 #[derive(Clone, Debug)]
 pub struct BinPoint<G: Group> {
+    /// DPF tree depth for this bin (covers the bin's Θ positions).
     pub depth: usize,
+    /// The `(α, β)` point to share, or `None` for a dummy bin.
     pub point: Option<(u64, G)>,
 }
 
 /// The public (seed-free) half of a DPF key — identical for both parties.
 #[derive(Clone, Debug)]
 pub struct PublicPart<G: Group> {
+    /// Tree depth of this bin's key.
     pub depth: usize,
+    /// Per-level correction words.
     pub cws: Vec<CorrectionWord>,
+    /// Output correction word.
     pub cw_out: G,
 }
 
@@ -39,7 +44,9 @@ impl<G: Group> PublicPart<G> {
 /// public part per bin.
 #[derive(Clone, Debug)]
 pub struct MasterKeyBatch<G: Group> {
+    /// The two per-server master seeds (`msk_b` goes only to server b).
     pub msk: [Seed; 2],
+    /// One public part per bin (identical for both servers).
     pub publics: Vec<PublicPart<G>>,
 }
 

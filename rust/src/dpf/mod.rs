@@ -10,8 +10,8 @@
 //! part* (`n(λ+2) + ⌈log 𝔾⌉` bits of correction words, identical in both
 //! keys) and a *private part* (the λ-bit root seed, which differs).
 //!
-//! * [`gen`] / [`Dpf::gen`] — key generation (client side).
-//! * [`eval`] — single-point evaluation.
+//! * [`gen()`] / [`Dpf::gen`] — key generation (client side).
+//! * [`eval()`] — single-point evaluation.
 //! * [`full_eval`] — full-domain evaluation (server side; the §7.2
 //!   "full-domain evaluation" optimisation — one tree traversal instead of
 //!   Θ independent walks).

@@ -8,6 +8,7 @@ use crate::crypto::rng::Rng;
 /// the stash was already full.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CuckooError {
+    /// The element left homeless when insertion gave up.
     pub element: u64,
 }
 

@@ -12,19 +12,28 @@ use std::path::{Path, PathBuf};
 /// Metadata for one artifact.
 #[derive(Clone, Debug, Default)]
 pub struct ArtifactMeta {
+    /// HLO text filename relative to the artifact directory.
     pub file: String,
+    /// Artifact kind: `train_step`, `infer`, or `server_ip`.
     pub kind: String,
     /// Flat key/value metadata (ints kept as i64).
     pub ints: BTreeMap<String, i64>,
+    /// Row-major shape of each positional argument.
     pub arg_shapes: Vec<Vec<usize>>,
+    /// Dtype name of each positional argument (e.g. `float32`).
     pub arg_dtypes: Vec<String>,
 }
 
 /// The parsed manifest: artifact name → metadata.
 #[derive(Clone, Debug, Default)]
 pub struct ArtifactManifest {
+    /// Directory the artifacts live in (or were expected in).
     pub dir: PathBuf,
+    /// Artifact name → metadata.
     pub entries: BTreeMap<String, ArtifactMeta>,
+    /// True when this is the built-in manifest (no `manifest.json` on
+    /// disk — the reference executor needs no HLO files).
+    pub builtin: bool,
 }
 
 impl ArtifactManifest {
@@ -74,7 +83,128 @@ impl ArtifactManifest {
             }
             entries.insert(name.clone(), meta);
         }
-        Ok(ArtifactManifest { dir, entries })
+        Ok(ArtifactManifest {
+            dir,
+            entries,
+            builtin: false,
+        })
+    }
+
+    /// The built-in manifest — byte-for-byte the same schema `aot.py`
+    /// writes for the default model census, so a clean checkout runs
+    /// with no Python step. Shapes/metadata per artifact:
+    ///
+    /// | artifact       | kind        | key facts                          |
+    /// |----------------|-------------|------------------------------------|
+    /// | `mlp_grad`     | train_step  | 1,863,690 params, batch 50         |
+    /// | `mlp_infer`    | infer       | 10 classes                         |
+    /// | `embbag_grad`  | train_step  | 150,214 params, batch 64, V=8256   |
+    /// | `embbag_infer` | infer       | 6 classes                          |
+    /// | `binned_ip`    | server_ip   | 2048 × 32 slab                     |
+    pub fn builtin(dir: impl AsRef<Path>) -> Self {
+        const MLP_PARAMS: i64 = 1_863_690;
+        const MLP_BATCH: i64 = 50;
+        const EMB_PARAMS: i64 = 150_214;
+        const EMB_BATCH: i64 = 64;
+        const EMB_VOCAB: i64 = 8_256;
+        const EMB_DIM: i64 = 18;
+        const IP_BINS: i64 = 2_048;
+        const IP_THETA: i64 = 32;
+
+        fn f32v(n: usize) -> Vec<String> {
+            vec!["float32".to_string(); n]
+        }
+        fn put(
+            entries: &mut BTreeMap<String, ArtifactMeta>,
+            name: &str,
+            kind: &str,
+            ints: &[(&str, i64)],
+            arg_shapes: Vec<Vec<usize>>,
+            arg_dtypes: Vec<String>,
+        ) {
+            entries.insert(
+                name.to_string(),
+                ArtifactMeta {
+                    file: format!("{name}.hlo.txt"),
+                    kind: kind.to_string(),
+                    ints: ints.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+                    arg_shapes,
+                    arg_dtypes,
+                },
+            );
+        }
+        let mut entries = BTreeMap::new();
+        put(
+            &mut entries,
+            "mlp_grad",
+            "train_step",
+            &[("params", MLP_PARAMS), ("batch", MLP_BATCH)],
+            vec![
+                vec![MLP_PARAMS as usize],
+                vec![MLP_BATCH as usize, 784],
+                vec![MLP_BATCH as usize, 10],
+            ],
+            f32v(3),
+        );
+        put(
+            &mut entries,
+            "mlp_infer",
+            "infer",
+            &[("params", MLP_PARAMS), ("batch", MLP_BATCH), ("classes", 10)],
+            vec![vec![MLP_PARAMS as usize], vec![MLP_BATCH as usize, 784]],
+            f32v(2),
+        );
+        put(
+            &mut entries,
+            "embbag_grad",
+            "train_step",
+            &[
+                ("params", EMB_PARAMS),
+                ("batch", EMB_BATCH),
+                ("vocab", EMB_VOCAB),
+                ("emb_dim", EMB_DIM),
+                ("embedding_params", EMB_VOCAB * EMB_DIM),
+            ],
+            vec![
+                vec![EMB_PARAMS as usize],
+                vec![EMB_BATCH as usize, EMB_VOCAB as usize],
+                vec![EMB_BATCH as usize, 6],
+            ],
+            f32v(3),
+        );
+        put(
+            &mut entries,
+            "embbag_infer",
+            "infer",
+            &[
+                ("params", EMB_PARAMS),
+                ("batch", EMB_BATCH),
+                ("vocab", EMB_VOCAB),
+                ("emb_dim", EMB_DIM),
+                ("classes", 6),
+            ],
+            vec![
+                vec![EMB_PARAMS as usize],
+                vec![EMB_BATCH as usize, EMB_VOCAB as usize],
+            ],
+            f32v(2),
+        );
+        put(
+            &mut entries,
+            "binned_ip",
+            "server_ip",
+            &[("bins", IP_BINS), ("theta", IP_THETA)],
+            vec![
+                vec![IP_BINS as usize, IP_THETA as usize],
+                vec![IP_BINS as usize, IP_THETA as usize],
+            ],
+            vec!["uint64".to_string(); 2],
+        );
+        ArtifactManifest {
+            dir: dir.as_ref().to_path_buf(),
+            entries,
+            builtin: true,
+        }
     }
 
     /// Absolute path of an artifact's HLO file.

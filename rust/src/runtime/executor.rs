@@ -1,73 +1,79 @@
-//! PJRT execution of the AOT artifacts.
+//! Artifact execution.
 //!
-//! One `PjRtClient` per process; each artifact compiles once
-//! (`HloModuleProto::from_text_file` → `XlaComputation` → compile) and is
-//! then invoked from the round loop with concrete literals.
+//! The original seed targeted the PJRT C API through the `xla` bindings:
+//! each `*.hlo.txt` artifact was parsed, compiled once, and invoked from
+//! the round loop. Those bindings cannot be vendored into this offline
+//! workspace, so execution is served by the pure-Rust **reference
+//! backend** ([`super::reference`]) — the same operation graphs as the L2
+//! JAX definitions, validated against `jax.grad` (see
+//! `python/tests/test_kernels.py` for the Python-side oracle tests).
+//!
+//! The artifact *manifest* contract is unchanged: when
+//! `artifacts/manifest.json` exists (written by `python -m compile.aot`),
+//! its shapes and metadata drive validation; when it does not, the
+//! built-in manifest mirroring `aot.py` is used, so a clean checkout
+//! works with no Python step.
 
 use super::artifact::ArtifactManifest;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::sync::Mutex;
+use super::reference;
+use anyhow::{anyhow, Result};
 
 /// Output of one training-step invocation.
 #[derive(Debug)]
 pub struct TrainStep {
+    /// Mean cross-entropy over the batch.
     pub loss: f32,
+    /// Flat parameter gradient (same length as the parameter vector).
     pub grad: Vec<f32>,
 }
 
-/// The PJRT runtime: client + compiled executables, keyed by artifact
-/// name. Compilation is lazy and cached; `Executor` is `Sync` so the two
-/// server threads can share one instance.
+/// The runtime: a parsed manifest plus the reference compute backend.
+///
+/// `Executor` is `Sync`; the two server threads share one instance.
 pub struct Executor {
-    client: xla::PjRtClient,
     manifest: ArtifactManifest,
-    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
 impl Executor {
-    /// Create a CPU PJRT client over an artifact directory.
+    /// Open an artifact directory. A missing `manifest.json` falls back
+    /// to the built-in manifest (identical to what `aot.py` writes); a
+    /// *malformed* one is an error — silent fallback would mask a broken
+    /// artifact build.
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let manifest = ArtifactManifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Executor {
-            client,
-            manifest,
-            compiled: Mutex::new(HashMap::new()),
-        })
+        let dir = artifact_dir.as_ref();
+        let manifest = if dir.join("manifest.json").exists() {
+            ArtifactManifest::load(dir)?
+        } else {
+            ArtifactManifest::builtin(dir)
+        };
+        Ok(Executor { manifest })
     }
 
-    /// The parsed manifest.
+    /// The parsed (or built-in) manifest.
     pub fn manifest(&self) -> &ArtifactManifest {
         &self.manifest
     }
 
-    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        // Compile on first use.
-        {
-            let mut cache = self.compiled.lock().unwrap();
-            if !cache.contains_key(name) {
-                let path = self.manifest.hlo_path(name)?;
-                let proto = xla::HloModuleProto::from_text_file(
-                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-                )
-                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = self
-                    .client
-                    .compile(&comp)
-                    .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-                cache.insert(name.to_string(), exe);
-            }
+    fn embbag_dims(&self, name: &str) -> reference::EmbbagDims {
+        let d = reference::EmbbagDims::default_census();
+        reference::EmbbagDims {
+            vocab: self
+                .manifest
+                .int(name, "vocab")
+                .map(|v| v as usize)
+                .unwrap_or(d.vocab),
+            emb_dim: self
+                .manifest
+                .int(name, "emb_dim")
+                .map(|v| v as usize)
+                .unwrap_or(d.emb_dim),
+            classes: self
+                .manifest
+                .int(name, "classes")
+                .map(|v| v as usize)
+                .unwrap_or(d.classes),
+            ..d
         }
-        let cache = self.compiled.lock().unwrap();
-        let exe = cache.get(name).expect("just inserted");
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        Ok(result)
     }
 
     /// Run a `*_grad` training-step artifact: `(flat, x, y1h) → (loss,
@@ -80,44 +86,33 @@ impl Executor {
             .ok_or_else(|| anyhow!("artifact {name} missing"))?;
         let shapes = &meta.arg_shapes;
         anyhow::ensure!(shapes.len() == 3, "{name}: expected 3 args");
-        anyhow::ensure!(flat.len() == shapes[0][0], "{name}: params len");
+        anyhow::ensure!(shapes[1].len() == 2 && shapes[2].len() == 2, "{name}: rank-2 batches");
+        anyhow::ensure!(flat.len() == shapes[0].iter().product::<usize>(), "{name}: params len");
         anyhow::ensure!(x.len() == shapes[1].iter().product::<usize>(), "{name}: x len");
         anyhow::ensure!(y1h.len() == shapes[2].iter().product::<usize>(), "{name}: y len");
+        let batch = shapes[1][0];
 
-        let lit_flat = xla::Literal::vec1(flat);
-        let lit_x = xla::Literal::vec1(x)
-            .reshape(&[shapes[1][0] as i64, shapes[1][1] as i64])
-            .context("reshape x")?;
-        let lit_y = xla::Literal::vec1(y1h)
-            .reshape(&[shapes[2][0] as i64, shapes[2][1] as i64])
-            .context("reshape y")?;
-
-        let out = self.run(name, &[lit_flat, lit_x, lit_y])?;
-        let (loss_lit, grad_lit) = out.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
-        let loss = loss_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
-        let grad = grad_lit.to_vec::<f32>().map_err(|e| anyhow!("grad: {e:?}"))?;
+        let (loss, grad) = if name.starts_with("mlp") {
+            anyhow::ensure!(
+                flat.len() == reference::mlp_num_params()
+                    && shapes[1][1] == reference::MLP_LAYERS[0].0
+                    && shapes[2][1] == reference::MLP_LAYERS[2].1,
+                "{name}: shapes do not match the MLP architecture"
+            );
+            reference::mlp_grad(flat, x, y1h, batch)
+        } else if name.starts_with("embbag") {
+            let dims = self.embbag_dims(name);
+            anyhow::ensure!(
+                flat.len() == dims.num_params()
+                    && shapes[1][1] == dims.vocab
+                    && shapes[2][1] == dims.classes,
+                "{name}: shapes do not match the embedding-bag architecture"
+            );
+            reference::embbag_grad(&dims, flat, x, y1h, batch)
+        } else {
+            return Err(anyhow!("{name}: no reference implementation for this artifact"));
+        };
         Ok(TrainStep { loss, grad })
-    }
-
-    /// Run the `binned_ip` server artifact on one `(BINS, THETA)` slab.
-    /// Inputs are row-major u64 slabs; output is the per-bin answer.
-    pub fn binned_ip(&self, weights_slab: &[u64], share_slab: &[u64]) -> Result<Vec<u64>> {
-        let bins = self.manifest.int("binned_ip", "bins")? as i64;
-        let theta = self.manifest.int("binned_ip", "theta")? as i64;
-        let expect = (bins * theta) as usize;
-        anyhow::ensure!(weights_slab.len() == expect, "weights slab size");
-        anyhow::ensure!(share_slab.len() == expect, "share slab size");
-        let w = xla::Literal::vec1(weights_slab)
-            .reshape(&[bins, theta])
-            .context("reshape w")?;
-        let s = xla::Literal::vec1(share_slab)
-            .reshape(&[bins, theta])
-            .context("reshape s")?;
-        let out = self.run("binned_ip", &[w, s])?;
-        let ans = out.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
-        ans.to_vec::<u64>().map_err(|e| anyhow!("answers: {e:?}"))
     }
 
     /// Run an `*_infer` artifact: `(flat, x) → logits` (row-major,
@@ -128,17 +123,40 @@ impl Executor {
             .entries
             .get(name)
             .ok_or_else(|| anyhow!("artifact {name} missing"))?;
-        let shapes = meta.arg_shapes.clone();
+        let shapes = &meta.arg_shapes;
         anyhow::ensure!(shapes.len() == 2, "{name}: expected 2 args");
-        anyhow::ensure!(flat.len() == shapes[0][0], "{name}: params len");
+        anyhow::ensure!(shapes[1].len() == 2, "{name}: rank-2 batch");
+        anyhow::ensure!(flat.len() == shapes[0].iter().product::<usize>(), "{name}: params len");
         anyhow::ensure!(x.len() == shapes[1].iter().product::<usize>(), "{name}: x len");
-        let lit_flat = xla::Literal::vec1(flat);
-        let lit_x = xla::Literal::vec1(x)
-            .reshape(&[shapes[1][0] as i64, shapes[1][1] as i64])
-            .context("reshape x")?;
-        let out = self.run(name, &[lit_flat, lit_x])?;
-        let logits = out.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
-        logits.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))
+        let batch = shapes[1][0];
+
+        if name.starts_with("mlp") {
+            anyhow::ensure!(
+                flat.len() == reference::mlp_num_params()
+                    && shapes[1][1] == reference::MLP_LAYERS[0].0,
+                "{name}: shapes do not match the MLP architecture"
+            );
+            Ok(reference::mlp_forward(flat, x, batch))
+        } else if name.starts_with("embbag") {
+            let dims = self.embbag_dims(name);
+            anyhow::ensure!(
+                flat.len() == dims.num_params() && shapes[1][1] == dims.vocab,
+                "{name}: shapes do not match the embedding-bag architecture"
+            );
+            Ok(reference::embbag_forward(&dims, flat, x, batch))
+        } else {
+            Err(anyhow!("{name}: no reference implementation for this artifact"))
+        }
+    }
+
+    /// Run the `binned_ip` server artifact on one `(BINS, THETA)` slab.
+    /// Inputs are row-major u64 slabs; output is the per-bin answer.
+    pub fn binned_ip(&self, weights_slab: &[u64], share_slab: &[u64]) -> Result<Vec<u64>> {
+        let (bins, theta) = self.binned_ip_shape()?;
+        let expect = bins * theta;
+        anyhow::ensure!(weights_slab.len() == expect, "weights slab size");
+        anyhow::ensure!(share_slab.len() == expect, "share slab size");
+        Ok(reference::binned_ip(weights_slab, share_slab, bins, theta))
     }
 
     /// Slab geometry of the `binned_ip` artifact: (bins, theta).
@@ -152,6 +170,21 @@ impl Executor {
 
 #[cfg(test)]
 mod tests {
-    // Executor tests live in rust/tests/runtime_integration.rs — they need
-    // the artifacts built by `make artifacts`.
+    use super::*;
+
+    #[test]
+    fn builtin_fallback_without_artifacts() {
+        let exec = Executor::new("/definitely/no/artifacts/here").unwrap();
+        assert!(exec.manifest().builtin);
+        assert_eq!(exec.manifest().int("mlp_grad", "params").unwrap(), 1_863_690);
+        assert_eq!(exec.binned_ip_shape().unwrap(), (2048, 32));
+    }
+
+    #[test]
+    fn malformed_manifest_is_an_error_not_a_fallback() {
+        let dir = std::env::temp_dir().join("fsl_bad_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+        assert!(Executor::new(&dir).is_err());
+    }
 }

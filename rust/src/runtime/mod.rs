@@ -1,9 +1,25 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
-//! request path. Python never runs here — `make artifacts` is the only
-//! python invocation in the whole system.
+//! L1/L2 artifact runtime.
+//!
+//! The L2 model (JAX) and its L1 compute hot-spots (Pallas) are AOT-
+//! lowered to HLO text by `python -m compile.aot` ("`make artifacts`"),
+//! which also writes `manifest.json` describing every artifact's shapes
+//! and metadata. Python never runs on the round path.
+//!
+//! Execution backends:
+//!
+//! * [`reference`] — always available: pure-Rust implementations of the
+//!   same compute graphs, validated against `jax.grad`. Used for all
+//!   execution in this offline workspace; a clean checkout needs no
+//!   Python step (a missing `manifest.json` falls back to
+//!   [`ArtifactManifest::builtin`]).
+//! * PJRT — the seed design compiled the HLO artifacts through the `xla`
+//!   crate's PJRT CPU client. Those bindings need system libraries that
+//!   cannot be vendored offline; re-enabling them is an executor-level
+//!   swap behind the same [`Executor`] API (see README "AOT artifacts").
 
 mod artifact;
 mod executor;
+pub mod reference;
 
 pub use artifact::{ArtifactManifest, ArtifactMeta};
 pub use executor::{Executor, TrainStep};

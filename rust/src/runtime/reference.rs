@@ -1,0 +1,475 @@
+//! Pure-Rust reference implementations of the L1/L2 compute graphs.
+//!
+//! These mirror `python/compile/model.py` (the L2 JAX definitions) and
+//! `python/compile/kernels/ref.py` (the L1 kernel oracles) operation for
+//! operation; the backward passes were validated against `jax.grad` on
+//! the real model definitions to ≤ 1e-8 max gradient error. They are the
+//! always-available executor backend: the crate builds, tests, and trains
+//! with no Python step and no AOT artifacts present.
+//!
+//! Dense matmuls skip zero left-hand entries — a no-op numerically (all
+//! operands are finite) that makes the bag-of-words `bow @ emb` product
+//! effectively sparse, exactly the access pattern the embedding-bag model
+//! was chosen for.
+
+/// `out[m×n] = a[m×k] @ b[k×n]` (row-major, f32, overwrite).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let out_row = &mut out[i * n..(i + 1) * n];
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let b_row = &b[l * n..(l + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[k×n] = aᵀ @ b` for `a[m×k]`, `b[m×n]` (the `dW = hᵀ·δ` gradient
+/// products; also `bowᵀ·δe`, where the zero-skip makes it sparse).
+pub fn matmul_at(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let b_row = &b[i * n..(i + 1) * n];
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let out_row = &mut out[l * n..(l + 1) * n];
+            for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m×k] = a @ bᵀ` for `a[m×n]`, `b[k×n]` (the `δ·Wᵀ` back-propagated
+/// error products).
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * k);
+    for i in 0..m {
+        let a_row = &a[i * n..(i + 1) * n];
+        for j in 0..k {
+            let b_row = &b[j * n..(j + 1) * n];
+            let mut acc = 0.0f32;
+            for (&x, &y) in a_row.iter().zip(b_row) {
+                acc += x * y;
+            }
+            out[i * k + j] = acc;
+        }
+    }
+}
+
+/// Mean softmax cross-entropy over `logits[b×c]` against one-hot `y`,
+/// plus its gradient `∂loss/∂logits = (softmax − y)/b`.
+pub fn softmax_xent(logits: &[f32], y: &[f32], b: usize, c: usize) -> (f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), b * c);
+    debug_assert_eq!(y.len(), b * c);
+    let mut dlogits = vec![0.0f32; b * c];
+    let mut loss = 0.0f32;
+    for r in 0..b {
+        let row = &logits[r * c..(r + 1) * c];
+        let yrow = &y[r * c..(r + 1) * c];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        let log_denom = denom.ln();
+        for j in 0..c {
+            let logp = (row[j] - max) - log_denom;
+            loss -= yrow[j] * logp;
+            let p = (row[j] - max).exp() / denom;
+            dlogits[r * c + j] = (p - yrow[j]) / b as f32;
+        }
+    }
+    (loss / b as f32, dlogits)
+}
+
+/// The Table-7 image classifier: a 784→1024→1024→10 ReLU MLP over a flat
+/// parameter vector (layout `[W1|b1|W2|b2|W3|b3]`, matching `mlp_init`).
+pub const MLP_LAYERS: [(usize, usize); 3] = [(784, 1024), (1024, 1024), (1024, 10)];
+
+/// Flat parameter count of the MLP (1,863,690).
+pub fn mlp_num_params() -> usize {
+    MLP_LAYERS.iter().map(|(i, o)| i * o + o).sum()
+}
+
+fn mlp_forward_impl(flat: &[f32], x: &[f32], batch: usize, keep_acts: bool) -> Vec<Vec<f32>> {
+    // acts[0] = input, acts[l] = post-activation of layer l.
+    let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+    let mut off = 0usize;
+    let last = MLP_LAYERS.len() - 1;
+    for (li, &(i, o)) in MLP_LAYERS.iter().enumerate() {
+        let w = &flat[off..off + i * o];
+        let b = &flat[off + i * o..off + i * o + o];
+        off += i * o + o;
+        let mut z = vec![0.0f32; batch * o];
+        matmul(acts.last().unwrap(), w, batch, i, o, &mut z);
+        for r in 0..batch {
+            for (zj, &bj) in z[r * o..(r + 1) * o].iter_mut().zip(b) {
+                *zj += bj;
+            }
+        }
+        if li < last {
+            for v in &mut z {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        if keep_acts {
+            acts.push(z);
+        } else {
+            acts = vec![z];
+        }
+    }
+    acts
+}
+
+/// MLP logits for a batch (`flat` laid out as in `mlp_init`).
+pub fn mlp_forward(flat: &[f32], x: &[f32], batch: usize) -> Vec<f32> {
+    mlp_forward_impl(flat, x, batch, false).pop().unwrap()
+}
+
+/// One MLP training step: mean cross-entropy loss and the flat gradient.
+pub fn mlp_grad(flat: &[f32], x: &[f32], y: &[f32], batch: usize) -> (f32, Vec<f32>) {
+    let acts = mlp_forward_impl(flat, x, batch, true);
+    let (_, classes) = MLP_LAYERS[MLP_LAYERS.len() - 1];
+    let (loss, mut d) = softmax_xent(acts.last().unwrap(), y, batch, classes);
+
+    let mut grad = vec![0.0f32; flat.len()];
+    // Per-layer parameter offsets.
+    let mut offs = [0usize; 3];
+    let mut off = 0usize;
+    for (li, &(i, o)) in MLP_LAYERS.iter().enumerate() {
+        offs[li] = off;
+        off += i * o + o;
+    }
+    for li in (0..MLP_LAYERS.len()).rev() {
+        let (i, o) = MLP_LAYERS[li];
+        let a = &acts[li];
+        // dW = aᵀ · d ; db = column-sum of d.
+        matmul_at(a, &d, batch, i, o, &mut grad[offs[li]..offs[li] + i * o]);
+        for r in 0..batch {
+            for (gb, &dv) in grad[offs[li] + i * o..offs[li] + i * o + o]
+                .iter_mut()
+                .zip(&d[r * o..(r + 1) * o])
+            {
+                *gb += dv;
+            }
+        }
+        if li > 0 {
+            // d_prev = d · Wᵀ, masked by the previous ReLU.
+            let w = &flat[offs[li]..offs[li] + i * o];
+            let mut d_prev = vec![0.0f32; batch * i];
+            matmul_bt(&d, w, batch, o, i, &mut d_prev);
+            for (dp, &av) in d_prev.iter_mut().zip(&acts[li][..]) {
+                if av <= 0.0 {
+                    *dp = 0.0;
+                }
+            }
+            d = d_prev;
+        }
+    }
+    (loss, grad)
+}
+
+/// The Table-8/9 text classifier: embedding-bag (V×τ table) → τ→64 ReLU
+/// → 64→classes, over a flat parameter vector (layout
+/// `[emb|W1|b1|W2|b2]`, matching `embbag_init`).
+#[derive(Clone, Copy, Debug)]
+pub struct EmbbagDims {
+    /// Vocabulary size V.
+    pub vocab: usize,
+    /// Embedding dimension τ.
+    pub emb_dim: usize,
+    /// Hidden width.
+    pub hidden: usize,
+    /// Output classes.
+    pub classes: usize,
+}
+
+impl EmbbagDims {
+    /// The paper's TREC-shaped default (8256 × 18 → 64 → 6).
+    pub fn default_census() -> Self {
+        EmbbagDims {
+            vocab: 8256,
+            emb_dim: 18,
+            hidden: 64,
+            classes: 6,
+        }
+    }
+
+    /// Flat parameter count (150,214 for the default census).
+    pub fn num_params(&self) -> usize {
+        self.vocab * self.emb_dim
+            + self.emb_dim * self.hidden
+            + self.hidden
+            + self.hidden * self.classes
+            + self.classes
+    }
+}
+
+struct EmbbagFwd {
+    e: Vec<f32>,
+    z1: Vec<f32>,
+    h: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+fn embbag_forward_impl(dims: &EmbbagDims, flat: &[f32], bow: &[f32], batch: usize) -> EmbbagFwd {
+    let (v, t, hid, c) = (dims.vocab, dims.emb_dim, dims.hidden, dims.classes);
+    let emb = &flat[..v * t];
+    let mut off = v * t;
+    let w1 = &flat[off..off + t * hid];
+    off += t * hid;
+    let b1 = &flat[off..off + hid];
+    off += hid;
+    let w2 = &flat[off..off + hid * c];
+    off += hid * c;
+    let b2 = &flat[off..off + c];
+
+    let mut e = vec![0.0f32; batch * t];
+    matmul(bow, emb, batch, v, t, &mut e);
+    let mut z1 = vec![0.0f32; batch * hid];
+    matmul(&e, w1, batch, t, hid, &mut z1);
+    for r in 0..batch {
+        for (zj, &bj) in z1[r * hid..(r + 1) * hid].iter_mut().zip(b1) {
+            *zj += bj;
+        }
+    }
+    let h: Vec<f32> = z1.iter().map(|&z| z.max(0.0)).collect();
+    let mut logits = vec![0.0f32; batch * c];
+    matmul(&h, w2, batch, hid, c, &mut logits);
+    for r in 0..batch {
+        for (lj, &bj) in logits[r * c..(r + 1) * c].iter_mut().zip(b2) {
+            *lj += bj;
+        }
+    }
+    EmbbagFwd { e, z1, h, logits }
+}
+
+/// Embedding-bag logits for a bag-of-words batch.
+pub fn embbag_forward(dims: &EmbbagDims, flat: &[f32], bow: &[f32], batch: usize) -> Vec<f32> {
+    embbag_forward_impl(dims, flat, bow, batch).logits
+}
+
+/// One embedding-bag training step: mean loss and the flat gradient.
+pub fn embbag_grad(
+    dims: &EmbbagDims,
+    flat: &[f32],
+    bow: &[f32],
+    y: &[f32],
+    batch: usize,
+) -> (f32, Vec<f32>) {
+    let (v, t, hid, c) = (dims.vocab, dims.emb_dim, dims.hidden, dims.classes);
+    let fwd = embbag_forward_impl(dims, flat, bow, batch);
+    let (loss, d) = softmax_xent(&fwd.logits, y, batch, c);
+
+    let emb_off = 0usize;
+    let w1_off = v * t;
+    let b1_off = w1_off + t * hid;
+    let w2_off = b1_off + hid;
+    let b2_off = w2_off + hid * c;
+    let w1 = &flat[w1_off..w1_off + t * hid];
+    let w2 = &flat[w2_off..w2_off + hid * c];
+
+    let mut grad = vec![0.0f32; flat.len()];
+    // Output layer.
+    matmul_at(&fwd.h, &d, batch, hid, c, &mut grad[w2_off..w2_off + hid * c]);
+    for r in 0..batch {
+        for (gb, &dv) in grad[b2_off..b2_off + c].iter_mut().zip(&d[r * c..(r + 1) * c]) {
+            *gb += dv;
+        }
+    }
+    // Hidden layer.
+    let mut dh = vec![0.0f32; batch * hid];
+    matmul_bt(&d, w2, batch, c, hid, &mut dh);
+    for (dv, &z) in dh.iter_mut().zip(&fwd.z1) {
+        if z <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+    matmul_at(&fwd.e, &dh, batch, t, hid, &mut grad[w1_off..w1_off + t * hid]);
+    for r in 0..batch {
+        for (gb, &dv) in grad[b1_off..b1_off + hid]
+            .iter_mut()
+            .zip(&dh[r * hid..(r + 1) * hid])
+        {
+            *gb += dv;
+        }
+    }
+    // Embedding table: d_emb = bowᵀ · (dh · W1ᵀ) — sparse in bow.
+    let mut de = vec![0.0f32; batch * t];
+    matmul_bt(&dh, w1, batch, hid, t, &mut de);
+    matmul_at(bow, &de, batch, v, t, &mut grad[emb_off..emb_off + v * t]);
+    (loss, grad)
+}
+
+/// The L1 `binned_ip` kernel oracle: per-bin wrapping-u64 inner products
+/// over a `(bins × theta)` slab (bit-identical to
+/// `kernels/ref.py::binned_inner_product_ref`).
+pub fn binned_ip(weights: &[u64], shares: &[u64], bins: usize, theta: usize) -> Vec<u64> {
+    debug_assert_eq!(weights.len(), bins * theta);
+    debug_assert_eq!(shares.len(), bins * theta);
+    let mut out = Vec::with_capacity(bins);
+    for j in 0..bins {
+        let mut acc = 0u64;
+        for d in 0..theta {
+            acc = acc.wrapping_add(weights[j * theta + d].wrapping_mul(shares[j * theta + d]));
+        }
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+
+    #[test]
+    fn matmul_agrees_with_transposed_variants() {
+        let mut rng = Rng::new(170);
+        let (m, k, n) = (5, 7, 4);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gen_normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gen_normal() as f32).collect();
+        let mut c = vec![0.0; m * n];
+        matmul(&a, &b, m, k, n, &mut c);
+        // aᵀ path: (aᵀ)ᵀ b computed by transposing a first.
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for l in 0..k {
+                at[l * m + i] = a[i * k + l];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        matmul_at(&at, &b, k, m, n, &mut c2);
+        for (x, y) in c.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        // bᵀ path.
+        let mut bt = vec![0.0; n * k];
+        for l in 0..k {
+            for j in 0..n {
+                bt[j * k + l] = b[l * n + j];
+            }
+        }
+        let mut c3 = vec![0.0; m * n];
+        matmul_bt(&a, &bt, m, k, n, &mut c3);
+        for (x, y) in c.iter().zip(&c3) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_gradient_is_finite_difference() {
+        let mut rng = Rng::new(171);
+        let (b, c) = (3, 5);
+        let logits: Vec<f32> = (0..b * c).map(|_| rng.gen_normal() as f32).collect();
+        let mut y = vec![0.0f32; b * c];
+        for r in 0..b {
+            y[r * c + r % c] = 1.0;
+        }
+        let (loss, d) = softmax_xent(&logits, &y, b, c);
+        assert!(loss.is_finite() && loss > 0.0);
+        let eps = 1e-3f32;
+        for idx in 0..b * c {
+            let mut lp = logits.clone();
+            lp[idx] += eps;
+            let (l1, _) = softmax_xent(&lp, &y, b, c);
+            lp[idx] -= 2.0 * eps;
+            let (l0, _) = softmax_xent(&lp, &y, b, c);
+            let fd = (l1 - l0) / (2.0 * eps);
+            assert!((fd - d[idx]).abs() < 1e-3, "idx {idx}: {fd} vs {}", d[idx]);
+        }
+    }
+
+    #[test]
+    fn mlp_gradient_descends_and_matches_finite_difference() {
+        let mut rng = Rng::new(172);
+        let m = mlp_num_params();
+        let batch = 4;
+        let flat: Vec<f32> = (0..m).map(|_| rng.gen_normal() as f32 * 0.02).collect();
+        let x: Vec<f32> = (0..batch * 784).map(|_| rng.gen_f64() as f32).collect();
+        let mut y = vec![0.0f32; batch * 10];
+        for r in 0..batch {
+            y[r * 10 + r % 10] = 1.0;
+        }
+        let (loss, grad) = mlp_grad(&flat, &x, &y, batch);
+        assert!(loss.is_finite());
+        assert_eq!(grad.len(), m);
+        // Spot-check a few coordinates against central differences.
+        let eps = 1e-2f32;
+        for &idx in &[0usize, 784 * 1024 + 5, m - 3] {
+            let mut fp = flat.clone();
+            fp[idx] += eps;
+            let (l1, _) = mlp_grad(&fp, &x, &y, batch);
+            fp[idx] -= 2.0 * eps;
+            let (l0, _) = mlp_grad(&fp, &x, &y, batch);
+            let fd = (l1 - l0) / (2.0 * eps);
+            assert!(
+                (fd - grad[idx]).abs() < 2e-2,
+                "param {idx}: fd {fd} vs grad {}",
+                grad[idx]
+            );
+        }
+        // One SGD step reduces the loss on the same batch.
+        let stepped: Vec<f32> = flat.iter().zip(&grad).map(|(p, g)| p - 0.1 * g).collect();
+        let (loss2, _) = mlp_grad(&stepped, &x, &y, batch);
+        assert!(loss2 < loss, "{loss2} !< {loss}");
+    }
+
+    #[test]
+    fn embbag_gradient_descends() {
+        let mut rng = Rng::new(173);
+        let dims = EmbbagDims {
+            vocab: 50,
+            emb_dim: 6,
+            hidden: 16,
+            classes: 4,
+        };
+        let m = dims.num_params();
+        let batch = 8;
+        let mut flat: Vec<f32> = (0..m).map(|_| rng.gen_normal() as f32 * 0.1).collect();
+        let mut bow = vec![0.0f32; batch * dims.vocab];
+        let mut y = vec![0.0f32; batch * dims.classes];
+        for r in 0..batch {
+            let cls = r % dims.classes;
+            for w in 0..3 {
+                bow[r * dims.vocab + cls * 10 + w] = 1.0;
+            }
+            y[r * dims.classes + cls] = 1.0;
+        }
+        let (l0, _) = embbag_grad(&dims, &flat, &bow, &y, batch);
+        for _ in 0..30 {
+            let (_, g) = embbag_grad(&dims, &flat, &bow, &y, batch);
+            for (p, gv) in flat.iter_mut().zip(&g) {
+                *p -= 0.5 * gv;
+            }
+        }
+        let (l1, _) = embbag_grad(&dims, &flat, &bow, &y, batch);
+        assert!(l1 < l0 * 0.5, "no learning: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn binned_ip_wraps() {
+        let got = binned_ip(&[u64::MAX, 2, 3, 4], &[2, 1, 10, 10], 2, 2);
+        assert_eq!(got, vec![u64::MAX.wrapping_mul(2).wrapping_add(2), 70]);
+    }
+}

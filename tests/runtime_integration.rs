@@ -1,15 +1,16 @@
-//! Integration tests over the PJRT runtime + AOT artifacts.
+//! Integration tests over the artifact runtime.
 //!
-//! These need `make artifacts` to have run (the Makefile test target
-//! guarantees it). They verify the rust↔HLO boundary: shapes, dtypes,
-//! numeric agreement with the rust-side ring arithmetic, and gradient
-//! sanity.
+//! They run against whatever backend `Executor::new("artifacts")`
+//! resolves: the manifest written by `make artifacts` when present, or
+//! the built-in manifest + reference executor on a clean checkout (no
+//! Python step required). Verified here: shapes, metadata, numeric
+//! agreement with the rust-side ring arithmetic, and gradient sanity.
 
 use fsl::crypto::rng::Rng;
 use fsl::runtime::Executor;
 
 fn executor() -> Executor {
-    Executor::new("artifacts").expect("run `make artifacts` before cargo test")
+    Executor::new("artifacts").expect("artifact manifest unreadable")
 }
 
 #[test]
@@ -20,7 +21,11 @@ fn manifest_lists_all_artifacts() {
             exec.manifest().entries.contains_key(name),
             "missing artifact {name}"
         );
-        assert!(exec.manifest().hlo_path(name).unwrap().exists());
+        // HLO text only exists on disk when `make artifacts` produced the
+        // manifest; the built-in manifest needs no files.
+        if !exec.manifest().builtin {
+            assert!(exec.manifest().hlo_path(name).unwrap().exists());
+        }
     }
     assert_eq!(exec.manifest().int("mlp_grad", "params").unwrap(), 1_863_690);
     assert_eq!(exec.manifest().int("embbag_grad", "params").unwrap(), 150_214);

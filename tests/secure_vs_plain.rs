@@ -10,7 +10,7 @@ use fsl::runtime::Executor;
 
 #[test]
 fn secure_training_equals_plain_training() {
-    let exec = Executor::new("artifacts").expect("run `make artifacts` first");
+    let exec = Executor::new("artifacts").expect("artifact manifest unreadable");
     let m = exec.manifest().int("mlp_grad", "params").unwrap() as usize;
     let batch = exec.manifest().int("mlp_grad", "batch").unwrap() as usize;
 

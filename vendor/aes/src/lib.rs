@@ -1,0 +1,359 @@
+//! Vendored, dependency-free subset of the `aes` crate: AES-128
+//! encryption only, with the `Block` / `cipher::{KeyInit, BlockEncrypt}`
+//! API surface the `fsl` PRG uses.
+//!
+//! The build environment has no network access to crates.io, so this
+//! path crate stands in for the real `aes` crate. It is a portable
+//! table-based (T-table) software implementation — no AES-NI intrinsics —
+//! whose S-box and round tables are *derived* at first use from the
+//! GF(2^8) field definition rather than transcribed, and whose output is
+//! pinned to the FIPS-197 test vectors below.
+//!
+//! Security note: a table-based software AES is not constant-time. For
+//! this repository that is acceptable — AES is used as a *PRG* on secret
+//! seeds inside a research simulation, not as an encryption service
+//! exposed to co-located attackers. Swapping in the real `aes` crate
+//! (hardware AES-NI, constant-time) requires no source changes in `fsl`.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::OnceLock;
+
+/// One 16-byte AES block.
+///
+/// Mirrors the `aes` crate's `Block` (a `GenericArray<u8, U16>`): derefs
+/// to `[u8; 16]`, is `Copy`, and converts into a plain byte array.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Block([u8; 16]);
+
+impl Block {
+    /// Copy a 16-byte slice into a fresh block.
+    ///
+    /// # Panics
+    /// Panics if `slice.len() != 16` (same contract as `GenericArray`).
+    pub fn clone_from_slice(slice: &[u8]) -> Self {
+        let mut b = [0u8; 16];
+        b.copy_from_slice(slice);
+        Block(b)
+    }
+}
+
+impl Deref for Block {
+    type Target = [u8; 16];
+    fn deref(&self) -> &[u8; 16] {
+        &self.0
+    }
+}
+
+impl DerefMut for Block {
+    fn deref_mut(&mut self) -> &mut [u8; 16] {
+        &mut self.0
+    }
+}
+
+impl From<Block> for [u8; 16] {
+    fn from(b: Block) -> [u8; 16] {
+        b.0
+    }
+}
+
+impl From<[u8; 16]> for Block {
+    fn from(b: [u8; 16]) -> Block {
+        Block(b)
+    }
+}
+
+/// Cipher construction / usage traits (subset of the `cipher` crate).
+pub mod cipher {
+    use std::fmt;
+
+    /// Error returned when a key slice has the wrong length.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub struct InvalidLength;
+
+    impl fmt::Display for InvalidLength {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("invalid key length")
+        }
+    }
+
+    impl std::error::Error for InvalidLength {}
+
+    /// Construct a cipher from key material.
+    pub trait KeyInit: Sized {
+        /// Build from a key slice; errors if the length is wrong.
+        fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength>;
+    }
+
+    /// Block-encryption operations.
+    pub trait BlockEncrypt {
+        /// Encrypt one block in place.
+        fn encrypt_block(&self, block: &mut super::Block);
+
+        /// Encrypt a run of blocks in place.
+        fn encrypt_blocks(&self, blocks: &mut [super::Block]) {
+            for b in blocks {
+                self.encrypt_block(b);
+            }
+        }
+    }
+}
+
+// ------------------------- table construction ---------------------------
+
+/// GF(2^8) doubling with the AES reduction polynomial x^8+x^4+x^3+x+1.
+#[inline]
+const fn xtime(a: u8) -> u8 {
+    if a & 0x80 != 0 {
+        (a << 1) ^ 0x1b
+    } else {
+        a << 1
+    }
+}
+
+/// GF(2^8) multiplication (shift-and-add).
+const fn gmul(mut a: u8, mut b: u8) -> u8 {
+    let mut p = 0u8;
+    let mut i = 0;
+    while i < 8 {
+        if b & 1 != 0 {
+            p ^= a;
+        }
+        a = xtime(a);
+        b >>= 1;
+        i += 1;
+    }
+    p
+}
+
+/// GF(2^8) inverse via a^254 (a^255 = 1 for a ≠ 0; inv(0) := 0).
+const fn ginv(a: u8) -> u8 {
+    if a == 0 {
+        return 0;
+    }
+    let mut r = 1u8;
+    let mut base = a;
+    let mut e = 254u32;
+    while e > 0 {
+        if e & 1 != 0 {
+            r = gmul(r, base);
+        }
+        base = gmul(base, base);
+        e >>= 1;
+    }
+    r
+}
+
+/// The AES S-box, derived from the field definition (inversion followed
+/// by the FIPS-197 affine transform) instead of transcribed.
+const fn build_sbox() -> [u8; 256] {
+    let mut sbox = [0u8; 256];
+    let mut x = 0usize;
+    while x < 256 {
+        let i = ginv(x as u8);
+        sbox[x] = i
+            ^ i.rotate_left(1)
+            ^ i.rotate_left(2)
+            ^ i.rotate_left(3)
+            ^ i.rotate_left(4)
+            ^ 0x63;
+        x += 1;
+    }
+    sbox
+}
+
+const SBOX: [u8; 256] = build_sbox();
+
+/// Four round tables combining SubBytes + ShiftRows + MixColumns.
+/// `TE[0][x] = (2·S[x], S[x], S[x], 3·S[x])` packed big-endian; the other
+/// three are byte rotations of the first.
+fn tables() -> &'static [[u32; 256]; 4] {
+    static TABLES: OnceLock<[[u32; 256]; 4]> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut te = [[0u32; 256]; 4];
+        for x in 0..256 {
+            let s = SBOX[x];
+            let t0 = (gmul(2, s) as u32) << 24
+                | (s as u32) << 16
+                | (s as u32) << 8
+                | gmul(3, s) as u32;
+            te[0][x] = t0;
+            te[1][x] = t0.rotate_right(8);
+            te[2][x] = t0.rotate_right(16);
+            te[3][x] = t0.rotate_right(24);
+        }
+        te
+    })
+}
+
+// ------------------------------ AES-128 ---------------------------------
+
+/// AES-128 block cipher (encryption only — the PRG and CTR constructions
+/// in `fsl` never decrypt).
+#[derive(Clone)]
+pub struct Aes128 {
+    /// 11 round keys × 4 big-endian words.
+    round_keys: [u32; 44],
+}
+
+impl Aes128 {
+    fn expand_key(key: &[u8; 16]) -> [u32; 44] {
+        let mut w = [0u32; 44];
+        for (i, wi) in w.iter_mut().take(4).enumerate() {
+            *wi = u32::from_be_bytes([
+                key[4 * i],
+                key[4 * i + 1],
+                key[4 * i + 2],
+                key[4 * i + 3],
+            ]);
+        }
+        let mut rcon: u8 = 1;
+        for i in 4..44 {
+            let mut t = w[i - 1];
+            if i % 4 == 0 {
+                // RotWord then SubWord then Rcon.
+                t = t.rotate_left(8);
+                t = (SBOX[(t >> 24) as usize] as u32) << 24
+                    | (SBOX[(t >> 16) as usize & 0xff] as u32) << 16
+                    | (SBOX[(t >> 8) as usize & 0xff] as u32) << 8
+                    | SBOX[t as usize & 0xff] as u32;
+                t ^= (rcon as u32) << 24;
+                rcon = xtime(rcon);
+            }
+            w[i] = w[i - 4] ^ t;
+        }
+        w
+    }
+}
+
+impl cipher::KeyInit for Aes128 {
+    fn new_from_slice(key: &[u8]) -> Result<Self, cipher::InvalidLength> {
+        let key: &[u8; 16] = key.try_into().map_err(|_| cipher::InvalidLength)?;
+        Ok(Aes128 {
+            round_keys: Self::expand_key(key),
+        })
+    }
+}
+
+impl cipher::BlockEncrypt for Aes128 {
+    fn encrypt_block(&self, block: &mut Block) {
+        let te = tables();
+        let w = &self.round_keys;
+        let b = &block.0;
+        let mut s0 = u32::from_be_bytes([b[0], b[1], b[2], b[3]]) ^ w[0];
+        let mut s1 = u32::from_be_bytes([b[4], b[5], b[6], b[7]]) ^ w[1];
+        let mut s2 = u32::from_be_bytes([b[8], b[9], b[10], b[11]]) ^ w[2];
+        let mut s3 = u32::from_be_bytes([b[12], b[13], b[14], b[15]]) ^ w[3];
+        for round in 1..10 {
+            let rk = &w[round * 4..round * 4 + 4];
+            let t0 = te[0][(s0 >> 24) as usize]
+                ^ te[1][(s1 >> 16) as usize & 0xff]
+                ^ te[2][(s2 >> 8) as usize & 0xff]
+                ^ te[3][s3 as usize & 0xff]
+                ^ rk[0];
+            let t1 = te[0][(s1 >> 24) as usize]
+                ^ te[1][(s2 >> 16) as usize & 0xff]
+                ^ te[2][(s3 >> 8) as usize & 0xff]
+                ^ te[3][s0 as usize & 0xff]
+                ^ rk[1];
+            let t2 = te[0][(s2 >> 24) as usize]
+                ^ te[1][(s3 >> 16) as usize & 0xff]
+                ^ te[2][(s0 >> 8) as usize & 0xff]
+                ^ te[3][s1 as usize & 0xff]
+                ^ rk[2];
+            let t3 = te[0][(s3 >> 24) as usize]
+                ^ te[1][(s0 >> 16) as usize & 0xff]
+                ^ te[2][(s1 >> 8) as usize & 0xff]
+                ^ te[3][s2 as usize & 0xff]
+                ^ rk[3];
+            s0 = t0;
+            s1 = t1;
+            s2 = t2;
+            s3 = t3;
+        }
+        // Final round: SubBytes + ShiftRows + AddRoundKey (no MixColumns).
+        let rk = &w[40..44];
+        let sub = |a: u32, b: u32, c: u32, d: u32, k: u32| -> u32 {
+            ((SBOX[(a >> 24) as usize] as u32) << 24
+                | (SBOX[(b >> 16) as usize & 0xff] as u32) << 16
+                | (SBOX[(c >> 8) as usize & 0xff] as u32) << 8
+                | SBOX[d as usize & 0xff] as u32)
+                ^ k
+        };
+        let o0 = sub(s0, s1, s2, s3, rk[0]);
+        let o1 = sub(s1, s2, s3, s0, rk[1]);
+        let o2 = sub(s2, s3, s0, s1, rk[2]);
+        let o3 = sub(s3, s0, s1, s2, rk[3]);
+        block.0[0..4].copy_from_slice(&o0.to_be_bytes());
+        block.0[4..8].copy_from_slice(&o1.to_be_bytes());
+        block.0[8..12].copy_from_slice(&o2.to_be_bytes());
+        block.0[12..16].copy_from_slice(&o3.to_be_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::cipher::{BlockEncrypt, KeyInit};
+    use super::*;
+
+    fn hex(s: &str) -> Vec<u8> {
+        (0..s.len())
+            .step_by(2)
+            .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn sbox_known_entries() {
+        assert_eq!(SBOX[0x00], 0x63);
+        assert_eq!(SBOX[0x01], 0x7c);
+        assert_eq!(SBOX[0x53], 0xed);
+        assert_eq!(SBOX[0xff], 0x16);
+    }
+
+    #[test]
+    fn fips197_appendix_c1() {
+        // Key 000102…0f, plaintext 00112233…eeff.
+        let key: Vec<u8> = (0..16).collect();
+        let cipher = Aes128::new_from_slice(&key).unwrap();
+        let mut b = Block::clone_from_slice(&hex("00112233445566778899aabbccddeeff"));
+        cipher.encrypt_block(&mut b);
+        assert_eq!(&b[..], &hex("69c4e0d86a7b0430d8cdb78070b4c55a")[..]);
+    }
+
+    #[test]
+    fn fips197_appendix_b() {
+        let cipher = Aes128::new_from_slice(&hex("2b7e151628aed2a6abf7158809cf4f3c")).unwrap();
+        let mut b = Block::clone_from_slice(&hex("3243f6a8885a308d313198a2e0370734"));
+        cipher.encrypt_block(&mut b);
+        assert_eq!(&b[..], &hex("3925841d02dc09fbdc118597196a0b32")[..]);
+    }
+
+    #[test]
+    fn key_schedule_first_expanded_word() {
+        // FIPS-197 Appendix A: w4 = a0fafe17 for the Appendix-B key.
+        let k = hex("2b7e151628aed2a6abf7158809cf4f3c");
+        let w = Aes128::expand_key(k.as_slice().try_into().unwrap());
+        assert_eq!(w[4], 0xa0fafe17);
+        assert_eq!(w[43], 0xb6630ca6);
+    }
+
+    #[test]
+    fn blocks_batch_matches_single() {
+        let cipher = Aes128::new_from_slice(&[7u8; 16]).unwrap();
+        let mut batch: Vec<Block> = (0..67u8)
+            .map(|i| Block::clone_from_slice(&[i; 16]))
+            .collect();
+        let mut singles = batch.clone();
+        cipher.encrypt_blocks(&mut batch);
+        for b in &mut singles {
+            cipher.encrypt_block(b);
+        }
+        assert_eq!(batch, singles);
+    }
+
+    #[test]
+    fn wrong_key_length_rejected() {
+        assert!(Aes128::new_from_slice(&[0u8; 15]).is_err());
+        assert!(Aes128::new_from_slice(&[0u8; 32]).is_err());
+    }
+}

@@ -23,7 +23,7 @@ use fsl::data::{TextDataset, TrecCensus};
 use fsl::group::{fixed_decode, fixed_encode, MegaElem};
 use fsl::hashing::CuckooParams;
 use fsl::metrics::bits_to_mb;
-use fsl::protocol::{mega, psr, ssa, Session, SessionParams};
+use fsl::protocol::{mega, psr, ssa, AggregationEngine, Session, SessionParams};
 use fsl::runtime::Executor;
 use std::collections::HashMap;
 
@@ -171,8 +171,9 @@ fn main() -> Result<()> {
             .iter()
             .map(|(sel, dl)| ssa::client_update(&session, sel, dl, &mut rng).map_err(|e| anyhow!("{e}")))
             .collect::<Result<Vec<_>>>()?;
-        let share0 = ssa::server_aggregate(&session, &keys0.iter().map(|b| b.server_keys(0)).collect::<Vec<_>>());
-        let share1 = ssa::server_aggregate(&session, &keys0.iter().map(|b| b.server_keys(1)).collect::<Vec<_>>());
+        let engine = AggregationEngine::auto();
+        let share0 = engine.aggregate_keys(&session, &keys0.iter().map(|b| b.server_keys(0)).collect::<Vec<_>>());
+        let share1 = engine.aggregate_keys(&session, &keys0.iter().map(|b| b.server_keys(1)).collect::<Vec<_>>());
         let mega_delta = ssa::reconstruct(&share0, &share1);
         let other_delta = trivial_sa::aggregate(m_total - m_emb, &other_uploads);
 

@@ -16,7 +16,7 @@ use anyhow::{anyhow, Result};
 use fsl::crypto::rng::Rng;
 use fsl::hashing::CuckooParams;
 use fsl::metrics::bits_to_mb;
-use fsl::protocol::{psu, ssa, udpf_ssa, Session, SessionParams};
+use fsl::protocol::{psu, ssa, udpf_ssa, AggregationEngine, Session, SessionParams};
 
 fn main() -> Result<()> {
     let m = 1u64 << 20;
@@ -72,8 +72,9 @@ fn main() -> Result<()> {
         .iter()
         .map(|(sel, dl)| ssa::client_update::<u64>(&reduced, sel, dl, &mut rng).map_err(|e| anyhow!("{e}")))
         .collect::<Result<Vec<_>>>()?;
-    let sh0 = ssa::server_aggregate(&reduced, &batches.iter().map(|b| b.server_keys(0)).collect::<Vec<_>>());
-    let sh1 = ssa::server_aggregate(&reduced, &batches.iter().map(|b| b.server_keys(1)).collect::<Vec<_>>());
+    let engine = AggregationEngine::auto();
+    let sh0 = engine.aggregate_keys(&reduced, &batches.iter().map(|b| b.server_keys(0)).collect::<Vec<_>>());
+    let sh1 = engine.aggregate_keys(&reduced, &batches.iter().map(|b| b.server_keys(1)).collect::<Vec<_>>());
     let delta = ssa::reconstruct(&sh0, &sh1);
 
     // Verify against plaintext.

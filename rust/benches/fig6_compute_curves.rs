@@ -6,13 +6,15 @@
 
 use fsl::crypto::rng::Rng;
 use fsl::hashing::{scale_factor_for, CuckooParams};
-use fsl::protocol::{ssa, Session, SessionParams};
+use fsl::protocol::{ssa, AggregationEngine, Session, SessionParams};
 use std::time::Instant;
 
 fn main() {
     let full = std::env::var("FSL_FULL").is_ok();
     let max_log = if full { 20 } else { 18 };
+    let engine = AggregationEngine::from_env();
     println!("# Figure 6 series: m,c,gen_ms,server_ms (client DPF Gen; server full-domain eval+agg)");
+    println!("# engine workers: {} (set FSL_THREADS to shard)", engine.threads());
     println!("m,c,gen_ms,server_ms");
     for log_m in (10..=max_log).step_by(2) {
         let m = 1u64 << log_m;
@@ -37,8 +39,7 @@ fn main() {
 
             let keys = batch.server_keys(0);
             let t1 = Instant::now();
-            let mut acc = vec![0u64; m as usize];
-            ssa::server_aggregate_into(&session, &keys, &mut acc);
+            let acc = engine.aggregate_keys(&session, std::slice::from_ref(&keys));
             let server_ms = t1.elapsed().as_secs_f64() * 1e3;
             std::hint::black_box(&acc);
 

@@ -7,12 +7,14 @@
 use fsl::crypto::rng::Rng;
 use fsl::hashing::{scale_factor_for, CuckooParams};
 use fsl::metrics::bits_to_mb;
-use fsl::protocol::{ssa, Session, SessionParams};
+use fsl::protocol::{ssa, AggregationEngine, Session, SessionParams};
 use std::time::Instant;
 
 fn main() {
     let m = 1u64 << 15;
+    let engine = AggregationEngine::from_env();
     println!("# Figure 7 series at m=2^15: c,gen_ms,server_ms,upload_mb(l=128 model)");
+    println!("# engine workers: {} (set FSL_THREADS to shard)", engine.threads());
     println!("c,gen_ms,server_ms,upload_mb");
     let mut first_server = None;
     let mut last_server = None;
@@ -38,8 +40,7 @@ fn main() {
 
         let keys = batch.server_keys(0);
         let t1 = Instant::now();
-        let mut acc = vec![0u64; m as usize];
-        ssa::server_aggregate_into(&session, &keys, &mut acc);
+        let acc = engine.aggregate_keys(&session, std::slice::from_ref(&keys));
         let server_ms = t1.elapsed().as_secs_f64() * 1e3;
         std::hint::black_box(&acc);
 

@@ -8,7 +8,7 @@ use fsl::baseline::niu::{niu_upload_mb, ours_upload_mb, DinCensus};
 use fsl::crypto::rng::Rng;
 use fsl::group::MegaElem;
 use fsl::hashing::CuckooParams;
-use fsl::protocol::{ssa, Session, SessionParams};
+use fsl::protocol::{ssa, AggregationEngine, Session, SessionParams};
 use std::time::Instant;
 
 fn main() {
@@ -49,9 +49,10 @@ fn main() {
     let t0 = Instant::now();
     let batch = ssa::client_update(&session, &sel, &deltas, &mut rng).unwrap();
     let gen = t0.elapsed();
+    let engine = AggregationEngine::from_env();
+    let keys = batch.server_keys(0);
     let t1 = Instant::now();
-    let mut acc = vec![MegaElem::<18>([0; 18]); rows as usize];
-    ssa::server_aggregate_into(&session, &batch.server_keys(0), &mut acc);
+    let acc = engine.aggregate_keys(&session, std::slice::from_ref(&keys));
     let server = t1.elapsed();
     std::hint::black_box(&acc);
     println!(

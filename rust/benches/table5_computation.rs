@@ -11,7 +11,7 @@
 use fsl::crypto::rng::Rng;
 use fsl::dpf;
 use fsl::hashing::{scale_factor_for, CuckooParams};
-use fsl::protocol::{Session, SessionParams};
+use fsl::protocol::{AggregationEngine, Session, SessionParams};
 use std::time::{Duration, Instant};
 
 struct Row {
@@ -19,9 +19,10 @@ struct Row {
     gen: Duration,
     eval: Duration,
     agg: Duration,
+    engine: Duration,
 }
 
-fn run_cell(m: u64, c: f64, seed: u64) -> Row {
+fn run_cell(m: u64, c: f64, seed: u64, engine: &AggregationEngine) -> Row {
     let k = ((m as f64 * c) as usize).max(1);
     let session = Session::new_full(SessionParams {
         m,
@@ -62,17 +63,35 @@ fn run_cell(m: u64, c: f64, seed: u64) -> Row {
     }
     let agg = t2.elapsed();
     std::hint::black_box(&acc);
+
+    // The production path: the unified engine does eval + scatter in one
+    // sharded pass (stash keys included), reusing per-worker buffers.
+    let t3 = Instant::now();
+    let share = engine.aggregate_keys(&session, std::slice::from_ref(&keys));
+    let eng = t3.elapsed();
+    std::hint::black_box(&share);
     let _ = c;
-    Row { m, gen, eval, agg }
+    Row {
+        m,
+        gen,
+        eval,
+        agg,
+        engine: eng,
+    }
 }
 
 fn main() {
     let full = std::env::var("FSL_FULL").is_ok();
+    let engine = AggregationEngine::from_env();
     println!("# Table 5: computation efficiency of basic SSA (one client / one server), seconds");
     println!("# paper @2^15/10%: Gen 0.838s Eval 0.253s Agg 0.018s (64-core Xeon, l=128)");
     println!(
-        "{:>8} {:>5} {:>10} {:>10} {:>10}",
-        "m", "c", "Gen(s)", "Eval(s)", "Agg(s)"
+        "# Engine(s) = unified sharded eval+agg pass, {} worker(s) (set FSL_THREADS)",
+        engine.threads()
+    );
+    println!(
+        "{:>8} {:>5} {:>10} {:>10} {:>10} {:>10}",
+        "m", "c", "Gen(s)", "Eval(s)", "Agg(s)", "Engine(s)"
     );
     let mut grid: Vec<(u64, f64)> = Vec::new();
     for &m in &[1u64 << 10, 1 << 15, 1 << 20] {
@@ -85,14 +104,15 @@ fn main() {
     }
     let mut rows = Vec::new();
     for (m, c) in grid {
-        let row = run_cell(m, c, 0xBEEF ^ m);
+        let row = run_cell(m, c, 0xBEEF ^ m, &engine);
         println!(
-            "{:>8} {:>5} {:>10.4} {:>10.4} {:>10.4}",
+            "{:>8} {:>5} {:>10.4} {:>10.4} {:>10.4} {:>10.4}",
             format!("2^{}", m.trailing_zeros()),
             format!("{}%", (c * 100.0) as u32),
             row.gen.as_secs_f64(),
             row.eval.as_secs_f64(),
-            row.agg.as_secs_f64()
+            row.agg.as_secs_f64(),
+            row.engine.as_secs_f64()
         );
         rows.push(row);
     }

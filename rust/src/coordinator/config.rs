@@ -29,6 +29,11 @@ pub struct FslConfig {
     pub latency_us: u64,
     /// Evaluate test accuracy every this many rounds (0 = never).
     pub eval_every: usize,
+    /// Server aggregation workers per server (0 = default: half the
+    /// available cores each, since the two servers aggregate concurrently
+    /// in-process; the paper enables multi-threading for all
+    /// experiments, §7.2).
+    pub threads: usize,
 }
 
 impl Default for FslConfig {
@@ -46,6 +51,7 @@ impl Default for FslConfig {
             seed: 42,
             latency_us: 0,
             eval_every: 10,
+            threads: 0,
         }
     }
 }

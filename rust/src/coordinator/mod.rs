@@ -20,6 +20,6 @@ pub use client::{local_train, sparse_delta, ClientRoundOutput};
 pub use config::FslConfig;
 pub use psr_round::{run_psr_round, PsrRoundResult};
 pub use round::{run_fsl_training, run_plain_training, RoundStats, TrainingLog};
-pub use server::{run_ssa_round, SsaRoundResult};
+pub use server::{run_ssa_round, run_ssa_round_with, SsaRoundResult};
 pub use topk::{top_k_groups, top_k_magnitude};
 pub use verified::{run_verified_ssa_round, VerifiedSsaResult};

@@ -2,11 +2,11 @@
 
 use super::client::{local_train, sparse_delta};
 use super::config::FslConfig;
-use super::server::run_ssa_round;
+use super::server::run_ssa_round_with;
 use crate::crypto::rng::Rng;
 use crate::group::fixed_decode;
 use crate::hashing::CuckooParams;
-use crate::protocol::{Session, SessionParams};
+use crate::protocol::{AggregationEngine, Session, SessionParams};
 use crate::runtime::Executor;
 use anyhow::Result;
 use std::time::{Duration, Instant};
@@ -70,6 +70,7 @@ pub fn run_fsl_training(
             ..cfg.cuckoo
         },
     });
+    let engine = AggregationEngine::from_config(cfg.threads);
 
     for round in 0..cfg.rounds {
         let mut rng = Rng::new(cfg.seed ^ (round as u64).wrapping_mul(0x9e37_79b9));
@@ -100,11 +101,12 @@ pub fn run_fsl_training(
         let train_time = t_train.elapsed();
 
         // Secure aggregation round over the shared per-task session.
-        let res = run_ssa_round::<u64>(
+        let res = run_ssa_round_with::<u64>(
             &session,
             &client_inputs,
             &mut rng,
             Duration::from_micros(cfg.latency_us),
+            &engine,
         )?;
 
         // FedAvg apply: params += decode(Δw) / P.

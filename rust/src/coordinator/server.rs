@@ -6,12 +6,13 @@
 //! vector and reconstructs `Δw`. `S_1` is the worker: short uploads
 //! (master seed only) from clients, public parts from `S_0`.
 
+use crate::dpf::PublicPart;
 use crate::group::Group;
 use crate::net;
+use crate::protocol::aggregate::{AggregationEngine, PublicsUpload};
 use crate::protocol::msg;
 use crate::protocol::{ssa, Session};
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 /// Everything measured in one SSA round.
@@ -30,14 +31,30 @@ pub struct SsaRoundResult<G: Group> {
     pub server_time: Duration,
 }
 
-/// Run one SSA round: `clients[i] = (selections, deltas)`. Returns the
-/// reconstructed update. Spawns the two server threads, drives the
-/// clients on the caller thread (Fig. 1 topology, channels metered).
+/// [`run_ssa_round_with`] under a default multi-threaded engine (the
+/// paper enables multi-threading for all experiments, §7.2). The two
+/// server threads aggregate *concurrently* on one machine here, so each
+/// gets half the cores — `server_time` then measures one server's real
+/// throughput instead of 2× oversubscription.
 pub fn run_ssa_round<G: Group>(
     session: &Session,
     clients: &[(Vec<u64>, Vec<G>)],
     rng: &mut crate::crypto::rng::Rng,
     latency: Duration,
+) -> Result<SsaRoundResult<G>> {
+    run_ssa_round_with(session, clients, rng, latency, &AggregationEngine::per_coloc_server())
+}
+
+/// Run one SSA round: `clients[i] = (selections, deltas)`. Returns the
+/// reconstructed update. Spawns the two server threads, drives the
+/// clients on the caller thread (Fig. 1 topology, channels metered); both
+/// servers aggregate through `engine` (zero-copy publics path).
+pub fn run_ssa_round_with<G: Group>(
+    session: &Session,
+    clients: &[(Vec<u64>, Vec<G>)],
+    rng: &mut crate::crypto::rng::Rng,
+    latency: Duration,
+    engine: &AggregationEngine,
 ) -> Result<SsaRoundResult<G>> {
     let n = clients.len();
     let (client_links, server_sides, inter) = net::topology(n, latency);
@@ -74,20 +91,29 @@ pub fn run_ssa_round<G: Group>(
                 msks.push(up.msk);
             }
             // Public parts forwarded by S_0, tagged with client index.
-            let mut publics = HashMap::new();
+            let mut publics: Vec<Option<Vec<PublicPart<G>>>> = (0..n).map(|_| None).collect();
             for _ in 0..n {
                 let raw = inter1.recv()?;
                 let idx = u32::from_le_bytes(raw[..4].try_into().unwrap()) as usize;
+                let slot = publics
+                    .get_mut(idx)
+                    .ok_or_else(|| anyhow!("S1: bad client index {idx}"))?;
                 let up = msg::decode_key_upload::<G>(&raw[4..])
                     .ok_or_else(|| anyhow!("S1: bad forwarded publics"))?;
-                publics.insert(idx, up.publics.ok_or_else(|| anyhow!("S1: no publics"))?);
+                *slot = Some(up.publics.ok_or_else(|| anyhow!("S1: no publics"))?);
             }
+            let publics: Vec<Vec<PublicPart<G>>> = publics
+                .into_iter()
+                .enumerate()
+                .map(|(i, p)| p.ok_or_else(|| anyhow!("S1: missing {i}")))
+                .collect::<Result<_>>()?;
             let t = Instant::now();
-            let mut acc = vec![G::zero(); session.domain_size()];
-            for (i, msk) in msks.iter().enumerate() {
-                let pubs = publics.remove(&i).ok_or_else(|| anyhow!("S1: missing {i}"))?;
-                ssa::server_aggregate_publics(session, &pubs, msk, 1, &mut acc);
-            }
+            let uploads: Vec<PublicsUpload<'_, G>> = publics
+                .iter()
+                .zip(&msks)
+                .map(|(p, msk)| PublicsUpload { publics: p, msk })
+                .collect();
+            let acc = engine.aggregate_publics(session, 1, &uploads);
             let server_time = t.elapsed();
             inter1.send(msg::encode_shares(&acc))?;
             Ok((acc, server_time, inter1.meter.sent()))
@@ -111,10 +137,14 @@ pub fn run_ssa_round<G: Group>(
             batches.push(batch);
         }
         let t = Instant::now();
-        let mut acc0 = vec![G::zero(); session.domain_size()];
-        for batch in &batches {
-            ssa::server_aggregate_publics(session, &batch.publics, &batch.msk[0], 0, &mut acc0);
-        }
+        let uploads: Vec<PublicsUpload<'_, G>> = batches
+            .iter()
+            .map(|b| PublicsUpload {
+                publics: &b.publics,
+                msk: &b.msk[0],
+            })
+            .collect();
+        let acc0 = engine.aggregate_publics(session, 0, &uploads);
         let s0_time = t.elapsed();
 
         let share1 = msg::decode_shares::<G>(&inter0.recv()?)
@@ -168,6 +198,39 @@ mod tests {
         assert_eq!(res.delta, expected);
         assert!(res.client_upload_bytes > 0);
         assert!(res.server_exchange_bytes > 0);
+    }
+
+    #[test]
+    fn engine_width_does_not_change_the_result() {
+        let session = Session::new_full(SessionParams {
+            m: 1 << 9,
+            k: 16,
+            cuckoo: CuckooParams::default(),
+        });
+        let clients: Vec<(Vec<u64>, Vec<u64>)> = {
+            let mut rng = Rng::new(152);
+            (0..3)
+                .map(|c| {
+                    let sel = rng.sample_distinct(16, 1 << 9);
+                    let deltas = sel.iter().map(|&x| x + c).collect();
+                    (sel, deltas)
+                })
+                .collect()
+        };
+        let mut deltas = Vec::new();
+        for threads in [1usize, 8] {
+            let mut rng = Rng::new(153);
+            let res = run_ssa_round_with(
+                &session,
+                &clients,
+                &mut rng,
+                Duration::ZERO,
+                &AggregationEngine::new(threads),
+            )
+            .unwrap();
+            deltas.push(res.delta);
+        }
+        assert_eq!(deltas[0], deltas[1]);
     }
 
     #[test]

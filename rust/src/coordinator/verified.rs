@@ -12,7 +12,7 @@
 
 use crate::crypto::field::Fp;
 use crate::crypto::rng::Rng;
-use crate::protocol::{ssa, Session};
+use crate::protocol::{ssa, AggregationEngine, Session};
 use crate::sketch::{self, SecureMul};
 use anyhow::{anyhow, Result};
 
@@ -33,6 +33,7 @@ pub fn run_verified_ssa_round(
 ) -> Result<VerifiedSsaResult> {
     let mut rng = Rng::new(server_shared_seed);
     let mut mul = SecureMul::new(server_shared_seed ^ SKETCH_TAG);
+    let engine = AggregationEngine::serial();
     let mut rejected = Vec::new();
     let mut acc0 = vec![Fp::zero(); session.domain_size()];
     let mut acc1 = vec![Fp::zero(); session.domain_size()];
@@ -47,8 +48,8 @@ pub fn run_verified_ssa_round(
             rejected.push(i);
             continue;
         }
-        ssa::server_aggregate_into(session, &keys0, &mut acc0);
-        ssa::server_aggregate_into(session, &keys1, &mut acc1);
+        engine.aggregate_client_keys_into(session, &keys0, &mut acc0);
+        engine.aggregate_client_keys_into(session, &keys1, &mut acc1);
     }
     if acc0.is_empty() {
         return Err(anyhow!("empty domain"));

@@ -1,6 +1,6 @@
 //! DPF evaluation: single-point walk and full-domain traversal.
 
-use super::key::DpfKey;
+use super::key::{CorrectionWord, DpfKey};
 use crate::crypto::prg::{double, expand_one, Seed};
 use crate::group::Group;
 
@@ -101,50 +101,64 @@ pub fn full_eval_with<G: Group>(
     ws: &mut EvalWorkspace,
     out: &mut Vec<G>,
 ) {
-    full_eval_parts(
-        key.party,
-        key.depth,
-        &key.root_seed,
-        &key.cws,
-        &key.cw_out,
-        num_points,
-        ws,
-        out,
-    );
+    full_eval_parts(KeyView::from(key), num_points, ws, out);
 }
 
-/// Full-domain evaluation from borrowed key components — the server-side
-/// hot path evaluates straight off a client's decoded [`PublicPart`]s plus
-/// a PRF-derived root seed, without materialising per-server `DpfKey`s
+/// Borrowed view of one DPF key's components — what [`full_eval_parts`]
+/// consumes. A [`DpfKey`] converts via `From`; the server hot path instead
+/// builds one directly from a client's decoded [`PublicPart`] plus a
+/// PRF-derived root seed, so no per-server `DpfKey` is ever materialised
 /// (cloning every bin's correction words cost ~20 MB of memcpy per client
 /// per server at m ≈ 2·10^6 — §Perf iteration 5).
 ///
 /// [`PublicPart`]: super::master::PublicPart
-#[allow(clippy::too_many_arguments)]
+#[derive(Clone, Copy)]
+pub struct KeyView<'a, G: Group> {
+    /// Evaluating party b ∈ {0, 1}.
+    pub party: u8,
+    /// Tree depth.
+    pub depth: usize,
+    /// This party's root seed.
+    pub root_seed: &'a Seed,
+    /// Per-level correction words.
+    pub cws: &'a [CorrectionWord],
+    /// Output correction word.
+    pub cw_out: &'a G,
+}
+
+impl<'a, G: Group> From<&'a DpfKey<G>> for KeyView<'a, G> {
+    fn from(k: &'a DpfKey<G>) -> Self {
+        KeyView {
+            party: k.party,
+            depth: k.depth,
+            root_seed: &k.root_seed,
+            cws: &k.cws,
+            cw_out: &k.cw_out,
+        }
+    }
+}
+
+/// Full-domain evaluation from a borrowed [`KeyView`] — the server-side
+/// hot path shared by every [`crate::protocol::aggregate::EvalSource`].
 pub fn full_eval_parts<G: Group>(
-    party: u8,
-    depth: usize,
-    root_seed: &Seed,
-    cws: &[super::key::CorrectionWord],
-    cw_out: &G,
+    key: KeyView<'_, G>,
     num_points: usize,
     ws: &mut EvalWorkspace,
     out: &mut Vec<G>,
 ) {
-    debug_assert!(num_points <= 1usize << depth);
+    debug_assert!(num_points <= 1usize << key.depth);
     // Breadth-first with reused ping-pong buffers. A DFS variant (only a
     // depth-sized stack) was tried and measured ~25% SLOWER — the
     // level-order loop keeps the AES stream independent across iterations
     // so the OoO core pipelines it; DFS serialises parent→child
     // dependencies (§Perf iteration 6, reverted).
     ws.cur.clear();
-    ws.cur.push((*root_seed, party == 1));
-    for (level, cw) in cws.iter().enumerate().take(depth) {
-        let span = 1usize << (depth - level - 1);
+    ws.cur.push((*key.root_seed, key.party == 1));
+    for (level, cw) in key.cws.iter().enumerate().take(key.depth) {
+        let span = 1usize << (key.depth - level - 1);
         let needed = num_points.div_ceil(span).max(1);
         ws.next.clear();
-        'outer: for i in 0..ws.cur.len() {
-            let (s, t) = ws.cur[i];
+        'outer: for &(s, t) in &ws.cur {
             let (l, r) = double(&s);
             for (bit, child) in [(false, l), (true, r)] {
                 if ws.next.len() >= needed {
@@ -163,33 +177,74 @@ pub fn full_eval_parts<G: Group>(
         }
         std::mem::swap(&mut ws.cur, &mut ws.next);
     }
-    let neg = party == 1;
+    let neg = key.party == 1;
     out.clear();
     out.extend(ws.cur.iter().take(num_points).map(|(s, t)| {
         let mut v = G::convert(s);
         if *t {
-            v.add_assign(cw_out);
+            v.add_assign(key.cw_out);
         }
         v.cneg(neg)
     }));
 }
 
-/// Batched full-domain evaluation of MANY small trees at once — the SSA /
-/// PSR server path evaluates one DPF per cuckoo bin, and each bin's tree
-/// is tiny (⌈log Θ⌉ ≈ 6–9 levels). Expanding them level-synchronously
-/// turns B separate walks into `max_depth` pairs of wide AES batches the
-/// AES-NI pipeline can chew through.
+/// Full-domain evaluation of many keys in one call — the SSA / PSR server
+/// path evaluates one DPF per cuckoo bin, with `num_points[j]` bounding
+/// bin `j`'s output length (its Θ_j). Returns one share vector per key.
 ///
-/// `num_points[j]` bounds bin `j`'s output length (its Θ_j). Returns one
-/// share vector per key.
+/// Deliberately a plain per-key loop over [`full_eval`]: a
+/// level-synchronous cross-bin AES batch was prototyped and measured
+/// *slower* on this core — see "Why per-key full-domain evaluation" in
+/// `docs/ARCHITECTURE.md` for the measurement rationale.
 pub fn full_eval_batch<G: Group>(keys: &[DpfKey<G>], num_points: &[usize]) -> Vec<Vec<G>> {
     assert_eq!(keys.len(), num_points.len());
-    // Measured on this testbed: a level-synchronous cross-bin AES batch
-    // is NOT faster than per-bin walks (scalar AES-NI already saturates
-    // via out-of-order pipelining), so the batch API keeps the simple
-    // per-key implementation. See EXPERIMENTS.md §Perf iterations 1-2.
     keys.iter()
         .zip(num_points)
         .map(|(k, &n)| full_eval(k, n))
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpf::gen;
+
+    fn both_parties(depth: usize, alpha: u64, beta: u64) -> (DpfKey<u64>, DpfKey<u64>) {
+        gen(depth, alpha, &beta, [7; 16], [9; 16])
+    }
+
+    #[test]
+    fn full_eval_zero_points_is_empty() {
+        let (k0, k1) = both_parties(4, 3, 42);
+        assert!(full_eval(&k0, 0).is_empty());
+        let mut ws = EvalWorkspace::default();
+        let mut out = vec![0u64; 5];
+        full_eval_with(&k1, 0, &mut ws, &mut out);
+        assert!(out.is_empty(), "out must be cleared even for 0 points");
+    }
+
+    #[test]
+    fn full_eval_single_point_is_the_first_leaf() {
+        for alpha in [0u64, 5] {
+            let (k0, k1) = both_parties(4, alpha, 77);
+            let f0 = full_eval(&k0, 1);
+            let f1 = full_eval(&k1, 1);
+            assert_eq!(f0.len(), 1);
+            assert_eq!(f1.len(), 1);
+            let sum = f0[0].wrapping_add(f1[0]);
+            assert_eq!(sum, if alpha == 0 { 77 } else { 0 }, "alpha {alpha}");
+            assert_eq!(f0[0], eval(&k0, 0));
+        }
+    }
+
+    #[test]
+    fn with_variant_matches_allocating_variant() {
+        let (k0, _) = both_parties(6, 9, 1234);
+        let mut ws = EvalWorkspace::default();
+        let mut out = Vec::new();
+        for n in [0usize, 1, 2, 37, 64] {
+            full_eval_with(&k0, n, &mut ws, &mut out);
+            assert_eq!(out, full_eval(&k0, n), "n = {n}");
+        }
+    }
 }

@@ -23,7 +23,9 @@ mod gen;
 mod key;
 mod master;
 
-pub use eval::{eval, full_eval, full_eval_batch, full_eval_parts, full_eval_with, EvalWorkspace};
+pub use eval::{
+    eval, full_eval, full_eval_batch, full_eval_parts, full_eval_with, EvalWorkspace, KeyView,
+};
 pub use gen::gen;
 pub use key::{CorrectionWord, DpfKey};
 pub use master::{gen_batch_with_master, BinPoint, MasterKeyBatch, PublicPart};

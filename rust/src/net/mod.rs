@@ -8,43 +8,66 @@
 use crate::metrics::CommMeter;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// A message in flight, stamped with its simulated delivery deadline.
+struct Envelope {
+    deliver_at: Instant,
+    payload: Vec<u8>,
+}
 
 /// One endpoint of a bidirectional metered channel.
 pub struct Endpoint {
-    tx: Sender<Vec<u8>>,
-    rx: Receiver<Vec<u8>>,
+    tx: Sender<Envelope>,
+    rx: Receiver<Envelope>,
     pub meter: Arc<CommMeter>,
     latency: Duration,
 }
 
 impl Endpoint {
-    /// Send a message (blocking enqueue + simulated one-way latency).
+    /// Send a message: enqueue immediately, stamped with a delivery
+    /// deadline `now + latency`. The latency is slept by the *receiver*
+    /// (residually, in [`Self::recv`]) — sleeping here on the sender
+    /// thread would serialise what the network does in parallel: a client
+    /// sending to S_0 then S_1 would pay 2× one-way latency instead of
+    /// overlapping the two transfers.
     pub fn send(&self, msg: Vec<u8>) -> anyhow::Result<()> {
-        if !self.latency.is_zero() {
-            std::thread::sleep(self.latency);
-        }
+        let deliver_at = Instant::now() + self.latency;
         self.meter.record_send(msg.len());
         self.tx
-            .send(msg)
+            .send(Envelope {
+                deliver_at,
+                payload: msg,
+            })
             .map_err(|_| anyhow::anyhow!("channel closed"))
     }
 
-    /// Receive the next message (blocking).
+    /// Sleep out whatever remains of the envelope's simulated flight time,
+    /// then meter and hand over the payload.
+    fn deliver(&self, env: Envelope) -> Vec<u8> {
+        let now = Instant::now();
+        if env.deliver_at > now {
+            std::thread::sleep(env.deliver_at - now);
+        }
+        self.meter.record_recv(env.payload.len());
+        env.payload
+    }
+
+    /// Receive the next message (blocking until its delivery deadline).
     pub fn recv(&self) -> anyhow::Result<Vec<u8>> {
-        let msg = self
+        let env = self
             .rx
             .recv()
             .map_err(|_| anyhow::anyhow!("channel closed"))?;
-        self.meter.record_recv(msg.len());
-        Ok(msg)
+        Ok(self.deliver(env))
     }
 
-    /// Receive with a timeout (failure-injection tests).
+    /// Receive with a timeout (failure-injection tests). The timeout
+    /// bounds the wait for a message to be *sent*; once one is in flight,
+    /// its residual simulated latency is still slept before delivery.
     pub fn recv_timeout(&self, timeout: Duration) -> anyhow::Result<Vec<u8>> {
-        let msg = self.rx.recv_timeout(timeout)?;
-        self.meter.record_recv(msg.len());
-        Ok(msg)
+        let env = self.rx.recv_timeout(timeout)?;
+        Ok(self.deliver(env))
     }
 }
 
@@ -120,6 +143,33 @@ mod tests {
         a.send(vec![5, 6]).unwrap();
         assert_eq!(a.recv().unwrap(), vec![10, 12]);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn latency_overlaps_across_links() {
+        // A client sending to S_0 then S_1 must NOT pay 2× the one-way
+        // latency: sends enqueue immediately (deadline-stamped) and the
+        // receivers sleep only the residual flight time.
+        // Generous latency so the <2× bound has a wide margin against
+        // scheduler stalls on loaded CI runners.
+        let lat = Duration::from_millis(150);
+        let (c0, s0) = pair(lat);
+        let (c1, s1) = pair(lat);
+        let t0 = Instant::now();
+        c0.send(vec![1]).unwrap();
+        c1.send(vec![2]).unwrap();
+        assert!(
+            t0.elapsed() < lat,
+            "send must not block on simulated latency"
+        );
+        s0.recv().unwrap();
+        s1.recv().unwrap();
+        let total = t0.elapsed();
+        assert!(total >= lat, "one-way latency must still be paid: {total:?}");
+        assert!(
+            total < lat * 2,
+            "latencies of parallel links must overlap: {total:?}"
+        );
     }
 
     #[test]

@@ -1,0 +1,525 @@
+//! The unified server-side aggregation engine.
+//!
+//! The SSA server path used to exist in three divergent copies
+//! (`ssa::server_aggregate_into`, `ssa::server_aggregate_publics`,
+//! `ssa::server_aggregate_parallel`), only one of which had the
+//! workspace-reuse and zero-key-materialisation optimisations, and the
+//! parallel one re-allocated per bin and evaluated stash keys serially
+//! after the join. Every server now goes through one
+//! [`AggregationEngine`]:
+//!
+//! * it consumes any [`EvalSource`] — materialised [`DpfKey`]s
+//!   ([`KeySource`]), borrowed [`PublicPart`]s plus a master seed
+//!   ([`PublicsSource`], the zero-copy path), or the U-DPF keys of
+//!   [`super::udpf_ssa`];
+//! * work is sharded across a configurable number of threads over the
+//!   flattened `clients × (B bins + σ stash slots)` unit space, so stash
+//!   keys are load-balanced together with bin keys instead of being
+//!   evaluated serially after the join;
+//! * each worker reuses one [`EvalWorkspace`] and one output buffer
+//!   across all of its units (zero heap churn, §Perf iteration 3) and
+//!   accumulates into a private partial share vector; the partials are
+//!   merged once at the end, so scatter targets never race and no locking
+//!   is needed.
+//!
+//! This module is the single place future sharding/batching/async work
+//! plugs into.
+
+use super::session::Session;
+use crate::crypto::prg::{prf_seed, Seed};
+use crate::dpf::{self, DpfKey, EvalWorkspace, KeyView, PublicPart};
+use crate::group::Group;
+
+/// One input form the engine can aggregate: anything that can evaluate
+/// "client `c`'s key for slot `j`" over a prefix of its domain.
+///
+/// Slots `0..B` are cuckoo-bin keys (evaluated over the bin's Θ_j
+/// positions); slots `B..B+σ` are stash keys (evaluated over the whole
+/// alignment domain).
+pub trait EvalSource<G: Group>: Sync {
+    /// Number of clients in the batch.
+    fn num_clients(&self) -> usize;
+
+    /// Evaluate client `client`'s key for `slot` over the first
+    /// `num_points` leaves, writing the shares into `out` (cleared
+    /// first). `ws` is the worker's reusable frontier storage.
+    fn eval_slot(
+        &self,
+        client: usize,
+        slot: usize,
+        num_points: usize,
+        ws: &mut EvalWorkspace,
+        out: &mut Vec<G>,
+    );
+
+    /// Panic with a clear message if any client's slot count differs from
+    /// the session's `B + σ`.
+    fn assert_shape(&self, slots: usize);
+}
+
+/// Materialised per-client key sets: `B` bin keys then `σ` stash keys,
+/// exactly as [`crate::dpf::MasterKeyBatch::server_keys`] returns them.
+pub struct KeySource<'a, G: Group>(pub &'a [Vec<DpfKey<G>>]);
+
+impl<G: Group> EvalSource<G> for KeySource<'_, G> {
+    fn num_clients(&self) -> usize {
+        self.0.len()
+    }
+
+    fn eval_slot(
+        &self,
+        client: usize,
+        slot: usize,
+        num_points: usize,
+        ws: &mut EvalWorkspace,
+        out: &mut Vec<G>,
+    ) {
+        dpf::full_eval_with(&self.0[client][slot], num_points, ws, out);
+    }
+
+    fn assert_shape(&self, slots: usize) {
+        for keys in self.0 {
+            assert_eq!(keys.len(), slots, "key count");
+        }
+    }
+}
+
+/// A single client's materialised keys (the legacy
+/// `server_aggregate_into` shape).
+struct SingleClientKeys<'a, G: Group>(&'a [DpfKey<G>]);
+
+impl<G: Group> EvalSource<G> for SingleClientKeys<'_, G> {
+    fn num_clients(&self) -> usize {
+        1
+    }
+
+    fn eval_slot(
+        &self,
+        _client: usize,
+        slot: usize,
+        num_points: usize,
+        ws: &mut EvalWorkspace,
+        out: &mut Vec<G>,
+    ) {
+        dpf::full_eval_with(&self.0[slot], num_points, ws, out);
+    }
+
+    fn assert_shape(&self, slots: usize) {
+        assert_eq!(self.0.len(), slots, "key count");
+    }
+}
+
+/// One client's zero-copy upload: the decoded public parts plus this
+/// server's λ-bit master seed. Slot `j`'s root seed is `PRF(msk, j)`; no
+/// correction words are ever cloned (§Perf iteration 5).
+#[derive(Clone, Copy)]
+pub struct PublicsUpload<'a, G: Group> {
+    /// The `B + σ` shared public parts of the client's key batch.
+    pub publics: &'a [PublicPart<G>],
+    /// This server's master seed for the client.
+    pub msk: &'a Seed,
+}
+
+/// The zero-copy input form: many clients' [`PublicsUpload`]s, evaluated
+/// as party `party`.
+pub struct PublicsSource<'a, G: Group> {
+    /// One upload per client.
+    pub uploads: &'a [PublicsUpload<'a, G>],
+    /// The evaluating server b ∈ {0, 1}.
+    pub party: u8,
+}
+
+impl<G: Group> EvalSource<G> for PublicsSource<'_, G> {
+    fn num_clients(&self) -> usize {
+        self.uploads.len()
+    }
+
+    fn eval_slot(
+        &self,
+        client: usize,
+        slot: usize,
+        num_points: usize,
+        ws: &mut EvalWorkspace,
+        out: &mut Vec<G>,
+    ) {
+        let up = &self.uploads[client];
+        let p = &up.publics[slot];
+        let root = prf_seed(up.msk, slot as u64);
+        dpf::full_eval_parts(
+            KeyView {
+                party: self.party,
+                depth: p.depth,
+                root_seed: &root,
+                cws: &p.cws,
+                cw_out: &p.cw_out,
+            },
+            num_points,
+            ws,
+            out,
+        );
+    }
+
+    fn assert_shape(&self, slots: usize) {
+        for up in self.uploads {
+            assert_eq!(up.publics.len(), slots, "public part count");
+        }
+    }
+}
+
+/// The unified, sharded server-aggregation engine (the paper enables
+/// multi-threading for all experiments, §7.2).
+#[derive(Clone, Debug)]
+pub struct AggregationEngine {
+    threads: usize,
+}
+
+impl AggregationEngine {
+    /// Engine with an explicit worker count (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        AggregationEngine {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Single-threaded engine (deterministic microbenches, tests).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        Self::new(std::thread::available_parallelism().map_or(1, |n| n.get()))
+    }
+
+    /// Default for one of two co-located servers: half the cores each, so
+    /// the two concurrently aggregating server threads of an in-process
+    /// round don't oversubscribe the machine and measured server times
+    /// stay honest.
+    pub fn per_coloc_server() -> Self {
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        Self::new((cores / 2).max(1))
+    }
+
+    /// The `FslConfig::threads` convention: an explicit worker count, or
+    /// `0` for the co-located-two-server default
+    /// ([`Self::per_coloc_server`]). Kept here so callers can't
+    /// accidentally turn the default into "serial".
+    pub fn from_config(threads: usize) -> Self {
+        if threads == 0 {
+            Self::per_coloc_server()
+        } else {
+            Self::new(threads)
+        }
+    }
+
+    /// Worker count from the `FSL_THREADS` environment variable (used by
+    /// the benches): unset defaults to serial so timings are
+    /// reproducible, `0` means one worker per core, and a non-numeric
+    /// value warns instead of silently running serial.
+    pub fn from_env() -> Self {
+        match std::env::var("FSL_THREADS") {
+            Ok(v) => match v.parse::<usize>() {
+                Ok(0) => Self::auto(),
+                Ok(t) => Self::new(t),
+                Err(_) => {
+                    eprintln!("FSL_THREADS={v:?} is not a number; running serial");
+                    Self::serial()
+                }
+            },
+            Err(_) => Self::serial(),
+        }
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Aggregate every client of `source` into a fresh share vector
+    /// (length = the session's domain size).
+    pub fn aggregate<G: Group, S: EvalSource<G>>(&self, session: &Session, source: &S) -> Vec<G> {
+        let mut acc = vec![G::zero(); session.domain_size()];
+        self.aggregate_into(session, source, &mut acc);
+        acc
+    }
+
+    /// Aggregate every client of `source`, accumulating into `acc`.
+    ///
+    /// Work units are the flattened `clients × (B + σ)` pairs; each of the
+    /// `min(threads, units)` workers takes a contiguous unit range,
+    /// accumulates into a private partial vector, and the partials are
+    /// merged at the end. With one worker the caller's `acc` is used
+    /// directly (no partials, no merge).
+    pub fn aggregate_into<G: Group, S: EvalSource<G>>(
+        &self,
+        session: &Session,
+        source: &S,
+        acc: &mut [G],
+    ) {
+        let slots = session.simple.num_bins() + session.params.cuckoo.sigma;
+        assert_eq!(acc.len(), session.domain_size(), "accumulator size");
+        source.assert_shape(slots);
+        let units = source.num_clients() * slots;
+        if units == 0 {
+            return;
+        }
+        let threads = self.threads.min(units);
+        if threads <= 1 {
+            Worker::new(session, source).run_range(0, units, acc);
+            return;
+        }
+        let chunk = units.div_ceil(threads);
+        let partials = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let lo = (t * chunk).min(units);
+                    let hi = ((t + 1) * chunk).min(units);
+                    scope.spawn(move || {
+                        let mut part = vec![G::zero(); session.domain_size()];
+                        Worker::new(session, source).run_range(lo, hi, &mut part);
+                        part
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("aggregation worker panicked"))
+                .collect::<Vec<_>>()
+        });
+        for part in &partials {
+            for (a, v) in acc.iter_mut().zip(part) {
+                a.add_assign(v);
+            }
+        }
+    }
+
+    /// Aggregate many clients' materialised key sets.
+    pub fn aggregate_keys<G: Group>(
+        &self,
+        session: &Session,
+        clients: &[Vec<DpfKey<G>>],
+    ) -> Vec<G> {
+        self.aggregate(session, &KeySource(clients))
+    }
+
+    /// Aggregate one client's materialised keys into `acc`.
+    pub fn aggregate_client_keys_into<G: Group>(
+        &self,
+        session: &Session,
+        keys: &[DpfKey<G>],
+        acc: &mut [G],
+    ) {
+        self.aggregate_into(session, &SingleClientKeys(keys), acc);
+    }
+
+    /// Aggregate many clients straight from their public parts + master
+    /// seeds (the zero-copy path), evaluating as party `party`.
+    pub fn aggregate_publics<G: Group>(
+        &self,
+        session: &Session,
+        party: u8,
+        uploads: &[PublicsUpload<'_, G>],
+    ) -> Vec<G> {
+        self.aggregate(session, &PublicsSource { uploads, party })
+    }
+
+    /// [`Self::aggregate_publics`], accumulating into `acc`.
+    pub fn aggregate_publics_into<G: Group>(
+        &self,
+        session: &Session,
+        party: u8,
+        uploads: &[PublicsUpload<'_, G>],
+        acc: &mut [G],
+    ) {
+        self.aggregate_into(session, &PublicsSource { uploads, party }, acc);
+    }
+}
+
+/// Per-worker state: one frontier workspace and one leaf-share buffer,
+/// reused across every unit the worker processes.
+struct Worker<'a, G: Group, S: EvalSource<G>> {
+    session: &'a Session,
+    source: &'a S,
+    num_bins: usize,
+    slots: usize,
+    ws: EvalWorkspace,
+    ev: Vec<G>,
+}
+
+impl<'a, G: Group, S: EvalSource<G>> Worker<'a, G, S> {
+    fn new(session: &'a Session, source: &'a S) -> Self {
+        let num_bins = session.simple.num_bins();
+        Worker {
+            session,
+            source,
+            num_bins,
+            slots: num_bins + session.params.cuckoo.sigma,
+            ws: EvalWorkspace::default(),
+            ev: Vec::new(),
+        }
+    }
+
+    /// Process flattened units `lo..hi` (unit = client · (B+σ) + slot),
+    /// scattering every leaf share into `acc`.
+    fn run_range(&mut self, lo: usize, hi: usize, acc: &mut [G]) {
+        for unit in lo..hi {
+            let (client, slot) = (unit / self.slots, unit % self.slots);
+            if slot < self.num_bins {
+                // Bin key: evaluate over the bin's Θ_j positions and
+                // scatter through the aligned simple table.
+                let bin = self.session.simple.bin(slot);
+                self.source.eval_slot(client, slot, bin.len(), &mut self.ws, &mut self.ev);
+                for (d, &idx) in bin.iter().enumerate() {
+                    let pos = self
+                        .session
+                        .domain_index_of(idx)
+                        .expect("simple bin element outside domain") as usize;
+                    acc[pos].add_assign(&self.ev[d]);
+                }
+            } else {
+                // Stash key: whole-domain evaluation, element-wise add.
+                self.source.eval_slot(client, slot, acc.len(), &mut self.ws, &mut self.ev);
+                for (pos, v) in self.ev.iter().enumerate() {
+                    acc[pos].add_assign(v);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(deprecated)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+    use crate::dpf::MasterKeyBatch;
+    use crate::hashing::CuckooParams;
+    use crate::protocol::session::SessionParams;
+    use crate::protocol::ssa;
+
+    fn session(m: u64, k: usize, sigma: usize) -> Session {
+        Session::new_full(SessionParams {
+            m,
+            k,
+            cuckoo: CuckooParams {
+                sigma,
+                ..CuckooParams::default()
+            },
+        })
+    }
+
+    fn sample_clients(s: &Session, n: usize, rng: &mut Rng) -> Vec<MasterKeyBatch<u64>> {
+        (0..n)
+            .map(|c| {
+                let sel = rng.sample_distinct(s.params.k, s.params.m);
+                let dl: Vec<u64> = sel.iter().map(|&x| x * 3 + c as u64 + 1).collect();
+                ssa::client_update(s, &sel, &dl, rng).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn engine_matches_legacy_over_all_three_input_forms() {
+        let s = session(1 << 11, 64, 0);
+        let mut rng = Rng::new(500);
+        let batches = sample_clients(&s, 5, &mut rng);
+        let keys0: Vec<Vec<crate::dpf::DpfKey<u64>>> =
+            batches.iter().map(|b| b.server_keys(0)).collect();
+
+        let legacy_serial = ssa::server_aggregate(&s, &keys0);
+
+        // Form 1: materialised keys.
+        assert_eq!(AggregationEngine::serial().aggregate_keys(&s, &keys0), legacy_serial);
+        // Form 2: zero-copy publics + master seed.
+        let uploads: Vec<PublicsUpload<'_, u64>> = batches
+            .iter()
+            .map(|b| PublicsUpload {
+                publics: &b.publics,
+                msk: &b.msk[0],
+            })
+            .collect();
+        assert_eq!(AggregationEngine::serial().aggregate_publics(&s, 0, &uploads), legacy_serial);
+        // Form 3: the legacy parallel entry point (now a wrapper) must be
+        // bit-identical to the engine at every width.
+        for t in [1usize, 2, 3, 8, 64] {
+            assert_eq!(
+                ssa::server_aggregate_parallel(&s, &keys0, t),
+                legacy_serial,
+                "wrapper, {t} threads"
+            );
+            assert_eq!(
+                AggregationEngine::new(t).aggregate_keys(&s, &keys0),
+                legacy_serial,
+                "engine, {t} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn publics_path_matches_keys_path_for_both_parties() {
+        let s = session(1 << 10, 32, 2);
+        let mut rng = Rng::new(501);
+        let batches = sample_clients(&s, 4, &mut rng);
+        for party in 0..2u8 {
+            let keys: Vec<_> = batches.iter().map(|b| b.server_keys(party)).collect();
+            let uploads: Vec<PublicsUpload<'_, u64>> = batches
+                .iter()
+                .map(|b| PublicsUpload {
+                    publics: &b.publics,
+                    msk: &b.msk[party as usize],
+                })
+                .collect();
+            let engine = AggregationEngine::new(3);
+            assert_eq!(
+                engine.aggregate_publics(&s, party, &uploads),
+                engine.aggregate_keys(&s, &keys),
+                "party {party}"
+            );
+        }
+    }
+
+    #[test]
+    fn more_threads_than_bins_or_units() {
+        // One client, tiny k: far fewer units than workers. The engine
+        // must clamp and still match the serial result exactly.
+        let s = session(256, 4, 1);
+        let mut rng = Rng::new(502);
+        let batches = sample_clients(&s, 1, &mut rng);
+        let keys: Vec<_> = batches.iter().map(|b| b.server_keys(0)).collect();
+        let serial = AggregationEngine::serial().aggregate_keys(&s, &keys);
+        for t in [7, 64, 1000] {
+            assert_eq!(AggregationEngine::new(t).aggregate_keys(&s, &keys), serial, "{t} threads");
+        }
+    }
+
+    #[test]
+    fn reconstruction_is_exact_through_the_engine() {
+        let s = session(512, 16, 0);
+        let mut rng = Rng::new(503);
+        let mut expected = vec![0u64; 512];
+        let mut batches = Vec::new();
+        for c in 0..3u64 {
+            let sel = rng.sample_distinct(16, 512);
+            let dl: Vec<u64> = sel.iter().map(|&x| x * 10 + c).collect();
+            for (&i, &d) in sel.iter().zip(&dl) {
+                expected[i as usize] = expected[i as usize].wrapping_add(d);
+            }
+            batches.push(ssa::client_update(&s, &sel, &dl, &mut rng).unwrap());
+        }
+        let engine = AggregationEngine::new(4);
+        let keys0: Vec<_> = batches.iter().map(|b| b.server_keys(0)).collect();
+        let keys1: Vec<_> = batches.iter().map(|b| b.server_keys(1)).collect();
+        let dw = ssa::reconstruct(
+            &engine.aggregate_keys(&s, &keys0),
+            &engine.aggregate_keys(&s, &keys1),
+        );
+        assert_eq!(dw, expected);
+    }
+
+    #[test]
+    fn empty_client_set_is_a_no_op() {
+        let s = session(128, 4, 0);
+        let none: Vec<Vec<crate::dpf::DpfKey<u64>>> = Vec::new();
+        assert_eq!(AggregationEngine::new(8).aggregate_keys(&s, &none), vec![0u64; 128]);
+    }
+}

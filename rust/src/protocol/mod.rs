@@ -9,7 +9,10 @@
 //! * [`mega`] — mega-element grouping: τ weights per DPF payload (§6).
 //! * [`session`] — shared per-round state (tables, parameters, domains).
 //! * [`udpf_ssa`] — SSA over updatable DPF keys for fixed submodels (§6).
+//! * [`aggregate`] — the unified, sharded server-aggregation engine every
+//!   server-side evaluate+scatter path routes through.
 
+pub mod aggregate;
 pub mod mega;
 pub mod msg;
 pub mod psr;
@@ -18,4 +21,5 @@ pub mod session;
 pub mod ssa;
 pub mod udpf_ssa;
 
+pub use aggregate::AggregationEngine;
 pub use session::{Session, SessionParams};

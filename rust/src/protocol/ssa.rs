@@ -8,65 +8,88 @@
 //! the transpose of the paper's per-position gather
 //! `Σ_d Eval(k[h_d(j)], pos_{h_d(j)})` — same sums, one pass, linear time.
 //! Finally the servers exchange share vectors and reconstruct `Δw`.
+//!
+//! The server-side evaluate+scatter loop itself lives in
+//! [`super::aggregate::AggregationEngine`]; the `server_aggregate_*`
+//! functions here are thin wrappers kept for compatibility.
 
+use super::aggregate::{AggregationEngine, PublicsUpload};
 use super::psr::build_bin_points;
 use super::session::Session;
 use crate::crypto::rng::Rng;
-use crate::dpf::{self, gen_batch_with_master, DpfKey, MasterKeyBatch};
+use crate::dpf::{gen_batch_with_master, DpfKey, MasterKeyBatch};
 use crate::group::Group;
 use crate::hashing::CuckooError;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 
 /// Build a client's SSA upload. `selections[i]`'s update is `deltas[i]`.
+///
+/// Duplicate indices in `selections` are allowed and their deltas are
+/// **summed**: SSA is additive, so `(u, d1), (u, d2)` is semantically the
+/// single update `(u, d1 + d2)`. (Previously duplicates silently kept one
+/// arbitrary delta and — worse — were inserted into the cuckoo table
+/// once per occurrence, double-counting the survivor.)
 pub fn client_update<G: Group>(
     session: &Session,
     selections: &[u64],
     deltas: &[G],
     rng: &mut Rng,
 ) -> Result<MasterKeyBatch<G>, CuckooError> {
-    assert_eq!(selections.len(), deltas.len());
-    let delta_of: std::collections::HashMap<u64, G> = selections
-        .iter()
-        .copied()
-        .zip(deltas.iter().cloned())
-        .collect();
-    let bins = build_bin_points(session, selections, rng, |u| delta_of[&u].clone())?;
+    let (uniq, delta_of) = sum_duplicate_selections(selections, deltas);
+    let bins = build_bin_points(session, &uniq, rng, |u| delta_of[&u].clone())?;
     Ok(gen_batch_with_master(&bins.points, rng.gen_seed(), rng.gen_seed()))
+}
+
+/// Collapse a `(selections, deltas)` pair into distinct indices with
+/// summed deltas, preserving first-occurrence order. Shared by the SSA
+/// and U-DPF-SSA client paths so both define duplicates the same way.
+pub(crate) fn sum_duplicate_selections<G: Group>(
+    selections: &[u64],
+    deltas: &[G],
+) -> (Vec<u64>, HashMap<u64, G>) {
+    assert_eq!(selections.len(), deltas.len());
+    let mut delta_of: HashMap<u64, G> = HashMap::with_capacity(selections.len());
+    let mut uniq = Vec::with_capacity(selections.len());
+    for (&u, d) in selections.iter().zip(deltas) {
+        match delta_of.entry(u) {
+            Entry::Occupied(mut e) => e.get_mut().add_assign(d),
+            Entry::Vacant(e) => {
+                e.insert(d.clone());
+                uniq.push(u);
+            }
+        }
+    }
+    (uniq, delta_of)
+}
+
+/// [`sum_duplicate_selections`] without materialising the distinct-index
+/// vector — for callers that only look deltas up by index (the per-epoch
+/// U-DPF hint path).
+pub(crate) fn sum_deltas_by_index<G: Group>(selections: &[u64], deltas: &[G]) -> HashMap<u64, G> {
+    assert_eq!(selections.len(), deltas.len());
+    let mut delta_of: HashMap<u64, G> = HashMap::with_capacity(selections.len());
+    for (&u, d) in selections.iter().zip(deltas) {
+        match delta_of.entry(u) {
+            Entry::Occupied(mut e) => e.get_mut().add_assign(d),
+            Entry::Vacant(e) => {
+                e.insert(d.clone());
+            }
+        }
+    }
+    delta_of
 }
 
 /// Server `b`: evaluate one client's keys and accumulate its share of the
 /// global update into `acc` (length = domain size).
+#[deprecated(note = "use protocol::aggregate::AggregationEngine::aggregate_client_keys_into")]
 pub fn server_aggregate_into<G: Group>(session: &Session, keys: &[DpfKey<G>], acc: &mut [G]) {
-    let num_bins = session.simple.num_bins();
-    let sigma = session.params.cuckoo.sigma;
-    assert_eq!(keys.len(), num_bins + sigma, "key count");
-    assert_eq!(acc.len(), session.domain_size(), "accumulator size");
-
-    // Reused workspace + output buffer: zero heap churn across the B bin
-    // evaluations (§Perf iteration 3).
-    let mut ws = dpf::EvalWorkspace::default();
-    let mut ev: Vec<G> = Vec::new();
-    for (j, key) in keys.iter().take(num_bins).enumerate() {
-        let bin = session.simple.bin(j);
-        dpf::full_eval_with(key, bin.len(), &mut ws, &mut ev);
-        for (d, &idx) in bin.iter().enumerate() {
-            let pos = session
-                .domain_index_of(idx)
-                .expect("simple bin element outside domain") as usize;
-            acc[pos].add_assign(&ev[d]);
-        }
-    }
-    for key in keys.iter().skip(num_bins) {
-        let evals = dpf::full_eval(key, acc.len());
-        for (pos, ev) in evals.iter().enumerate() {
-            acc[pos].add_assign(ev);
-        }
-    }
+    AggregationEngine::serial().aggregate_client_keys_into(session, keys, acc);
 }
 
 /// Server `b`: aggregate one client's contribution straight from its
-/// decoded public parts + master seed, without materialising `DpfKey`s
-/// (no correction-word clones — §Perf iteration 5). Stash keys are the
-/// trailing `σ` parts, evaluated over the whole domain.
+/// decoded public parts + master seed, without materialising `DpfKey`s.
+#[deprecated(note = "use protocol::aggregate::AggregationEngine::aggregate_publics_into")]
 pub fn server_aggregate_publics<G: Group>(
     session: &Session,
     publics: &[crate::dpf::PublicPart<G>],
@@ -74,102 +97,25 @@ pub fn server_aggregate_publics<G: Group>(
     party: u8,
     acc: &mut [G],
 ) {
-    let num_bins = session.simple.num_bins();
-    let sigma = session.params.cuckoo.sigma;
-    assert_eq!(publics.len(), num_bins + sigma, "public part count");
-    assert_eq!(acc.len(), session.domain_size(), "accumulator size");
-    let mut ws = dpf::EvalWorkspace::default();
-    let mut ev: Vec<G> = Vec::new();
-    for (j, p) in publics.iter().enumerate() {
-        let root = crate::crypto::prg::prf_seed(msk, j as u64);
-        let n = if j < num_bins {
-            session.simple.bin(j).len()
-        } else {
-            session.domain_size()
-        };
-        dpf::full_eval_parts(party, p.depth, &root, &p.cws, &p.cw_out, n, &mut ws, &mut ev);
-        if j < num_bins {
-            for (d, &idx) in session.simple.bin(j).iter().enumerate() {
-                let pos = session.domain_index_of(idx).expect("in domain") as usize;
-                acc[pos].add_assign(&ev[d]);
-            }
-        } else {
-            for (pos, v) in ev.iter().enumerate() {
-                acc[pos].add_assign(v);
-            }
-        }
-    }
+    let uploads = [PublicsUpload { publics, msk }];
+    AggregationEngine::serial().aggregate_publics_into(session, party, &uploads, acc);
 }
 
 /// Convenience: aggregate many clients' key sets into a fresh share
-/// vector.
+/// vector (single-threaded engine; configure an [`AggregationEngine`]
+/// directly for the sharded path).
 pub fn server_aggregate<G: Group>(session: &Session, clients: &[Vec<DpfKey<G>>]) -> Vec<G> {
-    let mut acc = vec![G::zero(); session.domain_size()];
-    for keys in clients {
-        server_aggregate_into(session, keys, &mut acc);
-    }
-    acc
+    AggregationEngine::serial().aggregate_keys(session, clients)
 }
 
-/// Multi-threaded server aggregation (the paper enables multi-threading
-/// for all experiments, §7.2). Bins are sharded across `threads` workers —
-/// each worker walks a disjoint bin range of *every* client's key set, so
-/// scatter targets never collide and no locking is needed; per-worker
-/// partial accumulators are merged at the end.
+/// Multi-threaded server aggregation.
+#[deprecated(note = "use protocol::aggregate::AggregationEngine::aggregate_keys")]
 pub fn server_aggregate_parallel<G: Group>(
     session: &Session,
     clients: &[Vec<DpfKey<G>>],
     threads: usize,
 ) -> Vec<G> {
-    let threads = threads.max(1);
-    if threads == 1 || clients.is_empty() {
-        return server_aggregate(session, clients);
-    }
-    let num_bins = session.simple.num_bins();
-    let domain = session.domain_size();
-    let chunk = num_bins.div_ceil(threads);
-    let mut partials: Vec<Vec<G>> = Vec::with_capacity(threads);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
-        for t in 0..threads {
-            let lo = (t * chunk).min(num_bins);
-            let hi = ((t + 1) * chunk).min(num_bins);
-            handles.push(scope.spawn(move || {
-                let mut acc = vec![G::zero(); domain];
-                for keys in clients {
-                    for (j, key) in keys[lo..hi].iter().enumerate() {
-                        let bin = session.simple.bin(lo + j);
-                        let evals = dpf::full_eval(key, bin.len());
-                        for (d, &idx) in bin.iter().enumerate() {
-                            let pos =
-                                session.domain_index_of(idx).expect("element in domain") as usize;
-                            acc[pos].add_assign(&evals[d]);
-                        }
-                    }
-                }
-                acc
-            }));
-        }
-        for h in handles {
-            partials.push(h.join().expect("aggregation worker panicked"));
-        }
-    });
-    // Merge partials; stash keys (outside the bin range) processed serially.
-    let mut acc = partials.pop().unwrap_or_else(|| vec![G::zero(); domain]);
-    for p in &partials {
-        for (a, v) in acc.iter_mut().zip(p) {
-            a.add_assign(v);
-        }
-    }
-    for keys in clients {
-        for key in keys.iter().skip(num_bins) {
-            let evals = dpf::full_eval(key, domain);
-            for (pos, ev) in evals.iter().enumerate() {
-                acc[pos].add_assign(ev);
-            }
-        }
-    }
-    acc
+    AggregationEngine::new(threads).aggregate_keys(session, clients)
 }
 
 /// Reconstruct `Δw` from the two servers' share vectors (the final
@@ -184,6 +130,7 @@ pub fn reconstruct<G: Group>(share0: &[G], share1: &[G]) -> Vec<G> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::hashing::CuckooParams;
@@ -230,6 +177,24 @@ mod tests {
         for threads in [2, 3, 8, 64] {
             assert_eq!(server_aggregate_parallel(&s, &all0, threads), serial);
         }
+    }
+
+    #[test]
+    fn duplicate_selections_sum_their_deltas() {
+        let s = session(256, 8);
+        let mut rng = Rng::new(106);
+        let sel = vec![5u64, 9, 5, 200, 9, 5];
+        let deltas = vec![10u64, 20, 30, 40, 50, 60];
+        let batch = client_update(&s, &sel, &deltas, &mut rng).unwrap();
+        let dw = reconstruct(
+            &server_aggregate(&s, &[batch.server_keys(0)]),
+            &server_aggregate(&s, &[batch.server_keys(1)]),
+        );
+        let mut expected = vec![0u64; 256];
+        for (&u, &d) in sel.iter().zip(&deltas) {
+            expected[u as usize] = expected[u as usize].wrapping_add(d);
+        }
+        assert_eq!(dw, expected, "duplicates must sum, everything else 0");
     }
 
     #[test]

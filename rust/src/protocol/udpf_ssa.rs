@@ -5,9 +5,11 @@
 //! SSA upload, and every later round pays only one `⌈log 𝔾⌉`-bit *hint*
 //! per bin — `R^{(1)} = R(π_ssa)`, `R^{(>1)} = c`.
 
+use super::aggregate::{AggregationEngine, EvalSource};
 use super::session::Session;
+use super::ssa::{sum_deltas_by_index, sum_duplicate_selections};
 use crate::crypto::rng::Rng;
-use crate::dpf;
+use crate::dpf::{self, EvalWorkspace};
 use crate::group::Group;
 use crate::hashing::{CuckooError, CuckooTable};
 use crate::udpf::{self, Hint, UdpfClientState, UdpfKey};
@@ -27,18 +29,17 @@ pub struct UdpfSsaServerKeys<G: Group> {
 
 /// Round-1 setup: build cuckoo table + U-DPF keys carrying the first
 /// round's deltas (epoch 0). Returns the client handle and both servers'
-/// key sets.
+/// key sets. Duplicate selections are summed, as in
+/// [`super::ssa::client_update`].
 pub fn client_setup<G: Group>(
     session: &Session,
     selections: &[u64],
     deltas: &[G],
     rng: &mut Rng,
 ) -> Result<(UdpfSsaClient<G>, UdpfSsaServerKeys<G>, UdpfSsaServerKeys<G>), CuckooError> {
-    assert_eq!(selections.len(), deltas.len());
-    let delta_of: std::collections::HashMap<u64, &G> =
-        selections.iter().copied().zip(deltas.iter()).collect();
+    let (uniq, delta_of) = sum_duplicate_selections(selections, deltas);
     let cuckoo = CuckooTable::build_with_bins(
-        selections,
+        &uniq,
         session.simple.num_bins(),
         &session.params.cuckoo,
         rng,
@@ -64,7 +65,7 @@ pub fn client_setup<G: Group>(
         let depth = dpf::depth_for(simple.bin(j).len().max(2));
         let point = slot.map(|u| {
             let pos = simple.position(j, u).expect("alignment invariant") as u64;
-            (pos, delta_of[&u])
+            (pos, &delta_of[&u])
         });
         emit(depth, point, rng);
     }
@@ -72,7 +73,7 @@ pub fn client_setup<G: Group>(
         let point = cuckoo.stash().get(t).map(|&u| {
             (
                 session.domain_index_of(u).expect("stash element in domain"),
-                delta_of[&u],
+                &delta_of[&u],
             )
         });
         emit(stash_depth, point, rng);
@@ -92,7 +93,8 @@ pub fn client_setup<G: Group>(
 impl<G: Group> UdpfSsaClient<G> {
     /// Round `epoch ≥ 1`: produce one hint per bin/stash slot for the new
     /// deltas (dummy bins get β = 0 hints so the message shape is
-    /// selection-independent).
+    /// selection-independent). Duplicate selections are summed, as in
+    /// [`client_setup`].
     pub fn epoch_hints(
         &self,
         session: &Session,
@@ -100,9 +102,7 @@ impl<G: Group> UdpfSsaClient<G> {
         deltas: &[G],
         epoch: u64,
     ) -> Vec<Hint<G>> {
-        assert_eq!(selections.len(), deltas.len());
-        let delta_of: std::collections::HashMap<u64, &G> =
-            selections.iter().copied().zip(deltas.iter()).collect();
+        let delta_of = sum_deltas_by_index(selections, deltas);
         let num_bins = self.cuckoo.num_bins();
         let mut hints = Vec::with_capacity(self.states.len());
         for (slot, st) in self.states.iter().enumerate() {
@@ -140,23 +140,61 @@ impl<G: Group> UdpfSsaServerKeys<G> {
     }
 
     /// Evaluate + scatter this client's contribution for `epoch` into the
-    /// global share accumulator (mirrors [`super::ssa::server_aggregate_into`]).
+    /// global share accumulator — routed through the unified
+    /// [`AggregationEngine`] (serial; see [`server_aggregate`] for the
+    /// sharded multi-client path).
     pub fn aggregate_into(&self, session: &Session, epoch: u64, acc: &mut [G]) {
-        let num_bins = session.simple.num_bins();
-        assert_eq!(acc.len(), session.domain_size());
-        for (j, key) in self.keys.iter().take(num_bins).enumerate() {
-            let bin = session.simple.bin(j);
-            let evals = udpf::full_eval(key, bin.len(), epoch);
-            for (d, &idx) in bin.iter().enumerate() {
-                let pos = session.domain_index_of(idx).expect("in domain") as usize;
-                acc[pos].add_assign(&evals[d]);
-            }
-        }
-        for key in self.keys.iter().skip(num_bins) {
-            let evals = udpf::full_eval(key, acc.len(), epoch);
-            for (pos, ev) in evals.iter().enumerate() {
-                acc[pos].add_assign(ev);
-            }
+        AggregationEngine::serial().aggregate_into(
+            session,
+            &UdpfSource {
+                clients: std::slice::from_ref(self),
+                epoch,
+            },
+            acc,
+        );
+    }
+}
+
+/// Aggregate many clients' retained U-DPF key sets for `epoch` with the
+/// unified engine (U-DPF keys are the engine's third input form, next to
+/// materialised `DpfKey`s and zero-copy public parts).
+pub fn server_aggregate<G: Group>(
+    engine: &AggregationEngine,
+    session: &Session,
+    clients: &[UdpfSsaServerKeys<G>],
+    epoch: u64,
+) -> Vec<G> {
+    engine.aggregate(session, &UdpfSource { clients, epoch })
+}
+
+/// Engine input form over epoch-keyed U-DPF keys.
+struct UdpfSource<'a, G: Group> {
+    clients: &'a [UdpfSsaServerKeys<G>],
+    epoch: u64,
+}
+
+impl<G: Group> EvalSource<G> for UdpfSource<'_, G> {
+    fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn eval_slot(
+        &self,
+        client: usize,
+        slot: usize,
+        num_points: usize,
+        _ws: &mut EvalWorkspace,
+        out: &mut Vec<G>,
+    ) {
+        // U-DPF evaluation re-hashes every leaf under the epoch oracle, so
+        // it has no allocation-free variant yet; the engine's buffer is
+        // simply replaced.
+        *out = udpf::full_eval(&self.clients[client].keys[slot], num_points, self.epoch);
+    }
+
+    fn assert_shape(&self, slots: usize) {
+        for c in self.clients {
+            assert_eq!(c.keys.len(), slots, "U-DPF key count");
         }
     }
 }
@@ -212,6 +250,27 @@ mod tests {
                     None => assert_eq!(dw[x as usize], 0, "epoch {epoch} x {x}"),
                 }
             }
+        }
+    }
+
+    #[test]
+    fn engine_aggregate_matches_per_client_into() {
+        let s = session(512, 16);
+        let mut rng = Rng::new(123);
+        let mut all0 = Vec::new();
+        for c in 0..4u64 {
+            let sel = rng.sample_distinct(16, 512);
+            let d: Vec<u64> = sel.iter().map(|&x| x + c + 1).collect();
+            let (_cl, sk0, _sk1) = client_setup(&s, &sel, &d, &mut rng).unwrap();
+            all0.push(sk0);
+        }
+        let mut serial = vec![0u64; 512];
+        for sk in &all0 {
+            sk.aggregate_into(&s, 0, &mut serial);
+        }
+        for t in [1usize, 3, 8] {
+            let engine = AggregationEngine::new(t);
+            assert_eq!(server_aggregate(&engine, &s, &all0, 0), serial, "{t} threads");
         }
     }
 

@@ -23,7 +23,7 @@ use fsl::data::{TextDataset, TrecCensus};
 use fsl::group::{fixed_decode, fixed_encode, MegaElem};
 use fsl::hashing::CuckooParams;
 use fsl::metrics::bits_to_mb;
-use fsl::protocol::{mega, psr, ssa, AggregationEngine, Session, SessionParams};
+use fsl::protocol::{mega, psr, ssa, AggregationEngine, RetrievalEngine, Session, SessionParams};
 use fsl::runtime::Executor;
 use std::collections::HashMap;
 
@@ -92,8 +92,9 @@ fn main() -> Result<()> {
     let mut rng = Rng::new(seed);
     let (ctx, batch_keys) = psr::client_query::<MegaElem<TAU>>(&psr_session, &client_rows, &mut rng)
         .map_err(|e| anyhow!("{e}"))?;
-    let a0 = psr::server_answer(&psr_session, &mega_weights, &batch_keys.server_keys(0));
-    let a1 = psr::server_answer(&psr_session, &mega_weights, &batch_keys.server_keys(1));
+    let engine = RetrievalEngine::auto();
+    let a0 = engine.answer_keys(&psr_session, &mega_weights, &batch_keys.server_keys(0));
+    let a1 = engine.answer_keys(&psr_session, &mega_weights, &batch_keys.server_keys(1));
     let got = psr::client_reconstruct(&ctx, psr_session.simple.num_bins(), &client_rows, &a0, &a1);
     for (i, &r) in client_rows.iter().enumerate() {
         assert_eq!(got[i], mega_weights[r as usize]);

@@ -16,7 +16,9 @@ use anyhow::{anyhow, Result};
 use fsl::crypto::rng::Rng;
 use fsl::hashing::CuckooParams;
 use fsl::metrics::bits_to_mb;
-use fsl::protocol::{psu, ssa, udpf_ssa, AggregationEngine, Session, SessionParams};
+use fsl::protocol::{
+    psr, psu, ssa, udpf_ssa, AggregationEngine, RetrievalEngine, Session, SessionParams,
+};
 
 fn main() -> Result<()> {
     let m = 1u64 << 20;
@@ -39,21 +41,20 @@ fn main() -> Result<()> {
 
     // ---------------- PSU: reveal the union, nothing else ----------------
     let psu_key = [42u8; 16];
-    let union = psu::run_psu(&psu_key, m, k, &client_sets, &mut rng);
-    println!(
-        "PSU: {} clients, union |∪s| = {} ≪ m = {m}",
-        n_clients,
-        union.len()
-    );
-
-    // Session over the union domain vs the full domain: Θ shrinks.
     let params = |seed| SessionParams {
         m,
         k,
         cuckoo: CuckooParams::default().with_seed(seed),
     };
+    // PSU + union-domain session in one step; Θ shrinks vs full-domain.
+    let reduced = psu::run_psu_session(&psu_key, params(1), &client_sets, &mut rng);
+    let union = reduced.domain.clone().expect("union session has a domain");
+    println!(
+        "PSU: {} clients, union |∪s| = {} ≪ m = {m}",
+        n_clients,
+        union.len()
+    );
     let full = Session::new_full(params(1));
-    let reduced = Session::new_union(params(1), union.clone());
     println!(
         "Θ full-domain = {} (⌈log⌉ {}), Θ union = {} (⌈log⌉ {})",
         full.theta(),
@@ -92,6 +93,35 @@ fn main() -> Result<()> {
         bits_to_mb(red_bits),
         bits_to_mb(full_bits),
         ((1.0 - red_bits as f64 / full_bits as f64) * 100.0).round()
+    );
+
+    // ---------- PSR over the union: retrieve before training -------------
+    // The read path takes the *global* m-sized weight vector even on the
+    // reduced session; all clients are answered in one shard plan.
+    let weights: Vec<u64> = (0..m).map(|x| x.wrapping_mul(0x9e37_79b9)).collect();
+    let r_engine = RetrievalEngine::auto();
+    let mut q_ctxs = Vec::new();
+    let mut q_keys0 = Vec::new();
+    let mut q_keys1 = Vec::new();
+    for (sel, _) in &clients {
+        let (ctx, batch) =
+            psr::client_query::<u64>(&reduced, sel, &mut rng).map_err(|e| anyhow!("{e}"))?;
+        q_ctxs.push(ctx);
+        q_keys0.push(batch.server_keys(0));
+        q_keys1.push(batch.server_keys(1));
+    }
+    let ans0 = r_engine.answer_batch_keys(&reduced, &weights, &q_keys0);
+    let ans1 = r_engine.answer_batch_keys(&reduced, &weights, &q_keys1);
+    for (((ctx, (sel, _)), a0), a1) in q_ctxs.iter().zip(&clients).zip(&ans0).zip(&ans1) {
+        let got = psr::client_reconstruct(ctx, reduced.simple.num_bins(), sel, a0, a1);
+        for (i, &s) in sel.iter().enumerate() {
+            assert_eq!(got[i], weights[s as usize]);
+        }
+    }
+    println!(
+        "PSR over union: {} clients served in one shard plan ({} workers) ✓ lossless",
+        clients.len(),
+        r_engine.threads()
     );
 
     // ------------- U-DPF: fixed submodels across five epochs -------------

@@ -11,7 +11,7 @@ use fsl::crypto::rng::Rng;
 use fsl::group::{fixed_decode, fixed_encode};
 use fsl::hashing::CuckooParams;
 use fsl::metrics::mb;
-use fsl::protocol::{psr, Session, SessionParams};
+use fsl::protocol::{psr, RetrievalEngine, Session, SessionParams};
 use std::time::Duration;
 
 fn main() -> Result<()> {
@@ -43,8 +43,11 @@ fn main() -> Result<()> {
         batch.upload_bits() as f64 / 8.0 / 1024.0,
         m as f64 * 8.0 / 1024.0
     );
-    let ans0 = psr::server_answer(&session, &weights, &batch.server_keys(0));
-    let ans1 = psr::server_answer(&session, &weights, &batch.server_keys(1));
+    // Each server answers through the sharded retrieval engine (serial
+    // here; `RetrievalEngine::new(n)` shards over n workers).
+    let engine = RetrievalEngine::serial();
+    let ans0 = engine.answer_keys(&session, &weights, &batch.server_keys(0));
+    let ans1 = engine.answer_keys(&session, &weights, &batch.server_keys(1));
     let submodel = psr::client_reconstruct(&ctx, session.simple.num_bins(), &selections, &ans0, &ans1);
     for (i, &s) in selections.iter().enumerate() {
         assert_eq!(submodel[i], weights[s as usize]);

@@ -1,0 +1,96 @@
+//! PSR serving throughput — the read-path counterpart of the Table-5
+//! computation bench: a batch of concurrent client queries answered
+//! serially vs through the sharded [`RetrievalEngine`].
+//!
+//! Every deployed client retrieves its submodel before it trains, so this
+//! is the path a production service hammers hardest; the datapoint lands
+//! in `BENCH_psr.json` to start the retrieval perf trajectory.
+//!
+//! Defaults: m = 2^14, k = 512 (B ≈ 650 bins), 8 clients — comfortably
+//! above the ≥ 8 bins × ≥ 4 clients floor where sharding must win.
+//! `FSL_FULL=1` widens the grid; `FSL_THREADS=N` picks the sharded width
+//! (unset/0 → one worker per core, so the speedup datapoint exists even
+//! under the benches' serial-default convention).
+
+use fsl::crypto::rng::Rng;
+use fsl::hashing::{scale_factor_for, CuckooParams};
+use fsl::protocol::{psr, RetrievalEngine, Session, SessionParams};
+use std::time::{Duration, Instant};
+
+fn best_of<T>(reps: usize, mut f: impl FnMut() -> T) -> (Duration, T) {
+    let mut best = Duration::MAX;
+    let mut out = None;
+    for _ in 0..reps {
+        let t = Instant::now();
+        let v = f();
+        best = best.min(t.elapsed());
+        out = Some(v);
+    }
+    (best, out.expect("reps >= 1"))
+}
+
+fn main() {
+    let full = std::env::var("FSL_FULL").is_ok();
+    let m: u64 = if full { 1 << 17 } else { 1 << 14 };
+    let k: usize = 512;
+    let clients: usize = if full { 16 } else { 8 };
+    let reps = if full { 5 } else { 3 };
+
+    let session = Session::new_full(SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams {
+            epsilon: scale_factor_for(m as usize),
+            hash_seed: 0x9512,
+            ..CuckooParams::default()
+        },
+    });
+    let mut rng = Rng::new(0x9512);
+    let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+    let keys0: Vec<_> = (0..clients)
+        .map(|_| {
+            let sel = rng.sample_distinct(k, m);
+            let (_ctx, batch) =
+                psr::client_query::<u64>(&session, &sel, &mut rng).expect("cuckoo build");
+            batch.server_keys(0)
+        })
+        .collect();
+    let bins = session.simple.num_bins();
+
+    let serial = RetrievalEngine::serial();
+    // Unset defaults to one worker per core (this bench exists to show the
+    // speedup); when set, the shared FSL_THREADS convention applies
+    // (0 → auto, N → N, non-numeric → warn and run serial).
+    let sharded = match std::env::var("FSL_THREADS") {
+        Err(_) => RetrievalEngine::auto(),
+        Ok(_) => RetrievalEngine::from_env(),
+    };
+    println!("# PSR serving: m={m}, k={k}, B={bins} bins, {clients} clients, best of {reps}");
+    println!(
+        "# serial baseline = 1 worker; sharded = {} workers (FSL_THREADS to override)",
+        sharded.threads()
+    );
+
+    let (t_serial, base) = best_of(reps, || serial.answer_batch_keys(&session, &weights, &keys0));
+    let (t_sharded, got) = best_of(reps, || sharded.answer_batch_keys(&session, &weights, &keys0));
+    assert_eq!(got, base, "sharded answers must be bit-identical to serial");
+
+    let serial_ms = t_serial.as_secs_f64() * 1e3;
+    let sharded_ms = t_sharded.as_secs_f64() * 1e3;
+    let speedup = serial_ms / sharded_ms.max(1e-9);
+    println!("mode,workers,ms");
+    println!("serial,1,{serial_ms:.2}");
+    println!("sharded,{},{sharded_ms:.2}", sharded.threads());
+    println!("# speedup: {speedup:.2}x");
+
+    let json = format!(
+        "{{\"bench\":\"psr_serving\",\"m\":{m},\"k\":{k},\"clients\":{clients},\
+         \"bins\":{bins},\"workers\":{},\"serial_ms\":{serial_ms:.3},\
+         \"sharded_ms\":{sharded_ms:.3},\"speedup\":{speedup:.3}}}\n",
+        sharded.threads()
+    );
+    match std::fs::write("BENCH_psr.json", &json) {
+        Ok(()) => println!("# wrote BENCH_psr.json"),
+        Err(e) => eprintln!("# could not write BENCH_psr.json: {e}"),
+    }
+}

@@ -18,7 +18,7 @@ mod verified;
 
 pub use client::{local_train, sparse_delta, ClientRoundOutput};
 pub use config::FslConfig;
-pub use psr_round::{run_psr_round, PsrRoundResult};
+pub use psr_round::{run_psr_round, run_psr_round_with, PsrRoundResult};
 pub use round::{run_fsl_training, run_plain_training, RoundStats, TrainingLog};
 pub use server::{run_ssa_round, run_ssa_round_with, SsaRoundResult};
 pub use topk::{top_k_groups, top_k_magnitude};

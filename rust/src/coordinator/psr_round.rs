@@ -1,11 +1,18 @@
 //! PSR retrieval round over the metered two-server topology — the
 //! download-side counterpart of [`super::server::run_ssa_round`].
+//!
+//! Each server decodes every client's upload first and then answers the
+//! whole batch through one [`RetrievalEngine`] shard plan (multi-client
+//! batched serving). Serving stays zero-copy: the decoded public parts +
+//! master seed feed the engine directly, so no per-bin `DpfKey` is ever
+//! materialised on the read path.
 
 use crate::crypto::rng::Rng;
 use crate::group::Group;
 use crate::net;
+use crate::protocol::aggregate::uploads_of;
 use crate::protocol::msg;
-use crate::protocol::{psr, Session};
+use crate::protocol::{psr, RetrievalEngine, Session};
 use anyhow::{anyhow, Result};
 use std::time::{Duration, Instant};
 
@@ -18,15 +25,36 @@ pub struct PsrRoundResult<G: Group> {
     pub server_time: Duration,
 }
 
-/// Run a PSR round for `clients` (each a selection list) against the
-/// servers' weight vector. Servers run on their own threads; clients on
-/// the driver thread.
+/// [`run_psr_round_with`] under the co-located-two-server default engine
+/// (half the cores per server — both servers answer concurrently
+/// in-process, mirroring [`super::server::run_ssa_round`]).
 pub fn run_psr_round<G: Group>(
     session: &Session,
     weights: &[G],
     clients: &[Vec<u64>],
     rng: &mut Rng,
     latency: Duration,
+) -> Result<PsrRoundResult<G>> {
+    run_psr_round_with(
+        session,
+        weights,
+        clients,
+        rng,
+        latency,
+        &RetrievalEngine::per_coloc_server(),
+    )
+}
+
+/// Run a PSR round for `clients` (each a selection list) against the
+/// servers' weight vector. Servers run on their own threads and serve the
+/// whole client batch through `engine`; clients run on the driver thread.
+pub fn run_psr_round_with<G: Group>(
+    session: &Session,
+    weights: &[G],
+    clients: &[Vec<u64>],
+    rng: &mut Rng,
+    latency: Duration,
+    engine: &RetrievalEngine,
 ) -> Result<PsrRoundResult<G>> {
     let n = clients.len();
     let (client_links, server_sides, _inter) = net::topology(n, latency);
@@ -49,19 +77,23 @@ pub fn run_psr_round<G: Group>(
         .sum();
 
     let serve = |eps: &[net::Endpoint], party: u8| -> Result<Duration> {
-        let mut total = Duration::ZERO;
+        // Decode all uploads, then answer the batch in one shard plan.
+        let mut batches = Vec::with_capacity(eps.len());
         for ep in eps {
             let up = msg::decode_key_upload::<G>(&ep.recv()?)
                 .ok_or_else(|| anyhow!("S{party}: bad upload"))?;
             let publics = up.publics.ok_or_else(|| anyhow!("S{party}: no publics"))?;
-            let batch = crate::dpf::MasterKeyBatch::<G> {
+            batches.push(crate::dpf::MasterKeyBatch::<G> {
                 msk: [up.msk, up.msk],
                 publics,
-            };
-            let t = Instant::now();
-            let answers = psr::server_answer(session, weights, &batch.server_keys(party));
-            total += t.elapsed();
-            ep.send(msg::encode_shares(&answers))?;
+            });
+        }
+        let uploads = uploads_of(&batches, party);
+        let t = Instant::now();
+        let answers = engine.answer_publics(session, weights, party, &uploads);
+        let total = t.elapsed();
+        for (ep, ans) in eps.iter().zip(&answers) {
+            ep.send(msg::encode_shares(ans))?;
         }
         Ok(total)
     };
@@ -127,5 +159,37 @@ mod tests {
         // Non-triviality: retrieval moved fewer bytes than the database.
         assert!(res.client_download_bytes < 3 * 2048 * 8);
         assert!(res.client_upload_bytes > 0);
+    }
+
+    #[test]
+    fn engine_width_does_not_change_the_round_result() {
+        let session = Session::new_full(SessionParams {
+            m: 1024,
+            k: 16,
+            cuckoo: CuckooParams::default().with_sigma(4),
+        });
+        let weights: Vec<u64> = {
+            let mut rng = Rng::new(901);
+            (0..1024).map(|_| rng.next_u64()).collect()
+        };
+        let clients: Vec<Vec<u64>> = {
+            let mut rng = Rng::new(902);
+            (0..4).map(|_| rng.sample_distinct(16, 1024)).collect()
+        };
+        let mut all = Vec::new();
+        for threads in [1usize, 8] {
+            let mut rng = Rng::new(903);
+            let res = run_psr_round_with(
+                &session,
+                &weights,
+                &clients,
+                &mut rng,
+                Duration::ZERO,
+                &RetrievalEngine::new(threads),
+            )
+            .unwrap();
+            all.push(res.submodels);
+        }
+        assert_eq!(all[0], all[1]);
     }
 }

@@ -6,10 +6,10 @@
 //! vector and reconstructs `Δw`. `S_1` is the worker: short uploads
 //! (master seed only) from clients, public parts from `S_0`.
 
-use crate::dpf::PublicPart;
+use crate::dpf::{MasterKeyBatch, PublicPart};
 use crate::group::Group;
 use crate::net;
-use crate::protocol::aggregate::{AggregationEngine, PublicsUpload};
+use crate::protocol::aggregate::{uploads_of, AggregationEngine};
 use crate::protocol::msg;
 use crate::protocol::{ssa, Session};
 use anyhow::{anyhow, Result};
@@ -102,18 +102,19 @@ pub fn run_ssa_round_with<G: Group>(
                     .ok_or_else(|| anyhow!("S1: bad forwarded publics"))?;
                 *slot = Some(up.publics.ok_or_else(|| anyhow!("S1: no publics"))?);
             }
-            let publics: Vec<Vec<PublicPart<G>>> = publics
+            let batches: Vec<MasterKeyBatch<G>> = publics
                 .into_iter()
                 .enumerate()
-                .map(|(i, p)| p.ok_or_else(|| anyhow!("S1: missing {i}")))
+                .zip(&msks)
+                .map(|((i, p), msk)| {
+                    Ok(MasterKeyBatch {
+                        msk: [*msk, *msk],
+                        publics: p.ok_or_else(|| anyhow!("S1: missing {i}"))?,
+                    })
+                })
                 .collect::<Result<_>>()?;
             let t = Instant::now();
-            let uploads: Vec<PublicsUpload<'_, G>> = publics
-                .iter()
-                .zip(&msks)
-                .map(|(p, msk)| PublicsUpload { publics: p, msk })
-                .collect();
-            let acc = engine.aggregate_publics(session, 1, &uploads);
+            let acc = engine.aggregate_publics(session, 1, &uploads_of(&batches, 1));
             let server_time = t.elapsed();
             inter1.send(msg::encode_shares(&acc))?;
             Ok((acc, server_time, inter1.meter.sent()))
@@ -137,14 +138,7 @@ pub fn run_ssa_round_with<G: Group>(
             batches.push(batch);
         }
         let t = Instant::now();
-        let uploads: Vec<PublicsUpload<'_, G>> = batches
-            .iter()
-            .map(|b| PublicsUpload {
-                publics: &b.publics,
-                msk: &b.msk[0],
-            })
-            .collect();
-        let acc0 = engine.aggregate_publics(session, 0, &uploads);
+        let acc0 = engine.aggregate_publics(session, 0, &uploads_of(&batches, 0));
         let s0_time = t.elapsed();
 
         let share1 = msg::decode_shares::<G>(&inter0.recv()?)

@@ -17,7 +17,7 @@ use fsl::crypto::rng::Rng;
 use fsl::data::{partition_iid, ImageDataset, IMAGE_CLASSES};
 use fsl::hashing::{CuckooParams, SimpleTable};
 use fsl::metrics::bits_to_mb;
-use fsl::protocol::{psr, Session, SessionParams};
+use fsl::protocol::{psr, RetrievalEngine, Session, SessionParams};
 use fsl::runtime::Executor;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -48,7 +48,7 @@ fn main() -> Result<()> {
                  examples:\n\
                  \u{20}  fsl train rounds=20 clients=10 c=0.1\n\
                  \u{20}  fsl ssa m=32768 c=0.1 clients=4\n\
-                 \u{20}  fsl psr m=32768 k=512\n\
+                 \u{20}  fsl psr m=32768 k=512 clients=8\n\
                  \u{20}  fsl params m=1048576 c=0.1"
             );
             Ok(())
@@ -203,6 +203,7 @@ fn cmd_ssa(kv: &HashMap<String, String>) -> Result<()> {
 fn cmd_psr(kv: &HashMap<String, String>) -> Result<()> {
     let m: u64 = get(kv, "m", 1 << 15);
     let k: usize = get(kv, "k", 512);
+    let n: usize = get(kv, "clients", 1).max(1);
     let session = Session::new_full(SessionParams {
         m,
         k,
@@ -210,22 +211,37 @@ fn cmd_psr(kv: &HashMap<String, String>) -> Result<()> {
     });
     let mut rng = Rng::new(get(kv, "seed", 7));
     let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
-    let sel = rng.sample_distinct(k, m);
+    let sels: Vec<Vec<u64>> = (0..n).map(|_| rng.sample_distinct(k, m)).collect();
     let t0 = Instant::now();
-    let (ctx, batch) =
-        psr::client_query::<u64>(&session, &sel, &mut rng).map_err(|e| anyhow!("{e}"))?;
+    let mut ctxs = Vec::with_capacity(n);
+    let mut batches = Vec::with_capacity(n);
+    for sel in &sels {
+        let (ctx, batch) =
+            psr::client_query::<u64>(&session, sel, &mut rng).map_err(|e| anyhow!("{e}"))?;
+        ctxs.push(ctx);
+        batches.push(batch);
+    }
     let t_gen = t0.elapsed();
+    // Serve the whole client batch per server through the sharded read
+    // engine (set FSL_THREADS to shard; see `protocol::retrieve`).
+    let engine = RetrievalEngine::from_env();
     let t1 = Instant::now();
-    let a0 = psr::server_answer(&session, &weights, &batch.server_keys(0));
-    let a1 = psr::server_answer(&session, &weights, &batch.server_keys(1));
+    let keys0: Vec<_> = batches.iter().map(|b| b.server_keys(0)).collect();
+    let keys1: Vec<_> = batches.iter().map(|b| b.server_keys(1)).collect();
+    let a0 = engine.answer_batch_keys(&session, &weights, &keys0);
+    let a1 = engine.answer_batch_keys(&session, &weights, &keys1);
     let t_ans = t1.elapsed();
-    let got = psr::client_reconstruct(&ctx, session.simple.num_bins(), &sel, &a0, &a1);
-    for (i, &s) in sel.iter().enumerate() {
-        assert_eq!(got[i], weights[s as usize]);
+    for ((ctx, sel), (c0, c1)) in ctxs.iter().zip(&sels).zip(a0.iter().zip(&a1)) {
+        let got = psr::client_reconstruct(ctx, session.simple.num_bins(), sel, c0, c1);
+        for (i, &s) in sel.iter().enumerate() {
+            assert_eq!(got[i], weights[s as usize]);
+        }
     }
     println!(
-        "PSR m={m} k={k}: gen {t_gen:?}, both-server answer {t_ans:?}, upload {:.3} MB, verified ✓",
-        bits_to_mb(batch.upload_bits())
+        "PSR m={m} k={k} clients={n}: gen {t_gen:?}, both-server answers {t_ans:?} \
+         ({} workers), upload/client {:.3} MB, verified ✓",
+        engine.threads(),
+        bits_to_mb(batches[0].upload_bits())
     );
     Ok(())
 }

@@ -1,4 +1,5 @@
-//! The unified server-side aggregation engine.
+//! The unified server-side aggregation engine (SSA write path) and the
+//! shard planner it shares with the retrieval engine (PSR read path).
 //!
 //! The SSA server path used to exist in three divergent copies
 //! (`ssa::server_aggregate_into`, `ssa::server_aggregate_publics`,
@@ -22,13 +23,126 @@
 //!   merged once at the end, so scatter targets never race and no locking
 //!   is needed.
 //!
-//! This module is the single place future sharding/batching/async work
-//! plugs into.
+//! The worker-count policy and the unit-space split live in [`Sharding`],
+//! shared with the read-path [`super::retrieve::RetrievalEngine`] so both
+//! halves of the paper's Fig. 4 scale the same way. This module and
+//! `retrieve.rs` are the places future sharding/batching/async work plugs
+//! into.
 
 use super::session::Session;
 use crate::crypto::prg::{prf_seed, Seed};
-use crate::dpf::{self, DpfKey, EvalWorkspace, KeyView, PublicPart};
+use crate::dpf::{self, DpfKey, EvalWorkspace, KeyView, MasterKeyBatch, PublicPart};
 use crate::group::Group;
+
+/// The shard planner shared by the write-path [`AggregationEngine`] and
+/// the read-path [`super::retrieve::RetrievalEngine`]: a worker-count
+/// policy plus the contiguous split of a flattened unit space (unit =
+/// `client · (B + σ) + slot`).
+#[derive(Clone, Copy, Debug)]
+pub struct Sharding {
+    threads: usize,
+}
+
+impl Sharding {
+    /// Plan with an explicit worker count (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Sharding {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Single-threaded plan (deterministic microbenches, tests).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        Self::new(std::thread::available_parallelism().map_or(1, |n| n.get()))
+    }
+
+    /// Default for one of two co-located servers: half the cores each, so
+    /// the two concurrently serving server threads of an in-process round
+    /// don't oversubscribe the machine and measured server times stay
+    /// honest.
+    pub fn per_coloc_server() -> Self {
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        Self::new((cores / 2).max(1))
+    }
+
+    /// The `FslConfig::threads` convention: an explicit worker count, or
+    /// `0` for the co-located-two-server default
+    /// ([`Self::per_coloc_server`]). Kept here so callers can't
+    /// accidentally turn the default into "serial".
+    pub fn from_config(threads: usize) -> Self {
+        if threads == 0 {
+            Self::per_coloc_server()
+        } else {
+            Self::new(threads)
+        }
+    }
+
+    /// Worker count from the `FSL_THREADS` environment variable (used by
+    /// the benches): unset defaults to serial so timings are
+    /// reproducible, `0` means one worker per core, and a non-numeric
+    /// value warns instead of silently running serial.
+    pub fn from_env() -> Self {
+        match std::env::var("FSL_THREADS") {
+            Ok(v) => match v.parse::<usize>() {
+                Ok(0) => Self::auto(),
+                Ok(t) => Self::new(t),
+                Err(_) => {
+                    eprintln!("FSL_THREADS={v:?} is not a number; running serial");
+                    Self::serial()
+                }
+            },
+            Err(_) => Self::serial(),
+        }
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `work` over the flattened unit space `0..units`, split into at
+    /// most `min(threads, units)` contiguous non-empty ranges — one
+    /// scoped thread each (no thread is spawned for a single shard).
+    /// Per-shard results come back in unit order, so contiguous per-unit
+    /// outputs can simply be concatenated.
+    pub fn run<R: Send>(
+        &self,
+        units: usize,
+        work: impl Fn(std::ops::Range<usize>) -> R + Sync,
+    ) -> Vec<R> {
+        if units == 0 {
+            return Vec::new();
+        }
+        let shards = self.threads.min(units);
+        if shards <= 1 {
+            return vec![work(0..units)];
+        }
+        let chunk = units.div_ceil(shards);
+        // div_ceil chunking can leave trailing shards empty (units = 9,
+        // shards = 8 → chunk = 2 → only 5 busy shards); don't spawn
+        // threads — or, on the write path, allocate partials — for them.
+        let busy = units.div_ceil(chunk);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..busy)
+                .map(|t| {
+                    let work = &work;
+                    let lo = (t * chunk).min(units);
+                    let hi = ((t + 1) * chunk).min(units);
+                    scope.spawn(move || work(lo..hi))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        })
+    }
+}
 
 /// One input form the engine can aggregate: anything that can evaluate
 /// "client `c`'s key for slot `j`" over a prefix of its domain.
@@ -85,8 +199,8 @@ impl<G: Group> EvalSource<G> for KeySource<'_, G> {
 }
 
 /// A single client's materialised keys (the legacy
-/// `server_aggregate_into` shape).
-struct SingleClientKeys<'a, G: Group>(&'a [DpfKey<G>]);
+/// `server_aggregate_into` / `psr::server_answer` shape).
+pub(crate) struct SingleClientKeys<'a, G: Group>(pub(crate) &'a [DpfKey<G>]);
 
 impl<G: Group> EvalSource<G> for SingleClientKeys<'_, G> {
     fn num_clients(&self) -> usize {
@@ -166,73 +280,74 @@ impl<G: Group> EvalSource<G> for PublicsSource<'_, G> {
     }
 }
 
+/// Borrow many decoded [`MasterKeyBatch`]es as party `party`'s zero-copy
+/// engine input — the coordinator serving paths decode wire uploads into
+/// batches and hand the views straight to
+/// [`AggregationEngine::aggregate_publics`] /
+/// [`super::retrieve::RetrievalEngine::answer_publics`].
+pub fn uploads_of<G: Group>(batches: &[MasterKeyBatch<G>], party: u8) -> Vec<PublicsUpload<'_, G>> {
+    batches
+        .iter()
+        .map(|b| PublicsUpload {
+            publics: &b.publics,
+            msk: &b.msk[party as usize],
+        })
+        .collect()
+}
+
 /// The unified, sharded server-aggregation engine (the paper enables
 /// multi-threading for all experiments, §7.2).
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct AggregationEngine {
-    threads: usize,
+    sharding: Sharding,
 }
 
 impl AggregationEngine {
     /// Engine with an explicit worker count (clamped to ≥ 1).
     pub fn new(threads: usize) -> Self {
-        AggregationEngine {
-            threads: threads.max(1),
-        }
+        Self::with_sharding(Sharding::new(threads))
+    }
+
+    /// Engine over an existing shard plan.
+    pub fn with_sharding(sharding: Sharding) -> Self {
+        AggregationEngine { sharding }
     }
 
     /// Single-threaded engine (deterministic microbenches, tests).
     pub fn serial() -> Self {
-        Self::new(1)
+        Self::with_sharding(Sharding::serial())
     }
 
     /// One worker per available core.
     pub fn auto() -> Self {
-        Self::new(std::thread::available_parallelism().map_or(1, |n| n.get()))
+        Self::with_sharding(Sharding::auto())
     }
 
-    /// Default for one of two co-located servers: half the cores each, so
-    /// the two concurrently aggregating server threads of an in-process
-    /// round don't oversubscribe the machine and measured server times
-    /// stay honest.
+    /// Default for one of two co-located servers — see
+    /// [`Sharding::per_coloc_server`].
     pub fn per_coloc_server() -> Self {
-        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
-        Self::new((cores / 2).max(1))
+        Self::with_sharding(Sharding::per_coloc_server())
     }
 
-    /// The `FslConfig::threads` convention: an explicit worker count, or
-    /// `0` for the co-located-two-server default
-    /// ([`Self::per_coloc_server`]). Kept here so callers can't
-    /// accidentally turn the default into "serial".
+    /// The `FslConfig::threads` convention — see
+    /// [`Sharding::from_config`].
     pub fn from_config(threads: usize) -> Self {
-        if threads == 0 {
-            Self::per_coloc_server()
-        } else {
-            Self::new(threads)
-        }
+        Self::with_sharding(Sharding::from_config(threads))
     }
 
-    /// Worker count from the `FSL_THREADS` environment variable (used by
-    /// the benches): unset defaults to serial so timings are
-    /// reproducible, `0` means one worker per core, and a non-numeric
-    /// value warns instead of silently running serial.
+    /// Worker count from `FSL_THREADS` — see [`Sharding::from_env`].
     pub fn from_env() -> Self {
-        match std::env::var("FSL_THREADS") {
-            Ok(v) => match v.parse::<usize>() {
-                Ok(0) => Self::auto(),
-                Ok(t) => Self::new(t),
-                Err(_) => {
-                    eprintln!("FSL_THREADS={v:?} is not a number; running serial");
-                    Self::serial()
-                }
-            },
-            Err(_) => Self::serial(),
-        }
+        Self::with_sharding(Sharding::from_env())
     }
 
     /// Configured worker count.
     pub fn threads(&self) -> usize {
-        self.threads
+        self.sharding.threads()
+    }
+
+    /// The underlying shard plan (shared with the retrieval engine).
+    pub fn sharding(&self) -> Sharding {
+        self.sharding
     }
 
     /// Aggregate every client of `source` into a fresh share vector
@@ -263,28 +378,14 @@ impl AggregationEngine {
         if units == 0 {
             return;
         }
-        let threads = self.threads.min(units);
-        if threads <= 1 {
+        if self.sharding.threads().min(units) <= 1 {
             Worker::new(session, source).run_range(0, units, acc);
             return;
         }
-        let chunk = units.div_ceil(threads);
-        let partials = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..threads)
-                .map(|t| {
-                    let lo = (t * chunk).min(units);
-                    let hi = ((t + 1) * chunk).min(units);
-                    scope.spawn(move || {
-                        let mut part = vec![G::zero(); session.domain_size()];
-                        Worker::new(session, source).run_range(lo, hi, &mut part);
-                        part
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("aggregation worker panicked"))
-                .collect::<Vec<_>>()
+        let partials = self.sharding.run(units, |range| {
+            let mut part = vec![G::zero(); session.domain_size()];
+            Worker::new(session, source).run_range(range.start, range.end, &mut part);
+            part
         });
         for part in &partials {
             for (a, v) in acc.iter_mut().zip(part) {

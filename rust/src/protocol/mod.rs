@@ -10,16 +10,21 @@
 //! * [`session`] — shared per-round state (tables, parameters, domains).
 //! * [`udpf_ssa`] — SSA over updatable DPF keys for fixed submodels (§6).
 //! * [`aggregate`] — the unified, sharded server-aggregation engine every
-//!   server-side evaluate+scatter path routes through.
+//!   server-side evaluate+scatter path routes through (SSA write path),
+//!   plus the [`aggregate::Sharding`] planner it shares with…
+//! * [`retrieve`] — …the unified, sharded PSR answer engine every
+//!   server-side evaluate+inner-product path routes through (read path).
 
 pub mod aggregate;
 pub mod mega;
 pub mod msg;
 pub mod psr;
 pub mod psu;
+pub mod retrieve;
 pub mod session;
 pub mod ssa;
 pub mod udpf_ssa;
 
-pub use aggregate::AggregationEngine;
+pub use aggregate::{AggregationEngine, Sharding};
+pub use retrieve::RetrievalEngine;
 pub use session::{Session, SessionParams};

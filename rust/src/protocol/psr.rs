@@ -8,7 +8,12 @@
 //! Server `b`: full-domain-evaluate each bin key over its simple bin and
 //! answer with the inner products `[w'_j]_b = Σ_d w_{T_simple[j][d]} ·
 //! [f(d)]_b`. The two answers sum to exactly the requested weights.
+//!
+//! The server answer loop itself lives in
+//! [`super::retrieve::RetrievalEngine`] (sharded, batched, zero-copy);
+//! [`server_answer`] here is a thin wrapper kept for compatibility.
 
+use super::retrieve::RetrievalEngine;
 use super::session::Session;
 use crate::crypto::rng::Rng;
 use crate::dpf::{self, gen_batch_with_master, BinPoint, DpfKey, MasterKeyBatch};
@@ -22,12 +27,20 @@ pub struct PsrClientCtx {
 
 /// Build the client's query: the cuckoo table and the batched DPF keys
 /// (B bin keys + σ stash keys, in that order).
+///
+/// Duplicate indices in `selections` are allowed: they retrieve the same
+/// weight, so the cuckoo table is built over the distinct set (the read
+/// path's counterpart of SSA's duplicate-summing convention) — repeated
+/// indices must not fight each other for bins or spuriously overflow the
+/// stash.
 pub fn client_query<G: Group>(
     session: &Session,
     selections: &[u64],
     rng: &mut Rng,
 ) -> Result<(PsrClientCtx, MasterKeyBatch<G>), CuckooError> {
-    let bins = build_bin_points(session, selections, rng, |_u| G::one())?;
+    let mut seen = std::collections::HashSet::with_capacity(selections.len());
+    let uniq: Vec<u64> = selections.iter().copied().filter(|u| seen.insert(*u)).collect();
+    let bins = build_bin_points(session, &uniq, rng, |_u| G::one())?;
     let batch = gen_batch_with_master(&bins.points, rng.gen_seed(), rng.gen_seed());
     Ok((PsrClientCtx { cuckoo: bins.cuckoo }, batch))
 }
@@ -87,38 +100,13 @@ pub(crate) fn build_bin_points<G: Group>(
 
 /// Server `b` answers a PSR query: one share per bin (then per stash key).
 /// `weights[i]` is the group encoding of global weight `i`.
+///
+/// Thin wrapper over the serial [`RetrievalEngine`], which also fixes the
+/// old stash loop's allocating `full_eval` (the engine reuses one
+/// workspace + leaf buffer across every slot, bins and stash alike).
+#[deprecated(note = "use protocol::retrieve::RetrievalEngine::answer_keys")]
 pub fn server_answer<G: Group>(session: &Session, weights: &[G], keys: &[DpfKey<G>]) -> Vec<G> {
-    assert_eq!(weights.len(), session.params.m as usize, "weight vector size");
-    let num_bins = session.simple.num_bins();
-    let sigma = session.params.cuckoo.sigma;
-    assert_eq!(keys.len(), num_bins + sigma, "key count");
-
-    let mut answers = Vec::with_capacity(keys.len());
-    // Reused workspace + output buffer across bins, then one inner
-    // product per bin (the L1 `binned_ip` kernel computes the same slab
-    // product on the PJRT path; see `runtime::Executor::binned_ip`).
-    let mut ws = dpf::EvalWorkspace::default();
-    let mut ev: Vec<G> = Vec::new();
-    for (j, key) in keys.iter().take(num_bins).enumerate() {
-        let bin = session.simple.bin(j);
-        dpf::full_eval_with(key, bin.len(), &mut ws, &mut ev);
-        let mut acc = G::zero();
-        for (d, &idx) in bin.iter().enumerate() {
-            acc.add_assign(&weights[idx as usize].ring_mul(&ev[d]));
-        }
-        answers.push(acc);
-    }
-    for key in keys.iter().skip(num_bins) {
-        let n = session.domain_size();
-        let evals = dpf::full_eval(key, n);
-        let mut acc = G::zero();
-        for (pos, ev) in evals.iter().enumerate() {
-            let idx = session.domain_value(pos);
-            acc.add_assign(&weights[idx as usize].ring_mul(ev));
-        }
-        answers.push(acc);
-    }
-    answers
+    RetrievalEngine::serial().answer_keys(session, weights, keys)
 }
 
 /// Client combines the two servers' answers into its submodel, in the
@@ -144,6 +132,7 @@ pub fn client_reconstruct<G: Group>(
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::hashing::CuckooParams;
@@ -225,6 +214,25 @@ mod tests {
             })
             .count();
         assert!(hits <= 1, "share leaks plaintext ({hits} hits)");
+    }
+
+    #[test]
+    fn duplicate_selections_retrieve_without_fighting_for_bins() {
+        // Heavily repeated indices must neither fail the cuckoo build nor
+        // change the per-occurrence reconstruction.
+        let s = session(512, 16, 0);
+        let w = weights_u64(512, 97);
+        let mut rng = Rng::new(98);
+        let mut sel = rng.sample_distinct(8, 512);
+        let dups: Vec<u64> = sel.iter().copied().collect();
+        sel.extend(dups); // every index twice
+        let (ctx, batch) = client_query::<u64>(&s, &sel, &mut rng).unwrap();
+        let a0 = server_answer(&s, &w, &batch.server_keys(0));
+        let a1 = server_answer(&s, &w, &batch.server_keys(1));
+        let got = client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
+        for (i, &sl) in sel.iter().enumerate() {
+            assert_eq!(got[i], w[sl as usize], "occurrence {i} of {sl}");
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! assumes "the leakage of the union set reveals negligible useful
 //! information").
 
+use super::session::{Session, SessionParams};
 use crate::crypto::prg::expand_stream;
 use crate::crypto::rng::Rng;
 
@@ -164,6 +165,25 @@ pub fn run_psu(
     client_unblind(key, m, k, &blinded_union)
 }
 
+/// Run the PSU and rebuild the session over the revealed union in one
+/// step (§6, Table 2 row 2) — the alignment domain shrinks to `∪ s^(i)`,
+/// so Θ and every DPF key shrink with it. The returned session feeds both
+/// engines unchanged: the write path
+/// ([`super::aggregate::AggregationEngine`]) scatters over union
+/// positions, and the read path
+/// ([`super::retrieve::RetrievalEngine`]) keeps taking the *global*
+/// `m`-sized weight vector, mapping stash positions back through
+/// [`Session::domain_value`].
+pub fn run_psu_session(
+    key: &[u8; 16],
+    params: SessionParams,
+    client_sets: &[Vec<u64>],
+    rng: &mut Rng,
+) -> Session {
+    let union = run_psu(key, params.m, params.k, client_sets, rng);
+    Session::new_union(params, union)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +231,51 @@ mod tests {
         let sets = vec![vec![1u64, 2, 3], vec![3u64, 4]];
         let got = run_psu(&key, m, 16, &sets, &mut rng);
         assert_eq!(got, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn psu_then_psr_over_the_union_domain() {
+        // Table 2 row 2, read side: after the PSU shrinks the alignment
+        // domain, clients retrieve through the sharded engine over the
+        // union session — answers must still be the exact global weights.
+        use crate::hashing::CuckooParams;
+        use crate::protocol::{psr, RetrievalEngine};
+        let m = 1u64 << 12;
+        let k = 32;
+        let mut rng = Rng::new(112);
+        let hot: Vec<u64> = rng.sample_distinct(256, m);
+        let sets: Vec<Vec<u64>> = (0..4)
+            .map(|_| {
+                let mut s: Vec<u64> = (0..k)
+                    .map(|_| hot[rng.gen_range(hot.len() as u64) as usize])
+                    .collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            })
+            .collect();
+        let session = run_psu_session(
+            &[8u8; 16],
+            SessionParams {
+                m,
+                k,
+                cuckoo: CuckooParams::default(),
+            },
+            &sets,
+            &mut rng,
+        );
+        assert!(session.domain_size() < m as usize, "union must shrink the domain");
+        let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+        let engine = RetrievalEngine::new(4);
+        for sel in &sets {
+            let (ctx, batch) = psr::client_query::<u64>(&session, sel, &mut rng).unwrap();
+            let a0 = engine.answer_keys(&session, &weights, &batch.server_keys(0));
+            let a1 = engine.answer_keys(&session, &weights, &batch.server_keys(1));
+            let got = psr::client_reconstruct(&ctx, session.simple.num_bins(), sel, &a0, &a1);
+            for (i, &s) in sel.iter().enumerate() {
+                assert_eq!(got[i], weights[s as usize], "index {s}");
+            }
+        }
     }
 
     #[test]

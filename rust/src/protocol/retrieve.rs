@@ -1,0 +1,392 @@
+//! The unified server-side retrieval engine (PSR read path).
+//!
+//! PSR answers used to be computed on a single thread by
+//! `psr::server_answer`, one client at a time, with the stash loop even
+//! falling back to the allocating `dpf::full_eval`. In a deployment the
+//! read path is the hot one — every client of "millions of users"
+//! retrieves its submodel before it trains — so the server answer loop
+//! now mirrors the SSA write path exactly: one [`RetrievalEngine`],
+//! sharded by the same [`Sharding`] planner over the same flattened
+//! `clients × (B bins + σ stash slots)` unit space, consuming any
+//! [`EvalSource`] (materialised [`crate::dpf::DpfKey`]s, zero-copy public
+//! parts + master seed, or U-DPF epoch keys via
+//! [`super::udpf_ssa::server_answer`]).
+//!
+//! The accumulator shape differs from aggregation, and that is what makes
+//! the read path embarrassingly parallel: a write-path unit *scatters*
+//! leaf shares into a shared domain-sized vector (hence per-worker
+//! partials and a merge), while a read-path unit reduces to exactly one
+//! group element — the inner product `Σ_d w[T_simple[j][d]] · [f_j(d)]_b`
+//! for a bin slot, or the whole-domain product for a stash slot. Units
+//! are disjoint output cells, so each worker just returns its contiguous
+//! answer slice and the shards are concatenated — no partials, no merge,
+//! and bit-identical answers at every worker count by construction
+//! (inner-product accumulation order within a cell never changes).
+
+use super::aggregate::{
+    EvalSource, KeySource, PublicsSource, PublicsUpload, Sharding, SingleClientKeys,
+};
+use super::session::Session;
+use crate::dpf::{DpfKey, EvalWorkspace};
+use crate::group::Group;
+
+/// The unified, sharded PSR answer engine — the read-path twin of
+/// [`super::aggregate::AggregationEngine`].
+#[derive(Clone, Copy, Debug)]
+pub struct RetrievalEngine {
+    sharding: Sharding,
+}
+
+impl RetrievalEngine {
+    /// Engine with an explicit worker count (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Self::with_sharding(Sharding::new(threads))
+    }
+
+    /// Engine over an existing shard plan (e.g. the one the co-located
+    /// aggregation engine already uses).
+    pub fn with_sharding(sharding: Sharding) -> Self {
+        RetrievalEngine { sharding }
+    }
+
+    /// Single-threaded engine (deterministic microbenches, tests).
+    pub fn serial() -> Self {
+        Self::with_sharding(Sharding::serial())
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        Self::with_sharding(Sharding::auto())
+    }
+
+    /// Default for one of two co-located servers — see
+    /// [`Sharding::per_coloc_server`].
+    pub fn per_coloc_server() -> Self {
+        Self::with_sharding(Sharding::per_coloc_server())
+    }
+
+    /// The `FslConfig::threads` convention — see
+    /// [`Sharding::from_config`].
+    pub fn from_config(threads: usize) -> Self {
+        Self::with_sharding(Sharding::from_config(threads))
+    }
+
+    /// Worker count from `FSL_THREADS` — see [`Sharding::from_env`].
+    pub fn from_env() -> Self {
+        Self::with_sharding(Sharding::from_env())
+    }
+
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.sharding.threads()
+    }
+
+    /// The underlying shard plan (shared with the aggregation engine).
+    pub fn sharding(&self) -> Sharding {
+        self.sharding
+    }
+
+    /// Answer a whole batch of concurrent client queries in one shard
+    /// plan: `result[c][j]` is client `c`'s answer share for slot `j`
+    /// (`B` bin slots then `σ` stash slots). `weights[i]` is the group
+    /// encoding of global weight `i`, so `weights` is indexed by model
+    /// index even on a PSU-reduced session (stash slots cover the
+    /// alignment domain and map positions back through
+    /// [`Session::domain_value`]).
+    pub fn answer_batch<G: Group, S: EvalSource<G>>(
+        &self,
+        session: &Session,
+        weights: &[G],
+        source: &S,
+    ) -> Vec<Vec<G>> {
+        assert_eq!(weights.len(), session.params.m as usize, "weight vector size");
+        let slots = session.simple.num_bins() + session.params.cuckoo.sigma;
+        source.assert_shape(slots);
+        let clients = source.num_clients();
+        let units = clients * slots;
+        if units == 0 {
+            return vec![Vec::new(); clients];
+        }
+        let shard_outputs = self.sharding.run(units, |range| {
+            let mut worker = AnswerWorker::new(session, weights, source);
+            let mut out = Vec::with_capacity(range.len());
+            for unit in range {
+                out.push(worker.answer_unit(unit));
+            }
+            out
+        });
+        // Shards are contiguous unit ranges in order: concatenate, then
+        // cut the flat answer vector back into per-client rows.
+        let mut flat = Vec::with_capacity(units);
+        for shard in shard_outputs {
+            flat.extend(shard);
+        }
+        let mut rows = Vec::with_capacity(clients);
+        let mut it = flat.into_iter();
+        for _ in 0..clients {
+            rows.push(it.by_ref().take(slots).collect());
+        }
+        rows
+    }
+
+    /// Answer one client's query from its materialised keys (the legacy
+    /// `psr::server_answer` shape).
+    pub fn answer_keys<G: Group>(
+        &self,
+        session: &Session,
+        weights: &[G],
+        keys: &[DpfKey<G>],
+    ) -> Vec<G> {
+        let mut rows = self.answer_batch(session, weights, &SingleClientKeys(keys));
+        rows.pop().expect("single-client answer")
+    }
+
+    /// Answer many clients' queries from their materialised key sets.
+    pub fn answer_batch_keys<G: Group>(
+        &self,
+        session: &Session,
+        weights: &[G],
+        clients: &[Vec<DpfKey<G>>],
+    ) -> Vec<Vec<G>> {
+        self.answer_batch(session, weights, &KeySource(clients))
+    }
+
+    /// Answer many clients straight from their public parts + master
+    /// seeds (the zero-copy path), evaluating as party `party` — a server
+    /// holding only publics never materialises per-bin `DpfKey`s on the
+    /// read path either.
+    pub fn answer_publics<G: Group>(
+        &self,
+        session: &Session,
+        weights: &[G],
+        party: u8,
+        uploads: &[PublicsUpload<'_, G>],
+    ) -> Vec<Vec<G>> {
+        self.answer_batch(session, weights, &PublicsSource { uploads, party })
+    }
+}
+
+/// Per-worker state: one frontier workspace and one leaf-share buffer,
+/// reused across every unit the worker answers.
+struct AnswerWorker<'a, G: Group, S: EvalSource<G>> {
+    session: &'a Session,
+    weights: &'a [G],
+    source: &'a S,
+    num_bins: usize,
+    slots: usize,
+    ws: EvalWorkspace,
+    ev: Vec<G>,
+}
+
+impl<'a, G: Group, S: EvalSource<G>> AnswerWorker<'a, G, S> {
+    fn new(session: &'a Session, weights: &'a [G], source: &'a S) -> Self {
+        let num_bins = session.simple.num_bins();
+        AnswerWorker {
+            session,
+            weights,
+            source,
+            num_bins,
+            slots: num_bins + session.params.cuckoo.sigma,
+            ws: EvalWorkspace::default(),
+            ev: Vec::new(),
+        }
+    }
+
+    /// Answer one flattened unit (unit = client · (B+σ) + slot): evaluate
+    /// the slot's key over its domain prefix and reduce to the single
+    /// inner-product share the client will combine.
+    fn answer_unit(&mut self, unit: usize) -> G {
+        let (client, slot) = (unit / self.slots, unit % self.slots);
+        let mut acc = G::zero();
+        if slot < self.num_bins {
+            // Bin slot: Θ_j leaves, weights gathered through the aligned
+            // simple table.
+            let bin = self.session.simple.bin(slot);
+            self.source.eval_slot(client, slot, bin.len(), &mut self.ws, &mut self.ev);
+            for (d, &idx) in bin.iter().enumerate() {
+                acc.add_assign(&self.weights[idx as usize].ring_mul(&self.ev[d]));
+            }
+        } else {
+            // Stash slot: whole alignment domain, positions mapped back
+            // to model indices.
+            let n = self.session.domain_size();
+            self.source.eval_slot(client, slot, n, &mut self.ws, &mut self.ev);
+            for (pos, ev) in self.ev.iter().enumerate() {
+                let idx = self.session.domain_value(pos);
+                acc.add_assign(&self.weights[idx as usize].ring_mul(ev));
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+#[allow(deprecated)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+    use crate::hashing::CuckooParams;
+    use crate::protocol::psr;
+    use crate::protocol::session::SessionParams;
+
+    fn session(m: u64, k: usize, sigma: usize) -> Session {
+        Session::new_full(SessionParams {
+            m,
+            k,
+            cuckoo: CuckooParams {
+                sigma,
+                ..CuckooParams::default()
+            },
+        })
+    }
+
+    fn weights_u64(m: u64, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        (0..m).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn engine_matches_legacy_over_all_widths() {
+        let s = session(1 << 11, 64, 0);
+        let w = weights_u64(1 << 11, 700);
+        let mut rng = Rng::new(701);
+        let clients: Vec<Vec<u64>> = (0..5).map(|_| rng.sample_distinct(64, 1 << 11)).collect();
+        let batches: Vec<_> = clients
+            .iter()
+            .map(|sel| psr::client_query::<u64>(&s, sel, &mut rng).unwrap().1)
+            .collect();
+        for party in 0..2u8 {
+            let keys: Vec<_> = batches.iter().map(|b| b.server_keys(party)).collect();
+            let legacy: Vec<Vec<u64>> =
+                keys.iter().map(|k| psr::server_answer(&s, &w, k)).collect();
+            for t in [1usize, 2, 3, 8, 64] {
+                assert_eq!(
+                    RetrievalEngine::new(t).answer_batch_keys(&s, &w, &keys),
+                    legacy,
+                    "party {party}, {t} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn publics_path_matches_keys_path_for_both_parties() {
+        let s = session(1 << 10, 32, 2);
+        let w = weights_u64(1 << 10, 702);
+        let mut rng = Rng::new(703);
+        let batches: Vec<_> = (0..4)
+            .map(|_| {
+                let sel = rng.sample_distinct(32, 1 << 10);
+                psr::client_query::<u64>(&s, &sel, &mut rng).unwrap().1
+            })
+            .collect();
+        for party in 0..2u8 {
+            let keys: Vec<_> = batches.iter().map(|b| b.server_keys(party)).collect();
+            let uploads = crate::protocol::aggregate::uploads_of(&batches, party);
+            let engine = RetrievalEngine::new(3);
+            assert_eq!(
+                engine.answer_publics(&s, &w, party, &uploads),
+                engine.answer_batch_keys(&s, &w, &keys),
+                "party {party}"
+            );
+        }
+    }
+
+    #[test]
+    fn occupied_stash_end_to_end_through_the_engine() {
+        // Tight table → stash pressure; the stash units must be answered
+        // identically to the legacy whole-domain loop.
+        let params = CuckooParams {
+            epsilon: 1.05,
+            eta: 2,
+            sigma: 24,
+            hash_seed: 3,
+            max_kicks: 30,
+        };
+        let s = Session::new_full(SessionParams {
+            m: 1 << 10,
+            k: 100,
+            cuckoo: params,
+        });
+        let w = weights_u64(1 << 10, 704);
+        let mut rng = Rng::new(705);
+        let sel = rng.sample_distinct(100, 1 << 10);
+        let (ctx, batch) = psr::client_query::<u64>(&s, &sel, &mut rng).unwrap();
+        assert!(!ctx.cuckoo.stash().is_empty(), "test needs stash pressure");
+        let engine = RetrievalEngine::new(4);
+        let a0 = engine.answer_keys(&s, &w, &batch.server_keys(0));
+        let a1 = engine.answer_keys(&s, &w, &batch.server_keys(1));
+        assert_eq!(a0, psr::server_answer(&s, &w, &batch.server_keys(0)));
+        let got = psr::client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
+        for (i, &sl) in sel.iter().enumerate() {
+            assert_eq!(got[i], w[sl as usize]);
+        }
+    }
+
+    #[test]
+    fn empty_bins_and_tiny_domains() {
+        // m barely above B: simple bins can be empty (num_points = 0) or
+        // hold a single element (num_points = 1). Scan hash seeds until a
+        // session exhibits both shapes, then check the engine answers
+        // them exactly like the legacy loop at every width.
+        let s = (0..64u64)
+            .map(|seed| {
+                Session::new_full(SessionParams {
+                    m: 8,
+                    k: 8,
+                    cuckoo: CuckooParams {
+                        sigma: 1,
+                        hash_seed: seed,
+                        ..CuckooParams::default()
+                    },
+                })
+            })
+            .find(|s| {
+                let bins = 0..s.simple.num_bins();
+                bins.clone().any(|j| s.simple.bin(j).is_empty())
+                    && bins.clone().any(|j| s.simple.bin(j).len() == 1)
+            })
+            .expect("no tiny session with empty + singleton bins in 64 seeds");
+        let w = weights_u64(8, 706);
+        let mut rng = Rng::new(707);
+        let sel = rng.sample_distinct(4, 8);
+        let (ctx, batch) = psr::client_query::<u64>(&s, &sel, &mut rng).unwrap();
+        let legacy0 = psr::server_answer(&s, &w, &batch.server_keys(0));
+        for t in [1usize, 2, 8, 64] {
+            let engine = RetrievalEngine::new(t);
+            let a0 = engine.answer_keys(&s, &w, &batch.server_keys(0));
+            let a1 = engine.answer_keys(&s, &w, &batch.server_keys(1));
+            assert_eq!(a0, legacy0, "{t} threads");
+            let got = psr::client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
+            for (i, &sl) in sel.iter().enumerate() {
+                assert_eq!(got[i], w[sl as usize], "{t} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_client_batch_is_empty() {
+        let s = session(128, 4, 0);
+        let w = weights_u64(128, 708);
+        let none: Vec<Vec<DpfKey<u64>>> = Vec::new();
+        assert!(RetrievalEngine::new(8).answer_batch_keys(&s, &w, &none).is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_units() {
+        let s = session(256, 4, 1);
+        let w = weights_u64(256, 709);
+        let mut rng = Rng::new(710);
+        let sel = rng.sample_distinct(4, 256);
+        let (_ctx, batch) = psr::client_query::<u64>(&s, &sel, &mut rng).unwrap();
+        let keys = batch.server_keys(0);
+        let serial = RetrievalEngine::serial().answer_keys(&s, &w, &keys);
+        for t in [7usize, 64, 1000] {
+            assert_eq!(
+                RetrievalEngine::new(t).answer_keys(&s, &w, &keys),
+                serial,
+                "{t} threads"
+            );
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //! per bin — `R^{(1)} = R(π_ssa)`, `R^{(>1)} = c`.
 
 use super::aggregate::{AggregationEngine, EvalSource};
+use super::retrieve::RetrievalEngine;
 use super::session::Session;
 use super::ssa::{sum_deltas_by_index, sum_duplicate_selections};
 use crate::crypto::rng::Rng;
@@ -167,6 +168,22 @@ pub fn server_aggregate<G: Group>(
     engine.aggregate(session, &UdpfSource { clients, epoch })
 }
 
+/// Answer PSR-style retrieval queries for many clients' retained U-DPF
+/// key sets at `epoch` — U-DPF keys are the retrieval engine's third
+/// input form, next to materialised `DpfKey`s and zero-copy public
+/// parts. A fixed-submodel client whose keys carry β = 1 payloads
+/// retrieves its current submodel every round without re-uploading key
+/// material. Returns one `B + σ` answer row per client.
+pub fn server_answer<G: Group>(
+    engine: &RetrievalEngine,
+    session: &Session,
+    weights: &[G],
+    clients: &[UdpfSsaServerKeys<G>],
+    epoch: u64,
+) -> Vec<Vec<G>> {
+    engine.answer_batch(session, weights, &UdpfSource { clients, epoch })
+}
+
 /// Engine input form over epoch-keyed U-DPF keys.
 struct UdpfSource<'a, G: Group> {
     clients: &'a [UdpfSsaServerKeys<G>],
@@ -271,6 +288,49 @@ mod tests {
         for t in [1usize, 3, 8] {
             let engine = AggregationEngine::new(t);
             assert_eq!(server_aggregate(&engine, &s, &all0, 0), serial, "{t} threads");
+        }
+    }
+
+    #[test]
+    fn retrieval_over_udpf_keys_matches_at_every_width() {
+        // U-DPF keys carrying β = 1 serve as fixed-submodel retrieval
+        // queries; the read engine must answer them consistently at every
+        // worker count, and the two servers' answers must reconstruct.
+        let s = session(512, 16);
+        let mut rng = Rng::new(124);
+        let w: Vec<u64> = (0..512).map(|_| rng.next_u64()).collect();
+        let mut clients = Vec::new();
+        let mut sk0s = Vec::new();
+        let mut sk1s = Vec::new();
+        for _ in 0..3 {
+            let sel = rng.sample_distinct(16, 512);
+            let ones = vec![1u64; 16];
+            let (cl, sk0, sk1) = client_setup(&s, &sel, &ones, &mut rng).unwrap();
+            clients.push((sel, cl));
+            sk0s.push(sk0);
+            sk1s.push(sk1);
+        }
+        let serial0 = server_answer(&RetrievalEngine::serial(), &s, &w, &sk0s, 0);
+        for t in [2usize, 8, 64] {
+            assert_eq!(
+                server_answer(&RetrievalEngine::new(t), &s, &w, &sk0s, 0),
+                serial0,
+                "{t} threads"
+            );
+        }
+        let a1 = server_answer(&RetrievalEngine::new(3), &s, &w, &sk1s, 0);
+        for (c, (sel, cl)) in clients.iter().enumerate() {
+            for &u in sel {
+                let slot = match cl.cuckoo.locate(u).expect("selection present") {
+                    Ok(bin) => bin,
+                    Err(st) => s.simple.num_bins() + st,
+                };
+                assert_eq!(
+                    serial0[c][slot].wrapping_add(a1[c][slot]),
+                    w[u as usize],
+                    "client {c} index {u}"
+                );
+            }
         }
     }
 

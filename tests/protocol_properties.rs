@@ -8,7 +8,7 @@
 use fsl::crypto::rng::Rng;
 use fsl::group::{Group, MegaElem};
 use fsl::hashing::{CuckooParams, CuckooTable};
-use fsl::protocol::{mega, psr, psu, ssa, Session, SessionParams};
+use fsl::protocol::{mega, psr, psu, ssa, RetrievalEngine, Session, SessionParams};
 
 fn random_params(rng: &mut Rng) -> CuckooParams {
     CuckooParams {
@@ -37,8 +37,9 @@ fn prop_psr_always_correct() {
         let Ok((ctx, batch)) = psr::client_query::<u64>(&session, &sel, &mut rng) else {
             continue; // rare cuckoo failure with tight random ε — skip
         };
-        let a0 = psr::server_answer(&session, &weights, &batch.server_keys(0));
-        let a1 = psr::server_answer(&session, &weights, &batch.server_keys(1));
+        let engine = RetrievalEngine::serial();
+        let a0 = engine.answer_keys(&session, &weights, &batch.server_keys(0));
+        let a1 = engine.answer_keys(&session, &weights, &batch.server_keys(1));
         let got = psr::client_reconstruct(&ctx, session.simple.num_bins(), &sel, &a0, &a1);
         for (i, &s) in sel.iter().enumerate() {
             assert_eq!(got[i], weights[s as usize], "seed {seed} sel {s}");
@@ -196,12 +197,205 @@ fn prop_dpf_key_sizes_follow_formula() {
 }
 
 #[test]
+#[allow(deprecated)]
+fn prop_retrieval_engine_matches_legacy_over_forms_and_widths() {
+    // The read-path mirror of `prop_engine_forms_and_widths_agree`: the
+    // sharded retrieval engine must produce bit-identical PSR answers to
+    // the legacy serial loop across worker counts {1, 2, 3, 8, 64} and
+    // across its DPF input forms (materialised keys vs zero-copy publics
+    // + master seed), including sessions with an occupied stash (σ > 0).
+    use fsl::protocol::aggregate::uploads_of;
+    for seed in 1000..1012u64 {
+        let mut rng = Rng::new(seed);
+        let m = 128 + rng.gen_range(2048);
+        let k = ((1 + rng.gen_range(32)) as usize).min(m as usize / 4).max(1);
+        let session = Session::new_full(SessionParams {
+            m,
+            k,
+            cuckoo: random_params(&mut rng),
+        });
+        let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+        let n = 1 + rng.gen_range(4) as usize;
+        let mut batches = Vec::new();
+        let mut ok = true;
+        for _ in 0..n {
+            let sel = rng.sample_distinct(k, m);
+            match psr::client_query::<u64>(&session, &sel, &mut rng) {
+                Ok((_ctx, b)) => batches.push(b),
+                Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue; // rare cuckoo failure with tight random ε — skip
+        }
+        for party in 0..2u8 {
+            let keys: Vec<_> = batches.iter().map(|b| b.server_keys(party)).collect();
+            let legacy: Vec<Vec<u64>> = keys
+                .iter()
+                .map(|k| psr::server_answer(&session, &weights, k))
+                .collect();
+            for threads in [1usize, 2, 3, 8, 64] {
+                assert_eq!(
+                    RetrievalEngine::new(threads).answer_batch_keys(&session, &weights, &keys),
+                    legacy,
+                    "seed {seed} party {party} threads {threads}"
+                );
+            }
+            let uploads = uploads_of(&batches, party);
+            assert_eq!(
+                RetrievalEngine::new(4).answer_publics(&session, &weights, party, &uploads),
+                legacy,
+                "seed {seed} party {party} publics form"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_cuckoo_every_selection_in_exactly_one_slot() {
+    // `build_with_bins` over random selection sets: every inserted
+    // element occupies exactly one bin-or-stash slot (never zero, never
+    // two), and `locate` agrees with the physical placement.
+    for seed in 1100..1140u64 {
+        let mut rng = Rng::new(seed);
+        let k = 1 + rng.gen_range(250) as usize;
+        let m = (k as u64) * 8;
+        let params = random_params(&mut rng);
+        // A client may select fewer than the session's k elements but
+        // must still use the session's bin count.
+        let take = 1 + rng.gen_range(k as u64) as usize;
+        let elements = rng.sample_distinct(take, m);
+        let num_bins = params.num_bins(k);
+        let Ok(table) = CuckooTable::build_with_bins(&elements, num_bins, &params, &mut rng)
+        else {
+            continue; // rare failure with tight random ε — skip
+        };
+        assert_eq!(table.num_bins(), num_bins, "seed {seed}");
+        let occupied = table.bins().iter().flatten().count();
+        assert_eq!(
+            occupied + table.stash().len(),
+            elements.len(),
+            "seed {seed}: slot count"
+        );
+        for &e in &elements {
+            let in_bins = table.bins().iter().filter(|b| **b == Some(e)).count();
+            let in_stash = table.stash().iter().filter(|&&s| s == e).count();
+            assert_eq!(in_bins + in_stash, 1, "seed {seed}: element {e}");
+            match table.locate(e).expect("inserted element locatable") {
+                Ok(bin) => {
+                    assert_eq!(table.bins()[bin], Some(e), "seed {seed}");
+                    assert!(table.candidate_bins(e).contains(&bin), "seed {seed}");
+                }
+                Err(slot) => assert_eq!(table.stash()[slot], e, "seed {seed}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn cuckoo_eviction_cycles_fill_the_stash_then_error() {
+    // Deterministic eviction-cycle construction: find elements whose η=2
+    // candidate bins are the SAME two bins. Three such elements cannot
+    // all fit in two bins — the third must land in the stash; with the
+    // stash full, insertion must surface CuckooError (never panic).
+    let params = CuckooParams {
+        epsilon: 1.0,
+        eta: 2,
+        sigma: 1,
+        hash_seed: 11,
+        max_kicks: 100,
+    };
+    let num_bins = 8;
+    let probe = CuckooTable::build_with_bins(&[], num_bins, &params, &mut Rng::new(0)).unwrap();
+    let mut groups: std::collections::HashMap<Vec<usize>, Vec<u64>> =
+        std::collections::HashMap::new();
+    for u in 0..4096u64 {
+        let mut c = probe.candidate_bins(u);
+        c.sort_unstable();
+        if c.len() == 2 {
+            groups.entry(c).or_default().push(u);
+        }
+    }
+    let cycle: &Vec<u64> = groups
+        .values()
+        .find(|v| v.len() >= 4)
+        .expect("4096 probes over 8 bins must yield 4 elements sharing a bin pair");
+
+    // 3 elements into their 2 shared bins, σ = 1: exactly one stashed,
+    // all locatable.
+    let t = CuckooTable::build_with_bins(&cycle[..3], num_bins, &params, &mut Rng::new(1)).unwrap();
+    assert_eq!(t.stash().len(), 1);
+    for &e in &cycle[..3] {
+        assert!(t.locate(e).is_some(), "lost {e}");
+    }
+
+    // 4 elements, σ = 1: the stash overflows — an Err, not a panic, and
+    // the reported homeless element is one of ours.
+    let err = CuckooTable::build_with_bins(&cycle[..4], num_bins, &params, &mut Rng::new(2))
+        .expect_err("stash overflow must be reported");
+    assert!(cycle[..4].contains(&err.element), "reported {}", err.element);
+
+    // σ = 0: even the third element has nowhere to go.
+    let p0 = CuckooParams { sigma: 0, ..params };
+    assert!(CuckooTable::build_with_bins(&cycle[..3], num_bins, &p0, &mut Rng::new(3)).is_err());
+}
+
+#[test]
+fn prop_duplicate_selections_follow_the_summing_convention() {
+    // PR 2's convention, seed-swept: SSA sums the deltas of duplicate
+    // selections (additivity), PSR retrieves per occurrence — and neither
+    // path lets duplicates fight for cuckoo bins.
+    for seed in 1200..1215u64 {
+        let mut rng = Rng::new(seed);
+        let m = 256 + rng.gen_range(1024);
+        let base = rng.sample_distinct(8, m);
+        // Sample 24 indices WITH replacement from the 8-element base:
+        // heavy duplication guaranteed.
+        let sel: Vec<u64> = (0..24)
+            .map(|_| base[rng.gen_range(8) as usize])
+            .collect();
+        let session = Session::new_full(SessionParams {
+            m,
+            k: 24,
+            cuckoo: CuckooParams::default().with_seed(seed),
+        });
+
+        // SSA: duplicate deltas must sum.
+        let deltas: Vec<u64> = (0..24).map(|_| rng.next_u64()).collect();
+        let mut expected = vec![0u64; m as usize];
+        for (&u, &d) in sel.iter().zip(&deltas) {
+            expected[u as usize] = expected[u as usize].wrapping_add(d);
+        }
+        let batch = ssa::client_update(&session, &sel, &deltas, &mut rng).unwrap();
+        let dw = ssa::reconstruct(
+            &ssa::server_aggregate(&session, &[batch.server_keys(0)]),
+            &ssa::server_aggregate(&session, &[batch.server_keys(1)]),
+        );
+        assert_eq!(dw, expected, "seed {seed} (SSA)");
+
+        // PSR: every occurrence retrieves its weight.
+        let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+        let (ctx, qbatch) = psr::client_query::<u64>(&session, &sel, &mut rng).unwrap();
+        let engine = RetrievalEngine::new(2);
+        let a0 = engine.answer_keys(&session, &weights, &qbatch.server_keys(0));
+        let a1 = engine.answer_keys(&session, &weights, &qbatch.server_keys(1));
+        let got = psr::client_reconstruct(&ctx, session.simple.num_bins(), &sel, &a0, &a1);
+        for (i, &u) in sel.iter().enumerate() {
+            assert_eq!(got[i], weights[u as usize], "seed {seed} occurrence {i} (PSR)");
+        }
+    }
+}
+
+#[test]
 fn prop_engine_forms_and_widths_agree() {
     // The unified engine must produce bit-identical share vectors across
     // worker counts and across its two DPF input forms (materialised keys
     // vs zero-copy publics + master seed), including sessions with an
     // occupied stash (σ > 0).
-    use fsl::protocol::aggregate::{AggregationEngine, PublicsUpload};
+    use fsl::protocol::aggregate::{uploads_of, AggregationEngine};
     for seed in 700..715u64 {
         let mut rng = Rng::new(seed);
         let m = 128 + rng.gen_range(2048);
@@ -238,13 +432,7 @@ fn prop_engine_forms_and_widths_agree() {
                     "seed {seed} party {party} threads {threads}"
                 );
             }
-            let uploads: Vec<PublicsUpload<'_, u64>> = batches
-                .iter()
-                .map(|b| PublicsUpload {
-                    publics: &b.publics,
-                    msk: &b.msk[party as usize],
-                })
-                .collect();
+            let uploads = uploads_of(&batches, party);
             assert_eq!(
                 AggregationEngine::new(4).aggregate_publics(&session, party, &uploads),
                 serial,

@@ -1,0 +1,222 @@
+//! Property-style fuzzing of the wire layer (`protocol/msg.rs`).
+//!
+//! No proptest crate is available offline, so these are seed-swept
+//! properties plus exhaustive adversarial sweeps: every wire message must
+//! (a) encode→decode round-trip bit-exactly, (b) decode to `None` from
+//! every strict prefix (truncation must never yield a plausible partial
+//! message), and (c) never panic or over-read on corrupted or random
+//! bytes — decoders only ever see attacker-controlled channel data.
+
+use fsl::crypto::rng::Rng;
+use fsl::dpf::{gen_batch_with_master, BinPoint, MasterKeyBatch};
+use fsl::group::{Group, MegaElem};
+use fsl::protocol::msg;
+
+/// A random key batch with mixed real/dummy bins and mixed depths.
+fn random_batch<G: Group>(
+    rng: &mut Rng,
+    bins: usize,
+    beta: impl Fn(&mut Rng) -> G,
+) -> MasterKeyBatch<G> {
+    let points: Vec<BinPoint<G>> = (0..bins)
+        .map(|_| {
+            let depth = 1 + rng.gen_range(9) as usize;
+            let point = if rng.gen_f64() < 0.25 {
+                None // dummy bin
+            } else {
+                Some((rng.gen_range(1u64 << depth), beta(rng)))
+            };
+            BinPoint { depth, point }
+        })
+        .collect();
+    gen_batch_with_master(&points, rng.gen_seed(), rng.gen_seed())
+}
+
+#[test]
+fn prop_key_upload_roundtrips() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed);
+        let bins = 1 + rng.gen_range(12) as usize;
+        let batch = random_batch::<u64>(&mut rng, bins, |r| r.next_u64());
+        for server in 0..2u8 {
+            let long = msg::encode_key_upload(&batch, server, true);
+            let up = msg::decode_key_upload::<u64>(&long).expect("long upload decodes");
+            assert_eq!(up.server, server, "seed {seed}");
+            assert_eq!(up.msk, batch.msk[server as usize], "seed {seed}");
+            // Re-encoding the decoded upload must reproduce the publics
+            // region byte-exactly (deep equality of every correction
+            // word); bytes 0..17 are the server tag + per-server msk.
+            let rebuilt = MasterKeyBatch::<u64> {
+                msk: [up.msk, up.msk],
+                publics: up.publics.expect("publics present"),
+            };
+            assert_eq!(
+                msg::encode_key_upload(&rebuilt, 0, true)[17..],
+                msg::encode_key_upload(&batch, 0, true)[17..],
+                "seed {seed} server {server}"
+            );
+            let short = msg::encode_key_upload(&batch, server, false);
+            assert!(short.len() < long.len(), "seed {seed}");
+            let us = msg::decode_key_upload::<u64>(&short).expect("short upload decodes");
+            assert!(us.publics.is_none(), "seed {seed}");
+            assert_eq!(us.msk, batch.msk[server as usize], "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_shares_and_indices_roundtrip() {
+    for seed in 100..140u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.gen_range(200) as usize;
+        let shares64: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        assert_eq!(
+            msg::decode_shares::<u64>(&msg::encode_shares(&shares64)).as_deref(),
+            Some(&shares64[..]),
+            "seed {seed} u64"
+        );
+        let shares128: Vec<u128> = (0..n)
+            .map(|_| ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128)
+            .collect();
+        assert_eq!(
+            msg::decode_shares::<u128>(&msg::encode_shares(&shares128)).as_deref(),
+            Some(&shares128[..]),
+            "seed {seed} u128"
+        );
+        let mega: Vec<MegaElem<3>> = (0..n)
+            .map(|_| MegaElem([rng.next_u64(), rng.next_u64(), rng.next_u64()]))
+            .collect();
+        assert_eq!(
+            msg::decode_shares::<MegaElem<3>>(&msg::encode_shares(&mega)).as_deref(),
+            Some(&mega[..]),
+            "seed {seed} mega"
+        );
+        let idx: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        assert_eq!(
+            msg::decode_indices(&msg::encode_indices(&idx)).as_deref(),
+            Some(&idx[..]),
+            "seed {seed} indices"
+        );
+    }
+}
+
+#[test]
+fn prop_every_strict_prefix_is_rejected() {
+    for seed in 200..210u64 {
+        let mut rng = Rng::new(seed);
+        let batch = random_batch::<u128>(&mut rng, 1 + rng.gen_range(6) as usize, |r| {
+            r.next_u64() as u128
+        });
+        let n_shares = 1 + rng.gen_range(40) as usize;
+        let shares: Vec<u64> = (0..n_shares).map(|_| rng.next_u64()).collect();
+        let n_idx = 1 + rng.gen_range(40) as usize;
+        let idx: Vec<u64> = (0..n_idx).map(|_| rng.next_u64()).collect();
+        // Each message against its own decoder: a truncated message must
+        // decode to None at EVERY cut point — partial parses must never
+        // yield a plausible message.
+        for (mi, bytes) in [
+            msg::encode_key_upload(&batch, 0, true),
+            msg::encode_key_upload(&batch, 1, false),
+        ]
+        .iter()
+        .enumerate()
+        {
+            for len in 0..bytes.len() {
+                assert!(
+                    msg::decode_key_upload::<u128>(&bytes[..len]).is_none(),
+                    "seed {seed} upload {mi} len {len}"
+                );
+            }
+        }
+        let enc_shares = msg::encode_shares(&shares);
+        for len in 0..enc_shares.len() {
+            assert!(
+                msg::decode_shares::<u64>(&enc_shares[..len]).is_none(),
+                "seed {seed} shares len {len}"
+            );
+        }
+        let enc_idx = msg::encode_indices(&idx);
+        for len in 0..enc_idx.len() {
+            assert!(
+                msg::decode_indices(&enc_idx[..len]).is_none(),
+                "seed {seed} indices len {len}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_corrupted_bytes_never_panic() {
+    // Single-byte corruption at every position, two flip patterns: the
+    // decoder may return garbage-but-well-formed data, but it must never
+    // panic, loop, or read out of bounds (all access is bounds-checked —
+    // this test pins that contract).
+    for seed in 300..306u64 {
+        let mut rng = Rng::new(seed);
+        let batch = random_batch::<u64>(&mut rng, 1 + rng.gen_range(5) as usize, |r| r.next_u64());
+        let shares: Vec<u64> = (0..10).map(|_| rng.next_u64()).collect();
+        let messages: Vec<Vec<u8>> = vec![
+            msg::encode_key_upload(&batch, 0, true),
+            msg::encode_key_upload(&batch, 1, false),
+            msg::encode_shares(&shares),
+            msg::encode_indices(&shares),
+        ];
+        for bytes in &messages {
+            for pos in 0..bytes.len() {
+                for flip in [0x01u8, 0xff] {
+                    let mut bad = bytes.clone();
+                    bad[pos] ^= flip;
+                    // Outputs are unspecified; absence of panic is the
+                    // property. Where Some comes back, the decoded value
+                    // must at least re-encode within the input's length
+                    // (no over-read can have happened).
+                    if let Some(v) = msg::decode_shares::<u64>(&bad) {
+                        assert!(4 + v.len() * 8 <= bad.len(), "over-read at {pos}");
+                    }
+                    if let Some(v) = msg::decode_indices(&bad) {
+                        assert!(4 + v.len() * 8 <= bad.len(), "over-read at {pos}");
+                    }
+                    let _ = msg::decode_key_upload::<u64>(&bad);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_random_blobs_never_panic() {
+    // Pure-noise inputs of sweeping lengths against every decoder.
+    for seed in 400..420u64 {
+        let mut rng = Rng::new(seed);
+        let len = rng.gen_range(600) as usize;
+        let blob: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = msg::decode_key_upload::<u64>(&blob);
+        let _ = msg::decode_key_upload::<u128>(&blob);
+        let _ = msg::decode_key_upload::<MegaElem<4>>(&blob);
+        if let Some(v) = msg::decode_shares::<u64>(&blob) {
+            assert!(4 + v.len() * 8 <= blob.len(), "seed {seed} over-read");
+        }
+        if let Some(v) = msg::decode_indices(&blob) {
+            assert!(4 + v.len() * 8 <= blob.len(), "seed {seed} over-read");
+        }
+    }
+}
+
+#[test]
+fn adversarial_length_fields_are_bounded_before_allocation() {
+    // A malicious count must be rejected by the pre-allocation bound, not
+    // by OOM: huge counts over tiny payloads return None.
+    let mut huge_shares = Vec::new();
+    huge_shares.extend_from_slice(&u32::MAX.to_le_bytes());
+    huge_shares.extend_from_slice(&[0u8; 64]);
+    assert!(msg::decode_shares::<u64>(&huge_shares).is_none());
+    assert!(msg::decode_indices(&huge_shares).is_none());
+
+    // Same for the publics count inside a key upload.
+    let mut upload = vec![0u8]; // server
+    upload.extend_from_slice(&[7u8; 16]); // msk
+    upload.push(1); // has_publics
+    upload.extend_from_slice(&u32::MAX.to_le_bytes());
+    upload.extend_from_slice(&[0u8; 32]);
+    assert!(msg::decode_key_upload::<u64>(&upload).is_none());
+}

@@ -15,15 +15,15 @@
 //! cargo run --release --example mega_element -- rounds=25 c=0.1
 //! ```
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 use fsl::baseline::trivial_sa;
-use fsl::coordinator::top_k_groups;
+use fsl::coordinator::{top_k_groups, FslRuntimeBuilder};
 use fsl::crypto::rng::Rng;
 use fsl::data::{TextDataset, TrecCensus};
 use fsl::group::{fixed_decode, fixed_encode, MegaElem};
 use fsl::hashing::CuckooParams;
-use fsl::metrics::bits_to_mb;
-use fsl::protocol::{mega, psr, ssa, AggregationEngine, RetrievalEngine, Session, SessionParams};
+use fsl::metrics::{bits_to_mb, mb};
+use fsl::protocol::{mega, Session, SessionParams};
 use fsl::runtime::Executor;
 use std::collections::HashMap;
 
@@ -79,7 +79,10 @@ fn main() -> Result<()> {
     }
     assert_eq!(params.len(), m_total);
 
-    // --- Round-0 demonstration: mega-PSR retrieval of client 0's rows ---
+    // One persistent mega-element runtime for the whole run: the payload
+    // mode is just the group parameter (`MegaElem<TAU>` rows instead of
+    // scalars), and per-round public parameters are installed with
+    // `set_session` while the server threads stay alive.
     let mega_weights: Vec<MegaElem<TAU>> = mega::group_weights::<TAU>(
         &params[..m_emb].iter().map(|&f| fixed_encode(f)).collect::<Vec<_>>(),
     );
@@ -90,19 +93,23 @@ fn main() -> Result<()> {
         cuckoo: CuckooParams::default().with_seed(seed ^ 0x77),
     });
     let mut rng = Rng::new(seed);
-    let (ctx, batch_keys) = psr::client_query::<MegaElem<TAU>>(&psr_session, &client_rows, &mut rng)
-        .map_err(|e| anyhow!("{e}"))?;
-    let engine = RetrievalEngine::auto();
-    let a0 = engine.answer_keys(&psr_session, &mega_weights, &batch_keys.server_keys(0));
-    let a1 = engine.answer_keys(&psr_session, &mega_weights, &batch_keys.server_keys(1));
-    let got = psr::client_reconstruct(&ctx, psr_session.simple.num_bins(), &client_rows, &a0, &a1);
+    // threads = 0: the co-located default (half the cores per server —
+    // both servers answer concurrently in-process).
+    let mut rt = FslRuntimeBuilder::from_session(psr_session)
+        .threads(0)
+        .max_clients(census.clients)
+        .build::<MegaElem<TAU>>()?;
+    rt.set_weights(mega_weights.clone())?;
+
+    // --- Round-0 demonstration: mega-PSR retrieval of client 0's rows ---
+    let psr_round = rt.psr(std::slice::from_ref(&client_rows), &mut rng)?;
     for (i, &r) in client_rows.iter().enumerate() {
-        assert_eq!(got[i], mega_weights[r as usize]);
+        assert_eq!(psr_round.submodels[0][i], mega_weights[r as usize]);
     }
     println!(
         "# mega-PSR: client 0 retrieved {} embedding rows ({:.3} MB keys vs {:.3} MB full download)",
         client_rows.len(),
-        bits_to_mb(batch_keys.upload_bits()),
+        mb(psr_round.report.client_upload_bytes),
         bits_to_mb(m_emb * 64),
     );
 
@@ -111,11 +118,13 @@ fn main() -> Result<()> {
     let mut accuracy = 0.0f32;
     for round in 0..rounds {
         let mut rng = Rng::new(seed ^ (round as u64 + 1).wrapping_mul(0x9e37));
-        let session = Session::new_full(SessionParams {
+        // New public parameters for the round (re-seeded cuckoo table),
+        // installed on the living servers.
+        rt.set_session(Session::new_full(SessionParams {
             m: rows as u64,
             k: k_rows,
             cuckoo: CuckooParams::default().with_seed(seed ^ round as u64),
-        });
+        }))?;
 
         let mut mega_clients: Vec<(Vec<u64>, Vec<MegaElem<TAU>>)> = Vec::new();
         let mut other_uploads: Vec<trivial_sa::TrivialUpload<u64>> = Vec::new();
@@ -167,15 +176,10 @@ fn main() -> Result<()> {
             ));
         }
 
-        // Server side: mega-SSA for embeddings + trivial SA for the rest.
-        let keys0: Vec<_> = mega_clients
-            .iter()
-            .map(|(sel, dl)| ssa::client_update(&session, sel, dl, &mut rng).map_err(|e| anyhow!("{e}")))
-            .collect::<Result<Vec<_>>>()?;
-        let engine = AggregationEngine::auto();
-        let share0 = engine.aggregate_keys(&session, &keys0.iter().map(|b| b.server_keys(0)).collect::<Vec<_>>());
-        let share1 = engine.aggregate_keys(&session, &keys0.iter().map(|b| b.server_keys(1)).collect::<Vec<_>>());
-        let mega_delta = ssa::reconstruct(&share0, &share1);
+        // Server side: mega-SSA through the runtime for embeddings +
+        // trivial SA for the rest.
+        let ssa_round = rt.ssa(&mega_clients, &mut rng)?;
+        let mega_delta = ssa_round.delta;
         let other_delta = trivial_sa::aggregate(m_total - m_emb, &other_uploads);
 
         // FedAvg apply.
@@ -194,8 +198,8 @@ fn main() -> Result<()> {
             }
         }
 
-        // Communication accounting (per client).
-        let emb_mb = bits_to_mb(keys0[0].upload_bits());
+        // Communication accounting (per client, measured wire bytes).
+        let emb_mb = mb(ssa_round.report.client_upload_bytes) / census.clients as f64;
         let other_mb = bits_to_mb(trivial_sa::upload_bits::<u64>(m_total - m_emb));
 
         // Accuracy every 5 rounds and at the end.
@@ -231,6 +235,7 @@ fn main() -> Result<()> {
             if evaluate { format!("{accuracy:.4}") } else { String::new() }
         );
     }
+    rt.shutdown()?;
     println!(
         "# final accuracy {:.2}% at c={:.2}% row compression (mega-element τ={TAU})",
         accuracy * 100.0,

@@ -1,24 +1,24 @@
-//! PSU-optimised SSA round (§6, Table 2 row 2) plus the U-DPF
+//! PSU-optimised rounds (§6, Table 2 row 2) plus the U-DPF
 //! fixed-submodel flow (row 3) — the two scenario optimisations, end to
-//! end on one workload.
+//! end on one workload, all through the persistent runtime.
 //!
 //! Scenario: n clients whose selections cluster in a small region of a
-//! large model (`|∪ s^(i)| ≪ m`). The PSU reveals the union; the simple
-//! table is rebuilt over it, shrinking Θ and every DPF key. Then the same
-//! clients run five fixed-submodel rounds, paying full keys once and
-//! `k·l`-bit U-DPF hints afterwards.
+//! large model (`|∪ s^(i)| ≪ m`). [`FslRuntime::psu_align`] reveals the
+//! union over the wire and installs the rebuilt session on both living
+//! servers, shrinking Θ and every DPF key for all later rounds. A second
+//! runtime in `KeyMode::Udpf` then runs fixed-submodel rounds: full keys
+//! once, `k·l`-bit hints afterwards.
 //!
 //! ```sh
 //! cargo run --release --example psu_round
 //! ```
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
+use fsl::coordinator::{FslRuntimeBuilder, KeyMode};
 use fsl::crypto::rng::Rng;
 use fsl::hashing::CuckooParams;
-use fsl::metrics::bits_to_mb;
-use fsl::protocol::{
-    psr, psu, ssa, udpf_ssa, AggregationEngine, RetrievalEngine, Session, SessionParams,
-};
+use fsl::metrics::mb;
+use fsl::protocol::{Session, SessionParams};
 
 fn main() -> Result<()> {
     let m = 1u64 << 20;
@@ -39,44 +39,41 @@ fn main() -> Result<()> {
         })
         .collect();
 
-    // ---------------- PSU: reveal the union, nothing else ----------------
-    let psu_key = [42u8; 16];
-    let params = |seed| SessionParams {
+    let params = SessionParams {
         m,
         k,
-        cuckoo: CuckooParams::default().with_seed(seed),
+        cuckoo: CuckooParams::default().with_seed(1),
     };
-    // PSU + union-domain session in one step; Θ shrinks vs full-domain.
-    let reduced = psu::run_psu_session(&psu_key, params(1), &client_sets, &mut rng);
-    let union = reduced.domain.clone().expect("union session has a domain");
+    let mut rt = FslRuntimeBuilder::new(params.clone())
+        .max_clients(n_clients)
+        .build::<u64>()?;
+    let full_theta = (rt.session().theta(), rt.session().log_theta());
+
+    // ---------------- PSU: reveal the union, nothing else ----------------
+    let psu_key = [42u8; 16];
+    let psu = rt.psu_align(&psu_key, &client_sets, &mut rng)?;
     println!(
-        "PSU: {} clients, union |∪s| = {} ≪ m = {m}",
+        "PSU: {} clients, union |∪s| = {} ≪ m = {m} ({} wire bytes client↔server)",
         n_clients,
-        union.len()
+        psu.union_len,
+        psu.report.client_upload_bytes + psu.report.client_download_bytes,
     );
-    let full = Session::new_full(params(1));
     println!(
         "Θ full-domain = {} (⌈log⌉ {}), Θ union = {} (⌈log⌉ {})",
-        full.theta(),
-        full.log_theta(),
-        reduced.theta(),
-        reduced.log_theta()
+        full_theta.0,
+        full_theta.1,
+        rt.session().theta(),
+        rt.session().log_theta()
     );
-    assert!(reduced.theta() < full.theta());
+    assert!(rt.session().theta() < full_theta.0);
+    let union = rt.session().domain.clone().expect("union session has a domain");
 
-    // SSA over the union domain.
+    // ------------- SSA over the union-domain session ---------------------
     let clients: Vec<(Vec<u64>, Vec<u64>)> = client_sets
         .iter()
         .map(|s| (s.clone(), s.iter().map(|&x| x + 1).collect()))
         .collect();
-    let batches = clients
-        .iter()
-        .map(|(sel, dl)| ssa::client_update::<u64>(&reduced, sel, dl, &mut rng).map_err(|e| anyhow!("{e}")))
-        .collect::<Result<Vec<_>>>()?;
-    let engine = AggregationEngine::auto();
-    let sh0 = engine.aggregate_keys(&reduced, &batches.iter().map(|b| b.server_keys(0)).collect::<Vec<_>>());
-    let sh1 = engine.aggregate_keys(&reduced, &batches.iter().map(|b| b.server_keys(1)).collect::<Vec<_>>());
-    let delta = ssa::reconstruct(&sh0, &sh1);
+    let ssa = rt.ssa(&clients, &mut rng)?;
 
     // Verify against plaintext.
     for (pos, &idx) in union.iter().enumerate() {
@@ -84,75 +81,69 @@ fn main() -> Result<()> {
             .iter()
             .flat_map(|(sel, dl)| sel.iter().zip(dl).filter(|(s, _)| **s == idx).map(|(_, d)| *d))
             .fold(0u64, |a, b| a.wrapping_add(b));
-        assert_eq!(delta[pos], expect);
+        assert_eq!(ssa.delta[pos], expect);
     }
-    let full_bits = full.simple.num_bins() * (full.log_theta() * 130 + 64) + 256;
-    let red_bits = reduced.simple.num_bins() * (reduced.log_theta() * 130 + 64) + 256;
+    let full_session = Session::new_full(params);
+    let full_bits = full_session.simple.num_bins() * (full_session.log_theta() * 130 + 64) + 256;
+    let measured_mb = mb(ssa.report.client_upload_bytes) / n_clients as f64;
     println!(
-        "SSA upload/client: {:.4} MB over union vs {:.4} MB full-domain ({}% saved) ✓ lossless",
-        bits_to_mb(red_bits),
-        bits_to_mb(full_bits),
-        ((1.0 - red_bits as f64 / full_bits as f64) * 100.0).round()
+        "SSA upload/client: {measured_mb:.4} MB measured over union vs {:.4} MB full-domain model \
+         ({}% saved) ✓ lossless",
+        full_bits as f64 / 8.0 / (1024.0 * 1024.0),
+        ((1.0 - measured_mb / (full_bits as f64 / 8.0 / (1024.0 * 1024.0))) * 100.0).round()
     );
 
     // ---------- PSR over the union: retrieve before training -------------
     // The read path takes the *global* m-sized weight vector even on the
     // reduced session; all clients are answered in one shard plan.
     let weights: Vec<u64> = (0..m).map(|x| x.wrapping_mul(0x9e37_79b9)).collect();
-    let r_engine = RetrievalEngine::auto();
-    let mut q_ctxs = Vec::new();
-    let mut q_keys0 = Vec::new();
-    let mut q_keys1 = Vec::new();
-    for (sel, _) in &clients {
-        let (ctx, batch) =
-            psr::client_query::<u64>(&reduced, sel, &mut rng).map_err(|e| anyhow!("{e}"))?;
-        q_ctxs.push(ctx);
-        q_keys0.push(batch.server_keys(0));
-        q_keys1.push(batch.server_keys(1));
-    }
-    let ans0 = r_engine.answer_batch_keys(&reduced, &weights, &q_keys0);
-    let ans1 = r_engine.answer_batch_keys(&reduced, &weights, &q_keys1);
-    for (((ctx, (sel, _)), a0), a1) in q_ctxs.iter().zip(&clients).zip(&ans0).zip(&ans1) {
-        let got = psr::client_reconstruct(ctx, reduced.simple.num_bins(), sel, a0, a1);
+    rt.set_weights(weights.clone())?;
+    let psr = rt.psr(&client_sets, &mut rng)?;
+    for (sel, got) in client_sets.iter().zip(&psr.submodels) {
         for (i, &s) in sel.iter().enumerate() {
             assert_eq!(got[i], weights[s as usize]);
         }
     }
     println!(
-        "PSR over union: {} clients served in one shard plan ({} workers) ✓ lossless",
-        clients.len(),
-        r_engine.threads()
+        "PSR over union: {} clients served by the living servers \
+         (download {:.4} MB/client) ✓ lossless",
+        psr.report.clients,
+        mb(psr.report.client_download_bytes) / n_clients as f64,
     );
 
     // ------------- U-DPF: fixed submodels across five epochs -------------
-    let (client, mut sk0, mut sk1) = udpf_ssa::client_setup::<u64>(
-        &reduced,
-        &clients[0].0,
-        &clients[0].1,
-        &mut rng,
-    )
-    .map_err(|e| anyhow!("{e}"))?;
-    let first_round_bits = red_bits; // full keys
-    for epoch in 1..5u64 {
+    // A second runtime over the same reduced session, in U-DPF key mode:
+    // epoch 0 ships full key sets that both servers retain; every later
+    // epoch ships only per-bin hints.
+    let mut udpf_rt = FslRuntimeBuilder::from_session(rt.session().clone())
+        .key_mode(KeyMode::Udpf)
+        .max_clients(1)
+        .build::<u64>()?;
+    let mut setup_bytes = 0u64;
+    let mut hint_bytes = 0u64;
+    for epoch in 0..5u64 {
         let new_deltas: Vec<u64> = clients[0].1.iter().map(|d| d + epoch).collect();
-        let hints = client.epoch_hints(&reduced, &clients[0].0, &new_deltas, epoch);
-        sk0.apply_hints(&hints);
-        sk1.apply_hints(&hints);
-        let mut a0 = vec![0u64; reduced.domain_size()];
-        let mut a1 = vec![0u64; reduced.domain_size()];
-        sk0.aggregate_into(&reduced, epoch, &mut a0);
-        sk1.aggregate_into(&reduced, epoch, &mut a1);
-        let dw = ssa::reconstruct(&a0, &a1);
+        let round = udpf_rt.ssa(&[(clients[0].0.clone(), new_deltas.clone())], &mut rng)?;
+        if epoch == 0 {
+            setup_bytes = round.report.client_upload_bytes;
+        } else {
+            hint_bytes = round.report.client_upload_bytes;
+        }
         for (j, &idx) in clients[0].0.iter().enumerate() {
-            let pos = reduced.domain_index_of(idx).unwrap() as usize;
-            assert_eq!(dw[pos], new_deltas[j], "epoch {epoch}");
+            let pos = udpf_rt.session().domain_index_of(idx).unwrap() as usize;
+            assert_eq!(round.delta[pos], new_deltas[j], "epoch {epoch}");
         }
     }
+    // Wire hints are (epoch tag + ⌈log 𝔾⌉ CW) per slot vs full per-level
+    // key material for re-keying; the advantage grows with ⌈log Θ⌉.
+    assert!(hint_bytes * 4 < setup_bytes, "hints must be far smaller than re-keying");
     println!(
         "U-DPF: round-1 upload {:.4} MB, later rounds {:.4} MB (hints only), 4 epochs verified ✓",
-        bits_to_mb(first_round_bits),
-        bits_to_mb(client.hint_bits()),
+        mb(setup_bytes),
+        mb(hint_bytes),
     );
+    udpf_rt.shutdown()?;
+    rt.shutdown()?;
     println!("psu_round OK");
     Ok(())
 }

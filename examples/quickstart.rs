@@ -1,79 +1,78 @@
-//! Quickstart: one PSR retrieval and one SSA aggregation round, tiny
-//! parameters, every step spelled out.
+//! Quickstart: one persistent runtime serving a PSR retrieval round and
+//! an SSA aggregation round, tiny parameters, every step spelled out.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use anyhow::{anyhow, Result};
-use fsl::coordinator::run_ssa_round;
+use anyhow::Result;
+use fsl::coordinator::FslRuntimeBuilder;
 use fsl::crypto::rng::Rng;
 use fsl::group::{fixed_decode, fixed_encode};
 use fsl::hashing::CuckooParams;
 use fsl::metrics::mb;
-use fsl::protocol::{psr, RetrievalEngine, Session, SessionParams};
-use std::time::Duration;
+use fsl::protocol::SessionParams;
 
 fn main() -> Result<()> {
     // ----- System setup (Fig. 4 "System Setup") --------------------------
     let m = 4096u64; // global model size
     let k = 64usize; // submodel size per client
-    let session = Session::new_full(SessionParams {
+    let n_clients = 3usize;
+
+    // One builder call replaces the per-round free functions: it fixes the
+    // session parameters, spawns both server threads, and keeps the
+    // metered topology + engines alive for every round that follows.
+    let mut rt = FslRuntimeBuilder::new(SessionParams {
         m,
         k,
         cuckoo: CuckooParams::default(),
-    });
+    })
+    .max_clients(n_clients)
+    .build::<u64>()?;
     println!(
         "setup: m={m}, k={k}, B={} bins, Θ={} (⌈log Θ⌉ = {})",
-        session.simple.num_bins(),
-        session.theta(),
-        session.log_theta()
+        rt.session().simple.num_bins(),
+        rt.session().theta(),
+        rt.session().log_theta()
     );
 
     let mut rng = Rng::new(1);
-    // Servers hold the previously-aggregated model w ∈ G^m.
+    // Servers hold the previously-aggregated model w ∈ G^m — installed
+    // once, reused by every PSR round.
     let weights: Vec<u64> = (0..m).map(|i| fixed_encode(i as f32 * 0.01)).collect();
+    rt.set_weights(weights.clone())?;
 
-    // ----- PSR: the client privately retrieves its submodel --------------
-    let selections = rng.sample_distinct(k, m);
-    let (ctx, batch) =
-        psr::client_query::<u64>(&session, &selections, &mut rng).map_err(|e| anyhow!("{e}"))?;
+    // ----- PSR: clients privately retrieve their submodels ---------------
+    let selections: Vec<Vec<u64>> = (0..n_clients).map(|_| rng.sample_distinct(k, m)).collect();
+    let psr = rt.psr(&selections, &mut rng)?;
+    for (sel, got) in selections.iter().zip(&psr.submodels) {
+        for (i, &s) in sel.iter().enumerate() {
+            assert_eq!(got[i], weights[s as usize]);
+        }
+    }
     println!(
-        "PSR: client uploads {:.1} KB of DPF keys (vs {:.1} KB full download)",
-        batch.upload_bits() as f64 / 8.0 / 1024.0,
+        "PSR: {} clients retrieved all {k} weights each; upload {:.1} KB/client \
+         (vs {:.1} KB full download), servers saw only DPF keys ✓",
+        psr.report.clients,
+        psr.report.client_upload_bytes as f64 / psr.report.clients as f64 / 1024.0,
         m as f64 * 8.0 / 1024.0
     );
-    // Each server answers through the sharded retrieval engine (serial
-    // here; `RetrievalEngine::new(n)` shards over n workers).
-    let engine = RetrievalEngine::serial();
-    let ans0 = engine.answer_keys(&session, &weights, &batch.server_keys(0));
-    let ans1 = engine.answer_keys(&session, &weights, &batch.server_keys(1));
-    let submodel = psr::client_reconstruct(&ctx, session.simple.num_bins(), &selections, &ans0, &ans1);
-    for (i, &s) in selections.iter().enumerate() {
-        assert_eq!(submodel[i], weights[s as usize]);
-    }
-    println!("PSR: retrieved all {k} weights correctly, servers saw only DPF keys ✓");
 
-    // ----- Local training stand-in: make some updates ---------------------
-    let deltas: Vec<u64> = selections
+    // ----- SSA: the same clients aggregate through the same servers ------
+    let clients: Vec<(Vec<u64>, Vec<u64>)> = selections
         .iter()
-        .map(|&s| fixed_encode((s as f32).sin() * 0.1))
-        .collect();
-
-    // ----- SSA: three clients aggregate through the two servers ----------
-    let clients: Vec<(Vec<u64>, Vec<u64>)> = (0..3)
-        .map(|_| {
-            let sel = rng.sample_distinct(k, m);
+        .map(|sel| {
             let dl = sel.iter().map(|&s| fixed_encode((s as f32).sin() * 0.1)).collect();
-            (sel, dl)
+            (sel.clone(), dl)
         })
         .collect();
-    let _ = deltas;
-    let res = run_ssa_round(&session, &clients, &mut rng, Duration::ZERO)?;
+    let ssa = rt.ssa(&clients, &mut rng)?;
     println!(
-        "SSA: 3 clients, upload {:.3} MB/client, server eval+agg {:?}",
-        mb(res.client_upload_bytes) / 3.0,
-        res.server_time
+        "SSA: {} clients, upload {:.3} MB/client, server eval+agg {:?} (wall {:?})",
+        ssa.report.clients,
+        mb(ssa.report.client_upload_bytes) / ssa.report.clients as f64,
+        ssa.report.server_time,
+        ssa.report.wall_time,
     );
 
     // Spot-check: the reconstructed Δw matches the plaintext sum.
@@ -84,15 +83,16 @@ fn main() -> Result<()> {
         }
     }
     for (i, &e) in expected.iter().enumerate() {
-        assert_eq!(res.delta[i] as i64, e, "position {i}");
+        assert_eq!(ssa.delta[i] as i64, e, "position {i}");
     }
-    let nonzero = res.delta.iter().filter(|&&d| d != 0).count();
+    let nonzero = ssa.delta.iter().filter(|&&d| d != 0).count();
     println!(
         "SSA: Δw reconstructed exactly (lossless); {} touched positions, e.g. Δw[{}] = {:.4}",
         nonzero,
         clients[0].0[0],
-        fixed_decode(res.delta[clients[0].0[0] as usize])
+        fixed_decode(ssa.delta[clients[0].0[0] as usize])
     );
+    rt.shutdown()?;
     println!("quickstart OK");
     Ok(())
 }

@@ -1,0 +1,128 @@
+//! One-shot vs persistent runtime across a stream of SSA rounds — the
+//! amortisation the `FslRuntime` API exists for.
+//!
+//! The one-shot path is what the deprecated `run_ssa_round` wrappers do:
+//! per round, spawn both server threads, rebuild the metered topology,
+//! serve once, tear everything down. The persistent path builds one
+//! runtime and drives the same rounds through its living command loop.
+//! Both paths consume identical rng streams, so the reconstructed deltas
+//! are asserted bit-identical round by round; the datapoint lands in
+//! `BENCH_round.json`.
+//!
+//! `FSL_FULL=1` widens the grid; `FSL_THREADS` follows the shared bench
+//! convention (unset → serial engines, so timings are reproducible).
+
+use fsl::coordinator::FslRuntimeBuilder;
+use fsl::crypto::rng::Rng;
+use fsl::hashing::{scale_factor_for, CuckooParams};
+use fsl::protocol::{Session, SessionParams};
+use std::time::{Duration, Instant};
+
+const ROUNDS: usize = 8;
+
+fn client_inputs(session: &Session, n: usize, rng: &mut Rng) -> Vec<(Vec<u64>, Vec<u64>)> {
+    let (m, k) = (session.params.m, session.params.k);
+    (0..n)
+        .map(|c| {
+            let sel = rng.sample_distinct(k, m);
+            let dl = sel.iter().map(|&x| x * 3 + c as u64 + 1).collect();
+            (sel, dl)
+        })
+        .collect()
+}
+
+fn main() {
+    let full = std::env::var("FSL_FULL").is_ok();
+    let m: u64 = if full { 1 << 16 } else { 1 << 13 };
+    let k: usize = if full { 512 } else { 128 };
+    let clients: usize = 4;
+    let threads: usize = std::env::var("FSL_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+
+    let session = Session::new_full(SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams {
+            epsilon: scale_factor_for(m as usize),
+            hash_seed: 0x2024,
+            ..CuckooParams::default()
+        },
+    });
+    println!(
+        "# SSA round stream: m={m}, k={k}, {clients} clients, {ROUNDS} rounds, \
+         {threads} engine workers"
+    );
+
+    // One-shot: a fresh runtime per round (what the deprecated wrappers
+    // do), including thread spawn + topology + engine construction.
+    let mut rng = Rng::new(0x600d);
+    let t0 = Instant::now();
+    let mut oneshot_rounds = Vec::with_capacity(ROUNDS);
+    let mut oneshot_deltas = Vec::with_capacity(ROUNDS);
+    for _ in 0..ROUNDS {
+        let inputs = client_inputs(&session, clients, &mut rng);
+        let t = Instant::now();
+        let mut rt = FslRuntimeBuilder::from_session(session.clone())
+            .threads(threads)
+            .max_clients(clients)
+            .build::<u64>()
+            .expect("build one-shot runtime");
+        let out = rt.ssa(&inputs, &mut rng).expect("one-shot round");
+        drop(rt);
+        oneshot_rounds.push(t.elapsed());
+        oneshot_deltas.push(out.delta);
+    }
+    let oneshot_total = t0.elapsed();
+
+    // Persistent: one runtime serves the whole stream.
+    let mut rng = Rng::new(0x600d);
+    let t1 = Instant::now();
+    let mut rt = FslRuntimeBuilder::from_session(session.clone())
+        .threads(threads)
+        .max_clients(clients)
+        .build::<u64>()
+        .expect("build persistent runtime");
+    let mut persistent_rounds = Vec::with_capacity(ROUNDS);
+    for (round, oneshot_delta) in oneshot_deltas.iter().enumerate() {
+        let inputs = client_inputs(&session, clients, &mut rng);
+        let t = Instant::now();
+        let out = rt.ssa(&inputs, &mut rng).expect("persistent round");
+        persistent_rounds.push(t.elapsed());
+        assert_eq!(
+            &out.delta, oneshot_delta,
+            "round {round}: persistent delta must be bit-identical to one-shot"
+        );
+    }
+    rt.shutdown().expect("clean shutdown");
+    let persistent_total = t1.elapsed();
+
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    let mean = |v: &[Duration]| ms(v.iter().sum::<Duration>()) / v.len() as f64;
+    let oneshot_ms = mean(&oneshot_rounds);
+    let persistent_ms = mean(&persistent_rounds);
+    println!("mode,mean_round_ms,total_ms");
+    println!("one-shot,{oneshot_ms:.3},{:.3}", ms(oneshot_total));
+    println!("persistent,{persistent_ms:.3},{:.3}", ms(persistent_total));
+    println!(
+        "# per-round setup amortised by the persistent runtime: {:.3} ms",
+        oneshot_ms - persistent_ms
+    );
+
+    let json = format!(
+        "{{\"bench\":\"round_runtime\",\"m\":{m},\"k\":{k},\"clients\":{clients},\
+         \"rounds\":{ROUNDS},\"workers\":{threads},\
+         \"oneshot_mean_round_ms\":{oneshot_ms:.3},\
+         \"persistent_mean_round_ms\":{persistent_ms:.3},\
+         \"oneshot_total_ms\":{:.3},\"persistent_total_ms\":{:.3},\
+         \"amortised_ms_per_round\":{:.3}}}\n",
+        ms(oneshot_total),
+        ms(persistent_total),
+        oneshot_ms - persistent_ms
+    );
+    match std::fs::write("BENCH_round.json", &json) {
+        Ok(()) => println!("# wrote BENCH_round.json"),
+        Err(e) => eprintln!("# could not write BENCH_round.json: {e}"),
+    }
+}

@@ -8,12 +8,11 @@
 //! on the wire by the channel meters.
 
 use fsl::baseline::trivial_sa;
-use fsl::coordinator::run_ssa_round;
+use fsl::coordinator::FslRuntimeBuilder;
 use fsl::crypto::rng::Rng;
 use fsl::hashing::{scale_factor_for, CuckooParams};
 use fsl::metrics::bits_to_mb;
 use fsl::protocol::{mega, Session, SessionParams};
-use std::time::Duration;
 
 fn paper_model_mb(bins: usize, log_theta: usize, l: usize) -> f64 {
     bits_to_mb(bins * (log_theta * (128 + 2) + l) + 2 * 128)
@@ -45,9 +44,12 @@ fn main() {
             let mut rng = Rng::new(3);
             let sel = rng.sample_distinct(k, m);
             let dl: Vec<u64> = sel.iter().map(|&x| x + 1).collect();
-            let res = run_ssa_round(&session, &[(sel, dl)], &mut rng, Duration::ZERO).unwrap();
+            let mut rt = FslRuntimeBuilder::from_session(session.clone())
+                .build::<u64>()
+                .unwrap();
+            let res = rt.ssa(&[(sel, dl)], &mut rng).unwrap();
             let measured_l128 =
-                fsl::metrics::mb(res.client_upload_bytes) + bits_to_mb(bins * 64);
+                fsl::metrics::mb(res.report.client_upload_bytes) + bits_to_mb(bins * 64);
             let trivial = bits_to_mb(trivial_sa::upload_bits::<u128>(m as usize));
             println!(
                 "{:>8} {:>5} {:>12.3} {:>12.3} {:>12.3} {:>12.3}",

@@ -1,6 +1,7 @@
 //! Coordinator configuration (the CLI maps straight onto this).
 
 use crate::hashing::CuckooParams;
+use anyhow::{anyhow, Result};
 
 /// End-to-end FSL training configuration.
 #[derive(Clone, Debug)]
@@ -57,6 +58,41 @@ impl Default for FslConfig {
 }
 
 impl FslConfig {
+    /// Check the configuration for values that would make a run
+    /// meaningless or panic deep inside a round. Called by
+    /// [`super::FslRuntimeBuilder::from_config`], [`super::run_fsl_training`],
+    /// and the CLI before any work starts, so a typo like `c=0` fails with
+    /// an actionable message instead of a cuckoo-table panic ten layers
+    /// down.
+    pub fn validate(&self) -> Result<()> {
+        if self.num_clients == 0 {
+            return Err(anyhow!(
+                "num_clients must be nonzero: the round loop samples participants \
+                 from the client population (CLI: clients=N)"
+            ));
+        }
+        if self.rounds == 0 {
+            return Err(anyhow!(
+                "rounds must be nonzero: zero global rounds trains nothing (CLI: rounds=N)"
+            ));
+        }
+        if !(self.participation > 0.0 && self.participation <= 1.0) {
+            return Err(anyhow!(
+                "participation must be in (0, 1], got {}: it is the fraction of \
+                 clients sampled per round (the paper uses 0.1 for MNIST/CIFAR, 1.0 for TREC)",
+                self.participation
+            ));
+        }
+        if !(self.compression > 0.0 && self.compression <= 1.0) {
+            return Err(anyhow!(
+                "compression must be in (0, 1], got {}: it is the top-k rate c = k/m \
+                 (CLI: c=0.1 keeps 10% of the weights)",
+                self.compression
+            ));
+        }
+        Ok(())
+    }
+
     /// Participants per round (≥ 1).
     pub fn participants(&self) -> usize {
         ((self.num_clients as f64 * self.participation).round() as usize)
@@ -88,6 +124,25 @@ mod tests {
         assert_eq!(c.participants(), 1);
         c.participation = 2.0;
         assert_eq!(c.participants(), 100);
+    }
+
+    #[test]
+    fn validation_catches_out_of_range_values() {
+        assert!(FslConfig::default().validate().is_ok());
+        let cases: [(&str, fn(&mut FslConfig)); 6] = [
+            ("num_clients", |c| c.num_clients = 0),
+            ("rounds", |c| c.rounds = 0),
+            ("participation", |c| c.participation = 0.0),
+            ("participation", |c| c.participation = 1.5),
+            ("compression", |c| c.compression = 0.0),
+            ("compression", |c| c.compression = f64::NAN),
+        ];
+        for (field, poke) in cases {
+            let mut cfg = FslConfig::default();
+            poke(&mut cfg);
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(field), "error {err:?} should mention {field}");
+        }
     }
 
     #[test]

@@ -7,19 +7,33 @@
 //! own thread, joined by metered channels ([`crate::net`]); clients run
 //! on the driver thread (the paper's clients are sequential mobile
 //! devices — their *per-client* times are what Table 5 reports).
+//!
+//! The two server threads are *persistent*: [`FslRuntimeBuilder`] builds
+//! one [`FslRuntime`] whose command loop serves any number of rounds of
+//! any type (`psr` / `ssa` / `verified_ssa` / `psu_align`), each
+//! returning a uniform [`RoundReport`]. The old per-call `run_*_round`
+//! free functions survive as `#[deprecated]` one-shot wrappers.
 
 mod client;
 mod config;
 mod psr_round;
 mod round;
+mod runtime;
 mod server;
 mod topk;
 mod verified;
 
 pub use client::{local_train, sparse_delta, ClientRoundOutput};
 pub use config::FslConfig;
+#[allow(deprecated)]
 pub use psr_round::{run_psr_round, run_psr_round_with, PsrRoundResult};
 pub use round::{run_fsl_training, run_plain_training, RoundStats, TrainingLog};
+pub use runtime::{
+    FslRuntime, FslRuntimeBuilder, KeyMode, PsrOutcome, PsuOutcome, RoundKind, RoundReport,
+    SsaOutcome, VerifiedSsaOutcome,
+};
+#[allow(deprecated)]
 pub use server::{run_ssa_round, run_ssa_round_with, SsaRoundResult};
 pub use topk::{top_k_groups, top_k_magnitude};
+#[allow(deprecated)]
 pub use verified::{run_verified_ssa_round, VerifiedSsaResult};

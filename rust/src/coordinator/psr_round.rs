@@ -1,20 +1,18 @@
-//! PSR retrieval round over the metered two-server topology — the
-//! download-side counterpart of [`super::server::run_ssa_round`].
+//! One-shot PSR round wrappers over the persistent runtime.
 //!
-//! Each server decodes every client's upload first and then answers the
-//! whole batch through one [`RetrievalEngine`] shard plan (multi-client
-//! batched serving). Serving stays zero-copy: the decoded public parts +
-//! master seed feed the engine directly, so no per-bin `DpfKey` is ever
-//! materialised on the read path.
+//! The batched two-server serving path (decode every client's upload,
+//! answer the whole batch through one [`RetrievalEngine`] shard plan,
+//! ship answers back on the same links) lives in the [`super::runtime`]
+//! command loop now. The functions here are kept for compatibility: each
+//! builds a runtime, installs the weight vector, runs one round, and
+//! drops everything — the per-call cost the persistent API amortises.
 
+use super::runtime::FslRuntimeBuilder;
 use crate::crypto::rng::Rng;
 use crate::group::Group;
-use crate::net;
-use crate::protocol::aggregate::uploads_of;
-use crate::protocol::msg;
-use crate::protocol::{psr, RetrievalEngine, Session};
-use anyhow::{anyhow, Result};
-use std::time::{Duration, Instant};
+use crate::protocol::{RetrievalEngine, Session};
+use anyhow::Result;
+use std::time::Duration;
 
 /// One client's retrieval outcome plus the round's metering.
 pub struct PsrRoundResult<G: Group> {
@@ -27,7 +25,8 @@ pub struct PsrRoundResult<G: Group> {
 
 /// [`run_psr_round_with`] under the co-located-two-server default engine
 /// (half the cores per server — both servers answer concurrently
-/// in-process, mirroring [`super::server::run_ssa_round`]).
+/// in-process).
+#[deprecated(note = "build a persistent coordinator::FslRuntime and call .psr(..)")]
 pub fn run_psr_round<G: Group>(
     session: &Session,
     weights: &[G],
@@ -35,6 +34,7 @@ pub fn run_psr_round<G: Group>(
     rng: &mut Rng,
     latency: Duration,
 ) -> Result<PsrRoundResult<G>> {
+    // (Deprecated items may call each other without tripping the lint.)
     run_psr_round_with(
         session,
         weights,
@@ -46,8 +46,9 @@ pub fn run_psr_round<G: Group>(
 }
 
 /// Run a PSR round for `clients` (each a selection list) against the
-/// servers' weight vector. Servers run on their own threads and serve the
-/// whole client batch through `engine`; clients run on the driver thread.
+/// servers' weight vector. One-shot wrapper: spawns a fresh runtime,
+/// installs `weights`, serves a single round, tears everything down.
+#[deprecated(note = "build a persistent coordinator::FslRuntime and call .psr(..)")]
 pub fn run_psr_round_with<G: Group>(
     session: &Session,
     weights: &[G],
@@ -56,88 +57,43 @@ pub fn run_psr_round_with<G: Group>(
     latency: Duration,
     engine: &RetrievalEngine,
 ) -> Result<PsrRoundResult<G>> {
-    let n = clients.len();
-    let (client_links, server_sides, _inter) = net::topology(n, latency);
-    let (eps0, eps1): (Vec<_>, Vec<_>) = server_sides.into_iter().unzip();
-
-    // Client side: build queries, ship keys.
-    let mut ctxs = Vec::with_capacity(n);
-    for (links, sel) in client_links.iter().zip(clients) {
-        let (ctx, batch) =
-            psr::client_query::<G>(session, sel, rng).map_err(|e| anyhow!("{e}"))?;
-        links.to_s0.send(msg::encode_key_upload(&batch, 0, true))?;
-        // PSR sends full key material to both servers (no forwarding
-        // needed: the answer flows back on the same link).
-        links.to_s1.send(msg::encode_key_upload(&batch, 1, true))?;
-        ctxs.push(ctx);
-    }
-    let client_upload_bytes: u64 = client_links
-        .iter()
-        .map(|l| l.to_s0.meter.sent() + l.to_s1.meter.sent())
-        .sum();
-
-    let serve = |eps: &[net::Endpoint], party: u8| -> Result<Duration> {
-        // Decode all uploads, then answer the batch in one shard plan.
-        let mut batches = Vec::with_capacity(eps.len());
-        for ep in eps {
-            let up = msg::decode_key_upload::<G>(&ep.recv()?)
-                .ok_or_else(|| anyhow!("S{party}: bad upload"))?;
-            let publics = up.publics.ok_or_else(|| anyhow!("S{party}: no publics"))?;
-            batches.push(crate::dpf::MasterKeyBatch::<G> {
-                msk: [up.msk, up.msk],
-                publics,
-            });
-        }
-        let uploads = uploads_of(&batches, party);
-        let t = Instant::now();
-        let answers = engine.answer_publics(session, weights, party, &uploads);
-        let total = t.elapsed();
-        for (ep, ans) in eps.iter().zip(&answers) {
-            ep.send(msg::encode_shares(ans))?;
-        }
-        Ok(total)
-    };
-
-    let (t0, t1) = std::thread::scope(|scope| -> Result<(Duration, Duration)> {
-        let h1 = scope.spawn(move || serve(&eps1, 1));
-        let t0 = serve(&eps0, 0)?;
-        let t1 = h1.join().map_err(|_| anyhow!("S1 panicked"))??;
-        Ok((t0, t1))
-    })?;
-
-    // Clients reconstruct.
-    let mut submodels = Vec::with_capacity(n);
-    for ((links, ctx), sel) in client_links.iter().zip(&ctxs).zip(clients) {
-        let a0 = msg::decode_shares::<G>(&links.to_s0.recv()?)
-            .ok_or_else(|| anyhow!("bad S0 answer"))?;
-        let a1 = msg::decode_shares::<G>(&links.to_s1.recv()?)
-            .ok_or_else(|| anyhow!("bad S1 answer"))?;
-        submodels.push(psr::client_reconstruct(
-            ctx,
-            session.simple.num_bins(),
-            sel,
-            &a0,
-            &a1,
-        ));
-    }
-    let client_download_bytes: u64 = client_links
-        .iter()
-        .map(|l| l.to_s0.meter.recv() + l.to_s1.meter.recv())
-        .sum();
-
+    let mut rt = FslRuntimeBuilder::from_session(session.clone())
+        .latency(latency)
+        .threads(engine.threads())
+        .max_clients(clients.len().max(1))
+        .build::<G>()?;
+    rt.set_weights(weights.to_vec())?;
+    let out = rt.psr(clients, rng)?;
     Ok(PsrRoundResult {
-        submodels,
-        client_upload_bytes,
-        client_download_bytes,
-        server_time: t0.max(t1),
+        submodels: out.submodels,
+        client_upload_bytes: out.report.client_upload_bytes,
+        client_download_bytes: out.report.client_download_bytes,
+        server_time: out.report.server_time,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{FslRuntimeBuilder, PsrOutcome};
     use crate::hashing::CuckooParams;
     use crate::protocol::SessionParams;
+
+    fn psr_once(
+        session: &Session,
+        weights: Vec<u64>,
+        clients: &[Vec<u64>],
+        rng: &mut Rng,
+        threads: usize,
+    ) -> PsrOutcome<u64> {
+        let mut rt = FslRuntimeBuilder::from_session(session.clone())
+            .threads(threads)
+            .max_clients(clients.len())
+            .build::<u64>()
+            .unwrap();
+        rt.set_weights(weights).unwrap();
+        rt.psr(clients, rng).unwrap()
+    }
 
     #[test]
     fn multi_client_retrieval_over_channels() {
@@ -149,16 +105,15 @@ mod tests {
         let mut rng = Rng::new(900);
         let weights: Vec<u64> = (0..2048).map(|_| rng.next_u64()).collect();
         let clients: Vec<Vec<u64>> = (0..3).map(|_| rng.sample_distinct(32, 2048)).collect();
-        let res =
-            run_psr_round(&session, &weights, &clients, &mut rng, Duration::ZERO).unwrap();
+        let res = psr_once(&session, weights.clone(), &clients, &mut rng, 0);
         for (sel, got) in clients.iter().zip(&res.submodels) {
             for (i, &s) in sel.iter().enumerate() {
                 assert_eq!(got[i], weights[s as usize]);
             }
         }
         // Non-triviality: retrieval moved fewer bytes than the database.
-        assert!(res.client_download_bytes < 3 * 2048 * 8);
-        assert!(res.client_upload_bytes > 0);
+        assert!(res.report.client_download_bytes < 3 * 2048 * 8);
+        assert!(res.report.client_upload_bytes > 0);
     }
 
     #[test]
@@ -179,17 +134,40 @@ mod tests {
         let mut all = Vec::new();
         for threads in [1usize, 8] {
             let mut rng = Rng::new(903);
-            let res = run_psr_round_with(
-                &session,
-                &weights,
-                &clients,
-                &mut rng,
-                Duration::ZERO,
-                &RetrievalEngine::new(threads),
-            )
-            .unwrap();
-            all.push(res.submodels);
+            all.push(psr_once(&session, weights.clone(), &clients, &mut rng, threads).submodels);
         }
         assert_eq!(all[0], all[1]);
+    }
+
+    /// The retained equivalence check against the deprecated one-shot
+    /// wrapper: same session + same rng stream ⇒ identical submodels and
+    /// byte metering, whichever API served the round.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrapper_matches_the_runtime() {
+        let session = Session::new_full(SessionParams {
+            m: 1024,
+            k: 16,
+            cuckoo: CuckooParams::default(),
+        });
+        let weights: Vec<u64> = {
+            let mut rng = Rng::new(904);
+            (0..1024).map(|_| rng.next_u64()).collect()
+        };
+        let clients: Vec<Vec<u64>> = {
+            let mut rng = Rng::new(905);
+            (0..3).map(|_| rng.sample_distinct(16, 1024)).collect()
+        };
+        let legacy = {
+            let mut rng = Rng::new(906);
+            run_psr_round(&session, &weights, &clients, &mut rng, Duration::ZERO).unwrap()
+        };
+        let modern = {
+            let mut rng = Rng::new(906);
+            psr_once(&session, weights, &clients, &mut rng, 0)
+        };
+        assert_eq!(legacy.submodels, modern.submodels);
+        assert_eq!(legacy.client_upload_bytes, modern.report.client_upload_bytes);
+        assert_eq!(legacy.client_download_bytes, modern.report.client_download_bytes);
     }
 }

@@ -2,11 +2,9 @@
 
 use super::client::{local_train, sparse_delta};
 use super::config::FslConfig;
-use super::server::run_ssa_round_with;
+use super::runtime::FslRuntimeBuilder;
 use crate::crypto::rng::Rng;
 use crate::group::fixed_decode;
-use crate::hashing::CuckooParams;
-use crate::protocol::{AggregationEngine, Session, SessionParams};
 use crate::runtime::Executor;
 use anyhow::Result;
 use std::time::{Duration, Instant};
@@ -44,7 +42,8 @@ impl TrainingLog {
 ///   `cfg.eval_every` rounds and on the last round).
 ///
 /// Each round: sample participants → local SGD (PJRT train-step artifact)
-/// → top-k sparsify → SSA over the two server threads → FedAvg apply.
+/// → top-k sparsify → SSA through one persistent [`super::FslRuntime`] →
+/// FedAvg apply.
 pub fn run_fsl_training(
     exec: &Executor,
     cfg: &FslConfig,
@@ -55,22 +54,14 @@ pub fn run_fsl_training(
     mut on_round: impl FnMut(&RoundStats),
 ) -> Result<TrainingLog> {
     let m = params.len();
-    let k = ((m as f64 * cfg.compression).round() as usize).clamp(1, m);
     let mut log = TrainingLog::default();
 
-    // One session per task: the paper reuses T_cuckoo/T_simple across
+    // One runtime per task: the paper reuses T_cuckoo/T_simple across
     // rounds (§4) — the hash functions are public parameters, and
     // rebuilding the simple table per round costs ~0.5 s at m ≈ 2 * 10^6
-    // (§Perf iteration 4).
-    let session = Session::new_full(SessionParams {
-        m: m as u64,
-        k,
-        cuckoo: CuckooParams {
-            hash_seed: cfg.seed ^ 0xABCD,
-            ..cfg.cuckoo
-        },
-    });
-    let engine = AggregationEngine::from_config(cfg.threads);
+    // (§Perf iteration 4). The runtime additionally keeps the two server
+    // threads, channels, and engines alive for the whole task.
+    let mut rt = FslRuntimeBuilder::from_config(cfg, m as u64)?.build::<u64>()?;
 
     for round in 0..cfg.rounds {
         let mut rng = Rng::new(cfg.seed ^ (round as u64).wrapping_mul(0x9e37_79b9));
@@ -81,6 +72,7 @@ pub fn run_fsl_training(
         let participants = rng.sample_distinct(p, cfg.num_clients as u64);
 
         // Local training + top-k sparsification.
+        let k = rt.session().params.k;
         let t_train = Instant::now();
         let mut client_inputs: Vec<(Vec<u64>, Vec<u64>)> = Vec::with_capacity(p);
         let mut loss_sum = 0.0f32;
@@ -100,14 +92,8 @@ pub fn run_fsl_training(
         }
         let train_time = t_train.elapsed();
 
-        // Secure aggregation round over the shared per-task session.
-        let res = run_ssa_round_with::<u64>(
-            &session,
-            &client_inputs,
-            &mut rng,
-            Duration::from_micros(cfg.latency_us),
-            &engine,
-        )?;
+        // Secure aggregation round over the persistent runtime.
+        let res = rt.ssa(&client_inputs, &mut rng)?;
 
         // FedAvg apply: params += decode(Δw) / P.
         let scale = 1.0 / p as f32;
@@ -124,9 +110,9 @@ pub fn run_fsl_training(
         let stats = RoundStats {
             round,
             mean_loss: loss_sum / p as f32,
-            upload_mb_per_client: crate::metrics::mb(res.client_upload_bytes) / p as f64,
-            gen_time: res.gen_time,
-            server_time: res.server_time,
+            upload_mb_per_client: crate::metrics::mb(res.report.client_upload_bytes) / p as f64,
+            gen_time: res.report.gen_time,
+            server_time: res.report.server_time,
             train_time,
             accuracy,
         };

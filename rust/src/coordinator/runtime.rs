@@ -1,0 +1,1274 @@
+//! The persistent FSL runtime — one long-lived two-server deployment
+//! serving many rounds (the paper's Fig. 1 loop as a *service*, not a
+//! per-call thread spawn).
+//!
+//! The old coordinator exposed the round types as disconnected free
+//! functions (`run_psr_round`, `run_ssa_round`, `run_verified_ssa_round`,
+//! `run_psu_session`) that each rebuilt the [`crate::net`] topology,
+//! respawned both server threads, and threaded 5–6 positional arguments —
+//! no state survived between rounds. A deployment serving millions of
+//! users amortises all of that: the [`FslRuntimeBuilder`] constructs one
+//! [`FslRuntime`] that owns
+//!
+//! * the two server threads (`S_0` leader, `S_1` worker), each running a
+//!   small command loop for its whole lifetime;
+//! * the metered channel topology (clients ↔ both servers, `S_0 ↔ S_1`);
+//! * one [`AggregationEngine`] + [`RetrievalEngine`] pair per server,
+//!   built once from the configured width;
+//! * the shared [`Session`] (replaceable mid-life: [`FslRuntime::psu_align`]
+//!   installs a union-domain session on both living servers);
+//! * in U-DPF key mode, each server's retained epoch key sets and the
+//!   runtime-side client states, so later rounds upload `⌈log 𝔾⌉`-bit
+//!   hints instead of fresh keys (§6 Table 2 row 3).
+//!
+//! Rounds are methods — [`FslRuntime::psr`], [`FslRuntime::ssa`],
+//! [`FslRuntime::verified_ssa`], [`FslRuntime::psu_align`] — and every
+//! one returns the same [`RoundReport`] (per-party bytes, gen/server/wall
+//! times) instead of four differently-shaped result structs. Client
+//! payloads travel the existing [`msg`] wire encodings over the metered
+//! channels; the control plane (round commands, session/weight installs)
+//! is a typed in-process channel per server, which is the piece a real
+//! deployment would replace with an RPC frame.
+//!
+//! The old `run_*` functions survive as thin `#[deprecated]` one-shot
+//! wrappers: build a runtime, run one round, drop it.
+
+use super::config::FslConfig;
+use super::verified::{self, VerifiedSsaResult};
+use crate::crypto::field::Fp;
+use crate::crypto::rng::Rng;
+use crate::dpf::MasterKeyBatch;
+use crate::group::Group;
+use crate::metrics::CommMeter;
+use crate::net;
+use crate::protocol::aggregate::uploads_of;
+use crate::protocol::{
+    msg, psr, psu, ssa, udpf_ssa, AggregationEngine, RetrievalEngine, Session, SessionParams,
+    Sharding,
+};
+use anyhow::{anyhow, ensure, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long the driver waits for a server reply before declaring the
+/// runtime wedged. Generous: a round at paper scale (m ≈ 2²⁵) finishes in
+/// seconds; only a protocol bug hits this.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Which round a [`RoundReport`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundKind {
+    /// Private submodel retrieval (read path).
+    Psr,
+    /// Secure submodel aggregation (write path; fresh keys or U-DPF).
+    Ssa,
+    /// Malicious-model SSA with the sketching check.
+    VerifiedSsa,
+    /// PSU domain alignment (installs a union session).
+    PsuAlign,
+}
+
+/// Uniform per-round metering — the one result shape every round method
+/// returns alongside its payload. Byte counters are *measured* wire bytes
+/// from the channel meters (reset at round start, so each report covers
+/// exactly one round), not model formulas.
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    /// Which round produced this report.
+    pub kind: RoundKind,
+    /// Participating clients this round.
+    pub clients: usize,
+    /// Client → servers bytes (all clients, both servers).
+    pub client_upload_bytes: u64,
+    /// Servers → client bytes (answers, union broadcasts; 0 for SSA).
+    pub client_download_bytes: u64,
+    /// `S_0 ↔ S_1` bytes (forwarded publics, share vectors, PSU pools).
+    pub server_exchange_bytes: u64,
+    /// Client-side key/hint/blinding generation wall-clock (summed over
+    /// clients, as the paper's per-client Table-5 numbers are).
+    pub gen_time: Duration,
+    /// Max of the two servers' compute wall-clocks.
+    pub server_time: Duration,
+    /// End-to-end round wall-clock as seen by the driver.
+    pub wall_time: Duration,
+}
+
+/// A PSR round's payload + metering.
+#[derive(Debug, Clone)]
+pub struct PsrOutcome<G: Group> {
+    /// Retrieved weights in `selections` order, per client.
+    pub submodels: Vec<Vec<G>>,
+    pub report: RoundReport,
+}
+
+/// An SSA round's payload + metering.
+#[derive(Debug, Clone)]
+pub struct SsaOutcome<G: Group> {
+    /// Reconstructed global update (sum over clients), domain-indexed.
+    pub delta: Vec<G>,
+    pub report: RoundReport,
+}
+
+/// A verified SSA round's payload + metering.
+#[derive(Debug, Clone)]
+pub struct VerifiedSsaOutcome {
+    /// Aggregate over the accepted clients.
+    pub delta: Vec<Fp>,
+    /// Indices of rejected (malformed) clients.
+    pub rejected: Vec<usize>,
+    pub report: RoundReport,
+}
+
+/// A PSU alignment round's payload + metering. The new union session is
+/// installed on the runtime — read it back via [`FslRuntime::session`].
+#[derive(Debug, Clone)]
+pub struct PsuOutcome {
+    /// Size of the revealed union `|∪ s^(i)|` (the new domain size).
+    pub union_len: usize,
+    pub report: RoundReport,
+}
+
+/// Whether SSA rounds re-key every round or retain U-DPF epoch keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KeyMode {
+    /// Fresh DPF keys every round (the basic protocol, Fig. 4).
+    #[default]
+    Fresh,
+    /// Fixed-submodel U-DPF keys (§6 Table 2 row 3): the first
+    /// [`FslRuntime::ssa`] call uploads full key sets that both servers
+    /// retain; every later call uploads only `⌈log 𝔾⌉`-bit hints per
+    /// bin. Requires the same clients (and selections) each round.
+    Udpf,
+}
+
+/// How the builder obtains the session the runtime starts with.
+enum SessionSpec {
+    /// Dense full domain `{0..m}`.
+    Full(SessionParams),
+    /// PSU-union domain known up front (validated at build).
+    Union(SessionParams, Vec<u64>),
+    /// Adopt an existing session (full or union) as-is.
+    Prebuilt(Session),
+}
+
+/// Typed builder for a [`FslRuntime`] — session parameters, domain mode
+/// (full / PSU-union), simulated latency, engine width, client capacity,
+/// and key mode (fresh / U-DPF) in one place. The payload mode (scalar
+/// `u64`/`u128`, field `Fp`, or mega-element rows) is the `G` chosen at
+/// [`FslRuntimeBuilder::build`].
+pub struct FslRuntimeBuilder {
+    spec: SessionSpec,
+    latency: Duration,
+    threads: usize,
+    max_clients: usize,
+    key_mode: KeyMode,
+}
+
+impl FslRuntimeBuilder {
+    /// Full-domain runtime over `params`.
+    pub fn new(params: SessionParams) -> Self {
+        FslRuntimeBuilder {
+            spec: SessionSpec::Full(params),
+            latency: Duration::ZERO,
+            threads: 0,
+            max_clients: 1,
+            key_mode: KeyMode::Fresh,
+        }
+    }
+
+    /// Adopt an existing session (full-domain or PSU-union) as-is.
+    pub fn from_session(session: Session) -> Self {
+        FslRuntimeBuilder {
+            spec: SessionSpec::Prebuilt(session),
+            latency: Duration::ZERO,
+            threads: 0,
+            max_clients: 1,
+            key_mode: KeyMode::Fresh,
+        }
+    }
+
+    /// Training-loop convenience: validate `cfg` and derive the session
+    /// (top-k size from `cfg.compression`, cuckoo seed from `cfg.seed` as
+    /// the training loop always has), latency, engine width, and client
+    /// capacity from it. `m` is the flat model size.
+    pub fn from_config(cfg: &FslConfig, m: u64) -> Result<Self> {
+        cfg.validate()?;
+        let k = ((m as f64 * cfg.compression).round() as usize).clamp(1, m as usize);
+        let params = SessionParams {
+            m,
+            k,
+            cuckoo: crate::hashing::CuckooParams {
+                hash_seed: cfg.seed ^ 0xABCD,
+                ..cfg.cuckoo
+            },
+        };
+        Ok(Self::new(params)
+            .latency(Duration::from_micros(cfg.latency_us))
+            .threads(cfg.threads)
+            .max_clients(cfg.participants()))
+    }
+
+    /// Start from a PSU-union domain known up front (validated at build;
+    /// to *compute* the union through the living servers instead, build a
+    /// full-domain runtime and call [`FslRuntime::psu_align`]).
+    pub fn union_domain(mut self, union: Vec<u64>) -> Self {
+        self.spec = match self.spec {
+            SessionSpec::Full(p) | SessionSpec::Union(p, _) => SessionSpec::Union(p, union),
+            SessionSpec::Prebuilt(s) => SessionSpec::Union(s.params.clone(), union),
+        };
+        self
+    }
+
+    /// Simulated one-way channel latency (paper §7: ≈3 ms LAN).
+    pub fn latency(mut self, latency: Duration) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    /// Engine workers per server: an explicit count, or `0` for the
+    /// co-located-two-server default (half the cores each) — the
+    /// [`Sharding::from_config`] convention shared with `FslConfig`.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Maximum clients any single round may bring (the channel topology
+    /// is built once, at this capacity). Rounds may use fewer.
+    pub fn max_clients(mut self, n: usize) -> Self {
+        self.max_clients = n;
+        self
+    }
+
+    /// SSA key mode: fresh per-round keys (default) or retained U-DPF
+    /// epoch keys with hint-only later rounds.
+    pub fn key_mode(mut self, mode: KeyMode) -> Self {
+        self.key_mode = mode;
+        self
+    }
+
+    /// Spawn the two server threads and hand back the living runtime.
+    /// `G` fixes the payload group for the runtime's lifetime (scalar
+    /// `u64`/`u128`, `Fp` for verified rounds, `MegaElem` for §6 rows).
+    pub fn build<G: Group>(self) -> Result<FslRuntime<G>> {
+        ensure!(
+            self.max_clients >= 1,
+            "runtime capacity must be at least one client (got max_clients = 0)"
+        );
+        let session = Arc::new(match self.spec {
+            SessionSpec::Full(params) => Session::new_full(params),
+            SessionSpec::Union(params, union) => Session::new_union(params, union)?,
+            SessionSpec::Prebuilt(s) => s,
+        });
+        let (client_links, server_sides, (inter0, inter1)) =
+            net::topology(self.max_clients, self.latency);
+        let (eps0, eps1): (Vec<_>, Vec<_>) = server_sides.into_iter().unzip();
+        let inter_meters = [inter0.meter.clone(), inter1.meter.clone()];
+        let sharding = Sharding::from_config(self.threads);
+
+        let mut cmd_tx = Vec::with_capacity(2);
+        let mut rep_rx = Vec::with_capacity(2);
+        let mut handles = Vec::with_capacity(2);
+        for (party, eps, inter) in [(0u8, eps0, inter0), (1u8, eps1, inter1)] {
+            let (ctx, crx) = channel::<ServerCmd<G>>();
+            let (rtx, rrx) = channel::<ServerReply<G>>();
+            let server = ServerHalf {
+                party,
+                session: session.clone(),
+                agg: AggregationEngine::with_sharding(sharding),
+                ret: RetrievalEngine::with_sharding(sharding),
+                eps,
+                inter,
+                weights: None,
+                udpf: Vec::new(),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("fsl-server-{party}"))
+                .spawn(move || server.run(crx, rtx))
+                .map_err(|e| anyhow!("spawning server S{party}: {e}"))?;
+            cmd_tx.push(ctx);
+            rep_rx.push(rrx);
+            handles.push(handle);
+        }
+        Ok(FslRuntime {
+            session,
+            key_mode: self.key_mode,
+            client_links,
+            inter_meters,
+            cmd_tx,
+            rep_rx,
+            handles,
+            weights_len: None,
+            udpf_clients: Vec::new(),
+            udpf_selections: Vec::new(),
+            udpf_epoch: 0,
+            poisoned: None,
+        })
+    }
+}
+
+/// A persistent two-server FSL deployment. Construct through
+/// [`FslRuntimeBuilder`]; round methods may be called any number of
+/// times, in any order, against the same living server threads. Dropping
+/// the runtime shuts both servers down and joins them.
+pub struct FslRuntime<G: Group> {
+    session: Arc<Session>,
+    key_mode: KeyMode,
+    client_links: Vec<net::ClientLinks>,
+    inter_meters: [Arc<CommMeter>; 2],
+    cmd_tx: Vec<Sender<ServerCmd<G>>>,
+    rep_rx: Vec<Receiver<ServerReply<G>>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Driver-side record of the installed weight vector length (the
+    /// vectors themselves live on the servers).
+    weights_len: Option<usize>,
+    /// U-DPF mode: per-client hint state retained across epochs.
+    udpf_clients: Vec<udpf_ssa::UdpfSsaClient<G>>,
+    /// U-DPF mode: each client's epoch-0 distinct selection set (the
+    /// fixed-submodel contract, validated on every later round).
+    udpf_selections: Vec<Vec<u64>>,
+    /// U-DPF mode: next epoch number (0 = setup round).
+    udpf_epoch: u64,
+    /// Set when a server reply failed or timed out: the reply streams may
+    /// be desynchronised, so every later round refuses to run.
+    poisoned: Option<String>,
+}
+
+impl<G: Group> FslRuntime<G> {
+    /// The session currently shared by both servers and all clients.
+    pub fn session(&self) -> &Session {
+        self.session.as_ref()
+    }
+
+    /// Client capacity the topology was built for.
+    pub fn max_clients(&self) -> usize {
+        self.client_links.len()
+    }
+
+    /// Install the servers' weight vector (the PSR database), indexed by
+    /// global model index — required before [`FslRuntime::psr`]. In a
+    /// deployment this is the state the servers already hold; here the
+    /// driver hands it over once and rounds reuse it.
+    pub fn set_weights(&mut self, weights: Vec<G>) -> Result<()> {
+        self.check_healthy()?;
+        ensure!(
+            weights.len() == self.session.params.m as usize,
+            "weight vector has {} entries but the session's model size is m = {} \
+             (PSR weights are indexed by global model index even on a union session)",
+            weights.len(),
+            self.session.params.m
+        );
+        let w = Arc::new(weights);
+        self.weights_len = Some(w.len());
+        for party in 0..2 {
+            self.command(party, ServerCmd::SetWeights(w.clone()))?;
+        }
+        self.ack_both()
+    }
+
+    /// Replace the shared session on both living servers (a new round's
+    /// public parameters — e.g. a re-seeded cuckoo table). Resets any
+    /// retained U-DPF state, whose keys were built against the old table;
+    /// an installed weight vector survives only if the new session keeps
+    /// the same model size `m` (re-install it otherwise).
+    pub fn set_session(&mut self, session: Session) -> Result<()> {
+        self.install_session(Arc::new(session))
+    }
+
+    /// One PSR round: each of `clients` (a selection list per client)
+    /// privately retrieves its submodel from the installed weight vector.
+    pub fn psr(&mut self, clients: &[Vec<u64>], rng: &mut Rng) -> Result<PsrOutcome<G>> {
+        let n = self.round_size(clients.len())?;
+        ensure!(
+            self.weights_len.is_some(),
+            "no weight vector installed: call FslRuntime::set_weights before psr"
+        );
+        self.reset_meters();
+        let wall = Instant::now();
+
+        let t_gen = Instant::now();
+        let mut ctxs = Vec::with_capacity(n);
+        let mut batches = Vec::with_capacity(n);
+        for sel in clients {
+            let (ctx, batch) =
+                psr::client_query::<G>(&self.session, sel, rng).map_err(|e| anyhow!("{e}"))?;
+            ctxs.push(ctx);
+            batches.push(batch);
+        }
+        let gen_time = t_gen.elapsed();
+
+        self.command_both(|| ServerCmd::Psr { n })?;
+        // From here on the servers are mid-round: any failure may leave
+        // the reply/data streams desynchronised, so errors poison.
+        let exchanged: Result<Vec<Vec<G>>> = (|| {
+            // PSR sends full key material to both servers (no forwarding —
+            // the answer flows back on the same link).
+            for (links, batch) in self.client_links.iter().zip(&batches) {
+                links.to_s0.send(msg::encode_key_upload(batch, 0, true))?;
+                links.to_s1.send(msg::encode_key_upload(batch, 1, true))?;
+            }
+            // Clients reconstruct from both servers' answers.
+            let num_bins = self.session.simple.num_bins();
+            let mut submodels = Vec::with_capacity(n);
+            for ((links, ctx), sel) in self.client_links.iter().zip(&ctxs).zip(clients) {
+                let a0 = msg::decode_shares::<G>(&links.to_s0.recv_timeout(REPLY_TIMEOUT)?)
+                    .ok_or_else(|| anyhow!("bad S0 answer"))?;
+                let a1 = msg::decode_shares::<G>(&links.to_s1.recv_timeout(REPLY_TIMEOUT)?)
+                    .ok_or_else(|| anyhow!("bad S1 answer"))?;
+                submodels.push(psr::client_reconstruct(ctx, num_bins, sel, &a0, &a1));
+            }
+            Ok(submodels)
+        })();
+        let submodels = self.poisoning(exchanged)?;
+        let (server_time, _) = self.round_replies()?;
+        let report = self.report(RoundKind::Psr, n, gen_time, server_time, wall.elapsed());
+        Ok(PsrOutcome { submodels, report })
+    }
+
+    /// One SSA round: `clients[i] = (selections, deltas)`. In
+    /// [`KeyMode::Fresh`] every round generates and ships fresh DPF keys;
+    /// in [`KeyMode::Udpf`] the first round ships retained U-DPF key sets
+    /// and every later round ships only per-bin hints (same clients and
+    /// selections each round — the fixed-submodel scenario).
+    pub fn ssa(&mut self, clients: &[(Vec<u64>, Vec<G>)], rng: &mut Rng) -> Result<SsaOutcome<G>> {
+        match self.key_mode {
+            KeyMode::Fresh => self.ssa_fresh(clients, rng),
+            KeyMode::Udpf => self.ssa_udpf(clients, rng),
+        }
+    }
+
+    fn ssa_fresh(
+        &mut self,
+        clients: &[(Vec<u64>, Vec<G>)],
+        rng: &mut Rng,
+    ) -> Result<SsaOutcome<G>> {
+        let n = self.round_size(clients.len())?;
+        self.reset_meters();
+        let wall = Instant::now();
+
+        let t_gen = Instant::now();
+        let mut uploads = Vec::with_capacity(n);
+        for (sel, deltas) in clients {
+            uploads
+                .push(ssa::client_update(&self.session, sel, deltas, rng)
+                    .map_err(|e| anyhow!("{e}"))?);
+        }
+        let gen_time = t_gen.elapsed();
+
+        self.command_both(|| ServerCmd::Ssa { n })?;
+        // Long upload (master seed + publics) to the leader; short upload
+        // (master seed only) to the worker — §4's efficiency trick, with
+        // the publics forwarded S_0 → S_1 server-side.
+        let sent: Result<()> = (|| {
+            for (links, batch) in self.client_links.iter().zip(&uploads) {
+                links.to_s0.send(msg::encode_key_upload(batch, 0, true))?;
+                links.to_s1.send(msg::encode_key_upload(batch, 1, false))?;
+            }
+            Ok(())
+        })();
+        self.poisoning(sent)?;
+        self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)
+    }
+
+    fn ssa_udpf(
+        &mut self,
+        clients: &[(Vec<u64>, Vec<G>)],
+        rng: &mut Rng,
+    ) -> Result<SsaOutcome<G>> {
+        let n = self.round_size(clients.len())?;
+        let epoch = self.udpf_epoch;
+        if epoch > 0 {
+            ensure!(
+                n == self.udpf_clients.len(),
+                "U-DPF rounds must keep the client set fixed: epoch 0 had {} clients, \
+                 this round brings {n} (rebuild the runtime or use KeyMode::Fresh)",
+                self.udpf_clients.len()
+            );
+        }
+        self.reset_meters();
+        let wall = Instant::now();
+        let t_gen = Instant::now();
+
+        if epoch == 0 {
+            // Setup round: full U-DPF key sets, retained by both servers.
+            let mut keys0 = Vec::with_capacity(n);
+            let mut keys1 = Vec::with_capacity(n);
+            self.udpf_clients.clear();
+            for (sel, deltas) in clients {
+                let (state, k0, k1) = udpf_ssa::client_setup(&self.session, sel, deltas, rng)
+                    .map_err(|e| anyhow!("{e}"))?;
+                self.udpf_clients.push(state);
+                keys0.push(k0);
+                keys1.push(k1);
+            }
+            self.udpf_selections = clients.iter().map(|(sel, _)| distinct_sorted(sel)).collect();
+            let gen_time = t_gen.elapsed();
+            self.command_both(|| ServerCmd::UdpfSetup { n })?;
+            let sent: Result<()> = (|| {
+                for ((links, k0), k1) in self.client_links.iter().zip(&keys0).zip(&keys1) {
+                    links.to_s0.send(msg::encode_udpf_keys(&k0.keys))?;
+                    links.to_s1.send(msg::encode_udpf_keys(&k1.keys))?;
+                }
+                Ok(())
+            })();
+            self.poisoning(sent)?;
+            self.udpf_epoch = 1;
+            self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)
+        } else {
+            // Hint round: one ⌈log 𝔾⌉-bit CW per bin/stash slot. The
+            // retained keys fix each client's cuckoo placement, so the
+            // selection sets must match epoch 0 exactly.
+            for (i, ((sel, _), fixed)) in clients.iter().zip(&self.udpf_selections).enumerate() {
+                ensure!(
+                    distinct_sorted(sel) == *fixed,
+                    "U-DPF rounds keep selections fixed: client {i}'s selection set changed \
+                     since epoch 0 (rebuild the runtime or use KeyMode::Fresh)"
+                );
+            }
+            let mut all_hints = Vec::with_capacity(n);
+            for (state, (sel, deltas)) in self.udpf_clients.iter().zip(clients) {
+                all_hints.push(state.epoch_hints(&self.session, sel, deltas, epoch));
+            }
+            let gen_time = t_gen.elapsed();
+            self.command_both(|| ServerCmd::UdpfEpoch { n, epoch })?;
+            let sent: Result<()> = (|| {
+                for (links, hints) in self.client_links.iter().zip(&all_hints) {
+                    let encoded = msg::encode_hints(hints);
+                    links.to_s0.send(encoded.clone())?;
+                    links.to_s1.send(encoded)?;
+                }
+                Ok(())
+            })();
+            self.poisoning(sent)?;
+            self.udpf_epoch = epoch + 1;
+            self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)
+        }
+    }
+
+    /// One malicious-model SSA round (§2.2/§3.1): `S_0` sketches every
+    /// client's bins (the cross-server multiplication is the idealised
+    /// [`crate::sketch::SecureMul`], as in the paper's evaluation) and
+    /// aggregates only the accepted clients. Uploads are raw key batches
+    /// so adversarial (malformed) clients can be injected directly.
+    pub fn verified_ssa(
+        &mut self,
+        uploads: Vec<MasterKeyBatch<Fp>>,
+        server_shared_seed: u64,
+    ) -> Result<VerifiedSsaOutcome> {
+        self.check_healthy()?;
+        let n = uploads.len();
+        self.reset_meters();
+        let wall = Instant::now();
+        self.command(
+            0,
+            ServerCmd::VerifiedSsa {
+                uploads: Arc::new(uploads),
+                seed: server_shared_seed,
+            },
+        )?;
+        match self.reply(0) {
+            Ok(ServerReply::Verified {
+                result,
+                server_time,
+            }) => {
+                let wall_time = wall.elapsed();
+                let report =
+                    self.report(RoundKind::VerifiedSsa, n, Duration::ZERO, server_time, wall_time);
+                Ok(VerifiedSsaOutcome {
+                    delta: result.delta,
+                    rejected: result.rejected,
+                    report,
+                })
+            }
+            Ok(other) => {
+                let e = other.into_protocol_error("verified SSA");
+                self.poison(&e);
+                Err(e)
+            }
+            Err(e) => {
+                self.poison(&e);
+                Err(e)
+            }
+        }
+    }
+
+    /// One PSU round (§6 Table 2 row 2): clients blind + pad their
+    /// selection sets, `S_0` shuffles the pooled multiset, `S_1`
+    /// deduplicates and broadcasts the blinded union, clients unblind —
+    /// then the union-domain session is built and installed on both
+    /// living servers, so every later round's Θ (and key sizes) shrink.
+    /// `key` is the clients' shared blinding key the servers never see.
+    pub fn psu_align(
+        &mut self,
+        key: &[u8; 16],
+        client_sets: &[Vec<u64>],
+        rng: &mut Rng,
+    ) -> Result<PsuOutcome> {
+        let n = self.round_size(client_sets.len())?;
+        ensure!(n >= 1, "PSU alignment needs at least one client set");
+        let (m, k) = (self.session.params.m, self.session.params.k);
+        for (cid, set) in client_sets.iter().enumerate() {
+            ensure!(
+                set.len() <= k,
+                "client {cid} brings {} selections but the session pads PSU sets to k = {k}",
+                set.len()
+            );
+        }
+        self.reset_meters();
+        let wall = Instant::now();
+
+        let t_gen = Instant::now();
+        for (cid, (links, set)) in self.client_links.iter().zip(client_sets).enumerate() {
+            let blinded = psu::client_blind(key, m, k, cid as u64, set);
+            links.to_s0.send(msg::encode_indices(&blinded))?;
+        }
+        let gen_time = t_gen.elapsed();
+
+        let shuffle_seed = rng.next_u64();
+        self.command_both(|| ServerCmd::PsuAlign { n, shuffle_seed })?;
+
+        // S_1 broadcasts the blinded union to every client; all unblind
+        // to the same set, so only the first broadcast is unblinded (the
+        // rest are drained for the metering). Post-command failures
+        // poison: the broadcast stream may be half-consumed.
+        let exchanged: Result<Vec<u64>> = (|| {
+            let mut union: Option<Vec<u64>> = None;
+            for links in &self.client_links[..n] {
+                let blinded_union =
+                    msg::decode_indices(&links.to_s1.recv_timeout(REPLY_TIMEOUT)?)
+                        .ok_or_else(|| anyhow!("bad union broadcast"))?;
+                if union.is_none() {
+                    union = Some(psu::client_unblind(key, m, k, &blinded_union));
+                }
+            }
+            union.ok_or_else(|| anyhow!("PSU round served no clients"))
+        })();
+        let union = self.poisoning(exchanged)?;
+        let (server_time, _) = self.round_replies()?;
+        let union_len = union.len();
+        let session = Session::new_union(self.session.params.clone(), union)?;
+        self.install_session(Arc::new(session))?;
+        let report = self.report(RoundKind::PsuAlign, n, gen_time, server_time, wall.elapsed());
+        Ok(PsuOutcome { union_len, report })
+    }
+
+    /// Shut both servers down and join their threads. Dropping the
+    /// runtime does the same; this form surfaces a panicked server as an
+    /// error instead of swallowing it.
+    pub fn shutdown(mut self) -> Result<()> {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(ServerCmd::Shutdown);
+        }
+        let mut panicked = false;
+        for handle in self.handles.drain(..) {
+            panicked |= handle.join().is_err();
+        }
+        ensure!(!panicked, "a server thread panicked during shutdown");
+        Ok(())
+    }
+
+    // ---- internals -----------------------------------------------------
+
+    /// Validate a round's client count against capacity (an empty round
+    /// is legal and yields an empty/zero result, as the one-shot
+    /// functions always did).
+    fn round_size(&self, n: usize) -> Result<usize> {
+        self.check_healthy()?;
+        ensure!(
+            n <= self.client_links.len(),
+            "round brings {n} clients but the runtime was built for max_clients = {} \
+             (raise FslRuntimeBuilder::max_clients)",
+            self.client_links.len()
+        );
+        Ok(n)
+    }
+
+    /// Refuse to serve once a reply failure may have desynchronised the
+    /// command/reply streams.
+    fn check_healthy(&self) -> Result<()> {
+        match &self.poisoned {
+            Some(cause) => Err(anyhow!(
+                "runtime poisoned by an earlier server failure ({cause}); \
+                 build a fresh FslRuntime"
+            )),
+            None => Ok(()),
+        }
+    }
+
+    /// Record the first reply-level failure.
+    fn poison(&mut self, cause: &anyhow::Error) {
+        self.poisoned.get_or_insert_with(|| cause.to_string());
+    }
+
+    /// Shared tail of every SSA variant: collect both replies, take the
+    /// leader's delta, assemble the report.
+    fn finish_ssa(
+        &mut self,
+        kind: RoundKind,
+        n: usize,
+        gen_time: Duration,
+        wall: Instant,
+    ) -> Result<SsaOutcome<G>> {
+        let (server_time, delta) = self.round_replies()?;
+        let delta = self.poisoning(delta.ok_or_else(|| anyhow!("leader sent no delta")))?;
+        let report = self.report(kind, n, gen_time, server_time, wall.elapsed());
+        Ok(SsaOutcome { delta, report })
+    }
+
+    /// Pass a mid-round result through, poisoning the runtime on failure:
+    /// once the servers have been commanded, an aborted round can leave
+    /// the data/reply streams half-consumed.
+    fn poisoning<T>(&mut self, res: Result<T>) -> Result<T> {
+        match res {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.poison(&e);
+                Err(e)
+            }
+        }
+    }
+
+    fn command(&self, party: usize, cmd: ServerCmd<G>) -> Result<()> {
+        self.cmd_tx[party]
+            .send(cmd)
+            .map_err(|_| anyhow!("server S{party} has shut down"))
+    }
+
+    fn command_both(&self, mut cmd: impl FnMut() -> ServerCmd<G>) -> Result<()> {
+        self.command(0, cmd())?;
+        self.command(1, cmd())
+    }
+
+    fn reply(&self, party: usize) -> Result<ServerReply<G>> {
+        self.rep_rx[party]
+            .recv_timeout(REPLY_TIMEOUT)
+            .map_err(|e| anyhow!("no reply from server S{party}: {e}"))
+    }
+
+    fn ack_both(&mut self) -> Result<()> {
+        let mut failure: Option<anyhow::Error> = None;
+        // Drain BOTH replies even when the first fails: a half-read reply
+        // stream would silently shift every later round out of phase.
+        for party in 0..2 {
+            match self.reply(party) {
+                Ok(ServerReply::Ack) => {}
+                Ok(other) => {
+                    failure.get_or_insert(other.into_protocol_error("install"));
+                }
+                Err(e) => {
+                    failure.get_or_insert(e);
+                }
+            }
+        }
+        match failure {
+            Some(e) => {
+                self.poison(&e);
+                Err(e)
+            }
+            None => Ok(()),
+        }
+    }
+
+    /// Collect one round reply per server (draining both even on
+    /// failure): max server time + the leader's optional delta.
+    fn round_replies(&mut self) -> Result<(Duration, Option<Vec<G>>)> {
+        let mut max_time = Duration::ZERO;
+        let mut delta = None;
+        let mut failure: Option<anyhow::Error> = None;
+        for party in 0..2 {
+            match self.reply(party) {
+                Ok(ServerReply::Round { server_time, delta: d }) => {
+                    max_time = max_time.max(server_time);
+                    delta = delta.or(d);
+                }
+                Ok(other) => {
+                    failure.get_or_insert(other.into_protocol_error("round"));
+                }
+                Err(e) => {
+                    failure.get_or_insert(e);
+                }
+            }
+        }
+        match failure {
+            Some(e) => {
+                self.poison(&e);
+                Err(e)
+            }
+            None => Ok((max_time, delta)),
+        }
+    }
+
+    fn install_session(&mut self, session: Arc<Session>) -> Result<()> {
+        self.check_healthy()?;
+        for party in 0..2 {
+            self.command(party, ServerCmd::SetSession(session.clone()))?;
+        }
+        self.ack_both()?;
+        // The weight vector is indexed by global model index: it stays
+        // valid across a domain change (PSU union) but not across a model
+        // resize — the servers drop it in that case, and so do we.
+        if self.weights_len.is_some_and(|len| len != session.params.m as usize) {
+            self.weights_len = None;
+        }
+        self.session = session;
+        // Retained U-DPF keys were built against the old table.
+        self.udpf_clients.clear();
+        self.udpf_selections.clear();
+        self.udpf_epoch = 0;
+        Ok(())
+    }
+
+    /// Zero every channel meter so the next report covers one round.
+    fn reset_meters(&self) {
+        for links in &self.client_links {
+            links.to_s0.meter.reset();
+            links.to_s1.meter.reset();
+        }
+        for meter in &self.inter_meters {
+            meter.reset();
+        }
+    }
+
+    fn report(
+        &self,
+        kind: RoundKind,
+        n: usize,
+        gen_time: Duration,
+        server_time: Duration,
+        wall_time: Duration,
+    ) -> RoundReport {
+        // Verified rounds take uploads directly (no client links), so `n`
+        // may exceed the topology's capacity — clamp the meter slice.
+        let links = &self.client_links[..n.min(self.client_links.len())];
+        RoundReport {
+            kind,
+            clients: n,
+            client_upload_bytes: links
+                .iter()
+                .map(|l| l.to_s0.meter.sent() + l.to_s1.meter.sent())
+                .sum(),
+            client_download_bytes: links
+                .iter()
+                .map(|l| l.to_s0.meter.recv() + l.to_s1.meter.recv())
+                .sum(),
+            server_exchange_bytes: self.inter_meters.iter().map(|m| m.sent()).sum(),
+            gen_time,
+            server_time,
+            wall_time,
+        }
+    }
+}
+
+impl<G: Group> Drop for FslRuntime<G> {
+    fn drop(&mut self) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(ServerCmd::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// A selection list reduced to its distinct sorted set (the identity SSA
+/// aggregates under — duplicate selections sum their deltas).
+fn distinct_sorted(sel: &[u64]) -> Vec<u64> {
+    let mut s = sel.to_vec();
+    s.sort_unstable();
+    s.dedup();
+    s
+}
+
+/// Control-plane commands (the piece a real deployment would carry in an
+/// RPC frame). Bulk client payloads never travel here — they go over the
+/// metered channels in [`msg`] encodings.
+enum ServerCmd<G: Group> {
+    /// Serve one fresh-key SSA round of `n` clients.
+    Ssa { n: usize },
+    /// Serve one PSR round of `n` clients from the installed weights.
+    Psr { n: usize },
+    /// Receive and retain `n` clients' U-DPF key sets, aggregate epoch 0.
+    UdpfSetup { n: usize },
+    /// Apply `n` clients' epoch hints to the retained keys, aggregate.
+    UdpfEpoch { n: usize, epoch: u64 },
+    /// (`S_0` only) verify + aggregate a malicious-model round.
+    VerifiedSsa {
+        uploads: Arc<Vec<MasterKeyBatch<Fp>>>,
+        seed: u64,
+    },
+    /// Serve one PSU alignment round of `n` clients.
+    PsuAlign { n: usize, shuffle_seed: u64 },
+    /// Install the servers' weight vector (PSR database).
+    SetWeights(Arc<Vec<G>>),
+    /// Replace the shared session.
+    SetSession(Arc<Session>),
+    /// Exit the command loop.
+    Shutdown,
+}
+
+enum ServerReply<G: Group> {
+    /// Install acknowledged.
+    Ack,
+    /// Round served; `delta` is `Some` only from the SSA leader.
+    Round {
+        server_time: Duration,
+        delta: Option<Vec<G>>,
+    },
+    /// Verified round served (leader only).
+    Verified {
+        result: VerifiedSsaResult,
+        server_time: Duration,
+    },
+    /// The command failed server-side.
+    Failed(String),
+}
+
+impl<G: Group> ServerReply<G> {
+    fn into_protocol_error(self, what: &str) -> anyhow::Error {
+        match self {
+            ServerReply::Failed(e) => anyhow!("server failed during {what}: {e}"),
+            _ => anyhow!("unexpected server reply during {what}"),
+        }
+    }
+}
+
+/// One server's thread-local state: its engines, channel endpoints, and
+/// retained round-spanning state (weights, U-DPF keys, session).
+struct ServerHalf<G: Group> {
+    party: u8,
+    session: Arc<Session>,
+    agg: AggregationEngine,
+    ret: RetrievalEngine,
+    /// Per-client endpoints (this server's side of every client link).
+    eps: Vec<net::Endpoint>,
+    /// The `S_0 ↔ S_1` channel.
+    inter: net::Endpoint,
+    /// Installed PSR database (global-model-indexed).
+    weights: Option<Arc<Vec<G>>>,
+    /// Retained U-DPF key sets, one per client (U-DPF mode).
+    udpf: Vec<udpf_ssa::UdpfSsaServerKeys<G>>,
+}
+
+impl<G: Group> ServerHalf<G> {
+    /// The command loop: block for a command, serve it, reply, repeat
+    /// until shutdown. A failed round replies `Failed` and keeps the
+    /// server alive for the next command.
+    fn run(mut self, cmd_rx: Receiver<ServerCmd<G>>, rep_tx: Sender<ServerReply<G>>) {
+        while let Ok(cmd) = cmd_rx.recv() {
+            let reply = match cmd {
+                ServerCmd::Shutdown => break,
+                ServerCmd::SetSession(s) => {
+                    // Weights are indexed by global model index: a session
+                    // with a different m invalidates them.
+                    if self.weights.as_ref().is_some_and(|w| w.len() != s.params.m as usize) {
+                        self.weights = None;
+                    }
+                    self.session = s;
+                    self.udpf.clear();
+                    Ok(ServerReply::Ack)
+                }
+                ServerCmd::SetWeights(w) => {
+                    self.weights = Some(w);
+                    Ok(ServerReply::Ack)
+                }
+                ServerCmd::Ssa { n } => self.ssa(n),
+                ServerCmd::Psr { n } => self.psr(n),
+                ServerCmd::UdpfSetup { n } => self.udpf_setup(n),
+                ServerCmd::UdpfEpoch { n, epoch } => self.udpf_epoch(n, epoch),
+                ServerCmd::VerifiedSsa { uploads, seed } => self.verified(&uploads, seed),
+                ServerCmd::PsuAlign { n, shuffle_seed } => self.psu_align(n, shuffle_seed),
+            };
+            let reply = reply.unwrap_or_else(|e| ServerReply::Failed(e.to_string()));
+            if rep_tx.send(reply).is_err() {
+                break; // driver gone
+            }
+        }
+    }
+
+    /// Fresh-key SSA. `S_0` (leader) receives long uploads, forwards the
+    /// publics to `S_1`, aggregates, reconstructs from `S_1`'s share
+    /// vector. `S_1` (worker) receives short uploads + forwarded publics,
+    /// aggregates, ships its shares.
+    fn ssa(&mut self, n: usize) -> Result<ServerReply<G>> {
+        if self.party == 0 {
+            let mut batches = Vec::with_capacity(n);
+            for (i, ep) in self.eps[..n].iter().enumerate() {
+                let up = msg::decode_key_upload::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+                    .ok_or_else(|| anyhow!("S0: bad client upload"))?;
+                let publics = up.publics.ok_or_else(|| anyhow!("S0: no publics"))?;
+                // Forward only the *public* parts: the client's S_0 master
+                // seed must never reach S_1 (two-server privacy), so the
+                // forwarded envelope carries a zeroed seed, which S_1
+                // discards (its seed came in the client's short upload).
+                let mut batch = MasterKeyBatch::<G> {
+                    msk: [[0u8; 16]; 2],
+                    publics,
+                };
+                let mut fwd = (i as u32).to_le_bytes().to_vec();
+                fwd.extend(msg::encode_key_upload(&batch, 0, true));
+                self.inter.send(fwd)?;
+                batch.msk = [up.msk, up.msk];
+                batches.push(batch);
+            }
+            let t = Instant::now();
+            let acc0 = self
+                .agg
+                .aggregate_publics(&self.session, 0, &uploads_of(&batches, 0));
+            let server_time = t.elapsed();
+            let share1 = msg::decode_shares::<G>(&self.inter.recv_timeout(REPLY_TIMEOUT)?)
+                .ok_or_else(|| anyhow!("S0: bad share vector"))?;
+            Ok(ServerReply::Round {
+                server_time,
+                delta: Some(ssa::reconstruct(&acc0, &share1)),
+            })
+        } else {
+            let mut msks = Vec::with_capacity(n);
+            for ep in &self.eps[..n] {
+                let up = msg::decode_key_upload::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+                    .ok_or_else(|| anyhow!("S1: bad client upload"))?;
+                msks.push(up.msk);
+            }
+            // Public parts forwarded by S_0, tagged with client index.
+            let mut publics: Vec<Option<_>> = (0..n).map(|_| None).collect();
+            for _ in 0..n {
+                let raw = self.inter.recv_timeout(REPLY_TIMEOUT)?;
+                let idx = u32::from_le_bytes(
+                    raw.get(..4)
+                        .ok_or_else(|| anyhow!("S1: short forward"))?
+                        .try_into()
+                        .unwrap(),
+                ) as usize;
+                let slot = publics
+                    .get_mut(idx)
+                    .ok_or_else(|| anyhow!("S1: bad client index {idx}"))?;
+                let up = msg::decode_key_upload::<G>(&raw[4..])
+                    .ok_or_else(|| anyhow!("S1: bad forwarded publics"))?;
+                *slot = Some(up.publics.ok_or_else(|| anyhow!("S1: no publics"))?);
+            }
+            let batches: Vec<MasterKeyBatch<G>> = publics
+                .into_iter()
+                .enumerate()
+                .zip(&msks)
+                .map(|((i, p), msk)| {
+                    Ok(MasterKeyBatch {
+                        msk: [*msk, *msk],
+                        publics: p.ok_or_else(|| anyhow!("S1: missing {i}"))?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let t = Instant::now();
+            let acc1 = self
+                .agg
+                .aggregate_publics(&self.session, 1, &uploads_of(&batches, 1));
+            let server_time = t.elapsed();
+            self.inter.send(msg::encode_shares(&acc1))?;
+            Ok(ServerReply::Round {
+                server_time,
+                delta: None,
+            })
+        }
+    }
+
+    /// PSR: decode the whole batch, answer it through one shard plan,
+    /// ship each client its answer on the same link.
+    fn psr(&mut self, n: usize) -> Result<ServerReply<G>> {
+        let weights = self
+            .weights
+            .clone()
+            .ok_or_else(|| anyhow!("S{}: no weights installed", self.party))?;
+        let mut batches = Vec::with_capacity(n);
+        for ep in &self.eps[..n] {
+            let up = msg::decode_key_upload::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+                .ok_or_else(|| anyhow!("S{}: bad upload", self.party))?;
+            let publics = up
+                .publics
+                .ok_or_else(|| anyhow!("S{}: no publics", self.party))?;
+            batches.push(MasterKeyBatch::<G> {
+                msk: [up.msk, up.msk],
+                publics,
+            });
+        }
+        let uploads = uploads_of(&batches, self.party);
+        let t = Instant::now();
+        let answers = self
+            .ret
+            .answer_publics(&self.session, &weights, self.party, &uploads);
+        let server_time = t.elapsed();
+        for (ep, ans) in self.eps[..n].iter().zip(&answers) {
+            ep.send(msg::encode_shares(ans))?;
+        }
+        Ok(ServerReply::Round {
+            server_time,
+            delta: None,
+        })
+    }
+
+    /// U-DPF setup: retain each client's key set, then aggregate epoch 0.
+    fn udpf_setup(&mut self, n: usize) -> Result<ServerReply<G>> {
+        self.udpf.clear();
+        for ep in &self.eps[..n] {
+            let keys = msg::decode_udpf_keys::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+                .ok_or_else(|| anyhow!("S{}: bad U-DPF key upload", self.party))?;
+            self.udpf.push(udpf_ssa::UdpfSsaServerKeys { keys });
+        }
+        self.udpf_aggregate(0)
+    }
+
+    /// U-DPF epoch: apply each client's hints to its retained keys, then
+    /// aggregate at the new epoch.
+    fn udpf_epoch(&mut self, n: usize, epoch: u64) -> Result<ServerReply<G>> {
+        ensure!(
+            n == self.udpf.len(),
+            "S{}: {} retained key sets but {n} hint uploads",
+            self.party,
+            self.udpf.len()
+        );
+        for (ep, retained) in self.eps[..n].iter().zip(&mut self.udpf) {
+            let hints = msg::decode_hints::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+                .ok_or_else(|| anyhow!("S{}: bad hint upload", self.party))?;
+            ensure!(
+                hints.len() == retained.keys.len(),
+                "S{}: hint count {} != key count {}",
+                self.party,
+                hints.len(),
+                retained.keys.len()
+            );
+            ensure!(
+                hints.iter().all(|h| h.epoch == epoch),
+                "S{}: hint epoch mismatch (expected {epoch})",
+                self.party
+            );
+            retained.apply_hints(&hints);
+        }
+        self.udpf_aggregate(epoch)
+    }
+
+    /// Shared U-DPF aggregation tail: evaluate the retained keys at
+    /// `epoch`; worker ships shares, leader reconstructs.
+    fn udpf_aggregate(&mut self, epoch: u64) -> Result<ServerReply<G>> {
+        let t = Instant::now();
+        let acc = udpf_ssa::server_aggregate(&self.agg, &self.session, &self.udpf, epoch);
+        let server_time = t.elapsed();
+        if self.party == 1 {
+            self.inter.send(msg::encode_shares(&acc))?;
+            Ok(ServerReply::Round {
+                server_time,
+                delta: None,
+            })
+        } else {
+            let share1 = msg::decode_shares::<G>(&self.inter.recv_timeout(REPLY_TIMEOUT)?)
+                .ok_or_else(|| anyhow!("S0: bad share vector"))?;
+            Ok(ServerReply::Round {
+                server_time,
+                delta: Some(ssa::reconstruct(&acc, &share1)),
+            })
+        }
+    }
+
+    /// Malicious-model round: the leader runs the sketch-and-aggregate
+    /// core (the cross-server multiplication is idealised, so the check
+    /// is not split across the two threads — §3.1, as evaluated).
+    fn verified(&mut self, uploads: &[MasterKeyBatch<Fp>], seed: u64) -> Result<ServerReply<G>> {
+        ensure!(self.party == 0, "verified rounds run on the leader");
+        let t = Instant::now();
+        let result = verified::verify_and_aggregate(&self.session, uploads, seed)?;
+        Ok(ServerReply::Verified {
+            result,
+            server_time: t.elapsed(),
+        })
+    }
+
+    /// PSU: `S_0` pools + shuffles the blinded multisets and forwards;
+    /// `S_1` deduplicates and broadcasts the blinded union.
+    fn psu_align(&mut self, n: usize, shuffle_seed: u64) -> Result<ServerReply<G>> {
+        let t = Instant::now();
+        if self.party == 0 {
+            let mut pooled = Vec::new();
+            for ep in &self.eps[..n] {
+                let blinded = msg::decode_indices(&ep.recv_timeout(REPLY_TIMEOUT)?)
+                    .ok_or_else(|| anyhow!("S0: bad blinded set"))?;
+                pooled.extend(blinded);
+            }
+            let shuffled = psu::server0_shuffle(pooled, &mut Rng::new(shuffle_seed));
+            self.inter.send(msg::encode_indices(&shuffled))?;
+        } else {
+            let pooled = msg::decode_indices(&self.inter.recv_timeout(REPLY_TIMEOUT)?)
+                .ok_or_else(|| anyhow!("S1: bad pooled multiset"))?;
+            let union = psu::server1_dedup(pooled);
+            let encoded = msg::encode_indices(&union);
+            for ep in &self.eps[..n] {
+                ep.send(encoded.clone())?;
+            }
+        }
+        Ok(ServerReply::Round {
+            server_time: t.elapsed(),
+            delta: None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::CuckooParams;
+
+    fn params(m: u64, k: usize) -> SessionParams {
+        SessionParams {
+            m,
+            k,
+            cuckoo: CuckooParams::default(),
+        }
+    }
+
+    #[test]
+    fn builder_rejects_zero_capacity_and_bad_unions() {
+        let err = FslRuntimeBuilder::new(params(256, 8))
+            .max_clients(0)
+            .build::<u64>()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("max_clients"), "{err}");
+        let err = FslRuntimeBuilder::new(params(256, 8))
+            .union_domain(vec![9, 3])
+            .build::<u64>()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("strictly ascending"), "{err}");
+    }
+
+    #[test]
+    fn psr_requires_weights_with_actionable_error() {
+        let mut rt = FslRuntimeBuilder::new(params(256, 8)).build::<u64>().unwrap();
+        let mut rng = Rng::new(1);
+        let err = rt
+            .psr(&[vec![1, 2, 3]], &mut rng)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("set_weights"), "{err}");
+    }
+
+    #[test]
+    fn capacity_overflow_is_an_error_not_a_hang() {
+        let mut rt = FslRuntimeBuilder::new(params(256, 8))
+            .max_clients(2)
+            .build::<u64>()
+            .unwrap();
+        let mut rng = Rng::new(2);
+        let clients: Vec<(Vec<u64>, Vec<u64>)> =
+            (0..3).map(|c| (vec![c], vec![c + 1])).collect();
+        let err = rt.ssa(&clients, &mut rng).unwrap_err().to_string();
+        assert!(err.contains("max_clients"), "{err}");
+        // The runtime stays usable after the rejected round.
+        assert!(rt.ssa(&clients[..2], &mut rng).is_ok());
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn weight_length_mismatch_is_an_error() {
+        let mut rt = FslRuntimeBuilder::new(params(256, 8)).build::<u64>().unwrap();
+        let err = rt.set_weights(vec![0u64; 100]).unwrap_err().to_string();
+        assert!(err.contains("m = 256"), "{err}");
+    }
+}

@@ -1,19 +1,18 @@
-//! The two-server SSA round over metered channels.
+//! One-shot SSA round wrappers over the persistent runtime.
 //!
-//! `S_0` is the leader: it receives each client's long upload (master
-//! seed + public parts), forwards the public parts to `S_1` over the
-//! inter-server channel, aggregates its shares, receives `S_1`'s share
-//! vector and reconstructs `Δw`. `S_1` is the worker: short uploads
-//! (master seed only) from clients, public parts from `S_0`.
+//! The threaded round itself — `S_0` leader receiving long uploads and
+//! forwarding publics, `S_1` worker aggregating and shipping its share
+//! vector — lives in the [`super::runtime`] command loop now. The
+//! functions here are kept for compatibility: each builds a runtime, runs
+//! one round, and drops it, which is exactly the per-call cost the
+//! persistent API exists to amortise.
 
-use crate::dpf::{MasterKeyBatch, PublicPart};
+use super::runtime::FslRuntimeBuilder;
 use crate::group::Group;
-use crate::net;
-use crate::protocol::aggregate::{uploads_of, AggregationEngine};
-use crate::protocol::msg;
-use crate::protocol::{ssa, Session};
-use anyhow::{anyhow, Result};
-use std::time::{Duration, Instant};
+use crate::protocol::aggregate::AggregationEngine;
+use crate::protocol::Session;
+use anyhow::Result;
+use std::time::Duration;
 
 /// Everything measured in one SSA round.
 #[derive(Debug, Clone)]
@@ -36,19 +35,22 @@ pub struct SsaRoundResult<G: Group> {
 /// server threads aggregate *concurrently* on one machine here, so each
 /// gets half the cores — `server_time` then measures one server's real
 /// throughput instead of 2× oversubscription.
+#[deprecated(note = "build a persistent coordinator::FslRuntime and call .ssa(..)")]
 pub fn run_ssa_round<G: Group>(
     session: &Session,
     clients: &[(Vec<u64>, Vec<G>)],
     rng: &mut crate::crypto::rng::Rng,
     latency: Duration,
 ) -> Result<SsaRoundResult<G>> {
+    // (Deprecated items may call each other without tripping the lint.)
     run_ssa_round_with(session, clients, rng, latency, &AggregationEngine::per_coloc_server())
 }
 
 /// Run one SSA round: `clients[i] = (selections, deltas)`. Returns the
-/// reconstructed update. Spawns the two server threads, drives the
-/// clients on the caller thread (Fig. 1 topology, channels metered); both
-/// servers aggregate through `engine` (zero-copy publics path).
+/// reconstructed update. One-shot wrapper: spawns a fresh runtime (two
+/// server threads, metered topology), serves a single round through it,
+/// and tears it down.
+#[deprecated(note = "build a persistent coordinator::FslRuntime and call .ssa(..)")]
 pub fn run_ssa_round_with<G: Group>(
     session: &Session,
     clients: &[(Vec<u64>, Vec<G>)],
@@ -56,116 +58,42 @@ pub fn run_ssa_round_with<G: Group>(
     latency: Duration,
     engine: &AggregationEngine,
 ) -> Result<SsaRoundResult<G>> {
-    let n = clients.len();
-    let (client_links, server_sides, inter) = net::topology(n, latency);
-    let (inter0, inter1) = inter;
-    // Split the per-client server endpoints so S_1's half can move into
-    // its thread (mpsc receivers are !Sync).
-    let (eps0, eps1): (Vec<_>, Vec<_>) = server_sides.into_iter().unzip();
-
-    let t_gen = Instant::now();
-    let mut uploads = Vec::with_capacity(n);
-    for (sel, deltas) in clients {
-        uploads.push(ssa::client_update(session, sel, deltas, rng).map_err(|e| anyhow!("{e}"))?);
-    }
-    let gen_time = t_gen.elapsed();
-
-    // Clients ship their messages (driver thread = the client side).
-    for (links, batch) in client_links.iter().zip(&uploads) {
-        links.to_s0.send(msg::encode_key_upload(batch, 0, true))?;
-        links.to_s1.send(msg::encode_key_upload(batch, 1, false))?;
-    }
-    let client_upload_bytes: u64 = client_links
-        .iter()
-        .map(|l| l.to_s0.meter.sent() + l.to_s1.meter.sent())
-        .sum();
-
-    let result = std::thread::scope(|scope| -> Result<(Vec<G>, Duration, Duration, u64)> {
-        // S_1: worker.
-        let s1 = scope.spawn(move || -> Result<(Vec<G>, Duration, u64)> {
-            let inter1 = inter1;
-            let mut msks = Vec::with_capacity(n);
-            for ep1 in &eps1 {
-                let up = msg::decode_key_upload::<G>(&ep1.recv()?)
-                    .ok_or_else(|| anyhow!("S1: bad client upload"))?;
-                msks.push(up.msk);
-            }
-            // Public parts forwarded by S_0, tagged with client index.
-            let mut publics: Vec<Option<Vec<PublicPart<G>>>> = (0..n).map(|_| None).collect();
-            for _ in 0..n {
-                let raw = inter1.recv()?;
-                let idx = u32::from_le_bytes(raw[..4].try_into().unwrap()) as usize;
-                let slot = publics
-                    .get_mut(idx)
-                    .ok_or_else(|| anyhow!("S1: bad client index {idx}"))?;
-                let up = msg::decode_key_upload::<G>(&raw[4..])
-                    .ok_or_else(|| anyhow!("S1: bad forwarded publics"))?;
-                *slot = Some(up.publics.ok_or_else(|| anyhow!("S1: no publics"))?);
-            }
-            let batches: Vec<MasterKeyBatch<G>> = publics
-                .into_iter()
-                .enumerate()
-                .zip(&msks)
-                .map(|((i, p), msk)| {
-                    Ok(MasterKeyBatch {
-                        msk: [*msk, *msk],
-                        publics: p.ok_or_else(|| anyhow!("S1: missing {i}"))?,
-                    })
-                })
-                .collect::<Result<_>>()?;
-            let t = Instant::now();
-            let acc = engine.aggregate_publics(session, 1, &uploads_of(&batches, 1));
-            let server_time = t.elapsed();
-            inter1.send(msg::encode_shares(&acc))?;
-            Ok((acc, server_time, inter1.meter.sent()))
-        });
-
-        // S_0: leader (runs on this thread).
-        let mut batches = Vec::with_capacity(n);
-        for (i, ep0) in eps0.iter().enumerate() {
-            let raw = ep0.recv()?;
-            let up = msg::decode_key_upload::<G>(&raw)
-                .ok_or_else(|| anyhow!("S0: bad client upload"))?;
-            let publics = up.publics.ok_or_else(|| anyhow!("S0: no publics"))?;
-            // Forward the public parts to S_1.
-            let batch = crate::dpf::MasterKeyBatch::<G> {
-                msk: [up.msk, up.msk],
-                publics,
-            };
-            let mut fwd = (i as u32).to_le_bytes().to_vec();
-            fwd.extend(msg::encode_key_upload(&batch, 0, true));
-            inter0.send(fwd)?;
-            batches.push(batch);
-        }
-        let t = Instant::now();
-        let acc0 = engine.aggregate_publics(session, 0, &uploads_of(&batches, 0));
-        let s0_time = t.elapsed();
-
-        let share1 = msg::decode_shares::<G>(&inter0.recv()?)
-            .ok_or_else(|| anyhow!("S0: bad share vector"))?;
-        let (share1_check, s1_time, s1_sent) = s1.join().map_err(|_| anyhow!("S1 panicked"))??;
-        debug_assert_eq!(share1, share1_check);
-        let delta = ssa::reconstruct(&acc0, &share1);
-        let exchange = inter0.meter.sent() + s1_sent;
-        Ok((delta, s0_time, s1_time, exchange))
-    })?;
-
-    let (delta, s0_time, s1_time, server_exchange_bytes) = result;
+    let mut rt = FslRuntimeBuilder::from_session(session.clone())
+        .latency(latency)
+        .threads(engine.threads())
+        .max_clients(clients.len().max(1))
+        .build::<G>()?;
+    let out = rt.ssa(clients, rng)?;
     Ok(SsaRoundResult {
-        delta,
-        client_upload_bytes,
-        server_exchange_bytes,
-        gen_time,
-        server_time: s0_time.max(s1_time),
+        delta: out.delta,
+        client_upload_bytes: out.report.client_upload_bytes,
+        server_exchange_bytes: out.report.server_exchange_bytes,
+        gen_time: out.report.gen_time,
+        server_time: out.report.server_time,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::FslRuntimeBuilder;
     use crate::crypto::rng::Rng;
     use crate::hashing::CuckooParams;
     use crate::protocol::SessionParams;
+
+    fn ssa_once(
+        session: &Session,
+        clients: &[(Vec<u64>, Vec<u64>)],
+        rng: &mut Rng,
+        threads: usize,
+    ) -> crate::coordinator::SsaOutcome<u64> {
+        let mut rt = FslRuntimeBuilder::from_session(session.clone())
+            .threads(threads)
+            .max_clients(clients.len())
+            .build::<u64>()
+            .unwrap();
+        rt.ssa(clients, rng).unwrap()
+    }
 
     #[test]
     fn threaded_round_matches_direct_aggregation() {
@@ -188,10 +116,10 @@ mod tests {
                 expected[i as usize] = expected[i as usize].wrapping_add(d);
             }
         }
-        let res = run_ssa_round(&session, &clients, &mut rng, Duration::ZERO).unwrap();
+        let res = ssa_once(&session, &clients, &mut rng, 0);
         assert_eq!(res.delta, expected);
-        assert!(res.client_upload_bytes > 0);
-        assert!(res.server_exchange_bytes > 0);
+        assert!(res.report.client_upload_bytes > 0);
+        assert!(res.report.server_exchange_bytes > 0);
     }
 
     #[test]
@@ -214,15 +142,7 @@ mod tests {
         let mut deltas = Vec::new();
         for threads in [1usize, 8] {
             let mut rng = Rng::new(153);
-            let res = run_ssa_round_with(
-                &session,
-                &clients,
-                &mut rng,
-                Duration::ZERO,
-                &AggregationEngine::new(threads),
-            )
-            .unwrap();
-            deltas.push(res.delta);
+            deltas.push(ssa_once(&session, &clients, &mut rng, threads).delta);
         }
         assert_eq!(deltas[0], deltas[1]);
     }
@@ -239,13 +159,47 @@ mod tests {
         let mut rng = Rng::new(151);
         let sel = rng.sample_distinct(128, 1 << 12);
         let deltas: Vec<u64> = vec![1; 128];
-        let res = run_ssa_round(&session, &[(sel, deltas)], &mut rng, Duration::ZERO).unwrap();
+        let res = ssa_once(&session, &[(sel, deltas)], &mut rng, 0);
         let paper_bits = session.simple.num_bins() * (session.log_theta() * 130 + 64) + 256;
-        let measured_bits = res.client_upload_bytes as f64 * 8.0;
+        let measured_bits = res.report.client_upload_bytes as f64 * 8.0;
         let model_bits = paper_bits as f64;
         assert!(
             measured_bits < model_bits * 1.15 && measured_bits > model_bits * 0.5,
             "measured {measured_bits} vs model {model_bits}"
         );
+    }
+
+    /// The retained equivalence check against the deprecated one-shot
+    /// wrapper: same session + same rng stream ⇒ bit-identical delta and
+    /// identical byte metering, whichever API served the round.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrapper_matches_the_runtime() {
+        let session = Session::new_full(SessionParams {
+            m: 1 << 9,
+            k: 16,
+            cuckoo: CuckooParams::default(),
+        });
+        let clients: Vec<(Vec<u64>, Vec<u64>)> = {
+            let mut rng = Rng::new(154);
+            (0..3)
+                .map(|c| {
+                    let sel = rng.sample_distinct(16, 1 << 9);
+                    let deltas = sel.iter().map(|&x| x * 3 + c).collect();
+                    (sel, deltas)
+                })
+                .collect()
+        };
+        let legacy = {
+            let mut rng = Rng::new(155);
+            run_ssa_round(&session, &clients, &mut rng, Duration::ZERO).unwrap()
+        };
+        let modern = {
+            let mut rng = Rng::new(155);
+            ssa_once(&session, &clients, &mut rng, 0)
+        };
+        assert_eq!(legacy.delta, modern.delta);
+        assert_eq!(legacy.client_upload_bytes, modern.report.client_upload_bytes);
+        assert_eq!(legacy.server_exchange_bytes, modern.report.server_exchange_bytes);
     }
 }

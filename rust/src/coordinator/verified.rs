@@ -18,6 +18,7 @@ use anyhow::{anyhow, Result};
 
 /// Result of a verified round: the aggregate over accepted clients plus
 /// the indices of rejected ones.
+#[derive(Debug, Clone)]
 pub struct VerifiedSsaResult {
     pub delta: Vec<Fp>,
     pub rejected: Vec<usize>,
@@ -26,7 +27,23 @@ pub struct VerifiedSsaResult {
 /// Run one malicious-model SSA round in-process. `uploads[i]` is client
 /// i's key batch (possibly adversarially malformed — construct it
 /// directly rather than through `ssa::client_update` to attack).
+///
+/// One-shot wrapper: a persistent deployment verifies through a living
+/// runtime instead — see [`super::FslRuntime::verified_ssa`].
+#[deprecated(note = "build a coordinator::FslRuntime and call .verified_ssa(..)")]
 pub fn run_verified_ssa_round(
+    session: &Session,
+    uploads: &[crate::dpf::MasterKeyBatch<Fp>],
+    server_shared_seed: u64,
+) -> Result<VerifiedSsaResult> {
+    verify_and_aggregate(session, uploads, server_shared_seed)
+}
+
+/// The verification + aggregation core shared by the deprecated one-shot
+/// wrapper and the runtime's command loop (`S_0` runs it — the sketch's
+/// cross-server multiplication is the idealised [`SecureMul`], as in the
+/// paper's evaluation, so the check itself is not split across threads).
+pub(crate) fn verify_and_aggregate(
     session: &Session,
     uploads: &[crate::dpf::MasterKeyBatch<Fp>],
     server_shared_seed: u64,
@@ -92,7 +109,7 @@ mod tests {
             }
             uploads.push(ssa::client_update(&s, &sel, &dl, &mut rng).unwrap());
         }
-        let res = run_verified_ssa_round(&s, &uploads, 801).unwrap();
+        let res = verify_and_aggregate(&s, &uploads, 801).unwrap();
         assert!(res.rejected.is_empty());
         assert_eq!(res.delta, expected);
     }
@@ -128,7 +145,7 @@ mod tests {
         let mut evil = gen_batch_with_master(&bins, [9; 16], [13; 16]);
         evil.publics[0].cws[0].seed[5] ^= 0x40;
 
-        let res = run_verified_ssa_round(&s, &[honest, evil], 803).unwrap();
+        let res = verify_and_aggregate(&s, &[honest, evil], 803).unwrap();
         assert_eq!(res.rejected, vec![1], "malicious client must be rejected");
         assert_eq!(res.delta, expected, "aggregate must exclude the cheater");
     }
@@ -141,7 +158,7 @@ mod tests {
         let dl: Vec<Fp> = sel.iter().map(|_| Fp::one()).collect();
         let mut upload = ssa::client_update(&s, &sel, &dl, &mut rng).unwrap();
         upload.publics.pop(); // drop one bin
-        let res = run_verified_ssa_round(&s, &[upload], 805).unwrap();
+        let res = verify_and_aggregate(&s, &[upload], 805).unwrap();
         assert_eq!(res.rejected, vec![0]);
     }
 }

@@ -11,6 +11,11 @@
 //! * Optimisations: updatable DPF ([`udpf`]), private set union
 //!   ([`protocol::psu`]), mega-element grouping ([`protocol::mega`]).
 //!
+//! Rounds are served by one persistent [`coordinator::FslRuntime`] — a
+//! long-lived two-server deployment (living server threads, metered
+//! topology, engines) built once through
+//! [`coordinator::FslRuntimeBuilder`] and shared by every round type.
+//!
 //! The crate is the **L3 rust coordinator** of a three-layer stack: the FSL
 //! model itself (L2, JAX) and its compute hot-spots (L1, Pallas) are
 //! AOT-compiled to HLO text at build time and executed from rust through

@@ -11,13 +11,13 @@
 //! Arguments are `key=value` pairs, e.g.
 //! `fsl train rounds=30 clients=10 c=0.1 artifacts=artifacts`.
 
-use anyhow::{anyhow, Result};
-use fsl::coordinator::{run_fsl_training, FslConfig};
+use anyhow::Result;
+use fsl::coordinator::{run_fsl_training, FslConfig, FslRuntimeBuilder};
 use fsl::crypto::rng::Rng;
 use fsl::data::{partition_iid, ImageDataset, IMAGE_CLASSES};
 use fsl::hashing::{CuckooParams, SimpleTable};
-use fsl::metrics::bits_to_mb;
-use fsl::protocol::{psr, RetrievalEngine, Session, SessionParams};
+use fsl::metrics::{bits_to_mb, mb};
+use fsl::protocol::{Session, SessionParams};
 use fsl::runtime::Executor;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -69,6 +69,7 @@ fn cmd_train(kv: &HashMap<String, String>) -> Result<()> {
         eval_every: get(kv, "eval_every", 5),
         ..FslConfig::default()
     };
+    cfg.validate()?;
     let exec = Executor::new(&artifacts)?;
     let m = exec.manifest().int("mlp_grad", "params")? as usize;
     let batch = exec.manifest().int("mlp_grad", "batch")? as usize;
@@ -166,7 +167,7 @@ fn eval_mlp(exec: &Executor, params: &[f32], test: &ImageDataset, batch: usize) 
 fn cmd_ssa(kv: &HashMap<String, String>) -> Result<()> {
     let m: u64 = get(kv, "m", 1 << 15);
     let c: f64 = get(kv, "c", 0.1);
-    let n: usize = get(kv, "clients", 1);
+    let n: usize = get(kv, "clients", 1).max(1);
     let k = ((m as f64 * c) as usize).max(1);
     let session = Session::new_full(SessionParams {
         m,
@@ -186,14 +187,16 @@ fn cmd_ssa(kv: &HashMap<String, String>) -> Result<()> {
             (sel, dl)
         })
         .collect();
-    let res =
-        fsl::coordinator::run_ssa_round(&session, &clients, &mut rng, std::time::Duration::ZERO)?;
+    let mut rt = FslRuntimeBuilder::from_session(session.clone())
+        .max_clients(n)
+        .build::<u64>()?;
+    let res = rt.ssa(&clients, &mut rng)?;
     let paper_bits = session.simple.num_bins() * (9 * 130 + 128) + 256;
     println!(
         "gen {:?}  server eval+agg {:?}\nupload/client: measured {:.3} MB, paper model {:.3} MB, trivial SA {:.3} MB",
-        res.gen_time,
-        res.server_time,
-        fsl::metrics::mb(res.client_upload_bytes) / n as f64,
+        res.report.gen_time,
+        res.report.server_time,
+        mb(res.report.client_upload_bytes) / n as f64,
         bits_to_mb(paper_bits),
         bits_to_mb(m as usize * 128 + 128),
     );
@@ -212,36 +215,42 @@ fn cmd_psr(kv: &HashMap<String, String>) -> Result<()> {
     let mut rng = Rng::new(get(kv, "seed", 7));
     let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
     let sels: Vec<Vec<u64>> = (0..n).map(|_| rng.sample_distinct(k, m)).collect();
+    // Serve the whole client batch through one persistent runtime. The
+    // engine width follows the FSL_THREADS bench convention adapted for
+    // two *concurrently* answering servers: unset → serial per server
+    // (reproducible timings), 0 → the co-located default (half the cores
+    // each, so the pair uses the whole machine without oversubscribing),
+    // N → N workers per server, non-numeric → warn and run serial.
+    let threads = match std::env::var("FSL_THREADS") {
+        Err(_) => 1,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(t) => t,
+            Err(_) => {
+                eprintln!("FSL_THREADS={v:?} is not a number; running serial");
+                1
+            }
+        },
+    };
+    let mut rt = FslRuntimeBuilder::from_session(session.clone())
+        .threads(threads)
+        .max_clients(n)
+        .build::<u64>()?;
+    rt.set_weights(weights.clone())?;
     let t0 = Instant::now();
-    let mut ctxs = Vec::with_capacity(n);
-    let mut batches = Vec::with_capacity(n);
-    for sel in &sels {
-        let (ctx, batch) =
-            psr::client_query::<u64>(&session, sel, &mut rng).map_err(|e| anyhow!("{e}"))?;
-        ctxs.push(ctx);
-        batches.push(batch);
-    }
-    let t_gen = t0.elapsed();
-    // Serve the whole client batch per server through the sharded read
-    // engine (set FSL_THREADS to shard; see `protocol::retrieve`).
-    let engine = RetrievalEngine::from_env();
-    let t1 = Instant::now();
-    let keys0: Vec<_> = batches.iter().map(|b| b.server_keys(0)).collect();
-    let keys1: Vec<_> = batches.iter().map(|b| b.server_keys(1)).collect();
-    let a0 = engine.answer_batch_keys(&session, &weights, &keys0);
-    let a1 = engine.answer_batch_keys(&session, &weights, &keys1);
-    let t_ans = t1.elapsed();
-    for ((ctx, sel), (c0, c1)) in ctxs.iter().zip(&sels).zip(a0.iter().zip(&a1)) {
-        let got = psr::client_reconstruct(ctx, session.simple.num_bins(), sel, c0, c1);
+    let res = rt.psr(&sels, &mut rng)?;
+    let t_round = t0.elapsed();
+    for (sel, got) in sels.iter().zip(&res.submodels) {
         for (i, &s) in sel.iter().enumerate() {
             assert_eq!(got[i], weights[s as usize]);
         }
     }
     println!(
-        "PSR m={m} k={k} clients={n}: gen {t_gen:?}, both-server answers {t_ans:?} \
-         ({} workers), upload/client {:.3} MB, verified ✓",
-        engine.threads(),
-        bits_to_mb(batches[0].upload_bits())
+        "PSR m={m} k={k} clients={n}: gen {:?}, server answers {:?} (round {t_round:?}), \
+         upload/client {:.3} MB, download/client {:.3} MB, verified ✓",
+        res.report.gen_time,
+        res.report.server_time,
+        mb(res.report.client_upload_bytes) / n as f64,
+        mb(res.report.client_download_bytes) / n as f64,
     );
     Ok(())
 }

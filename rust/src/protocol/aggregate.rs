@@ -489,7 +489,6 @@ impl<'a, G: Group, S: EvalSource<G>> Worker<'a, G, S> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::crypto::rng::Rng;
@@ -519,7 +518,11 @@ mod tests {
             .collect()
     }
 
+    /// The retained write-path equivalence check against the deprecated
+    /// `ssa::server_aggregate_parallel` wrapper — every other test in this
+    /// module exercises the engine API directly.
     #[test]
+    #[allow(deprecated)]
     fn engine_matches_legacy_over_all_three_input_forms() {
         let s = session(1 << 11, 64, 0);
         let mut rng = Rng::new(500);

@@ -5,8 +5,9 @@
 //! the real encodings (and are cross-checked against the paper's bit
 //! formulas in `metrics`).
 
-use crate::dpf::{CorrectionWord, MasterKeyBatch, PublicPart};
+use crate::dpf::{CorrectionWord, DpfKey, MasterKeyBatch, PublicPart};
 use crate::group::Group;
+use crate::udpf::{Hint, UdpfKey};
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
@@ -120,6 +121,71 @@ pub fn decode_shares<G: Group>(bytes: &[u8]) -> Option<Vec<G>> {
     Some(out)
 }
 
+/// Encode one server's retained U-DPF key set (the round-1 upload of the
+/// fixed-submodel flow, §6 Table 2 row 3): one length-prefixed
+/// [`DpfKey`] encoding per bin/stash slot.
+pub fn encode_udpf_keys<G: Group>(keys: &[UdpfKey<G>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, keys.len() as u32);
+    for k in keys {
+        let bytes = k.inner.to_bytes();
+        put_u32(&mut out, bytes.len() as u32);
+        out.extend_from_slice(&bytes);
+    }
+    out
+}
+
+/// Parse [`encode_udpf_keys`] output.
+pub fn decode_udpf_keys<G: Group>(bytes: &[u8]) -> Option<Vec<UdpfKey<G>>> {
+    let mut off = 0;
+    let count = get_u32(bytes, &mut off)? as usize;
+    // Each key is ≥ 4 bytes (its length prefix); bound before allocating.
+    if count.checked_mul(4)? > bytes.len().saturating_sub(off) {
+        return None;
+    }
+    let mut keys = Vec::with_capacity(count);
+    for _ in 0..count {
+        let len = get_u32(bytes, &mut off)? as usize;
+        let slice = bytes.get(off..off.checked_add(len)?)?;
+        off += len;
+        keys.push(UdpfKey {
+            inner: DpfKey::from_bytes(slice)?,
+        });
+    }
+    Some(keys)
+}
+
+/// Encode one epoch's U-DPF hint vector (one `⌈log 𝔾⌉`-bit output CW per
+/// bin/stash slot, plus the epoch tag) — the `k·l`-bit per-round upload
+/// of §6's U-DPF row.
+pub fn encode_hints<G: Group>(hints: &[Hint<G>]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + hints.len() * (8 + G::byte_len()));
+    put_u32(&mut out, hints.len() as u32);
+    for h in hints {
+        out.extend_from_slice(&h.epoch.to_le_bytes());
+        h.cw_out.encode(&mut out);
+    }
+    out
+}
+
+/// Parse [`encode_hints`] output.
+pub fn decode_hints<G: Group>(bytes: &[u8]) -> Option<Vec<Hint<G>>> {
+    let mut off = 0;
+    let count = get_u32(bytes, &mut off)? as usize;
+    if count.checked_mul(8 + G::byte_len())? > bytes.len().saturating_sub(off) {
+        return None;
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let epoch = u64::from_le_bytes(bytes.get(off..off + 8)?.try_into().ok()?);
+        off += 8;
+        let cw_out = G::decode(bytes.get(off..)?)?;
+        off += G::byte_len();
+        out.push(Hint { epoch, cw_out });
+    }
+    Some(out)
+}
+
 /// Encode a sorted index list (PSU messages, union broadcasts).
 pub fn encode_indices(indices: &[u64]) -> Vec<u8> {
     let mut out = Vec::with_capacity(4 + indices.len() * 8);
@@ -185,6 +251,38 @@ mod tests {
     fn indices_roundtrip() {
         let idx = vec![0u64, 7, 1 << 40];
         assert_eq!(decode_indices(&encode_indices(&idx)).unwrap(), idx);
+    }
+
+    #[test]
+    fn udpf_keys_roundtrip() {
+        let mut rng = Rng::new(81);
+        let keys: Vec<crate::udpf::UdpfKey<u64>> = (0..3)
+            .map(|i| {
+                let (k0, _k1, _st) =
+                    crate::udpf::gen(4 + i, 3, &99u64, rng.gen_seed(), rng.gen_seed());
+                k0
+            })
+            .collect();
+        let enc = encode_udpf_keys(&keys);
+        let dec = decode_udpf_keys::<u64>(&enc).unwrap();
+        assert_eq!(dec.len(), 3);
+        for (a, b) in keys.iter().zip(&dec) {
+            assert_eq!(a.inner.to_bytes(), b.inner.to_bytes());
+        }
+        for cut in [1usize, 5, enc.len() - 1] {
+            assert!(decode_udpf_keys::<u64>(&enc[..cut]).is_none(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn hints_roundtrip() {
+        let hints: Vec<crate::udpf::Hint<u128>> = (0..4)
+            .map(|e| crate::udpf::Hint { epoch: e, cw_out: (e as u128) << 80 })
+            .collect();
+        let enc = encode_hints(&hints);
+        assert_eq!(decode_hints::<u128>(&enc).unwrap(), hints);
+        assert!(decode_hints::<u128>(&enc[..enc.len() - 1]).is_none());
+        assert!(decode_hints::<u64>(&[9, 0, 0, 0, 1]).is_none());
     }
 
     #[test]

@@ -132,7 +132,6 @@ pub fn client_reconstruct<G: Group>(
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::hashing::CuckooParams;
@@ -151,6 +150,28 @@ mod tests {
         (0..m).map(|_| rng.next_u64()).collect()
     }
 
+    /// Server answer through the engine API (what `server_answer` wraps).
+    fn answer<G: Group>(s: &Session, w: &[G], keys: &[DpfKey<G>]) -> Vec<G> {
+        RetrievalEngine::serial().answer_keys(s, w, keys)
+    }
+
+    /// The retained equivalence check against the deprecated
+    /// `server_answer` wrapper — every other test in this module goes
+    /// through the [`RetrievalEngine`] API directly.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_server_answer_matches_the_engine() {
+        let s = session(1 << 10, 32, 2);
+        let w = weights_u64(1 << 10, 89);
+        let mut rng = Rng::new(88);
+        let sel = rng.sample_distinct(32, 1 << 10);
+        let (_ctx, batch) = client_query::<u64>(&s, &sel, &mut rng).unwrap();
+        for party in 0..2u8 {
+            let keys = batch.server_keys(party);
+            assert_eq!(server_answer(&s, &w, &keys), answer(&s, &w, &keys), "party {party}");
+        }
+    }
+
     #[test]
     fn end_to_end_retrieval() {
         let s = session(1 << 12, 64, 0);
@@ -158,8 +179,8 @@ mod tests {
         let mut rng = Rng::new(91);
         let sel = rng.sample_distinct(64, 1 << 12);
         let (ctx, batch) = client_query::<u64>(&s, &sel, &mut rng).unwrap();
-        let a0 = server_answer(&s, &w, &batch.server_keys(0));
-        let a1 = server_answer(&s, &w, &batch.server_keys(1));
+        let a0 = answer(&s, &w, &batch.server_keys(0));
+        let a1 = answer(&s, &w, &batch.server_keys(1));
         let got = client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
         for (i, &sl) in sel.iter().enumerate() {
             assert_eq!(got[i], w[sl as usize], "selection {sl}");
@@ -186,8 +207,8 @@ mod tests {
         let sel = rng.sample_distinct(100, 1 << 10);
         let (ctx, batch) = client_query::<u64>(&s, &sel, &mut rng).unwrap();
         assert!(!ctx.cuckoo.stash().is_empty(), "test needs stash pressure");
-        let a0 = server_answer(&s, &w, &batch.server_keys(0));
-        let a1 = server_answer(&s, &w, &batch.server_keys(1));
+        let a0 = answer(&s, &w, &batch.server_keys(0));
+        let a1 = answer(&s, &w, &batch.server_keys(1));
         let got = client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
         for (i, &sl) in sel.iter().enumerate() {
             assert_eq!(got[i], w[sl as usize]);
@@ -202,7 +223,7 @@ mod tests {
         let mut rng = Rng::new(95);
         let sel = rng.sample_distinct(32, 1 << 10);
         let (ctx, batch) = client_query::<u64>(&s, &sel, &mut rng).unwrap();
-        let a0 = server_answer(&s, &w, &batch.server_keys(0));
+        let a0 = answer(&s, &w, &batch.server_keys(0));
         let hits = sel
             .iter()
             .filter(|&&sl| {
@@ -227,8 +248,8 @@ mod tests {
         let dups: Vec<u64> = sel.iter().copied().collect();
         sel.extend(dups); // every index twice
         let (ctx, batch) = client_query::<u64>(&s, &sel, &mut rng).unwrap();
-        let a0 = server_answer(&s, &w, &batch.server_keys(0));
-        let a1 = server_answer(&s, &w, &batch.server_keys(1));
+        let a0 = answer(&s, &w, &batch.server_keys(0));
+        let a1 = answer(&s, &w, &batch.server_keys(1));
         let got = client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
         for (i, &sl) in sel.iter().enumerate() {
             assert_eq!(got[i], w[sl as usize], "occurrence {i} of {sl}");
@@ -242,8 +263,8 @@ mod tests {
         let w: Vec<u128> = (0..512).map(|_| rng.next_u64() as u128).collect();
         let sel = rng.sample_distinct(16, 512);
         let (ctx, batch) = client_query::<u128>(&s, &sel, &mut rng).unwrap();
-        let a0 = server_answer(&s, &w, &batch.server_keys(0));
-        let a1 = server_answer(&s, &w, &batch.server_keys(1));
+        let a0 = answer(&s, &w, &batch.server_keys(0));
+        let a1 = answer(&s, &w, &batch.server_keys(1));
         let got = client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
         for (i, &sl) in sel.iter().enumerate() {
             assert_eq!(got[i], w[sl as usize]);

@@ -174,12 +174,17 @@ pub fn run_psu(
 /// ([`super::retrieve::RetrievalEngine`]) keeps taking the *global*
 /// `m`-sized weight vector, mapping stash positions back through
 /// [`Session::domain_value`].
+///
+/// One-shot wrapper: a persistent deployment runs the PSU over the wire
+/// and installs the union session on both living server threads in one
+/// call — see `coordinator::FslRuntime::psu_align`.
+#[deprecated(note = "build a coordinator::FslRuntime and call .psu_align(..)")]
 pub fn run_psu_session(
     key: &[u8; 16],
     params: SessionParams,
     client_sets: &[Vec<u64>],
     rng: &mut Rng,
-) -> Session {
+) -> anyhow::Result<Session> {
     let union = run_psu(key, params.m, params.k, client_sets, rng);
     Session::new_union(params, union)
 }
@@ -254,16 +259,16 @@ mod tests {
                 s
             })
             .collect();
-        let session = run_psu_session(
-            &[8u8; 16],
+        let union = run_psu(&[8u8; 16], m, k, &sets, &mut rng);
+        let session = Session::new_union(
             SessionParams {
                 m,
                 k,
                 cuckoo: CuckooParams::default(),
             },
-            &sets,
-            &mut rng,
-        );
+            union,
+        )
+        .unwrap();
         assert!(session.domain_size() < m as usize, "union must shrink the domain");
         let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
         let engine = RetrievalEngine::new(4);

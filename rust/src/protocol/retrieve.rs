@@ -221,7 +221,6 @@ impl<'a, G: Group, S: EvalSource<G>> AnswerWorker<'a, G, S> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::crypto::rng::Rng;
@@ -245,7 +244,11 @@ mod tests {
         (0..m).map(|_| rng.next_u64()).collect()
     }
 
+    /// The retained read-path equivalence check against the deprecated
+    /// `psr::server_answer` wrapper — the other tests in this module
+    /// compare engine widths against the serial engine directly.
     #[test]
+    #[allow(deprecated)]
     fn engine_matches_legacy_over_all_widths() {
         let s = session(1 << 11, 64, 0);
         let w = weights_u64(1 << 11, 700);
@@ -316,7 +319,10 @@ mod tests {
         let engine = RetrievalEngine::new(4);
         let a0 = engine.answer_keys(&s, &w, &batch.server_keys(0));
         let a1 = engine.answer_keys(&s, &w, &batch.server_keys(1));
-        assert_eq!(a0, psr::server_answer(&s, &w, &batch.server_keys(0)));
+        assert_eq!(
+            a0,
+            RetrievalEngine::serial().answer_keys(&s, &w, &batch.server_keys(0))
+        );
         let got = psr::client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
         for (i, &sl) in sel.iter().enumerate() {
             assert_eq!(got[i], w[sl as usize]);
@@ -351,12 +357,12 @@ mod tests {
         let mut rng = Rng::new(707);
         let sel = rng.sample_distinct(4, 8);
         let (ctx, batch) = psr::client_query::<u64>(&s, &sel, &mut rng).unwrap();
-        let legacy0 = psr::server_answer(&s, &w, &batch.server_keys(0));
+        let serial0 = RetrievalEngine::serial().answer_keys(&s, &w, &batch.server_keys(0));
         for t in [1usize, 2, 8, 64] {
             let engine = RetrievalEngine::new(t);
             let a0 = engine.answer_keys(&s, &w, &batch.server_keys(0));
             let a1 = engine.answer_keys(&s, &w, &batch.server_keys(1));
-            assert_eq!(a0, legacy0, "{t} threads");
+            assert_eq!(a0, serial0, "{t} threads");
             let got = psr::client_reconstruct(&ctx, s.simple.num_bins(), &sel, &a0, &a1);
             for (i, &sl) in sel.iter().enumerate() {
                 assert_eq!(got[i], w[sl as usize], "{t} threads");

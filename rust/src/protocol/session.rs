@@ -6,6 +6,7 @@
 //! table over the alignment domain (the full index set `{0..m}`, or the
 //! PSU union).
 
+use anyhow::{anyhow, Result};
 use crate::hashing::{CuckooParams, SimpleTable};
 use std::sync::Arc;
 
@@ -51,19 +52,39 @@ impl Session {
     }
 
     /// Union-domain session (PSU optimisation, §6). `union` must be the
-    /// ascending, deduplicated output of the PSU protocol.
-    pub fn new_union(params: SessionParams, union: Vec<u64>) -> Self {
-        debug_assert!(union.windows(2).all(|w| w[0] < w[1]), "union not sorted");
+    /// ascending, deduplicated output of the PSU protocol, with every
+    /// element inside the model domain `[0, m)`.
+    ///
+    /// Rejects malformed input in release builds too: an unsorted or
+    /// duplicated union silently breaks [`Session::domain_index_of`]'s
+    /// binary search (every later position lookup is wrong), so it is an
+    /// error, not a debug assertion.
+    pub fn new_union(params: SessionParams, union: Vec<u64>) -> Result<Self> {
+        if let Some(w) = union.windows(2).find(|w| w[0] >= w[1]) {
+            return Err(anyhow!(
+                "PSU union must be strictly ascending (sorted, deduplicated): \
+                 found {} followed by {}; sort + dedup the union before building the session",
+                w[0],
+                w[1]
+            ));
+        }
+        if let Some(&last) = union.last().filter(|&&last| last >= params.m) {
+            return Err(anyhow!(
+                "PSU union element {last} is outside the model domain [0, {}): \
+                 the union may only contain global model indices",
+                params.m
+            ));
+        }
         let simple = SimpleTable::build(
             union.iter().copied(),
             params.num_bins(),
             &params.cuckoo,
         );
-        Session {
+        Ok(Session {
             simple: Arc::new(simple),
             domain: Some(Arc::new(union)),
             params,
-        }
+        })
     }
 
     /// Size of the alignment domain (m, or |∪ s^(i)| with PSU).
@@ -132,7 +153,21 @@ mod tests {
         let p = params(1 << 14, 100);
         let full = Session::new_full(p.clone());
         let union: Vec<u64> = (0..(1u64 << 14)).step_by(16).collect();
-        let small = Session::new_union(p, union);
+        let small = Session::new_union(p, union).unwrap();
         assert!(small.theta() <= full.theta());
+    }
+
+    #[test]
+    fn union_session_rejects_malformed_input() {
+        // Unsorted, duplicated, and out-of-domain unions are release-mode
+        // errors with actionable messages, not debug assertions.
+        let unsorted = Session::new_union(params(1 << 10, 8), vec![5, 3, 9]);
+        assert!(unsorted.unwrap_err().to_string().contains("strictly ascending"));
+        let duplicated = Session::new_union(params(1 << 10, 8), vec![3, 3, 9]);
+        assert!(duplicated.unwrap_err().to_string().contains("strictly ascending"));
+        let outside = Session::new_union(params(1 << 10, 8), vec![3, 9, 1 << 10]);
+        assert!(outside.unwrap_err().to_string().contains("outside the model domain"));
+        assert!(Session::new_union(params(1 << 10, 8), vec![3, 9, (1 << 10) - 1]).is_ok());
+        assert!(Session::new_union(params(1 << 10, 8), Vec::new()).is_ok());
     }
 }

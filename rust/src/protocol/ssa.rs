@@ -130,7 +130,6 @@ pub fn reconstruct<G: Group>(share0: &[G], share1: &[G]) -> Vec<G> {
 }
 
 #[cfg(test)]
-#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::hashing::CuckooParams;
@@ -175,8 +174,39 @@ mod tests {
         }
         let serial = server_aggregate(&s, &all0);
         for threads in [2, 3, 8, 64] {
-            assert_eq!(server_aggregate_parallel(&s, &all0, threads), serial);
+            assert_eq!(AggregationEngine::new(threads).aggregate_keys(&s, &all0), serial);
         }
+    }
+
+    /// The retained equivalence check against this module's deprecated
+    /// wrappers (`server_aggregate_into` / `server_aggregate_publics` /
+    /// `server_aggregate_parallel`) — everything else goes through the
+    /// [`AggregationEngine`] API directly.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_match_the_engine() {
+        let s = session(512, 16);
+        let mut rng = Rng::new(107);
+        let sel = rng.sample_distinct(16, 512);
+        let deltas: Vec<u64> = sel.iter().map(|&x| x + 9).collect();
+        let batch = client_update(&s, &sel, &deltas, &mut rng).unwrap();
+        let keys0 = batch.server_keys(0);
+        let engine = AggregationEngine::serial();
+
+        let mut legacy_into = vec![0u64; 512];
+        server_aggregate_into(&s, &keys0, &mut legacy_into);
+        let mut engine_into = vec![0u64; 512];
+        engine.aggregate_client_keys_into(&s, &keys0, &mut engine_into);
+        assert_eq!(legacy_into, engine_into);
+
+        let mut legacy_publics = vec![0u64; 512];
+        server_aggregate_publics(&s, &batch.publics, &batch.msk[0], 0, &mut legacy_publics);
+        assert_eq!(legacy_publics, engine_into);
+
+        assert_eq!(
+            server_aggregate_parallel(&s, &[keys0.clone()], 4),
+            engine.aggregate_keys(&s, &[keys0]),
+        );
     }
 
     #[test]
@@ -245,7 +275,7 @@ mod tests {
             k: 16,
             cuckoo: CuckooParams::default(),
         };
-        let s = Session::new_union(params, union.clone());
+        let s = Session::new_union(params, union.clone()).unwrap();
         let mut rng = Rng::new(103);
         let sel: Vec<u64> = (0..16).map(|i| union[i * 7]).collect();
         let deltas: Vec<u64> = (0..16).map(|i| 5000 + i).collect();

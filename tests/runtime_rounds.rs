@@ -1,0 +1,265 @@
+//! The persistent-runtime contract: one `FslRuntime` serves many rounds
+//! of different types against the same living server threads, with
+//! per-round metering that resets, results bit-identical to the one-shot
+//! deprecated wrappers, and a clean shutdown (no hung threads).
+
+use fsl::coordinator::{FslRuntimeBuilder, KeyMode, RoundKind};
+use fsl::crypto::field::Fp;
+use fsl::crypto::rng::Rng;
+use fsl::hashing::CuckooParams;
+use fsl::protocol::{ssa, Session, SessionParams};
+use std::time::Duration;
+
+fn session(m: u64, k: usize) -> Session {
+    Session::new_full(SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams::default(),
+    })
+}
+
+/// PSR, then SSA, then a second SSA round through one runtime: every
+/// round's payload is bit-identical to the deprecated one-shot wrapper
+/// run from the same rng seed, the per-round reports reset instead of
+/// accumulating, and shutdown joins both server threads.
+#[test]
+#[allow(deprecated)] // equivalence vs the one-shot wrappers is the point
+fn one_runtime_serves_psr_then_ssa_then_ssa_bit_identically() {
+    let s = session(2048, 32);
+    let weights: Vec<u64> = {
+        let mut rng = Rng::new(40);
+        (0..2048).map(|_| rng.next_u64()).collect()
+    };
+    let selections: Vec<Vec<u64>> = {
+        let mut rng = Rng::new(41);
+        (0..3).map(|_| rng.sample_distinct(32, 2048)).collect()
+    };
+    let clients_of = |seed: u64| -> Vec<(Vec<u64>, Vec<u64>)> {
+        let mut rng = Rng::new(seed);
+        selections
+            .iter()
+            .map(|sel| (sel.clone(), sel.iter().map(|&x| x ^ rng.next_u64()).collect()))
+            .collect()
+    };
+    let round_b = clients_of(42);
+    let round_c = clients_of(43);
+
+    let mut rt = FslRuntimeBuilder::from_session(s.clone())
+        .threads(2)
+        .max_clients(3)
+        .build::<u64>()
+        .unwrap();
+    rt.set_weights(weights.clone()).unwrap();
+
+    // Round A: PSR.
+    let psr = rt.psr(&selections, &mut Rng::new(11)).unwrap();
+    let legacy_psr = fsl::coordinator::run_psr_round(
+        &s,
+        &weights,
+        &selections,
+        &mut Rng::new(11),
+        Duration::ZERO,
+    )
+    .unwrap();
+    assert_eq!(psr.submodels, legacy_psr.submodels, "PSR bit-identity");
+    assert_eq!(psr.report.kind, RoundKind::Psr);
+    assert_eq!(psr.report.client_upload_bytes, legacy_psr.client_upload_bytes);
+    assert_eq!(psr.report.client_download_bytes, legacy_psr.client_download_bytes);
+    assert!(psr.report.client_download_bytes > 0);
+
+    // Round B: SSA through the *same* runtime.
+    let ssa_b = rt.ssa(&round_b, &mut Rng::new(12)).unwrap();
+    let legacy_b =
+        fsl::coordinator::run_ssa_round(&s, &round_b, &mut Rng::new(12), Duration::ZERO).unwrap();
+    assert_eq!(ssa_b.delta, legacy_b.delta, "SSA round B bit-identity");
+    assert_eq!(ssa_b.report.kind, RoundKind::Ssa);
+    assert_eq!(ssa_b.report.client_upload_bytes, legacy_b.client_upload_bytes);
+
+    // Round C: a second SSA round; the report must cover only this round.
+    let ssa_c = rt.ssa(&round_c, &mut Rng::new(13)).unwrap();
+    let legacy_c =
+        fsl::coordinator::run_ssa_round(&s, &round_c, &mut Rng::new(13), Duration::ZERO).unwrap();
+    assert_eq!(ssa_c.delta, legacy_c.delta, "SSA round C bit-identity");
+    // Metering resets between rounds: round C's counters equal a fresh
+    // one-shot run (message shapes are data-independent, so equal sizes),
+    // not the running sum of rounds A + B + C.
+    assert_eq!(ssa_c.report.client_upload_bytes, legacy_c.client_upload_bytes);
+    assert_eq!(ssa_c.report.client_upload_bytes, ssa_b.report.client_upload_bytes);
+    assert_eq!(ssa_c.report.client_download_bytes, 0, "SSA downloads nothing");
+    assert_eq!(ssa_c.report.server_exchange_bytes, legacy_c.server_exchange_bytes);
+
+    // Clean shutdown: both server threads join (a hang fails the test
+    // harness; a panicked server surfaces as Err here).
+    rt.shutdown().unwrap();
+}
+
+/// Verified SSA and PSU alignment are reachable through the same builder
+/// API, bit-identical to their deprecated one-shot wrappers, and the
+/// union session installed by `psu_align` keeps serving SSA rounds.
+#[test]
+#[allow(deprecated)] // equivalence vs the one-shot wrappers is the point
+fn verified_and_psu_rounds_match_the_one_shot_wrappers() {
+    // --- Verified SSA (Fp payloads, one malformed client) ----------------
+    let s = session(512, 16);
+    let mut rng = Rng::new(50);
+    let mut uploads = Vec::new();
+    for _ in 0..2 {
+        let sel = rng.sample_distinct(16, 512);
+        let dl: Vec<Fp> = sel.iter().map(|&x| Fp::new(x + 1)).collect();
+        uploads.push(ssa::client_update(&s, &sel, &dl, &mut rng).unwrap());
+    }
+    let mut evil = uploads[1].clone();
+    evil.publics.pop(); // wrong key count ⇒ must be rejected
+    uploads.push(evil);
+
+    let mut rt = FslRuntimeBuilder::from_session(s.clone())
+        .max_clients(3)
+        .build::<Fp>()
+        .unwrap();
+    let got = rt.verified_ssa(uploads.clone(), 51).unwrap();
+    let legacy = fsl::coordinator::run_verified_ssa_round(&s, &uploads, 51).unwrap();
+    assert_eq!(got.delta, legacy.delta, "verified delta bit-identity");
+    assert_eq!(got.rejected, legacy.rejected);
+    assert_eq!(got.rejected, vec![2]);
+    assert_eq!(got.report.kind, RoundKind::VerifiedSsa);
+    rt.shutdown().unwrap();
+
+    // --- PSU alignment ---------------------------------------------------
+    let m = 4096u64;
+    let k = 16usize;
+    let params = SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams::default(),
+    };
+    let sets: Vec<Vec<u64>> = {
+        let mut rng = Rng::new(52);
+        (0..4)
+            .map(|_| {
+                let mut v = rng.sample_distinct(12, 256); // clustered region
+                v.sort_unstable();
+                v
+            })
+            .collect()
+    };
+    let key = [7u8; 16];
+    let mut rt = FslRuntimeBuilder::new(params.clone())
+        .max_clients(4)
+        .build::<u64>()
+        .unwrap();
+    let psu = rt.psu_align(&key, &sets, &mut Rng::new(53)).unwrap();
+    let legacy_session =
+        fsl::protocol::psu::run_psu_session(&key, params, &sets, &mut Rng::new(53)).unwrap();
+    assert_eq!(psu.report.kind, RoundKind::PsuAlign);
+    assert_eq!(
+        rt.session().domain.as_deref(),
+        legacy_session.domain.as_deref(),
+        "union domain bit-identity"
+    );
+    assert_eq!(rt.session().theta(), legacy_session.theta());
+    assert_eq!(psu.union_len, rt.session().domain_size());
+
+    // The installed union session keeps serving rounds.
+    let clients: Vec<(Vec<u64>, Vec<u64>)> = sets
+        .iter()
+        .map(|s| (s.clone(), s.iter().map(|&x| x + 5).collect()))
+        .collect();
+    let out = rt.ssa(&clients, &mut Rng::new(54)).unwrap();
+    for (pos, delta) in out.delta.iter().enumerate() {
+        let idx = rt.session().domain_value(pos);
+        let expect: u64 = clients
+            .iter()
+            .flat_map(|(sel, dl)| {
+                sel.iter().zip(dl).filter(|(s, _)| **s == idx).map(|(_, d)| *d)
+            })
+            .fold(0u64, |a, b| a.wrapping_add(b));
+        assert_eq!(*delta, expect, "union position {pos}");
+    }
+    rt.shutdown().unwrap();
+}
+
+/// U-DPF key mode: the first round ships full retained key sets, later
+/// rounds ship only hints — far smaller on the wire — and every epoch
+/// reconstructs exactly. Changing the client set mid-task is an error.
+#[test]
+fn udpf_key_mode_amortises_uploads_and_stays_lossless() {
+    let s = session(512, 16);
+    let selections: Vec<Vec<u64>> = {
+        let mut rng = Rng::new(60);
+        (0..2).map(|_| rng.sample_distinct(16, 512)).collect()
+    };
+    let deltas_at = |epoch: u64| -> Vec<(Vec<u64>, Vec<u64>)> {
+        selections
+            .iter()
+            .map(|sel| (sel.clone(), sel.iter().map(|&x| x * 3 + epoch + 1).collect()))
+            .collect()
+    };
+    let mut rt = FslRuntimeBuilder::from_session(s.clone())
+        .key_mode(KeyMode::Udpf)
+        .max_clients(2)
+        .build::<u64>()
+        .unwrap();
+    let mut rng = Rng::new(61);
+    let mut setup_bytes = 0;
+    for epoch in 0..3u64 {
+        let clients = deltas_at(epoch);
+        let out = rt.ssa(&clients, &mut rng).unwrap();
+        let mut expected = vec![0u64; 512];
+        for (sel, dl) in &clients {
+            for (&i, &d) in sel.iter().zip(dl) {
+                expected[i as usize] = expected[i as usize].wrapping_add(d);
+            }
+        }
+        assert_eq!(out.delta, expected, "epoch {epoch} lossless");
+        if epoch == 0 {
+            setup_bytes = out.report.client_upload_bytes;
+        } else {
+            assert!(
+                out.report.client_upload_bytes * 4 < setup_bytes,
+                "epoch {epoch}: hint upload {} should be ≪ setup upload {setup_bytes}",
+                out.report.client_upload_bytes
+            );
+        }
+    }
+    // The fixed-submodel contract: the client set cannot change.
+    let err = rt
+        .ssa(&deltas_at(9)[..1], &mut rng)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("fixed"), "{err}");
+    rt.shutdown().unwrap();
+}
+
+/// `from_config` validates before any thread is spawned.
+#[test]
+fn builder_from_config_rejects_invalid_configs() {
+    use fsl::coordinator::FslConfig;
+    let err = FslRuntimeBuilder::from_config(
+        &FslConfig {
+            compression: 0.0,
+            ..FslConfig::default()
+        },
+        1024,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("compression"), "{err}");
+    let err = FslRuntimeBuilder::from_config(
+        &FslConfig {
+            participation: -1.0,
+            ..FslConfig::default()
+        },
+        1024,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("participation"), "{err}");
+    let cfg = FslConfig::default();
+    let rt = FslRuntimeBuilder::from_config(&cfg, 1024)
+        .unwrap()
+        .build::<u64>()
+        .unwrap();
+    assert_eq!(rt.session().params.k, 102); // 1024 · 0.1, rounded
+    assert_eq!(rt.max_clients(), cfg.participants());
+    rt.shutdown().unwrap();
+}

@@ -1,0 +1,160 @@
+//! Transport overhead: the same PSR + SSA rounds over the in-process
+//! channel transport vs loopback TCP (two real server threads behind
+//! real sockets, as `fsl serve` runs them).
+//!
+//! Both drivers consume identical rng streams, so the retrieved
+//! submodels and the reconstructed delta are asserted bit-identical —
+//! the transport must never change a result, only its cost. The
+//! datapoint lands in `BENCH_transport.json` with both transports'
+//! per-party bytes (client upload/download, `S_0 ↔ S_1` exchange) and
+//! wall times; TCP bytes include its 7-byte-per-message framing, which
+//! is the honest wire truth.
+//!
+//! `FSL_FULL=1` widens the grid; `FSL_THREADS` follows the shared bench
+//! convention (unset → serial engines, so timings are reproducible).
+
+use fsl::coordinator::{serve, FslRuntime, FslRuntimeBuilder, RoundReport, ServeOptions};
+use fsl::crypto::rng::Rng;
+use fsl::hashing::CuckooParams;
+use fsl::net::transport::tcp::{TcpAcceptor, TcpOptions};
+use fsl::protocol::{Session, SessionParams};
+use std::net::TcpListener;
+use std::time::Duration;
+
+fn spawn_server(party: u8, threads: usize) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || {
+        let acceptor = TcpAcceptor::new(listener, TcpOptions::default());
+        let mut opts = ServeOptions::new(party);
+        opts.threads = threads;
+        serve::<u64>(&acceptor, &opts).expect("serve");
+    });
+    (addr, handle)
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+fn report_json(tag: &str, r: &RoundReport) -> String {
+    format!(
+        "\"{tag}_wall_ms\":{:.3},\"{tag}_client_upload_bytes\":{},\
+         \"{tag}_client_download_bytes\":{},\"{tag}_server_exchange_bytes\":{}",
+        ms(r.wall_time),
+        r.client_upload_bytes,
+        r.client_download_bytes,
+        r.server_exchange_bytes
+    )
+}
+
+fn main() {
+    let full = std::env::var("FSL_FULL").is_ok();
+    let m: u64 = if full { 1 << 16 } else { 1 << 13 };
+    let k: usize = if full { 512 } else { 128 };
+    let clients: usize = 3;
+    let threads: usize = std::env::var("FSL_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+
+    let session = Session::new_full(SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams::default().with_seed(0x7C9),
+    });
+    let weights: Vec<u64> = {
+        let mut rng = Rng::new(0x5EED);
+        (0..m).map(|_| rng.next_u64()).collect()
+    };
+    println!("# transport overhead: m={m}, k={k}, {clients} clients, {threads} engine workers");
+
+    // One PSR + one SSA round through a given runtime; identical rng
+    // streams make the results transport-independent by construction.
+    let drive = |mut rt: FslRuntime<u64>| {
+        let mut rng = Rng::new(0xFEED);
+        rt.set_weights(weights.clone()).expect("set_weights");
+        let sels: Vec<Vec<u64>> = (0..clients).map(|_| rng.sample_distinct(k, m)).collect();
+        let psr = rt.psr(&sels, &mut rng).expect("psr round");
+        let updates: Vec<(Vec<u64>, Vec<u64>)> = (0..clients)
+            .map(|c| {
+                let sel = rng.sample_distinct(k, m);
+                let dl = sel.iter().map(|&x| x * 5 + c as u64 + 1).collect();
+                (sel, dl)
+            })
+            .collect();
+        let ssa = rt.ssa(&updates, &mut rng).expect("ssa round");
+        rt.shutdown().expect("shutdown");
+        (psr, ssa)
+    };
+
+    // In-process transport.
+    let rt = FslRuntimeBuilder::from_session(session.clone())
+        .threads(threads)
+        .max_clients(clients)
+        .build::<u64>()
+        .expect("in-proc build");
+    let (psr_inproc, ssa_inproc) = drive(rt);
+
+    // Loopback TCP: two real server threads behind real sockets.
+    let (addr0, h0) = spawn_server(0, threads);
+    let (addr1, h1) = spawn_server(1, threads);
+    let rt = FslRuntimeBuilder::from_session(session.clone())
+        .max_clients(clients)
+        .connect::<u64>(&addr0, &addr1)
+        .expect("tcp connect");
+    let (psr_tcp, ssa_tcp) = drive(rt);
+    h0.join().expect("S0 thread");
+    h1.join().expect("S1 thread");
+
+    // The transport must not change results.
+    assert_eq!(
+        psr_inproc.submodels, psr_tcp.submodels,
+        "PSR results must be bit-identical across transports"
+    );
+    assert_eq!(
+        ssa_inproc.delta, ssa_tcp.delta,
+        "SSA delta must be bit-identical across transports"
+    );
+
+    println!(
+        "transport,round,wall_ms,client_upload_bytes,client_download_bytes,server_exchange_bytes"
+    );
+    for (transport, r) in [
+        ("in-proc", &psr_inproc.report),
+        ("tcp", &psr_tcp.report),
+    ] {
+        println!(
+            "{transport},psr,{:.3},{},{},{}",
+            ms(r.wall_time),
+            r.client_upload_bytes,
+            r.client_download_bytes,
+            r.server_exchange_bytes
+        );
+    }
+    for (transport, r) in [
+        ("in-proc", &ssa_inproc.report),
+        ("tcp", &ssa_tcp.report),
+    ] {
+        println!(
+            "{transport},ssa,{:.3},{},{},{}",
+            ms(r.wall_time),
+            r.client_upload_bytes,
+            r.client_download_bytes,
+            r.server_exchange_bytes
+        );
+    }
+
+    let json = format!(
+        "{{\"bench\":\"transport_overhead\",\"m\":{m},\"k\":{k},\"clients\":{clients},\
+         \"workers\":{threads},{},{},{},{}}}\n",
+        report_json("inproc_psr", &psr_inproc.report),
+        report_json("tcp_psr", &psr_tcp.report),
+        report_json("inproc_ssa", &ssa_inproc.report),
+        report_json("tcp_ssa", &ssa_tcp.report),
+    );
+    match std::fs::write("BENCH_transport.json", &json) {
+        Ok(()) => println!("# wrote BENCH_transport.json"),
+        Err(e) => eprintln!("# could not write BENCH_transport.json: {e}"),
+    }
+}

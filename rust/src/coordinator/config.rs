@@ -28,6 +28,10 @@ pub struct FslConfig {
     pub seed: u64,
     /// Simulated one-way channel latency in microseconds (paper: ≈3ms).
     pub latency_us: u64,
+    /// Simulated link bandwidth in bytes/second (0 = unlimited). With a
+    /// finite value every simulated link also charges transmit time per
+    /// byte, so round wall times stay honest for large payloads.
+    pub bandwidth_bps: u64,
     /// Evaluate test accuracy every this many rounds (0 = never).
     pub eval_every: usize,
     /// Server aggregation workers per server (0 = default: half the
@@ -51,6 +55,7 @@ impl Default for FslConfig {
             cuckoo: CuckooParams::default(),
             seed: 42,
             latency_us: 0,
+            bandwidth_bps: 0,
             eval_every: 10,
             threads: 0,
         }

@@ -13,18 +13,28 @@
 //! any type (`psr` / `ssa` / `verified_ssa` / `psu_align`), each
 //! returning a uniform [`RoundReport`]. The old per-call `run_*_round`
 //! free functions survive as `#[deprecated]` one-shot wrappers.
+//!
+//! The same runtime also drives *standalone* servers over framed TCP:
+//! [`serve()`]/[`serve_addr`] host one `S_0` or `S_1` as its own OS
+//! process (the `fsl serve` subcommand), and
+//! [`FslRuntimeBuilder::connect`] returns a runtime whose rounds run
+//! against two such processes — same protocol code, different
+//! [`crate::net::transport::Transport`].
 
 mod client;
 mod config;
 mod psr_round;
 mod round;
 mod runtime;
+mod serve;
 mod server;
 mod topk;
 mod verified;
+mod wire;
 
 pub use client::{local_train, sparse_delta, ClientRoundOutput};
 pub use config::FslConfig;
+pub use serve::{serve, serve_addr, ServeOptions};
 #[allow(deprecated)]
 pub use psr_round::{run_psr_round, run_psr_round_with, PsrRoundResult};
 pub use round::{run_fsl_training, run_plain_training, RoundStats, TrainingLog};

@@ -26,21 +26,37 @@
 //! one returns the same [`RoundReport`] (per-party bytes, gen/server/wall
 //! times) instead of four differently-shaped result structs. Client
 //! payloads travel the existing [`msg`] wire encodings over the metered
-//! channels; the control plane (round commands, session/weight installs)
-//! is a typed in-process channel per server, which is the piece a real
-//! deployment would replace with an RPC frame.
+//! links; the control plane (round commands, session/weight installs) is
+//! the typed [`wire::ServerCmd`]/[`wire::ServerReply`] protocol.
+//!
+//! **Transports.** Every link is a [`Transport`] behind the runtime, so
+//! the same round drivers and the same server command loop run over two
+//! deployments:
+//!
+//! * [`FslRuntimeBuilder::build`] — the historical single process: both
+//!   servers as threads, links as latency/bandwidth-simulating in-process
+//!   channels, control as typed `mpsc` (no serialisation — `Arc` payloads
+//!   are shared, keeping this path bit-identical to the pre-transport
+//!   code).
+//! * [`FslRuntimeBuilder::connect`] — two standalone server processes
+//!   (`fsl serve`, [`super::serve`]) over framed TCP: control commands
+//!   are wire-encoded ([`wire`]), data links are per-client sockets, and
+//!   the `S_0 ↔ S_1` exchange runs over a real peer connection.
 //!
 //! The old `run_*` functions survive as thin `#[deprecated]` one-shot
 //! wrappers: build a runtime, run one round, drop it.
 
 use super::config::FslConfig;
-use super::verified::{self, VerifiedSsaResult};
+use super::verified;
+use super::wire::{self, ServerCmd, ServerReply};
 use crate::crypto::field::Fp;
 use crate::crypto::rng::Rng;
 use crate::dpf::MasterKeyBatch;
 use crate::group::Group;
 use crate::metrics::CommMeter;
-use crate::net;
+use crate::net::{self, LinkProfile};
+use crate::net::transport::tcp::{TcpOptions, TcpTransport};
+use crate::net::transport::{BoxTransport, Hello, InProc, Role, Transport};
 use crate::protocol::aggregate::uploads_of;
 use crate::protocol::{
     msg, psr, psu, ssa, udpf_ssa, AggregationEngine, RetrievalEngine, Session, SessionParams,
@@ -52,10 +68,22 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// How long the driver waits for a server reply before declaring the
-/// runtime wedged. Generous: a round at paper scale (m ≈ 2²⁵) finishes in
-/// seconds; only a protocol bug hits this.
+/// Default for how long the driver waits for a server reply before
+/// declaring the runtime wedged (override with
+/// [`FslRuntimeBuilder::reply_timeout`]). Generous: a round at paper
+/// scale (m ≈ 2²⁵) finishes in seconds; only a protocol bug or a wedged
+/// remote peer hits this.
 const REPLY_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Default bound on establishing one TCP connection's handshake in
+/// [`FslRuntimeBuilder::connect`].
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A client's two data links, transport-agnostic.
+struct Links {
+    to_s0: BoxTransport,
+    to_s1: BoxTransport,
+}
 
 /// Which round a [`RoundReport`] describes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +96,19 @@ pub enum RoundKind {
     VerifiedSsa,
     /// PSU domain alignment (installs a union session).
     PsuAlign,
+}
+
+impl RoundKind {
+    /// Stable machine-readable name (the `kind` field of
+    /// [`RoundReport::to_json`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoundKind::Psr => "psr",
+            RoundKind::Ssa => "ssa",
+            RoundKind::VerifiedSsa => "verified_ssa",
+            RoundKind::PsuAlign => "psu_align",
+        }
+    }
 }
 
 /// Uniform per-round metering — the one result shape every round method
@@ -93,6 +134,28 @@ pub struct RoundReport {
     pub server_time: Duration,
     /// End-to-end round wall-clock as seen by the driver.
     pub wall_time: Duration,
+}
+
+impl RoundReport {
+    /// One-line JSON rendering for machine consumption (the CLI's
+    /// `--json` mode, multi-process CI assertions, dashboards). Times are
+    /// fractional milliseconds; byte fields are exact.
+    pub fn to_json(&self) -> String {
+        let ms = |d: Duration| d.as_secs_f64() * 1e3;
+        format!(
+            "{{\"kind\":\"{}\",\"clients\":{},\"client_upload_bytes\":{},\
+             \"client_download_bytes\":{},\"server_exchange_bytes\":{},\
+             \"gen_ms\":{:.3},\"server_ms\":{:.3},\"wall_ms\":{:.3}}}",
+            self.kind.as_str(),
+            self.clients,
+            self.client_upload_bytes,
+            self.client_download_bytes,
+            self.server_exchange_bytes,
+            ms(self.gen_time),
+            ms(self.server_time),
+            ms(self.wall_time),
+        )
+    }
 }
 
 /// A PSR round's payload + metering.
@@ -161,31 +224,35 @@ enum SessionSpec {
 pub struct FslRuntimeBuilder {
     spec: SessionSpec,
     latency: Duration,
+    bandwidth: u64,
     threads: usize,
     max_clients: usize,
     key_mode: KeyMode,
+    reply_timeout: Duration,
+    connect_timeout: Duration,
 }
 
 impl FslRuntimeBuilder {
     /// Full-domain runtime over `params`.
     pub fn new(params: SessionParams) -> Self {
-        FslRuntimeBuilder {
-            spec: SessionSpec::Full(params),
-            latency: Duration::ZERO,
-            threads: 0,
-            max_clients: 1,
-            key_mode: KeyMode::Fresh,
-        }
+        Self::with_spec(SessionSpec::Full(params))
     }
 
     /// Adopt an existing session (full-domain or PSU-union) as-is.
     pub fn from_session(session: Session) -> Self {
+        Self::with_spec(SessionSpec::Prebuilt(session))
+    }
+
+    fn with_spec(spec: SessionSpec) -> Self {
         FslRuntimeBuilder {
-            spec: SessionSpec::Prebuilt(session),
+            spec,
             latency: Duration::ZERO,
+            bandwidth: 0,
             threads: 0,
             max_clients: 1,
             key_mode: KeyMode::Fresh,
+            reply_timeout: REPLY_TIMEOUT,
+            connect_timeout: CONNECT_TIMEOUT,
         }
     }
 
@@ -206,6 +273,7 @@ impl FslRuntimeBuilder {
         };
         Ok(Self::new(params)
             .latency(Duration::from_micros(cfg.latency_us))
+            .bandwidth(cfg.bandwidth_bps)
             .threads(cfg.threads)
             .max_clients(cfg.participants()))
     }
@@ -222,8 +290,31 @@ impl FslRuntimeBuilder {
     }
 
     /// Simulated one-way channel latency (paper §7: ≈3 ms LAN).
+    /// In-process only — real TCP links have real latency.
     pub fn latency(mut self, latency: Duration) -> Self {
         self.latency = latency;
+        self
+    }
+
+    /// Simulated link bandwidth in bytes/second (`0` = unlimited, the
+    /// default). With a finite bandwidth every simulated link charges
+    /// transmit time per byte, so [`RoundReport`] wall times stay honest
+    /// for large payloads. In-process only, like [`Self::latency`].
+    pub fn bandwidth(mut self, bytes_per_sec: u64) -> Self {
+        self.bandwidth = bytes_per_sec;
+        self
+    }
+
+    /// How long round drivers wait for a server reply (or a data-link
+    /// message) before declaring the runtime wedged and poisoning it.
+    pub fn reply_timeout(mut self, timeout: Duration) -> Self {
+        self.reply_timeout = timeout;
+        self
+    }
+
+    /// Bound on each TCP connection handshake in [`Self::connect`].
+    pub fn connect_timeout(mut self, timeout: Duration) -> Self {
+        self.connect_timeout = timeout;
         self
     }
 
@@ -249,6 +340,15 @@ impl FslRuntimeBuilder {
         self
     }
 
+    /// Build the session this runtime starts with.
+    fn make_session(spec: SessionSpec) -> Result<Session> {
+        Ok(match spec {
+            SessionSpec::Full(params) => Session::new_full(params),
+            SessionSpec::Union(params, union) => Session::new_union(params, union)?,
+            SessionSpec::Prebuilt(s) => s,
+        })
+    }
+
     /// Spawn the two server threads and hand back the living runtime.
     /// `G` fixes the payload group for the runtime's lifetime (scalar
     /// `u64`/`u128`, `Fp` for verified rounds, `MegaElem` for §6 rows).
@@ -257,20 +357,18 @@ impl FslRuntimeBuilder {
             self.max_clients >= 1,
             "runtime capacity must be at least one client (got max_clients = 0)"
         );
-        let session = Arc::new(match self.spec {
-            SessionSpec::Full(params) => Session::new_full(params),
-            SessionSpec::Union(params, union) => Session::new_union(params, union)?,
-            SessionSpec::Prebuilt(s) => s,
-        });
+        let session = Arc::new(Self::make_session(self.spec)?);
+        let profile = LinkProfile {
+            latency: self.latency,
+            bandwidth: self.bandwidth,
+        };
         let (client_links, server_sides, (inter0, inter1)) =
-            net::topology(self.max_clients, self.latency);
+            net::topology_profile(self.max_clients, profile);
         let (eps0, eps1): (Vec<_>, Vec<_>) = server_sides.into_iter().unzip();
-        let inter_meters = [inter0.meter.clone(), inter1.meter.clone()];
+        let inter_meters = vec![inter0.meter.clone(), inter1.meter.clone()];
         let sharding = Sharding::from_config(self.threads);
 
-        let mut cmd_tx = Vec::with_capacity(2);
-        let mut rep_rx = Vec::with_capacity(2);
-        let mut handles = Vec::with_capacity(2);
+        let mut server_links = Vec::with_capacity(2);
         for (party, eps, inter) in [(0u8, eps0, inter0), (1u8, eps1, inter1)] {
             let (ctx, crx) = channel::<ServerCmd<G>>();
             let (rtx, rrx) = channel::<ServerReply<G>>();
@@ -279,27 +377,39 @@ impl FslRuntimeBuilder {
                 session: session.clone(),
                 agg: AggregationEngine::with_sharding(sharding),
                 ret: RetrievalEngine::with_sharding(sharding),
-                eps,
-                inter,
+                eps: eps
+                    .into_iter()
+                    .map(|e| Box::new(InProc(e)) as BoxTransport)
+                    .collect(),
+                inter: Some(Box::new(InProc(inter)) as BoxTransport),
                 weights: None,
                 udpf: Vec::new(),
+                timeout: self.reply_timeout,
             };
             let handle = std::thread::Builder::new()
                 .name(format!("fsl-server-{party}"))
                 .spawn(move || server.run(crx, rtx))
                 .map_err(|e| anyhow!("spawning server S{party}: {e}"))?;
-            cmd_tx.push(ctx);
-            rep_rx.push(rrx);
-            handles.push(handle);
+            server_links.push(ServerLink::Local {
+                cmd_tx: ctx,
+                rep_rx: rrx,
+                handle: Some(handle),
+            });
         }
+        let links = client_links
+            .into_iter()
+            .map(|cl| Links {
+                to_s0: Box::new(InProc(cl.to_s0)) as BoxTransport,
+                to_s1: Box::new(InProc(cl.to_s1)) as BoxTransport,
+            })
+            .collect();
         Ok(FslRuntime {
             session,
             key_mode: self.key_mode,
-            client_links,
+            links,
             inter_meters,
-            cmd_tx,
-            rep_rx,
-            handles,
+            server_links,
+            reply_timeout: self.reply_timeout,
             weights_len: None,
             udpf_clients: Vec::new(),
             udpf_selections: Vec::new(),
@@ -307,20 +417,178 @@ impl FslRuntimeBuilder {
             poisoned: None,
         })
     }
+
+    /// Connect to two standalone servers (`fsl serve`, hosted by
+    /// [`crate::coordinator::serve_addr`]) listening at `s0_addr` /
+    /// `s1_addr`, and hand back a runtime whose rounds run over framed
+    /// TCP across three OS processes.
+    ///
+    /// Connection order matters and is handled here: the control channel
+    /// and `max_clients` data links are dialled to each server (every
+    /// handshake individually acked), then `S_1` is told to dial the
+    /// `S_0 ↔ S_1` peer link at `s0_addr`, and finally the session is
+    /// installed on both servers. The servers adopt this builder's
+    /// session, key mode, and client capacity; `latency`/`bandwidth`
+    /// simulation does not apply (real sockets have real latency), and
+    /// neither does [`Self::threads`] — each `serve` process sets its
+    /// own engine width at startup (`fsl serve threads=N`).
+    ///
+    /// The runtime owns the deployment: dropping it (or calling
+    /// [`FslRuntime::shutdown`]) tells both server processes to exit.
+    pub fn connect<G: Group>(self, s0_addr: &str, s1_addr: &str) -> Result<FslRuntime<G>> {
+        ensure!(
+            self.max_clients >= 1,
+            "runtime capacity must be at least one client (got max_clients = 0)"
+        );
+        let session = Arc::new(Self::make_session(self.spec)?);
+        let opts = TcpOptions {
+            handshake_timeout: self.connect_timeout,
+            write_timeout: Some(self.reply_timeout),
+        };
+        let n = self.max_clients;
+        let group = std::any::type_name::<G>().to_string();
+        let mut per_party: Vec<(BoxTransport, Vec<BoxTransport>)> = Vec::with_capacity(2);
+        for (party, addr) in [(0u8, s0_addr), (1u8, s1_addr)] {
+            let hello = Hello {
+                party,
+                role: Role::Control {
+                    max_clients: n as u32,
+                    m: session.params.m,
+                    k: session.params.k as u64,
+                    group: group.clone(),
+                },
+            };
+            let ctrl = TcpTransport::connect(addr, &hello, &opts)
+                .map_err(|e| e.context(format!("control channel to S{party} at {addr}")))?;
+            let mut eps: Vec<BoxTransport> = Vec::with_capacity(n);
+            for id in 0..n {
+                let link = TcpTransport::connect(
+                    addr,
+                    &Hello {
+                        party,
+                        role: Role::Client { id: id as u32 },
+                    },
+                    &opts,
+                )
+                .map_err(|e| e.context(format!("client link {id} to S{party} at {addr}")))?;
+                eps.push(Box::new(link) as BoxTransport);
+            }
+            per_party.push((Box::new(ctrl) as BoxTransport, eps));
+        }
+        let (ctrl1, eps1) = per_party.pop().expect("two parties");
+        let (ctrl0, eps0) = per_party.pop().expect("two parties");
+        let links = eps0
+            .into_iter()
+            .zip(eps1)
+            .map(|(to_s0, to_s1)| Links { to_s0, to_s1 })
+            .collect();
+        let mut rt = FslRuntime {
+            session: session.clone(),
+            key_mode: self.key_mode,
+            links,
+            // Remote: the S_0 ↔ S_1 link lives between the two server
+            // processes — its bytes come back in the round replies.
+            inter_meters: Vec::new(),
+            server_links: vec![
+                ServerLink::Remote { ctrl: ctrl0 },
+                ServerLink::Remote { ctrl: ctrl1 },
+            ],
+            reply_timeout: self.reply_timeout,
+            weights_len: None,
+            udpf_clients: Vec::new(),
+            udpf_selections: Vec::new(),
+            udpf_epoch: 0,
+            poisoned: None,
+        };
+        // S_1 first: S_0 is still blocked accepting the peer link, which
+        // S_1 dials on DialPeer. Only then does S_0's command loop start.
+        rt.command(1, ServerCmd::SetSession(session.clone()))?;
+        rt.expect_ack(1, "installing the session on S1")?;
+        rt.command(
+            1,
+            ServerCmd::DialPeer {
+                addr: s0_addr.to_string(),
+            },
+        )?;
+        rt.expect_ack(1, "establishing the S0<->S1 peer link")?;
+        rt.command(0, ServerCmd::SetSession(session))?;
+        rt.expect_ack(0, "installing the session on S0")?;
+        Ok(rt)
+    }
+}
+
+/// The driver's handle to one server: either a spawned thread driven
+/// over typed channels (no serialisation — `Arc` payloads shared), or a
+/// remote process driven over a wire-encoded control transport.
+enum ServerLink<G: Group> {
+    Local {
+        cmd_tx: Sender<ServerCmd<G>>,
+        rep_rx: Receiver<ServerReply<G>>,
+        handle: Option<JoinHandle<()>>,
+    },
+    Remote {
+        ctrl: BoxTransport,
+    },
+}
+
+impl<G: Group> ServerLink<G> {
+    fn command(&self, party: usize, cmd: ServerCmd<G>) -> Result<()> {
+        match self {
+            ServerLink::Local { cmd_tx, .. } => cmd_tx
+                .send(cmd)
+                .map_err(|_| anyhow!("server S{party} has shut down")),
+            ServerLink::Remote { ctrl } => ctrl
+                .send(wire::encode_cmd(&cmd))
+                .map_err(|e| e.context(format!("sending a command to server S{party}"))),
+        }
+    }
+
+    fn reply(&self, party: usize, timeout: Duration) -> Result<ServerReply<G>> {
+        match self {
+            ServerLink::Local { rep_rx, .. } => rep_rx
+                .recv_timeout(timeout)
+                .map_err(|e| anyhow!("no reply from server S{party}: {e}")),
+            ServerLink::Remote { ctrl } => {
+                let bytes = ctrl
+                    .recv_timeout(timeout)
+                    .map_err(|e| e.context(format!("no reply from server S{party}")))?;
+                wire::decode_reply(&bytes)
+            }
+        }
+    }
+
+    /// Ask the server to exit. Returns true iff a *local* server thread
+    /// panicked (a remote server exits in its own process; transport
+    /// errors on a best-effort shutdown send are ignored).
+    fn shutdown(&mut self) -> bool {
+        match self {
+            ServerLink::Local { cmd_tx, handle, .. } => {
+                let _ = cmd_tx.send(ServerCmd::Shutdown);
+                handle.take().map(|h| h.join().is_err()).unwrap_or(false)
+            }
+            ServerLink::Remote { ctrl } => {
+                let _ = ctrl.send(wire::encode_cmd::<G>(&ServerCmd::Shutdown));
+                false
+            }
+        }
+    }
 }
 
 /// A persistent two-server FSL deployment. Construct through
 /// [`FslRuntimeBuilder`]; round methods may be called any number of
-/// times, in any order, against the same living server threads. Dropping
-/// the runtime shuts both servers down and joins them.
+/// times, in any order, against the same living servers — in-process
+/// threads ([`FslRuntimeBuilder::build`]) or standalone TCP processes
+/// ([`FslRuntimeBuilder::connect`]). Dropping the runtime shuts both
+/// servers down (and joins local threads).
 pub struct FslRuntime<G: Group> {
     session: Arc<Session>,
     key_mode: KeyMode,
-    client_links: Vec<net::ClientLinks>,
-    inter_meters: [Arc<CommMeter>; 2],
-    cmd_tx: Vec<Sender<ServerCmd<G>>>,
-    rep_rx: Vec<Receiver<ServerReply<G>>>,
-    handles: Vec<JoinHandle<()>>,
+    links: Vec<Links>,
+    /// In-process `S_0 ↔ S_1` meters; empty against remote servers
+    /// (whose exchange bytes come back in round replies).
+    inter_meters: Vec<Arc<CommMeter>>,
+    server_links: Vec<ServerLink<G>>,
+    reply_timeout: Duration,
     /// Driver-side record of the installed weight vector length (the
     /// vectors themselves live on the servers).
     weights_len: Option<usize>,
@@ -344,7 +612,7 @@ impl<G: Group> FslRuntime<G> {
 
     /// Client capacity the topology was built for.
     pub fn max_clients(&self) -> usize {
-        self.client_links.len()
+        self.links.len()
     }
 
     /// Install the servers' weight vector (the PSR database), indexed by
@@ -399,31 +667,32 @@ impl<G: Group> FslRuntime<G> {
         }
         let gen_time = t_gen.elapsed();
 
-        self.command_both(|| ServerCmd::Psr { n })?;
+        self.command_both(ServerCmd::Psr { n })?;
         // From here on the servers are mid-round: any failure may leave
         // the reply/data streams desynchronised, so errors poison.
+        let timeout = self.reply_timeout;
         let exchanged: Result<Vec<Vec<G>>> = (|| {
             // PSR sends full key material to both servers (no forwarding —
             // the answer flows back on the same link).
-            for (links, batch) in self.client_links.iter().zip(&batches) {
+            for (links, batch) in self.links.iter().zip(&batches) {
                 links.to_s0.send(msg::encode_key_upload(batch, 0, true))?;
                 links.to_s1.send(msg::encode_key_upload(batch, 1, true))?;
             }
             // Clients reconstruct from both servers' answers.
             let num_bins = self.session.simple.num_bins();
             let mut submodels = Vec::with_capacity(n);
-            for ((links, ctx), sel) in self.client_links.iter().zip(&ctxs).zip(clients) {
-                let a0 = msg::decode_shares::<G>(&links.to_s0.recv_timeout(REPLY_TIMEOUT)?)
+            for ((links, ctx), sel) in self.links.iter().zip(&ctxs).zip(clients) {
+                let a0 = msg::decode_shares::<G>(&links.to_s0.recv_timeout(timeout)?)
                     .ok_or_else(|| anyhow!("bad S0 answer"))?;
-                let a1 = msg::decode_shares::<G>(&links.to_s1.recv_timeout(REPLY_TIMEOUT)?)
+                let a1 = msg::decode_shares::<G>(&links.to_s1.recv_timeout(timeout)?)
                     .ok_or_else(|| anyhow!("bad S1 answer"))?;
                 submodels.push(psr::client_reconstruct(ctx, num_bins, sel, &a0, &a1));
             }
             Ok(submodels)
         })();
         let submodels = self.poisoning(exchanged)?;
-        let (server_time, _) = self.round_replies()?;
-        let report = self.report(RoundKind::Psr, n, gen_time, server_time, wall.elapsed());
+        let (server_time, _, inter) = self.round_replies()?;
+        let report = self.report(RoundKind::Psr, n, gen_time, server_time, wall.elapsed(), inter);
         Ok(PsrOutcome { submodels, report })
     }
 
@@ -457,14 +726,20 @@ impl<G: Group> FslRuntime<G> {
         }
         let gen_time = t_gen.elapsed();
 
-        self.command_both(|| ServerCmd::Ssa { n })?;
+        self.command_both(ServerCmd::Ssa { n })?;
         // Long upload (master seed + publics) to the leader; short upload
         // (master seed only) to the worker — §4's efficiency trick, with
-        // the publics forwarded S_0 → S_1 server-side.
+        // the publics forwarded S_0 → S_1 server-side. All the short
+        // uploads go first: S_1 must never be left waiting on one while
+        // S_0's forwarded publics fill the peer pipe — over real sockets
+        // with finite kernel buffers the interleaved order can deadlock
+        // at large m (driver → S_0 → inter → S_1 → driver cycle).
         let sent: Result<()> = (|| {
-            for (links, batch) in self.client_links.iter().zip(&uploads) {
-                links.to_s0.send(msg::encode_key_upload(batch, 0, true))?;
+            for (links, batch) in self.links.iter().zip(&uploads) {
                 links.to_s1.send(msg::encode_key_upload(batch, 1, false))?;
+            }
+            for (links, batch) in self.links.iter().zip(&uploads) {
+                links.to_s0.send(msg::encode_key_upload(batch, 0, true))?;
             }
             Ok(())
         })();
@@ -505,9 +780,9 @@ impl<G: Group> FslRuntime<G> {
             }
             self.udpf_selections = clients.iter().map(|(sel, _)| distinct_sorted(sel)).collect();
             let gen_time = t_gen.elapsed();
-            self.command_both(|| ServerCmd::UdpfSetup { n })?;
+            self.command_both(ServerCmd::UdpfSetup { n })?;
             let sent: Result<()> = (|| {
-                for ((links, k0), k1) in self.client_links.iter().zip(&keys0).zip(&keys1) {
+                for ((links, k0), k1) in self.links.iter().zip(&keys0).zip(&keys1) {
                     links.to_s0.send(msg::encode_udpf_keys(&k0.keys))?;
                     links.to_s1.send(msg::encode_udpf_keys(&k1.keys))?;
                 }
@@ -532,9 +807,9 @@ impl<G: Group> FslRuntime<G> {
                 all_hints.push(state.epoch_hints(&self.session, sel, deltas, epoch));
             }
             let gen_time = t_gen.elapsed();
-            self.command_both(|| ServerCmd::UdpfEpoch { n, epoch })?;
+            self.command_both(ServerCmd::UdpfEpoch { n, epoch })?;
             let sent: Result<()> = (|| {
-                for (links, hints) in self.client_links.iter().zip(&all_hints) {
+                for (links, hints) in self.links.iter().zip(&all_hints) {
                     let encoded = msg::encode_hints(hints);
                     links.to_s0.send(encoded.clone())?;
                     links.to_s1.send(encoded)?;
@@ -574,8 +849,10 @@ impl<G: Group> FslRuntime<G> {
                 server_time,
             }) => {
                 let wall_time = wall.elapsed();
-                let report =
-                    self.report(RoundKind::VerifiedSsa, n, Duration::ZERO, server_time, wall_time);
+                // Verified rounds run wholly on the leader: no S_0 ↔ S_1
+                // traffic either locally or remotely.
+                let report = self
+                    .report(RoundKind::VerifiedSsa, n, Duration::ZERO, server_time, wall_time, 0);
                 Ok(VerifiedSsaOutcome {
                     delta: result.delta,
                     rejected: result.rejected,
@@ -620,25 +897,25 @@ impl<G: Group> FslRuntime<G> {
         let wall = Instant::now();
 
         let t_gen = Instant::now();
-        for (cid, (links, set)) in self.client_links.iter().zip(client_sets).enumerate() {
+        for (cid, (links, set)) in self.links.iter().zip(client_sets).enumerate() {
             let blinded = psu::client_blind(key, m, k, cid as u64, set);
             links.to_s0.send(msg::encode_indices(&blinded))?;
         }
         let gen_time = t_gen.elapsed();
 
         let shuffle_seed = rng.next_u64();
-        self.command_both(|| ServerCmd::PsuAlign { n, shuffle_seed })?;
+        self.command_both(ServerCmd::PsuAlign { n, shuffle_seed })?;
 
         // S_1 broadcasts the blinded union to every client; all unblind
         // to the same set, so only the first broadcast is unblinded (the
         // rest are drained for the metering). Post-command failures
         // poison: the broadcast stream may be half-consumed.
+        let timeout = self.reply_timeout;
         let exchanged: Result<Vec<u64>> = (|| {
             let mut union: Option<Vec<u64>> = None;
-            for links in &self.client_links[..n] {
-                let blinded_union =
-                    msg::decode_indices(&links.to_s1.recv_timeout(REPLY_TIMEOUT)?)
-                        .ok_or_else(|| anyhow!("bad union broadcast"))?;
+            for links in &self.links[..n] {
+                let blinded_union = msg::decode_indices(&links.to_s1.recv_timeout(timeout)?)
+                    .ok_or_else(|| anyhow!("bad union broadcast"))?;
                 if union.is_none() {
                     union = Some(psu::client_unblind(key, m, k, &blinded_union));
                 }
@@ -646,24 +923,23 @@ impl<G: Group> FslRuntime<G> {
             union.ok_or_else(|| anyhow!("PSU round served no clients"))
         })();
         let union = self.poisoning(exchanged)?;
-        let (server_time, _) = self.round_replies()?;
+        let (server_time, _, inter) = self.round_replies()?;
         let union_len = union.len();
         let session = Session::new_union(self.session.params.clone(), union)?;
         self.install_session(Arc::new(session))?;
-        let report = self.report(RoundKind::PsuAlign, n, gen_time, server_time, wall.elapsed());
+        let report =
+            self.report(RoundKind::PsuAlign, n, gen_time, server_time, wall.elapsed(), inter);
         Ok(PsuOutcome { union_len, report })
     }
 
-    /// Shut both servers down and join their threads. Dropping the
-    /// runtime does the same; this form surfaces a panicked server as an
-    /// error instead of swallowing it.
+    /// Shut both servers down (joining local threads; telling remote
+    /// processes to exit). Dropping the runtime does the same; this form
+    /// surfaces a panicked local server as an error instead of
+    /// swallowing it.
     pub fn shutdown(mut self) -> Result<()> {
-        for tx in &self.cmd_tx {
-            let _ = tx.send(ServerCmd::Shutdown);
-        }
         let mut panicked = false;
-        for handle in self.handles.drain(..) {
-            panicked |= handle.join().is_err();
+        for link in &mut self.server_links {
+            panicked |= link.shutdown();
         }
         ensure!(!panicked, "a server thread panicked during shutdown");
         Ok(())
@@ -677,10 +953,10 @@ impl<G: Group> FslRuntime<G> {
     fn round_size(&self, n: usize) -> Result<usize> {
         self.check_healthy()?;
         ensure!(
-            n <= self.client_links.len(),
+            n <= self.links.len(),
             "round brings {n} clients but the runtime was built for max_clients = {} \
              (raise FslRuntimeBuilder::max_clients)",
-            self.client_links.len()
+            self.links.len()
         );
         Ok(n)
     }
@@ -711,9 +987,9 @@ impl<G: Group> FslRuntime<G> {
         gen_time: Duration,
         wall: Instant,
     ) -> Result<SsaOutcome<G>> {
-        let (server_time, delta) = self.round_replies()?;
+        let (server_time, delta, inter) = self.round_replies()?;
         let delta = self.poisoning(delta.ok_or_else(|| anyhow!("leader sent no delta")))?;
-        let report = self.report(kind, n, gen_time, server_time, wall.elapsed());
+        let report = self.report(kind, n, gen_time, server_time, wall.elapsed(), inter);
         Ok(SsaOutcome { delta, report })
     }
 
@@ -731,20 +1007,25 @@ impl<G: Group> FslRuntime<G> {
     }
 
     fn command(&self, party: usize, cmd: ServerCmd<G>) -> Result<()> {
-        self.cmd_tx[party]
-            .send(cmd)
-            .map_err(|_| anyhow!("server S{party} has shut down"))
+        self.server_links[party].command(party, cmd)
     }
 
-    fn command_both(&self, mut cmd: impl FnMut() -> ServerCmd<G>) -> Result<()> {
-        self.command(0, cmd())?;
-        self.command(1, cmd())
+    fn command_both(&self, cmd: ServerCmd<G>) -> Result<()> {
+        self.command(0, cmd.clone())?;
+        self.command(1, cmd)
     }
 
     fn reply(&self, party: usize) -> Result<ServerReply<G>> {
-        self.rep_rx[party]
-            .recv_timeout(REPLY_TIMEOUT)
-            .map_err(|e| anyhow!("no reply from server S{party}: {e}"))
+        self.server_links[party].reply(party, self.reply_timeout)
+    }
+
+    /// Await a single Ack (connect-time sequencing, before any round has
+    /// run — a failure is a hard error, with nothing to poison yet).
+    fn expect_ack(&self, party: usize, what: &str) -> Result<()> {
+        match self.reply(party)? {
+            ServerReply::Ack => Ok(()),
+            other => Err(other.into_protocol_error(what)),
+        }
     }
 
     fn ack_both(&mut self) -> Result<()> {
@@ -772,16 +1053,20 @@ impl<G: Group> FslRuntime<G> {
     }
 
     /// Collect one round reply per server (draining both even on
-    /// failure): max server time + the leader's optional delta.
-    fn round_replies(&mut self) -> Result<(Duration, Option<Vec<G>>)> {
+    /// failure): max server time, the leader's optional delta, and the
+    /// servers' summed `S_0 ↔ S_1` bytes (remote deployments only —
+    /// in-process replies carry 0 and the driver reads its own meters).
+    fn round_replies(&mut self) -> Result<(Duration, Option<Vec<G>>, u64)> {
         let mut max_time = Duration::ZERO;
         let mut delta = None;
+        let mut inter = 0u64;
         let mut failure: Option<anyhow::Error> = None;
         for party in 0..2 {
             match self.reply(party) {
-                Ok(ServerReply::Round { server_time, delta: d }) => {
+                Ok(ServerReply::Round { server_time, delta: d, inter_sent }) => {
                     max_time = max_time.max(server_time);
                     delta = delta.or(d);
+                    inter += inter_sent;
                 }
                 Ok(other) => {
                     failure.get_or_insert(other.into_protocol_error("round"));
@@ -796,7 +1081,7 @@ impl<G: Group> FslRuntime<G> {
                 self.poison(&e);
                 Err(e)
             }
-            None => Ok((max_time, delta)),
+            None => Ok((max_time, delta, inter)),
         }
     }
 
@@ -820,11 +1105,11 @@ impl<G: Group> FslRuntime<G> {
         Ok(())
     }
 
-    /// Zero every channel meter so the next report covers one round.
+    /// Zero every link meter so the next report covers one round.
     fn reset_meters(&self) {
-        for links in &self.client_links {
-            links.to_s0.meter.reset();
-            links.to_s1.meter.reset();
+        for links in &self.links {
+            links.to_s0.meter().reset();
+            links.to_s1.meter().reset();
         }
         for meter in &self.inter_meters {
             meter.reset();
@@ -838,22 +1123,30 @@ impl<G: Group> FslRuntime<G> {
         gen_time: Duration,
         server_time: Duration,
         wall_time: Duration,
+        reply_inter_bytes: u64,
     ) -> RoundReport {
         // Verified rounds take uploads directly (no client links), so `n`
         // may exceed the topology's capacity — clamp the meter slice.
-        let links = &self.client_links[..n.min(self.client_links.len())];
+        let links = &self.links[..n.min(self.links.len())];
         RoundReport {
             kind,
             clients: n,
             client_upload_bytes: links
                 .iter()
-                .map(|l| l.to_s0.meter.sent() + l.to_s1.meter.sent())
+                .map(|l| l.to_s0.meter().sent() + l.to_s1.meter().sent())
                 .sum(),
             client_download_bytes: links
                 .iter()
-                .map(|l| l.to_s0.meter.recv() + l.to_s1.meter.recv())
+                .map(|l| l.to_s0.meter().recv() + l.to_s1.meter().recv())
                 .sum(),
-            server_exchange_bytes: self.inter_meters.iter().map(|m| m.sent()).sum(),
+            // In-process: read the driver-owned inter-link meters.
+            // Remote: the link lives between the two server processes, so
+            // its per-round bytes come back in the round replies.
+            server_exchange_bytes: if self.inter_meters.is_empty() {
+                reply_inter_bytes
+            } else {
+                self.inter_meters.iter().map(|m| m.sent()).sum()
+            },
             gen_time,
             server_time,
             wall_time,
@@ -863,11 +1156,8 @@ impl<G: Group> FslRuntime<G> {
 
 impl<G: Group> Drop for FslRuntime<G> {
     fn drop(&mut self) {
-        for tx in &self.cmd_tx {
-            let _ = tx.send(ServerCmd::Shutdown);
-        }
-        for handle in self.handles.drain(..) {
-            let _ = handle.join();
+        for link in &mut self.server_links {
+            let _ = link.shutdown();
         }
     }
 }
@@ -881,110 +1171,104 @@ fn distinct_sorted(sel: &[u64]) -> Vec<u64> {
     s
 }
 
-/// Control-plane commands (the piece a real deployment would carry in an
-/// RPC frame). Bulk client payloads never travel here — they go over the
-/// metered channels in [`msg`] encodings.
-enum ServerCmd<G: Group> {
-    /// Serve one fresh-key SSA round of `n` clients.
-    Ssa { n: usize },
-    /// Serve one PSR round of `n` clients from the installed weights.
-    Psr { n: usize },
-    /// Receive and retain `n` clients' U-DPF key sets, aggregate epoch 0.
-    UdpfSetup { n: usize },
-    /// Apply `n` clients' epoch hints to the retained keys, aggregate.
-    UdpfEpoch { n: usize, epoch: u64 },
-    /// (`S_0` only) verify + aggregate a malicious-model round.
-    VerifiedSsa {
-        uploads: Arc<Vec<MasterKeyBatch<Fp>>>,
-        seed: u64,
-    },
-    /// Serve one PSU alignment round of `n` clients.
-    PsuAlign { n: usize, shuffle_seed: u64 },
-    /// Install the servers' weight vector (PSR database).
-    SetWeights(Arc<Vec<G>>),
-    /// Replace the shared session.
-    SetSession(Arc<Session>),
-    /// Exit the command loop.
-    Shutdown,
-}
-
-enum ServerReply<G: Group> {
-    /// Install acknowledged.
-    Ack,
-    /// Round served; `delta` is `Some` only from the SSA leader.
-    Round {
-        server_time: Duration,
-        delta: Option<Vec<G>>,
-    },
-    /// Verified round served (leader only).
-    Verified {
-        result: VerifiedSsaResult,
-        server_time: Duration,
-    },
-    /// The command failed server-side.
-    Failed(String),
-}
-
-impl<G: Group> ServerReply<G> {
-    fn into_protocol_error(self, what: &str) -> anyhow::Error {
-        match self {
-            ServerReply::Failed(e) => anyhow!("server failed during {what}: {e}"),
-            _ => anyhow!("unexpected server reply during {what}"),
-        }
-    }
-}
-
-/// One server's thread-local state: its engines, channel endpoints, and
-/// retained round-spanning state (weights, U-DPF keys, session).
-struct ServerHalf<G: Group> {
-    party: u8,
-    session: Arc<Session>,
-    agg: AggregationEngine,
-    ret: RetrievalEngine,
-    /// Per-client endpoints (this server's side of every client link).
-    eps: Vec<net::Endpoint>,
-    /// The `S_0 ↔ S_1` channel.
-    inter: net::Endpoint,
+/// One server's state: its engines, data links, and retained
+/// round-spanning state (weights, U-DPF keys, session). Transport-
+/// agnostic: the in-process runtime spawns it on a thread over simulated
+/// links ([`FslRuntimeBuilder::build`]); a standalone TCP server
+/// ([`super::serve`]) builds one over accepted socket links and drives
+/// [`ServerHalf::handle`] from its remote command loop.
+pub(crate) struct ServerHalf<G: Group> {
+    pub(crate) party: u8,
+    pub(crate) session: Arc<Session>,
+    pub(crate) agg: AggregationEngine,
+    pub(crate) ret: RetrievalEngine,
+    /// Per-client data links (this server's side of every client link).
+    pub(crate) eps: Vec<BoxTransport>,
+    /// The `S_0 ↔ S_1` exchange link. Always `Some` in-process; a
+    /// standalone `S_1` starts without one until the driver's `DialPeer`.
+    pub(crate) inter: Option<BoxTransport>,
     /// Installed PSR database (global-model-indexed).
-    weights: Option<Arc<Vec<G>>>,
+    pub(crate) weights: Option<Arc<Vec<G>>>,
     /// Retained U-DPF key sets, one per client (U-DPF mode).
-    udpf: Vec<udpf_ssa::UdpfSsaServerKeys<G>>,
+    pub(crate) udpf: Vec<udpf_ssa::UdpfSsaServerKeys<G>>,
+    /// Bound on every data-link receive (a silent client or peer fails
+    /// the round instead of wedging the server forever).
+    pub(crate) timeout: Duration,
 }
 
 impl<G: Group> ServerHalf<G> {
-    /// The command loop: block for a command, serve it, reply, repeat
-    /// until shutdown. A failed round replies `Failed` and keeps the
-    /// server alive for the next command.
+    /// The in-process command loop: block for a command, serve it, reply,
+    /// repeat until shutdown. A failed round replies `Failed` and keeps
+    /// the server alive for the next command.
     fn run(mut self, cmd_rx: Receiver<ServerCmd<G>>, rep_tx: Sender<ServerReply<G>>) {
         while let Ok(cmd) = cmd_rx.recv() {
-            let reply = match cmd {
-                ServerCmd::Shutdown => break,
-                ServerCmd::SetSession(s) => {
-                    // Weights are indexed by global model index: a session
-                    // with a different m invalidates them.
-                    if self.weights.as_ref().is_some_and(|w| w.len() != s.params.m as usize) {
-                        self.weights = None;
-                    }
-                    self.session = s;
-                    self.udpf.clear();
-                    Ok(ServerReply::Ack)
-                }
-                ServerCmd::SetWeights(w) => {
-                    self.weights = Some(w);
-                    Ok(ServerReply::Ack)
-                }
-                ServerCmd::Ssa { n } => self.ssa(n),
-                ServerCmd::Psr { n } => self.psr(n),
-                ServerCmd::UdpfSetup { n } => self.udpf_setup(n),
-                ServerCmd::UdpfEpoch { n, epoch } => self.udpf_epoch(n, epoch),
-                ServerCmd::VerifiedSsa { uploads, seed } => self.verified(&uploads, seed),
-                ServerCmd::PsuAlign { n, shuffle_seed } => self.psu_align(n, shuffle_seed),
-            };
-            let reply = reply.unwrap_or_else(|e| ServerReply::Failed(e.to_string()));
+            if matches!(cmd, ServerCmd::Shutdown) {
+                break;
+            }
+            let reply = self
+                .handle(cmd)
+                .unwrap_or_else(|e| ServerReply::Failed(e.to_string()));
             if rep_tx.send(reply).is_err() {
                 break; // driver gone
             }
         }
+    }
+
+    /// Serve one command — the dispatch shared by the in-process loop and
+    /// the standalone TCP server's loop. `Shutdown` and `DialPeer` are
+    /// loop-level concerns and never reach this in-process; a stray
+    /// `DialPeer` here is a protocol error.
+    pub(crate) fn handle(&mut self, cmd: ServerCmd<G>) -> Result<ServerReply<G>> {
+        // A remote driver's client count arrives off the wire: bound it
+        // before any round slices `self.eps[..n]` — a failed round must
+        // reply `Failed`, never panic the server.
+        if let Some(n) = cmd.client_count() {
+            ensure!(
+                n <= self.eps.len(),
+                "S{}: round brings {n} clients but only {} client links are connected",
+                self.party,
+                self.eps.len()
+            );
+        }
+        match cmd {
+            ServerCmd::Shutdown => Err(anyhow!(
+                "S{}: shutdown is handled by the command loop",
+                self.party
+            )),
+            ServerCmd::DialPeer { .. } => Err(anyhow!(
+                "S{}: dial-peer only applies to a standalone TCP server \
+                 (the in-process runtime wires its topology directly)",
+                self.party
+            )),
+            ServerCmd::Ping => Ok(ServerReply::Ack),
+            ServerCmd::SetSession(s) => {
+                // Weights are indexed by global model index: a session
+                // with a different m invalidates them.
+                if self.weights.as_ref().is_some_and(|w| w.len() != s.params.m as usize) {
+                    self.weights = None;
+                }
+                self.session = s;
+                self.udpf.clear();
+                Ok(ServerReply::Ack)
+            }
+            ServerCmd::SetWeights(w) => {
+                self.weights = Some(w);
+                Ok(ServerReply::Ack)
+            }
+            ServerCmd::Ssa { n } => self.ssa(n),
+            ServerCmd::Psr { n } => self.psr(n),
+            ServerCmd::UdpfSetup { n } => self.udpf_setup(n),
+            ServerCmd::UdpfEpoch { n, epoch } => self.udpf_epoch(n, epoch),
+            ServerCmd::VerifiedSsa { uploads, seed } => self.verified(&uploads, seed),
+            ServerCmd::PsuAlign { n, shuffle_seed } => self.psu_align(n, shuffle_seed),
+        }
+    }
+
+    /// The `S_0 ↔ S_1` link, which every exchange step needs.
+    fn inter(&self) -> Result<&dyn Transport> {
+        self.inter
+            .as_deref()
+            .ok_or_else(|| anyhow!("S{}: no peer link established", self.party))
     }
 
     /// Fresh-key SSA. `S_0` (leader) receives long uploads, forwards the
@@ -995,7 +1279,7 @@ impl<G: Group> ServerHalf<G> {
         if self.party == 0 {
             let mut batches = Vec::with_capacity(n);
             for (i, ep) in self.eps[..n].iter().enumerate() {
-                let up = msg::decode_key_upload::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+                let up = msg::decode_key_upload::<G>(&ep.recv_timeout(self.timeout)?)
                     .ok_or_else(|| anyhow!("S0: bad client upload"))?;
                 let publics = up.publics.ok_or_else(|| anyhow!("S0: no publics"))?;
                 // Forward only the *public* parts: the client's S_0 master
@@ -1008,7 +1292,7 @@ impl<G: Group> ServerHalf<G> {
                 };
                 let mut fwd = (i as u32).to_le_bytes().to_vec();
                 fwd.extend(msg::encode_key_upload(&batch, 0, true));
-                self.inter.send(fwd)?;
+                self.inter()?.send(fwd)?;
                 batch.msk = [up.msk, up.msk];
                 batches.push(batch);
             }
@@ -1017,23 +1301,24 @@ impl<G: Group> ServerHalf<G> {
                 .agg
                 .aggregate_publics(&self.session, 0, &uploads_of(&batches, 0));
             let server_time = t.elapsed();
-            let share1 = msg::decode_shares::<G>(&self.inter.recv_timeout(REPLY_TIMEOUT)?)
+            let share1 = msg::decode_shares::<G>(&self.inter()?.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S0: bad share vector"))?;
             Ok(ServerReply::Round {
                 server_time,
                 delta: Some(ssa::reconstruct(&acc0, &share1)),
+                inter_sent: 0,
             })
         } else {
             let mut msks = Vec::with_capacity(n);
             for ep in &self.eps[..n] {
-                let up = msg::decode_key_upload::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+                let up = msg::decode_key_upload::<G>(&ep.recv_timeout(self.timeout)?)
                     .ok_or_else(|| anyhow!("S1: bad client upload"))?;
                 msks.push(up.msk);
             }
             // Public parts forwarded by S_0, tagged with client index.
             let mut publics: Vec<Option<_>> = (0..n).map(|_| None).collect();
             for _ in 0..n {
-                let raw = self.inter.recv_timeout(REPLY_TIMEOUT)?;
+                let raw = self.inter()?.recv_timeout(self.timeout)?;
                 let idx = u32::from_le_bytes(
                     raw.get(..4)
                         .ok_or_else(|| anyhow!("S1: short forward"))?
@@ -1063,10 +1348,11 @@ impl<G: Group> ServerHalf<G> {
                 .agg
                 .aggregate_publics(&self.session, 1, &uploads_of(&batches, 1));
             let server_time = t.elapsed();
-            self.inter.send(msg::encode_shares(&acc1))?;
+            self.inter()?.send(msg::encode_shares(&acc1))?;
             Ok(ServerReply::Round {
                 server_time,
                 delta: None,
+                inter_sent: 0,
             })
         }
     }
@@ -1080,7 +1366,7 @@ impl<G: Group> ServerHalf<G> {
             .ok_or_else(|| anyhow!("S{}: no weights installed", self.party))?;
         let mut batches = Vec::with_capacity(n);
         for ep in &self.eps[..n] {
-            let up = msg::decode_key_upload::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+            let up = msg::decode_key_upload::<G>(&ep.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S{}: bad upload", self.party))?;
             let publics = up
                 .publics
@@ -1102,6 +1388,7 @@ impl<G: Group> ServerHalf<G> {
         Ok(ServerReply::Round {
             server_time,
             delta: None,
+            inter_sent: 0,
         })
     }
 
@@ -1109,7 +1396,7 @@ impl<G: Group> ServerHalf<G> {
     fn udpf_setup(&mut self, n: usize) -> Result<ServerReply<G>> {
         self.udpf.clear();
         for ep in &self.eps[..n] {
-            let keys = msg::decode_udpf_keys::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+            let keys = msg::decode_udpf_keys::<G>(&ep.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S{}: bad U-DPF key upload", self.party))?;
             self.udpf.push(udpf_ssa::UdpfSsaServerKeys { keys });
         }
@@ -1126,7 +1413,7 @@ impl<G: Group> ServerHalf<G> {
             self.udpf.len()
         );
         for (ep, retained) in self.eps[..n].iter().zip(&mut self.udpf) {
-            let hints = msg::decode_hints::<G>(&ep.recv_timeout(REPLY_TIMEOUT)?)
+            let hints = msg::decode_hints::<G>(&ep.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S{}: bad hint upload", self.party))?;
             ensure!(
                 hints.len() == retained.keys.len(),
@@ -1152,17 +1439,19 @@ impl<G: Group> ServerHalf<G> {
         let acc = udpf_ssa::server_aggregate(&self.agg, &self.session, &self.udpf, epoch);
         let server_time = t.elapsed();
         if self.party == 1 {
-            self.inter.send(msg::encode_shares(&acc))?;
+            self.inter()?.send(msg::encode_shares(&acc))?;
             Ok(ServerReply::Round {
                 server_time,
                 delta: None,
+                inter_sent: 0,
             })
         } else {
-            let share1 = msg::decode_shares::<G>(&self.inter.recv_timeout(REPLY_TIMEOUT)?)
+            let share1 = msg::decode_shares::<G>(&self.inter()?.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S0: bad share vector"))?;
             Ok(ServerReply::Round {
                 server_time,
                 delta: Some(ssa::reconstruct(&acc, &share1)),
+                inter_sent: 0,
             })
         }
     }
@@ -1187,14 +1476,14 @@ impl<G: Group> ServerHalf<G> {
         if self.party == 0 {
             let mut pooled = Vec::new();
             for ep in &self.eps[..n] {
-                let blinded = msg::decode_indices(&ep.recv_timeout(REPLY_TIMEOUT)?)
+                let blinded = msg::decode_indices(&ep.recv_timeout(self.timeout)?)
                     .ok_or_else(|| anyhow!("S0: bad blinded set"))?;
                 pooled.extend(blinded);
             }
             let shuffled = psu::server0_shuffle(pooled, &mut Rng::new(shuffle_seed));
-            self.inter.send(msg::encode_indices(&shuffled))?;
+            self.inter()?.send(msg::encode_indices(&shuffled))?;
         } else {
-            let pooled = msg::decode_indices(&self.inter.recv_timeout(REPLY_TIMEOUT)?)
+            let pooled = msg::decode_indices(&self.inter()?.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S1: bad pooled multiset"))?;
             let union = psu::server1_dedup(pooled);
             let encoded = msg::encode_indices(&union);
@@ -1205,6 +1494,7 @@ impl<G: Group> ServerHalf<G> {
         Ok(ServerReply::Round {
             server_time: t.elapsed(),
             delta: None,
+            inter_sent: 0,
         })
     }
 }

@@ -1,0 +1,403 @@
+//! Standalone FSL server: one `S_0` or `S_1` as its own OS process,
+//! serving a [`super::FslRuntimeBuilder::connect`] driver over framed TCP
+//! (the `fsl serve` CLI subcommand is a thin wrapper around [`serve`]).
+//!
+//! One call to [`serve`] hosts one *deployment*: it accepts the driver's
+//! control channel, the per-client data links, and (for `S_0`) the peer
+//! server's exchange link, installs the driver's session, and then runs
+//! the same command dispatch as the in-process server threads
+//! ([`super::runtime`]'s `ServerHalf::handle`) until the driver shuts the
+//! deployment down or disconnects. Connection-level mistakes — wrong
+//! server address, payload-group mismatch, stale binary — are rejected at
+//! the handshake with a readable reason sent back to the dialler.
+//!
+//! Accept order is driven by the dialler (every handshake is individually
+//! acked before the driver opens the next connection): control first
+//! (which announces how many client links follow), then the client links,
+//! then — for `S_0` only — the peer link that `S_1` dials when the driver
+//! commands it to.
+
+use super::runtime::ServerHalf;
+use super::wire::{self, ServerCmd, ServerReply};
+use crate::group::Group;
+use crate::net::transport::tcp::{TcpAcceptor, TcpOptions, TcpTransport};
+use crate::net::transport::{BoxTransport, Hello, HelloAck, Role};
+use crate::protocol::{AggregationEngine, RetrievalEngine, Sharding};
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// Knobs for one standalone server.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Which server this process is (0 = leader, 1 = worker).
+    pub party: u8,
+    /// Engine workers: an explicit count, or `0` for one per core — a
+    /// standalone server owns its whole machine, unlike the co-located
+    /// in-process pair.
+    pub threads: usize,
+    /// Bound on every data-link receive mid-round (a silent client or
+    /// peer fails the round, not the deployment).
+    pub data_timeout: Duration,
+    /// Socket options (handshake timeout, write timeout).
+    pub tcp: TcpOptions,
+}
+
+impl ServeOptions {
+    /// Defaults for `party` (auto engine width, 600 s data timeout).
+    pub fn new(party: u8) -> Self {
+        ServeOptions {
+            party,
+            threads: 0,
+            data_timeout: Duration::from_secs(600),
+            tcp: TcpOptions::default(),
+        }
+    }
+}
+
+/// The control handshake's deployment shape.
+struct ControlInfo {
+    max_clients: usize,
+    m: u64,
+    k: u64,
+}
+
+/// Ceiling on a deployment's client links. The handshake is
+/// unauthenticated, so its `max_clients` must be bounded *before* it
+/// sizes any allocation (the same invariant the frame and message
+/// decoders enforce) — and each link is a real socket, so anything near
+/// this is file-descriptor-bound anyway.
+const MAX_CLIENT_LINKS: u32 = 4096;
+
+/// Host one deployment on `acceptor` and serve it to completion.
+/// Returns when the driver commands shutdown or its control channel
+/// closes; handshake-phase failures (bind-level, not per-connection)
+/// return an error.
+pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()> {
+    let (ctrl, control) = accept_control::<G>(acceptor, opts)?;
+    let eps = accept_clients(acceptor, opts, control.max_clients)?;
+    let inter = if opts.party == 0 {
+        Some(accept_peer(acceptor, opts)?)
+    } else {
+        None
+    };
+
+    // The driver's first command installs the session it announced in the
+    // control handshake (System Setup, Fig. 4 — run at deploy time).
+    let first = ctrl
+        .recv_timeout(opts.data_timeout)
+        .map_err(|e| e.context("waiting for the driver's session install"))?;
+    let session = match wire::decode_cmd::<G>(&first)? {
+        ServerCmd::SetSession(s) => s,
+        _ => {
+            let _ = ctrl.send(wire::encode_reply::<G>(&ServerReply::Failed(
+                "the first command must install the session".into(),
+            )));
+            bail!("driver's first command was not a session install");
+        }
+    };
+    if session.params.m != control.m || session.params.k as u64 != control.k {
+        let reason = format!(
+            "installed session (m={}, k={}) does not match the control handshake \
+             (m={}, k={})",
+            session.params.m, session.params.k, control.m, control.k
+        );
+        let _ = ctrl.send(wire::encode_reply::<G>(&ServerReply::Failed(reason.clone())));
+        bail!("{reason}");
+    }
+    ctrl.send(wire::encode_reply::<G>(&ServerReply::Ack))?;
+
+    let sharding = if opts.threads == 0 {
+        Sharding::auto()
+    } else {
+        Sharding::new(opts.threads)
+    };
+    let mut server = ServerHalf::<G> {
+        party: opts.party,
+        session,
+        agg: AggregationEngine::with_sharding(sharding),
+        ret: RetrievalEngine::with_sharding(sharding),
+        eps,
+        inter,
+        weights: None,
+        udpf: Vec::new(),
+        timeout: opts.data_timeout,
+    };
+
+    // The remote command loop — the TCP twin of `ServerHalf::run`.
+    loop {
+        let raw = match ctrl.recv() {
+            Ok(raw) => raw,
+            Err(_) => break, // driver gone: the deployment is over
+        };
+        let cmd = match wire::decode_cmd::<G>(&raw) {
+            Ok(cmd) => cmd,
+            Err(e) => {
+                if ctrl
+                    .send(wire::encode_reply::<G>(&ServerReply::Failed(e.to_string())))
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+        };
+        let reply = match cmd {
+            ServerCmd::Shutdown => break,
+            ServerCmd::DialPeer { addr } => {
+                let hello = Hello {
+                    party: 1 - opts.party,
+                    role: Role::Peer,
+                };
+                match TcpTransport::connect(addr.as_str(), &hello, &opts.tcp) {
+                    Ok(conn) => {
+                        server.inter = Some(Box::new(conn));
+                        ServerReply::Ack
+                    }
+                    Err(e) => ServerReply::Failed(format!("dialling peer at {addr}: {e}")),
+                }
+            }
+            cmd => {
+                // Rounds report the real S_0 ↔ S_1 bytes back to the
+                // driver (which cannot see the peer link): reset the peer
+                // meter at round start, stamp its sent-count into the
+                // reply.
+                let is_round = cmd.is_round();
+                if is_round {
+                    if let Some(inter) = &server.inter {
+                        inter.meter().reset();
+                    }
+                }
+                let mut reply = server
+                    .handle(cmd)
+                    .unwrap_or_else(|e| ServerReply::Failed(e.to_string()));
+                if is_round {
+                    if let ServerReply::Round { inter_sent, .. } = &mut reply {
+                        *inter_sent =
+                            server.inter.as_ref().map_or(0, |i| i.meter().sent());
+                    }
+                }
+                reply
+            }
+        };
+        if ctrl.send(wire::encode_reply(&reply)).is_err() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Accept the next connection that completes a handshake, bounded by
+/// `opts.data_timeout` overall. Per-connection failures (a dropped
+/// liveness probe, a stray port scan, a stale-binary hello) are
+/// tolerated — the deployment must survive them — but the bound means a
+/// driver that died mid-connect leaves the server with an error after
+/// the timeout, never parked on a blocking accept forever.
+fn next_conn(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<(BoxTransport, Hello)> {
+    let deadline = std::time::Instant::now() + opts.data_timeout;
+    loop {
+        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+        if remaining.is_zero() {
+            bail!(
+                "gave up waiting for the deployment's connections after {:?} \
+                 (did the driver die mid-connect?)",
+                opts.data_timeout
+            );
+        }
+        match acceptor.accept_timeout(remaining) {
+            Ok(Some(pair)) => return Ok(pair),
+            Ok(None) => {} // deadline trips on the next iteration
+            Err(_probe) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+/// Accept until a valid control connection arrives (rejecting strays
+/// with a reasoned ack).
+fn accept_control<G: Group>(
+    acceptor: &TcpAcceptor,
+    opts: &ServeOptions,
+) -> Result<(BoxTransport, ControlInfo)> {
+    loop {
+        let (conn, hello) = next_conn(acceptor, opts)?;
+        match validate_control::<G>(&hello, opts) {
+            Ok(info) => {
+                conn.send(HelloAck { party: opts.party, error: None }.encode())?;
+                return Ok((conn, info));
+            }
+            Err(reason) => {
+                let _ = conn.send(
+                    HelloAck { party: opts.party, error: Some(reason) }.encode(),
+                );
+            }
+        }
+    }
+}
+
+fn validate_control<G: Group>(
+    hello: &Hello,
+    opts: &ServeOptions,
+) -> std::result::Result<ControlInfo, String> {
+    if hello.party != opts.party {
+        return Err(format!(
+            "party mismatch: dialled S{} but this process serves S{}",
+            hello.party, opts.party
+        ));
+    }
+    match &hello.role {
+        Role::Control { max_clients, m, k, group } => {
+            let ours = std::any::type_name::<G>();
+            if group != ours {
+                return Err(format!(
+                    "payload group mismatch: driver runs {group}, this server serves {ours} \
+                     (start it with the matching group=)"
+                ));
+            }
+            if *max_clients > MAX_CLIENT_LINKS {
+                return Err(format!(
+                    "max_clients {max_clients} exceeds this server's ceiling of \
+                     {MAX_CLIENT_LINKS} client links"
+                ));
+            }
+            Ok(ControlInfo {
+                max_clients: *max_clients as usize,
+                m: *m,
+                k: *k,
+            })
+        }
+        other => Err(format!(
+            "expected the driver's control connection first, got {other:?}"
+        )),
+    }
+}
+
+/// Accept exactly `n` client links, slotted by their handshake id
+/// (rejecting strays and duplicates with a reasoned ack).
+fn accept_clients(
+    acceptor: &TcpAcceptor,
+    opts: &ServeOptions,
+    n: usize,
+) -> Result<Vec<BoxTransport>> {
+    let mut slots: Vec<Option<BoxTransport>> = (0..n).map(|_| None).collect();
+    let mut filled = 0;
+    while filled < n {
+        let (conn, hello) = next_conn(acceptor, opts)?;
+        let reason = match (&hello.role, hello.party == opts.party) {
+            (_, false) => Some(format!(
+                "party mismatch: dialled S{} but this process serves S{}",
+                hello.party, opts.party
+            )),
+            (Role::Client { id }, true) => {
+                let id = *id as usize;
+                match slots.get_mut(id) {
+                    None => Some(format!("client id {id} out of range (capacity {n})")),
+                    Some(slot) => {
+                        if slot.is_some() {
+                            Some(format!("client id {id} already connected"))
+                        } else {
+                            conn.send(HelloAck { party: opts.party, error: None }.encode())?;
+                            *slot = Some(conn);
+                            filled += 1;
+                            continue;
+                        }
+                    }
+                }
+            }
+            (other, true) => Some(format!(
+                "expected a client link ({filled}/{n} connected), got {other:?}"
+            )),
+        };
+        let _ = conn.send(HelloAck { party: opts.party, error: reason }.encode());
+    }
+    Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+}
+
+/// Accept the peer server's exchange link (S_0 side).
+fn accept_peer(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<BoxTransport> {
+    loop {
+        let (conn, hello) = next_conn(acceptor, opts)?;
+        if hello.party == opts.party && hello.role == Role::Peer {
+            conn.send(HelloAck { party: opts.party, error: None }.encode())?;
+            return Ok(conn);
+        }
+        let _ = conn.send(
+            HelloAck {
+                party: opts.party,
+                error: Some(format!(
+                    "expected the peer server's exchange link, got {:?}",
+                    hello.role
+                )),
+            }
+            .encode(),
+        );
+    }
+}
+
+/// Convenience wrapper: bind `addr`, host one deployment, return when it
+/// ends. This is what `fsl serve` calls.
+pub fn serve_addr<G: Group>(addr: &str, opts: &ServeOptions) -> Result<()> {
+    let acceptor = TcpAcceptor::bind(addr, opts.tcp.clone())
+        .map_err(|e| e.context(format!("starting a server on {addr}")))?;
+    serve::<G>(&acceptor, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::TRANSPORT_VERSION;
+
+    #[test]
+    fn control_validation_catches_wiring_mistakes() {
+        let opts = ServeOptions::new(0);
+        let good = Hello {
+            party: 0,
+            role: Role::Control {
+                max_clients: 2,
+                m: 1024,
+                k: 16,
+                group: std::any::type_name::<u64>().into(),
+            },
+        };
+        assert!(validate_control::<u64>(&good, &opts).is_ok());
+
+        let swapped = Hello { party: 1, ..good.clone() };
+        assert!(validate_control::<u64>(&swapped, &opts)
+            .unwrap_err()
+            .contains("party mismatch"));
+
+        let wrong_group = Hello {
+            party: 0,
+            role: Role::Control {
+                max_clients: 2,
+                m: 1024,
+                k: 16,
+                group: std::any::type_name::<u128>().into(),
+            },
+        };
+        assert!(validate_control::<u64>(&wrong_group, &opts)
+            .unwrap_err()
+            .contains("group mismatch"));
+
+        let not_control = Hello { party: 0, role: Role::Peer };
+        assert!(validate_control::<u64>(&not_control, &opts)
+            .unwrap_err()
+            .contains("control connection first"));
+
+        // An unauthenticated handshake must never size an allocation:
+        // an absurd max_clients is rejected before any slot vector.
+        let oversized = Hello {
+            party: 0,
+            role: Role::Control {
+                max_clients: u32::MAX,
+                m: 1024,
+                k: 16,
+                group: std::any::type_name::<u64>().into(),
+            },
+        };
+        assert!(validate_control::<u64>(&oversized, &opts)
+            .unwrap_err()
+            .contains("ceiling"));
+
+        // Sanity: the version constant exists and is what frames carry.
+        assert_eq!(TRANSPORT_VERSION, 1);
+    }
+}

@@ -1,0 +1,606 @@
+//! Control-plane protocol between the round driver and a server: the
+//! typed commands/replies of the [`super::runtime`] command loop, plus
+//! their wire codec.
+//!
+//! In the single-process runtime these enums travel a typed `mpsc`
+//! channel and the codec is never invoked — `Arc`'d payloads are shared,
+//! not copied, which is what keeps the in-process fast path bit-identical
+//! to the pre-transport code. Against standalone TCP servers the same
+//! values are encoded here, framed by the transport, and decoded by the
+//! remote command loop ([`super::serve`]). Bulk *client* payloads (key
+//! uploads, hints, answers) never travel the control plane — they go over
+//! the per-client data links in [`crate::protocol::msg`] encodings, as
+//! always.
+
+use super::verified::VerifiedSsaResult;
+use crate::crypto::field::Fp;
+use crate::dpf::MasterKeyBatch;
+use crate::group::Group;
+use crate::hashing::CuckooParams;
+use crate::protocol::{msg, Session, SessionParams};
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Commands the driver issues to a server (the piece a real deployment
+/// carries in an RPC frame). Bulk client payloads never travel here —
+/// they go over the metered data links in [`msg`] encodings.
+#[derive(Clone)]
+pub(crate) enum ServerCmd<G: Group> {
+    /// Serve one fresh-key SSA round of `n` clients.
+    Ssa { n: usize },
+    /// Serve one PSR round of `n` clients from the installed weights.
+    Psr { n: usize },
+    /// Receive and retain `n` clients' U-DPF key sets, aggregate epoch 0.
+    UdpfSetup { n: usize },
+    /// Apply `n` clients' epoch hints to the retained keys, aggregate.
+    UdpfEpoch { n: usize, epoch: u64 },
+    /// (`S_0` only) verify + aggregate a malicious-model round.
+    VerifiedSsa {
+        uploads: Arc<Vec<MasterKeyBatch<Fp>>>,
+        seed: u64,
+    },
+    /// Serve one PSU alignment round of `n` clients.
+    PsuAlign { n: usize, shuffle_seed: u64 },
+    /// Install the servers' weight vector (PSR database).
+    SetWeights(Arc<Vec<G>>),
+    /// Replace the shared session.
+    SetSession(Arc<Session>),
+    /// Liveness probe; answered with [`ServerReply::Ack`].
+    Ping,
+    /// (standalone TCP servers only) dial the peer server's listen
+    /// address and establish the `S_0 ↔ S_1` exchange link. The
+    /// in-process runtime wires its topology directly and rejects this.
+    DialPeer { addr: String },
+    /// Exit the command loop.
+    Shutdown,
+}
+
+impl<G: Group> ServerCmd<G> {
+    /// Whether this command serves a round (as opposed to an install,
+    /// probe, or lifecycle command). Kept next to the enum so a new
+    /// round variant cannot be added without this list in view — the
+    /// standalone server resets and reports its `S_0 ↔ S_1` meter
+    /// exactly for round commands.
+    pub(crate) fn is_round(&self) -> bool {
+        matches!(
+            self,
+            ServerCmd::Ssa { .. }
+                | ServerCmd::Psr { .. }
+                | ServerCmd::UdpfSetup { .. }
+                | ServerCmd::UdpfEpoch { .. }
+                | ServerCmd::VerifiedSsa { .. }
+                | ServerCmd::PsuAlign { .. }
+        )
+    }
+
+    /// The number of client data links this command will read, if any.
+    /// The server bounds it against its connected links *before*
+    /// dispatch: the in-process driver validates round sizes in its own
+    /// process, but a remote driver's `n` arrives off the wire and must
+    /// not be able to panic a slice index. (Verified rounds carry their
+    /// uploads in the command itself and touch no client links.)
+    pub(crate) fn client_count(&self) -> Option<usize> {
+        match self {
+            ServerCmd::Ssa { n }
+            | ServerCmd::Psr { n }
+            | ServerCmd::UdpfSetup { n }
+            | ServerCmd::UdpfEpoch { n, .. }
+            | ServerCmd::PsuAlign { n, .. } => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// A server's answer to one [`ServerCmd`].
+pub(crate) enum ServerReply<G: Group> {
+    /// Install (or ping) acknowledged.
+    Ack,
+    /// Round served; `delta` is `Some` only from the SSA leader.
+    /// `inter_sent` is the server's `S_0 ↔ S_1` bytes for this round —
+    /// meaningful only from standalone servers (the in-process runtime
+    /// reads its own inter-link meters and leaves this 0).
+    Round {
+        server_time: Duration,
+        delta: Option<Vec<G>>,
+        inter_sent: u64,
+    },
+    /// Verified round served (leader only).
+    Verified {
+        result: VerifiedSsaResult,
+        server_time: Duration,
+    },
+    /// The command failed server-side.
+    Failed(String),
+}
+
+impl<G: Group> ServerReply<G> {
+    pub(crate) fn into_protocol_error(self, what: &str) -> anyhow::Error {
+        match self {
+            ServerReply::Failed(e) => anyhow!("server failed during {what}: {e}"),
+            _ => anyhow!("unexpected server reply during {what}"),
+        }
+    }
+}
+
+// ---- primitive helpers -------------------------------------------------
+//
+// The u32 primitives are `msg`'s own (one definition crate-wide); the
+// u64/slice/block forms are control-plane-only, with Result-typed
+// truncation errors instead of msg's Option convention.
+
+use crate::protocol::msg::put_u32;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(bytes: &[u8], off: &mut usize) -> Result<u32> {
+    crate::protocol::msg::get_u32(bytes, off)
+        .ok_or_else(|| anyhow!("truncated control message (u32 at {off})"))
+}
+
+fn get_u64(bytes: &[u8], off: &mut usize) -> Result<u64> {
+    let s = bytes
+        .get(*off..*off + 8)
+        .ok_or_else(|| anyhow!("truncated control message (u64 at {off})"))?;
+    *off += 8;
+    Ok(u64::from_le_bytes(s.try_into().unwrap()))
+}
+
+fn get_slice<'a>(bytes: &'a [u8], off: &mut usize, len: usize) -> Result<&'a [u8]> {
+    let s = bytes
+        .get(*off..*off + len)
+        .ok_or_else(|| anyhow!("truncated control message ({len} bytes at {off})"))?;
+    *off += len;
+    Ok(s)
+}
+
+fn put_block(out: &mut Vec<u8>, block: &[u8]) {
+    put_u32(out, block.len() as u32);
+    out.extend_from_slice(block);
+}
+
+fn get_block<'a>(bytes: &'a [u8], off: &mut usize) -> Result<&'a [u8]> {
+    let len = get_u32(bytes, off)? as usize;
+    if len > bytes.len().saturating_sub(*off) {
+        bail!("control message block declares {len} bytes but only {} remain",
+              bytes.len() - *off);
+    }
+    get_slice(bytes, off, len)
+}
+
+fn duration_nanos(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
+
+// ---- session codec -----------------------------------------------------
+
+/// Encode a [`Session`] as its defining public data: the parameters and
+/// the alignment domain. The simple table is *not* shipped — it is a
+/// deterministic function of both, and the receiving server rebuilds it
+/// (the System-Setup step of Fig. 4 run at install time).
+pub(crate) fn encode_session(s: &Session) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, s.params.m);
+    put_u64(&mut out, s.params.k as u64);
+    put_u64(&mut out, s.params.cuckoo.epsilon.to_bits());
+    put_u64(&mut out, s.params.cuckoo.eta as u64);
+    put_u64(&mut out, s.params.cuckoo.sigma as u64);
+    put_u64(&mut out, s.params.cuckoo.hash_seed);
+    put_u64(&mut out, s.params.cuckoo.max_kicks as u64);
+    match &s.domain {
+        None => out.push(0),
+        Some(union) => {
+            out.push(1);
+            out.extend_from_slice(&msg::encode_indices(union));
+        }
+    }
+    out
+}
+
+/// Rebuild a [`Session`] from [`encode_session`] output (rebuilds the
+/// simple table; union domains re-run the [`Session::new_union`]
+/// validation, so a tampered control frame cannot install a malformed
+/// domain).
+pub(crate) fn decode_session(bytes: &[u8]) -> Result<Session> {
+    let mut off = 0;
+    let m = get_u64(bytes, &mut off)?;
+    let k = get_u64(bytes, &mut off)? as usize;
+    let epsilon = f64::from_bits(get_u64(bytes, &mut off)?);
+    let eta = get_u64(bytes, &mut off)? as usize;
+    let sigma = get_u64(bytes, &mut off)? as usize;
+    let hash_seed = get_u64(bytes, &mut off)?;
+    let max_kicks = get_u64(bytes, &mut off)? as usize;
+    let params = SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams {
+            epsilon,
+            eta,
+            sigma,
+            hash_seed,
+            max_kicks,
+        },
+    };
+    match *bytes
+        .get(off)
+        .ok_or_else(|| anyhow!("truncated session (domain tag)"))?
+    {
+        0 => Ok(Session::new_full(params)),
+        1 => {
+            let union = msg::decode_indices(&bytes[off + 1..])
+                .ok_or_else(|| anyhow!("malformed session union domain"))?;
+            Session::new_union(params, union)
+        }
+        t => bail!("unknown session domain tag {t}"),
+    }
+}
+
+// ---- command codec -----------------------------------------------------
+
+const CMD_SSA: u8 = 1;
+const CMD_PSR: u8 = 2;
+const CMD_UDPF_SETUP: u8 = 3;
+const CMD_UDPF_EPOCH: u8 = 4;
+const CMD_VERIFIED: u8 = 5;
+const CMD_PSU: u8 = 6;
+const CMD_SET_WEIGHTS: u8 = 7;
+const CMD_SET_SESSION: u8 = 8;
+const CMD_PING: u8 = 9;
+const CMD_DIAL_PEER: u8 = 10;
+const CMD_SHUTDOWN: u8 = 11;
+
+/// Encode a command for the remote control plane.
+pub(crate) fn encode_cmd<G: Group>(cmd: &ServerCmd<G>) -> Vec<u8> {
+    let mut out = Vec::new();
+    match cmd {
+        ServerCmd::Ssa { n } => {
+            out.push(CMD_SSA);
+            put_u32(&mut out, *n as u32);
+        }
+        ServerCmd::Psr { n } => {
+            out.push(CMD_PSR);
+            put_u32(&mut out, *n as u32);
+        }
+        ServerCmd::UdpfSetup { n } => {
+            out.push(CMD_UDPF_SETUP);
+            put_u32(&mut out, *n as u32);
+        }
+        ServerCmd::UdpfEpoch { n, epoch } => {
+            out.push(CMD_UDPF_EPOCH);
+            put_u32(&mut out, *n as u32);
+            put_u64(&mut out, *epoch);
+        }
+        ServerCmd::VerifiedSsa { uploads, seed } => {
+            out.push(CMD_VERIFIED);
+            put_u64(&mut out, *seed);
+            put_u32(&mut out, uploads.len() as u32);
+            for batch in uploads.iter() {
+                put_block(&mut out, &msg::encode_master_batch(batch));
+            }
+        }
+        ServerCmd::PsuAlign { n, shuffle_seed } => {
+            out.push(CMD_PSU);
+            put_u32(&mut out, *n as u32);
+            put_u64(&mut out, *shuffle_seed);
+        }
+        ServerCmd::SetWeights(w) => {
+            out.push(CMD_SET_WEIGHTS);
+            out.extend_from_slice(&msg::encode_shares(w));
+        }
+        ServerCmd::SetSession(s) => {
+            out.push(CMD_SET_SESSION);
+            out.extend_from_slice(&encode_session(s));
+        }
+        ServerCmd::Ping => out.push(CMD_PING),
+        ServerCmd::DialPeer { addr } => {
+            out.push(CMD_DIAL_PEER);
+            put_block(&mut out, addr.as_bytes());
+        }
+        ServerCmd::Shutdown => out.push(CMD_SHUTDOWN),
+    }
+    out
+}
+
+/// Decode a remote control-plane command.
+pub(crate) fn decode_cmd<G: Group>(bytes: &[u8]) -> Result<ServerCmd<G>> {
+    let tag = *bytes
+        .first()
+        .ok_or_else(|| anyhow!("empty control message"))?;
+    let mut off = 1;
+    Ok(match tag {
+        CMD_SSA => ServerCmd::Ssa {
+            n: get_u32(bytes, &mut off)? as usize,
+        },
+        CMD_PSR => ServerCmd::Psr {
+            n: get_u32(bytes, &mut off)? as usize,
+        },
+        CMD_UDPF_SETUP => ServerCmd::UdpfSetup {
+            n: get_u32(bytes, &mut off)? as usize,
+        },
+        CMD_UDPF_EPOCH => {
+            let n = get_u32(bytes, &mut off)? as usize;
+            let epoch = get_u64(bytes, &mut off)?;
+            ServerCmd::UdpfEpoch { n, epoch }
+        }
+        CMD_VERIFIED => {
+            let seed = get_u64(bytes, &mut off)?;
+            let count = get_u32(bytes, &mut off)? as usize;
+            let mut uploads = Vec::with_capacity(count.min(bytes.len()));
+            for i in 0..count {
+                let block = get_block(bytes, &mut off)?;
+                uploads.push(
+                    msg::decode_master_batch::<Fp>(block)
+                        .ok_or_else(|| anyhow!("malformed verified-SSA upload {i}"))?,
+                );
+            }
+            ServerCmd::VerifiedSsa {
+                uploads: Arc::new(uploads),
+                seed,
+            }
+        }
+        CMD_PSU => {
+            let n = get_u32(bytes, &mut off)? as usize;
+            let shuffle_seed = get_u64(bytes, &mut off)?;
+            ServerCmd::PsuAlign { n, shuffle_seed }
+        }
+        CMD_SET_WEIGHTS => ServerCmd::SetWeights(Arc::new(
+            msg::decode_shares::<G>(&bytes[off..])
+                .ok_or_else(|| anyhow!("malformed weight vector"))?,
+        )),
+        CMD_SET_SESSION => ServerCmd::SetSession(Arc::new(decode_session(&bytes[off..])?)),
+        CMD_PING => ServerCmd::Ping,
+        CMD_DIAL_PEER => ServerCmd::DialPeer {
+            addr: String::from_utf8_lossy(get_block(bytes, &mut off)?).into_owned(),
+        },
+        CMD_SHUTDOWN => ServerCmd::Shutdown,
+        t => bail!("unknown control command tag {t}"),
+    })
+}
+
+// ---- reply codec -------------------------------------------------------
+
+const REP_ACK: u8 = 1;
+const REP_ROUND: u8 = 2;
+const REP_VERIFIED: u8 = 3;
+const REP_FAILED: u8 = 4;
+
+/// Encode a server reply for the remote control plane.
+pub(crate) fn encode_reply<G: Group>(reply: &ServerReply<G>) -> Vec<u8> {
+    let mut out = Vec::new();
+    match reply {
+        ServerReply::Ack => out.push(REP_ACK),
+        ServerReply::Round {
+            server_time,
+            delta,
+            inter_sent,
+        } => {
+            out.push(REP_ROUND);
+            put_u64(&mut out, duration_nanos(*server_time));
+            put_u64(&mut out, *inter_sent);
+            match delta {
+                None => out.push(0),
+                Some(d) => {
+                    out.push(1);
+                    out.extend_from_slice(&msg::encode_shares(d));
+                }
+            }
+        }
+        ServerReply::Verified {
+            result,
+            server_time,
+        } => {
+            out.push(REP_VERIFIED);
+            put_u64(&mut out, duration_nanos(*server_time));
+            let rejected: Vec<u64> = result.rejected.iter().map(|&i| i as u64).collect();
+            put_block(&mut out, &msg::encode_indices(&rejected));
+            out.extend_from_slice(&msg::encode_shares(&result.delta));
+        }
+        ServerReply::Failed(e) => {
+            out.push(REP_FAILED);
+            put_block(&mut out, e.as_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a remote server reply.
+pub(crate) fn decode_reply<G: Group>(bytes: &[u8]) -> Result<ServerReply<G>> {
+    let tag = *bytes.first().ok_or_else(|| anyhow!("empty server reply"))?;
+    let mut off = 1;
+    Ok(match tag {
+        REP_ACK => ServerReply::Ack,
+        REP_ROUND => {
+            let server_time = Duration::from_nanos(get_u64(bytes, &mut off)?);
+            let inter_sent = get_u64(bytes, &mut off)?;
+            let delta = match *bytes
+                .get(off)
+                .ok_or_else(|| anyhow!("truncated round reply"))?
+            {
+                0 => None,
+                _ => Some(
+                    msg::decode_shares::<G>(&bytes[off + 1..])
+                        .ok_or_else(|| anyhow!("malformed round delta"))?,
+                ),
+            };
+            ServerReply::Round {
+                server_time,
+                delta,
+                inter_sent,
+            }
+        }
+        REP_VERIFIED => {
+            let server_time = Duration::from_nanos(get_u64(bytes, &mut off)?);
+            let rejected = msg::decode_indices(get_block(bytes, &mut off)?)
+                .ok_or_else(|| anyhow!("malformed rejection list"))?
+                .into_iter()
+                .map(|i| i as usize)
+                .collect();
+            let delta = msg::decode_shares::<Fp>(&bytes[off..])
+                .ok_or_else(|| anyhow!("malformed verified delta"))?;
+            ServerReply::Verified {
+                result: VerifiedSsaResult { delta, rejected },
+                server_time,
+            }
+        }
+        REP_FAILED => {
+            ServerReply::Failed(String::from_utf8_lossy(get_block(bytes, &mut off)?).into_owned())
+        }
+        t => bail!("unknown server reply tag {t}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+    use crate::dpf::{gen_batch_with_master, BinPoint};
+
+    fn session() -> Session {
+        Session::new_full(SessionParams {
+            m: 4096,
+            k: 64,
+            cuckoo: CuckooParams::default(),
+        })
+    }
+
+    #[test]
+    fn session_codec_rebuilds_identical_tables() {
+        let s = session();
+        let back = decode_session(&encode_session(&s)).unwrap();
+        assert_eq!(back.params.m, s.params.m);
+        assert_eq!(back.params.k, s.params.k);
+        assert_eq!(back.simple.num_bins(), s.simple.num_bins());
+        assert_eq!(back.theta(), s.theta());
+        for j in 0..s.simple.num_bins() {
+            assert_eq!(back.simple.bin(j), s.simple.bin(j), "bin {j}");
+        }
+
+        let union: Vec<u64> = (0..4096).step_by(7).collect();
+        let su = Session::new_union(s.params.clone(), union.clone()).unwrap();
+        let back = decode_session(&encode_session(&su)).unwrap();
+        assert_eq!(back.domain.as_deref(), Some(&union));
+        assert_eq!(back.theta(), su.theta());
+    }
+
+    #[test]
+    fn session_codec_rejects_tampered_unions() {
+        let su =
+            Session::new_union(session().params.clone(), vec![1, 5, 9]).unwrap();
+        let mut enc = encode_session(&su);
+        // Swap two union elements (the u64s live at the tail).
+        let tail = enc.len() - 24;
+        let (a, b) = (tail, tail + 8);
+        for i in 0..8 {
+            enc.swap(a + i, b + i);
+        }
+        assert!(decode_session(&enc).is_err());
+    }
+
+    #[test]
+    fn cmd_codec_roundtrips() {
+        let cases: Vec<ServerCmd<u64>> = vec![
+            ServerCmd::Ssa { n: 4 },
+            ServerCmd::Psr { n: 9 },
+            ServerCmd::UdpfSetup { n: 2 },
+            ServerCmd::UdpfEpoch { n: 2, epoch: 77 },
+            ServerCmd::PsuAlign { n: 3, shuffle_seed: 0xABC },
+            ServerCmd::SetWeights(Arc::new(vec![1u64, 2, u64::MAX])),
+            ServerCmd::SetSession(Arc::new(session())),
+            ServerCmd::Ping,
+            ServerCmd::DialPeer { addr: "127.0.0.1:7100".into() },
+            ServerCmd::Shutdown,
+        ];
+        for cmd in &cases {
+            let enc = encode_cmd(cmd);
+            let dec = decode_cmd::<u64>(&enc).unwrap();
+            // Spot-check the interesting payloads; tags must match.
+            assert_eq!(enc[0], encode_cmd(&dec)[0]);
+            match (cmd, &dec) {
+                (ServerCmd::SetWeights(a), ServerCmd::SetWeights(b)) => assert_eq!(a, b),
+                (ServerCmd::DialPeer { addr: a }, ServerCmd::DialPeer { addr: b }) => {
+                    assert_eq!(a, b)
+                }
+                (ServerCmd::UdpfEpoch { n, epoch }, ServerCmd::UdpfEpoch { n: n2, epoch: e2 }) => {
+                    assert_eq!((n, epoch), (n2, e2))
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn verified_cmd_roundtrips_batches() {
+        let mut rng = Rng::new(33);
+        let bins: Vec<BinPoint<Fp>> = vec![
+            BinPoint { depth: 5, point: Some((3, Fp::new(9))) },
+            BinPoint { depth: 4, point: None },
+        ];
+        let batch = gen_batch_with_master(&bins, rng.gen_seed(), rng.gen_seed());
+        let cmd: ServerCmd<u64> = ServerCmd::VerifiedSsa {
+            uploads: Arc::new(vec![batch.clone(), batch.clone()]),
+            seed: 42,
+        };
+        match decode_cmd::<u64>(&encode_cmd(&cmd)).unwrap() {
+            ServerCmd::VerifiedSsa { uploads, seed } => {
+                assert_eq!(seed, 42);
+                assert_eq!(uploads.len(), 2);
+                assert_eq!(uploads[0].msk, batch.msk);
+                assert_eq!(
+                    msg::encode_master_batch(&uploads[0]),
+                    msg::encode_master_batch(&batch)
+                );
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn reply_codec_roundtrips() {
+        let cases: Vec<ServerReply<u128>> = vec![
+            ServerReply::Ack,
+            ServerReply::Round {
+                server_time: Duration::from_micros(1234),
+                delta: Some(vec![5u128, 6, 7]),
+                inter_sent: 999,
+            },
+            ServerReply::Round {
+                server_time: Duration::ZERO,
+                delta: None,
+                inter_sent: 0,
+            },
+            ServerReply::Verified {
+                result: VerifiedSsaResult {
+                    delta: vec![Fp::new(3), Fp::new(4)],
+                    rejected: vec![1, 7],
+                },
+                server_time: Duration::from_millis(5),
+            },
+            ServerReply::Failed("bin count mismatch".into()),
+        ];
+        for reply in &cases {
+            let enc = encode_reply(reply);
+            let dec = decode_reply::<u128>(&enc).unwrap();
+            assert_eq!(encode_reply(&dec), enc, "re-encoding must be identical");
+        }
+    }
+
+    #[test]
+    fn truncated_control_messages_are_errors() {
+        let cmd: ServerCmd<u64> = ServerCmd::SetWeights(Arc::new(vec![1, 2, 3]));
+        let enc = encode_cmd(&cmd);
+        for cut in 0..enc.len() {
+            assert!(decode_cmd::<u64>(&enc[..cut]).is_err(), "cut {cut}");
+        }
+        let reply: ServerReply<u64> = ServerReply::Round {
+            server_time: Duration::from_secs(1),
+            delta: Some(vec![9]),
+            inter_sent: 3,
+        };
+        let enc = encode_reply(&reply);
+        for cut in 0..enc.len() {
+            assert!(decode_reply::<u64>(&enc[..cut]).is_err(), "cut {cut}");
+        }
+    }
+}

@@ -7,12 +7,21 @@
 //!   timings and Table-6-style communication.
 //! * `psr`    — one PSR retrieval round at a given (m, k).
 //! * `params` — print cuckoo/table diagnostics for (m, c) (Tables 3/4).
+//! * `serve`  — run one server (S0 or S1) as a standalone process bound
+//!   to an address; drive it from another process with `connect=`.
 //!
 //! Arguments are `key=value` pairs, e.g.
 //! `fsl train rounds=30 clients=10 c=0.1 artifacts=artifacts`.
+//! `ssa`/`psr` accept `connect=S0_ADDR,S1_ADDR` to run the round against
+//! two `fsl serve` processes over TCP instead of in-process servers, and
+//! `--json` to emit the round's [`fsl::coordinator::RoundReport`] as one
+//! JSON line on stdout (human logs move to stderr).
 
-use anyhow::Result;
-use fsl::coordinator::{run_fsl_training, FslConfig, FslRuntimeBuilder};
+use anyhow::{anyhow, Result};
+use fsl::coordinator::{
+    run_fsl_training, serve_addr, FslConfig, FslRuntime, FslRuntimeBuilder, RoundReport,
+    ServeOptions,
+};
 use fsl::crypto::rng::Rng;
 use fsl::data::{partition_iid, ImageDataset, IMAGE_CLASSES};
 use fsl::hashing::{CuckooParams, SimpleTable};
@@ -20,7 +29,7 @@ use fsl::metrics::{bits_to_mb, mb};
 use fsl::protocol::{Session, SessionParams};
 use fsl::runtime::Executor;
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn parse_kv(args: &[String]) -> HashMap<String, String> {
     args.iter()
@@ -36,23 +45,112 @@ fn get<T: std::str::FromStr>(kv: &HashMap<String, String>, key: &str, default: T
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let json = args.iter().any(|a| a == "--json");
     let kv = parse_kv(&args[1.min(args.len())..]);
     match cmd {
         "train" => cmd_train(&kv),
-        "ssa" => cmd_ssa(&kv),
-        "psr" => cmd_psr(&kv),
+        "ssa" => cmd_ssa(&kv, json),
+        "psr" => cmd_psr(&kv, json),
         "params" => cmd_params(&kv),
+        "serve" => cmd_serve(&kv),
         _ => {
             eprintln!(
-                "usage: fsl <train|ssa|psr|params> [key=value ...]\n\
+                "usage: fsl <train|ssa|psr|params|serve> [key=value ...] [--json]\n\
                  examples:\n\
                  \u{20}  fsl train rounds=20 clients=10 c=0.1\n\
                  \u{20}  fsl ssa m=32768 c=0.1 clients=4\n\
                  \u{20}  fsl psr m=32768 k=512 clients=8\n\
-                 \u{20}  fsl params m=1048576 c=0.1"
+                 \u{20}  fsl params m=1048576 c=0.1\n\
+                 two-terminal TCP deployment (plus a third for the driver):\n\
+                 \u{20}  fsl serve party=0 listen=127.0.0.1:7100\n\
+                 \u{20}  fsl serve party=1 listen=127.0.0.1:7101\n\
+                 \u{20}  fsl ssa m=32768 c=0.1 clients=4 \
+                 connect=127.0.0.1:7100,127.0.0.1:7101 --json"
             );
             Ok(())
         }
+    }
+}
+
+/// Run one standalone server until its deployment ends. `party=0|1`
+/// picks S0/S1, `listen=ADDR` the bind address, `group=u64|u128` the
+/// payload group (must match the driver's), `threads=N` the engine width
+/// (0 = one worker per core).
+fn cmd_serve(kv: &HashMap<String, String>) -> Result<()> {
+    let party: u8 = get(kv, "party", 0);
+    anyhow::ensure!(party < 2, "party must be 0 (S0) or 1 (S1)");
+    let listen: String = get(kv, "listen", format!("127.0.0.1:{}", 7100 + party as u16));
+    let group: String = get(kv, "group", "u64".to_string());
+    let mut opts = ServeOptions::new(party);
+    opts.threads = get(kv, "threads", 0);
+    opts.data_timeout = Duration::from_millis(get(kv, "timeout_ms", 600_000u64));
+    eprintln!("S{party} serving {group} payloads on {listen} (one deployment, then exit)");
+    match group.as_str() {
+        "u64" => serve_addr::<u64>(&listen, &opts),
+        "u128" => serve_addr::<u128>(&listen, &opts),
+        other => Err(anyhow!(
+            "unknown payload group {other:?} (supported: u64, u128)"
+        )),
+    }
+}
+
+/// Build an in-process runtime, or — with `connect=S0,S1` — a runtime
+/// driving two standalone `fsl serve` processes (waiting up to
+/// `retry_ms` for their listeners to come up).
+fn runtime_for(
+    session: &Session,
+    threads: usize,
+    n: usize,
+    kv: &HashMap<String, String>,
+) -> Result<FslRuntime<u64>> {
+    match kv.get("connect") {
+        None => FslRuntimeBuilder::from_session(session.clone())
+            .threads(threads)
+            .max_clients(n)
+            .build::<u64>(),
+        Some(spec) => {
+            let (s0, s1) = spec
+                .split_once(',')
+                .ok_or_else(|| anyhow!("connect takes two addresses: connect=S0_ADDR,S1_ADDR"))?;
+            let (s0, s1) = (s0.trim(), s1.trim());
+            wait_for_listeners(
+                &[s0, s1],
+                Duration::from_millis(get(kv, "retry_ms", 10_000u64)),
+            )?;
+            FslRuntimeBuilder::from_session(session.clone())
+                .max_clients(n)
+                .connect::<u64>(s0, s1)
+        }
+    }
+}
+
+/// Poll until both server listeners accept TCP (the probe connections
+/// are dropped immediately; servers tolerate failed handshakes).
+fn wait_for_listeners(addrs: &[&str], window: Duration) -> Result<()> {
+    let t0 = Instant::now();
+    for addr in addrs {
+        loop {
+            match std::net::TcpStream::connect(addr) {
+                Ok(_probe) => break,
+                Err(e) => {
+                    if t0.elapsed() > window {
+                        return Err(anyhow!(
+                            "server at {addr} not reachable after {window:?}: {e}"
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(200));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Emit a round report: one JSON line on stdout (`--json`), or nothing
+/// (the human-readable summaries are printed by the callers).
+fn emit_report(json: bool, report: &RoundReport) {
+    if json {
+        println!("{}", report.to_json());
     }
 }
 
@@ -164,7 +262,7 @@ fn eval_mlp(exec: &Executor, params: &[f32], test: &ImageDataset, batch: usize) 
     Ok(correct as f32 / total.max(1) as f32)
 }
 
-fn cmd_ssa(kv: &HashMap<String, String>) -> Result<()> {
+fn cmd_ssa(kv: &HashMap<String, String>, json: bool) -> Result<()> {
     let m: u64 = get(kv, "m", 1 << 15);
     let c: f64 = get(kv, "c", 0.1);
     let n: usize = get(kv, "clients", 1).max(1);
@@ -174,7 +272,7 @@ fn cmd_ssa(kv: &HashMap<String, String>) -> Result<()> {
         k,
         cuckoo: CuckooParams::default().with_seed(get(kv, "seed", 7)),
     });
-    println!(
+    eprintln!(
         "SSA micro-round: m={m} k={k} (c={:.1}%) Θ={}",
         c * 100.0,
         session.theta()
@@ -187,12 +285,10 @@ fn cmd_ssa(kv: &HashMap<String, String>) -> Result<()> {
             (sel, dl)
         })
         .collect();
-    let mut rt = FslRuntimeBuilder::from_session(session.clone())
-        .max_clients(n)
-        .build::<u64>()?;
+    let mut rt = runtime_for(&session, 0, n, kv)?;
     let res = rt.ssa(&clients, &mut rng)?;
     let paper_bits = session.simple.num_bins() * (9 * 130 + 128) + 256;
-    println!(
+    eprintln!(
         "gen {:?}  server eval+agg {:?}\nupload/client: measured {:.3} MB, paper model {:.3} MB, trivial SA {:.3} MB",
         res.report.gen_time,
         res.report.server_time,
@@ -200,10 +296,12 @@ fn cmd_ssa(kv: &HashMap<String, String>) -> Result<()> {
         bits_to_mb(paper_bits),
         bits_to_mb(m as usize * 128 + 128),
     );
+    emit_report(json, &res.report);
+    rt.shutdown()?;
     Ok(())
 }
 
-fn cmd_psr(kv: &HashMap<String, String>) -> Result<()> {
+fn cmd_psr(kv: &HashMap<String, String>, json: bool) -> Result<()> {
     let m: u64 = get(kv, "m", 1 << 15);
     let k: usize = get(kv, "k", 512);
     let n: usize = get(kv, "clients", 1).max(1);
@@ -221,6 +319,8 @@ fn cmd_psr(kv: &HashMap<String, String>) -> Result<()> {
     // (reproducible timings), 0 → the co-located default (half the cores
     // each, so the pair uses the whole machine without oversubscribing),
     // N → N workers per server, non-numeric → warn and run serial.
+    // (Against `connect=` servers the width is each serve process's own
+    // threads= setting; FSL_THREADS only shapes the in-process pair.)
     let threads = match std::env::var("FSL_THREADS") {
         Err(_) => 1,
         Ok(v) => match v.parse::<usize>() {
@@ -231,10 +331,7 @@ fn cmd_psr(kv: &HashMap<String, String>) -> Result<()> {
             }
         },
     };
-    let mut rt = FslRuntimeBuilder::from_session(session.clone())
-        .threads(threads)
-        .max_clients(n)
-        .build::<u64>()?;
+    let mut rt = runtime_for(&session, threads, n, kv)?;
     rt.set_weights(weights.clone())?;
     let t0 = Instant::now();
     let res = rt.psr(&sels, &mut rng)?;
@@ -244,7 +341,7 @@ fn cmd_psr(kv: &HashMap<String, String>) -> Result<()> {
             assert_eq!(got[i], weights[s as usize]);
         }
     }
-    println!(
+    eprintln!(
         "PSR m={m} k={k} clients={n}: gen {:?}, server answers {:?} (round {t_round:?}), \
          upload/client {:.3} MB, download/client {:.3} MB, verified ✓",
         res.report.gen_time,
@@ -252,6 +349,8 @@ fn cmd_psr(kv: &HashMap<String, String>) -> Result<()> {
         mb(res.report.client_upload_bytes) / n as f64,
         mb(res.report.client_download_bytes) / n as f64,
     );
+    emit_report(json, &res.report);
+    rt.shutdown()?;
     Ok(())
 }
 

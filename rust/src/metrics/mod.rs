@@ -44,6 +44,11 @@ impl CommMeter {
         self.recv_bytes.load(Ordering::Relaxed)
     }
 
+    /// Total messages sent.
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
     /// Reset all counters.
     pub fn reset(&self) {
         self.sent_bytes.store(0, Ordering::Relaxed);

@@ -3,12 +3,52 @@
 //!
 //! In-process `mpsc` channels carry length-delimited byte messages, meter
 //! every transfer through [`crate::metrics::CommMeter`], and optionally
-//! inject the paper's LAN latency so end-to-end round times are honest.
+//! inject the paper's LAN latency *and* a finite link bandwidth so
+//! end-to-end round times are honest even for multi-megabyte payloads.
+//!
+//! The [`transport`] submodule abstracts "a bidirectional metered byte
+//! channel" behind the [`transport::Transport`] trait, with this module's
+//! [`Endpoint`] as the in-process implementation and
+//! [`transport::tcp`] as the real-socket one.
+
+pub mod transport;
 
 use crate::metrics::CommMeter;
+use std::cell::Cell;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Simulated characteristics of one directed link: propagation latency
+/// plus serialisation bandwidth. `bandwidth = 0` means "infinite" (a
+/// message occupies the pipe for no time), which is the historical
+/// behaviour of [`pair`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkProfile {
+    /// One-way propagation latency (paper §7: ≈3 ms LAN).
+    pub latency: Duration,
+    /// Link bandwidth in bytes/second; `0` = unlimited.
+    pub bandwidth: u64,
+}
+
+impl LinkProfile {
+    /// Latency-only profile (unlimited bandwidth).
+    pub fn latency_only(latency: Duration) -> Self {
+        LinkProfile {
+            latency,
+            bandwidth: 0,
+        }
+    }
+
+    /// How long `len` bytes occupy the pipe.
+    fn transmit_time(&self, len: usize) -> Duration {
+        if self.bandwidth == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(len as f64 / self.bandwidth as f64)
+        }
+    }
+}
 
 /// A message in flight, stamped with its simulated delivery deadline.
 struct Envelope {
@@ -21,18 +61,33 @@ pub struct Endpoint {
     tx: Sender<Envelope>,
     rx: Receiver<Envelope>,
     pub meter: Arc<CommMeter>,
-    latency: Duration,
+    profile: LinkProfile,
+    /// When this endpoint's *outgoing* pipe frees up: consecutive sends on
+    /// a finite-bandwidth link serialise (each transmission starts only
+    /// once the previous one has fully left the sender), which is what
+    /// makes large-payload wall times honest. `Cell` suffices — an
+    /// endpoint is owned by exactly one thread.
+    tx_free_at: Cell<Option<Instant>>,
 }
 
 impl Endpoint {
     /// Send a message: enqueue immediately, stamped with a delivery
-    /// deadline `now + latency`. The latency is slept by the *receiver*
-    /// (residually, in [`Self::recv`]) — sleeping here on the sender
-    /// thread would serialise what the network does in parallel: a client
-    /// sending to S_0 then S_1 would pay 2× one-way latency instead of
-    /// overlapping the two transfers.
+    /// deadline `departure + latency`, where `departure` accounts for the
+    /// link bandwidth (the pipe transmits messages back-to-back, never in
+    /// parallel). The deadline is slept by the *receiver* (residually, in
+    /// [`Self::recv`]) — sleeping here on the sender thread would
+    /// serialise what the network does in parallel: a client sending to
+    /// S_0 then S_1 would pay 2× one-way latency instead of overlapping
+    /// the two transfers.
     pub fn send(&self, msg: Vec<u8>) -> anyhow::Result<()> {
-        let deliver_at = Instant::now() + self.latency;
+        let now = Instant::now();
+        let start = match self.tx_free_at.get() {
+            Some(free) if free > now => free,
+            _ => now,
+        };
+        let departure = start + self.profile.transmit_time(msg.len());
+        self.tx_free_at.set(Some(departure));
+        let deliver_at = departure + self.profile.latency;
         self.meter.record_send(msg.len());
         self.tx
             .send(Envelope {
@@ -71,8 +126,14 @@ impl Endpoint {
     }
 }
 
-/// Create a connected pair of endpoints with independent meters.
+/// Create a connected pair of endpoints with independent meters
+/// (latency-only; see [`pair_profile`] for bandwidth-limited links).
 pub fn pair(latency: Duration) -> (Endpoint, Endpoint) {
+    pair_profile(LinkProfile::latency_only(latency))
+}
+
+/// Create a connected pair of endpoints under a full link profile.
+pub fn pair_profile(profile: LinkProfile) -> (Endpoint, Endpoint) {
     let (txa, rxb) = channel();
     let (txb, rxa) = channel();
     (
@@ -80,13 +141,15 @@ pub fn pair(latency: Duration) -> (Endpoint, Endpoint) {
             tx: txa,
             rx: rxa,
             meter: CommMeter::shared(),
-            latency,
+            profile,
+            tx_free_at: Cell::new(None),
         },
         Endpoint {
             tx: txb,
             rx: rxb,
             meter: CommMeter::shared(),
-            latency,
+            profile,
+            tx_free_at: Cell::new(None),
         },
     )
 }
@@ -99,20 +162,30 @@ pub struct ClientLinks {
     pub to_s1: Endpoint,
 }
 
-/// Build the three-party channel set for `n` clients.
+/// Build the three-party channel set for `n` clients (latency-only).
 pub fn topology(
     n: usize,
     latency: Duration,
 ) -> (Vec<ClientLinks>, Vec<(Endpoint, Endpoint)>, (Endpoint, Endpoint)) {
+    topology_profile(n, LinkProfile::latency_only(latency))
+}
+
+/// Build the three-party channel set for `n` clients under a full link
+/// profile (every link — client↔server and S_0↔S_1 — gets the same
+/// latency and bandwidth, the paper's symmetric-LAN assumption).
+pub fn topology_profile(
+    n: usize,
+    profile: LinkProfile,
+) -> (Vec<ClientLinks>, Vec<(Endpoint, Endpoint)>, (Endpoint, Endpoint)) {
     let mut clients = Vec::with_capacity(n);
     let mut server_sides = Vec::with_capacity(n);
     for _ in 0..n {
-        let (c0, s0) = pair(latency);
-        let (c1, s1) = pair(latency);
+        let (c0, s0) = pair_profile(profile);
+        let (c1, s1) = pair_profile(profile);
         clients.push(ClientLinks { to_s0: c0, to_s1: c1 });
         server_sides.push((s0, s1));
     }
-    let inter = pair(latency);
+    let inter = pair_profile(profile);
     (clients, server_sides, inter)
 }
 
@@ -170,6 +243,58 @@ mod tests {
             total < lat * 2,
             "latencies of parallel links must overlap: {total:?}"
         );
+    }
+
+    #[test]
+    fn bandwidth_charges_transmit_time() {
+        // 100 kB at 1 MB/s ⇒ ≥100 ms on the wire, even with zero latency.
+        let (a, b) = pair_profile(LinkProfile {
+            latency: Duration::ZERO,
+            bandwidth: 1_000_000,
+        });
+        let t0 = Instant::now();
+        a.send(vec![0u8; 100_000]).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(50),
+            "send must not block on simulated transmission"
+        );
+        b.recv().unwrap();
+        assert!(
+            t0.elapsed() >= Duration::from_millis(95),
+            "transmit time must be paid by delivery: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn bandwidth_serialises_consecutive_sends() {
+        // Two 50 kB messages on a 1 MB/s pipe occupy it back-to-back:
+        // the second delivery lands ≥100 ms in, not ≥50 ms.
+        let (a, b) = pair_profile(LinkProfile {
+            latency: Duration::ZERO,
+            bandwidth: 1_000_000,
+        });
+        let t0 = Instant::now();
+        a.send(vec![0u8; 50_000]).unwrap();
+        a.send(vec![0u8; 50_000]).unwrap();
+        b.recv().unwrap();
+        let first = t0.elapsed();
+        b.recv().unwrap();
+        let second = t0.elapsed();
+        assert!(first >= Duration::from_millis(45), "{first:?}");
+        assert!(second >= Duration::from_millis(95), "{second:?}");
+    }
+
+    #[test]
+    fn zero_bandwidth_means_unlimited() {
+        let (a, b) = pair_profile(LinkProfile {
+            latency: Duration::ZERO,
+            bandwidth: 0,
+        });
+        let t0 = Instant::now();
+        a.send(vec![0u8; 1_000_000]).unwrap();
+        b.recv().unwrap();
+        assert!(t0.elapsed() < Duration::from_millis(250));
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Framed TCP transport: the real-socket implementation of
+//! [`Transport`]/[`Listener`].
+//!
+//! TCP is a byte stream with no message boundaries, so every message —
+//! handshake included — travels as one [`crate::protocol::msg`] frame
+//! (magic + version + length + payload, bounded by
+//! [`crate::protocol::msg::MAX_FRAME_LEN`]). The per-connection
+//! [`CommMeter`] counts *wire* bytes (payload plus frame header): byte
+//! reports over TCP reflect what actually crossed the socket, which is
+//! the honest comparison against the header-less in-process channels.
+//!
+//! A connection opens with a [`Hello`] handshake and waits for the
+//! accepting server's [`HelloAck`], so dialling the wrong server, a stale
+//! binary, or a non-fsl port fails with a readable error before any
+//! protocol traffic moves.
+
+use super::{BoxTransport, Hello, HelloAck, Listener, Transport};
+use crate::metrics::CommMeter;
+use crate::protocol::msg;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Socket knobs shared by both ends of a connection.
+#[derive(Debug, Clone)]
+pub struct TcpOptions {
+    /// How long a handshake side waits for the other's hello/ack.
+    pub handshake_timeout: Duration,
+    /// Kernel-level write timeout for every frame (None = block forever).
+    pub write_timeout: Option<Duration>,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        TcpOptions {
+            handshake_timeout: Duration::from_secs(10),
+            write_timeout: Some(Duration::from_secs(600)),
+        }
+    }
+}
+
+/// One framed TCP connection. Reads and writes go through independent
+/// cloned handles (full duplex), each behind its own lock so a transport
+/// can be driven from the trait's `&self` methods.
+pub struct TcpTransport {
+    reader: Mutex<TcpStream>,
+    writer: Mutex<TcpStream>,
+    meter: Arc<CommMeter>,
+}
+
+impl TcpTransport {
+    /// Wrap an accepted or connected stream (applies `opts`, disables
+    /// Nagle — the protocol is strictly request/response and latency
+    /// matters more than tinygram counts).
+    pub fn from_stream(stream: TcpStream, opts: &TcpOptions) -> Result<Self> {
+        stream.set_nodelay(true).context("set_nodelay")?;
+        stream
+            .set_write_timeout(opts.write_timeout)
+            .context("set_write_timeout")?;
+        let reader = stream.try_clone().context("cloning stream for reads")?;
+        Ok(TcpTransport {
+            reader: Mutex::new(reader),
+            writer: Mutex::new(stream),
+            meter: CommMeter::shared(),
+        })
+    }
+
+    /// Dial `addr`, run the `hello` handshake, and wait for the server's
+    /// ack — every step (the TCP connection itself included: a
+    /// black-holed address must not block for the OS's multi-minute SYN
+    /// retry default) bounded by `opts.handshake_timeout`. A rejecting
+    /// server closes the connection after its ack, and the reason it
+    /// sent becomes this function's error.
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        hello: &Hello,
+        opts: &TcpOptions,
+    ) -> Result<Self> {
+        let resolved = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr:?}"))?
+            .next()
+            .ok_or_else(|| anyhow!("{addr:?} resolved to no address"))?;
+        let stream = TcpStream::connect_timeout(&resolved, opts.handshake_timeout)
+            .with_context(|| format!("connecting to {addr:?}"))?;
+        let conn = Self::from_stream(stream, opts)?;
+        conn.send(hello.encode())
+            .map_err(|e| e.context(format!("sending handshake to {addr:?}")))?;
+        let ack_bytes = conn
+            .recv_timeout(opts.handshake_timeout)
+            .map_err(|e| e.context(format!("waiting for handshake ack from {addr:?}")))?;
+        let ack = HelloAck::decode(&ack_bytes)?;
+        if let Some(reason) = ack.error {
+            bail!("server S{} at {addr:?} rejected the connection: {reason}", ack.party);
+        }
+        if ack.party != hello.party {
+            bail!(
+                "dialled S{} at {addr:?} but a server identifying as S{} answered: \
+                 the two server addresses are probably swapped",
+                hello.party,
+                ack.party
+            );
+        }
+        Ok(conn)
+    }
+
+    /// Read exactly one frame off `stream`. On a read timeout the stream
+    /// may be left mid-frame — callers treat a timeout as fatal for the
+    /// connection (the runtime poisons itself), never as retryable.
+    fn read_frame(stream: &mut TcpStream, meter: &CommMeter) -> Result<Vec<u8>> {
+        let mut header = [0u8; msg::FRAME_HEADER_LEN];
+        stream.read_exact(&mut header).map_err(map_io)?;
+        let len = msg::frame_payload_len(&header)?;
+        let mut payload = vec![0u8; len];
+        stream.read_exact(&mut payload).map_err(map_io)?;
+        meter.record_recv(msg::FRAME_HEADER_LEN + len);
+        Ok(payload)
+    }
+
+    fn recv_with(&self, timeout: Option<Duration>) -> Result<Vec<u8>> {
+        let mut stream = self
+            .reader
+            .lock()
+            .map_err(|_| anyhow!("tcp reader poisoned"))?;
+        stream.set_read_timeout(timeout).context("set_read_timeout")?;
+        let out = Self::read_frame(&mut stream, &self.meter);
+        // Best-effort restore so a later plain recv() blocks again.
+        let _ = stream.set_read_timeout(None);
+        out
+    }
+}
+
+/// Map IO failures to protocol-level wording (EOF = peer closed; a read
+/// timeout names itself so runtime poisoning messages are actionable).
+fn map_io(e: std::io::Error) -> anyhow::Error {
+    match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => anyhow!("connection closed by peer"),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            anyhow!("timed out waiting for a frame")
+        }
+        _ => anyhow!("tcp read failed: {e}"),
+    }
+}
+
+impl Transport for TcpTransport {
+    fn send(&self, payload: Vec<u8>) -> Result<()> {
+        if payload.len() > msg::MAX_FRAME_LEN {
+            bail!(
+                "message of {} bytes exceeds the {}-byte frame ceiling",
+                payload.len(),
+                msg::MAX_FRAME_LEN
+            );
+        }
+        let framed = msg::frame(&payload);
+        let mut stream = self
+            .writer
+            .lock()
+            .map_err(|_| anyhow!("tcp writer poisoned"))?;
+        stream.write_all(&framed).map_err(|e| match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                anyhow!("timed out writing a frame")
+            }
+            _ => anyhow!("tcp write failed: {e}"),
+        })?;
+        self.meter.record_send(framed.len());
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        self.recv_with(None)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Vec<u8>> {
+        self.recv_with(Some(timeout))
+    }
+
+    fn meter(&self) -> &Arc<CommMeter> {
+        &self.meter
+    }
+}
+
+/// The accepting side: wraps a bound [`TcpListener`], yielding one
+/// handshake-validated [`TcpTransport`] per [`Listener::accept`].
+pub struct TcpAcceptor {
+    listener: TcpListener,
+    opts: TcpOptions,
+}
+
+impl TcpAcceptor {
+    /// Wrap an already-bound listener (bind to port 0 for an ephemeral
+    /// port, then read it back with [`TcpAcceptor::local_addr`]).
+    pub fn new(listener: TcpListener, opts: TcpOptions) -> Self {
+        TcpAcceptor { listener, opts }
+    }
+
+    /// Bind `addr` and wrap the listener.
+    pub fn bind<A: ToSocketAddrs + std::fmt::Debug>(addr: A, opts: TcpOptions) -> Result<Self> {
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("binding {addr:?}"))?;
+        Ok(Self::new(listener, opts))
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Run the dialler's handshake on a freshly accepted stream.
+    fn handshake(
+        &self,
+        stream: TcpStream,
+        from: std::net::SocketAddr,
+    ) -> Result<(BoxTransport, Hello)> {
+        let conn = TcpTransport::from_stream(stream, &self.opts)?;
+        let hello_bytes = conn
+            .recv_timeout(self.opts.handshake_timeout)
+            .map_err(|e| e.context(format!("waiting for handshake from {from}")))?;
+        let hello = Hello::decode(&hello_bytes)
+            .map_err(|e| e.context(format!("handshake from {from}")))?;
+        Ok((Box::new(conn), hello))
+    }
+
+    /// Like [`Listener::accept`] but bounded: returns `Ok(None)` if no
+    /// connection *arrives* within `timeout` (a server waiting out its
+    /// accept phase must notice a vanished driver instead of parking on
+    /// a blocking accept forever). The listener is polled nonblocking
+    /// for the wait and restored after; the accepted stream is put back
+    /// into blocking mode before its handshake (it can inherit the
+    /// listener's nonblocking state on some platforms).
+    pub fn accept_timeout(&self, timeout: Duration) -> Result<Option<(BoxTransport, Hello)>> {
+        let deadline = std::time::Instant::now() + timeout;
+        self.listener
+            .set_nonblocking(true)
+            .context("set_nonblocking")?;
+        let accepted = loop {
+            match self.listener.accept() {
+                Ok(pair) => break Ok(Some(pair)),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if std::time::Instant::now() >= deadline {
+                        break Ok(None);
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => break Err(e),
+            }
+        };
+        let _ = self.listener.set_nonblocking(false);
+        match accepted.context("tcp accept")? {
+            None => Ok(None),
+            Some((stream, from)) => {
+                stream
+                    .set_nonblocking(false)
+                    .context("restoring blocking mode")?;
+                self.handshake(stream, from).map(Some)
+            }
+        }
+    }
+}
+
+impl Listener for TcpAcceptor {
+    /// Accept the next connection and read its hello. Magic/version are
+    /// validated here; *role* validation (and sending the [`HelloAck`])
+    /// is the server's job, which knows what it still expects.
+    fn accept(&self) -> Result<(BoxTransport, Hello)> {
+        let (stream, from) = self.listener.accept().context("tcp accept")?;
+        self.handshake(stream, from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::Role;
+
+    fn loopback_acceptor() -> TcpAcceptor {
+        TcpAcceptor::bind("127.0.0.1:0", TcpOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn framed_roundtrip_over_loopback() {
+        let acceptor = loopback_acceptor();
+        let addr = acceptor.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (conn, hello) = acceptor.accept().unwrap();
+            assert_eq!(hello.role, Role::Peer);
+            conn.send(HelloAck { party: 0, error: None }.encode()).unwrap();
+            let m = conn.recv().unwrap();
+            conn.send(m.iter().map(|b| b ^ 0xff).collect()).unwrap();
+            // Message boundaries survive the stream: two sends, two recvs.
+            conn.send(vec![1]).unwrap();
+            conn.send(vec![2, 2]).unwrap();
+        });
+        let conn = TcpTransport::connect(
+            addr,
+            &Hello { party: 0, role: Role::Peer },
+            &TcpOptions::default(),
+        )
+        .unwrap();
+        conn.send(vec![0x0f, 0xf0]).unwrap();
+        assert_eq!(conn.recv().unwrap(), vec![0xf0, 0x0f]);
+        assert_eq!(conn.recv().unwrap(), vec![1]);
+        assert_eq!(conn.recv().unwrap(), vec![2, 2]);
+        // Wire metering counts the frame header too.
+        let snap = conn.snapshot();
+        assert_eq!(
+            snap.sent as usize,
+            2 * msg::FRAME_HEADER_LEN + Hello { party: 0, role: Role::Peer }.encode().len() + 2
+        );
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn recv_timeout_on_wedged_peer() {
+        let acceptor = loopback_acceptor();
+        let addr = acceptor.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (conn, _hello) = acceptor.accept().unwrap();
+            conn.send(HelloAck { party: 1, error: None }.encode()).unwrap();
+            // Wedge: hold the connection open, send nothing.
+            std::thread::sleep(Duration::from_millis(400));
+        });
+        let conn = TcpTransport::connect(
+            addr,
+            &Hello { party: 1, role: Role::Peer },
+            &TcpOptions::default(),
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let err = conn
+            .recv_timeout(Duration::from_millis(100))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(t0.elapsed() < Duration::from_millis(350));
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn rejected_handshake_carries_the_reason() {
+        let acceptor = loopback_acceptor();
+        let addr = acceptor.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (conn, _hello) = acceptor.accept().unwrap();
+            conn.send(
+                HelloAck { party: 0, error: Some("party mismatch: dialled S1".into()) }.encode(),
+            )
+            .unwrap();
+        });
+        let err = TcpTransport::connect(
+            addr,
+            &Hello { party: 0, role: Role::Peer },
+            &TcpOptions::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("party mismatch"), "{err}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn non_fsl_peer_fails_fast() {
+        // A "server" that talks something else entirely: the dialler's
+        // ack wait must fail on the frame magic, not hang or misparse.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 64];
+            let _ = stream.read(&mut buf);
+            let _ = stream.write_all(b"HTTP/1.1 400 Bad Request\r\n\r\n");
+        });
+        let err = TcpTransport::connect(
+            addr,
+            &Hello { party: 0, role: Role::Peer },
+            &TcpOptions::default(),
+        )
+        .unwrap_err();
+        let chain = format!("{err:?}"); // Debug shows the whole cause chain
+        assert!(chain.contains("magic"), "{chain}");
+        server.join().unwrap();
+    }
+}

@@ -4,19 +4,142 @@
 //! byte message built here, so the Table-6 communication numbers come from
 //! the real encodings (and are cross-checked against the paper's bit
 //! formulas in `metrics`).
+//!
+//! Stream transports (TCP) have no message boundaries, so every message
+//! they carry additionally travels inside a *frame*: a fixed header of
+//! magic bytes, a wire-format version, and the payload length, guarded by
+//! [`MAX_FRAME_LEN`]. A malformed, foreign, or truncated frame fails with
+//! a typed [`FrameError`] at the envelope boundary instead of a confusing
+//! decode failure (or worse) deep inside a message decoder. The
+//! in-process channels keep their historical raw encodings — `mpsc`
+//! already preserves boundaries, and framing there would silently change
+//! every measured byte count.
 
 use crate::dpf::{CorrectionWord, DpfKey, MasterKeyBatch, PublicPart};
 use crate::group::Group;
 use crate::udpf::{Hint, UdpfKey};
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
+/// LE u32 append — shared with the control-plane codec
+/// (`coordinator/wire.rs`), which builds on these primitives.
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn get_u32(bytes: &[u8], off: &mut usize) -> Option<u32> {
+/// LE u32 cursor read (`None` on truncation) — shared like [`put_u32`].
+pub(crate) fn get_u32(bytes: &[u8], off: &mut usize) -> Option<u32> {
     let v = u32::from_le_bytes(bytes.get(*off..*off + 4)?.try_into().ok()?);
     *off += 4;
     Some(v)
+}
+
+// ---- frame envelope (stream transports) --------------------------------
+
+/// Frame magic: the first bytes of every framed message. Chosen to be
+/// invalid UTF-8 and an implausible length prefix, so cross-protocol
+/// traffic (an HTTP client, a stray TLS hello) fails immediately.
+pub const FRAME_MAGIC: [u8; 2] = [0xF5, 0x1D];
+/// Wire-format version carried in every frame header. Bump on any
+/// incompatible change to the encodings in this module.
+pub const FRAME_VERSION: u8 = 1;
+/// Frame header layout: magic (2) + version (1) + payload length (4, LE).
+pub const FRAME_HEADER_LEN: usize = 7;
+/// Hard ceiling on a single frame's payload. Large enough for a full
+/// 2²⁵-element weight install, small enough that a corrupted length field
+/// cannot OOM the receiver.
+pub const MAX_FRAME_LEN: usize = 1 << 30;
+
+/// Typed frame-envelope failure. Everything here is detectable from the
+/// fixed-size header alone, *before* any payload is read or allocated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The first two bytes are not [`FRAME_MAGIC`] — not our protocol.
+    BadMagic([u8; 2]),
+    /// Magic matched but the version byte is foreign.
+    BadVersion(u8),
+    /// The declared payload length exceeds [`MAX_FRAME_LEN`].
+    Oversize(usize),
+    /// Fewer bytes than a header, or fewer payload bytes than declared.
+    Truncated { declared: usize, got: usize },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => {
+                write!(f, "bad frame magic {m:02x?} (expected {FRAME_MAGIC:02x?})")
+            }
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported frame version {v} (this build speaks {FRAME_VERSION})")
+            }
+            FrameError::Oversize(len) => {
+                write!(f, "frame declares {len} payload bytes (max {MAX_FRAME_LEN})")
+            }
+            FrameError::Truncated { declared, got } => {
+                write!(f, "truncated frame: declared {declared} bytes, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Wrap a payload in a frame envelope (header + payload, one allocation).
+///
+/// Panics if `payload` exceeds [`MAX_FRAME_LEN`] — senders build payloads
+/// from their own data, so an oversize frame is a programming error, not
+/// an input error.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    assert!(
+        payload.len() <= MAX_FRAME_LEN,
+        "frame payload of {} bytes exceeds MAX_FRAME_LEN",
+        payload.len()
+    );
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(FRAME_VERSION);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Validate a frame *header* and return the declared payload length.
+/// Stream receivers call this on the first [`FRAME_HEADER_LEN`] bytes to
+/// learn how much more to read — the [`MAX_FRAME_LEN`] guard runs here,
+/// before any payload allocation.
+pub fn frame_payload_len(header: &[u8]) -> Result<usize, FrameError> {
+    if header.len() < FRAME_HEADER_LEN {
+        return Err(FrameError::Truncated {
+            declared: FRAME_HEADER_LEN,
+            got: header.len(),
+        });
+    }
+    let magic = [header[0], header[1]];
+    if magic != FRAME_MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    if header[2] != FRAME_VERSION {
+        return Err(FrameError::BadVersion(header[2]));
+    }
+    let len = u32::from_le_bytes(header[3..7].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::Oversize(len));
+    }
+    Ok(len)
+}
+
+/// Unwrap one complete frame, returning its payload slice. The frame must
+/// span `bytes` exactly — trailing garbage is a truncation of the *next*
+/// frame and is reported as such.
+pub fn unframe(bytes: &[u8]) -> Result<&[u8], FrameError> {
+    let len = frame_payload_len(bytes)?;
+    let body = &bytes[FRAME_HEADER_LEN..];
+    if body.len() != len {
+        return Err(FrameError::Truncated {
+            declared: len,
+            got: body.len(),
+        });
+    }
+    Ok(body)
 }
 
 /// Encode a client's full key upload (master seed for one server + the
@@ -33,17 +156,52 @@ pub fn encode_key_upload<G: Group>(
     out.extend_from_slice(&batch.msk[server as usize]);
     out.push(include_publics as u8);
     if include_publics {
-        put_u32(&mut out, batch.publics.len() as u32);
-        for p in &batch.publics {
-            out.push(p.depth as u8);
-            for cw in &p.cws {
-                out.extend_from_slice(&cw.seed);
-                out.push(cw.t_left as u8 | ((cw.t_right as u8) << 1));
-            }
-            p.cw_out.encode(&mut out);
-        }
+        encode_publics(&mut out, &batch.publics);
     }
     out
+}
+
+/// Shared publics-region encoding (count + per-bin depth/CWs/output CW),
+/// used by both the client key upload and the full master-batch codec.
+fn encode_publics<G: Group>(out: &mut Vec<u8>, publics: &[PublicPart<G>]) {
+    put_u32(out, publics.len() as u32);
+    for p in publics {
+        out.push(p.depth as u8);
+        for cw in &p.cws {
+            out.extend_from_slice(&cw.seed);
+            out.push(cw.t_left as u8 | ((cw.t_right as u8) << 1));
+        }
+        p.cw_out.encode(out);
+    }
+}
+
+/// Shared publics-region decoding, advancing `off` past the region.
+fn decode_publics<G: Group>(bytes: &[u8], off: &mut usize) -> Option<Vec<PublicPart<G>>> {
+    let count = get_u32(bytes, off)? as usize;
+    // Each public part is ≥ 1 byte (depth tag); bound before allocating.
+    if count > bytes.len().saturating_sub(*off) {
+        return None;
+    }
+    let mut publics = Vec::with_capacity(count);
+    for _ in 0..count {
+        let depth = *bytes.get(*off)? as usize;
+        *off += 1;
+        let mut cws = Vec::with_capacity(depth);
+        for _ in 0..depth {
+            let seed: [u8; 16] = bytes.get(*off..*off + 16)?.try_into().ok()?;
+            let bits = *bytes.get(*off + 16)?;
+            *off += 17;
+            cws.push(CorrectionWord {
+                seed,
+                t_left: bits & 1 == 1,
+                t_right: bits & 2 == 2,
+            });
+        }
+        let cw_out = G::decode(bytes.get(*off..)?)?;
+        *off += G::byte_len();
+        publics.push(PublicPart { depth, cws, cw_out });
+    }
+    Some(publics)
 }
 
 /// Decoded key upload.
@@ -60,37 +218,39 @@ pub fn decode_key_upload<G: Group>(bytes: &[u8]) -> Option<KeyUpload<G>> {
     let has_publics = *bytes.get(17)? == 1;
     let mut off = 18;
     let publics = if has_publics {
-        let count = get_u32(bytes, &mut off)? as usize;
-        // Each public part is ≥ 1 byte (depth tag); bound before allocating.
-        if count > bytes.len().saturating_sub(off) {
-            return None;
-        }
-        let mut publics = Vec::with_capacity(count);
-        for _ in 0..count {
-            let depth = *bytes.get(off)? as usize;
-            off += 1;
-            let mut cws = Vec::with_capacity(depth);
-            for _ in 0..depth {
-                let seed: [u8; 16] = bytes.get(off..off + 16)?.try_into().ok()?;
-                let bits = *bytes.get(off + 16)?;
-                off += 17;
-                cws.push(CorrectionWord {
-                    seed,
-                    t_left: bits & 1 == 1,
-                    t_right: bits & 2 == 2,
-                });
-            }
-            let cw_out = G::decode(bytes.get(off..)?)?;
-            off += G::byte_len();
-            publics.push(PublicPart { depth, cws, cw_out });
-        }
-        Some(publics)
+        Some(decode_publics(bytes, &mut off)?)
     } else {
         None
     };
     Some(KeyUpload {
         server,
         msk,
+        publics,
+    })
+}
+
+/// Encode a complete [`MasterKeyBatch`] — *both* master seeds plus the
+/// shared publics. This never travels client→server (a client ships each
+/// server only that server's seed, [`encode_key_upload`]); it exists for
+/// the driver→leader control plane of remote verified-SSA rounds, where
+/// the driver hands `S_0` adversarial uploads whole, exactly as the
+/// in-process API does.
+pub fn encode_master_batch<G: Group>(batch: &MasterKeyBatch<G>) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&batch.msk[0]);
+    out.extend_from_slice(&batch.msk[1]);
+    encode_publics(&mut out, &batch.publics);
+    out
+}
+
+/// Parse [`encode_master_batch`] output (must span `bytes` exactly).
+pub fn decode_master_batch<G: Group>(bytes: &[u8]) -> Option<MasterKeyBatch<G>> {
+    let msk0: [u8; 16] = bytes.get(..16)?.try_into().ok()?;
+    let msk1: [u8; 16] = bytes.get(16..32)?.try_into().ok()?;
+    let mut off = 32;
+    let publics = decode_publics(bytes, &mut off)?;
+    (off == bytes.len()).then_some(MasterKeyBatch {
+        msk: [msk0, msk1],
         publics,
     })
 }
@@ -289,5 +449,68 @@ mod tests {
     fn malformed_rejected() {
         assert!(decode_key_upload::<u64>(&[0, 1, 2]).is_none());
         assert!(decode_shares::<u64>(&[9, 0, 0, 0, 1]).is_none());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_header_checks() {
+        let payload = vec![7u8, 8, 9];
+        let framed = frame(&payload);
+        assert_eq!(framed.len(), FRAME_HEADER_LEN + payload.len());
+        assert_eq!(unframe(&framed).unwrap(), &payload[..]);
+        assert_eq!(frame_payload_len(&framed).unwrap(), payload.len());
+        // Empty payloads frame too (ack-style messages).
+        assert_eq!(unframe(&frame(&[])).unwrap(), &[] as &[u8]);
+
+        let mut bad_magic = framed.clone();
+        bad_magic[0] ^= 0xff;
+        assert!(matches!(unframe(&bad_magic), Err(FrameError::BadMagic(_))));
+
+        let mut bad_version = framed.clone();
+        bad_version[2] = FRAME_VERSION + 1;
+        assert_eq!(
+            unframe(&bad_version),
+            Err(FrameError::BadVersion(FRAME_VERSION + 1))
+        );
+
+        // Truncations: inside the header and inside the payload.
+        for cut in 0..framed.len() {
+            assert!(
+                matches!(unframe(&framed[..cut]), Err(FrameError::Truncated { .. })),
+                "cut {cut}"
+            );
+        }
+
+        // An oversize declared length is rejected from the header alone.
+        let mut oversize = frame(&[1, 2, 3]);
+        oversize[3..7].copy_from_slice(&(MAX_FRAME_LEN as u32 + 1).to_le_bytes());
+        assert_eq!(
+            frame_payload_len(&oversize),
+            Err(FrameError::Oversize(MAX_FRAME_LEN + 1))
+        );
+    }
+
+    #[test]
+    fn master_batch_roundtrip() {
+        let mut rng = Rng::new(82);
+        let bins: Vec<BinPoint<u64>> = vec![
+            BinPoint { depth: 6, point: Some((9, 44)) },
+            BinPoint { depth: 3, point: None },
+        ];
+        let batch = gen_batch_with_master(&bins, rng.gen_seed(), rng.gen_seed());
+        let enc = encode_master_batch(&batch);
+        let dec = decode_master_batch::<u64>(&enc).unwrap();
+        assert_eq!(dec.msk, batch.msk);
+        assert_eq!(
+            encode_master_batch(&dec),
+            enc,
+            "re-encoding must be byte-identical"
+        );
+        for cut in 0..enc.len() {
+            assert!(decode_master_batch::<u64>(&enc[..cut]).is_none(), "cut {cut}");
+        }
+        // Trailing garbage is rejected (the batch must span exactly).
+        let mut padded = enc.clone();
+        padded.push(0);
+        assert!(decode_master_batch::<u64>(&padded).is_none());
     }
 }

@@ -1,0 +1,264 @@
+//! Loopback TCP transport integration: S0 and S1 as real server threads
+//! behind real sockets on ephemeral ports, driven by
+//! `FslRuntimeBuilder::connect` — asserting that every round type
+//! produces results bit-identical to the in-process transport, that
+//! shutdown is clean, and that a wedged peer times out instead of
+//! hanging the driver.
+
+use fsl::coordinator::{serve, FslRuntimeBuilder, KeyMode, ServeOptions};
+use fsl::crypto::rng::Rng;
+use fsl::hashing::CuckooParams;
+use fsl::net::transport::tcp::{TcpAcceptor, TcpOptions};
+use fsl::net::transport::{HelloAck, Listener};
+use fsl::protocol::{Session, SessionParams};
+use std::net::TcpListener;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+fn session(m: u64, k: usize, seed: u64) -> Session {
+    Session::new_full(SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams::default().with_seed(seed),
+    })
+}
+
+/// Spawn one standalone server on an ephemeral loopback port, exactly as
+/// `fsl serve` would run it (serial engine for determinism of timings).
+fn spawn_server(party: u8) -> (String, JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || {
+        let acceptor = TcpAcceptor::new(listener, TcpOptions::default());
+        let mut opts = ServeOptions::new(party);
+        opts.threads = 1;
+        serve::<u64>(&acceptor, &opts)
+    });
+    (addr, handle)
+}
+
+fn client_updates(s: &Session, n: usize, rng: &mut Rng) -> Vec<(Vec<u64>, Vec<u64>)> {
+    let (m, k) = (s.params.m, s.params.k);
+    (0..n)
+        .map(|c| {
+            let sel = rng.sample_distinct(k, m);
+            let dl = sel.iter().map(|&x| x * 7 + c as u64 + 1).collect();
+            (sel, dl)
+        })
+        .collect()
+}
+
+#[test]
+fn psr_and_ssa_over_tcp_match_in_process_bit_for_bit() {
+    let s = session(2048, 32, 0xBEEF);
+    let n = 3;
+    let weights: Vec<u64> = {
+        let mut rng = Rng::new(41);
+        (0..2048).map(|_| rng.next_u64()).collect()
+    };
+
+    // In-process reference: identical rng streams drive both transports.
+    let mut rng = Rng::new(42);
+    let mut rt = FslRuntimeBuilder::from_session(s.clone())
+        .threads(1)
+        .max_clients(n)
+        .build::<u64>()
+        .expect("in-proc build");
+    rt.set_weights(weights.clone()).unwrap();
+    let sels: Vec<Vec<u64>> = (0..n).map(|_| rng.sample_distinct(32, 2048)).collect();
+    let psr_ref = rt.psr(&sels, &mut rng).expect("in-proc psr");
+    let updates = client_updates(&s, n, &mut rng);
+    let ssa_ref = rt.ssa(&updates, &mut rng).expect("in-proc ssa");
+    rt.shutdown().expect("in-proc shutdown");
+
+    // TCP deployment: two real server threads on ephemeral ports.
+    let (addr0, h0) = spawn_server(0);
+    let (addr1, h1) = spawn_server(1);
+    let mut rng = Rng::new(42);
+    let mut rt = FslRuntimeBuilder::from_session(s.clone())
+        .max_clients(n)
+        .connect::<u64>(&addr0, &addr1)
+        .expect("tcp connect");
+    rt.set_weights(weights.clone()).unwrap();
+    let sels_tcp: Vec<Vec<u64>> = (0..n).map(|_| rng.sample_distinct(32, 2048)).collect();
+    assert_eq!(sels, sels_tcp, "identical rng streams must draw identically");
+    let psr_tcp = rt.psr(&sels_tcp, &mut rng).expect("tcp psr");
+    let updates_tcp = client_updates(&s, n, &mut rng);
+    let ssa_tcp = rt.ssa(&updates_tcp, &mut rng).expect("tcp ssa");
+
+    // Bit-identical results across transports.
+    assert_eq!(psr_ref.submodels, psr_tcp.submodels, "PSR must not depend on the transport");
+    assert_eq!(ssa_ref.delta, ssa_tcp.delta, "SSA must not depend on the transport");
+    for (sel, got) in sels.iter().zip(&psr_tcp.submodels) {
+        for (i, &x) in sel.iter().enumerate() {
+            assert_eq!(got[i], weights[x as usize]);
+        }
+    }
+
+    // Metering is honest per transport: TCP carries the same payloads
+    // plus a 7-byte frame header per message, so its client bytes are
+    // strictly larger but within the per-message overhead bound.
+    assert!(
+        psr_tcp.report.client_upload_bytes > psr_ref.report.client_upload_bytes,
+        "TCP wire bytes include framing"
+    );
+    assert!(ssa_tcp.report.server_exchange_bytes > 0, "S0<->S1 bytes surface remotely");
+
+    // Clean shutdown: both server processes (threads here) exit Ok.
+    rt.shutdown().expect("tcp shutdown");
+    h0.join().expect("S0 thread").expect("S0 serve Ok");
+    h1.join().expect("S1 thread").expect("S1 serve Ok");
+}
+
+#[test]
+fn udpf_epochs_over_tcp_match_in_process() {
+    let s = session(1024, 16, 0xD00D);
+    let n = 2;
+    let epochs = 3;
+
+    let run = |build: &dyn Fn() -> fsl::coordinator::FslRuntime<u64>| -> Vec<Vec<u64>> {
+        let mut rng = Rng::new(77);
+        let mut rt = build();
+        // The U-DPF contract: fixed client set and selections per epoch.
+        let updates = client_updates(&s, n, &mut rng);
+        let mut deltas = Vec::new();
+        for _ in 0..epochs {
+            deltas.push(rt.ssa(&updates, &mut rng).expect("udpf round").delta);
+        }
+        rt.shutdown().expect("shutdown");
+        deltas
+    };
+
+    let reference = run(&|| {
+        FslRuntimeBuilder::from_session(s.clone())
+            .threads(1)
+            .max_clients(n)
+            .key_mode(KeyMode::Udpf)
+            .build::<u64>()
+            .expect("in-proc build")
+    });
+
+    let (addr0, h0) = spawn_server(0);
+    let (addr1, h1) = spawn_server(1);
+    let over_tcp = run(&|| {
+        FslRuntimeBuilder::from_session(s.clone())
+            .max_clients(n)
+            .key_mode(KeyMode::Udpf)
+            .connect::<u64>(&addr0, &addr1)
+            .expect("tcp connect")
+    });
+
+    assert_eq!(reference, over_tcp, "U-DPF setup + hint epochs must match over TCP");
+    h0.join().unwrap().expect("S0 serve Ok");
+    h1.join().unwrap().expect("S1 serve Ok");
+}
+
+#[test]
+fn psu_alignment_over_tcp_matches_in_process() {
+    let s = session(4096, 24, 0xA11E);
+    let n = 3;
+    let key = [9u8; 16];
+
+    let run = |build: &dyn Fn() -> fsl::coordinator::FslRuntime<u64>| {
+        let mut rng = Rng::new(55);
+        let mut rt = build();
+        let sets: Vec<Vec<u64>> =
+            (0..n).map(|_| rng.sample_distinct(24, 4096)).collect();
+        let psu = rt.psu_align(&key, &sets, &mut rng).expect("psu round");
+        let theta = rt.session().theta();
+        // One SSA round on the shrunken union domain.
+        let updates: Vec<(Vec<u64>, Vec<u64>)> = sets
+            .iter()
+            .map(|sel| (sel.clone(), sel.iter().map(|&x| x + 3).collect()))
+            .collect();
+        let delta = rt.ssa(&updates, &mut rng).expect("post-psu ssa").delta;
+        rt.shutdown().expect("shutdown");
+        (psu.union_len, theta, delta)
+    };
+
+    let reference = run(&|| {
+        FslRuntimeBuilder::from_session(s.clone())
+            .threads(1)
+            .max_clients(n)
+            .build::<u64>()
+            .expect("in-proc build")
+    });
+
+    let (addr0, h0) = spawn_server(0);
+    let (addr1, h1) = spawn_server(1);
+    let over_tcp = run(&|| {
+        FslRuntimeBuilder::from_session(s.clone())
+            .max_clients(n)
+            .connect::<u64>(&addr0, &addr1)
+            .expect("tcp connect")
+    });
+
+    assert_eq!(reference, over_tcp, "PSU union install must match over TCP");
+    h0.join().unwrap().expect("S0 serve Ok");
+    h1.join().unwrap().expect("S1 serve Ok");
+}
+
+#[test]
+fn wedged_peer_times_out_instead_of_hanging() {
+    // A fake S1 that completes every handshake and then goes silent: the
+    // driver's connect must fail within its reply timeout — not hang —
+    // with an error naming the silent server.
+    let n = 2;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr1 = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let acceptor = TcpAcceptor::new(listener, TcpOptions::default());
+        let mut keep_alive = Vec::new();
+        // Ack the control conn and every client link, then wedge.
+        for _ in 0..(1 + n) {
+            if let Ok((conn, _hello)) = acceptor.accept() {
+                let _ = conn.send(HelloAck { party: 1, error: None }.encode());
+                keep_alive.push(conn);
+            }
+        }
+        std::thread::sleep(Duration::from_secs(20));
+        drop(keep_alive);
+    });
+    // Real S0 (its serve thread parks on the never-dialled peer accept;
+    // intentionally not joined).
+    let (addr0, _h0) = spawn_server(0);
+
+    let t0 = std::time::Instant::now();
+    let err = FslRuntimeBuilder::from_session(session(512, 8, 1))
+        .max_clients(n)
+        .reply_timeout(Duration::from_millis(400))
+        .connect::<u64>(&addr0, &addr1)
+        .map(|_| ())
+        .unwrap_err();
+    let rendered = format!("{err:?}");
+    assert!(rendered.contains("S1"), "error should name the silent server: {rendered}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "a wedged peer must time out promptly, took {:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn payload_group_mismatch_is_rejected_at_the_handshake() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr0 = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let acceptor = TcpAcceptor::new(listener, TcpOptions::default());
+        let mut opts = ServeOptions::new(0);
+        opts.threads = 1;
+        // A u64 server; the driver below speaks u128. (Never completes a
+        // deployment — intentionally not joined.)
+        let _ = serve::<u64>(&acceptor, &opts);
+    });
+    let err = FslRuntimeBuilder::from_session(session(512, 8, 2))
+        .connect_timeout(Duration::from_secs(5))
+        .connect::<u128>(&addr0, "127.0.0.1:1") // S1 never reached
+        .map(|_| ())
+        .unwrap_err();
+    let rendered = format!("{err:?}");
+    assert!(
+        rendered.contains("group mismatch"),
+        "the handshake should explain the group mismatch: {rendered}"
+    );
+}

@@ -203,6 +203,96 @@ fn prop_random_blobs_never_panic() {
 }
 
 #[test]
+fn prop_frame_roundtrips_and_rejects_every_corruption() {
+    // The frame envelope (magic + version + length) in front of every
+    // stream-transport message: round-trips bit-exactly, rejects every
+    // strict prefix as Truncated, and classifies every single-byte header
+    // corruption as a *typed* error (never a panic, never a silent
+    // misparse into a different payload).
+    for seed in 500..520u64 {
+        let mut rng = Rng::new(seed);
+        let len = rng.gen_range(300) as usize;
+        let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let framed = msg::frame(&payload);
+        assert_eq!(framed.len(), msg::FRAME_HEADER_LEN + payload.len());
+        assert_eq!(msg::unframe(&framed).unwrap(), &payload[..], "seed {seed}");
+        assert_eq!(
+            msg::frame_payload_len(&framed).unwrap(),
+            payload.len(),
+            "seed {seed}"
+        );
+
+        // Every strict prefix is a truncation.
+        for cut in 0..framed.len() {
+            assert!(
+                matches!(
+                    msg::unframe(&framed[..cut]),
+                    Err(msg::FrameError::Truncated { .. })
+                ),
+                "seed {seed} cut {cut}"
+            );
+        }
+
+        // Single-byte corruption at every header position, two flip
+        // patterns: the error is typed by which field broke.
+        for pos in 0..msg::FRAME_HEADER_LEN {
+            for flip in [0x01u8, 0xff] {
+                let mut bad = framed.clone();
+                bad[pos] ^= flip;
+                let res = msg::unframe(&bad);
+                match pos {
+                    0 | 1 => assert!(
+                        matches!(res, Err(msg::FrameError::BadMagic(_))),
+                        "seed {seed} pos {pos}"
+                    ),
+                    2 => assert!(
+                        matches!(res, Err(msg::FrameError::BadVersion(_))),
+                        "seed {seed} pos {pos}"
+                    ),
+                    // A corrupted length field must surface as Oversize
+                    // or Truncated — and never accept the frame, since
+                    // the length can only change away from the truth.
+                    _ => assert!(
+                        matches!(
+                            res,
+                            Err(msg::FrameError::Oversize(_))
+                                | Err(msg::FrameError::Truncated { .. })
+                        ),
+                        "seed {seed} pos {pos} flip {flip:#x}: {res:?}"
+                    ),
+                }
+            }
+        }
+
+        // Corrupting the payload leaves the envelope valid (payload
+        // integrity is the inner decoder's problem, by design).
+        if !payload.is_empty() {
+            let mut bad = framed.clone();
+            let pos = msg::FRAME_HEADER_LEN + rng.gen_range(payload.len() as u64) as usize;
+            bad[pos] ^= 0xff;
+            assert!(msg::unframe(&bad).is_ok(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn frame_oversize_guard_fires_before_allocation() {
+    // A length field claiming more than MAX_FRAME_LEN is rejected from
+    // the 7 header bytes alone — no payload allocation can happen.
+    let mut header = Vec::new();
+    header.extend_from_slice(&msg::FRAME_MAGIC);
+    header.push(msg::FRAME_VERSION);
+    header.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert_eq!(
+        msg::frame_payload_len(&header),
+        Err(msg::FrameError::Oversize(u32::MAX as usize))
+    );
+    // The error Display names the limit (actionable without the source).
+    let rendered = msg::FrameError::Oversize(u32::MAX as usize).to_string();
+    assert!(rendered.contains(&msg::MAX_FRAME_LEN.to_string()), "{rendered}");
+}
+
+#[test]
 fn adversarial_length_fields_are_bounded_before_allocation() {
     // A malicious count must be rejected by the pre-allocation bound, not
     // by OOM: huge counts over tiny payloads return None.

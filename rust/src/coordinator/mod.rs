@@ -28,9 +28,10 @@ mod round;
 mod runtime;
 mod serve;
 mod server;
+pub mod snapshot;
 mod topk;
 mod verified;
-mod wire;
+pub mod wire;
 
 pub use client::{local_train, sparse_delta, ClientRoundOutput};
 pub use config::FslConfig;
@@ -39,8 +40,8 @@ pub use serve::{serve, serve_addr, ServeOptions};
 pub use psr_round::{run_psr_round, run_psr_round_with, PsrRoundResult};
 pub use round::{run_fsl_training, run_plain_training, RoundStats, TrainingLog};
 pub use runtime::{
-    FslRuntime, FslRuntimeBuilder, KeyMode, PsrOutcome, PsuOutcome, RoundKind, RoundReport,
-    SsaOutcome, VerifiedSsaOutcome,
+    ClientOutcome, FslRuntime, FslRuntimeBuilder, KeyMode, PsrOutcome, PsuOutcome, RoundKind,
+    RoundReport, SsaOutcome, UdpfDriverState, VerifiedSsaOutcome,
 };
 #[allow(deprecated)]
 pub use server::{run_ssa_round, run_ssa_round_with, SsaRoundResult};

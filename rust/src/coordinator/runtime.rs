@@ -56,7 +56,9 @@ use crate::group::Group;
 use crate::metrics::CommMeter;
 use crate::net::{self, LinkProfile};
 use crate::net::transport::tcp::{TcpOptions, TcpTransport};
-use crate::net::transport::{BoxTransport, Hello, InProc, Role, Transport};
+use crate::net::transport::{
+    BoxTransport, FaultPlan, Hello, InProc, Role, Transport, TransportError,
+};
 use crate::protocol::aggregate::uploads_of;
 use crate::protocol::{
     msg, psr, psu, ssa, udpf_ssa, AggregationEngine, RetrievalEngine, Session, SessionParams,
@@ -111,6 +113,36 @@ impl RoundKind {
     }
 }
 
+/// How one client fared in a round. Strict rounds (no upload deadline)
+/// only ever produce `Completed` — any failure aborts the whole round
+/// instead. Tolerant rounds ([`FslRuntimeBuilder::upload_deadline`])
+/// record per-client fates and complete on the surviving cohort.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientOutcome {
+    /// Upload arrived intact on both servers within the deadline.
+    Completed,
+    /// The client's link closed or its upload was malformed — or the
+    /// *other* server failed to hear it (cohort agreement drops a client
+    /// unless both servers heard it).
+    Dropped,
+    /// The client stayed silent past the upload deadline. Like `Dropped`
+    /// it is evicted from every later round: its late bytes must never be
+    /// mistaken for the next round's upload.
+    StragglerCut,
+}
+
+impl ClientOutcome {
+    /// Stable machine-readable name (the `outcomes` entries of
+    /// [`RoundReport::to_json`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ClientOutcome::Completed => "completed",
+            ClientOutcome::Dropped => "dropped",
+            ClientOutcome::StragglerCut => "straggler_cut",
+        }
+    }
+}
+
 /// Uniform per-round metering — the one result shape every round method
 /// returns alongside its payload. Byte counters are *measured* wire bytes
 /// from the channel meters (reset at round start, so each report covers
@@ -134,18 +166,37 @@ pub struct RoundReport {
     pub server_time: Duration,
     /// End-to-end round wall-clock as seen by the driver.
     pub wall_time: Duration,
+    /// Per-client fates, indexed like the round's client slice. Strict
+    /// rounds report every client `Completed` (a failure would have
+    /// aborted the round instead).
+    pub outcomes: Vec<ClientOutcome>,
 }
 
 impl RoundReport {
+    /// Clients that completed this round (survivor count).
+    pub fn completed(&self) -> usize {
+        self.outcomes
+            .iter()
+            .filter(|o| **o == ClientOutcome::Completed)
+            .count()
+    }
+
     /// One-line JSON rendering for machine consumption (the CLI's
     /// `--json` mode, multi-process CI assertions, dashboards). Times are
     /// fractional milliseconds; byte fields are exact.
     pub fn to_json(&self) -> String {
         let ms = |d: Duration| d.as_secs_f64() * 1e3;
+        let outcomes = self
+            .outcomes
+            .iter()
+            .map(|o| format!("\"{}\"", o.as_str()))
+            .collect::<Vec<_>>()
+            .join(",");
         format!(
             "{{\"kind\":\"{}\",\"clients\":{},\"client_upload_bytes\":{},\
              \"client_download_bytes\":{},\"server_exchange_bytes\":{},\
-             \"gen_ms\":{:.3},\"server_ms\":{:.3},\"wall_ms\":{:.3}}}",
+             \"gen_ms\":{:.3},\"server_ms\":{:.3},\"wall_ms\":{:.3},\
+             \"outcomes\":[{}]}}",
             self.kind.as_str(),
             self.clients,
             self.client_upload_bytes,
@@ -154,6 +205,7 @@ impl RoundReport {
             ms(self.gen_time),
             ms(self.server_time),
             ms(self.wall_time),
+            outcomes,
         )
     }
 }
@@ -230,6 +282,9 @@ pub struct FslRuntimeBuilder {
     key_mode: KeyMode,
     reply_timeout: Duration,
     connect_timeout: Duration,
+    connect_retry: Duration,
+    upload_deadline: Option<Duration>,
+    faults: Vec<(usize, FaultPlan)>,
 }
 
 impl FslRuntimeBuilder {
@@ -253,6 +308,9 @@ impl FslRuntimeBuilder {
             key_mode: KeyMode::Fresh,
             reply_timeout: REPLY_TIMEOUT,
             connect_timeout: CONNECT_TIMEOUT,
+            connect_retry: Duration::ZERO,
+            upload_deadline: None,
+            faults: Vec::new(),
         }
     }
 
@@ -318,6 +376,37 @@ impl FslRuntimeBuilder {
         self
     }
 
+    /// Keep retrying refused/failed TCP dials for this long in
+    /// [`Self::connect`] (exponential backoff, 100 ms doubling to a 2 s
+    /// cap). `ZERO` (the default) means a single attempt. A typed
+    /// handshake *rejection* (wrong party/group) is permanent and fails
+    /// immediately regardless of the window. This is what lets a driver
+    /// reconnect to servers that are still restarting from a snapshot.
+    pub fn connect_retry(mut self, window: Duration) -> Self {
+        self.connect_retry = window;
+        self
+    }
+
+    /// Tolerate client dropouts and stragglers: bound every per-client
+    /// upload receive by `deadline` and let rounds complete on the
+    /// surviving cohort, recording per-client [`ClientOutcome`]s in the
+    /// [`RoundReport`]. Without a deadline (the default) rounds are
+    /// strict: any client failure aborts the round and poisons the
+    /// runtime, the historical behaviour.
+    pub fn upload_deadline(mut self, deadline: Duration) -> Self {
+        self.upload_deadline = Some(deadline);
+        self
+    }
+
+    /// Inject a deterministic [`FaultPlan`] on client `i`'s links (both
+    /// directions share one byte/message budget, so a plan can cut a
+    /// client *between* its two SSA uploads). Works identically over
+    /// in-process channels and TCP sockets.
+    pub fn client_fault(mut self, client: usize, plan: FaultPlan) -> Self {
+        self.faults.push((client, plan));
+        self
+    }
+
     /// Engine workers per server: an explicit count, or `0` for the
     /// co-located-two-server default (half the cores each) — the
     /// [`Sharding::from_config`] convention shared with `FslConfig`.
@@ -347,6 +436,31 @@ impl FslRuntimeBuilder {
             SessionSpec::Union(params, union) => Session::new_union(params, union)?,
             SessionSpec::Prebuilt(s) => s,
         })
+    }
+
+    /// Wrap each faulted client's links with one shared injector.
+    fn apply_faults(links: Vec<Links>, faults: &[(usize, FaultPlan)]) -> Result<Vec<Links>> {
+        for (i, _) in faults {
+            ensure!(
+                *i < links.len(),
+                "fault plan targets client {i} but capacity is max_clients = {}",
+                links.len()
+            );
+        }
+        Ok(links
+            .into_iter()
+            .enumerate()
+            .map(|(i, l)| match faults.iter().find(|(c, _)| *c == i) {
+                Some((_, plan)) => {
+                    let inj = plan.clone().injector();
+                    Links {
+                        to_s0: inj.wrap(l.to_s0),
+                        to_s1: inj.wrap(l.to_s1),
+                    }
+                }
+                None => l,
+            })
+            .collect())
     }
 
     /// Spawn the two server threads and hand back the living runtime.
@@ -384,6 +498,9 @@ impl FslRuntimeBuilder {
                 inter: Some(Box::new(InProc(inter)) as BoxTransport),
                 weights: None,
                 udpf: Vec::new(),
+                udpf_links: Vec::new(),
+                udpf_total: 0,
+                dead: Vec::new(),
                 timeout: self.reply_timeout,
             };
             let handle = std::thread::Builder::new()
@@ -396,13 +513,17 @@ impl FslRuntimeBuilder {
                 handle: Some(handle),
             });
         }
-        let links = client_links
-            .into_iter()
-            .map(|cl| Links {
-                to_s0: Box::new(InProc(cl.to_s0)) as BoxTransport,
-                to_s1: Box::new(InProc(cl.to_s1)) as BoxTransport,
-            })
-            .collect();
+        let links = Self::apply_faults(
+            client_links
+                .into_iter()
+                .map(|cl| Links {
+                    to_s0: Box::new(InProc(cl.to_s0)) as BoxTransport,
+                    to_s1: Box::new(InProc(cl.to_s1)) as BoxTransport,
+                })
+                .collect(),
+            &self.faults,
+        )?;
+        let n = links.len();
         Ok(FslRuntime {
             session,
             key_mode: self.key_mode,
@@ -410,6 +531,8 @@ impl FslRuntimeBuilder {
             inter_meters,
             server_links,
             reply_timeout: self.reply_timeout,
+            upload_deadline: self.upload_deadline,
+            dead: vec![false; n],
             weights_len: None,
             udpf_clients: Vec::new(),
             udpf_selections: Vec::new(),
@@ -458,17 +581,18 @@ impl FslRuntimeBuilder {
                     group: group.clone(),
                 },
             };
-            let ctrl = TcpTransport::connect(addr, &hello, &opts)
+            let ctrl = dial_with_retry(addr, &hello, &opts, self.connect_retry)
                 .map_err(|e| e.context(format!("control channel to S{party} at {addr}")))?;
             let mut eps: Vec<BoxTransport> = Vec::with_capacity(n);
             for id in 0..n {
-                let link = TcpTransport::connect(
+                let link = dial_with_retry(
                     addr,
                     &Hello {
                         party,
                         role: Role::Client { id: id as u32 },
                     },
                     &opts,
+                    self.connect_retry,
                 )
                 .map_err(|e| e.context(format!("client link {id} to S{party} at {addr}")))?;
                 eps.push(Box::new(link) as BoxTransport);
@@ -477,11 +601,13 @@ impl FslRuntimeBuilder {
         }
         let (ctrl1, eps1) = per_party.pop().expect("two parties");
         let (ctrl0, eps0) = per_party.pop().expect("two parties");
-        let links = eps0
-            .into_iter()
-            .zip(eps1)
-            .map(|(to_s0, to_s1)| Links { to_s0, to_s1 })
-            .collect();
+        let links = Self::apply_faults(
+            eps0.into_iter()
+                .zip(eps1)
+                .map(|(to_s0, to_s1)| Links { to_s0, to_s1 })
+                .collect(),
+            &self.faults,
+        )?;
         let mut rt = FslRuntime {
             session: session.clone(),
             key_mode: self.key_mode,
@@ -494,6 +620,8 @@ impl FslRuntimeBuilder {
                 ServerLink::Remote { ctrl: ctrl1 },
             ],
             reply_timeout: self.reply_timeout,
+            upload_deadline: self.upload_deadline,
+            dead: vec![false; n],
             weights_len: None,
             udpf_clients: Vec::new(),
             udpf_selections: Vec::new(),
@@ -514,6 +642,35 @@ impl FslRuntimeBuilder {
         rt.command(0, ServerCmd::SetSession(session))?;
         rt.expect_ack(0, "installing the session on S0")?;
         Ok(rt)
+    }
+}
+
+/// Dial one TCP link, retrying refused/failed connections with
+/// exponential backoff for up to `window` (`ZERO` = single attempt).
+/// A typed handshake rejection is permanent — retrying a wrong-party or
+/// wrong-group dial can never succeed, so it fails immediately.
+fn dial_with_retry(
+    addr: &str,
+    hello: &Hello,
+    opts: &TcpOptions,
+    window: Duration,
+) -> Result<TcpTransport> {
+    let deadline = Instant::now() + window;
+    let mut backoff = Duration::from_millis(100);
+    loop {
+        match TcpTransport::connect(addr, hello, opts) {
+            Ok(t) => return Ok(t),
+            Err(e) => {
+                let rejected =
+                    matches!(TransportError::of(&e), Some(TransportError::Rejected(_)));
+                let now = Instant::now();
+                if rejected || now >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(backoff.min(deadline - now));
+                backoff = (backoff * 2).min(Duration::from_secs(2));
+            }
+        }
     }
 }
 
@@ -589,6 +746,13 @@ pub struct FslRuntime<G: Group> {
     inter_meters: Vec<Arc<CommMeter>>,
     server_links: Vec<ServerLink<G>>,
     reply_timeout: Duration,
+    /// `Some` = tolerant rounds: per-client upload receives are bounded
+    /// by this deadline and rounds complete on the surviving cohort.
+    upload_deadline: Option<Duration>,
+    /// Clients evicted by an earlier tolerant round (their links may
+    /// carry stale bytes): the driver never sends to or reads from them
+    /// again, mirroring the servers' own eviction.
+    dead: Vec<bool>,
     /// Driver-side record of the installed weight vector length (the
     /// vectors themselves live on the servers).
     weights_len: Option<usize>,
@@ -667,10 +831,53 @@ impl<G: Group> FslRuntime<G> {
         }
         let gen_time = t_gen.elapsed();
 
-        self.command_both(ServerCmd::Psr { n })?;
+        self.command_both(ServerCmd::Psr {
+            n,
+            deadline_nanos: self.deadline_nanos(),
+        })?;
         // From here on the servers are mid-round: any failure may leave
         // the reply/data streams desynchronised, so errors poison.
         let timeout = self.reply_timeout;
+        let num_bins = self.session.simple.num_bins();
+        if self.tolerant() {
+            // Best-effort uploads, skipping evicted clients; a faulted
+            // send is the client's own failure, not the round's.
+            for (i, (links, batch)) in self.links.iter().zip(&batches).enumerate() {
+                if self.dead[i] {
+                    continue;
+                }
+                let _ = links.to_s0.send(msg::encode_key_upload(batch, 0, true));
+                let _ = links.to_s1.send(msg::encode_key_upload(batch, 1, true));
+            }
+            // Learn the agreed cohort *before* reading answers: the
+            // servers answer only agreed survivors, so waiting on a
+            // dropped client's answer would wedge until the timeout.
+            let (server_time, _, inter, outcomes) = self.round_replies(n)?;
+            let exchanged: Result<Vec<Vec<G>>> = (|| {
+                let mut submodels = Vec::with_capacity(n);
+                for i in 0..n {
+                    if outcomes[i] != ClientOutcome::Completed {
+                        submodels.push(Vec::new());
+                        continue;
+                    }
+                    let links = &self.links[i];
+                    let a0 = msg::decode_shares::<G>(&links.to_s0.recv_timeout(timeout)?)
+                        .ok_or_else(|| anyhow!("bad S0 answer"))?;
+                    let a1 = msg::decode_shares::<G>(&links.to_s1.recv_timeout(timeout)?)
+                        .ok_or_else(|| anyhow!("bad S1 answer"))?;
+                    submodels.push(psr::client_reconstruct(
+                        &ctxs[i], num_bins, &clients[i], &a0, &a1,
+                    ));
+                }
+                Ok(submodels)
+            })();
+            let submodels = self.poisoning(exchanged)?;
+            self.absorb_outcomes(&outcomes);
+            let report = self.report(
+                RoundKind::Psr, n, gen_time, server_time, wall.elapsed(), inter, outcomes,
+            );
+            return Ok(PsrOutcome { submodels, report });
+        }
         let exchanged: Result<Vec<Vec<G>>> = (|| {
             // PSR sends full key material to both servers (no forwarding —
             // the answer flows back on the same link).
@@ -679,7 +886,6 @@ impl<G: Group> FslRuntime<G> {
                 links.to_s1.send(msg::encode_key_upload(batch, 1, true))?;
             }
             // Clients reconstruct from both servers' answers.
-            let num_bins = self.session.simple.num_bins();
             let mut submodels = Vec::with_capacity(n);
             for ((links, ctx), sel) in self.links.iter().zip(&ctxs).zip(clients) {
                 let a0 = msg::decode_shares::<G>(&links.to_s0.recv_timeout(timeout)?)
@@ -691,8 +897,10 @@ impl<G: Group> FslRuntime<G> {
             Ok(submodels)
         })();
         let submodels = self.poisoning(exchanged)?;
-        let (server_time, _, inter) = self.round_replies()?;
-        let report = self.report(RoundKind::Psr, n, gen_time, server_time, wall.elapsed(), inter);
+        let (server_time, _, inter, outcomes) = self.round_replies(n)?;
+        let report = self.report(
+            RoundKind::Psr, n, gen_time, server_time, wall.elapsed(), inter, outcomes,
+        );
         Ok(PsrOutcome { submodels, report })
     }
 
@@ -726,7 +934,10 @@ impl<G: Group> FslRuntime<G> {
         }
         let gen_time = t_gen.elapsed();
 
-        self.command_both(ServerCmd::Ssa { n })?;
+        self.command_both(ServerCmd::Ssa {
+            n,
+            deadline_nanos: self.deadline_nanos(),
+        })?;
         // Long upload (master seed + publics) to the leader; short upload
         // (master seed only) to the worker — §4's efficiency trick, with
         // the publics forwarded S_0 → S_1 server-side. All the short
@@ -734,16 +945,31 @@ impl<G: Group> FslRuntime<G> {
         // S_0's forwarded publics fill the peer pipe — over real sockets
         // with finite kernel buffers the interleaved order can deadlock
         // at large m (driver → S_0 → inter → S_1 → driver cycle).
-        let sent: Result<()> = (|| {
-            for (links, batch) in self.links.iter().zip(&uploads) {
-                links.to_s1.send(msg::encode_key_upload(batch, 1, false))?;
+        if self.tolerant() {
+            for (i, (links, batch)) in self.links.iter().zip(&uploads).enumerate() {
+                if self.dead[i] {
+                    continue;
+                }
+                let _ = links.to_s1.send(msg::encode_key_upload(batch, 1, false));
             }
-            for (links, batch) in self.links.iter().zip(&uploads) {
-                links.to_s0.send(msg::encode_key_upload(batch, 0, true))?;
+            for (i, (links, batch)) in self.links.iter().zip(&uploads).enumerate() {
+                if self.dead[i] {
+                    continue;
+                }
+                let _ = links.to_s0.send(msg::encode_key_upload(batch, 0, true));
             }
-            Ok(())
-        })();
-        self.poisoning(sent)?;
+        } else {
+            let sent: Result<()> = (|| {
+                for (links, batch) in self.links.iter().zip(&uploads) {
+                    links.to_s1.send(msg::encode_key_upload(batch, 1, false))?;
+                }
+                for (links, batch) in self.links.iter().zip(&uploads) {
+                    links.to_s0.send(msg::encode_key_upload(batch, 0, true))?;
+                }
+                Ok(())
+            })();
+            self.poisoning(sent)?;
+        }
         self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)
     }
 
@@ -780,22 +1006,45 @@ impl<G: Group> FslRuntime<G> {
             }
             self.udpf_selections = clients.iter().map(|(sel, _)| distinct_sorted(sel)).collect();
             let gen_time = t_gen.elapsed();
-            self.command_both(ServerCmd::UdpfSetup { n })?;
-            let sent: Result<()> = (|| {
-                for ((links, k0), k1) in self.links.iter().zip(&keys0).zip(&keys1) {
-                    links.to_s0.send(msg::encode_udpf_keys(&k0.keys))?;
-                    links.to_s1.send(msg::encode_udpf_keys(&k1.keys))?;
+            self.command_both(ServerCmd::UdpfSetup {
+                n,
+                deadline_nanos: self.deadline_nanos(),
+            })?;
+            if self.tolerant() {
+                for (i, ((links, k0), k1)) in
+                    self.links.iter().zip(&keys0).zip(&keys1).enumerate()
+                {
+                    if self.dead[i] {
+                        continue;
+                    }
+                    let _ = links.to_s0.send(msg::encode_udpf_keys(&k0.keys));
+                    let _ = links.to_s1.send(msg::encode_udpf_keys(&k1.keys));
                 }
-                Ok(())
-            })();
-            self.poisoning(sent)?;
+            } else {
+                let sent: Result<()> = (|| {
+                    for ((links, k0), k1) in self.links.iter().zip(&keys0).zip(&keys1) {
+                        links.to_s0.send(msg::encode_udpf_keys(&k0.keys))?;
+                        links.to_s1.send(msg::encode_udpf_keys(&k1.keys))?;
+                    }
+                    Ok(())
+                })();
+                self.poisoning(sent)?;
+            }
+            // Advance only once the round succeeded: a failed setup (or a
+            // crashed server) leaves the epoch untouched, so a recovered
+            // deployment retries the *same* epoch.
+            let out = self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)?;
             self.udpf_epoch = 1;
-            self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)
+            Ok(out)
         } else {
             // Hint round: one ⌈log 𝔾⌉-bit CW per bin/stash slot. The
             // retained keys fix each client's cuckoo placement, so the
-            // selection sets must match epoch 0 exactly.
+            // selection sets must match epoch 0 exactly (evicted clients
+            // are exempt — they no longer participate).
             for (i, ((sel, _), fixed)) in clients.iter().zip(&self.udpf_selections).enumerate() {
+                if *self.dead.get(i).unwrap_or(&false) {
+                    continue;
+                }
                 ensure!(
                     distinct_sorted(sel) == *fixed,
                     "U-DPF rounds keep selections fixed: client {i}'s selection set changed \
@@ -807,18 +1056,34 @@ impl<G: Group> FslRuntime<G> {
                 all_hints.push(state.epoch_hints(&self.session, sel, deltas, epoch));
             }
             let gen_time = t_gen.elapsed();
-            self.command_both(ServerCmd::UdpfEpoch { n, epoch })?;
-            let sent: Result<()> = (|| {
-                for (links, hints) in self.links.iter().zip(&all_hints) {
+            self.command_both(ServerCmd::UdpfEpoch {
+                n,
+                epoch,
+                deadline_nanos: self.deadline_nanos(),
+            })?;
+            if self.tolerant() {
+                for (i, (links, hints)) in self.links.iter().zip(&all_hints).enumerate() {
+                    if self.dead[i] {
+                        continue;
+                    }
                     let encoded = msg::encode_hints(hints);
-                    links.to_s0.send(encoded.clone())?;
-                    links.to_s1.send(encoded)?;
+                    let _ = links.to_s0.send(encoded.clone());
+                    let _ = links.to_s1.send(encoded);
                 }
-                Ok(())
-            })();
-            self.poisoning(sent)?;
+            } else {
+                let sent: Result<()> = (|| {
+                    for (links, hints) in self.links.iter().zip(&all_hints) {
+                        let encoded = msg::encode_hints(hints);
+                        links.to_s0.send(encoded.clone())?;
+                        links.to_s1.send(encoded)?;
+                    }
+                    Ok(())
+                })();
+                self.poisoning(sent)?;
+            }
+            let out = self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)?;
             self.udpf_epoch = epoch + 1;
-            self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)
+            Ok(out)
         }
     }
 
@@ -851,8 +1116,15 @@ impl<G: Group> FslRuntime<G> {
                 let wall_time = wall.elapsed();
                 // Verified rounds run wholly on the leader: no S_0 ↔ S_1
                 // traffic either locally or remotely.
-                let report = self
-                    .report(RoundKind::VerifiedSsa, n, Duration::ZERO, server_time, wall_time, 0);
+                let report = self.report(
+                    RoundKind::VerifiedSsa,
+                    n,
+                    Duration::ZERO,
+                    server_time,
+                    wall_time,
+                    0,
+                    vec![ClientOutcome::Completed; n],
+                );
                 Ok(VerifiedSsaOutcome {
                     delta: result.delta,
                     rejected: result.rejected,
@@ -923,12 +1195,13 @@ impl<G: Group> FslRuntime<G> {
             union.ok_or_else(|| anyhow!("PSU round served no clients"))
         })();
         let union = self.poisoning(exchanged)?;
-        let (server_time, _, inter) = self.round_replies()?;
+        let (server_time, _, inter, outcomes) = self.round_replies(n)?;
         let union_len = union.len();
         let session = Session::new_union(self.session.params.clone(), union)?;
         self.install_session(Arc::new(session))?;
-        let report =
-            self.report(RoundKind::PsuAlign, n, gen_time, server_time, wall.elapsed(), inter);
+        let report = self.report(
+            RoundKind::PsuAlign, n, gen_time, server_time, wall.elapsed(), inter, outcomes,
+        );
         Ok(PsuOutcome { union_len, report })
     }
 
@@ -987,10 +1260,34 @@ impl<G: Group> FslRuntime<G> {
         gen_time: Duration,
         wall: Instant,
     ) -> Result<SsaOutcome<G>> {
-        let (server_time, delta, inter) = self.round_replies()?;
+        let (server_time, delta, inter, outcomes) = self.round_replies(n)?;
         let delta = self.poisoning(delta.ok_or_else(|| anyhow!("leader sent no delta")))?;
-        let report = self.report(kind, n, gen_time, server_time, wall.elapsed(), inter);
+        self.absorb_outcomes(&outcomes);
+        let report = self.report(kind, n, gen_time, server_time, wall.elapsed(), inter, outcomes);
         Ok(SsaOutcome { delta, report })
+    }
+
+    /// Whether rounds run in dropout-tolerant mode.
+    fn tolerant(&self) -> bool {
+        self.upload_deadline.is_some()
+    }
+
+    /// The wire form of the upload deadline (`0` = strict).
+    fn deadline_nanos(&self) -> u64 {
+        self.upload_deadline.map(|d| d.as_nanos() as u64).unwrap_or(0)
+    }
+
+    /// Evict every non-completed client: its link may hold late bytes
+    /// that must never be read as a later round's upload. Mirrors the
+    /// servers' own eviction, keeping all three parties consistent.
+    fn absorb_outcomes(&mut self, outcomes: &[ClientOutcome]) {
+        for (i, o) in outcomes.iter().enumerate() {
+            if *o != ClientOutcome::Completed {
+                if let Some(d) = self.dead.get_mut(i) {
+                    *d = true;
+                }
+            }
+        }
     }
 
     /// Pass a mid-round result through, poisoning the runtime on failure:
@@ -1053,20 +1350,27 @@ impl<G: Group> FslRuntime<G> {
     }
 
     /// Collect one round reply per server (draining both even on
-    /// failure): max server time, the leader's optional delta, and the
+    /// failure): max server time, the leader's optional delta, the
     /// servers' summed `S_0 ↔ S_1` bytes (remote deployments only —
-    /// in-process replies carry 0 and the driver reads its own meters).
-    fn round_replies(&mut self) -> Result<(Duration, Option<Vec<G>>, u64)> {
+    /// in-process replies carry 0 and the driver reads its own meters),
+    /// and the merged per-client outcomes (filled to all-`Completed` for
+    /// strict rounds, whose replies carry none).
+    fn round_replies(
+        &mut self,
+        n: usize,
+    ) -> Result<(Duration, Option<Vec<G>>, u64, Vec<ClientOutcome>)> {
         let mut max_time = Duration::ZERO;
         let mut delta = None;
         let mut inter = 0u64;
+        let mut per_party: [Vec<ClientOutcome>; 2] = [Vec::new(), Vec::new()];
         let mut failure: Option<anyhow::Error> = None;
         for party in 0..2 {
             match self.reply(party) {
-                Ok(ServerReply::Round { server_time, delta: d, inter_sent }) => {
+                Ok(ServerReply::Round { server_time, delta: d, inter_sent, outcomes }) => {
                     max_time = max_time.max(server_time);
                     delta = delta.or(d);
                     inter += inter_sent;
+                    per_party[party] = outcomes;
                 }
                 Ok(other) => {
                     failure.get_or_insert(other.into_protocol_error("round"));
@@ -1081,7 +1385,10 @@ impl<G: Group> FslRuntime<G> {
                 self.poison(&e);
                 Err(e)
             }
-            None => Ok((max_time, delta, inter)),
+            None => {
+                let [o0, o1] = per_party;
+                Ok((max_time, delta, inter, merge_outcomes(n, &o0, &o1)))
+            }
         }
     }
 
@@ -1124,6 +1431,7 @@ impl<G: Group> FslRuntime<G> {
         server_time: Duration,
         wall_time: Duration,
         reply_inter_bytes: u64,
+        outcomes: Vec<ClientOutcome>,
     ) -> RoundReport {
         // Verified rounds take uploads directly (no client links), so `n`
         // may exceed the topology's capacity — clamp the meter slice.
@@ -1150,8 +1458,102 @@ impl<G: Group> FslRuntime<G> {
             gen_time,
             server_time,
             wall_time,
+            outcomes,
         }
     }
+
+    /// Extract the driver-side U-DPF continuity state — client hint
+    /// states, the fixed selection sets, the next epoch number, and the
+    /// eviction record — so a *new* runtime (typically one reconnected to
+    /// servers restarted from snapshots) can resume the session where
+    /// this one stopped. Works on a poisoned runtime: that is exactly the
+    /// recovery case. The state is consumed from this runtime.
+    pub fn export_udpf_state(&mut self) -> UdpfDriverState<G> {
+        UdpfDriverState {
+            clients: std::mem::take(&mut self.udpf_clients),
+            selections: std::mem::take(&mut self.udpf_selections),
+            epoch: self.udpf_epoch,
+            dead: self.dead.clone(),
+        }
+    }
+
+    /// Adopt a previously exported U-DPF driver state into this (fresh)
+    /// runtime. The servers it is connected to must hold the matching
+    /// retained key sets — restarted `fsl serve` processes restore them
+    /// from their snapshots. The next [`FslRuntime::ssa`] call then runs
+    /// the epoch the interrupted session was about to run (or retries the
+    /// one it failed).
+    pub fn resume_udpf(&mut self, state: UdpfDriverState<G>) -> Result<()> {
+        self.check_healthy()?;
+        ensure!(
+            self.key_mode == KeyMode::Udpf,
+            "resume_udpf needs KeyMode::Udpf (this runtime re-keys every round)"
+        );
+        ensure!(
+            self.udpf_epoch == 0 && self.udpf_clients.is_empty(),
+            "resume_udpf only applies to a fresh runtime (this one already ran U-DPF rounds)"
+        );
+        ensure!(
+            state.clients.len() <= self.links.len(),
+            "exported state spans {} clients but this runtime was built for max_clients = {}",
+            state.clients.len(),
+            self.links.len()
+        );
+        for (i, d) in state.dead.iter().enumerate() {
+            if let Some(slot) = self.dead.get_mut(i) {
+                *slot |= *d;
+            }
+        }
+        self.udpf_clients = state.clients;
+        self.udpf_selections = state.selections;
+        self.udpf_epoch = state.epoch;
+        Ok(())
+    }
+}
+
+/// Driver-side U-DPF continuity state, moved between runtimes by
+/// [`FslRuntime::export_udpf_state`] / [`FslRuntime::resume_udpf`]
+/// across a server crash + snapshot restore.
+pub struct UdpfDriverState<G: Group> {
+    clients: Vec<udpf_ssa::UdpfSsaClient<G>>,
+    selections: Vec<Vec<u64>>,
+    epoch: u64,
+    dead: Vec<bool>,
+}
+
+impl<G: Group> UdpfDriverState<G> {
+    /// The epoch the resumed session will run next.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Clients the state spans (the fixed U-DPF cohort).
+    pub fn clients(&self) -> usize {
+        self.clients.len()
+    }
+}
+
+/// Merge the two servers' per-client outcome vectors: a client completed
+/// only if both servers agreed it did; an explicit `Dropped` from either
+/// side wins over `StragglerCut`. Strict rounds reply with empty vectors,
+/// which merge to all-`Completed`.
+fn merge_outcomes(
+    n: usize,
+    o0: &[ClientOutcome],
+    o1: &[ClientOutcome],
+) -> Vec<ClientOutcome> {
+    let get = |v: &[ClientOutcome], i: usize| {
+        v.get(i).copied().unwrap_or(ClientOutcome::Completed)
+    };
+    (0..n)
+        .map(|i| match (get(o0, i), get(o1, i)) {
+            (ClientOutcome::Completed, ClientOutcome::Completed) => ClientOutcome::Completed,
+            (a, b) if a == ClientOutcome::Dropped || b == ClientOutcome::Dropped => {
+                ClientOutcome::Dropped
+            }
+            _ => ClientOutcome::StragglerCut,
+        })
+        .collect()
 }
 
 impl<G: Group> Drop for FslRuntime<G> {
@@ -1189,8 +1591,17 @@ pub(crate) struct ServerHalf<G: Group> {
     pub(crate) inter: Option<BoxTransport>,
     /// Installed PSR database (global-model-indexed).
     pub(crate) weights: Option<Arc<Vec<G>>>,
-    /// Retained U-DPF key sets, one per client (U-DPF mode).
+    /// Retained U-DPF key sets, one per *surviving* client (U-DPF mode).
     pub(crate) udpf: Vec<udpf_ssa::UdpfSsaServerKeys<G>>,
+    /// Link index of each retained key set (tolerant rounds shrink
+    /// `udpf` as clients drop; this keeps slots addressable).
+    pub(crate) udpf_links: Vec<usize>,
+    /// Client count of the U-DPF setup round (epoch commands still quote
+    /// the full cohort size).
+    pub(crate) udpf_total: usize,
+    /// Clients evicted by an earlier tolerant round: never read from (or
+    /// written to) again — their links may hold stale late bytes.
+    pub(crate) dead: Vec<bool>,
     /// Bound on every data-link receive (a silent client or peer fails
     /// the round instead of wedging the server forever).
     pub(crate) timeout: Duration,
@@ -1249,16 +1660,22 @@ impl<G: Group> ServerHalf<G> {
                 }
                 self.session = s;
                 self.udpf.clear();
+                self.udpf_links.clear();
+                self.udpf_total = 0;
                 Ok(ServerReply::Ack)
             }
             ServerCmd::SetWeights(w) => {
                 self.weights = Some(w);
                 Ok(ServerReply::Ack)
             }
-            ServerCmd::Ssa { n } => self.ssa(n),
-            ServerCmd::Psr { n } => self.psr(n),
-            ServerCmd::UdpfSetup { n } => self.udpf_setup(n),
-            ServerCmd::UdpfEpoch { n, epoch } => self.udpf_epoch(n, epoch),
+            ServerCmd::Ssa { n, deadline_nanos } => self.ssa(n, opt_deadline(deadline_nanos)),
+            ServerCmd::Psr { n, deadline_nanos } => self.psr(n, opt_deadline(deadline_nanos)),
+            ServerCmd::UdpfSetup { n, deadline_nanos } => {
+                self.udpf_setup(n, opt_deadline(deadline_nanos))
+            }
+            ServerCmd::UdpfEpoch { n, epoch, deadline_nanos } => {
+                self.udpf_epoch(n, epoch, opt_deadline(deadline_nanos))
+            }
             ServerCmd::VerifiedSsa { uploads, seed } => self.verified(&uploads, seed),
             ServerCmd::PsuAlign { n, shuffle_seed } => self.psu_align(n, shuffle_seed),
         }
@@ -1271,11 +1688,89 @@ impl<G: Group> ServerHalf<G> {
             .ok_or_else(|| anyhow!("S{}: no peer link established", self.party))
     }
 
+    /// Receive one upload per client, bounded by the per-client
+    /// `deadline`, classifying each: decoded within the deadline →
+    /// `Completed`; silence past the deadline → `StragglerCut`; a closed
+    /// link or malformed bytes → `Dropped`. Evicted clients are skipped
+    /// without waiting.
+    fn recv_cohort<T>(
+        &mut self,
+        n: usize,
+        deadline: Duration,
+        decode: impl Fn(&[u8]) -> Option<T>,
+    ) -> (Vec<Option<T>>, Vec<ClientOutcome>) {
+        if self.dead.len() < n {
+            self.dead.resize(n, false);
+        }
+        let mut items = Vec::with_capacity(n);
+        let mut outcomes = Vec::with_capacity(n);
+        for i in 0..n {
+            if self.dead[i] {
+                items.push(None);
+                outcomes.push(ClientOutcome::Dropped);
+                continue;
+            }
+            let outcome = match self.eps[i].recv_timeout(deadline) {
+                Ok(raw) => match decode(&raw) {
+                    Some(v) => {
+                        items.push(Some(v));
+                        outcomes.push(ClientOutcome::Completed);
+                        continue;
+                    }
+                    None => ClientOutcome::Dropped,
+                },
+                Err(e) if TransportError::is_timeout(&e) => ClientOutcome::StragglerCut,
+                Err(_) => ClientOutcome::Dropped,
+            };
+            items.push(None);
+            outcomes.push(outcome);
+        }
+        (items, outcomes)
+    }
+
+    /// Agree the surviving cohort with the peer: both servers exchange
+    /// their locally-completed index lists over the `S_0 ↔ S_1` link and
+    /// intersect them. A client either server missed is demoted to
+    /// `Dropped`; every non-completed client is evicted for good (a
+    /// straggler's late bytes must never desync its link). Returns the
+    /// agreed indices, identical on both servers.
+    fn agree_cohort(&mut self, outcomes: &mut [ClientOutcome]) -> Result<Vec<usize>> {
+        let mine: Vec<u64> = outcomes
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| **o == ClientOutcome::Completed)
+            .map(|(i, _)| i as u64)
+            .collect();
+        let theirs = {
+            let inter = self.inter()?;
+            inter.send(msg::encode_indices(&mine))?;
+            msg::decode_indices(&inter.recv_timeout(self.timeout)?)
+                .ok_or_else(|| anyhow!("S{}: bad survivor list from peer", self.party))?
+        };
+        let mut agreed = Vec::new();
+        for (i, o) in outcomes.iter_mut().enumerate() {
+            if *o == ClientOutcome::Completed && !theirs.contains(&(i as u64)) {
+                *o = ClientOutcome::Dropped;
+            }
+            if *o == ClientOutcome::Completed {
+                agreed.push(i);
+            } else if let Some(d) = self.dead.get_mut(i) {
+                *d = true;
+            }
+        }
+        Ok(agreed)
+    }
+
     /// Fresh-key SSA. `S_0` (leader) receives long uploads, forwards the
     /// publics to `S_1`, aggregates, reconstructs from `S_1`'s share
     /// vector. `S_1` (worker) receives short uploads + forwarded publics,
-    /// aggregates, ships its shares.
-    fn ssa(&mut self, n: usize) -> Result<ServerReply<G>> {
+    /// aggregates, ships its shares. With a `deadline` the round is
+    /// dropout-tolerant: both servers classify every client, agree the
+    /// surviving cohort, and aggregate only the survivors.
+    fn ssa(&mut self, n: usize, deadline: Option<Duration>) -> Result<ServerReply<G>> {
+        if let Some(d) = deadline {
+            return self.ssa_tolerant(n, d);
+        }
         if self.party == 0 {
             let mut batches = Vec::with_capacity(n);
             for (i, ep) in self.eps[..n].iter().enumerate() {
@@ -1307,6 +1802,7 @@ impl<G: Group> ServerHalf<G> {
                 server_time,
                 delta: Some(ssa::reconstruct(&acc0, &share1)),
                 inter_sent: 0,
+                outcomes: Vec::new(),
             })
         } else {
             let mut msks = Vec::with_capacity(n);
@@ -1353,17 +1849,146 @@ impl<G: Group> ServerHalf<G> {
                 server_time,
                 delta: None,
                 inter_sent: 0,
+                outcomes: Vec::new(),
+            })
+        }
+    }
+
+    /// Dropout-tolerant SSA: buffer the whole cohort's uploads (bounded
+    /// per client by `deadline`), agree the survivors with the peer, then
+    /// run the §4 aggregation over the survivors only. Unlike the strict
+    /// path, `S_0` forwards no publics until agreement — a half-forwarded
+    /// dropped client would leave the peer stream ambiguous.
+    fn ssa_tolerant(&mut self, n: usize, deadline: Duration) -> Result<ServerReply<G>> {
+        if self.party == 0 {
+            let (mut items, mut outcomes) = self.recv_cohort(n, deadline, |raw| {
+                let up = msg::decode_key_upload::<G>(raw)?;
+                up.publics.as_ref()?;
+                Some(up)
+            });
+            let agreed = self.agree_cohort(&mut outcomes)?;
+            let mut batches = Vec::with_capacity(agreed.len());
+            for &i in &agreed {
+                let up = items[i].take().expect("agreed implies received");
+                let publics = up.publics.expect("checked in decode");
+                // Forward only the *public* parts: the client's S_0 master
+                // seed must never reach S_1 (two-server privacy), so the
+                // forwarded envelope carries a zeroed seed.
+                let mut batch = MasterKeyBatch::<G> {
+                    msk: [[0u8; 16]; 2],
+                    publics,
+                };
+                let mut fwd = (i as u32).to_le_bytes().to_vec();
+                fwd.extend(msg::encode_key_upload(&batch, 0, true));
+                self.inter()?.send(fwd)?;
+                batch.msk = [up.msk, up.msk];
+                batches.push(batch);
+            }
+            let t = Instant::now();
+            let acc0 = self
+                .agg
+                .aggregate_publics(&self.session, 0, &uploads_of(&batches, 0));
+            let server_time = t.elapsed();
+            let share1 = msg::decode_shares::<G>(&self.inter()?.recv_timeout(self.timeout)?)
+                .ok_or_else(|| anyhow!("S0: bad share vector"))?;
+            Ok(ServerReply::Round {
+                server_time,
+                delta: Some(ssa::reconstruct(&acc0, &share1)),
+                inter_sent: 0,
+                outcomes,
+            })
+        } else {
+            let (mut msks, mut outcomes) =
+                self.recv_cohort(n, deadline, |raw| msg::decode_key_upload::<G>(raw).map(|u| u.msk));
+            let agreed = self.agree_cohort(&mut outcomes)?;
+            // S_0 forwards exactly the agreed clients' publics, tagged
+            // with their original link index.
+            let mut publics: Vec<Option<_>> = (0..n).map(|_| None).collect();
+            for _ in 0..agreed.len() {
+                let raw = self.inter()?.recv_timeout(self.timeout)?;
+                let idx = u32::from_le_bytes(
+                    raw.get(..4)
+                        .ok_or_else(|| anyhow!("S1: short forward"))?
+                        .try_into()
+                        .unwrap(),
+                ) as usize;
+                ensure!(
+                    agreed.contains(&idx),
+                    "S1: forwarded publics for non-agreed client {idx}"
+                );
+                let up = msg::decode_key_upload::<G>(&raw[4..])
+                    .ok_or_else(|| anyhow!("S1: bad forwarded publics"))?;
+                publics[idx] = Some(up.publics.ok_or_else(|| anyhow!("S1: no publics"))?);
+            }
+            let batches: Vec<MasterKeyBatch<G>> = agreed
+                .iter()
+                .map(|&i| {
+                    let msk = msks[i].take().expect("agreed implies received");
+                    Ok(MasterKeyBatch {
+                        msk: [msk, msk],
+                        publics: publics[i].take().ok_or_else(|| anyhow!("S1: missing {i}"))?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let t = Instant::now();
+            let acc1 = self
+                .agg
+                .aggregate_publics(&self.session, 1, &uploads_of(&batches, 1));
+            let server_time = t.elapsed();
+            self.inter()?.send(msg::encode_shares(&acc1))?;
+            Ok(ServerReply::Round {
+                server_time,
+                delta: None,
+                inter_sent: 0,
+                outcomes,
             })
         }
     }
 
     /// PSR: decode the whole batch, answer it through one shard plan,
-    /// ship each client its answer on the same link.
-    fn psr(&mut self, n: usize) -> Result<ServerReply<G>> {
+    /// ship each client its answer on the same link. With a `deadline`
+    /// the round is dropout-tolerant: only the agreed surviving cohort
+    /// is answered.
+    fn psr(&mut self, n: usize, deadline: Option<Duration>) -> Result<ServerReply<G>> {
         let weights = self
             .weights
             .clone()
             .ok_or_else(|| anyhow!("S{}: no weights installed", self.party))?;
+        if let Some(d) = deadline {
+            let (mut items, mut outcomes) = self.recv_cohort(n, d, |raw| {
+                let up = msg::decode_key_upload::<G>(raw)?;
+                up.publics.as_ref()?;
+                Some(up)
+            });
+            let agreed = self.agree_cohort(&mut outcomes)?;
+            let batches: Vec<MasterKeyBatch<G>> = agreed
+                .iter()
+                .map(|&i| {
+                    let up = items[i].take().expect("agreed implies received");
+                    MasterKeyBatch {
+                        msk: [up.msk, up.msk],
+                        publics: up.publics.expect("checked in decode"),
+                    }
+                })
+                .collect();
+            let uploads = uploads_of(&batches, self.party);
+            let t = Instant::now();
+            let answers = self
+                .ret
+                .answer_publics(&self.session, &weights, self.party, &uploads);
+            let server_time = t.elapsed();
+            // Best-effort answers: a client that died after uploading
+            // loses its answer, not the round.
+            for (&i, ans) in agreed.iter().zip(&answers) {
+                let _ = self.eps[i].send(msg::encode_shares(ans));
+            }
+            return Ok(ServerReply::Round {
+                server_time,
+                delta: None,
+                inter_sent: 0,
+                outcomes,
+            });
+        }
         let mut batches = Vec::with_capacity(n);
         for ep in &self.eps[..n] {
             let up = msg::decode_key_upload::<G>(&ep.recv_timeout(self.timeout)?)
@@ -1389,23 +2014,91 @@ impl<G: Group> ServerHalf<G> {
             server_time,
             delta: None,
             inter_sent: 0,
+            outcomes: Vec::new(),
         })
     }
 
     /// U-DPF setup: retain each client's key set, then aggregate epoch 0.
-    fn udpf_setup(&mut self, n: usize) -> Result<ServerReply<G>> {
+    /// Tolerant rounds retain only the agreed survivors' key sets (the
+    /// fixed U-DPF cohort for every later epoch).
+    fn udpf_setup(&mut self, n: usize, deadline: Option<Duration>) -> Result<ServerReply<G>> {
         self.udpf.clear();
+        self.udpf_links.clear();
+        self.udpf_total = n;
+        if let Some(d) = deadline {
+            let (mut items, mut outcomes) =
+                self.recv_cohort(n, d, |raw| msg::decode_udpf_keys::<G>(raw));
+            let agreed = self.agree_cohort(&mut outcomes)?;
+            for &i in &agreed {
+                let keys = items[i].take().expect("agreed implies received");
+                self.udpf.push(udpf_ssa::UdpfSsaServerKeys { keys });
+                self.udpf_links.push(i);
+            }
+            return self.udpf_aggregate(0, outcomes);
+        }
         for ep in &self.eps[..n] {
             let keys = msg::decode_udpf_keys::<G>(&ep.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S{}: bad U-DPF key upload", self.party))?;
             self.udpf.push(udpf_ssa::UdpfSsaServerKeys { keys });
         }
-        self.udpf_aggregate(0)
+        self.udpf_links = (0..n).collect();
+        self.udpf_aggregate(0, Vec::new())
     }
 
     /// U-DPF epoch: apply each client's hints to its retained keys, then
-    /// aggregate at the new epoch.
-    fn udpf_epoch(&mut self, n: usize, epoch: u64) -> Result<ServerReply<G>> {
+    /// aggregate at the new epoch. Tolerant rounds drop retained key sets
+    /// whose client died (the cohort only ever shrinks).
+    fn udpf_epoch(&mut self, n: usize, epoch: u64, deadline: Option<Duration>) -> Result<ServerReply<G>> {
+        if let Some(d) = deadline {
+            ensure!(
+                n == self.udpf_total,
+                "S{}: U-DPF setup had {} clients but this epoch quotes {n}",
+                self.party,
+                self.udpf_total
+            );
+            if self.dead.len() < n {
+                self.dead.resize(n, false);
+            }
+            // Every slot not retained (or already evicted) is Dropped
+            // without any wait; live slots get the per-client deadline.
+            let mut outcomes = vec![ClientOutcome::Dropped; n];
+            let mut fresh_hints: Vec<Option<Vec<crate::udpf::Hint<G>>>> =
+                (0..self.udpf.len()).map(|_| None).collect();
+            for (slot, &link) in self.udpf_links.iter().enumerate() {
+                if self.dead[link] {
+                    continue;
+                }
+                match self.eps[link].recv_timeout(d) {
+                    Ok(raw) => match msg::decode_hints::<G>(&raw) {
+                        Some(h)
+                            if h.len() == self.udpf[slot].keys.len()
+                                && h.iter().all(|x| x.epoch == epoch) =>
+                        {
+                            fresh_hints[slot] = Some(h);
+                            outcomes[link] = ClientOutcome::Completed;
+                        }
+                        _ => {}
+                    },
+                    Err(e) if TransportError::is_timeout(&e) => {
+                        outcomes[link] = ClientOutcome::StragglerCut;
+                    }
+                    Err(_) => {}
+                }
+            }
+            self.agree_cohort(&mut outcomes)?;
+            let old = std::mem::take(&mut self.udpf);
+            let old_links = std::mem::take(&mut self.udpf_links);
+            for ((mut retained, link), hints) in
+                old.into_iter().zip(old_links).zip(fresh_hints)
+            {
+                if outcomes[link] == ClientOutcome::Completed {
+                    retained.apply_hints(&hints.expect("agreed implies hints"));
+                    self.udpf.push(retained);
+                    self.udpf_links.push(link);
+                }
+            }
+            return self.udpf_aggregate(epoch, outcomes);
+        }
         ensure!(
             n == self.udpf.len(),
             "S{}: {} retained key sets but {n} hint uploads",
@@ -1429,12 +2122,16 @@ impl<G: Group> ServerHalf<G> {
             );
             retained.apply_hints(&hints);
         }
-        self.udpf_aggregate(epoch)
+        self.udpf_aggregate(epoch, Vec::new())
     }
 
     /// Shared U-DPF aggregation tail: evaluate the retained keys at
     /// `epoch`; worker ships shares, leader reconstructs.
-    fn udpf_aggregate(&mut self, epoch: u64) -> Result<ServerReply<G>> {
+    fn udpf_aggregate(
+        &mut self,
+        epoch: u64,
+        outcomes: Vec<ClientOutcome>,
+    ) -> Result<ServerReply<G>> {
         let t = Instant::now();
         let acc = udpf_ssa::server_aggregate(&self.agg, &self.session, &self.udpf, epoch);
         let server_time = t.elapsed();
@@ -1444,6 +2141,7 @@ impl<G: Group> ServerHalf<G> {
                 server_time,
                 delta: None,
                 inter_sent: 0,
+                outcomes,
             })
         } else {
             let share1 = msg::decode_shares::<G>(&self.inter()?.recv_timeout(self.timeout)?)
@@ -1452,6 +2150,7 @@ impl<G: Group> ServerHalf<G> {
                 server_time,
                 delta: Some(ssa::reconstruct(&acc, &share1)),
                 inter_sent: 0,
+                outcomes,
             })
         }
     }
@@ -1495,8 +2194,14 @@ impl<G: Group> ServerHalf<G> {
             server_time: t.elapsed(),
             delta: None,
             inter_sent: 0,
+            outcomes: Vec::new(),
         })
     }
+}
+
+/// The wire form of a per-round upload deadline: `0` = strict.
+fn opt_deadline(nanos: u64) -> Option<Duration> {
+    (nanos > 0).then(|| Duration::from_nanos(nanos))
 }
 
 #[cfg(test)]

@@ -18,12 +18,14 @@
 //! commands it to.
 
 use super::runtime::ServerHalf;
+use super::snapshot::ServerSnapshot;
 use super::wire::{self, ServerCmd, ServerReply};
 use crate::group::Group;
 use crate::net::transport::tcp::{TcpAcceptor, TcpOptions, TcpTransport};
 use crate::net::transport::{BoxTransport, Hello, HelloAck, Role};
-use crate::protocol::{AggregationEngine, RetrievalEngine, Sharding};
-use anyhow::{bail, Result};
+use crate::protocol::{udpf_ssa, AggregationEngine, RetrievalEngine, Sharding};
+use anyhow::{bail, ensure, Result};
+use std::path::PathBuf;
 use std::time::Duration;
 
 /// Knobs for one standalone server.
@@ -40,6 +42,12 @@ pub struct ServeOptions {
     pub data_timeout: Duration,
     /// Socket options (handshake timeout, write timeout).
     pub tcp: TcpOptions,
+    /// Crash-recovery snapshot file. When set, the server persists its
+    /// round-spanning state (session, U-DPF epoch keys, evictions) after
+    /// every state-changing command, and restores it at startup if the
+    /// file exists — a corrupt snapshot is a typed startup error, never a
+    /// partial restore.
+    pub snapshot: Option<PathBuf>,
 }
 
 impl ServeOptions {
@@ -50,6 +58,7 @@ impl ServeOptions {
             threads: 0,
             data_timeout: Duration::from_secs(600),
             tcp: TcpOptions::default(),
+            snapshot: None,
         }
     }
 }
@@ -73,6 +82,33 @@ const MAX_CLIENT_LINKS: u32 = 4096;
 /// closes; handshake-phase failures (bind-level, not per-connection)
 /// return an error.
 pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()> {
+    // Load any prior snapshot *before* accepting connections: a corrupt
+    // file must fail the restart loudly, not after a driver has dialled
+    // in and committed to this process.
+    let restored: Option<ServerSnapshot<G>> = match &opts.snapshot {
+        Some(path) if path.exists() => {
+            let snap = ServerSnapshot::<G>::load(path).map_err(|e| {
+                anyhow::Error::new(e)
+                    .context(format!("restoring server state from {}", path.display()))
+            })?;
+            ensure!(
+                snap.party == opts.party,
+                "snapshot {} belongs to S{} but this process serves S{}",
+                path.display(),
+                snap.party,
+                opts.party
+            );
+            let ours = std::any::type_name::<G>();
+            ensure!(
+                snap.group == ours,
+                "snapshot {} was written by a {} server, this one serves {ours}",
+                path.display(),
+                snap.group
+            );
+            Some(snap)
+        }
+        _ => None,
+    };
     let (ctrl, control) = accept_control::<G>(acceptor, opts)?;
     let eps = accept_clients(acceptor, opts, control.max_clients)?;
     let inter = if opts.party == 0 {
@@ -104,7 +140,6 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
         let _ = ctrl.send(wire::encode_reply::<G>(&ServerReply::Failed(reason.clone())));
         bail!("{reason}");
     }
-    ctrl.send(wire::encode_reply::<G>(&ServerReply::Ack))?;
 
     let sharding = if opts.threads == 0 {
         Sharding::auto()
@@ -120,8 +155,38 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
         inter,
         weights: None,
         udpf: Vec::new(),
+        udpf_links: Vec::new(),
+        udpf_total: 0,
+        dead: Vec::new(),
         timeout: opts.data_timeout,
     };
+
+    // Adopt the snapshot's retained state — but only if the driver just
+    // installed the *same* session the snapshot was taken under (same
+    // encoded bytes). A different session means a new deployment: start
+    // clean, and the first snapshot write below overwrites the old file.
+    if let Some(snap) = restored {
+        if snap.session == wire::encode_session(&server.session) {
+            ensure!(
+                snap.udpf.iter().all(|(l, _)| (*l as usize) < server.eps.len()),
+                "snapshot references client links beyond this deployment's capacity"
+            );
+            server.udpf_total = snap.udpf_total;
+            for (link, keys) in snap.udpf {
+                server.udpf_links.push(link as usize);
+                server.udpf.push(udpf_ssa::UdpfSsaServerKeys { keys });
+            }
+            server.dead = snap.dead;
+        }
+    }
+    // Persist the adopted-or-fresh state before acking the install: from
+    // the driver's point of view, an acked install is always recoverable.
+    if let Some(path) = &opts.snapshot {
+        snapshot_of(&server).write(path).map_err(|e| {
+            anyhow::Error::new(e).context(format!("persisting state to {}", path.display()))
+        })?;
+    }
+    ctrl.send(wire::encode_reply::<G>(&ServerReply::Ack))?;
 
     // The remote command loop — the TCP twin of `ServerHalf::run`.
     loop {
@@ -162,6 +227,7 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
                 // meter at round start, stamp its sent-count into the
                 // reply.
                 let is_round = cmd.is_round();
+                let changes_state = is_round || matches!(cmd, ServerCmd::SetSession(_));
                 if is_round {
                     if let Some(inter) = &server.inter {
                         inter.meter().reset();
@@ -176,6 +242,18 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
                             server.inter.as_ref().map_or(0, |i| i.meter().sent());
                     }
                 }
+                // Snapshot-on-success, *before* the reply goes out: an
+                // acked command is always recoverable, and a failed one
+                // never persists tainted state.
+                if changes_state && !matches!(reply, ServerReply::Failed(_)) {
+                    if let Some(path) = &opts.snapshot {
+                        if let Err(e) = snapshot_of(&server).write(path) {
+                            reply = ServerReply::Failed(format!(
+                                "persisting the recovery snapshot failed: {e}"
+                            ));
+                        }
+                    }
+                }
                 reply
             }
         };
@@ -184,6 +262,23 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
         }
     }
     Ok(())
+}
+
+/// The snapshot of one server's current round-spanning state.
+fn snapshot_of<G: Group>(server: &ServerHalf<G>) -> ServerSnapshot<G> {
+    ServerSnapshot {
+        party: server.party,
+        group: std::any::type_name::<G>().to_string(),
+        session: wire::encode_session(&server.session),
+        udpf_total: server.udpf_total,
+        udpf: server
+            .udpf
+            .iter()
+            .zip(&server.udpf_links)
+            .map(|(ks, link)| (*link as u32, ks.keys.clone()))
+            .collect(),
+        dead: server.dead.clone(),
+    }
 }
 
 /// Accept the next connection that completes a handshake, bounded by
@@ -397,7 +492,8 @@ mod tests {
             .unwrap_err()
             .contains("ceiling"));
 
-        // Sanity: the version constant exists and is what frames carry.
-        assert_eq!(TRANSPORT_VERSION, 1);
+        // Sanity: the version constant exists and is what frames carry
+        // (version 2 added upload deadlines and per-client outcomes).
+        assert_eq!(TRANSPORT_VERSION, 2);
     }
 }

@@ -1,0 +1,379 @@
+//! Versioned server-state snapshots — what lets a crashed `fsl serve`
+//! process restart mid-session without losing the U-DPF epoch keys.
+//!
+//! A snapshot captures one server's round-spanning state: the installed
+//! [`Session`] (as its [`wire::encode_session`] bytes, so restore equals
+//! a fresh install), the retained U-DPF key sets with their client link
+//! indices, the setup cohort size, and the eviction record. The PSR
+//! weight vector is deliberately *not* captured — it is driver-supplied
+//! bulk data the driver re-installs in one command, while the U-DPF keys
+//! are the accumulated product of every past epoch and cannot be
+//! regenerated.
+//!
+//! **Integrity.** Every section carries a SHA-256 of its payload and the
+//! whole file ends with a SHA-256 over everything before it. `load`
+//! verifies all hashes *before* constructing anything: a corrupt or
+//! truncated snapshot yields a typed [`SnapshotError`] and no partial
+//! restore — restarting with bad state would silently corrupt every
+//! later epoch, which is strictly worse than failing loudly.
+//!
+//! **Consistency.** [`super::serve`] writes the snapshot only after a
+//! command *succeeds* (and before its reply is sent), so a server that
+//! dies mid-round persists the state from the last completed round. Both
+//! servers restored from such snapshots sit at the same epoch boundary,
+//! and because a U-DPF hint *replaces* its key's output correction word
+//! (it is not a delta), retrying the interrupted epoch against restored
+//! keys is exact.
+
+use super::wire;
+use crate::group::Group;
+use crate::protocol::msg;
+use crate::udpf::UdpfKey;
+use sha2::{Digest, Sha256};
+use std::fmt;
+use std::path::Path;
+
+const MAGIC: [u8; 4] = *b"FSLS";
+const VERSION: u16 = 1;
+const HASH_LEN: usize = 32;
+
+/// Why a snapshot failed to load. Every variant means "no state was
+/// restored" — there is no partial restore.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// The file does not start with the snapshot magic.
+    BadMagic,
+    /// The file's format version is not one this build reads.
+    BadVersion(u16),
+    /// The file ends before its declared contents do.
+    Truncated,
+    /// A content hash check failed (names the failing section, or
+    /// "file" for the whole-file trailer).
+    HashMismatch(String),
+    /// Hashes passed but a section's contents do not decode.
+    Malformed(String),
+    /// The file could not be read or written.
+    Io(String),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::BadMagic => write!(f, "not a snapshot file (bad magic)"),
+            SnapshotError::BadVersion(v) => write!(f, "unsupported snapshot version {v}"),
+            SnapshotError::Truncated => write!(f, "snapshot file is truncated"),
+            SnapshotError::HashMismatch(what) => {
+                write!(f, "snapshot hash mismatch in {what} (refusing partial restore)")
+            }
+            SnapshotError::Malformed(what) => write!(f, "malformed snapshot: {what}"),
+            SnapshotError::Io(e) => write!(f, "snapshot io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// One server's persisted round-spanning state.
+#[derive(Debug, Clone)]
+pub struct ServerSnapshot<G: Group> {
+    /// Which server this is (`0` leader, `1` worker) — a snapshot must
+    /// never be restored into the other party.
+    pub party: u8,
+    /// The payload group's name ([`std::any::type_name`], the same
+    /// string the transport handshake checks).
+    pub group: String,
+    /// The installed session as [`wire::encode_session`] bytes.
+    pub session: Vec<u8>,
+    /// Client count of the U-DPF setup round (`0` = no U-DPF state).
+    pub udpf_total: usize,
+    /// Retained U-DPF key sets: `(client link index, keys)`, survivors
+    /// only, in link order.
+    pub udpf: Vec<(u32, Vec<UdpfKey<G>>)>,
+    /// Eviction record, indexed by client link.
+    pub dead: Vec<bool>,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_block(out: &mut Vec<u8>, block: &[u8]) {
+    put_u32(out, block.len() as u32);
+    out.extend_from_slice(block);
+}
+
+fn sha256(bytes: &[u8]) -> [u8; HASH_LEN] {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    h.finalize().into()
+}
+
+/// A cursor over untrusted bytes whose every read is bounds-checked into
+/// [`SnapshotError::Truncated`].
+struct Reader<'a> {
+    bytes: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8], SnapshotError> {
+        let s = self
+            .bytes
+            .get(self.off..self.off.checked_add(len).ok_or(SnapshotError::Truncated)?)
+            .ok_or(SnapshotError::Truncated)?;
+        self.off += len;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn block(&mut self) -> Result<&'a [u8], SnapshotError> {
+        let len = self.u32()? as usize;
+        self.take(len)
+    }
+}
+
+impl<G: Group> ServerSnapshot<G> {
+    /// Serialise: header, named+hashed sections, whole-file hash trailer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut sections: Vec<(&str, Vec<u8>)> = Vec::new();
+        sections.push(("session", self.session.clone()));
+        let mut udpf = Vec::new();
+        put_u64(&mut udpf, self.udpf_total as u64);
+        put_u32(&mut udpf, self.udpf.len() as u32);
+        for (link, keys) in &self.udpf {
+            put_u32(&mut udpf, *link);
+            put_block(&mut udpf, &msg::encode_udpf_keys(keys));
+        }
+        sections.push(("udpf", udpf));
+        let mut dead = Vec::new();
+        put_u32(&mut dead, self.dead.len() as u32);
+        dead.extend(self.dead.iter().map(|d| *d as u8));
+        sections.push(("dead", dead));
+
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.party);
+        put_block(&mut out, self.group.as_bytes());
+        put_u32(&mut out, sections.len() as u32);
+        for (name, payload) in &sections {
+            put_block(&mut out, name.as_bytes());
+            put_block(&mut out, payload);
+            out.extend_from_slice(&sha256(payload));
+        }
+        let trailer = sha256(&out);
+        out.extend_from_slice(&trailer);
+        out
+    }
+
+    /// Parse and verify. All hashes are checked before any section is
+    /// decoded; any failure returns a typed error and restores nothing.
+    pub fn decode(bytes: &[u8]) -> Result<Self, SnapshotError> {
+        // Whole-file hash first: any single corrupted byte anywhere is
+        // caught here, before the structure is even looked at.
+        if bytes.len() < MAGIC.len() + HASH_LEN {
+            return Err(SnapshotError::Truncated);
+        }
+        if bytes[..4] != MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - HASH_LEN);
+        if sha256(body) != *trailer {
+            return Err(SnapshotError::HashMismatch("file".into()));
+        }
+        let mut r = Reader { bytes: body, off: 4 };
+        let version = u16::from_le_bytes(r.take(2)?.try_into().unwrap());
+        if version != VERSION {
+            return Err(SnapshotError::BadVersion(version));
+        }
+        let party = r.take(1)?[0];
+        let group = String::from_utf8(r.block()?.to_vec())
+            .map_err(|_| SnapshotError::Malformed("group name is not utf-8".into()))?;
+        let n_sections = r.u32()? as usize;
+        let mut session: Option<Vec<u8>> = None;
+        let mut udpf_total = 0usize;
+        let mut udpf: Vec<(u32, Vec<UdpfKey<G>>)> = Vec::new();
+        let mut dead: Vec<bool> = Vec::new();
+        for _ in 0..n_sections {
+            let name = String::from_utf8(r.block()?.to_vec())
+                .map_err(|_| SnapshotError::Malformed("section name is not utf-8".into()))?;
+            let payload = r.block()?;
+            let hash = r.take(HASH_LEN)?;
+            if sha256(payload) != *hash {
+                return Err(SnapshotError::HashMismatch(format!("section `{name}`")));
+            }
+            match name.as_str() {
+                "session" => {
+                    // Validate it parses; the raw bytes are what restore
+                    // compares against the driver's install.
+                    wire::decode_session(payload)
+                        .map_err(|e| SnapshotError::Malformed(format!("session: {e}")))?;
+                    session = Some(payload.to_vec());
+                }
+                "udpf" => {
+                    let mut s = Reader { bytes: payload, off: 0 };
+                    udpf_total = s.u64()? as usize;
+                    let count = s.u32()? as usize;
+                    for _ in 0..count {
+                        let link = s.u32()?;
+                        let keys = msg::decode_udpf_keys::<G>(s.block()?).ok_or_else(|| {
+                            SnapshotError::Malformed("undecodable U-DPF key set".into())
+                        })?;
+                        udpf.push((link, keys));
+                    }
+                }
+                "dead" => {
+                    let mut s = Reader { bytes: payload, off: 0 };
+                    let n = s.u32()? as usize;
+                    dead = s.take(n)?.iter().map(|b| *b != 0).collect();
+                }
+                // Unknown sections are hash-checked but otherwise
+                // skipped: a newer writer may add some.
+                _ => {}
+            }
+        }
+        let session = session
+            .ok_or_else(|| SnapshotError::Malformed("missing session section".into()))?;
+        Ok(ServerSnapshot {
+            party,
+            group,
+            session,
+            udpf_total,
+            udpf,
+            dead,
+        })
+    }
+
+    /// Write atomically: encode to `<path>.tmp`, then rename over `path`
+    /// — a crash mid-write leaves the previous snapshot intact, never a
+    /// half-written file.
+    pub fn write(&self, path: &Path) -> Result<(), SnapshotError> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.encode()).map_err(|e| SnapshotError::Io(e.to_string()))?;
+        std::fs::rename(&tmp, path).map_err(|e| SnapshotError::Io(e.to_string()))
+    }
+
+    /// Read and verify a snapshot file.
+    pub fn load(path: &Path) -> Result<Self, SnapshotError> {
+        let bytes = std::fs::read(path).map_err(|e| SnapshotError::Io(e.to_string()))?;
+        Self::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::Rng;
+    use crate::hashing::CuckooParams;
+    use crate::protocol::{udpf_ssa, Session, SessionParams};
+
+    fn sample() -> ServerSnapshot<u64> {
+        let session = Session::new_full(SessionParams {
+            m: 256,
+            k: 8,
+            cuckoo: CuckooParams::default(),
+        });
+        let mut rng = Rng::new(7);
+        let (_, k0, _k1) =
+            udpf_ssa::client_setup::<u64>(&session, &[1, 5, 9], &[10, 20, 30], &mut rng).unwrap();
+        ServerSnapshot {
+            party: 0,
+            group: std::any::type_name::<u64>().to_string(),
+            session: wire::encode_session(&session),
+            udpf_total: 4,
+            udpf: vec![(2, k0.keys)],
+            dead: vec![false, true, false, false],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let snap = sample();
+        let back = ServerSnapshot::<u64>::decode(&snap.encode()).unwrap();
+        assert_eq!(back.party, 0);
+        assert_eq!(back.group, snap.group);
+        assert_eq!(back.session, snap.session);
+        assert_eq!(back.udpf_total, 4);
+        assert_eq!(back.udpf.len(), 1);
+        assert_eq!(back.udpf[0].0, 2);
+        assert_eq!(back.udpf[0].1.len(), snap.udpf[0].1.len());
+        assert_eq!(back.dead, snap.dead);
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_rejected() {
+        let enc = sample().encode();
+        for i in 0..enc.len() {
+            let mut bad = enc.clone();
+            bad[i] ^= 0x01;
+            assert!(
+                ServerSnapshot::<u64>::decode(&bad).is_err(),
+                "flip at byte {i} went unnoticed"
+            );
+        }
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let enc = sample().encode();
+        for len in 0..enc.len() {
+            assert!(
+                ServerSnapshot::<u64>::decode(&enc[..len]).is_err(),
+                "truncation to {len} bytes went unnoticed"
+            );
+        }
+    }
+
+    #[test]
+    fn hash_mismatch_is_typed_not_partial() {
+        let enc = sample().encode();
+        let mut bad = enc.clone();
+        let mid = enc.len() / 2;
+        bad[mid] ^= 0xFF;
+        match ServerSnapshot::<u64>::decode(&bad) {
+            Err(SnapshotError::HashMismatch(_)) => {}
+            other => panic!("expected HashMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn atomic_write_then_load() {
+        let dir = std::env::temp_dir().join(format!("fsl-snap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s0.snap");
+        let snap = sample();
+        snap.write(&path).unwrap();
+        let back = ServerSnapshot::<u64>::load(&path).unwrap();
+        assert_eq!(back.session, snap.session);
+        assert!(!path.with_extension("tmp").exists(), "tmp file left behind");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wrong_version_and_magic_are_typed() {
+        let enc = sample().encode();
+        let mut wrong_magic = enc.clone();
+        wrong_magic[0] = b'X';
+        assert!(matches!(
+            ServerSnapshot::<u64>::decode(&wrong_magic),
+            // The file hash covers the magic too, but magic is checked
+            // first: either way the load fails before any restore.
+            Err(SnapshotError::BadMagic | SnapshotError::HashMismatch(_))
+        ));
+        assert!(matches!(
+            ServerSnapshot::<u64>::decode(b"FS"),
+            Err(SnapshotError::Truncated)
+        ));
+    }
+}

@@ -12,29 +12,40 @@
 //! the per-client data links in [`crate::protocol::msg`] encodings, as
 //! always.
 
+use super::runtime::ClientOutcome;
 use super::verified::VerifiedSsaResult;
 use crate::crypto::field::Fp;
 use crate::dpf::MasterKeyBatch;
 use crate::group::Group;
 use crate::hashing::CuckooParams;
 use crate::protocol::{msg, Session, SessionParams};
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::sync::Arc;
 use std::time::Duration;
 
 /// Commands the driver issues to a server (the piece a real deployment
 /// carries in an RPC frame). Bulk client payloads never travel here —
 /// they go over the metered data links in [`msg`] encodings.
+///
+/// Round commands carry `deadline_nanos`: `0` runs the round *strict*
+/// (any client failure aborts the round, the historical behaviour),
+/// non-zero makes the round *tolerant* — the server waits at most that
+/// long per client upload and completes the round on the surviving
+/// cohort, reporting a per-client [`ClientOutcome`] in its reply.
 #[derive(Clone)]
-pub(crate) enum ServerCmd<G: Group> {
+pub enum ServerCmd<G: Group> {
     /// Serve one fresh-key SSA round of `n` clients.
-    Ssa { n: usize },
+    Ssa { n: usize, deadline_nanos: u64 },
     /// Serve one PSR round of `n` clients from the installed weights.
-    Psr { n: usize },
+    Psr { n: usize, deadline_nanos: u64 },
     /// Receive and retain `n` clients' U-DPF key sets, aggregate epoch 0.
-    UdpfSetup { n: usize },
+    UdpfSetup { n: usize, deadline_nanos: u64 },
     /// Apply `n` clients' epoch hints to the retained keys, aggregate.
-    UdpfEpoch { n: usize, epoch: u64 },
+    UdpfEpoch {
+        n: usize,
+        epoch: u64,
+        deadline_nanos: u64,
+    },
     /// (`S_0` only) verify + aggregate a malicious-model round.
     VerifiedSsa {
         uploads: Arc<Vec<MasterKeyBatch<Fp>>>,
@@ -62,7 +73,7 @@ impl<G: Group> ServerCmd<G> {
     /// round variant cannot be added without this list in view — the
     /// standalone server resets and reports its `S_0 ↔ S_1` meter
     /// exactly for round commands.
-    pub(crate) fn is_round(&self) -> bool {
+    pub fn is_round(&self) -> bool {
         matches!(
             self,
             ServerCmd::Ssa { .. }
@@ -80,11 +91,11 @@ impl<G: Group> ServerCmd<G> {
     /// process, but a remote driver's `n` arrives off the wire and must
     /// not be able to panic a slice index. (Verified rounds carry their
     /// uploads in the command itself and touch no client links.)
-    pub(crate) fn client_count(&self) -> Option<usize> {
+    pub fn client_count(&self) -> Option<usize> {
         match self {
-            ServerCmd::Ssa { n }
-            | ServerCmd::Psr { n }
-            | ServerCmd::UdpfSetup { n }
+            ServerCmd::Ssa { n, .. }
+            | ServerCmd::Psr { n, .. }
+            | ServerCmd::UdpfSetup { n, .. }
             | ServerCmd::UdpfEpoch { n, .. }
             | ServerCmd::PsuAlign { n, .. } => Some(*n),
             _ => None,
@@ -93,17 +104,20 @@ impl<G: Group> ServerCmd<G> {
 }
 
 /// A server's answer to one [`ServerCmd`].
-pub(crate) enum ServerReply<G: Group> {
+pub enum ServerReply<G: Group> {
     /// Install (or ping) acknowledged.
     Ack,
     /// Round served; `delta` is `Some` only from the SSA leader.
     /// `inter_sent` is the server's `S_0 ↔ S_1` bytes for this round —
     /// meaningful only from standalone servers (the in-process runtime
-    /// reads its own inter-link meters and leaves this 0).
+    /// reads its own inter-link meters and leaves this 0). `outcomes` is
+    /// one entry per client from a tolerant round (empty from strict
+    /// rounds — every client completed or the round failed).
     Round {
         server_time: Duration,
         delta: Option<Vec<G>>,
         inter_sent: u64,
+        outcomes: Vec<ClientOutcome>,
     },
     /// Verified round served (leader only).
     Verified {
@@ -115,7 +129,8 @@ pub(crate) enum ServerReply<G: Group> {
 }
 
 impl<G: Group> ServerReply<G> {
-    pub(crate) fn into_protocol_error(self, what: &str) -> anyhow::Error {
+    /// Convert a non-success reply into the driver-side error it implies.
+    pub fn into_protocol_error(self, what: &str) -> anyhow::Error {
         match self {
             ServerReply::Failed(e) => anyhow!("server failed during {what}: {e}"),
             _ => anyhow!("unexpected server reply during {what}"),
@@ -164,8 +179,10 @@ fn put_block(out: &mut Vec<u8>, block: &[u8]) {
 fn get_block<'a>(bytes: &'a [u8], off: &mut usize) -> Result<&'a [u8]> {
     let len = get_u32(bytes, off)? as usize;
     if len > bytes.len().saturating_sub(*off) {
-        bail!("control message block declares {len} bytes but only {} remain",
-              bytes.len() - *off);
+        bail!(
+            "control message block declares {len} bytes but only {} remain",
+            bytes.len() - *off
+        );
     }
     get_slice(bytes, off, len)
 }
@@ -180,7 +197,7 @@ fn duration_nanos(d: Duration) -> u64 {
 /// the alignment domain. The simple table is *not* shipped — it is a
 /// deterministic function of both, and the receiving server rebuilds it
 /// (the System-Setup step of Fig. 4 run at install time).
-pub(crate) fn encode_session(s: &Session) -> Vec<u8> {
+pub fn encode_session(s: &Session) -> Vec<u8> {
     let mut out = Vec::new();
     put_u64(&mut out, s.params.m);
     put_u64(&mut out, s.params.k as u64);
@@ -199,11 +216,31 @@ pub(crate) fn encode_session(s: &Session) -> Vec<u8> {
     out
 }
 
+/// Ceiling on a wire-installed session's model size. Decoding rebuilds
+/// the simple table eagerly — an O(m) allocation — so a remote driver's
+/// claimed `m` must be bounded *before* any building happens, and the
+/// bound must keep the worst *accepted* build cheap, not merely finite
+/// (the codec is fuzzed, and a hostile control frame should cost the
+/// server milliseconds, not gigabytes). 2^22 is 64× the largest model
+/// any wire deployment here uses (the transport bench's 2^16); the 2^25
+/// paper-scale benches run in-process, where no session is wire-decoded
+/// and no cap applies.
+pub const MAX_WIRE_MODEL: u64 = 1 << 22;
+/// Ceiling on the rebuilt table's bin count — guards the bin-header
+/// allocation against inflated `ε·k` products (ε arrives as raw f64
+/// bits, so infinities and huge exponents are reachable off the wire).
+pub const MAX_WIRE_BINS: usize = 1 << 22;
+
 /// Rebuild a [`Session`] from [`encode_session`] output (rebuilds the
 /// simple table; union domains re-run the [`Session::new_union`]
 /// validation, so a tampered control frame cannot install a malformed
 /// domain).
-pub(crate) fn decode_session(bytes: &[u8]) -> Result<Session> {
+///
+/// Every parameter is sanity-bounded before the O(m) table build: the
+/// codec is reachable by anyone who can speak the handshake, so a
+/// decoded session must never be able to panic the process or allocate
+/// unboundedly, only to fail with a typed error.
+pub fn decode_session(bytes: &[u8]) -> Result<Session> {
     let mut off = 0;
     let m = get_u64(bytes, &mut off)?;
     let k = get_u64(bytes, &mut off)? as usize;
@@ -212,6 +249,30 @@ pub(crate) fn decode_session(bytes: &[u8]) -> Result<Session> {
     let sigma = get_u64(bytes, &mut off)? as usize;
     let hash_seed = get_u64(bytes, &mut off)?;
     let max_kicks = get_u64(bytes, &mut off)? as usize;
+    ensure!(
+        (1..=MAX_WIRE_MODEL).contains(&m),
+        "session model size m={m} is outside the wire-installable range [1, {MAX_WIRE_MODEL}]"
+    );
+    ensure!(
+        k >= 1 && k as u64 <= m,
+        "session submodel size k={k} must be in [1, m={m}]"
+    );
+    ensure!(
+        epsilon.is_finite() && epsilon > 0.0 && epsilon <= 64.0,
+        "session cuckoo scale factor ε={epsilon} is not sane (expected 0 < ε ≤ 64)"
+    );
+    ensure!(
+        (1..=64).contains(&eta),
+        "session cuckoo hash count η={eta} is not sane (expected 1 ≤ η ≤ 64)"
+    );
+    ensure!(
+        sigma <= 1 << 20,
+        "session cuckoo stash size σ={sigma} is not sane"
+    );
+    ensure!(
+        (1..=1 << 24).contains(&max_kicks),
+        "session cuckoo max_kicks={max_kicks} is not sane"
+    );
     let params = SessionParams {
         m,
         k,
@@ -223,6 +284,11 @@ pub(crate) fn decode_session(bytes: &[u8]) -> Result<Session> {
             max_kicks,
         },
     };
+    let bins = params.num_bins();
+    ensure!(
+        bins <= MAX_WIRE_BINS,
+        "session table would need {bins} bins (wire cap {MAX_WIRE_BINS})"
+    );
     match *bytes
         .get(off)
         .ok_or_else(|| anyhow!("truncated session (domain tag)"))?
@@ -252,25 +318,33 @@ const CMD_DIAL_PEER: u8 = 10;
 const CMD_SHUTDOWN: u8 = 11;
 
 /// Encode a command for the remote control plane.
-pub(crate) fn encode_cmd<G: Group>(cmd: &ServerCmd<G>) -> Vec<u8> {
+pub fn encode_cmd<G: Group>(cmd: &ServerCmd<G>) -> Vec<u8> {
     let mut out = Vec::new();
     match cmd {
-        ServerCmd::Ssa { n } => {
+        ServerCmd::Ssa { n, deadline_nanos } => {
             out.push(CMD_SSA);
             put_u32(&mut out, *n as u32);
+            put_u64(&mut out, *deadline_nanos);
         }
-        ServerCmd::Psr { n } => {
+        ServerCmd::Psr { n, deadline_nanos } => {
             out.push(CMD_PSR);
             put_u32(&mut out, *n as u32);
+            put_u64(&mut out, *deadline_nanos);
         }
-        ServerCmd::UdpfSetup { n } => {
+        ServerCmd::UdpfSetup { n, deadline_nanos } => {
             out.push(CMD_UDPF_SETUP);
             put_u32(&mut out, *n as u32);
+            put_u64(&mut out, *deadline_nanos);
         }
-        ServerCmd::UdpfEpoch { n, epoch } => {
+        ServerCmd::UdpfEpoch {
+            n,
+            epoch,
+            deadline_nanos,
+        } => {
             out.push(CMD_UDPF_EPOCH);
             put_u32(&mut out, *n as u32);
             put_u64(&mut out, *epoch);
+            put_u64(&mut out, *deadline_nanos);
         }
         ServerCmd::VerifiedSsa { uploads, seed } => {
             out.push(CMD_VERIFIED);
@@ -304,7 +378,7 @@ pub(crate) fn encode_cmd<G: Group>(cmd: &ServerCmd<G>) -> Vec<u8> {
 }
 
 /// Decode a remote control-plane command.
-pub(crate) fn decode_cmd<G: Group>(bytes: &[u8]) -> Result<ServerCmd<G>> {
+pub fn decode_cmd<G: Group>(bytes: &[u8]) -> Result<ServerCmd<G>> {
     let tag = *bytes
         .first()
         .ok_or_else(|| anyhow!("empty control message"))?;
@@ -312,17 +386,25 @@ pub(crate) fn decode_cmd<G: Group>(bytes: &[u8]) -> Result<ServerCmd<G>> {
     Ok(match tag {
         CMD_SSA => ServerCmd::Ssa {
             n: get_u32(bytes, &mut off)? as usize,
+            deadline_nanos: get_u64(bytes, &mut off)?,
         },
         CMD_PSR => ServerCmd::Psr {
             n: get_u32(bytes, &mut off)? as usize,
+            deadline_nanos: get_u64(bytes, &mut off)?,
         },
         CMD_UDPF_SETUP => ServerCmd::UdpfSetup {
             n: get_u32(bytes, &mut off)? as usize,
+            deadline_nanos: get_u64(bytes, &mut off)?,
         },
         CMD_UDPF_EPOCH => {
             let n = get_u32(bytes, &mut off)? as usize;
             let epoch = get_u64(bytes, &mut off)?;
-            ServerCmd::UdpfEpoch { n, epoch }
+            let deadline_nanos = get_u64(bytes, &mut off)?;
+            ServerCmd::UdpfEpoch {
+                n,
+                epoch,
+                deadline_nanos,
+            }
         }
         CMD_VERIFIED => {
             let seed = get_u64(bytes, &mut off)?;
@@ -366,8 +448,26 @@ const REP_ROUND: u8 = 2;
 const REP_VERIFIED: u8 = 3;
 const REP_FAILED: u8 = 4;
 
+/// One byte per [`ClientOutcome`] on the wire.
+fn outcome_byte(o: ClientOutcome) -> u8 {
+    match o {
+        ClientOutcome::Completed => 0,
+        ClientOutcome::Dropped => 1,
+        ClientOutcome::StragglerCut => 2,
+    }
+}
+
+fn outcome_of(b: u8) -> Result<ClientOutcome> {
+    Ok(match b {
+        0 => ClientOutcome::Completed,
+        1 => ClientOutcome::Dropped,
+        2 => ClientOutcome::StragglerCut,
+        t => bail!("unknown client-outcome byte {t}"),
+    })
+}
+
 /// Encode a server reply for the remote control plane.
-pub(crate) fn encode_reply<G: Group>(reply: &ServerReply<G>) -> Vec<u8> {
+pub fn encode_reply<G: Group>(reply: &ServerReply<G>) -> Vec<u8> {
     let mut out = Vec::new();
     match reply {
         ServerReply::Ack => out.push(REP_ACK),
@@ -375,10 +475,15 @@ pub(crate) fn encode_reply<G: Group>(reply: &ServerReply<G>) -> Vec<u8> {
             server_time,
             delta,
             inter_sent,
+            outcomes,
         } => {
             out.push(REP_ROUND);
             put_u64(&mut out, duration_nanos(*server_time));
             put_u64(&mut out, *inter_sent);
+            // Outcomes precede the delta: the delta encoding consumes the
+            // rest of the message.
+            put_u32(&mut out, outcomes.len() as u32);
+            out.extend(outcomes.iter().map(|&o| outcome_byte(o)));
             match delta {
                 None => out.push(0),
                 Some(d) => {
@@ -406,7 +511,7 @@ pub(crate) fn encode_reply<G: Group>(reply: &ServerReply<G>) -> Vec<u8> {
 }
 
 /// Decode a remote server reply.
-pub(crate) fn decode_reply<G: Group>(bytes: &[u8]) -> Result<ServerReply<G>> {
+pub fn decode_reply<G: Group>(bytes: &[u8]) -> Result<ServerReply<G>> {
     let tag = *bytes.first().ok_or_else(|| anyhow!("empty server reply"))?;
     let mut off = 1;
     Ok(match tag {
@@ -414,6 +519,17 @@ pub(crate) fn decode_reply<G: Group>(bytes: &[u8]) -> Result<ServerReply<G>> {
         REP_ROUND => {
             let server_time = Duration::from_nanos(get_u64(bytes, &mut off)?);
             let inter_sent = get_u64(bytes, &mut off)?;
+            let n_outcomes = get_u32(bytes, &mut off)? as usize;
+            if n_outcomes > bytes.len().saturating_sub(off) {
+                bail!(
+                    "round reply declares {n_outcomes} outcomes but only {} bytes remain",
+                    bytes.len() - off
+                );
+            }
+            let outcomes = get_slice(bytes, &mut off, n_outcomes)?
+                .iter()
+                .map(|&b| outcome_of(b))
+                .collect::<Result<Vec<_>>>()?;
             let delta = match *bytes
                 .get(off)
                 .ok_or_else(|| anyhow!("truncated round reply"))?
@@ -428,6 +544,7 @@ pub(crate) fn decode_reply<G: Group>(bytes: &[u8]) -> Result<ServerReply<G>> {
                 server_time,
                 delta,
                 inter_sent,
+                outcomes,
             }
         }
         REP_VERIFIED => {
@@ -501,10 +618,10 @@ mod tests {
     #[test]
     fn cmd_codec_roundtrips() {
         let cases: Vec<ServerCmd<u64>> = vec![
-            ServerCmd::Ssa { n: 4 },
-            ServerCmd::Psr { n: 9 },
-            ServerCmd::UdpfSetup { n: 2 },
-            ServerCmd::UdpfEpoch { n: 2, epoch: 77 },
+            ServerCmd::Ssa { n: 4, deadline_nanos: 0 },
+            ServerCmd::Psr { n: 9, deadline_nanos: 2_000_000_000 },
+            ServerCmd::UdpfSetup { n: 2, deadline_nanos: 5 },
+            ServerCmd::UdpfEpoch { n: 2, epoch: 77, deadline_nanos: 0 },
             ServerCmd::PsuAlign { n: 3, shuffle_seed: 0xABC },
             ServerCmd::SetWeights(Arc::new(vec![1u64, 2, u64::MAX])),
             ServerCmd::SetSession(Arc::new(session())),
@@ -522,9 +639,14 @@ mod tests {
                 (ServerCmd::DialPeer { addr: a }, ServerCmd::DialPeer { addr: b }) => {
                     assert_eq!(a, b)
                 }
-                (ServerCmd::UdpfEpoch { n, epoch }, ServerCmd::UdpfEpoch { n: n2, epoch: e2 }) => {
-                    assert_eq!((n, epoch), (n2, e2))
-                }
+                (
+                    ServerCmd::UdpfEpoch { n, epoch, deadline_nanos },
+                    ServerCmd::UdpfEpoch { n: n2, epoch: e2, deadline_nanos: d2 },
+                ) => assert_eq!((n, epoch, deadline_nanos), (n2, e2, d2)),
+                (
+                    ServerCmd::Psr { deadline_nanos, .. },
+                    ServerCmd::Psr { deadline_nanos: d2, .. },
+                ) => assert_eq!(deadline_nanos, d2),
                 _ => {}
             }
         }
@@ -564,11 +686,17 @@ mod tests {
                 server_time: Duration::from_micros(1234),
                 delta: Some(vec![5u128, 6, 7]),
                 inter_sent: 999,
+                outcomes: vec![],
             },
             ServerReply::Round {
                 server_time: Duration::ZERO,
                 delta: None,
                 inter_sent: 0,
+                outcomes: vec![
+                    ClientOutcome::Completed,
+                    ClientOutcome::Dropped,
+                    ClientOutcome::StragglerCut,
+                ],
             },
             ServerReply::Verified {
                 result: VerifiedSsaResult {
@@ -597,10 +725,27 @@ mod tests {
             server_time: Duration::from_secs(1),
             delta: Some(vec![9]),
             inter_sent: 3,
+            outcomes: vec![ClientOutcome::Completed, ClientOutcome::Dropped],
         };
         let enc = encode_reply(&reply);
         for cut in 0..enc.len() {
             assert!(decode_reply::<u64>(&enc[..cut]).is_err(), "cut {cut}");
         }
+    }
+
+    #[test]
+    fn outcome_bytes_reject_unknowns() {
+        let reply: ServerReply<u64> = ServerReply::Round {
+            server_time: Duration::ZERO,
+            delta: None,
+            inter_sent: 0,
+            outcomes: vec![ClientOutcome::StragglerCut],
+        };
+        let mut enc = encode_reply(&reply);
+        // The single outcome byte sits just before the trailing delta tag.
+        let pos = enc.len() - 2;
+        assert_eq!(enc[pos], 2);
+        enc[pos] = 9;
+        assert!(decode_reply::<u64>(&enc).is_err());
     }
 }

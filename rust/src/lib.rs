@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod crypto;
 pub mod data;
 pub mod dpf;
+pub mod fuzz;
 pub mod group;
 pub mod hashing;
 pub mod metrics;

@@ -19,16 +19,19 @@
 
 use anyhow::{anyhow, Result};
 use fsl::coordinator::{
-    run_fsl_training, serve_addr, FslConfig, FslRuntime, FslRuntimeBuilder, RoundReport,
-    ServeOptions,
+    run_fsl_training, serve, ClientOutcome, FslConfig, FslRuntime, FslRuntimeBuilder, KeyMode,
+    RoundReport, ServeOptions,
 };
 use fsl::crypto::rng::Rng;
 use fsl::data::{partition_iid, ImageDataset, IMAGE_CLASSES};
 use fsl::hashing::{CuckooParams, SimpleTable};
 use fsl::metrics::{bits_to_mb, mb};
+use fsl::net::transport::tcp::TcpAcceptor;
+use fsl::net::transport::FaultPlan;
 use fsl::protocol::{Session, SessionParams};
 use fsl::runtime::Executor;
 use std::collections::HashMap;
+use std::io::Write as _;
 use std::time::{Duration, Instant};
 
 fn parse_kv(args: &[String]) -> HashMap<String, String> {
@@ -73,9 +76,12 @@ fn main() -> Result<()> {
 }
 
 /// Run one standalone server until its deployment ends. `party=0|1`
-/// picks S0/S1, `listen=ADDR` the bind address, `group=u64|u128` the
-/// payload group (must match the driver's), `threads=N` the engine width
-/// (0 = one worker per core).
+/// picks S0/S1, `listen=ADDR` the bind address (`:0` picks an ephemeral
+/// port, announced on stdout), `group=u64|u128` the payload group (must
+/// match the driver's), `threads=N` the engine width (0 = one worker per
+/// core), `snapshot=PATH` a recovery snapshot: restored on start when the
+/// file exists, rewritten after every state-changing command so a killed
+/// process can resume its U-DPF deployment where it left off.
 fn cmd_serve(kv: &HashMap<String, String>) -> Result<()> {
     let party: u8 = get(kv, "party", 0);
     anyhow::ensure!(party < 2, "party must be 0 (S0) or 1 (S1)");
@@ -84,14 +90,72 @@ fn cmd_serve(kv: &HashMap<String, String>) -> Result<()> {
     let mut opts = ServeOptions::new(party);
     opts.threads = get(kv, "threads", 0);
     opts.data_timeout = Duration::from_millis(get(kv, "timeout_ms", 600_000u64));
-    eprintln!("S{party} serving {group} payloads on {listen} (one deployment, then exit)");
+    opts.snapshot = kv.get("snapshot").map(std::path::PathBuf::from);
+    let acceptor = TcpAcceptor::bind(listen.as_str(), opts.tcp.clone())
+        .map_err(|e| e.context(format!("starting a server on {listen}")))?;
+    let addr = acceptor.local_addr()?;
+    // The bound address goes to stdout (flushed) so scripts binding
+    // ephemeral ports can parse it before the first connection arrives.
+    println!("S{party} listening on {addr}");
+    std::io::stdout().flush()?;
+    eprintln!("S{party} serving {group} payloads on {addr} (one deployment, then exit)");
     match group.as_str() {
-        "u64" => serve_addr::<u64>(&listen, &opts),
-        "u128" => serve_addr::<u128>(&listen, &opts),
+        "u64" => serve::<u64>(&acceptor, &opts),
+        "u128" => serve::<u128>(&acceptor, &opts),
         other => Err(anyhow!(
             "unknown payload group {other:?} (supported: u64, u128)"
         )),
     }
+}
+
+/// The shared round-shape flags: `keymode=fresh|udpf` picks the SSA key
+/// flow, `deadline_ms=N` arms tolerant rounds (straggler/dropout cut at
+/// N ms per upload), `reply_timeout_ms=N` bounds how long the driver
+/// waits on a server, and `drop=i,j,...` injects a disconnect fault into
+/// the listed clients' links (their first upload severs the connection).
+fn builder_for(
+    session: &Session,
+    threads: usize,
+    n: usize,
+    kv: &HashMap<String, String>,
+) -> Result<FslRuntimeBuilder> {
+    let mut b = FslRuntimeBuilder::from_session(session.clone())
+        .threads(threads)
+        .max_clients(n)
+        .reply_timeout(Duration::from_millis(get(kv, "reply_timeout_ms", 600_000u64)));
+    if get(kv, "keymode", "fresh".to_string()) == "udpf" {
+        b = b.key_mode(KeyMode::Udpf);
+    }
+    let deadline_ms: u64 = get(kv, "deadline_ms", 0);
+    if deadline_ms > 0 {
+        b = b.upload_deadline(Duration::from_millis(deadline_ms));
+    }
+    if let Some(list) = kv.get("drop") {
+        for tok in list.split(',').filter(|t| !t.trim().is_empty()) {
+            let i: usize = tok
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("drop takes client indices: drop=0,3 (got {tok:?})"))?;
+            b = b.client_fault(i, FaultPlan::new().disconnect_after_messages(0));
+        }
+    }
+    Ok(b)
+}
+
+/// Connect a configured builder to two `fsl serve` processes at
+/// `spec = "S0_ADDR,S1_ADDR"`, waiting up to `window` for their
+/// listeners to come up.
+fn connect_runtime(
+    builder: FslRuntimeBuilder,
+    spec: &str,
+    window: Duration,
+) -> Result<FslRuntime<u64>> {
+    let (s0, s1) = spec
+        .split_once(',')
+        .ok_or_else(|| anyhow!("expected two addresses: S0_ADDR,S1_ADDR (got {spec:?})"))?;
+    let (s0, s1) = (s0.trim(), s1.trim());
+    wait_for_listeners(&[s0, s1], window)?;
+    builder.connect_retry(window).connect::<u64>(s0, s1)
 }
 
 /// Build an in-process runtime, or — with `connect=S0,S1` — a runtime
@@ -103,24 +167,14 @@ fn runtime_for(
     n: usize,
     kv: &HashMap<String, String>,
 ) -> Result<FslRuntime<u64>> {
+    let builder = builder_for(session, threads, n, kv)?;
     match kv.get("connect") {
-        None => FslRuntimeBuilder::from_session(session.clone())
-            .threads(threads)
-            .max_clients(n)
-            .build::<u64>(),
-        Some(spec) => {
-            let (s0, s1) = spec
-                .split_once(',')
-                .ok_or_else(|| anyhow!("connect takes two addresses: connect=S0_ADDR,S1_ADDR"))?;
-            let (s0, s1) = (s0.trim(), s1.trim());
-            wait_for_listeners(
-                &[s0, s1],
-                Duration::from_millis(get(kv, "retry_ms", 10_000u64)),
-            )?;
-            FslRuntimeBuilder::from_session(session.clone())
-                .max_clients(n)
-                .connect::<u64>(s0, s1)
-        }
+        None => builder.build::<u64>(),
+        Some(spec) => connect_runtime(
+            builder,
+            spec,
+            Duration::from_millis(get(kv, "retry_ms", 10_000u64)),
+        ),
     }
 }
 
@@ -262,41 +316,128 @@ fn eval_mlp(exec: &Executor, params: &[f32], test: &ImageDataset, batch: usize) 
     Ok(correct as f32 / total.max(1) as f32)
 }
 
+/// The delta an SSA round must reconstruct: the exact sum of every
+/// *completed* client's sparse update over the session domain. Dropped
+/// and straggler-cut clients contribute nothing — that is the tolerant
+/// rounds' correctness contract.
+fn expected_delta(
+    m: u64,
+    clients: &[(Vec<u64>, Vec<u64>)],
+    outcomes: &[ClientOutcome],
+) -> Vec<u64> {
+    let mut expected = vec![0u64; m as usize];
+    for (i, (sel, dl)) in clients.iter().enumerate() {
+        if !matches!(outcomes.get(i), Some(ClientOutcome::Completed)) {
+            continue;
+        }
+        for (&x, &d) in sel.iter().zip(dl) {
+            expected[x as usize] = expected[x as usize].wrapping_add(d);
+        }
+    }
+    expected
+}
+
+/// One SSA epoch's JSON line: the wrapped report plus the epoch number,
+/// whether this epoch ran on a runtime rebuilt from server snapshots,
+/// and whether the reconstructed delta matched the surviving cohort.
+fn emit_epoch(json: bool, epoch: usize, recovered: bool, verified: bool, report: &RoundReport) {
+    if json {
+        println!(
+            "{{\"epoch\":{epoch},\"recovered\":{recovered},\"verified\":{verified},\"report\":{}}}",
+            report.to_json()
+        );
+    }
+}
+
 fn cmd_ssa(kv: &HashMap<String, String>, json: bool) -> Result<()> {
     let m: u64 = get(kv, "m", 1 << 15);
     let c: f64 = get(kv, "c", 0.1);
     let n: usize = get(kv, "clients", 1).max(1);
     let k = ((m as f64 * c) as usize).max(1);
+    let epochs: usize = get(kv, "epochs", 1).max(1);
+    let pause_ms: u64 = get(kv, "pause_ms", 0);
+    let recover = get(kv, "recover", 0u64) != 0;
+    let retry = Duration::from_millis(get(kv, "retry_ms", 10_000u64));
     let session = Session::new_full(SessionParams {
         m,
         k,
         cuckoo: CuckooParams::default().with_seed(get(kv, "seed", 7)),
     });
     eprintln!(
-        "SSA micro-round: m={m} k={k} (c={:.1}%) Θ={}",
+        "SSA micro-round: m={m} k={k} (c={:.1}%) Θ={} epochs={epochs}",
         c * 100.0,
         session.theta()
     );
     let mut rng = Rng::new(get(kv, "seed", 7));
-    let clients: Vec<(Vec<u64>, Vec<u64>)> = (0..n)
-        .map(|_| {
-            let sel = rng.sample_distinct(k, m);
-            let dl = sel.iter().map(|&x| x + 1).collect();
-            (sel, dl)
-        })
-        .collect();
+    // Fixed selections across epochs (the U-DPF contract); per-epoch
+    // deltas shift so every epoch's expected sum is distinct.
+    let sels: Vec<Vec<u64>> = (0..n).map(|_| rng.sample_distinct(k, m)).collect();
+    let updates_for = |epoch: usize| -> Vec<(Vec<u64>, Vec<u64>)> {
+        sels.iter()
+            .map(|sel| {
+                let dl = sel.iter().map(|&x| x + 1 + epoch as u64).collect();
+                (sel.clone(), dl)
+            })
+            .collect()
+    };
     let mut rt = runtime_for(&session, 0, n, kv)?;
-    let res = rt.ssa(&clients, &mut rng)?;
-    let paper_bits = session.simple.num_bins() * (9 * 130 + 128) + 256;
-    eprintln!(
-        "gen {:?}  server eval+agg {:?}\nupload/client: measured {:.3} MB, paper model {:.3} MB, trivial SA {:.3} MB",
-        res.report.gen_time,
-        res.report.server_time,
-        mb(res.report.client_upload_bytes) / n as f64,
-        bits_to_mb(paper_bits),
-        bits_to_mb(m as usize * 128 + 128),
-    );
-    emit_report(json, &res.report);
+    let mut epoch = 0usize;
+    let mut recovered = false;
+    while epoch < epochs {
+        let clients = updates_for(epoch);
+        match rt.ssa(&clients, &mut rng) {
+            Ok(res) => {
+                let verified = expected_delta(m, &clients, &res.report.outcomes) == res.delta;
+                if epoch == 0 {
+                    let paper_bits = session.simple.num_bins() * (9 * 130 + 128) + 256;
+                    eprintln!(
+                        "gen {:?}  server eval+agg {:?}\nupload/client: measured {:.3} MB, \
+                         paper model {:.3} MB, trivial SA {:.3} MB",
+                        res.report.gen_time,
+                        res.report.server_time,
+                        mb(res.report.client_upload_bytes) / n as f64,
+                        bits_to_mb(paper_bits),
+                        bits_to_mb(m as usize * 128 + 128),
+                    );
+                } else {
+                    eprintln!(
+                        "epoch {epoch}: {}/{n} clients completed, server {:?}",
+                        res.report.completed(),
+                        res.report.server_time
+                    );
+                }
+                if epochs == 1 {
+                    emit_report(json, &res.report);
+                } else {
+                    emit_epoch(json, epoch, recovered, verified, &res.report);
+                }
+                anyhow::ensure!(
+                    verified,
+                    "epoch {epoch}: reconstructed delta does not match the surviving cohort"
+                );
+                recovered = false;
+                epoch += 1;
+                if pause_ms > 0 && epoch < epochs {
+                    std::thread::sleep(Duration::from_millis(pause_ms));
+                }
+            }
+            Err(e) => {
+                // One recovery attempt per epoch: export the driver-side
+                // U-DPF state, reconnect to the restarted servers (which
+                // reload their halves from `snapshot=` files), resume,
+                // and retry the same epoch.
+                let spec = match kv.get("reconnect") {
+                    Some(spec) if recover && !recovered => spec,
+                    _ => return Err(e),
+                };
+                eprintln!("epoch {epoch} failed ({e:#}); reconnecting to {spec} and retrying");
+                let state = rt.export_udpf_state();
+                rt = connect_runtime(builder_for(&session, 0, n, kv)?, spec, retry)?;
+                rt.resume_udpf(state)?;
+                recovered = true;
+            }
+        }
+    }
     rt.shutdown()?;
     Ok(())
 }

@@ -94,7 +94,7 @@ impl Endpoint {
                 deliver_at,
                 payload: msg,
             })
-            .map_err(|_| anyhow::anyhow!("channel closed"))
+            .map_err(|_| anyhow::Error::new(transport::TransportError::Closed))
     }
 
     /// Sleep out whatever remains of the envelope's simulated flight time,
@@ -113,15 +113,24 @@ impl Endpoint {
         let env = self
             .rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("channel closed"))?;
+            .map_err(|_| anyhow::Error::new(transport::TransportError::Closed))?;
         Ok(self.deliver(env))
     }
 
-    /// Receive with a timeout (failure-injection tests). The timeout
-    /// bounds the wait for a message to be *sent*; once one is in flight,
-    /// its residual simulated latency is still slept before delivery.
+    /// Receive with a timeout (failure injection / straggler deadlines).
+    /// The timeout bounds the wait for a message to be *sent*; once one is
+    /// in flight, its residual simulated latency is still slept before
+    /// delivery. Fails with a typed [`transport::TransportError`] —
+    /// `Timeout` when the deadline lapses, `Closed` when the sender is
+    /// gone — matching the TCP transport's vocabulary.
     pub fn recv_timeout(&self, timeout: Duration) -> anyhow::Result<Vec<u8>> {
-        let env = self.rx.recv_timeout(timeout)?;
+        use std::sync::mpsc::RecvTimeoutError;
+        let env = self.rx.recv_timeout(timeout).map_err(|e| {
+            anyhow::Error::new(match e {
+                RecvTimeoutError::Timeout => transport::TransportError::Timeout,
+                RecvTimeoutError::Disconnected => transport::TransportError::Closed,
+            })
+        })?;
         Ok(self.deliver(env))
     }
 }

@@ -1,0 +1,254 @@
+//! Deterministic fault injection for transports.
+//!
+//! A [`FaultPlan`] describes how one client's links misbehave — added
+//! send latency, going silent after a byte budget, or disconnecting
+//! mid-upload — and [`FaultInjector::wrap`] applies the plan to any
+//! [`BoxTransport`], so the same failure scenario runs unchanged over
+//! the in-process channels and real TCP sockets. One injector is shared
+//! across all of a client's links: its byte/message budgets span the
+//! client's whole upload, which is what lets a plan cut a client *between*
+//! its short (to `S_1`) and long (to `S_0`) SSA messages and exercise the
+//! servers' cohort agreement.
+//!
+//! Faults are injected on the *send* side only: a disconnect drops the
+//! wrapped transport (closing the socket / channel, so the far side sees
+//! [`TransportError::Closed`]), a mute swallows the message (the far side
+//! sees silence and classifies the client a straggler).
+
+use super::{BoxTransport, MeterSnapshot, Transport, TransportError};
+use crate::metrics::CommMeter;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A deterministic misbehaviour script for one client's links.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Sleep this long before every send (a slow client / congested path).
+    pub send_delay: Option<Duration>,
+    /// After this many bytes have been offered for sending, swallow all
+    /// further sends: the client believes it is uploading, the servers
+    /// see silence (a straggler).
+    pub mute_after_bytes: Option<u64>,
+    /// After this many bytes have been offered for sending, drop the
+    /// underlying transport: the servers see a closed link (a crash).
+    pub disconnect_after_bytes: Option<u64>,
+    /// Disconnect after this many whole messages have been sent.
+    pub disconnect_after_messages: Option<u64>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add latency to every send.
+    pub fn delay(mut self, d: Duration) -> Self {
+        self.send_delay = Some(d);
+        self
+    }
+
+    /// Go silent once `bytes` bytes have been offered for sending.
+    pub fn mute_after(mut self, bytes: u64) -> Self {
+        self.mute_after_bytes = Some(bytes);
+        self
+    }
+
+    /// Disconnect once `bytes` bytes have been offered for sending.
+    pub fn disconnect_after(mut self, bytes: u64) -> Self {
+        self.disconnect_after_bytes = Some(bytes);
+        self
+    }
+
+    /// Disconnect after `messages` whole messages have been sent.
+    pub fn disconnect_after_messages(mut self, messages: u64) -> Self {
+        self.disconnect_after_messages = Some(messages);
+        self
+    }
+
+    /// Turn the plan into an injector whose budgets are shared by every
+    /// transport it wraps.
+    pub fn injector(self) -> FaultInjector {
+        FaultInjector {
+            shared: Arc::new(FaultShared {
+                plan: self,
+                sent_bytes: AtomicU64::new(0),
+                sent_messages: AtomicU64::new(0),
+                alive: AtomicBool::new(true),
+            }),
+        }
+    }
+}
+
+struct FaultShared {
+    plan: FaultPlan,
+    sent_bytes: AtomicU64,
+    sent_messages: AtomicU64,
+    alive: AtomicBool,
+}
+
+/// Applies one [`FaultPlan`] to any number of transports, with shared
+/// byte/message budgets (clone freely; clones share state).
+#[derive(Clone)]
+pub struct FaultInjector {
+    shared: Arc<FaultShared>,
+}
+
+impl FaultInjector {
+    /// Wrap a transport so it follows this injector's plan.
+    pub fn wrap(&self, inner: BoxTransport) -> BoxTransport {
+        let meter = Arc::clone(inner.meter());
+        Box::new(FaultTransport {
+            inner: Mutex::new(Some(inner)),
+            meter,
+            shared: Arc::clone(&self.shared),
+        })
+    }
+}
+
+/// A transport decorated with injected faults. The meter is the wrapped
+/// transport's own (cloned at wrap time so reports survive a simulated
+/// disconnect); swallowed sends are deliberately unmetered — they never
+/// crossed the wire.
+struct FaultTransport {
+    inner: Mutex<Option<BoxTransport>>,
+    meter: Arc<CommMeter>,
+    shared: Arc<FaultShared>,
+}
+
+impl FaultTransport {
+    /// Drop the wrapped transport, closing the underlying socket/channel.
+    fn sever(&self) -> anyhow::Error {
+        self.shared.alive.store(false, Ordering::SeqCst);
+        *self.inner.lock().unwrap() = None;
+        TransportError::Closed.into()
+    }
+}
+
+impl Transport for FaultTransport {
+    fn send(&self, msg: Vec<u8>) -> Result<()> {
+        let plan = &self.shared.plan;
+        if let Some(d) = plan.send_delay {
+            std::thread::sleep(d);
+        }
+        if !self.shared.alive.load(Ordering::SeqCst) {
+            return Err(self.sever());
+        }
+        let bytes = self
+            .shared
+            .sent_bytes
+            .fetch_add(msg.len() as u64, Ordering::SeqCst)
+            + msg.len() as u64;
+        let messages = self.shared.sent_messages.fetch_add(1, Ordering::SeqCst) + 1;
+        if plan.disconnect_after_bytes.is_some_and(|b| bytes > b)
+            || plan.disconnect_after_messages.is_some_and(|m| messages > m)
+        {
+            return Err(self.sever());
+        }
+        if plan.mute_after_bytes.is_some_and(|b| bytes > b) {
+            return Ok(()); // swallowed: the far side sees a straggler
+        }
+        match &*self.inner.lock().unwrap() {
+            Some(t) => t.send(msg),
+            None => Err(TransportError::Closed.into()),
+        }
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        if !self.shared.alive.load(Ordering::SeqCst) {
+            return Err(self.sever());
+        }
+        match &*self.inner.lock().unwrap() {
+            Some(t) => t.recv(),
+            None => Err(TransportError::Closed.into()),
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Vec<u8>> {
+        if !self.shared.alive.load(Ordering::SeqCst) {
+            return Err(self.sever());
+        }
+        match &*self.inner.lock().unwrap() {
+            Some(t) => t.recv_timeout(timeout),
+            None => Err(TransportError::Closed.into()),
+        }
+    }
+
+    fn meter(&self) -> &Arc<CommMeter> {
+        &self.meter
+    }
+
+    fn snapshot(&self) -> MeterSnapshot {
+        MeterSnapshot {
+            sent: self.meter.sent(),
+            recv: self.meter.recv(),
+            messages: self.meter.messages(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::InProc;
+    use crate::net::{self};
+
+    fn wrapped_pair(plan: FaultPlan) -> (BoxTransport, net::Endpoint) {
+        let (a, b) = net::pair(Duration::ZERO);
+        let inj = plan.injector();
+        (inj.wrap(Box::new(InProc(a))), b)
+    }
+
+    #[test]
+    fn disconnect_after_bytes_severs_both_directions() {
+        let (t, peer) = wrapped_pair(FaultPlan::new().disconnect_after(4));
+        t.send(vec![1, 2, 3]).unwrap();
+        assert_eq!(peer.recv().unwrap(), vec![1, 2, 3]);
+        let err = t.send(vec![4, 5]).unwrap_err();
+        assert!(TransportError::is_closed(&err), "{err:?}");
+        // The wrapped endpoint was dropped: the peer now sees Closed too.
+        let err = peer.recv().unwrap_err();
+        assert!(TransportError::is_closed(&err), "{err:?}");
+        // And our own later receives fail closed rather than hanging.
+        assert!(TransportError::is_closed(&t.recv().unwrap_err()));
+    }
+
+    #[test]
+    fn disconnect_after_messages_counts_whole_sends() {
+        let (t, peer) = wrapped_pair(FaultPlan::new().disconnect_after_messages(2));
+        t.send(vec![9]).unwrap();
+        t.send(vec![9, 9]).unwrap();
+        assert!(TransportError::is_closed(&t.send(vec![9]).unwrap_err()));
+        assert_eq!(peer.recv().unwrap(), vec![9]);
+        assert_eq!(peer.recv().unwrap(), vec![9, 9]);
+        assert!(peer.recv().is_err());
+    }
+
+    #[test]
+    fn mute_swallows_without_closing() {
+        let (t, peer) = wrapped_pair(FaultPlan::new().mute_after(2));
+        t.send(vec![1, 2]).unwrap();
+        t.send(vec![3, 4]).unwrap(); // swallowed
+        assert_eq!(peer.recv().unwrap(), vec![1, 2]);
+        let err = peer.recv_timeout(Duration::from_millis(30)).unwrap_err();
+        assert!(TransportError::is_timeout(&err), "{err:?}");
+        // Metering reflects only what crossed the wire.
+        assert_eq!(t.snapshot().sent, 2);
+    }
+
+    #[test]
+    fn budgets_span_all_wrapped_links() {
+        let (a0, b0) = net::pair(Duration::ZERO);
+        let (a1, b1) = net::pair(Duration::ZERO);
+        let inj = FaultPlan::new().disconnect_after(3).injector();
+        let l0 = inj.wrap(Box::new(InProc(a0)));
+        let l1 = inj.wrap(Box::new(InProc(a1)));
+        l0.send(vec![1, 2, 3]).unwrap();
+        // The second link's first send already exceeds the shared budget.
+        assert!(TransportError::is_closed(&l1.send(vec![4]).unwrap_err()));
+        assert_eq!(b0.recv().unwrap(), vec![1, 2, 3]);
+        assert!(b1.recv().is_err());
+    }
+}

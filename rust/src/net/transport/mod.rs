@@ -17,13 +17,63 @@
 //! mis-dialled or stale-binary connection fails immediately with a
 //! readable error, not a hang or a decode failure mid-round.
 
+pub mod fault;
 pub mod tcp;
+
+pub use fault::{FaultInjector, FaultPlan};
 
 use crate::metrics::CommMeter;
 use crate::net::Endpoint;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// The typed failure vocabulary every transport maps its native errors
+/// into, so the runtime and tests can match on variants instead of error
+/// strings. Both [`InProc`] and [`tcp::TcpTransport`] attach one of these
+/// as the root cause of every timeout/disconnect `anyhow::Error`;
+/// recover it with [`TransportError::of`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// No message arrived (or could be written) within the deadline.
+    Timeout,
+    /// The peer closed its end — a crashed process, a dropped endpoint,
+    /// or a reset socket.
+    Closed,
+    /// The accepting side deliberately refused the handshake. Permanent:
+    /// retrying the same dial cannot succeed.
+    Rejected(String),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Timeout => write!(f, "timed out waiting for a frame"),
+            TransportError::Closed => write!(f, "connection closed by peer"),
+            TransportError::Rejected(reason) => write!(f, "connection rejected: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl TransportError {
+    /// Walk an `anyhow` error's cause chain looking for the transport
+    /// error underneath any amount of added context.
+    pub fn of(err: &anyhow::Error) -> Option<&TransportError> {
+        err.chain().find_map(|cause| cause.downcast_ref())
+    }
+
+    /// True when `err` is rooted in a transport timeout.
+    pub fn is_timeout(err: &anyhow::Error) -> bool {
+        matches!(Self::of(err), Some(TransportError::Timeout))
+    }
+
+    /// True when `err` is rooted in a closed peer.
+    pub fn is_closed(err: &anyhow::Error) -> bool {
+        matches!(Self::of(err), Some(TransportError::Closed))
+    }
+}
 
 /// Point-in-time view of a transport's byte meters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -95,8 +145,10 @@ impl Transport for InProc {
 /// Handshake magic — the first bytes a dialler sends on any connection.
 pub const TRANSPORT_MAGIC: [u8; 4] = *b"FSLT";
 /// Handshake/transport protocol version. Bump on incompatible changes to
-/// the hello, ack, or control-plane encodings.
-pub const TRANSPORT_VERSION: u16 = 1;
+/// the hello, ack, or control-plane encodings. Version 2 added per-round
+/// upload deadlines to round commands and per-client outcomes to round
+/// replies.
+pub const TRANSPORT_VERSION: u16 = 2;
 
 /// What a dialling connection claims to be.
 #[derive(Debug, Clone, PartialEq, Eq)]

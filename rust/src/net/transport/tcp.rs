@@ -14,7 +14,7 @@
 //! binary, or a non-fsl port fails with a readable error before any
 //! protocol traffic moves.
 
-use super::{BoxTransport, Hello, HelloAck, Listener, Transport};
+use super::{BoxTransport, Hello, HelloAck, Listener, Transport, TransportError};
 use crate::metrics::CommMeter;
 use crate::protocol::msg;
 use anyhow::{anyhow, bail, Context, Result};
@@ -93,7 +93,13 @@ impl TcpTransport {
             .map_err(|e| e.context(format!("waiting for handshake ack from {addr:?}")))?;
         let ack = HelloAck::decode(&ack_bytes)?;
         if let Some(reason) = ack.error {
-            bail!("server S{} at {addr:?} rejected the connection: {reason}", ack.party);
+            // Typed as Rejected so reconnect/backoff paths know this is
+            // permanent — a deliberate refusal, not a flaky network.
+            let ctx = format!(
+                "server S{} at {addr:?} rejected the connection: {reason}",
+                ack.party
+            );
+            return Err(anyhow::Error::new(TransportError::Rejected(reason)).context(ctx));
         }
         if ack.party != hello.party {
             bail!(
@@ -132,14 +138,17 @@ impl TcpTransport {
     }
 }
 
-/// Map IO failures to protocol-level wording (EOF = peer closed; a read
-/// timeout names itself so runtime poisoning messages are actionable).
+/// Map IO failures to the typed [`TransportError`] vocabulary (EOF and
+/// resets = peer closed; a read timeout names itself so runtime poisoning
+/// messages stay actionable).
 fn map_io(e: std::io::Error) -> anyhow::Error {
+    use std::io::ErrorKind;
     match e.kind() {
-        std::io::ErrorKind::UnexpectedEof => anyhow!("connection closed by peer"),
-        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
-            anyhow!("timed out waiting for a frame")
-        }
+        ErrorKind::UnexpectedEof
+        | ErrorKind::ConnectionReset
+        | ErrorKind::ConnectionAborted
+        | ErrorKind::BrokenPipe => TransportError::Closed.into(),
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => TransportError::Timeout.into(),
         _ => anyhow!("tcp read failed: {e}"),
     }
 }
@@ -160,7 +169,10 @@ impl Transport for TcpTransport {
             .map_err(|_| anyhow!("tcp writer poisoned"))?;
         stream.write_all(&framed).map_err(|e| match e.kind() {
             std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
-                anyhow!("timed out writing a frame")
+                anyhow::Error::new(TransportError::Timeout).context("timed out writing a frame")
+            }
+            std::io::ErrorKind::BrokenPipe | std::io::ErrorKind::ConnectionReset => {
+                TransportError::Closed.into()
             }
             _ => anyhow!("tcp write failed: {e}"),
         })?;
@@ -328,11 +340,9 @@ mod tests {
         )
         .unwrap();
         let t0 = std::time::Instant::now();
-        let err = conn
-            .recv_timeout(Duration::from_millis(100))
-            .unwrap_err()
-            .to_string();
-        assert!(err.contains("timed out"), "{err}");
+        let err = conn.recv_timeout(Duration::from_millis(100)).unwrap_err();
+        assert!(TransportError::is_timeout(&err), "not typed Timeout: {err:?}");
+        assert!(err.to_string().contains("timed out"), "{err}");
         assert!(t0.elapsed() < Duration::from_millis(350));
         server.join().unwrap();
     }
@@ -353,9 +363,13 @@ mod tests {
             &Hello { party: 0, role: Role::Peer },
             &TcpOptions::default(),
         )
-        .unwrap_err()
-        .to_string();
-        assert!(err.contains("party mismatch"), "{err}");
+        .unwrap_err();
+        assert!(err.to_string().contains("party mismatch"), "{err}");
+        // Typed as a permanent rejection (reconnect loops must not retry).
+        assert!(
+            matches!(TransportError::of(&err), Some(TransportError::Rejected(r)) if r.contains("party mismatch")),
+            "not typed Rejected: {err:?}"
+        );
         server.join().unwrap();
     }
 

@@ -1,0 +1,351 @@
+//! Sustained, seeded fuzzing of every codec an adversary can reach off
+//! the wire — the control plane (`ServerCmd`/`ServerReply`), the
+//! transport handshake (`Hello`/`HelloAck`), the session codec, and the
+//! recovery snapshot — plus typed-error checks that a crashed or silent
+//! server surfaces a [`TransportError`] within its deadline on both
+//! transports.
+//!
+//! Every test is deterministic: cases derive from a fixed seed via
+//! [`fsl::fuzz::Fuzzer`], and the per-test case count is bounded (CI
+//! smoke sets `FSL_FUZZ_CASES` low; local soaks raise it). The decoder
+//! contract under fuzz is narrow and absolute: *never* panic, *never*
+//! misparse a strict prefix as complete, and anything that decodes `Ok`
+//! must re-encode to a stable fixed point.
+
+use fsl::coordinator::snapshot::ServerSnapshot;
+use fsl::coordinator::wire::{self, ServerCmd, ServerReply};
+use fsl::coordinator::{ClientOutcome, VerifiedSsaResult};
+use fsl::crypto::field::Fp;
+use fsl::fuzz::Fuzzer;
+use fsl::hashing::CuckooParams;
+use fsl::net;
+use fsl::net::transport::tcp::{TcpAcceptor, TcpOptions, TcpTransport};
+use fsl::net::transport::{Hello, HelloAck, Role, Transport, TransportError};
+use fsl::protocol::{Session, SessionParams};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn small_session() -> Session {
+    Session::new_full(SessionParams {
+        m: 256,
+        k: 8,
+        cuckoo: CuckooParams::default().with_seed(5),
+    })
+}
+
+/// Valid encodings of every command variant the codec supports.
+fn cmd_corpus() -> Vec<Vec<u8>> {
+    let cmds: Vec<ServerCmd<u64>> = vec![
+        ServerCmd::Ssa {
+            n: 3,
+            deadline_nanos: 0,
+        },
+        ServerCmd::Psr {
+            n: 2,
+            deadline_nanos: 250_000_000,
+        },
+        ServerCmd::UdpfSetup {
+            n: 4,
+            deadline_nanos: 1,
+        },
+        ServerCmd::UdpfEpoch {
+            n: 4,
+            epoch: 7,
+            deadline_nanos: 9,
+        },
+        ServerCmd::VerifiedSsa {
+            uploads: Arc::new(Vec::new()),
+            seed: 99,
+        },
+        ServerCmd::PsuAlign {
+            n: 5,
+            shuffle_seed: 3,
+        },
+        ServerCmd::SetWeights(Arc::new(vec![1u64, 2, 3, u64::MAX])),
+        ServerCmd::SetSession(Arc::new(small_session())),
+        ServerCmd::Ping,
+        ServerCmd::DialPeer {
+            addr: "127.0.0.1:7100".into(),
+        },
+        ServerCmd::Shutdown,
+    ];
+    cmds.iter().map(wire::encode_cmd).collect()
+}
+
+/// Valid encodings of every reply shape a driver can receive.
+fn reply_corpus() -> Vec<Vec<u8>> {
+    let replies: Vec<ServerReply<u64>> = vec![
+        ServerReply::Ack,
+        ServerReply::Round {
+            server_time: Duration::from_micros(1234),
+            delta: None,
+            inter_sent: 77,
+            outcomes: Vec::new(),
+        },
+        ServerReply::Round {
+            server_time: Duration::from_millis(5),
+            delta: Some(vec![0u64, 1, u64::MAX]),
+            inter_sent: 0,
+            outcomes: vec![
+                ClientOutcome::Completed,
+                ClientOutcome::Dropped,
+                ClientOutcome::StragglerCut,
+            ],
+        },
+        ServerReply::Verified {
+            result: VerifiedSsaResult {
+                delta: vec![Fp::new(3), Fp::new(4)],
+                rejected: vec![1, 7],
+            },
+            server_time: Duration::from_millis(5),
+        },
+        ServerReply::Failed("engine exploded".into()),
+    ];
+    replies.iter().map(wire::encode_reply).collect()
+}
+
+/// Fuzz one decoder against mutations of a corpus: decoding must never
+/// panic, and whatever decodes `Ok` must re-encode to a fixed point
+/// (encode ∘ decode is idempotent on accepted inputs).
+fn fuzz_codec(
+    seed: u64,
+    corpus: &[Vec<u8>],
+    decode_encode: impl Fn(&[u8]) -> Option<Vec<u8>>,
+    what: &str,
+) {
+    let mut f = Fuzzer::new(seed);
+    let cases = Fuzzer::cases_from_env(400);
+    for round in 0..cases {
+        for base in corpus {
+            let mutated = f.mutate(base);
+            if let Some(reencoded) = decode_encode(&mutated) {
+                let again = decode_encode(&reencoded).unwrap_or_else(|| {
+                    panic!("{what}: accepted bytes failed to re-decode (seed {seed}, case {round})")
+                });
+                assert_eq!(
+                    again, reencoded,
+                    "{what}: re-encoding is not a fixed point (seed {seed}, case {round})"
+                );
+            }
+        }
+        // Pure garbage alongside the structured mutations.
+        let garbage = f.blob(96);
+        let _ = decode_encode(&garbage);
+    }
+}
+
+#[test]
+fn command_codec_survives_sustained_mutation() {
+    fuzz_codec(
+        0xC0DEC_01,
+        &cmd_corpus(),
+        |bytes| {
+            wire::decode_cmd::<u64>(bytes)
+                .ok()
+                .map(|cmd| wire::encode_cmd(&cmd))
+        },
+        "decode_cmd",
+    );
+}
+
+#[test]
+fn reply_codec_survives_sustained_mutation() {
+    fuzz_codec(
+        0xC0DEC_02,
+        &reply_corpus(),
+        |bytes| {
+            wire::decode_reply::<u64>(bytes)
+                .ok()
+                .map(|reply| wire::encode_reply(&reply))
+        },
+        "decode_reply",
+    );
+}
+
+#[test]
+fn session_codec_survives_sustained_mutation() {
+    let full = wire::encode_session(&small_session());
+    let union = wire::encode_session(
+        &Session::new_union(
+            SessionParams {
+                m: 1 << 20,
+                k: 4,
+                cuckoo: CuckooParams::default().with_seed(9),
+            },
+            vec![3, 17, 99, 4096, 70_000],
+        )
+        .expect("valid union session"),
+    );
+    fuzz_codec(
+        0xC0DEC_03,
+        &[full, union],
+        |bytes| {
+            wire::decode_session(bytes)
+                .ok()
+                .map(|s| wire::encode_session(&s))
+        },
+        "decode_session",
+    );
+}
+
+#[test]
+fn handshake_codecs_round_trip_and_survive_mutation() {
+    let hellos = vec![
+        Hello {
+            party: 0,
+            role: Role::Control {
+                max_clients: 8,
+                m: 1 << 15,
+                k: 512,
+                group: "u64".into(),
+            },
+        },
+        Hello {
+            party: 1,
+            role: Role::Client { id: 3 },
+        },
+        Hello {
+            party: 0,
+            role: Role::Peer,
+        },
+    ];
+    let acks = vec![
+        HelloAck {
+            party: 1,
+            error: None,
+        },
+        HelloAck {
+            party: 0,
+            error: Some("group mismatch: driver sent u128".into()),
+        },
+    ];
+    for h in &hellos {
+        assert_eq!(&Hello::decode(&h.encode()).unwrap(), h);
+    }
+    for a in &acks {
+        assert_eq!(&HelloAck::decode(&a.encode()).unwrap(), a);
+    }
+    fuzz_codec(
+        0xC0DEC_04,
+        &hellos.iter().map(Hello::encode).collect::<Vec<_>>(),
+        |bytes| Hello::decode(bytes).ok().map(|h| h.encode()),
+        "Hello::decode",
+    );
+    fuzz_codec(
+        0xC0DEC_05,
+        &acks.iter().map(HelloAck::encode).collect::<Vec<_>>(),
+        |bytes| HelloAck::decode(bytes).ok().map(|a| a.encode()),
+        "HelloAck::decode",
+    );
+}
+
+#[test]
+fn every_strict_prefix_of_a_control_message_is_an_error() {
+    for bytes in cmd_corpus() {
+        for cut in 0..bytes.len() {
+            assert!(
+                wire::decode_cmd::<u64>(&bytes[..cut]).is_err(),
+                "cmd prefix {cut}/{} decoded",
+                bytes.len()
+            );
+        }
+    }
+    for bytes in reply_corpus() {
+        for cut in 0..bytes.len() {
+            assert!(
+                wire::decode_reply::<u64>(&bytes[..cut]).is_err(),
+                "reply prefix {cut}/{} decoded",
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn snapshot_mutations_are_rejected_outright() {
+    // Unlike the control plane (where a flipped payload byte is a
+    // different-but-valid message), the snapshot is hash-protected:
+    // *every* mutation must be rejected, not just truncations.
+    let snap = ServerSnapshot::<u64> {
+        party: 1,
+        group: std::any::type_name::<u64>().to_string(),
+        session: wire::encode_session(&small_session()),
+        udpf_total: 3,
+        udpf: Vec::new(),
+        dead: vec![false, true, false],
+    };
+    let bytes = snap.encode();
+    assert!(ServerSnapshot::<u64>::decode(&bytes).is_ok());
+    let mut f = Fuzzer::new(0xC0DEC_06);
+    let cases = Fuzzer::cases_from_env(400);
+    for round in 0..cases {
+        let mutated = f.mutate(&bytes);
+        let err = ServerSnapshot::<u64>::decode(&mutated)
+            .err()
+            .unwrap_or_else(|| panic!("mutated snapshot accepted (case {round})"));
+        assert!(!err.to_string().is_empty());
+        let garbage = f.blob(128);
+        if garbage != bytes {
+            assert!(ServerSnapshot::<u64>::decode(&garbage).is_err());
+        }
+    }
+}
+
+// ---- typed failure surfacing (both transports) -------------------------
+
+#[test]
+fn inproc_silence_and_disconnect_are_typed() {
+    let (a, b) = net::pair(Duration::ZERO);
+    let err = a.recv_timeout(Duration::from_millis(30)).unwrap_err();
+    assert!(TransportError::is_timeout(&err), "not typed Timeout: {err:?}");
+    drop(b);
+    let err = a.recv_timeout(Duration::from_millis(30)).unwrap_err();
+    assert!(TransportError::is_closed(&err), "not typed Closed: {err:?}");
+}
+
+#[test]
+fn tcp_crash_surfaces_typed_errors_within_the_deadline() {
+    let acceptor = TcpAcceptor::bind("127.0.0.1:0", TcpOptions::default()).unwrap();
+    let addr = acceptor.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        use fsl::net::transport::Listener;
+        let (conn, _hello) = acceptor.accept().expect("accept");
+        conn.send(HelloAck { party: 1, error: None }.encode())
+            .expect("ack");
+        // Stay silent long enough for the client's timeout probe, then
+        // "crash" by dropping the connection.
+        std::thread::sleep(Duration::from_millis(200));
+        drop(conn);
+    });
+    let conn = TcpTransport::connect(
+        addr.as_str(),
+        &Hello {
+            party: 1,
+            role: Role::Peer,
+        },
+        &TcpOptions::default(),
+    )
+    .unwrap();
+
+    // Silent server: typed Timeout, and promptly — the caller's deadline
+    // is the bound, not some internal retry loop.
+    let t0 = Instant::now();
+    let err = conn.recv_timeout(Duration::from_millis(50)).unwrap_err();
+    assert!(TransportError::is_timeout(&err), "not typed Timeout: {err:?}");
+    assert!(
+        t0.elapsed() < Duration::from_millis(2000),
+        "timeout took {:?}",
+        t0.elapsed()
+    );
+
+    // Crashed server: typed Closed well before the (long) deadline.
+    let t0 = Instant::now();
+    let err = conn.recv_timeout(Duration::from_secs(30)).unwrap_err();
+    assert!(TransportError::is_closed(&err), "not typed Closed: {err:?}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "close detection took {:?}",
+        t0.elapsed()
+    );
+    server.join().unwrap();
+}

@@ -1,0 +1,239 @@
+//! Crash/recovery regressions: `fsl serve` processes are killed with
+//! SIGKILL mid-U-DPF-session and restarted from their snapshots, after
+//! which the next rounds must be bit-identical to an uninterrupted
+//! deployment. A corrupt snapshot must be a typed startup rejection, and
+//! a killed server must surface a typed transport error to the driver.
+//!
+//! These tests drive the real binary (`CARGO_BIN_EXE_fsl`) over real TCP
+//! sockets — three processes per scenario, exactly like the CI `faults`
+//! job — with ephemeral ports announced on the children's stdout.
+
+use fsl::coordinator::snapshot::ServerSnapshot;
+use fsl::coordinator::{wire, FslRuntime, FslRuntimeBuilder, KeyMode};
+use fsl::crypto::rng::Rng;
+use fsl::hashing::CuckooParams;
+use fsl::net::transport::TransportError;
+use fsl::protocol::{Session, SessionParams};
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+const N: usize = 4;
+const M: u64 = 1 << 9;
+const K: usize = 8;
+
+fn session() -> Session {
+    Session::new_full(SessionParams {
+        m: M,
+        k: K,
+        cuckoo: CuckooParams::default().with_seed(21),
+    })
+}
+
+/// Fixed selections, per-epoch deltas (the U-DPF contract).
+fn clients(epoch: u64) -> Vec<(Vec<u64>, Vec<u64>)> {
+    let mut rng = Rng::new(909);
+    (0..N)
+        .map(|_| {
+            let sel = rng.sample_distinct(K, M);
+            let dl: Vec<u64> = sel.iter().map(|&x| x + 1 + epoch).collect();
+            (sel, dl)
+        })
+        .collect()
+}
+
+/// The plaintext aggregate every epoch must reconstruct to.
+fn full_sum(clients: &[(Vec<u64>, Vec<u64>)]) -> Vec<u64> {
+    let mut expected = vec![0u64; M as usize];
+    for (sel, dl) in clients {
+        for (&x, &d) in sel.iter().zip(dl) {
+            expected[x as usize] = expected[x as usize].wrapping_add(d);
+        }
+    }
+    expected
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fsl-crash-{}-{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+struct Server {
+    child: Child,
+    addr: String,
+}
+
+/// Start one `fsl serve` process on an ephemeral port and parse the bound
+/// address from its announce line.
+fn spawn_server(party: u8, snapshot: &Path) -> Server {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_fsl"))
+        .args([
+            "serve",
+            &format!("party={party}"),
+            "listen=127.0.0.1:0",
+            &format!("snapshot={}", snapshot.display()),
+            "threads=1",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn fsl serve");
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().unwrap())
+        .read_line(&mut line)
+        .expect("read announce line");
+    let addr = line.trim().rsplit(' ').next().unwrap_or_default().to_string();
+    assert!(addr.contains(':'), "unexpected announce line: {line:?}");
+    Server { child, addr }
+}
+
+impl Server {
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    fn wait(mut self) {
+        let status = self.child.wait().expect("server did not exit");
+        assert!(status.success(), "server exited with {status}");
+    }
+}
+
+fn udpf_builder() -> FslRuntimeBuilder {
+    FslRuntimeBuilder::from_session(session())
+        .threads(1)
+        .max_clients(N)
+        .key_mode(KeyMode::Udpf)
+        .reply_timeout(Duration::from_secs(120))
+        .connect_retry(Duration::from_secs(30))
+}
+
+#[test]
+fn killed_servers_recover_their_udpf_deployment_from_snapshots() {
+    let dir = temp_dir("recover");
+    let snap0 = dir.join("s0.snap");
+    let snap1 = dir.join("s1.snap");
+    let _ = std::fs::remove_file(&snap0);
+    let _ = std::fs::remove_file(&snap1);
+
+    let s0 = spawn_server(0, &snap0);
+    let s1 = spawn_server(1, &snap1);
+    let mut rt: FslRuntime<u64> = udpf_builder().connect(&s0.addr, &s1.addr).unwrap();
+
+    // The uninterrupted reference: same session and updates, in-proc,
+    // never crashed. Its per-epoch deltas are the bit-exact target.
+    let mut reference = FslRuntimeBuilder::from_session(session())
+        .threads(1)
+        .max_clients(N)
+        .key_mode(KeyMode::Udpf)
+        .build::<u64>()
+        .unwrap();
+    let mut rng = Rng::new(11);
+    let mut ref_rng = Rng::new(12);
+
+    // Snapshots are written on every epoch boundary before the reply is
+    // acked: durable after the setup round, rewritten by the hint round.
+    let mut after_setup = Vec::new();
+    for epoch in 0..2u64 {
+        let cs = clients(epoch);
+        let out = rt.ssa(&cs, &mut rng).unwrap();
+        let ref_out = reference.ssa(&cs, &mut ref_rng).unwrap();
+        assert_eq!(out.delta, ref_out.delta, "pre-crash epoch {epoch}");
+        if epoch == 0 {
+            after_setup = std::fs::read(&snap0).expect("S0 snapshot missing after setup");
+            assert!(snap1.exists(), "S1 snapshot missing after setup");
+        }
+    }
+    assert_ne!(
+        std::fs::read(&snap0).unwrap(),
+        after_setup,
+        "S0 snapshot was not rewritten by the hint round"
+    );
+
+    // SIGKILL both servers mid-session. (The deployment is a pair: S0's
+    // in-flight round state references S1's, so recovery restarts both.)
+    s0.kill();
+    s1.kill();
+
+    // The driver's next round must fail with a *typed* transport error,
+    // not hang or panic.
+    let err = rt.ssa(&clients(2), &mut rng).unwrap_err();
+    assert!(
+        TransportError::of(&err).is_some(),
+        "server crash surfaced an untyped error: {err:?}"
+    );
+
+    // Restart from the snapshots on fresh ports (the old ones may sit in
+    // TIME_WAIT) and re-dial, carrying the driver's retained U-DPF state
+    // into the new runtime.
+    let s0 = spawn_server(0, &snap0);
+    let s1 = spawn_server(1, &snap1);
+    let state = rt.export_udpf_state();
+    drop(rt);
+    let mut rt: FslRuntime<u64> = udpf_builder().connect(&s0.addr, &s1.addr).unwrap();
+    rt.resume_udpf(state).unwrap();
+
+    // The interrupted epoch reruns, then the session continues — both
+    // bit-identical to the uninterrupted reference.
+    for epoch in 2..4u64 {
+        let cs = clients(epoch);
+        let out = rt.ssa(&cs, &mut rng).unwrap();
+        let ref_out = reference.ssa(&cs, &mut ref_rng).unwrap();
+        assert_eq!(
+            out.delta, ref_out.delta,
+            "post-recovery epoch {epoch} is not bit-identical to the \
+             uninterrupted session"
+        );
+        assert_eq!(out.delta, full_sum(&cs), "post-recovery epoch {epoch} aggregate");
+    }
+
+    rt.shutdown().unwrap();
+    reference.shutdown().unwrap();
+    s0.wait();
+    s1.wait();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_corrupt_snapshot_is_a_typed_startup_rejection() {
+    let dir = temp_dir("corrupt");
+    let snap = dir.join("s0.snap");
+    let good = ServerSnapshot::<u64> {
+        party: 0,
+        group: std::any::type_name::<u64>().to_string(),
+        session: wire::encode_session(&session()),
+        udpf_total: 0,
+        udpf: Vec::new(),
+        dead: vec![false; N],
+    };
+    good.write(&snap).unwrap();
+    assert!(ServerSnapshot::<u64>::load(&snap).is_ok());
+
+    // Flip one byte in the middle: the content hash must catch it.
+    let mut bytes = std::fs::read(&snap).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x20;
+    std::fs::write(&snap, &bytes).unwrap();
+
+    let out = Command::new(env!("CARGO_BIN_EXE_fsl"))
+        .args([
+            "serve",
+            "party=0",
+            "listen=127.0.0.1:0",
+            &format!("snapshot={}", snap.display()),
+        ])
+        .output()
+        .expect("run fsl serve");
+    assert!(
+        !out.status.success(),
+        "a server restored from a corrupt snapshot"
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("restoring server state"),
+        "rejection did not name the snapshot restore: {stderr}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,11 +1,20 @@
 //! Failure injection: malicious clients, malformed messages, silent
-//! parties.
+//! parties — and the dropout-tolerance matrix: {psr, ssa, udpf-ssa} ×
+//! {in-proc, tcp} × {0, 1, 25%} dropped clients, with the surviving
+//! cohort's result bit-identical to a survivors-only strict baseline.
 
+use fsl::coordinator::{
+    serve, ClientOutcome, FslRuntime, FslRuntimeBuilder, KeyMode, ServeOptions,
+};
 use fsl::crypto::field::Fp;
 use fsl::crypto::rng::Rng;
 use fsl::dpf::{full_eval, gen};
+use fsl::hashing::CuckooParams;
 use fsl::net;
+use fsl::net::transport::tcp::{TcpAcceptor, TcpOptions};
+use fsl::net::transport::{FaultPlan, TransportError};
 use fsl::protocol::msg;
+use fsl::protocol::{Session, SessionParams};
 use fsl::sketch;
 use std::time::Duration;
 
@@ -35,8 +44,7 @@ fn sketch_rejects_double_vote() {
 #[test]
 fn sketch_accepts_every_honest_bin_of_a_real_query() {
     // End-to-end: sketch every bin of an honest client's SSA upload.
-    use fsl::hashing::CuckooParams;
-    use fsl::protocol::{ssa, Session, SessionParams};
+    use fsl::protocol::ssa;
     let session = Session::new_full(SessionParams {
         m: 1 << 10,
         k: 16,
@@ -88,8 +96,8 @@ fn malformed_uploads_are_rejected_not_crashing() {
 fn silent_server_times_out() {
     let (a, _b) = net::pair(Duration::ZERO);
     let t0 = std::time::Instant::now();
-    let res = a.recv_timeout(Duration::from_millis(50));
-    assert!(res.is_err());
+    let err = a.recv_timeout(Duration::from_millis(50)).unwrap_err();
+    assert!(TransportError::is_timeout(&err), "not typed Timeout: {err:?}");
     assert!(t0.elapsed() >= Duration::from_millis(45));
 }
 
@@ -97,8 +105,10 @@ fn silent_server_times_out() {
 fn dropped_channel_is_an_error_not_a_hang() {
     let (a, b) = net::pair(Duration::ZERO);
     drop(b);
-    assert!(a.send(vec![1, 2, 3]).is_err());
-    assert!(a.recv().is_err());
+    let err = a.send(vec![1, 2, 3]).unwrap_err();
+    assert!(TransportError::is_closed(&err), "not typed Closed: {err:?}");
+    let err = a.recv().unwrap_err();
+    assert!(TransportError::is_closed(&err), "not typed Closed: {err:?}");
 }
 
 #[test]
@@ -117,4 +127,270 @@ fn wrong_beta_claim_rejected() {
     // With the true β it verifies — the key itself is well-formed.
     let mut mul2 = sketch::SecureMul::new(707);
     assert!(sketch::verify(&mut mul2, s0, s1, Fp::new(2)));
+}
+
+// ---- dropout-tolerance matrix ------------------------------------------
+//
+// {psr, ssa, udpf-ssa} × {in-proc, tcp} × {0, 1, 25%} dropped clients.
+// A dropped client disconnects on its very first upload; the round must
+// still complete, classify every client with a typed outcome, and give
+// the surviving cohort a result bit-identical to a survivors-only strict
+// baseline (DPF reconstruction is exact, so the comparison is `==`, not
+// approximate).
+
+const N: usize = 8;
+const M: u64 = 1 << 10;
+const K: usize = 16;
+
+/// Drop sets for the matrix: none, one, a quarter of the cohort.
+const DROP_SETS: [&[usize]; 3] = [&[], &[3], &[1, 5]];
+
+fn matrix_session() -> Session {
+    Session::new_full(SessionParams {
+        m: M,
+        k: K,
+        cuckoo: CuckooParams::default().with_seed(42),
+    })
+}
+
+/// Deterministic client updates: selections are fixed across epochs (the
+/// U-DPF contract) while deltas vary per epoch, so hint rounds aggregate
+/// fresh values.
+fn matrix_clients(epoch: u64) -> Vec<(Vec<u64>, Vec<u64>)> {
+    let mut rng = Rng::new(808);
+    (0..N)
+        .map(|_| {
+            let sel = rng.sample_distinct(K, M);
+            let dl: Vec<u64> = sel.iter().map(|&x| x + 1 + epoch).collect();
+            (sel, dl)
+        })
+        .collect()
+}
+
+fn expected_outcome(i: usize, drops: &[usize]) -> ClientOutcome {
+    if drops.contains(&i) {
+        ClientOutcome::Dropped
+    } else {
+        ClientOutcome::Completed
+    }
+}
+
+/// The survivors' update sum, computed directly from the plaintext.
+fn survivor_sum(clients: &[(Vec<u64>, Vec<u64>)], drops: &[usize]) -> Vec<u64> {
+    let mut expected = vec![0u64; M as usize];
+    for (i, (sel, dl)) in clients.iter().enumerate() {
+        if drops.contains(&i) {
+            continue;
+        }
+        for (&x, &d) in sel.iter().zip(dl) {
+            expected[x as usize] = expected[x as usize].wrapping_add(d);
+        }
+    }
+    expected
+}
+
+enum Net {
+    InProc,
+    Tcp,
+}
+
+type ServerHandle = std::thread::JoinHandle<anyhow::Result<()>>;
+
+fn spawn_tcp_server(party: u8) -> (String, ServerHandle) {
+    let acceptor = TcpAcceptor::bind("127.0.0.1:0", TcpOptions::default()).unwrap();
+    let addr = acceptor.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let mut opts = ServeOptions::new(party);
+        opts.threads = 1;
+        serve::<u64>(&acceptor, &opts)
+    });
+    (addr, handle)
+}
+
+/// A tolerant deployment over either net, with each dropped client rigged
+/// to sever its links on the very first upload message.
+fn tolerant_runtime(
+    net: &Net,
+    drops: &[usize],
+    key_mode: KeyMode,
+    servers: &mut Vec<ServerHandle>,
+) -> FslRuntime<u64> {
+    let mut b = FslRuntimeBuilder::from_session(matrix_session())
+        .threads(1)
+        .max_clients(N)
+        .key_mode(key_mode)
+        .reply_timeout(Duration::from_secs(120))
+        .upload_deadline(Duration::from_secs(5));
+    for &i in drops {
+        b = b.client_fault(i, FaultPlan::new().disconnect_after_messages(0));
+    }
+    match net {
+        Net::InProc => b.build().unwrap(),
+        Net::Tcp => {
+            let (a0, h0) = spawn_tcp_server(0);
+            let (a1, h1) = spawn_tcp_server(1);
+            servers.push(h0);
+            servers.push(h1);
+            b.connect(&a0, &a1).unwrap()
+        }
+    }
+}
+
+fn ssa_matrix(net: Net, key_mode: KeyMode) {
+    let epochs: u64 = match key_mode {
+        KeyMode::Udpf => 2, // exercise both the setup and a hint round
+        KeyMode::Fresh => 1,
+    };
+    for drops in DROP_SETS {
+        let mut servers = Vec::new();
+        let mut rt = tolerant_runtime(&net, drops, key_mode, &mut servers);
+        // Strict survivors-only baseline: same session, no faults, no
+        // deadline, only the clients that will survive the tolerant run.
+        let mut base = FslRuntimeBuilder::from_session(matrix_session())
+            .threads(1)
+            .max_clients(N)
+            .key_mode(key_mode)
+            .build::<u64>()
+            .unwrap();
+        let mut rng = Rng::new(1_000);
+        let mut base_rng = Rng::new(2_000);
+        for epoch in 0..epochs {
+            let clients = matrix_clients(epoch);
+            let survivors: Vec<(Vec<u64>, Vec<u64>)> = clients
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| !drops.contains(i))
+                .map(|(_, c)| c.clone())
+                .collect();
+            let out = rt.ssa(&clients, &mut rng).unwrap();
+            let base_out = base.ssa(&survivors, &mut base_rng).unwrap();
+            for (i, o) in out.report.outcomes.iter().enumerate() {
+                assert_eq!(
+                    *o,
+                    expected_outcome(i, drops),
+                    "client {i}, epoch {epoch}, drops {drops:?}"
+                );
+            }
+            assert_eq!(
+                out.delta, base_out.delta,
+                "not bit-identical to the survivors-only baseline \
+                 (epoch {epoch}, drops {drops:?})"
+            );
+            assert_eq!(
+                out.delta,
+                survivor_sum(&clients, drops),
+                "wrong aggregate (epoch {epoch}, drops {drops:?})"
+            );
+        }
+        rt.shutdown().unwrap();
+        base.shutdown().unwrap();
+        for h in servers {
+            h.join().unwrap().unwrap();
+        }
+    }
+}
+
+fn psr_matrix(net: Net) {
+    for drops in DROP_SETS {
+        let mut servers = Vec::new();
+        let mut rt = tolerant_runtime(&net, drops, KeyMode::Fresh, &mut servers);
+        let weights: Vec<u64> = (0..M).map(|x| x.wrapping_mul(31).wrapping_add(7)).collect();
+        rt.set_weights(weights.clone()).unwrap();
+        let clients: Vec<Vec<u64>> = matrix_clients(0).into_iter().map(|(s, _)| s).collect();
+        let out = rt.psr(&clients, &mut Rng::new(3_000)).unwrap();
+        for (i, o) in out.report.outcomes.iter().enumerate() {
+            assert_eq!(*o, expected_outcome(i, drops), "client {i}, drops {drops:?}");
+        }
+        for (i, sel) in clients.iter().enumerate() {
+            let want: Vec<u64> = if drops.contains(&i) {
+                Vec::new() // a dropped client retrieves nothing
+            } else {
+                sel.iter().map(|&x| weights[x as usize]).collect()
+            };
+            assert_eq!(out.submodels[i], want, "client {i}, drops {drops:?}");
+        }
+        rt.shutdown().unwrap();
+        for h in servers {
+            h.join().unwrap().unwrap();
+        }
+    }
+}
+
+#[test]
+fn psr_tolerates_dropouts_in_proc() {
+    psr_matrix(Net::InProc);
+}
+
+#[test]
+fn psr_tolerates_dropouts_over_tcp() {
+    psr_matrix(Net::Tcp);
+}
+
+#[test]
+fn ssa_tolerates_dropouts_in_proc() {
+    ssa_matrix(Net::InProc, KeyMode::Fresh);
+}
+
+#[test]
+fn ssa_tolerates_dropouts_over_tcp() {
+    ssa_matrix(Net::Tcp, KeyMode::Fresh);
+}
+
+#[test]
+fn udpf_ssa_tolerates_dropouts_in_proc() {
+    ssa_matrix(Net::InProc, KeyMode::Udpf);
+}
+
+#[test]
+fn udpf_ssa_tolerates_dropouts_over_tcp() {
+    ssa_matrix(Net::Tcp, KeyMode::Udpf);
+}
+
+#[test]
+fn stragglers_are_cut_at_the_deadline_and_evicted_for_good() {
+    // A muted client keeps "uploading" into the void: the servers see
+    // silence, wait out the deadline, and cut it as a straggler.
+    let mut rt = FslRuntimeBuilder::from_session(matrix_session())
+        .threads(1)
+        .max_clients(N)
+        .upload_deadline(Duration::from_millis(400))
+        .client_fault(2, FaultPlan::new().mute_after(0))
+        .build::<u64>()
+        .unwrap();
+    let mut rng = Rng::new(4_000);
+    let clients = matrix_clients(0);
+    let out = rt.ssa(&clients, &mut rng).unwrap();
+    assert_eq!(out.report.outcomes[2], ClientOutcome::StragglerCut);
+    assert_eq!(out.report.completed(), N - 1);
+    assert_eq!(out.delta, survivor_sum(&clients, &[2]));
+    // Eviction is permanent: the next round reports the client Dropped
+    // without waiting out another deadline, and keeps excluding it.
+    let clients = matrix_clients(1);
+    let out = rt.ssa(&clients, &mut rng).unwrap();
+    assert_eq!(out.report.outcomes[2], ClientOutcome::Dropped);
+    assert_eq!(out.report.completed(), N - 1);
+    assert_eq!(out.delta, survivor_sum(&clients, &[2]));
+    rt.shutdown().unwrap();
+}
+
+#[test]
+fn a_slow_client_inside_the_deadline_still_completes() {
+    // Added latency short of the deadline is not a fault: every client
+    // completes and the aggregate includes all of them.
+    let mut rt = FslRuntimeBuilder::from_session(matrix_session())
+        .threads(1)
+        .max_clients(N)
+        .upload_deadline(Duration::from_secs(10))
+        .client_fault(4, FaultPlan::new().delay(Duration::from_millis(50)))
+        .build::<u64>()
+        .unwrap();
+    let clients = matrix_clients(0);
+    let out = rt.ssa(&clients, &mut Rng::new(5_000)).unwrap();
+    assert!(out
+        .report
+        .outcomes
+        .iter()
+        .all(|o| *o == ClientOutcome::Completed));
+    assert_eq!(out.delta, survivor_sum(&clients, &[]));
+    rt.shutdown().unwrap();
 }

@@ -2,7 +2,7 @@
 # checkout builds and tests with `cargo build --release && cargo test -q`
 # (the runtime falls back to its built-in manifest + reference backend).
 
-.PHONY: artifacts test bench doc fmt clean
+.PHONY: artifacts test bench doc fmt lint clean
 
 # AOT-lower the L2/L1 graphs to HLO text + manifest.json (needs jax).
 artifacts:
@@ -19,6 +19,12 @@ doc:
 
 fmt:
 	cargo fmt --all --check
+
+# The repo-invariant lint pass (panic-freedom, secret hygiene, decode
+# bounds, determinism, deprecated API use) — see docs/ARCHITECTURE.md
+# "Invariants & static analysis".
+lint:
+	cargo run -p xtask -- lint
 
 clean:
 	cargo clean

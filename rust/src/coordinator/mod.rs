@@ -36,6 +36,7 @@ pub mod wire;
 pub use client::{local_train, sparse_delta, ClientRoundOutput};
 pub use config::FslConfig;
 pub use serve::{serve, serve_addr, ServeOptions};
+// lint: allow(deprecated) — re-export keeps the legacy round API importable
 #[allow(deprecated)]
 pub use psr_round::{run_psr_round, run_psr_round_with, PsrRoundResult};
 pub use round::{run_fsl_training, run_plain_training, RoundStats, TrainingLog};
@@ -43,8 +44,10 @@ pub use runtime::{
     ClientOutcome, FslRuntime, FslRuntimeBuilder, KeyMode, PsrOutcome, PsuOutcome, RoundKind,
     RoundReport, SsaOutcome, UdpfDriverState, VerifiedSsaOutcome,
 };
+// lint: allow(deprecated) — re-export keeps the legacy round API importable
 #[allow(deprecated)]
 pub use server::{run_ssa_round, run_ssa_round_with, SsaRoundResult};
 pub use topk::{top_k_groups, top_k_magnitude};
+// lint: allow(deprecated) — re-export keeps the legacy round API importable
 #[allow(deprecated)]
 pub use verified::{run_verified_ssa_round, VerifiedSsaResult};

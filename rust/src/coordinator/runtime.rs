@@ -64,7 +64,8 @@ use crate::protocol::{
     msg, psr, psu, ssa, udpf_ssa, AggregationEngine, RetrievalEngine, Session, SessionParams,
     Sharding,
 };
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
+use crate::crypto::Sensitive;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -599,8 +600,10 @@ impl FslRuntimeBuilder {
             }
             per_party.push((Box::new(ctrl) as BoxTransport, eps));
         }
-        let (ctrl1, eps1) = per_party.pop().expect("two parties");
-        let (ctrl0, eps0) = per_party.pop().expect("two parties");
+        let ((ctrl1, eps1), (ctrl0, eps0)) = match (per_party.pop(), per_party.pop()) {
+            (Some(p1), Some(p0)) => (p1, p0),
+            _ => bail!("deployment dialled fewer than two servers"),
+        };
         let links = Self::apply_faults(
             eps0.into_iter()
                 .zip(eps1)
@@ -1782,13 +1785,13 @@ impl<G: Group> ServerHalf<G> {
                 // forwarded envelope carries a zeroed seed, which S_1
                 // discards (its seed came in the client's short upload).
                 let mut batch = MasterKeyBatch::<G> {
-                    msk: [[0u8; 16]; 2],
+                    msk: [Sensitive::new([0u8; 16]), Sensitive::new([0u8; 16])],
                     publics,
                 };
                 let mut fwd = (i as u32).to_le_bytes().to_vec();
                 fwd.extend(msg::encode_key_upload(&batch, 0, true));
                 self.inter()?.send(fwd)?;
-                batch.msk = [up.msk, up.msk];
+                batch.msk = [Sensitive::new(up.msk), Sensitive::new(up.msk)];
                 batches.push(batch);
             }
             let t = Instant::now();
@@ -1815,12 +1818,10 @@ impl<G: Group> ServerHalf<G> {
             let mut publics: Vec<Option<_>> = (0..n).map(|_| None).collect();
             for _ in 0..n {
                 let raw = self.inter()?.recv_timeout(self.timeout)?;
-                let idx = u32::from_le_bytes(
-                    raw.get(..4)
-                        .ok_or_else(|| anyhow!("S1: short forward"))?
-                        .try_into()
-                        .unwrap(),
-                ) as usize;
+                let idx = match raw.get(..4) {
+                    Some(&[a, b, c, d]) => u32::from_le_bytes([a, b, c, d]) as usize,
+                    _ => bail!("S1: short forward"),
+                };
                 let slot = publics
                     .get_mut(idx)
                     .ok_or_else(|| anyhow!("S1: bad client index {idx}"))?;
@@ -1834,7 +1835,7 @@ impl<G: Group> ServerHalf<G> {
                 .zip(&msks)
                 .map(|((i, p), msk)| {
                     Ok(MasterKeyBatch {
-                        msk: [*msk, *msk],
+                        msk: [Sensitive::new(*msk), Sensitive::new(*msk)],
                         publics: p.ok_or_else(|| anyhow!("S1: missing {i}"))?,
                     })
                 })
@@ -1869,19 +1870,23 @@ impl<G: Group> ServerHalf<G> {
             let agreed = self.agree_cohort(&mut outcomes)?;
             let mut batches = Vec::with_capacity(agreed.len());
             for &i in &agreed {
-                let up = items[i].take().expect("agreed implies received");
-                let publics = up.publics.expect("checked in decode");
+                let up = items[i]
+                    .take()
+                    .ok_or_else(|| anyhow!("S0: agreed cohort references a missing upload"))?;
+                let publics = up
+                    .publics
+                    .ok_or_else(|| anyhow!("S0: agreed upload lost its publics"))?;
                 // Forward only the *public* parts: the client's S_0 master
                 // seed must never reach S_1 (two-server privacy), so the
                 // forwarded envelope carries a zeroed seed.
                 let mut batch = MasterKeyBatch::<G> {
-                    msk: [[0u8; 16]; 2],
+                    msk: [Sensitive::new([0u8; 16]), Sensitive::new([0u8; 16])],
                     publics,
                 };
                 let mut fwd = (i as u32).to_le_bytes().to_vec();
                 fwd.extend(msg::encode_key_upload(&batch, 0, true));
                 self.inter()?.send(fwd)?;
-                batch.msk = [up.msk, up.msk];
+                batch.msk = [Sensitive::new(up.msk), Sensitive::new(up.msk)];
                 batches.push(batch);
             }
             let t = Instant::now();
@@ -1906,12 +1911,10 @@ impl<G: Group> ServerHalf<G> {
             let mut publics: Vec<Option<_>> = (0..n).map(|_| None).collect();
             for _ in 0..agreed.len() {
                 let raw = self.inter()?.recv_timeout(self.timeout)?;
-                let idx = u32::from_le_bytes(
-                    raw.get(..4)
-                        .ok_or_else(|| anyhow!("S1: short forward"))?
-                        .try_into()
-                        .unwrap(),
-                ) as usize;
+                let idx = match raw.get(..4) {
+                    Some(&[a, b, c, d]) => u32::from_le_bytes([a, b, c, d]) as usize,
+                    _ => bail!("S1: short forward"),
+                };
                 ensure!(
                     agreed.contains(&idx),
                     "S1: forwarded publics for non-agreed client {idx}"
@@ -1923,9 +1926,11 @@ impl<G: Group> ServerHalf<G> {
             let batches: Vec<MasterKeyBatch<G>> = agreed
                 .iter()
                 .map(|&i| {
-                    let msk = msks[i].take().expect("agreed implies received");
+                    let msk = msks[i]
+                        .take()
+                        .ok_or_else(|| anyhow!("S1: agreed cohort references a missing seed"))?;
                     Ok(MasterKeyBatch {
-                        msk: [msk, msk],
+                        msk: [Sensitive::new(msk), Sensitive::new(msk)],
                         publics: publics[i].take().ok_or_else(|| anyhow!("S1: missing {i}"))?,
                     })
                 })
@@ -1964,13 +1969,18 @@ impl<G: Group> ServerHalf<G> {
             let batches: Vec<MasterKeyBatch<G>> = agreed
                 .iter()
                 .map(|&i| {
-                    let up = items[i].take().expect("agreed implies received");
-                    MasterKeyBatch {
-                        msk: [up.msk, up.msk],
-                        publics: up.publics.expect("checked in decode"),
-                    }
+                    let up = items[i]
+                        .take()
+                        .ok_or_else(|| anyhow!("S{}: agreed cohort references a missing upload", self.party))?;
+                    let publics = up
+                        .publics
+                        .ok_or_else(|| anyhow!("S{}: agreed upload lost its publics", self.party))?;
+                    Ok(MasterKeyBatch {
+                        msk: [Sensitive::new(up.msk), Sensitive::new(up.msk)],
+                        publics,
+                    })
                 })
-                .collect();
+                .collect::<Result<_>>()?;
             let uploads = uploads_of(&batches, self.party);
             let t = Instant::now();
             let answers = self
@@ -1997,7 +2007,7 @@ impl<G: Group> ServerHalf<G> {
                 .publics
                 .ok_or_else(|| anyhow!("S{}: no publics", self.party))?;
             batches.push(MasterKeyBatch::<G> {
-                msk: [up.msk, up.msk],
+                msk: [Sensitive::new(up.msk), Sensitive::new(up.msk)],
                 publics,
             });
         }
@@ -2030,7 +2040,9 @@ impl<G: Group> ServerHalf<G> {
                 self.recv_cohort(n, d, |raw| msg::decode_udpf_keys::<G>(raw));
             let agreed = self.agree_cohort(&mut outcomes)?;
             for &i in &agreed {
-                let keys = items[i].take().expect("agreed implies received");
+                let keys = items[i]
+                    .take()
+                    .ok_or_else(|| anyhow!("S{}: agreed cohort references a missing key set", self.party))?;
                 self.udpf.push(udpf_ssa::UdpfSsaServerKeys { keys });
                 self.udpf_links.push(i);
             }
@@ -2092,7 +2104,10 @@ impl<G: Group> ServerHalf<G> {
                 old.into_iter().zip(old_links).zip(fresh_hints)
             {
                 if outcomes[link] == ClientOutcome::Completed {
-                    retained.apply_hints(&hints.expect("agreed implies hints"));
+                    let hints = hints.ok_or_else(|| {
+                        anyhow!("S{}: completed client {link} lost its hints", self.party)
+                    })?;
+                    retained.apply_hints(&hints);
                     self.udpf.push(retained);
                     self.udpf_links.push(link);
                 }

@@ -403,7 +403,16 @@ fn accept_clients(
         };
         let _ = conn.send(HelloAck { party: opts.party, error: reason }.encode());
     }
-    Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+    // The loop above only exits once `filled == n`, so every slot is
+    // `Some` — but a logic slip here must fail the accept loop with a
+    // typed error, not panic the server process.
+    let links: Vec<BoxTransport> = slots.into_iter().flatten().collect();
+    ensure!(
+        links.len() == n,
+        "accept loop finished with {}/{n} client links connected",
+        links.len()
+    );
+    Ok(links)
 }
 
 /// Accept the peer server's exchange link (S_0 side).

@@ -74,7 +74,10 @@ impl fmt::Display for SnapshotError {
 impl std::error::Error for SnapshotError {}
 
 /// One server's persisted round-spanning state.
-#[derive(Debug, Clone)]
+///
+/// Not `Debug`: it holds the retained U-DPF keys, whose root seeds are
+/// secret (see the `SECRET_TYPES` manifest in `xtask`).
+#[derive(Clone)]
 pub struct ServerSnapshot<G: Group> {
     /// Which server this is (`0` leader, `1` worker) — a snapshot must
     /// never be restored into the other party.
@@ -130,11 +133,13 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self) -> Result<u32, SnapshotError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     fn u64(&mut self) -> Result<u64, SnapshotError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     fn block(&mut self) -> Result<&'a [u8], SnapshotError> {
@@ -193,7 +198,8 @@ impl<G: Group> ServerSnapshot<G> {
             return Err(SnapshotError::HashMismatch("file".into()));
         }
         let mut r = Reader { bytes: body, off: 4 };
-        let version = u16::from_le_bytes(r.take(2)?.try_into().unwrap());
+        let v = r.take(2)?;
+        let version = u16::from_le_bytes([v[0], v[1]]);
         if version != VERSION {
             return Err(SnapshotError::BadVersion(version));
         }
@@ -308,6 +314,12 @@ mod tests {
         assert_eq!(back.udpf.len(), 1);
         assert_eq!(back.udpf[0].0, 2);
         assert_eq!(back.udpf[0].1.len(), snap.udpf[0].1.len());
+        // Key material (root seed inside its Sensitive wrapper included)
+        // must survive the save/restore cycle bit-identically.
+        for (a, b) in snap.udpf[0].1.iter().zip(&back.udpf[0].1) {
+            assert_eq!(a.inner.to_bytes(), b.inner.to_bytes());
+            assert_eq!(*a.inner.root_seed, *b.inner.root_seed);
+        }
         assert_eq!(back.dead, snap.dead);
     }
 

@@ -160,7 +160,9 @@ fn get_u64(bytes: &[u8], off: &mut usize) -> Result<u64> {
         .get(*off..*off + 8)
         .ok_or_else(|| anyhow!("truncated control message (u64 at {off})"))?;
     *off += 8;
-    Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    Ok(u64::from_le_bytes([
+        s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+    ]))
 }
 
 fn get_slice<'a>(bytes: &'a [u8], off: &mut usize, len: usize) -> Result<&'a [u8]> {
@@ -230,6 +232,10 @@ pub const MAX_WIRE_MODEL: u64 = 1 << 22;
 /// allocation against inflated `ε·k` products (ε arrives as raw f64
 /// bits, so infinities and huge exponents are reachable off the wire).
 pub const MAX_WIRE_BINS: usize = 1 << 22;
+/// Ceiling on client-cohort sizes a control frame may declare (verified
+/// upload counts, per-client outcome lists) — far above any deployment
+/// here, far below an attacker-sized allocation.
+pub const MAX_WIRE_COHORT: usize = 1 << 20;
 
 /// Rebuild a [`Session`] from [`encode_session`] output (rebuilds the
 /// simple table; union domains re-run the [`Session::new_union`]
@@ -409,6 +415,10 @@ pub fn decode_cmd<G: Group>(bytes: &[u8]) -> Result<ServerCmd<G>> {
         CMD_VERIFIED => {
             let seed = get_u64(bytes, &mut off)?;
             let count = get_u32(bytes, &mut off)? as usize;
+            ensure!(
+                count <= MAX_WIRE_COHORT,
+                "verified-SSA command declares {count} uploads (wire cap {MAX_WIRE_COHORT})"
+            );
             let mut uploads = Vec::with_capacity(count.min(bytes.len()));
             for i in 0..count {
                 let block = get_block(bytes, &mut off)?;
@@ -520,6 +530,10 @@ pub fn decode_reply<G: Group>(bytes: &[u8]) -> Result<ServerReply<G>> {
             let server_time = Duration::from_nanos(get_u64(bytes, &mut off)?);
             let inter_sent = get_u64(bytes, &mut off)?;
             let n_outcomes = get_u32(bytes, &mut off)? as usize;
+            ensure!(
+                n_outcomes <= MAX_WIRE_COHORT,
+                "round reply declares {n_outcomes} outcomes (wire cap {MAX_WIRE_COHORT})"
+            );
             if n_outcomes > bytes.len().saturating_sub(off) {
                 bail!(
                     "round reply declares {n_outcomes} outcomes but only {} bytes remain",

@@ -5,3 +5,6 @@ pub mod field;
 pub mod hash;
 pub mod prg;
 pub mod rng;
+pub mod sensitive;
+
+pub use sensitive::Sensitive;

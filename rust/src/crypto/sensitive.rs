@@ -1,0 +1,169 @@
+//! [`Sensitive<T>`] — a wrapper for secret key material.
+//!
+//! The paper's security argument (§5) rests on DPF root seeds and master
+//! seeds never leaving the party that owns them: the correction words are
+//! public (identical for both servers), but a root seed reconstructs the
+//! whole point function. `Sensitive<T>` makes that boundary a *type*:
+//!
+//! * **Redacted `Debug`** — `format!("{:?}", seed)` prints
+//!   `Sensitive(<redacted>)`, so key material cannot leak through logs,
+//!   panic messages, or `dbg!` left in by accident. The secret types
+//!   themselves (see the `SECRET_TYPES` manifest in `xtask`) do not
+//!   implement `Debug`/`Display` at all; this wrapper is the only piece
+//!   of them that can ever be formatted.
+//! * **Best-effort zeroize-on-drop** — the backing bytes are overwritten
+//!   with zeros when the wrapper is dropped, through the [`Zeroize`]
+//!   trait. The write is routed through [`std::hint::black_box`] to
+//!   discourage dead-store elimination. This is *best effort* (the crate
+//!   is `#![forbid(unsafe_code)]`, so no volatile writes or mlock): moves
+//!   and clones of the plain inner value still leave copies behind, which
+//!   is why the seeds live *inside* the wrapper for their whole lifetime.
+//!
+//! Access to the inner value is explicit: deref (`*seed` / `&seed`) or
+//! [`Sensitive::expose`]. Both read as "I am touching key material here".
+
+use std::ops::{Deref, DerefMut};
+
+/// Overwrite `self` with a neutral value, discouraging the optimiser from
+/// eliding the store. Implemented for the fixed-size byte arrays the
+/// crate's seeds are made of.
+pub trait Zeroize {
+    /// Overwrite the contents with zeros (best effort).
+    fn zeroize(&mut self);
+}
+
+impl<const N: usize> Zeroize for [u8; N] {
+    fn zeroize(&mut self) {
+        for b in self.iter_mut() {
+            *b = 0;
+        }
+        // Pretend the zeroed bytes are observed so the stores above are
+        // not dead: without unsafe/volatile this is the strongest
+        // guarantee available on stable.
+        std::hint::black_box(&*self);
+    }
+}
+
+impl<T: Zeroize, const N: usize> Zeroize for [T; N] {
+    fn zeroize(&mut self) {
+        for x in self.iter_mut() {
+            x.zeroize();
+        }
+    }
+}
+
+/// Secret key material. See the module docs for the contract.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Sensitive<T: Zeroize>(T);
+
+impl<T: Zeroize> Sensitive<T> {
+    /// Wrap a secret. The value is zeroized when the wrapper drops.
+    pub fn new(value: T) -> Self {
+        Sensitive(value)
+    }
+
+    /// Borrow the secret. Equivalent to deref, but greppable.
+    pub fn expose(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T: Zeroize> From<T> for Sensitive<T> {
+    fn from(value: T) -> Self {
+        Sensitive(value)
+    }
+}
+
+impl<T: Zeroize> Deref for Sensitive<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T: Zeroize> DerefMut for Sensitive<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
+
+impl<T: Zeroize> std::fmt::Debug for Sensitive<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Sensitive(<redacted>)")
+    }
+}
+
+impl<T: Zeroize> Drop for Sensitive<T> {
+    fn drop(&mut self) {
+        self.0.zeroize();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn debug_is_redacted() {
+        let s = Sensitive::new([0xABu8; 16]);
+        let shown = format!("{s:?}");
+        assert_eq!(shown, "Sensitive(<redacted>)");
+        assert!(!shown.contains("AB") && !shown.contains("171"), "{shown}");
+    }
+
+    #[test]
+    fn zeroize_clears_byte_arrays() {
+        let mut bytes = [0x5Au8; 16];
+        bytes.zeroize();
+        assert_eq!(bytes, [0u8; 16]);
+        let mut nested = [[0x5Au8; 16]; 2];
+        nested.zeroize();
+        assert_eq!(nested, [[0u8; 16]; 2]);
+    }
+
+    /// Observable stand-in for key material: records that its buffer was
+    /// zeroized (the only safe way to watch a drop without reading freed
+    /// memory).
+    struct Probe {
+        data: [u8; 16],
+        wiped: Arc<AtomicBool>,
+    }
+
+    impl Zeroize for Probe {
+        fn zeroize(&mut self) {
+            self.data.zeroize();
+            self.wiped.store(self.data == [0u8; 16], Ordering::SeqCst);
+        }
+    }
+
+    #[test]
+    fn drop_zeroizes_the_backing_buffer() {
+        let wiped = Arc::new(AtomicBool::new(false));
+        let probe = Sensitive::new(Probe {
+            data: [7u8; 16],
+            wiped: Arc::clone(&wiped),
+        });
+        assert!(!wiped.load(Ordering::SeqCst));
+        drop(probe);
+        assert!(wiped.load(Ordering::SeqCst), "drop must zeroize the buffer");
+    }
+
+    #[test]
+    fn deref_and_expose_agree() {
+        let s = Sensitive::new([9u8; 16]);
+        assert_eq!(*s, [9u8; 16]);
+        assert_eq!(s.expose(), &[9u8; 16]);
+        let copied: [u8; 16] = *s; // Seed is Copy; deref-copy is the idiom
+        assert_eq!(copied, [9u8; 16]);
+    }
+
+    #[test]
+    fn clone_is_independent() {
+        let a = Sensitive::new([3u8; 16]);
+        let b = a.clone();
+        drop(a);
+        assert_eq!(*b, [3u8; 16]);
+    }
+}

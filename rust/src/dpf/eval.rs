@@ -7,7 +7,7 @@ use crate::group::Group;
 /// `Eval(b, k_b, x)` — one root-to-leaf walk (`depth` AES calls).
 pub fn eval<G: Group>(key: &DpfKey<G>, x: u64) -> G {
     debug_assert!(x < (1u64 << key.depth));
-    let mut s = key.root_seed;
+    let mut s = *key.root_seed;
     let mut t = key.party == 1;
     for level in 0..key.depth {
         let bit = (x >> (key.depth - 1 - level)) & 1 == 1;
@@ -49,7 +49,7 @@ pub fn full_eval<G: Group>(key: &DpfKey<G>, num_points: usize) -> Vec<G> {
     // Scalar AES (expand via `double`) measured fastest on this core: the
     // OoO window already pipelines AES-NI across iterations, and wide
     // `encrypt_blocks` batches only added copies (EXPERIMENTS.md §Perf).
-    let mut frontier: Vec<(Seed, bool)> = vec![(key.root_seed, key.party == 1)];
+    let mut frontier: Vec<(Seed, bool)> = vec![(*key.root_seed, key.party == 1)];
     for level in 0..key.depth {
         let cw = &key.cws[level];
         // Leaves under one node at this level, after expanding.
@@ -131,7 +131,7 @@ impl<'a, G: Group> From<&'a DpfKey<G>> for KeyView<'a, G> {
         KeyView {
             party: k.party,
             depth: k.depth,
-            root_seed: &k.root_seed,
+            root_seed: k.root_seed.expose(),
             cws: &k.cws,
             cw_out: &k.cw_out,
         }

@@ -76,7 +76,7 @@ pub fn gen<G: Group>(
     let mk = |party: u8, root: Seed| DpfKey {
         party,
         depth,
-        root_seed: root,
+        root_seed: crate::crypto::Sensitive::new(root),
         cws: cws.clone(),
         cw_out: cw_out.clone(),
     };

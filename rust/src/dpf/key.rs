@@ -1,6 +1,7 @@
 //! DPF key material and its wire encoding.
 
 use crate::crypto::prg::Seed;
+use crate::crypto::Sensitive;
 use crate::group::Group;
 
 /// Per-level correction word: a λ-bit seed correction plus two control-bit
@@ -20,14 +21,19 @@ pub struct CorrectionWord {
 /// `cws` + `cw_out` form the *public part* (identical in both keys);
 /// `root_seed` is the *private part* (§4 "Efficiency"). The party id `b`
 /// fixes the sign convention `(-1)^b` on outputs.
-#[derive(Clone, Debug)]
+///
+/// Deliberately **not** `Debug`: the root seed is the whole privacy
+/// budget, and this type is listed in the `SECRET_TYPES` manifest the
+/// `xtask` lint enforces. Format the public part by hand if you must.
+#[derive(Clone)]
 pub struct DpfKey<G: Group> {
     /// Party id b ∈ {0, 1}; fixes the output sign convention `(-1)^b`.
     pub party: u8,
     /// Tree depth n (domain is `{0,1}^n`).
     pub depth: usize,
-    /// This party's private λ-bit root seed.
-    pub root_seed: Seed,
+    /// This party's private λ-bit root seed (redacted in `{:?}`,
+    /// zeroized on drop).
+    pub root_seed: Sensitive<Seed>,
     /// Per-level correction words (shared by both parties).
     pub cws: Vec<CorrectionWord>,
     /// Output correction word `CW^{(n+1)}` (shared by both parties).
@@ -55,7 +61,7 @@ impl<G: Group> DpfKey<G> {
         let mut out = Vec::with_capacity(2 + 2 + 16 + self.cws.len() * 17 + G::byte_len());
         out.push(self.party);
         out.push(self.depth as u8);
-        out.extend_from_slice(&self.root_seed);
+        out.extend_from_slice(self.root_seed.expose());
         for cw in &self.cws {
             out.extend_from_slice(&cw.seed);
             out.push(cw.t_left as u8 | ((cw.t_right as u8) << 1));
@@ -89,7 +95,7 @@ impl<G: Group> DpfKey<G> {
         Some(DpfKey {
             party,
             depth,
-            root_seed,
+            root_seed: Sensitive::new(root_seed),
             cws,
             cw_out,
         })

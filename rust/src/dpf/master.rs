@@ -10,11 +10,15 @@
 use super::gen::gen;
 use super::key::{CorrectionWord, DpfKey};
 use crate::crypto::prg::{prf_seed, Seed};
+use crate::crypto::Sensitive;
 use crate::group::Group;
 
 /// What a client wants to place in one bin: domain depth plus an optional
 /// `(α, β)` point (`None` ⇒ dummy key `Gen(1^λ, 0, 0)`, §4).
-#[derive(Clone, Debug)]
+///
+/// Not `Debug`: the `(α, β)` point is exactly the client datum the whole
+/// protocol hides (`SECRET_TYPES` manifest).
+#[derive(Clone)]
 pub struct BinPoint<G: Group> {
     /// DPF tree depth for this bin (covers the bin's Θ positions).
     pub depth: usize,
@@ -42,10 +46,14 @@ impl<G: Group> PublicPart<G> {
 
 /// A client's whole upload for one protocol run: two master seeds plus one
 /// public part per bin.
-#[derive(Clone, Debug)]
+///
+/// Not `Debug`: the master seeds derive every root seed
+/// (`SECRET_TYPES` manifest).
+#[derive(Clone)]
 pub struct MasterKeyBatch<G: Group> {
     /// The two per-server master seeds (`msk_b` goes only to server b).
-    pub msk: [Seed; 2],
+    /// Redacted in `{:?}`, zeroized on drop.
+    pub msk: [Sensitive<Seed>; 2],
     /// One public part per bin (identical for both servers).
     pub publics: Vec<PublicPart<G>>,
 }
@@ -61,7 +69,7 @@ impl<G: Group> MasterKeyBatch<G> {
             .map(|(j, p)| DpfKey {
                 party: b,
                 depth: p.depth,
-                root_seed: prf_seed(&self.msk[b as usize], j as u64),
+                root_seed: Sensitive::new(prf_seed(&self.msk[b as usize], j as u64)),
                 cws: p.cws.clone(),
                 cw_out: p.cw_out.clone(),
             })
@@ -101,7 +109,7 @@ pub fn gen_batch_with_master<G: Group>(
         })
         .collect();
     MasterKeyBatch {
-        msk: [msk0, msk1],
+        msk: [Sensitive::new(msk0), Sensitive::new(msk1)],
         publics,
     }
 }

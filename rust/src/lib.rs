@@ -21,6 +21,8 @@
 //! AOT-compiled to HLO text at build time and executed from rust through
 //! the PJRT CPU client ([`runtime`]). Python never runs on the round path.
 
+#![forbid(unsafe_code)]
+
 pub mod baseline;
 pub mod coordinator;
 pub mod crypto;

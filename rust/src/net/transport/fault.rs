@@ -119,10 +119,21 @@ struct FaultTransport {
 }
 
 impl FaultTransport {
+    /// Lock the wrapped link. A poisoned mutex means some thread panicked
+    /// mid-operation; the `Option` inside is still coherent (it only ever
+    /// holds a whole transport or `None`), so recover the guard instead of
+    /// cascading the panic — a torn underlying transport surfaces its own
+    /// [`TransportError::Closed`] on the next send/recv.
+    fn link(&self) -> std::sync::MutexGuard<'_, Option<BoxTransport>> {
+        self.inner
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Drop the wrapped transport, closing the underlying socket/channel.
     fn sever(&self) -> anyhow::Error {
         self.shared.alive.store(false, Ordering::SeqCst);
-        *self.inner.lock().unwrap() = None;
+        *self.link() = None;
         TransportError::Closed.into()
     }
 }
@@ -150,7 +161,7 @@ impl Transport for FaultTransport {
         if plan.mute_after_bytes.is_some_and(|b| bytes > b) {
             return Ok(()); // swallowed: the far side sees a straggler
         }
-        match &*self.inner.lock().unwrap() {
+        match &*self.link() {
             Some(t) => t.send(msg),
             None => Err(TransportError::Closed.into()),
         }
@@ -160,7 +171,7 @@ impl Transport for FaultTransport {
         if !self.shared.alive.load(Ordering::SeqCst) {
             return Err(self.sever());
         }
-        match &*self.inner.lock().unwrap() {
+        match &*self.link() {
             Some(t) => t.recv(),
             None => Err(TransportError::Closed.into()),
         }
@@ -170,7 +181,7 @@ impl Transport for FaultTransport {
         if !self.shared.alive.load(Ordering::SeqCst) {
             return Err(self.sever());
         }
-        match &*self.inner.lock().unwrap() {
+        match &*self.link() {
             Some(t) => t.recv_timeout(timeout),
             None => Err(TransportError::Closed.into()),
         }

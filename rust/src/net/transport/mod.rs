@@ -224,7 +224,7 @@ impl Hello {
                  (expected {TRANSPORT_MAGIC:02x?})"
             );
         }
-        let version = u16::from_le_bytes(bytes.get(4..6).ok_or_else(short)?.try_into().unwrap());
+        let version = read_u16(bytes, 4)?;
         if version != TRANSPORT_VERSION {
             bail!(
                 "handshake version {version} but this build speaks {TRANSPORT_VERSION}: \
@@ -234,15 +234,10 @@ impl Hello {
         let party = *bytes.get(6).ok_or_else(short)?;
         let role = match *bytes.get(7).ok_or_else(short)? {
             0 => {
-                let max_clients =
-                    u32::from_le_bytes(bytes.get(8..12).ok_or_else(short)?.try_into().unwrap());
-                let m =
-                    u64::from_le_bytes(bytes.get(12..20).ok_or_else(short)?.try_into().unwrap());
-                let k =
-                    u64::from_le_bytes(bytes.get(20..28).ok_or_else(short)?.try_into().unwrap());
-                let glen =
-                    u32::from_le_bytes(bytes.get(28..32).ok_or_else(short)?.try_into().unwrap())
-                        as usize;
+                let max_clients = read_u32(bytes, 8)?;
+                let m = read_u64(bytes, 12)?;
+                let k = read_u64(bytes, 20)?;
+                let glen = read_u32(bytes, 28)? as usize;
                 let group = std::str::from_utf8(bytes.get(32..32 + glen).ok_or_else(short)?)
                     .map_err(|_| anyhow!("handshake group name is not UTF-8"))?
                     .to_string();
@@ -254,7 +249,7 @@ impl Hello {
                 }
             }
             1 => Role::Client {
-                id: u32::from_le_bytes(bytes.get(8..12).ok_or_else(short)?.try_into().unwrap()),
+                id: read_u32(bytes, 8)?,
             },
             2 => Role::Peer,
             t => bail!("unknown handshake role tag {t}"),
@@ -265,6 +260,29 @@ impl Hello {
 
 fn short() -> anyhow::Error {
     anyhow!("truncated handshake")
+}
+
+/// Bounds-checked little-endian reads for handshake parsing: `short()` on
+/// truncation, with no panicking conversion left on the success path.
+fn read_u16(bytes: &[u8], at: usize) -> Result<u16> {
+    match bytes.get(at..at + 2) {
+        Some(&[a, b]) => Ok(u16::from_le_bytes([a, b])),
+        _ => Err(short()),
+    }
+}
+
+fn read_u32(bytes: &[u8], at: usize) -> Result<u32> {
+    match bytes.get(at..at + 4) {
+        Some(&[a, b, c, d]) => Ok(u32::from_le_bytes([a, b, c, d])),
+        _ => Err(short()),
+    }
+}
+
+fn read_u64(bytes: &[u8], at: usize) -> Result<u64> {
+    match bytes.get(at..at + 8) {
+        Some(&[a, b, c, d, e, f, g, h]) => Ok(u64::from_le_bytes([a, b, c, d, e, f, g, h])),
+        _ => Err(short()),
+    }
 }
 
 /// The accepting side's handshake reply: its party id and, on rejection,
@@ -301,7 +319,7 @@ impl HelloAck {
         if bytes.get(..4).ok_or_else(short)? != TRANSPORT_MAGIC {
             bail!("bad handshake-ack magic: the peer is not an fsl transport");
         }
-        let version = u16::from_le_bytes(bytes.get(4..6).ok_or_else(short)?.try_into().unwrap());
+        let version = read_u16(bytes, 4)?;
         if version != TRANSPORT_VERSION {
             bail!(
                 "handshake-ack version {version} but this build speaks {TRANSPORT_VERSION}: \
@@ -312,9 +330,7 @@ impl HelloAck {
         let error = match *bytes.get(7).ok_or_else(short)? {
             0 => None,
             _ => {
-                let len =
-                    u32::from_le_bytes(bytes.get(8..12).ok_or_else(short)?.try_into().unwrap())
-                        as usize;
+                let len = read_u32(bytes, 8)? as usize;
                 Some(
                     String::from_utf8_lossy(bytes.get(12..12 + len).ok_or_else(short)?)
                         .into_owned(),

@@ -126,10 +126,12 @@ impl TcpTransport {
     }
 
     fn recv_with(&self, timeout: Option<Duration>) -> Result<Vec<u8>> {
+        // A poisoned lock means a peer thread panicked mid-read; the stream
+        // may be mid-frame, so surface the typed close instead of a panic.
         let mut stream = self
             .reader
             .lock()
-            .map_err(|_| anyhow!("tcp reader poisoned"))?;
+            .map_err(|_| anyhow::Error::new(TransportError::Closed).context("tcp reader poisoned"))?;
         stream.set_read_timeout(timeout).context("set_read_timeout")?;
         let out = Self::read_frame(&mut stream, &self.meter);
         // Best-effort restore so a later plain recv() blocks again.
@@ -163,10 +165,12 @@ impl Transport for TcpTransport {
             );
         }
         let framed = msg::frame(&payload);
+        // As with the reader: a panicked writer thread may have torn a
+        // frame, so the link is unusable — report it as closed.
         let mut stream = self
             .writer
             .lock()
-            .map_err(|_| anyhow!("tcp writer poisoned"))?;
+            .map_err(|_| anyhow::Error::new(TransportError::Closed).context("tcp writer poisoned"))?;
         stream.write_all(&framed).map_err(|e| match e.kind() {
             std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
                 anyhow::Error::new(TransportError::Timeout).context("timed out writing a frame")

@@ -138,6 +138,8 @@ impl Sharding {
                 .collect();
             handles
                 .into_iter()
+                // lint: allow(panic) — a panicked shard worker must propagate
+                // to the spawning thread, not be silently dropped from the sum.
                 .map(|h| h.join().expect("shard worker panicked"))
                 .collect()
         })
@@ -290,7 +292,7 @@ pub fn uploads_of<G: Group>(batches: &[MasterKeyBatch<G>], party: u8) -> Vec<Pub
         .iter()
         .map(|b| PublicsUpload {
             publics: &b.publics,
-            msk: &b.msk[party as usize],
+            msk: b.msk[party as usize].expose(),
         })
         .collect()
 }
@@ -471,6 +473,9 @@ impl<'a, G: Group, S: EvalSource<G>> Worker<'a, G, S> {
                 let bin = self.session.simple.bin(slot);
                 self.source.eval_slot(client, slot, bin.len(), &mut self.ws, &mut self.ev);
                 for (d, &idx) in bin.iter().enumerate() {
+                    // lint: allow(panic) — simple bins are built from the
+                    // session's own domain, so membership is a construction
+                    // invariant, not an input-dependent condition.
                     let pos = self
                         .session
                         .domain_index_of(idx)
@@ -539,7 +544,7 @@ mod tests {
             .iter()
             .map(|b| PublicsUpload {
                 publics: &b.publics,
-                msk: &b.msk[0],
+                msk: b.msk[0].expose(),
             })
             .collect();
         assert_eq!(AggregationEngine::serial().aggregate_publics(&s, 0, &uploads), legacy_serial);
@@ -570,7 +575,7 @@ mod tests {
                 .iter()
                 .map(|b| PublicsUpload {
                     publics: &b.publics,
-                    msk: &b.msk[party as usize],
+                    msk: b.msk[party as usize].expose(),
                 })
                 .collect();
             let engine = AggregationEngine::new(3);

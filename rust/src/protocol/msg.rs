@@ -15,9 +15,31 @@
 //! already preserves boundaries, and framing there would silently change
 //! every measured byte count.
 
+use crate::crypto::Sensitive;
 use crate::dpf::{CorrectionWord, DpfKey, MasterKeyBatch, PublicPart};
 use crate::group::Group;
 use crate::udpf::{Hint, UdpfKey};
+
+// ---- decode-side ceilings ----------------------------------------------
+//
+// Every length-prefixed decoder checks one of these `MAX_WIRE_*` caps
+// *before* its first length-driven allocation (the `xtask` lint enforces
+// the pattern). The remaining-bytes checks below already prevent a
+// malicious count from out-sizing the payload; the caps additionally pin
+// each collection to its protocol-plausible order of magnitude, so a
+// hostile-but-well-framed message cannot reserve gigabytes.
+
+/// Ceiling on per-upload public parts (one per cuckoo bin/stash slot).
+pub const MAX_WIRE_PUBLICS: usize = 1 << 22;
+/// Ceiling on group elements in one share vector (covers a full
+/// 2²⁵-element weight install with headroom).
+pub const MAX_WIRE_SHARES: usize = 1 << 27;
+/// Ceiling on U-DPF keys in one retained key set.
+pub const MAX_WIRE_UDPF_KEYS: usize = 1 << 22;
+/// Ceiling on per-epoch U-DPF hints (one per bin/stash slot).
+pub const MAX_WIRE_HINTS: usize = 1 << 22;
+/// Ceiling on indices in one PSU/union message.
+pub const MAX_WIRE_INDICES: usize = 1 << 27;
 
 /// LE u32 append — shared with the control-plane codec
 /// (`coordinator/wire.rs`), which builds on these primitives.
@@ -120,7 +142,7 @@ pub fn frame_payload_len(header: &[u8]) -> Result<usize, FrameError> {
     if header[2] != FRAME_VERSION {
         return Err(FrameError::BadVersion(header[2]));
     }
-    let len = u32::from_le_bytes(header[3..7].try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes([header[3], header[4], header[5], header[6]]) as usize;
     if len > MAX_FRAME_LEN {
         return Err(FrameError::Oversize(len));
     }
@@ -153,7 +175,7 @@ pub fn encode_key_upload<G: Group>(
 ) -> Vec<u8> {
     let mut out = Vec::new();
     out.push(server);
-    out.extend_from_slice(&batch.msk[server as usize]);
+    out.extend_from_slice(batch.msk[server as usize].expose());
     out.push(include_publics as u8);
     if include_publics {
         encode_publics(&mut out, &batch.publics);
@@ -178,8 +200,9 @@ fn encode_publics<G: Group>(out: &mut Vec<u8>, publics: &[PublicPart<G>]) {
 /// Shared publics-region decoding, advancing `off` past the region.
 fn decode_publics<G: Group>(bytes: &[u8], off: &mut usize) -> Option<Vec<PublicPart<G>>> {
     let count = get_u32(bytes, off)? as usize;
-    // Each public part is ≥ 1 byte (depth tag); bound before allocating.
-    if count > bytes.len().saturating_sub(*off) {
+    // Cap + length sanity BEFORE allocating: each public part is ≥ 1 byte
+    // (depth tag).
+    if count > MAX_WIRE_PUBLICS || count > bytes.len().saturating_sub(*off) {
         return None;
     }
     let mut publics = Vec::with_capacity(count);
@@ -237,8 +260,8 @@ pub fn decode_key_upload<G: Group>(bytes: &[u8]) -> Option<KeyUpload<G>> {
 /// in-process API does.
 pub fn encode_master_batch<G: Group>(batch: &MasterKeyBatch<G>) -> Vec<u8> {
     let mut out = Vec::new();
-    out.extend_from_slice(&batch.msk[0]);
-    out.extend_from_slice(&batch.msk[1]);
+    out.extend_from_slice(batch.msk[0].expose());
+    out.extend_from_slice(batch.msk[1].expose());
     encode_publics(&mut out, &batch.publics);
     out
 }
@@ -250,7 +273,7 @@ pub fn decode_master_batch<G: Group>(bytes: &[u8]) -> Option<MasterKeyBatch<G>> 
     let mut off = 32;
     let publics = decode_publics(bytes, &mut off)?;
     (off == bytes.len()).then_some(MasterKeyBatch {
-        msk: [msk0, msk1],
+        msk: [Sensitive::new(msk0), Sensitive::new(msk1)],
         publics,
     })
 }
@@ -269,8 +292,11 @@ pub fn encode_shares<G: Group>(shares: &[G]) -> Vec<u8> {
 pub fn decode_shares<G: Group>(bytes: &[u8]) -> Option<Vec<G>> {
     let mut off = 0;
     let count = get_u32(bytes, &mut off)? as usize;
-    // Length sanity BEFORE allocating: a malicious count must not OOM us.
-    if count.checked_mul(G::byte_len())? > bytes.len().saturating_sub(off) {
+    // Cap + length sanity BEFORE allocating: a malicious count must not
+    // OOM us.
+    if count > MAX_WIRE_SHARES
+        || count.checked_mul(G::byte_len())? > bytes.len().saturating_sub(off)
+    {
         return None;
     }
     let mut out = Vec::with_capacity(count);
@@ -299,8 +325,9 @@ pub fn encode_udpf_keys<G: Group>(keys: &[UdpfKey<G>]) -> Vec<u8> {
 pub fn decode_udpf_keys<G: Group>(bytes: &[u8]) -> Option<Vec<UdpfKey<G>>> {
     let mut off = 0;
     let count = get_u32(bytes, &mut off)? as usize;
-    // Each key is ≥ 4 bytes (its length prefix); bound before allocating.
-    if count.checked_mul(4)? > bytes.len().saturating_sub(off) {
+    // Cap + length sanity BEFORE allocating: each key is ≥ 4 bytes (its
+    // length prefix).
+    if count > MAX_WIRE_UDPF_KEYS || count.checked_mul(4)? > bytes.len().saturating_sub(off) {
         return None;
     }
     let mut keys = Vec::with_capacity(count);
@@ -332,7 +359,9 @@ pub fn encode_hints<G: Group>(hints: &[Hint<G>]) -> Vec<u8> {
 pub fn decode_hints<G: Group>(bytes: &[u8]) -> Option<Vec<Hint<G>>> {
     let mut off = 0;
     let count = get_u32(bytes, &mut off)? as usize;
-    if count.checked_mul(8 + G::byte_len())? > bytes.len().saturating_sub(off) {
+    if count > MAX_WIRE_HINTS
+        || count.checked_mul(8 + G::byte_len())? > bytes.len().saturating_sub(off)
+    {
         return None;
     }
     let mut out = Vec::with_capacity(count);
@@ -360,7 +389,7 @@ pub fn encode_indices(indices: &[u64]) -> Vec<u8> {
 pub fn decode_indices(bytes: &[u8]) -> Option<Vec<u64>> {
     let mut off = 0;
     let count = get_u32(bytes, &mut off)? as usize;
-    if count.checked_mul(8)? > bytes.len().saturating_sub(off) {
+    if count > MAX_WIRE_INDICES || count.checked_mul(8)? > bytes.len().saturating_sub(off) {
         return None;
     }
     let mut out = Vec::with_capacity(count);
@@ -390,13 +419,13 @@ mod tests {
         let short = encode_key_upload(&batch, 1, false);
         assert!(short.len() < long.len());
         let du = decode_key_upload::<u128>(&long).unwrap();
-        assert_eq!(du.msk, batch.msk[0]);
+        assert_eq!(du.msk, *batch.msk[0]);
         let pubs = du.publics.unwrap();
         assert_eq!(pubs.len(), 3);
         assert_eq!(pubs[0].cw_out, batch.publics[0].cw_out);
         let ds = decode_key_upload::<u128>(&short).unwrap();
         assert!(ds.publics.is_none());
-        assert_eq!(ds.msk, batch.msk[1]);
+        assert_eq!(ds.msk, *batch.msk[1]);
     }
 
     #[test]

@@ -74,6 +74,9 @@ pub(crate) fn build_bin_points<G: Group>(
         let theta_j = simple.bin(j).len().max(2);
         let depth = dpf::depth_for(theta_j);
         let point = slot.map(|u| {
+            // lint: allow(panic) — cuckoo and simple tables are built from
+            // the same hash family, so every cuckoo occupant is in the
+            // matching simple bin by construction (Fig. 3 alignment).
             let pos = simple
                 .position(j, u)
                 .expect("alignment invariant: cuckoo element present in simple bin");
@@ -85,6 +88,8 @@ pub(crate) fn build_bin_points<G: Group>(
     // σ of them so the upload shape is data-independent (Fig. 3).
     for t in 0..session.params.cuckoo.sigma {
         let point = cuckoo.stash().get(t).map(|&u| {
+            // lint: allow(panic) — stash elements come from the caller's
+            // selections, which the table build already range-checked.
             let pos = session
                 .domain_index_of(u)
                 .expect("stash element outside domain");
@@ -122,6 +127,8 @@ pub fn client_reconstruct<G: Group>(
     selections
         .iter()
         .map(|&s| {
+            // lint: allow(panic) — `ctx.cuckoo` was built from these same
+            // selections in `client_query`, so lookup cannot miss.
             let slot = match ctx.cuckoo.locate(s).expect("selection not in table") {
                 Ok(bin) => bin,
                 Err(stash_slot) => num_bins + stash_slot,

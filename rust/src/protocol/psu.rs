@@ -53,7 +53,9 @@ impl SmallPrp {
         let mut seed = self.round_keys[r];
         seed[8..].copy_from_slice(&x.to_le_bytes());
         let out = expand_stream(&seed, 8);
-        u64::from_le_bytes(out.try_into().unwrap())
+        u64::from_le_bytes([
+            out[0], out[1], out[2], out[3], out[4], out[5], out[6], out[7],
+        ])
     }
 
     fn feistel(&self, x: u64, inverse: bool) -> u64 {

@@ -138,6 +138,8 @@ impl RetrievalEngine {
         keys: &[DpfKey<G>],
     ) -> Vec<G> {
         let mut rows = self.answer_batch(session, weights, &SingleClientKeys(keys));
+        // lint: allow(panic) — answer_batch returns exactly one row per
+        // client, and SingleClientKeys is by definition one client.
         rows.pop().expect("single-client answer")
     }
 

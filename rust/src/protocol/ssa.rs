@@ -200,7 +200,7 @@ mod tests {
         assert_eq!(legacy_into, engine_into);
 
         let mut legacy_publics = vec![0u64; 512];
-        server_aggregate_publics(&s, &batch.publics, &batch.msk[0], 0, &mut legacy_publics);
+        server_aggregate_publics(&s, &batch.publics, batch.msk[0].expose(), 0, &mut legacy_publics);
         assert_eq!(legacy_publics, engine_into);
 
         assert_eq!(

@@ -65,6 +65,8 @@ pub fn client_setup<G: Group>(
     for (j, slot) in cuckoo.bins().iter().enumerate() {
         let depth = dpf::depth_for(simple.bin(j).len().max(2));
         let point = slot.map(|u| {
+            // lint: allow(panic) — cuckoo occupants always land in the
+            // matching simple bin (same hash family, Fig. 3 alignment).
             let pos = simple.position(j, u).expect("alignment invariant") as u64;
             (pos, &delta_of[&u])
         });
@@ -73,6 +75,8 @@ pub fn client_setup<G: Group>(
     for t in 0..session.params.cuckoo.sigma {
         let point = cuckoo.stash().get(t).map(|&u| {
             (
+                // lint: allow(panic) — stash elements were range-checked
+                // when the cuckoo table accepted the selections.
                 session.domain_index_of(u).expect("stash element in domain"),
                 &delta_of[&u],
             )

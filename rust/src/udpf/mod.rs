@@ -14,6 +14,7 @@
 //! plain DPF's `Convert` (epoch-independent) fails the §5 security game.
 
 use crate::crypto::prg::{expand_one, Seed};
+use crate::crypto::Sensitive;
 use crate::dpf::{gen as dpf_gen, DpfKey};
 use crate::group::Group;
 use sha2::{Digest, Sha256};
@@ -32,17 +33,24 @@ pub fn ro_hash<G: Group>(seed: &Seed, epoch: u64) -> G {
 
 /// One party's updatable DPF key: a standard key whose output correction
 /// word is interpreted against the epoch-keyed oracle.
-#[derive(Clone, Debug)]
+///
+/// Not `Debug` — it carries a root seed (`SECRET_TYPES` manifest).
+#[derive(Clone)]
 pub struct UdpfKey<G: Group> {
     pub inner: DpfKey<G>,
 }
 
 /// Client-side state retained across epochs: the two final seeds and the
 /// final control bit of party 1 (needed to aim the next hint).
-#[derive(Clone, Debug)]
+///
+/// Not `Debug` — the leaf seeds let anyone forge epoch hints
+/// (`SECRET_TYPES` manifest).
+#[derive(Clone)]
 pub struct UdpfClientState {
-    pub leaf_seed0: Seed,
-    pub leaf_seed1: Seed,
+    /// Party 0's final on-path seed (redacted, zeroized on drop).
+    pub leaf_seed0: Sensitive<Seed>,
+    /// Party 1's final on-path seed (redacted, zeroized on drop).
+    pub leaf_seed1: Sensitive<Seed>,
     pub t1: bool,
 }
 
@@ -85,7 +93,7 @@ fn walk_to_leaf_state<G: Group>(k0: &DpfKey<G>, k1: &DpfKey<G>, alpha: u64) -> U
     // The client knows both keys; replay the two walks along α to recover
     // the final seeds/control bits (identical to what Gen computed).
     let walk = |k: &DpfKey<G>| {
-        let mut s = k.root_seed;
+        let mut s = *k.root_seed;
         let mut t = k.party == 1;
         for level in 0..k.depth {
             let bit = (alpha >> (k.depth - 1 - level)) & 1 == 1;
@@ -106,8 +114,8 @@ fn walk_to_leaf_state<G: Group>(k0: &DpfKey<G>, k1: &DpfKey<G>, alpha: u64) -> U
     let (s0, _t0) = walk(k0);
     let (s1, t1) = walk(k1);
     UdpfClientState {
-        leaf_seed0: s0,
-        leaf_seed1: s1,
+        leaf_seed0: Sensitive::new(s0),
+        leaf_seed1: Sensitive::new(s1),
         t1,
     }
 }
@@ -131,7 +139,7 @@ pub fn update<G: Group>(key: &mut UdpfKey<G>, hint: &Hint<G>) {
 /// `Eval(b, k_b, x, e)` — as DPF eval but with the epoch-keyed leaf hash.
 pub fn eval<G: Group>(key: &UdpfKey<G>, x: u64, epoch: u64) -> G {
     let k = &key.inner;
-    let mut s = k.root_seed;
+    let mut s = *k.root_seed;
     let mut t = k.party == 1;
     for level in 0..k.depth {
         let bit = (x >> (k.depth - 1 - level)) & 1 == 1;
@@ -158,7 +166,7 @@ pub fn eval<G: Group>(key: &UdpfKey<G>, x: u64, epoch: u64) -> G {
 pub fn full_eval<G: Group>(key: &UdpfKey<G>, num_points: usize, epoch: u64) -> Vec<G> {
     use crate::crypto::prg::double;
     let k = &key.inner;
-    let mut frontier: Vec<(Seed, bool)> = vec![(k.root_seed, k.party == 1)];
+    let mut frontier: Vec<(Seed, bool)> = vec![(*k.root_seed, k.party == 1)];
     for level in 0..k.depth {
         let cw = &k.cws[level];
         let span = 1usize << (k.depth - level - 1);

@@ -8,6 +8,7 @@
 //! bytes — decoders only ever see attacker-controlled channel data.
 
 use fsl::crypto::rng::Rng;
+use fsl::crypto::Sensitive;
 use fsl::dpf::{gen_batch_with_master, BinPoint, MasterKeyBatch};
 use fsl::group::{Group, MegaElem};
 use fsl::protocol::msg;
@@ -42,12 +43,12 @@ fn prop_key_upload_roundtrips() {
             let long = msg::encode_key_upload(&batch, server, true);
             let up = msg::decode_key_upload::<u64>(&long).expect("long upload decodes");
             assert_eq!(up.server, server, "seed {seed}");
-            assert_eq!(up.msk, batch.msk[server as usize], "seed {seed}");
+            assert_eq!(up.msk, *batch.msk[server as usize], "seed {seed}");
             // Re-encoding the decoded upload must reproduce the publics
             // region byte-exactly (deep equality of every correction
             // word); bytes 0..17 are the server tag + per-server msk.
             let rebuilt = MasterKeyBatch::<u64> {
-                msk: [up.msk, up.msk],
+                msk: [Sensitive::new(up.msk), Sensitive::new(up.msk)],
                 publics: up.publics.expect("publics present"),
             };
             assert_eq!(
@@ -59,7 +60,7 @@ fn prop_key_upload_roundtrips() {
             assert!(short.len() < long.len(), "seed {seed}");
             let us = msg::decode_key_upload::<u64>(&short).expect("short upload decodes");
             assert!(us.publics.is_none(), "seed {seed}");
-            assert_eq!(us.msk, batch.msk[server as usize], "seed {seed}");
+            assert_eq!(us.msk, *batch.msk[server as usize], "seed {seed}");
         }
     }
 }

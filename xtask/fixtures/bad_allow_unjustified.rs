@@ -1,0 +1,7 @@
+//! Rule-1 fixture: an escape hatch with no justification is itself a
+//! violation — the marker alone does not buy a panic.
+
+pub fn first_byte(v: &[u8]) -> u8 {
+    // lint: allow(panic)
+    *v.first().unwrap()
+}

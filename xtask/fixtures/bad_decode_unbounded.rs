@@ -1,0 +1,11 @@
+//! Rule-3 fixture: a decoder that allocates from a wire-declared count
+//! before checking any MAX_WIRE_* cap.
+
+pub fn decode_things(bytes: &[u8]) -> Option<Vec<u8>> {
+    let count = bytes.first().copied()? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(0);
+    }
+    Some(out)
+}

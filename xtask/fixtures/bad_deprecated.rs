@@ -1,0 +1,5 @@
+//! Rule-5 fixture: deprecated API use outside a labelled equivalence
+//! test, with no justification marker.
+
+#[allow(deprecated)]
+pub fn calls_legacy_api() {}

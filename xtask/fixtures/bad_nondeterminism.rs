@@ -1,0 +1,5 @@
+//! Rule-4 fixture: wall-clock reads inside the deterministic core.
+
+pub fn elapsed_nanos() -> u128 {
+    std::time::Instant::now().elapsed().as_nanos()
+}

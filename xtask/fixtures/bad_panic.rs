@@ -1,0 +1,5 @@
+//! Rule-1 fixture: a bare `.unwrap()` on the server path.
+
+pub fn first_byte(v: &[u8]) -> u8 {
+    *v.first().unwrap()
+}

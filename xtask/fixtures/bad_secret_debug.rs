@@ -1,0 +1,6 @@
+//! Rule-2 fixture: a SECRET_TYPES manifest type deriving Debug.
+
+#[derive(Clone, Debug)]
+pub struct DpfKey {
+    pub root_seed: [u8; 16],
+}

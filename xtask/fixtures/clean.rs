@@ -1,0 +1,33 @@
+//! The happy-path fixture: exercises every rule's accepted form —
+//! cap-before-allocation decoding, a justified escape hatch, and panics
+//! confined to `#[cfg(test)]` items.
+
+pub const MAX_WIRE_ITEMS: usize = 1 << 10;
+
+pub fn decode_items(bytes: &[u8]) -> Option<Vec<u8>> {
+    let count = *bytes.first()? as usize;
+    if count > MAX_WIRE_ITEMS {
+        return None;
+    }
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(0);
+    }
+    Some(out)
+}
+
+pub fn checked_head(v: &[u8]) -> u8 {
+    // lint: allow(panic) — fixture demonstrating a justified escape hatch.
+    v.first().copied().expect("fixture invariant: non-empty input")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unwrap_inside_tests_is_fine() {
+        let v = decode_items(&[1, 0]).unwrap();
+        assert_eq!(*v.first().unwrap(), 0);
+    }
+}

@@ -1,0 +1,822 @@
+//! fsl-lint: the repo's invariant static-analysis pass.
+//!
+//! Run as `cargo run -p xtask -- lint` (or `make lint`). Five rules over
+//! `rust/src/**`, enforced token-wise on comment/string-stripped source
+//! with `#[cfg(test)]` items excised:
+//!
+//! 1. **panic** — no `.unwrap()` / `.expect(` / `panic!(` /
+//!    `unreachable!(` in `protocol/`, `net/`, or the server-path
+//!    coordinator modules (`serve`, `wire`, `runtime`, `snapshot`).
+//!    Server code must fail with typed errors, never a process abort.
+//! 2. **secret-debug** — no type in [`SECRET_TYPES`] may derive or
+//!    implement `Debug`/`Display`; key material must not be formattable.
+//! 3. **decode-bounds** — every `decode_*`/`read_*` in the two wire
+//!    codecs checks a `MAX_WIRE_*`/`MAX_FRAME_*` cap before its first
+//!    length-driven allocation, so a hostile frame costs an error, not
+//!    gigabytes.
+//! 4. **determinism** — no `Instant::now` / `SystemTime` / `rand::` in
+//!    `dpf/`, `crypto/`, `protocol/`: the cryptographic core must be a
+//!    pure function of its inputs (reproducible transcripts, seedable
+//!    tests).
+//! 5. **deprecated** — no `#[allow(deprecated)]` outside test items;
+//!    legacy APIs live on only inside labelled equivalence tests.
+//!
+//! Escape hatch: a `// lint: allow(<rule>) — <justification>` comment on
+//! the flagged line or within the [`ALLOW_WINDOW`] lines above it
+//! suppresses that rule there. The justification is mandatory — a bare
+//! marker is itself a violation.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Types that carry DPF key material (root/master/leaf seeds). Nothing in
+/// this manifest may derive or implement `Debug`/`Display`; their seed
+/// fields are wrapped in `crypto::Sensitive`, which redacts itself.
+const SECRET_TYPES: &[&str] = &[
+    "DpfKey",
+    "MasterKeyBatch",
+    "BinPoint",
+    "UdpfKey",
+    "UdpfClientState",
+];
+
+/// How many lines above a flagged token an allow marker still covers
+/// (markers usually sit above a rustfmt-wrapped call chain).
+const ALLOW_WINDOW: usize = 8;
+
+/// Coordinator files held to the panic-freedom rule (the modules a
+/// standalone server actually runs; the legacy single-process drivers are
+/// exempt).
+const PANIC_FREE_COORDINATOR: &[&str] = &[
+    "coordinator/serve.rs",
+    "coordinator/wire.rs",
+    "coordinator/runtime.rs",
+    "coordinator/snapshot.rs",
+];
+
+/// The wire codecs whose decoders must cap before allocating.
+const DECODE_BOUND_FILES: &[&str] = &["protocol/msg.rs", "coordinator/wire.rs"];
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// A parsed `// lint: allow(<rule>) — <justification>` marker.
+struct Allow {
+    rule: String,
+    justified: bool,
+}
+
+/// Per-file preprocessed views. All three texts are byte-for-byte the
+/// same length as the source (stripped regions become spaces, newlines
+/// survive), so byte offsets map straight to source lines.
+struct Pre {
+    /// Comments and string/char literals blanked.
+    stripped: String,
+    /// `stripped` with every `#[cfg(test)]` item additionally blanked.
+    excised: String,
+    /// Byte offset of the start of each line.
+    line_starts: Vec<usize>,
+    /// Allow marker (if any) per 0-based line.
+    allows: Vec<Option<Allow>>,
+}
+
+impl Pre {
+    fn new(src: &str) -> Pre {
+        let stripped = strip_comments_and_literals(src);
+        let excised = excise_test_items(&stripped);
+        let mut line_starts = vec![0usize];
+        for (i, b) in src.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        Pre {
+            stripped,
+            excised,
+            line_starts,
+            allows: parse_allows(src),
+        }
+    }
+}
+
+// ---- text preprocessing ------------------------------------------------
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn prev_ident(b: &[u8], i: usize) -> bool {
+    i > 0 && is_ident(b[i - 1])
+}
+
+fn blank(out: &mut Vec<u8>, b: &[u8], from: usize, to: usize) {
+    for &byte in &b[from..to.min(b.len())] {
+        out.push(if byte == b'\n' { b'\n' } else { b' ' });
+    }
+}
+
+/// `r"…"`, `r#"…"#`, `br"…"` openers.
+fn is_raw_start(b: &[u8], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return false;
+    }
+    j += 1;
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+/// End (exclusive) of the raw string starting at `i`.
+fn raw_string_end(b: &[u8], i: usize) -> usize {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    j += 1; // the `r`
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    j += 1; // the opening quote
+    while j < b.len() {
+        if b[j] == b'"' {
+            let mut k = 0usize;
+            while k < hashes && b.get(j + 1 + k) == Some(&b'#') {
+                k += 1;
+            }
+            if k == hashes {
+                return j + 1 + hashes;
+            }
+        }
+        j += 1;
+    }
+    b.len()
+}
+
+/// If a char/byte literal starts at the quote `b[i]`, its end
+/// (exclusive); `None` means the quote is a lifetime.
+fn char_lit_end(b: &[u8], i: usize) -> Option<usize> {
+    let n = *b.get(i + 1)?;
+    if n == b'\\' {
+        // Escape: the escaped char is at i+2, so the closing quote is at
+        // i+3 at the earliest ('\u{…}' runs longer; cap the scan).
+        let limit = (i + 14).min(b.len());
+        (i + 3..limit).find(|&j| b[j] == b'\'').map(|j| j + 1)
+    } else if n == b'\'' {
+        None
+    } else if b.get(i + 2) == Some(&b'\'') {
+        Some(i + 3)
+    } else if n >= 0x80 {
+        // Multibyte scalar like 'é': closing quote within a few bytes.
+        let limit = (i + 7).min(b.len());
+        (i + 2..limit).find(|&j| b[j] == b'\'').map(|j| j + 1)
+    } else {
+        None
+    }
+}
+
+/// Replace comments, string/char literals, and raw strings with spaces,
+/// preserving newlines (and therefore every byte offset and line number).
+fn strip_comments_and_literals(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let mut j = i;
+            while j < b.len() && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, b, i, j);
+            i = j;
+        } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1i32;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(b.len());
+            blank(&mut out, b, i, j);
+            i = j;
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < b.len() {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(b.len());
+            blank(&mut out, b, i, j);
+            i = j;
+        } else if (c == b'r' || c == b'b') && !prev_ident(b, i) && is_raw_start(b, i) {
+            let j = raw_string_end(b, i);
+            blank(&mut out, b, i, j);
+            i = j;
+        } else if c == b'b' && b.get(i + 1) == Some(&b'\'') {
+            match char_lit_end(b, i + 1) {
+                Some(j) => {
+                    blank(&mut out, b, i, j);
+                    i = j;
+                }
+                None => {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+        } else if c == b'\'' {
+            match char_lit_end(b, i) {
+                Some(j) => {
+                    blank(&mut out, b, i, j);
+                    i = j;
+                }
+                None => {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).unwrap_or_default()
+}
+
+/// Blank every item decorated with `#[cfg(test)]` (attribute through the
+/// item's closing brace or semicolon). Operates on stripped text, so
+/// braces inside literals cannot confuse the matcher.
+fn excise_test_items(stripped: &str) -> String {
+    const MARKER: &[u8] = b"#[cfg(test)]";
+    let mut buf = stripped.as_bytes().to_vec();
+    while let Some(pos) = find_sub(&buf, MARKER, 0) {
+        let mut end = buf.len();
+        let mut j = pos + MARKER.len();
+        while j < buf.len() {
+            match buf[j] {
+                b'{' => {
+                    end = match_brace(&buf, j) + 1;
+                    break;
+                }
+                b';' => {
+                    end = j + 1;
+                    break;
+                }
+                _ => j += 1,
+            }
+        }
+        let end = end.min(buf.len());
+        for byte in &mut buf[pos..end] {
+            if *byte != b'\n' {
+                *byte = b' ';
+            }
+        }
+    }
+    String::from_utf8(buf).unwrap_or_default()
+}
+
+/// Index of the `}` matching the `{` at `open` (or `len` if unmatched).
+fn match_brace(hay: &[u8], open: usize) -> usize {
+    let mut depth = 0i64;
+    for (i, &b) in hay.iter().enumerate().skip(open) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth <= 0 {
+                    return i;
+                }
+            }
+            _ => {}
+        }
+    }
+    hay.len()
+}
+
+fn find_sub(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+/// 1-based line number of byte offset `pos`.
+fn line_of(line_starts: &[usize], pos: usize) -> usize {
+    match line_starts.binary_search(&pos) {
+        Ok(i) => i + 1,
+        Err(i) => i,
+    }
+}
+
+fn parse_allows(src: &str) -> Vec<Option<Allow>> {
+    src.lines()
+        .map(|line| {
+            let comment = &line[line.find("//")?..];
+            let at = comment.find("lint: allow(")?;
+            let rest = &comment[at + "lint: allow(".len()..];
+            let close = rest.find(')')?;
+            let rule = rest[..close].trim().to_string();
+            let just = rest[close + 1..]
+                .trim_start_matches(|ch: char| {
+                    ch.is_whitespace() || matches!(ch, '\u{2014}' | '\u{2013}' | '-' | ':' | ',')
+                })
+                .trim();
+            Some(Allow {
+                rule,
+                justified: just.chars().count() >= 8,
+            })
+        })
+        .collect()
+}
+
+/// The covering allow marker for `rule` at 1-based `line`, if any.
+fn find_allow<'a>(allows: &'a [Option<Allow>], line: usize, rule: &str) -> Option<&'a Allow> {
+    let hi = line.min(allows.len());
+    let lo = line.saturating_sub(ALLOW_WINDOW + 1);
+    allows[lo..hi].iter().rev().flatten().find(|a| a.rule == rule)
+}
+
+fn flag(
+    out: &mut Vec<Violation>,
+    pre: &Pre,
+    file: &str,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+) {
+    match find_allow(&pre.allows, line, rule) {
+        Some(a) if a.justified => {}
+        Some(_) => out.push(Violation {
+            file: file.to_string(),
+            line,
+            rule,
+            msg: format!("`lint: allow({rule})` marker lacks a justification — {msg}"),
+        }),
+        None => out.push(Violation {
+            file: file.to_string(),
+            line,
+            rule,
+            msg,
+        }),
+    }
+}
+
+// ---- the five rules ----------------------------------------------------
+
+fn rule_panic(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
+    let scoped = file.starts_with("protocol/")
+        || file.starts_with("net/")
+        || PANIC_FREE_COORDINATOR.contains(&file);
+    if !scoped {
+        return;
+    }
+    let hay = pre.excised.as_bytes();
+    for (tok, boundary) in [
+        (".unwrap()", false),
+        (".expect(", false),
+        ("panic!(", true),
+        ("unreachable!(", true),
+    ] {
+        let mut from = 0usize;
+        while let Some(pos) = find_sub(hay, tok.as_bytes(), from) {
+            from = pos + 1;
+            if boundary && prev_ident(hay, pos) {
+                continue;
+            }
+            let line = line_of(&pre.line_starts, pos);
+            flag(
+                out,
+                pre,
+                file,
+                line,
+                "panic",
+                format!(
+                    "`{tok}…` in a panic-free module — return a typed error, \
+                     or add `// lint: allow(panic) — <why>`"
+                ),
+            );
+        }
+    }
+}
+
+fn rule_secret(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
+    let hay = pre.stripped.as_bytes();
+    let lines: Vec<&str> = pre.stripped.lines().collect();
+    for ty in SECRET_TYPES {
+        // (a) the definition must not derive Debug.
+        let needle = format!("struct {ty}");
+        let mut from = 0usize;
+        while let Some(pos) = find_sub(hay, needle.as_bytes(), from) {
+            from = pos + 1;
+            let end = pos + needle.len();
+            if prev_ident(hay, pos) || (end < hay.len() && is_ident(hay[end])) {
+                continue;
+            }
+            let defn_line = line_of(&pre.line_starts, pos);
+            let mut l = defn_line - 1; // 0-based index of the defn line
+            let mut steps = 0usize;
+            while l > 0 && steps < 15 {
+                l -= 1;
+                steps += 1;
+                let t = lines.get(l).map(|s| s.trim()).unwrap_or("");
+                if t.is_empty() {
+                    continue;
+                }
+                if !t.starts_with("#[") {
+                    break;
+                }
+                if t.contains("derive") && t.contains("Debug") {
+                    flag(
+                        out,
+                        pre,
+                        file,
+                        l + 1,
+                        "secret-debug",
+                        format!("secret type `{ty}` derives Debug — key material must not be formattable"),
+                    );
+                }
+            }
+        }
+        // (b) no manual Debug/Display impl either.
+        for imp in ["Debug for ", "Display for "] {
+            let needle = format!("{imp}{ty}");
+            let mut from = 0usize;
+            while let Some(pos) = find_sub(hay, needle.as_bytes(), from) {
+                from = pos + 1;
+                let end = pos + needle.len();
+                if prev_ident(hay, pos) || (end < hay.len() && is_ident(hay[end])) {
+                    continue;
+                }
+                let line = line_of(&pre.line_starts, pos);
+                flag(
+                    out,
+                    pre,
+                    file,
+                    line,
+                    "secret-debug",
+                    format!("manual `{imp}{ty}` impl — key material must not be formattable"),
+                );
+            }
+        }
+    }
+}
+
+fn rule_decode_bounds(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
+    if !DECODE_BOUND_FILES.contains(&file) {
+        return;
+    }
+    let hay = pre.excised.as_bytes();
+    for prefix in ["fn decode_", "fn read_"] {
+        let mut from = 0usize;
+        while let Some(pos) = find_sub(hay, prefix.as_bytes(), from) {
+            from = pos + 1;
+            if prev_ident(hay, pos) {
+                continue;
+            }
+            let name_start = pos + 3; // past "fn "
+            let mut name_end = name_start;
+            while name_end < hay.len() && is_ident(hay[name_end]) {
+                name_end += 1;
+            }
+            let name = String::from_utf8_lossy(&hay[name_start..name_end]).into_owned();
+            let Some(open) = find_sub(hay, b"{", pos) else {
+                continue;
+            };
+            let close = match_brace(hay, open);
+            let body = &hay[open..close];
+            let alloc = [
+                find_sub(body, b"with_capacity", 0),
+                find_sub(body, b"vec![0", 0),
+            ]
+            .into_iter()
+            .flatten()
+            .min();
+            let Some(alloc) = alloc else { continue };
+            let cap = [
+                find_sub(body, b"MAX_WIRE_", 0),
+                find_sub(body, b"MAX_FRAME_", 0),
+            ]
+            .into_iter()
+            .flatten()
+            .min();
+            if !cap.is_some_and(|c| c < alloc) {
+                let line = line_of(&pre.line_starts, open + alloc);
+                flag(
+                    out,
+                    pre,
+                    file,
+                    line,
+                    "decode-bounds",
+                    format!(
+                        "`{name}` allocates from a wire-derived length before \
+                         checking a MAX_WIRE_*/MAX_FRAME_* cap"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+fn rule_determinism(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
+    let scoped = file.starts_with("dpf/")
+        || file.starts_with("crypto/")
+        || file.starts_with("protocol/");
+    if !scoped {
+        return;
+    }
+    let hay = pre.excised.as_bytes();
+    for tok in ["Instant::now", "SystemTime", "rand::"] {
+        let mut from = 0usize;
+        while let Some(pos) = find_sub(hay, tok.as_bytes(), from) {
+            from = pos + 1;
+            if prev_ident(hay, pos) {
+                continue;
+            }
+            let line = line_of(&pre.line_starts, pos);
+            flag(
+                out,
+                pre,
+                file,
+                line,
+                "determinism",
+                format!(
+                    "`{tok}` in the deterministic core — thread clocks and \
+                     entropy in from the caller instead"
+                ),
+            );
+        }
+    }
+}
+
+fn rule_deprecated(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
+    let hay = pre.excised.as_bytes();
+    let mut from = 0usize;
+    while let Some(pos) = find_sub(hay, b"#[allow(deprecated)]", from) {
+        from = pos + 1;
+        let line = line_of(&pre.line_starts, pos);
+        flag(
+            out,
+            pre,
+            file,
+            line,
+            "deprecated",
+            "deprecated API use outside a labelled equivalence test — migrate, \
+             or add `// lint: allow(deprecated) — <why>`"
+                .to_string(),
+        );
+    }
+}
+
+// ---- driver ------------------------------------------------------------
+
+fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
+    let pre = Pre::new(src);
+    let mut out = Vec::new();
+    rule_panic(rel, &pre, &mut out);
+    rule_secret(rel, &pre, &mut out);
+    rule_decode_bounds(rel, &pre, &mut out);
+    rule_determinism(rel, &pre, &mut out);
+    rule_deprecated(rel, &pre, &mut out);
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn lint_tree(src_root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    let mut out = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(src_root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = std::fs::read_to_string(f)?;
+        out.extend(lint_file(&rel, &text));
+    }
+    Ok(out)
+}
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo run -p xtask -- lint [--root <repo>]");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cmd: Option<&str> = None;
+    let mut root: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
+            "lint" if cmd.is_none() => cmd = Some("lint"),
+            _ => return usage(),
+        }
+    }
+    if cmd != Some("lint") {
+        return usage();
+    }
+    let root = root.unwrap_or_else(|| {
+        std::env::var_os("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .and_then(|d| d.parent().map(Path::to_path_buf))
+            .unwrap_or_else(|| PathBuf::from("."))
+    });
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        eprintln!(
+            "lint: {} is not a directory (run from the repo root or pass --root)",
+            src.display()
+        );
+        return ExitCode::from(2);
+    }
+    match lint_tree(&src) {
+        Err(e) => {
+            eprintln!("lint: walking {}: {e}", src.display());
+            ExitCode::from(2)
+        }
+        Ok(vs) if vs.is_empty() => {
+            println!("lint: rust/src clean (panic, secret-debug, decode-bounds, determinism, deprecated)");
+            ExitCode::SUCCESS
+        }
+        Ok(vs) => {
+            for v in &vs {
+                eprintln!("{v}");
+            }
+            eprintln!("lint: {} violation(s)", vs.len());
+            ExitCode::from(1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn strip_blanks_comments_and_literals() {
+        let src = "let a = \"panic!(x)\"; // .unwrap()\nlet c = 'x';\n";
+        let s = strip_comments_and_literals(src);
+        assert_eq!(s.len(), src.len());
+        assert!(!s.contains("panic!"));
+        assert!(!s.contains(".unwrap()"));
+        assert!(s.contains("let a ="));
+        assert!(s.lines().count() == src.lines().count());
+    }
+
+    #[test]
+    fn strip_keeps_lifetimes_but_blanks_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> char { '\\n' }";
+        let s = strip_comments_and_literals(src);
+        assert!(s.contains("<'a>"), "lifetime survived: {s}");
+        assert!(!s.contains("\\n"), "char literal blanked: {s}");
+    }
+
+    #[test]
+    fn strip_handles_raw_strings() {
+        let src = "let r = r#\"has .unwrap() inside\"#; let x = 1;";
+        let s = strip_comments_and_literals(src);
+        assert!(!s.contains(".unwrap()"));
+        assert!(s.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn excision_blanks_test_mods() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let e = excise_test_items(&strip_comments_and_literals(src));
+        assert!(e.contains("fn live()"));
+        assert!(!e.contains("unwrap"));
+    }
+
+    #[test]
+    fn fixture_panic_is_rejected() {
+        let vs = lint_file(
+            "protocol/bad_panic.rs",
+            include_str!("../fixtures/bad_panic.rs"),
+        );
+        assert!(rules_of(&vs).contains(&"panic"), "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_unjustified_allow_is_rejected() {
+        let vs = lint_file(
+            "protocol/bad_allow.rs",
+            include_str!("../fixtures/bad_allow_unjustified.rs"),
+        );
+        assert!(rules_of(&vs).contains(&"panic"), "{vs:?}");
+        assert!(vs.iter().any(|v| v.msg.contains("justification")), "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_secret_debug_is_rejected() {
+        let vs = lint_file(
+            "dpf/bad_secret.rs",
+            include_str!("../fixtures/bad_secret_debug.rs"),
+        );
+        assert!(rules_of(&vs).contains(&"secret-debug"), "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_unbounded_decode_is_rejected() {
+        let vs = lint_file(
+            "protocol/msg.rs",
+            include_str!("../fixtures/bad_decode_unbounded.rs"),
+        );
+        assert!(rules_of(&vs).contains(&"decode-bounds"), "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_nondeterminism_is_rejected() {
+        let vs = lint_file(
+            "dpf/bad_time.rs",
+            include_str!("../fixtures/bad_nondeterminism.rs"),
+        );
+        assert!(rules_of(&vs).contains(&"determinism"), "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_deprecated_is_rejected() {
+        let vs = lint_file(
+            "coordinator/bad_deprecated.rs",
+            include_str!("../fixtures/bad_deprecated.rs"),
+        );
+        assert!(rules_of(&vs).contains(&"deprecated"), "{vs:?}");
+    }
+
+    #[test]
+    fn fixture_clean_passes_every_rule() {
+        let vs = lint_file("protocol/clean.rs", include_str!("../fixtures/clean.rs"));
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn out_of_scope_files_may_panic() {
+        let vs = lint_file("metrics/report.rs", "fn f(x: Option<u8>) -> u8 { x.unwrap() }");
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    /// The acceptance gate: the real tree is clean under all five rules.
+    #[test]
+    fn repo_tree_is_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("xtask sits inside the repo")
+            .join("rust")
+            .join("src");
+        let vs = lint_tree(&src).expect("walk rust/src");
+        let rendered: Vec<String> = vs.iter().map(|v| v.to_string()).collect();
+        assert!(vs.is_empty(), "lint violations:\n{}", rendered.join("\n"));
+    }
+}

@@ -3,8 +3,10 @@
 //! serially vs through the sharded [`RetrievalEngine`].
 //!
 //! Every deployed client retrieves its submodel before it trains, so this
-//! is the path a production service hammers hardest; the datapoint lands
-//! in `BENCH_psr.json` to start the retrieval perf trajectory.
+//! is the path a production service hammers hardest; the datapoint is
+//! appended to `artifacts/HISTORY.jsonl` (see [`fsl::metrics::history`])
+//! so the retrieval perf trajectory persists across revisions —
+//! `cargo run -p xtask -- bench-diff` compares the two newest datapoints.
 //!
 //! Defaults: m = 2^14, k = 512 (B ≈ 650 bins), 8 clients — comfortably
 //! above the ≥ 8 bins × ≥ 4 clients floor where sharding must win.
@@ -83,14 +85,20 @@ fn main() {
     println!("sharded,{},{sharded_ms:.2}", sharded.threads());
     println!("# speedup: {speedup:.2}x");
 
-    let json = format!(
-        "{{\"bench\":\"psr_serving\",\"m\":{m},\"k\":{k},\"clients\":{clients},\
-         \"bins\":{bins},\"workers\":{},\"serial_ms\":{serial_ms:.3},\
-         \"sharded_ms\":{sharded_ms:.3},\"speedup\":{speedup:.3}}}\n",
-        sharded.threads()
-    );
-    match std::fs::write("BENCH_psr.json", &json) {
-        Ok(()) => println!("# wrote BENCH_psr.json"),
-        Err(e) => eprintln!("# could not write BENCH_psr.json: {e}"),
+    let path = fsl::metrics::history::default_path();
+    let workers = sharded.threads() as u64;
+    match fsl::metrics::history::append_with(&path, "psr_serving", |metrics| {
+        metrics
+            .field_u64("m", m)
+            .field_u64("k", k as u64)
+            .field_u64("clients", clients as u64)
+            .field_u64("bins", bins as u64)
+            .field_u64("workers", workers)
+            .field_f64("serial_ms", serial_ms, 3)
+            .field_f64("sharded_ms", sharded_ms, 3)
+            .field_f64("speedup", speedup, 3);
+    }) {
+        Ok(line) => println!("# appended to {}: {line}", path.display()),
+        Err(e) => eprintln!("# could not append to {}: {e}", path.display()),
     }
 }

@@ -6,8 +6,9 @@
 //! serve once, tear everything down. The persistent path builds one
 //! runtime and drives the same rounds through its living command loop.
 //! Both paths consume identical rng streams, so the reconstructed deltas
-//! are asserted bit-identical round by round; the datapoint lands in
-//! `BENCH_round.json`.
+//! are asserted bit-identical round by round; the datapoint is appended
+//! to `artifacts/HISTORY.jsonl` (see [`fsl::metrics::history`]), where
+//! `cargo run -p xtask -- bench-diff` watches the trajectory.
 //!
 //! `FSL_FULL=1` widens the grid; `FSL_THREADS` follows the shared bench
 //! convention (unset → serial engines, so timings are reproducible).
@@ -110,19 +111,21 @@ fn main() {
         oneshot_ms - persistent_ms
     );
 
-    let json = format!(
-        "{{\"bench\":\"round_runtime\",\"m\":{m},\"k\":{k},\"clients\":{clients},\
-         \"rounds\":{ROUNDS},\"workers\":{threads},\
-         \"oneshot_mean_round_ms\":{oneshot_ms:.3},\
-         \"persistent_mean_round_ms\":{persistent_ms:.3},\
-         \"oneshot_total_ms\":{:.3},\"persistent_total_ms\":{:.3},\
-         \"amortised_ms_per_round\":{:.3}}}\n",
-        ms(oneshot_total),
-        ms(persistent_total),
-        oneshot_ms - persistent_ms
-    );
-    match std::fs::write("BENCH_round.json", &json) {
-        Ok(()) => println!("# wrote BENCH_round.json"),
-        Err(e) => eprintln!("# could not write BENCH_round.json: {e}"),
+    let path = fsl::metrics::history::default_path();
+    match fsl::metrics::history::append_with(&path, "round_runtime", |metrics| {
+        metrics
+            .field_u64("m", m)
+            .field_u64("k", k as u64)
+            .field_u64("clients", clients as u64)
+            .field_u64("rounds", ROUNDS as u64)
+            .field_u64("workers", threads as u64)
+            .field_f64("oneshot_mean_round_ms", oneshot_ms, 3)
+            .field_f64("persistent_mean_round_ms", persistent_ms, 3)
+            .field_f64("oneshot_total_ms", ms(oneshot_total), 3)
+            .field_f64("persistent_total_ms", ms(persistent_total), 3)
+            .field_f64("amortised_ms_per_round", oneshot_ms - persistent_ms, 3);
+    }) {
+        Ok(line) => println!("# appended to {}: {line}", path.display()),
+        Err(e) => eprintln!("# could not append to {}: {e}", path.display()),
     }
 }

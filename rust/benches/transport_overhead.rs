@@ -5,10 +5,12 @@
 //! Both drivers consume identical rng streams, so the retrieved
 //! submodels and the reconstructed delta are asserted bit-identical —
 //! the transport must never change a result, only its cost. The
-//! datapoint lands in `BENCH_transport.json` with both transports'
-//! per-party bytes (client upload/download, `S_0 ↔ S_1` exchange) and
-//! wall times; TCP bytes include its 7-byte-per-message framing, which
-//! is the honest wire truth.
+//! datapoint is appended to `artifacts/HISTORY.jsonl` (see
+//! [`fsl::metrics::history`]) with both transports' per-party bytes
+//! (client upload/download, `S_0 ↔ S_1` exchange) and wall times; TCP
+//! bytes include its 7-byte-per-message framing, which is the honest
+//! wire truth. `cargo run -p xtask -- bench-diff` fails on any wire-byte
+//! regression between the two newest datapoints.
 //!
 //! `FSL_FULL=1` widens the grid; `FSL_THREADS` follows the shared bench
 //! convention (unset → serial engines, so timings are reproducible).
@@ -37,15 +39,12 @@ fn ms(d: Duration) -> f64 {
     d.as_secs_f64() * 1e3
 }
 
-fn report_json(tag: &str, r: &RoundReport) -> String {
-    format!(
-        "\"{tag}_wall_ms\":{:.3},\"{tag}_client_upload_bytes\":{},\
-         \"{tag}_client_download_bytes\":{},\"{tag}_server_exchange_bytes\":{}",
-        ms(r.wall_time),
-        r.client_upload_bytes,
-        r.client_download_bytes,
-        r.server_exchange_bytes
-    )
+fn report_metrics(metrics: &mut fsl::metrics::json::JsonObj, tag: &str, r: &RoundReport) {
+    metrics
+        .field_f64(&format!("{tag}_wall_ms"), ms(r.wall_time), 3)
+        .field_u64(&format!("{tag}_client_upload_bytes"), r.client_upload_bytes)
+        .field_u64(&format!("{tag}_client_download_bytes"), r.client_download_bytes)
+        .field_u64(&format!("{tag}_server_exchange_bytes"), r.server_exchange_bytes);
 }
 
 fn main() {
@@ -145,16 +144,19 @@ fn main() {
         );
     }
 
-    let json = format!(
-        "{{\"bench\":\"transport_overhead\",\"m\":{m},\"k\":{k},\"clients\":{clients},\
-         \"workers\":{threads},{},{},{},{}}}\n",
-        report_json("inproc_psr", &psr_inproc.report),
-        report_json("tcp_psr", &psr_tcp.report),
-        report_json("inproc_ssa", &ssa_inproc.report),
-        report_json("tcp_ssa", &ssa_tcp.report),
-    );
-    match std::fs::write("BENCH_transport.json", &json) {
-        Ok(()) => println!("# wrote BENCH_transport.json"),
-        Err(e) => eprintln!("# could not write BENCH_transport.json: {e}"),
+    let path = fsl::metrics::history::default_path();
+    match fsl::metrics::history::append_with(&path, "transport_overhead", |metrics| {
+        metrics
+            .field_u64("m", m)
+            .field_u64("k", k as u64)
+            .field_u64("clients", clients as u64)
+            .field_u64("workers", threads as u64);
+        report_metrics(metrics, "inproc_psr", &psr_inproc.report);
+        report_metrics(metrics, "tcp_psr", &psr_tcp.report);
+        report_metrics(metrics, "inproc_ssa", &ssa_inproc.report);
+        report_metrics(metrics, "tcp_ssa", &ssa_tcp.report);
+    }) {
+        Ok(line) => println!("# appended to {}: {line}", path.display()),
+        Err(e) => eprintln!("# could not append to {}: {e}", path.display()),
     }
 }

@@ -39,6 +39,12 @@ pub struct FslConfig {
     /// in-process; the paper enables multi-threading for all
     /// experiments, §7.2).
     pub threads: usize,
+    /// Tolerant-round upload deadline: `Some(d)` bounds every per-client
+    /// upload receive by `d` and lets rounds complete on the surviving
+    /// cohort; `None` (the default) keeps rounds strict. Must be positive
+    /// when set — the wire encodes "strict" as zero nanoseconds, so an
+    /// explicit zero is ambiguous and rejected by [`Self::validate`].
+    pub upload_deadline: Option<std::time::Duration>,
 }
 
 impl Default for FslConfig {
@@ -58,6 +64,7 @@ impl Default for FslConfig {
             bandwidth_bps: 0,
             eval_every: 10,
             threads: 0,
+            upload_deadline: None,
         }
     }
 }
@@ -93,6 +100,13 @@ impl FslConfig {
                 "compression must be in (0, 1], got {}: it is the top-k rate c = k/m \
                  (CLI: c=0.1 keeps 10% of the weights)",
                 self.compression
+            ));
+        }
+        if self.upload_deadline == Some(std::time::Duration::ZERO) {
+            return Err(anyhow!(
+                "upload_deadline must be positive when set: the wire encodes \"strict \
+                 round\" as zero nanoseconds, so an explicit zero would be silently read \
+                 back as no deadline (leave upload_deadline unset for strict rounds)"
             ));
         }
         Ok(())
@@ -134,13 +148,16 @@ mod tests {
     #[test]
     fn validation_catches_out_of_range_values() {
         assert!(FslConfig::default().validate().is_ok());
-        let cases: [(&str, fn(&mut FslConfig)); 6] = [
+        let cases: [(&str, fn(&mut FslConfig)); 7] = [
             ("num_clients", |c| c.num_clients = 0),
             ("rounds", |c| c.rounds = 0),
             ("participation", |c| c.participation = 0.0),
             ("participation", |c| c.participation = 1.5),
             ("compression", |c| c.compression = 0.0),
             ("compression", |c| c.compression = f64::NAN),
+            ("upload_deadline", |c| {
+                c.upload_deadline = Some(std::time::Duration::ZERO)
+            }),
         ];
         for (field, poke) in cases {
             let mut cfg = FslConfig::default();

@@ -53,6 +53,8 @@ use crate::crypto::field::Fp;
 use crate::crypto::rng::Rng;
 use crate::dpf::MasterKeyBatch;
 use crate::group::Group;
+use crate::metrics::json::{self, JsonObj};
+use crate::metrics::trace::{self, Party, Phase, Span, TraceRecorder, TraceSink};
 use crate::metrics::CommMeter;
 use crate::net::{self, LinkProfile};
 use crate::net::transport::tcp::{TcpOptions, TcpTransport};
@@ -171,6 +173,10 @@ pub struct RoundReport {
     /// rounds report every client `Completed` (a failure would have
     /// aborted the round instead).
     pub outcomes: Vec<ClientOutcome>,
+    /// Per-phase spans from every participant (driver + both servers),
+    /// party-tagged. Export with [`RoundReport::trace_json`] /
+    /// [`RoundReport::write_trace`].
+    pub spans: Vec<Span>,
 }
 
 impl RoundReport {
@@ -182,32 +188,49 @@ impl RoundReport {
             .count()
     }
 
+    /// Schema version stamped into every [`RoundReport::to_json`] line.
+    /// Bump on any breaking field change.
+    pub const JSON_SCHEMA: u64 = 1;
+
     /// One-line JSON rendering for machine consumption (the CLI's
     /// `--json` mode, multi-process CI assertions, dashboards). Times are
-    /// fractional milliseconds; byte fields are exact.
+    /// fractional milliseconds; byte fields are exact; string fields are
+    /// escaped by the shared [`crate::metrics::json`] writer.
     pub fn to_json(&self) -> String {
         let ms = |d: Duration| d.as_secs_f64() * 1e3;
-        let outcomes = self
-            .outcomes
-            .iter()
-            .map(|o| format!("\"{}\"", o.as_str()))
-            .collect::<Vec<_>>()
-            .join(",");
-        format!(
-            "{{\"kind\":\"{}\",\"clients\":{},\"client_upload_bytes\":{},\
-             \"client_download_bytes\":{},\"server_exchange_bytes\":{},\
-             \"gen_ms\":{:.3},\"server_ms\":{:.3},\"wall_ms\":{:.3},\
-             \"outcomes\":[{}]}}",
-            self.kind.as_str(),
-            self.clients,
-            self.client_upload_bytes,
-            self.client_download_bytes,
-            self.server_exchange_bytes,
-            ms(self.gen_time),
-            ms(self.server_time),
-            ms(self.wall_time),
-            outcomes,
-        )
+        let mut o = JsonObj::new();
+        o.field_u64("schema", Self::JSON_SCHEMA)
+            .field_str("kind", self.kind.as_str())
+            .field_u64("clients", self.clients as u64)
+            .field_u64("client_upload_bytes", self.client_upload_bytes)
+            .field_u64("client_download_bytes", self.client_download_bytes)
+            .field_u64("server_exchange_bytes", self.server_exchange_bytes)
+            .field_f64("gen_ms", ms(self.gen_time), 3)
+            .field_f64("server_ms", ms(self.server_time), 3)
+            .field_f64("wall_ms", ms(self.wall_time), 3)
+            .field_raw(
+                "outcomes",
+                &json::array(self.outcomes.iter().map(|o| json::string(o.as_str()))),
+            )
+            .field_u64("spans", self.spans.len() as u64);
+        o.finish()
+    }
+
+    /// This round's spans as a Chrome trace-event JSON document —
+    /// loadable directly in Perfetto / `chrome://tracing`.
+    pub fn trace_json(&self) -> String {
+        trace::chrome_trace_json(&self.spans)
+    }
+
+    /// Write [`RoundReport::trace_json`] to `path` (the CLI's
+    /// `trace=PATH` option), creating parent directories as needed.
+    pub fn write_trace(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.trace_json())
     }
 }
 
@@ -330,11 +353,15 @@ impl FslRuntimeBuilder {
                 ..cfg.cuckoo
             },
         };
-        Ok(Self::new(params)
+        let mut builder = Self::new(params)
             .latency(Duration::from_micros(cfg.latency_us))
             .bandwidth(cfg.bandwidth_bps)
             .threads(cfg.threads)
-            .max_clients(cfg.participants()))
+            .max_clients(cfg.participants());
+        if let Some(deadline) = cfg.upload_deadline {
+            builder = builder.upload_deadline(deadline);
+        }
+        Ok(builder)
     }
 
     /// Start from a PSU-union domain known up front (validated at build;
@@ -393,10 +420,26 @@ impl FslRuntimeBuilder {
     /// surviving cohort, recording per-client [`ClientOutcome`]s in the
     /// [`RoundReport`]. Without a deadline (the default) rounds are
     /// strict: any client failure aborts the round and poisons the
-    /// runtime, the historical behaviour.
+    /// runtime, the historical behaviour. `deadline` must be positive —
+    /// the wire encodes "strict" as zero nanoseconds, so an explicit
+    /// `Duration::ZERO` here is ambiguous and fails at build/connect.
     pub fn upload_deadline(mut self, deadline: Duration) -> Self {
         self.upload_deadline = Some(deadline);
         self
+    }
+
+    /// Reject the ambiguous zero deadline: the wire's `deadline_nanos`
+    /// field uses `0` as the "strict round" sentinel, so an explicitly
+    /// configured zero would silently come out the other side as "no
+    /// deadline at all" instead of "drop everyone instantly".
+    fn check_deadline(&self) -> Result<()> {
+        ensure!(
+            self.upload_deadline != Some(Duration::ZERO),
+            "upload_deadline must be positive: zero is the wire's \"strict round\" sentinel \
+             and would be silently read back as no deadline (omit upload_deadline for \
+             strict rounds)"
+        );
+        Ok(())
     }
 
     /// Inject a deterministic [`FaultPlan`] on client `i`'s links (both
@@ -472,6 +515,7 @@ impl FslRuntimeBuilder {
             self.max_clients >= 1,
             "runtime capacity must be at least one client (got max_clients = 0)"
         );
+        self.check_deadline()?;
         let session = Arc::new(Self::make_session(self.spec)?);
         let profile = LinkProfile {
             latency: self.latency,
@@ -487,11 +531,13 @@ impl FslRuntimeBuilder {
         for (party, eps, inter) in [(0u8, eps0, inter0), (1u8, eps1, inter1)] {
             let (ctx, crx) = channel::<ServerCmd<G>>();
             let (rtx, rrx) = channel::<ServerReply<G>>();
+            let rec = TraceRecorder::shared(trace::DEFAULT_TRACE_CAPACITY);
+            let sink = TraceSink::new(rec.clone(), Party::server(usize::from(party)));
             let server = ServerHalf {
                 party,
                 session: session.clone(),
-                agg: AggregationEngine::with_sharding(sharding),
-                ret: RetrievalEngine::with_sharding(sharding),
+                agg: AggregationEngine::with_sharding(sharding).with_trace(sink.clone()),
+                ret: RetrievalEngine::with_sharding(sharding).with_trace(sink),
                 eps: eps
                     .into_iter()
                     .map(|e| Box::new(InProc(e)) as BoxTransport)
@@ -503,6 +549,7 @@ impl FslRuntimeBuilder {
                 udpf_total: 0,
                 dead: Vec::new(),
                 timeout: self.reply_timeout,
+                trace: rec,
             };
             let handle = std::thread::Builder::new()
                 .name(format!("fsl-server-{party}"))
@@ -539,6 +586,7 @@ impl FslRuntimeBuilder {
             udpf_selections: Vec::new(),
             udpf_epoch: 0,
             poisoned: None,
+            trace: TraceRecorder::shared(trace::DEFAULT_TRACE_CAPACITY),
         })
     }
 
@@ -564,6 +612,7 @@ impl FslRuntimeBuilder {
             self.max_clients >= 1,
             "runtime capacity must be at least one client (got max_clients = 0)"
         );
+        self.check_deadline()?;
         let session = Arc::new(Self::make_session(self.spec)?);
         let opts = TcpOptions {
             handshake_timeout: self.connect_timeout,
@@ -576,7 +625,7 @@ impl FslRuntimeBuilder {
             let hello = Hello {
                 party,
                 role: Role::Control {
-                    max_clients: n as u32,
+                    max_clients: wire_u32(n, "max_clients")?,
                     m: session.params.m,
                     k: session.params.k as u64,
                     group: group.clone(),
@@ -590,7 +639,9 @@ impl FslRuntimeBuilder {
                     addr,
                     &Hello {
                         party,
-                        role: Role::Client { id: id as u32 },
+                        role: Role::Client {
+                            id: wire_u32(id, "client link id")?,
+                        },
                     },
                     &opts,
                     self.connect_retry,
@@ -630,6 +681,7 @@ impl FslRuntimeBuilder {
             udpf_selections: Vec::new(),
             udpf_epoch: 0,
             poisoned: None,
+            trace: TraceRecorder::shared(trace::DEFAULT_TRACE_CAPACITY),
         };
         // S_1 first: S_0 is still blocked accepting the peer link, which
         // S_1 dials on DialPeer. Only then does S_0's command loop start.
@@ -646,6 +698,15 @@ impl FslRuntimeBuilder {
         rt.expect_ack(0, "installing the session on S0")?;
         Ok(rt)
     }
+}
+
+/// Narrow a count for the wire: the protocol's header fields are `u32`,
+/// and an `as` cast would silently truncate an oversized 64-bit count
+/// into a different, valid-looking value on the far side. `try_from`
+/// turns overflow into a typed error instead (see the `cast-truncation`
+/// fsl-lint rule covering this file and `wire.rs`).
+fn wire_u32(value: usize, what: &str) -> Result<u32> {
+    u32::try_from(value).map_err(|_| anyhow!("{what} = {value} exceeds the wire's u32 range"))
 }
 
 /// Dial one TCP link, retrying refused/failed connections with
@@ -769,6 +830,10 @@ pub struct FslRuntime<G: Group> {
     /// Set when a server reply failed or timed out: the reply streams may
     /// be desynchronised, so every later round refuses to run.
     poisoned: Option<String>,
+    /// Driver-side span recorder (client-party keygen/upload/reply
+    /// spans); server spans arrive in the round replies and the two
+    /// streams merge into [`RoundReport::spans`].
+    trace: Arc<TraceRecorder>,
 }
 
 impl<G: Group> FslRuntime<G> {
@@ -826,9 +891,11 @@ impl<G: Group> FslRuntime<G> {
         let t_gen = Instant::now();
         let mut ctxs = Vec::with_capacity(n);
         let mut batches = Vec::with_capacity(n);
-        for sel in clients {
+        for (i, sel) in clients.iter().enumerate() {
+            let s = self.trace.begin();
             let (ctx, batch) =
                 psr::client_query::<G>(&self.session, sel, rng).map_err(|e| anyhow!("{e}"))?;
+            self.trace.end(s, Phase::Keygen, Party::Client, trace::worker(i));
             ctxs.push(ctx);
             batches.push(batch);
         }
@@ -845,6 +912,7 @@ impl<G: Group> FslRuntime<G> {
         if self.tolerant() {
             // Best-effort uploads, skipping evicted clients; a faulted
             // send is the client's own failure, not the round's.
+            let up = self.trace.begin();
             for (i, (links, batch)) in self.links.iter().zip(&batches).enumerate() {
                 if self.dead[i] {
                     continue;
@@ -852,10 +920,12 @@ impl<G: Group> FslRuntime<G> {
                 let _ = links.to_s0.send(msg::encode_key_upload(batch, 0, true));
                 let _ = links.to_s1.send(msg::encode_key_upload(batch, 1, true));
             }
+            self.trace.end(up, Phase::Upload, Party::Client, None);
             // Learn the agreed cohort *before* reading answers: the
             // servers answer only agreed survivors, so waiting on a
             // dropped client's answer would wedge until the timeout.
-            let (server_time, _, inter, outcomes) = self.round_replies(n)?;
+            let (server_time, _, inter, outcomes, server_spans) = self.round_replies(n)?;
+            let mg = self.trace.begin();
             let exchanged: Result<Vec<Vec<G>>> = (|| {
                 let mut submodels = Vec::with_capacity(n);
                 for i in 0..n {
@@ -874,20 +944,29 @@ impl<G: Group> FslRuntime<G> {
                 }
                 Ok(submodels)
             })();
+            self.trace.end(mg, Phase::Merge, Party::Client, None);
             let submodels = self.poisoning(exchanged)?;
             self.absorb_outcomes(&outcomes);
             let report = self.report(
                 RoundKind::Psr, n, gen_time, server_time, wall.elapsed(), inter, outcomes,
+                server_spans,
             );
             return Ok(PsrOutcome { submodels, report });
         }
-        let exchanged: Result<Vec<Vec<G>>> = (|| {
+        let up = self.trace.begin();
+        let sent: Result<()> = (|| {
             // PSR sends full key material to both servers (no forwarding —
             // the answer flows back on the same link).
             for (links, batch) in self.links.iter().zip(&batches) {
                 links.to_s0.send(msg::encode_key_upload(batch, 0, true))?;
                 links.to_s1.send(msg::encode_key_upload(batch, 1, true))?;
             }
+            Ok(())
+        })();
+        self.trace.end(up, Phase::Upload, Party::Client, None);
+        self.poisoning(sent)?;
+        let mg = self.trace.begin();
+        let exchanged: Result<Vec<Vec<G>>> = (|| {
             // Clients reconstruct from both servers' answers.
             let mut submodels = Vec::with_capacity(n);
             for ((links, ctx), sel) in self.links.iter().zip(&ctxs).zip(clients) {
@@ -899,10 +978,12 @@ impl<G: Group> FslRuntime<G> {
             }
             Ok(submodels)
         })();
+        self.trace.end(mg, Phase::Merge, Party::Client, None);
         let submodels = self.poisoning(exchanged)?;
-        let (server_time, _, inter, outcomes) = self.round_replies(n)?;
+        let (server_time, _, inter, outcomes, server_spans) = self.round_replies(n)?;
         let report = self.report(
             RoundKind::Psr, n, gen_time, server_time, wall.elapsed(), inter, outcomes,
+            server_spans,
         );
         Ok(PsrOutcome { submodels, report })
     }
@@ -930,10 +1011,12 @@ impl<G: Group> FslRuntime<G> {
 
         let t_gen = Instant::now();
         let mut uploads = Vec::with_capacity(n);
-        for (sel, deltas) in clients {
+        for (i, (sel, deltas)) in clients.iter().enumerate() {
+            let s = self.trace.begin();
             uploads
                 .push(ssa::client_update(&self.session, sel, deltas, rng)
                     .map_err(|e| anyhow!("{e}"))?);
+            self.trace.end(s, Phase::Keygen, Party::Client, trace::worker(i));
         }
         let gen_time = t_gen.elapsed();
 
@@ -948,6 +1031,7 @@ impl<G: Group> FslRuntime<G> {
         // S_0's forwarded publics fill the peer pipe — over real sockets
         // with finite kernel buffers the interleaved order can deadlock
         // at large m (driver → S_0 → inter → S_1 → driver cycle).
+        let up = self.trace.begin();
         if self.tolerant() {
             for (i, (links, batch)) in self.links.iter().zip(&uploads).enumerate() {
                 if self.dead[i] {
@@ -961,6 +1045,7 @@ impl<G: Group> FslRuntime<G> {
                 }
                 let _ = links.to_s0.send(msg::encode_key_upload(batch, 0, true));
             }
+            self.trace.end(up, Phase::Upload, Party::Client, None);
         } else {
             let sent: Result<()> = (|| {
                 for (links, batch) in self.links.iter().zip(&uploads) {
@@ -971,6 +1056,7 @@ impl<G: Group> FslRuntime<G> {
                 }
                 Ok(())
             })();
+            self.trace.end(up, Phase::Upload, Party::Client, None);
             self.poisoning(sent)?;
         }
         self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)
@@ -1000,9 +1086,11 @@ impl<G: Group> FslRuntime<G> {
             let mut keys0 = Vec::with_capacity(n);
             let mut keys1 = Vec::with_capacity(n);
             self.udpf_clients.clear();
-            for (sel, deltas) in clients {
+            for (i, (sel, deltas)) in clients.iter().enumerate() {
+                let s = self.trace.begin();
                 let (state, k0, k1) = udpf_ssa::client_setup(&self.session, sel, deltas, rng)
                     .map_err(|e| anyhow!("{e}"))?;
+                self.trace.end(s, Phase::Keygen, Party::Client, trace::worker(i));
                 self.udpf_clients.push(state);
                 keys0.push(k0);
                 keys1.push(k1);
@@ -1013,6 +1101,7 @@ impl<G: Group> FslRuntime<G> {
                 n,
                 deadline_nanos: self.deadline_nanos(),
             })?;
+            let up = self.trace.begin();
             if self.tolerant() {
                 for (i, ((links, k0), k1)) in
                     self.links.iter().zip(&keys0).zip(&keys1).enumerate()
@@ -1023,6 +1112,7 @@ impl<G: Group> FslRuntime<G> {
                     let _ = links.to_s0.send(msg::encode_udpf_keys(&k0.keys));
                     let _ = links.to_s1.send(msg::encode_udpf_keys(&k1.keys));
                 }
+                self.trace.end(up, Phase::Upload, Party::Client, None);
             } else {
                 let sent: Result<()> = (|| {
                     for ((links, k0), k1) in self.links.iter().zip(&keys0).zip(&keys1) {
@@ -1031,6 +1121,7 @@ impl<G: Group> FslRuntime<G> {
                     }
                     Ok(())
                 })();
+                self.trace.end(up, Phase::Upload, Party::Client, None);
                 self.poisoning(sent)?;
             }
             // Advance only once the round succeeded: a failed setup (or a
@@ -1055,8 +1146,10 @@ impl<G: Group> FslRuntime<G> {
                 );
             }
             let mut all_hints = Vec::with_capacity(n);
-            for (state, (sel, deltas)) in self.udpf_clients.iter().zip(clients) {
+            for (i, (state, (sel, deltas))) in self.udpf_clients.iter().zip(clients).enumerate() {
+                let s = self.trace.begin();
                 all_hints.push(state.epoch_hints(&self.session, sel, deltas, epoch));
+                self.trace.end(s, Phase::Keygen, Party::Client, trace::worker(i));
             }
             let gen_time = t_gen.elapsed();
             self.command_both(ServerCmd::UdpfEpoch {
@@ -1064,6 +1157,7 @@ impl<G: Group> FslRuntime<G> {
                 epoch,
                 deadline_nanos: self.deadline_nanos(),
             })?;
+            let up = self.trace.begin();
             if self.tolerant() {
                 for (i, (links, hints)) in self.links.iter().zip(&all_hints).enumerate() {
                     if self.dead[i] {
@@ -1073,6 +1167,7 @@ impl<G: Group> FslRuntime<G> {
                     let _ = links.to_s0.send(encoded.clone());
                     let _ = links.to_s1.send(encoded);
                 }
+                self.trace.end(up, Phase::Upload, Party::Client, None);
             } else {
                 let sent: Result<()> = (|| {
                     for (links, hints) in self.links.iter().zip(&all_hints) {
@@ -1082,6 +1177,7 @@ impl<G: Group> FslRuntime<G> {
                     }
                     Ok(())
                 })();
+                self.trace.end(up, Phase::Upload, Party::Client, None);
                 self.poisoning(sent)?;
             }
             let out = self.finish_ssa(RoundKind::Ssa, n, gen_time, wall)?;
@@ -1127,6 +1223,7 @@ impl<G: Group> FslRuntime<G> {
                     wall_time,
                     0,
                     vec![ClientOutcome::Completed; n],
+                    Vec::new(),
                 );
                 Ok(VerifiedSsaOutcome {
                     delta: result.delta,
@@ -1173,8 +1270,10 @@ impl<G: Group> FslRuntime<G> {
 
         let t_gen = Instant::now();
         for (cid, (links, set)) in self.links.iter().zip(client_sets).enumerate() {
+            let s = self.trace.begin();
             let blinded = psu::client_blind(key, m, k, cid as u64, set);
             links.to_s0.send(msg::encode_indices(&blinded))?;
+            self.trace.end(s, Phase::Keygen, Party::Client, trace::worker(cid));
         }
         let gen_time = t_gen.elapsed();
 
@@ -1198,12 +1297,13 @@ impl<G: Group> FslRuntime<G> {
             union.ok_or_else(|| anyhow!("PSU round served no clients"))
         })();
         let union = self.poisoning(exchanged)?;
-        let (server_time, _, inter, outcomes) = self.round_replies(n)?;
+        let (server_time, _, inter, outcomes, server_spans) = self.round_replies(n)?;
         let union_len = union.len();
         let session = Session::new_union(self.session.params.clone(), union)?;
         self.install_session(Arc::new(session))?;
         let report = self.report(
             RoundKind::PsuAlign, n, gen_time, server_time, wall.elapsed(), inter, outcomes,
+            server_spans,
         );
         Ok(PsuOutcome { union_len, report })
     }
@@ -1263,10 +1363,12 @@ impl<G: Group> FslRuntime<G> {
         gen_time: Duration,
         wall: Instant,
     ) -> Result<SsaOutcome<G>> {
-        let (server_time, delta, inter, outcomes) = self.round_replies(n)?;
+        let (server_time, delta, inter, outcomes, server_spans) = self.round_replies(n)?;
         let delta = self.poisoning(delta.ok_or_else(|| anyhow!("leader sent no delta")))?;
         self.absorb_outcomes(&outcomes);
-        let report = self.report(kind, n, gen_time, server_time, wall.elapsed(), inter, outcomes);
+        let report = self.report(
+            kind, n, gen_time, server_time, wall.elapsed(), inter, outcomes, server_spans,
+        );
         Ok(SsaOutcome { delta, report })
     }
 
@@ -1356,24 +1458,28 @@ impl<G: Group> FslRuntime<G> {
     /// failure): max server time, the leader's optional delta, the
     /// servers' summed `S_0 ↔ S_1` bytes (remote deployments only —
     /// in-process replies carry 0 and the driver reads its own meters),
-    /// and the merged per-client outcomes (filled to all-`Completed` for
-    /// strict rounds, whose replies carry none).
+    /// the merged per-client outcomes (filled to all-`Completed` for
+    /// strict rounds, whose replies carry none), and both servers'
+    /// party-tagged phase spans.
     fn round_replies(
         &mut self,
         n: usize,
-    ) -> Result<(Duration, Option<Vec<G>>, u64, Vec<ClientOutcome>)> {
+    ) -> Result<(Duration, Option<Vec<G>>, u64, Vec<ClientOutcome>, Vec<Span>)> {
+        let rp = self.trace.begin();
         let mut max_time = Duration::ZERO;
         let mut delta = None;
         let mut inter = 0u64;
         let mut per_party: [Vec<ClientOutcome>; 2] = [Vec::new(), Vec::new()];
+        let mut server_spans = Vec::new();
         let mut failure: Option<anyhow::Error> = None;
         for party in 0..2 {
             match self.reply(party) {
-                Ok(ServerReply::Round { server_time, delta: d, inter_sent, outcomes }) => {
+                Ok(ServerReply::Round { server_time, delta: d, inter_sent, outcomes, spans }) => {
                     max_time = max_time.max(server_time);
                     delta = delta.or(d);
                     inter += inter_sent;
                     per_party[party] = outcomes;
+                    server_spans.extend(spans);
                 }
                 Ok(other) => {
                     failure.get_or_insert(other.into_protocol_error("round"));
@@ -1383,6 +1489,7 @@ impl<G: Group> FslRuntime<G> {
                 }
             }
         }
+        self.trace.end(rp, Phase::Reply, Party::Client, None);
         match failure {
             Some(e) => {
                 self.poison(&e);
@@ -1390,7 +1497,7 @@ impl<G: Group> FslRuntime<G> {
             }
             None => {
                 let [o0, o1] = per_party;
-                Ok((max_time, delta, inter, merge_outcomes(n, &o0, &o1)))
+                Ok((max_time, delta, inter, merge_outcomes(n, &o0, &o1), server_spans))
             }
         }
     }
@@ -1415,7 +1522,8 @@ impl<G: Group> FslRuntime<G> {
         Ok(())
     }
 
-    /// Zero every link meter so the next report covers one round.
+    /// Zero every link meter (and the driver's span ring) so the next
+    /// report covers one round.
     fn reset_meters(&self) {
         for links in &self.links {
             links.to_s0.meter().reset();
@@ -1424,8 +1532,10 @@ impl<G: Group> FslRuntime<G> {
         for meter in &self.inter_meters {
             meter.reset();
         }
+        self.trace.reset();
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn report(
         &self,
         kind: RoundKind,
@@ -1435,10 +1545,16 @@ impl<G: Group> FslRuntime<G> {
         wall_time: Duration,
         reply_inter_bytes: u64,
         outcomes: Vec<ClientOutcome>,
+        server_spans: Vec<Span>,
     ) -> RoundReport {
         // Verified rounds take uploads directly (no client links), so `n`
         // may exceed the topology's capacity — clamp the meter slice.
         let links = &self.links[..n.min(self.links.len())];
+        // Driver spans (client party) first, then the servers' — the
+        // Chrome export keys lanes off each span's own party tag, so
+        // concatenation order only affects readers of the raw list.
+        let mut spans = self.trace.drain();
+        spans.extend(server_spans);
         RoundReport {
             kind,
             clients: n,
@@ -1462,6 +1578,7 @@ impl<G: Group> FslRuntime<G> {
             server_time,
             wall_time,
             outcomes,
+            spans,
         }
     }
 
@@ -1608,6 +1725,11 @@ pub(crate) struct ServerHalf<G: Group> {
     /// Bound on every data-link receive (a silent client or peer fails
     /// the round instead of wedging the server forever).
     pub(crate) timeout: Duration,
+    /// This server's span ring, shared with its engines' [`TraceSink`]s.
+    /// Reset at the start of every round command; drained into the
+    /// `Round` reply so driver-side reports carry both servers' spans
+    /// over either transport.
+    pub(crate) trace: Arc<TraceRecorder>,
 }
 
 impl<G: Group> ServerHalf<G> {
@@ -1644,6 +1766,19 @@ impl<G: Group> ServerHalf<G> {
                 self.eps.len()
             );
         }
+        // One span stream per command: round handlers (and the engines
+        // they share the recorder with) record into a freshly reset ring,
+        // and whatever they recorded rides back in the `Round` reply —
+        // identically over typed channels and the TCP wire.
+        self.trace.reset();
+        let mut reply = self.dispatch(cmd)?;
+        if let ServerReply::Round { spans, .. } = &mut reply {
+            *spans = self.trace.drain();
+        }
+        Ok(reply)
+    }
+
+    fn dispatch(&mut self, cmd: ServerCmd<G>) -> Result<ServerReply<G>> {
         match cmd {
             ServerCmd::Shutdown => Err(anyhow!(
                 "S{}: shutdown is handled by the command loop",
@@ -1689,6 +1824,11 @@ impl<G: Group> ServerHalf<G> {
         self.inter
             .as_deref()
             .ok_or_else(|| anyhow!("S{}: no peer link established", self.party))
+    }
+
+    /// This server's span party tag.
+    fn side(&self) -> Party {
+        Party::server(usize::from(self.party))
     }
 
     /// Receive one upload per client, bounded by the per-client
@@ -1775,6 +1915,7 @@ impl<G: Group> ServerHalf<G> {
             return self.ssa_tolerant(n, d);
         }
         if self.party == 0 {
+            let up_span = self.trace.begin();
             let mut batches = Vec::with_capacity(n);
             for (i, ep) in self.eps[..n].iter().enumerate() {
                 let up = msg::decode_key_upload::<G>(&ep.recv_timeout(self.timeout)?)
@@ -1788,26 +1929,35 @@ impl<G: Group> ServerHalf<G> {
                     msk: [Sensitive::new([0u8; 16]), Sensitive::new([0u8; 16])],
                     publics,
                 };
-                let mut fwd = (i as u32).to_le_bytes().to_vec();
+                let mut fwd = wire_u32(i, "client index")?.to_le_bytes().to_vec();
                 fwd.extend(msg::encode_key_upload(&batch, 0, true));
                 self.inter()?.send(fwd)?;
                 batch.msk = [Sensitive::new(up.msk), Sensitive::new(up.msk)];
                 batches.push(batch);
             }
+            self.trace.end(up_span, Phase::Upload, self.side(), None);
+            let kg = self.trace.begin();
+            let ups = uploads_of(&batches, 0);
+            self.trace.end(kg, Phase::Keygen, self.side(), None);
             let t = Instant::now();
-            let acc0 = self
-                .agg
-                .aggregate_publics(&self.session, 0, &uploads_of(&batches, 0));
+            let acc0 = self.agg.aggregate_publics(&self.session, 0, &ups);
             let server_time = t.elapsed();
+            let mg = self.trace.begin();
             let share1 = msg::decode_shares::<G>(&self.inter()?.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S0: bad share vector"))?;
+            let delta = ssa::reconstruct(&acc0, &share1);
+            self.trace.end(mg, Phase::Merge, self.side(), None);
+            let rp = self.trace.begin();
+            self.trace.end(rp, Phase::Reply, self.side(), None);
             Ok(ServerReply::Round {
                 server_time,
-                delta: Some(ssa::reconstruct(&acc0, &share1)),
+                delta: Some(delta),
                 inter_sent: 0,
                 outcomes: Vec::new(),
+                spans: Vec::new(),
             })
         } else {
+            let up_span = self.trace.begin();
             let mut msks = Vec::with_capacity(n);
             for ep in &self.eps[..n] {
                 let up = msg::decode_key_upload::<G>(&ep.recv_timeout(self.timeout)?)
@@ -1829,6 +1979,8 @@ impl<G: Group> ServerHalf<G> {
                     .ok_or_else(|| anyhow!("S1: bad forwarded publics"))?;
                 *slot = Some(up.publics.ok_or_else(|| anyhow!("S1: no publics"))?);
             }
+            self.trace.end(up_span, Phase::Upload, self.side(), None);
+            let kg = self.trace.begin();
             let batches: Vec<MasterKeyBatch<G>> = publics
                 .into_iter()
                 .enumerate()
@@ -1840,17 +1992,20 @@ impl<G: Group> ServerHalf<G> {
                     })
                 })
                 .collect::<Result<_>>()?;
+            let ups = uploads_of(&batches, 1);
+            self.trace.end(kg, Phase::Keygen, self.side(), None);
             let t = Instant::now();
-            let acc1 = self
-                .agg
-                .aggregate_publics(&self.session, 1, &uploads_of(&batches, 1));
+            let acc1 = self.agg.aggregate_publics(&self.session, 1, &ups);
             let server_time = t.elapsed();
+            let rp = self.trace.begin();
             self.inter()?.send(msg::encode_shares(&acc1))?;
+            self.trace.end(rp, Phase::Reply, self.side(), None);
             Ok(ServerReply::Round {
                 server_time,
                 delta: None,
                 inter_sent: 0,
                 outcomes: Vec::new(),
+                spans: Vec::new(),
             })
         }
     }
@@ -1862,12 +2017,15 @@ impl<G: Group> ServerHalf<G> {
     /// dropped client would leave the peer stream ambiguous.
     fn ssa_tolerant(&mut self, n: usize, deadline: Duration) -> Result<ServerReply<G>> {
         if self.party == 0 {
+            let up_span = self.trace.begin();
             let (mut items, mut outcomes) = self.recv_cohort(n, deadline, |raw| {
                 let up = msg::decode_key_upload::<G>(raw)?;
                 up.publics.as_ref()?;
                 Some(up)
             });
             let agreed = self.agree_cohort(&mut outcomes)?;
+            self.trace.end(up_span, Phase::Upload, self.side(), None);
+            let kg = self.trace.begin();
             let mut batches = Vec::with_capacity(agreed.len());
             for &i in &agreed {
                 let up = items[i]
@@ -1883,26 +2041,33 @@ impl<G: Group> ServerHalf<G> {
                     msk: [Sensitive::new([0u8; 16]), Sensitive::new([0u8; 16])],
                     publics,
                 };
-                let mut fwd = (i as u32).to_le_bytes().to_vec();
+                let mut fwd = wire_u32(i, "client index")?.to_le_bytes().to_vec();
                 fwd.extend(msg::encode_key_upload(&batch, 0, true));
                 self.inter()?.send(fwd)?;
                 batch.msk = [Sensitive::new(up.msk), Sensitive::new(up.msk)];
                 batches.push(batch);
             }
+            let ups = uploads_of(&batches, 0);
+            self.trace.end(kg, Phase::Keygen, self.side(), None);
             let t = Instant::now();
-            let acc0 = self
-                .agg
-                .aggregate_publics(&self.session, 0, &uploads_of(&batches, 0));
+            let acc0 = self.agg.aggregate_publics(&self.session, 0, &ups);
             let server_time = t.elapsed();
+            let mg = self.trace.begin();
             let share1 = msg::decode_shares::<G>(&self.inter()?.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S0: bad share vector"))?;
+            let delta = ssa::reconstruct(&acc0, &share1);
+            self.trace.end(mg, Phase::Merge, self.side(), None);
+            let rp = self.trace.begin();
+            self.trace.end(rp, Phase::Reply, self.side(), None);
             Ok(ServerReply::Round {
                 server_time,
-                delta: Some(ssa::reconstruct(&acc0, &share1)),
+                delta: Some(delta),
                 inter_sent: 0,
                 outcomes,
+                spans: Vec::new(),
             })
         } else {
+            let up_span = self.trace.begin();
             let (mut msks, mut outcomes) =
                 self.recv_cohort(n, deadline, |raw| msg::decode_key_upload::<G>(raw).map(|u| u.msk));
             let agreed = self.agree_cohort(&mut outcomes)?;
@@ -1923,6 +2088,8 @@ impl<G: Group> ServerHalf<G> {
                     .ok_or_else(|| anyhow!("S1: bad forwarded publics"))?;
                 publics[idx] = Some(up.publics.ok_or_else(|| anyhow!("S1: no publics"))?);
             }
+            self.trace.end(up_span, Phase::Upload, self.side(), None);
+            let kg = self.trace.begin();
             let batches: Vec<MasterKeyBatch<G>> = agreed
                 .iter()
                 .map(|&i| {
@@ -1935,17 +2102,20 @@ impl<G: Group> ServerHalf<G> {
                     })
                 })
                 .collect::<Result<_>>()?;
+            let ups = uploads_of(&batches, 1);
+            self.trace.end(kg, Phase::Keygen, self.side(), None);
             let t = Instant::now();
-            let acc1 = self
-                .agg
-                .aggregate_publics(&self.session, 1, &uploads_of(&batches, 1));
+            let acc1 = self.agg.aggregate_publics(&self.session, 1, &ups);
             let server_time = t.elapsed();
+            let rp = self.trace.begin();
             self.inter()?.send(msg::encode_shares(&acc1))?;
+            self.trace.end(rp, Phase::Reply, self.side(), None);
             Ok(ServerReply::Round {
                 server_time,
                 delta: None,
                 inter_sent: 0,
                 outcomes,
+                spans: Vec::new(),
             })
         }
     }
@@ -1960,12 +2130,15 @@ impl<G: Group> ServerHalf<G> {
             .clone()
             .ok_or_else(|| anyhow!("S{}: no weights installed", self.party))?;
         if let Some(d) = deadline {
+            let up_span = self.trace.begin();
             let (mut items, mut outcomes) = self.recv_cohort(n, d, |raw| {
                 let up = msg::decode_key_upload::<G>(raw)?;
                 up.publics.as_ref()?;
                 Some(up)
             });
             let agreed = self.agree_cohort(&mut outcomes)?;
+            self.trace.end(up_span, Phase::Upload, self.side(), None);
+            let kg = self.trace.begin();
             let batches: Vec<MasterKeyBatch<G>> = agreed
                 .iter()
                 .map(|&i| {
@@ -1982,6 +2155,7 @@ impl<G: Group> ServerHalf<G> {
                 })
                 .collect::<Result<_>>()?;
             let uploads = uploads_of(&batches, self.party);
+            self.trace.end(kg, Phase::Keygen, self.side(), None);
             let t = Instant::now();
             let answers = self
                 .ret
@@ -1989,16 +2163,20 @@ impl<G: Group> ServerHalf<G> {
             let server_time = t.elapsed();
             // Best-effort answers: a client that died after uploading
             // loses its answer, not the round.
+            let rp = self.trace.begin();
             for (&i, ans) in agreed.iter().zip(&answers) {
                 let _ = self.eps[i].send(msg::encode_shares(ans));
             }
+            self.trace.end(rp, Phase::Reply, self.side(), None);
             return Ok(ServerReply::Round {
                 server_time,
                 delta: None,
                 inter_sent: 0,
                 outcomes,
+                spans: Vec::new(),
             });
         }
+        let up_span = self.trace.begin();
         let mut batches = Vec::with_capacity(n);
         for ep in &self.eps[..n] {
             let up = msg::decode_key_upload::<G>(&ep.recv_timeout(self.timeout)?)
@@ -2011,20 +2189,26 @@ impl<G: Group> ServerHalf<G> {
                 publics,
             });
         }
+        self.trace.end(up_span, Phase::Upload, self.side(), None);
+        let kg = self.trace.begin();
         let uploads = uploads_of(&batches, self.party);
+        self.trace.end(kg, Phase::Keygen, self.side(), None);
         let t = Instant::now();
         let answers = self
             .ret
             .answer_publics(&self.session, &weights, self.party, &uploads);
         let server_time = t.elapsed();
+        let rp = self.trace.begin();
         for (ep, ans) in self.eps[..n].iter().zip(&answers) {
             ep.send(msg::encode_shares(ans))?;
         }
+        self.trace.end(rp, Phase::Reply, self.side(), None);
         Ok(ServerReply::Round {
             server_time,
             delta: None,
             inter_sent: 0,
             outcomes: Vec::new(),
+            spans: Vec::new(),
         })
     }
 
@@ -2036,6 +2220,7 @@ impl<G: Group> ServerHalf<G> {
         self.udpf_links.clear();
         self.udpf_total = n;
         if let Some(d) = deadline {
+            let up_span = self.trace.begin();
             let (mut items, mut outcomes) =
                 self.recv_cohort(n, d, |raw| msg::decode_udpf_keys::<G>(raw));
             let agreed = self.agree_cohort(&mut outcomes)?;
@@ -2046,13 +2231,16 @@ impl<G: Group> ServerHalf<G> {
                 self.udpf.push(udpf_ssa::UdpfSsaServerKeys { keys });
                 self.udpf_links.push(i);
             }
+            self.trace.end(up_span, Phase::Upload, self.side(), None);
             return self.udpf_aggregate(0, outcomes);
         }
+        let up_span = self.trace.begin();
         for ep in &self.eps[..n] {
             let keys = msg::decode_udpf_keys::<G>(&ep.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S{}: bad U-DPF key upload", self.party))?;
             self.udpf.push(udpf_ssa::UdpfSsaServerKeys { keys });
         }
+        self.trace.end(up_span, Phase::Upload, self.side(), None);
         self.udpf_links = (0..n).collect();
         self.udpf_aggregate(0, Vec::new())
     }
@@ -2073,6 +2261,7 @@ impl<G: Group> ServerHalf<G> {
             }
             // Every slot not retained (or already evicted) is Dropped
             // without any wait; live slots get the per-client deadline.
+            let up_span = self.trace.begin();
             let mut outcomes = vec![ClientOutcome::Dropped; n];
             let mut fresh_hints: Vec<Option<Vec<crate::udpf::Hint<G>>>> =
                 (0..self.udpf.len()).map(|_| None).collect();
@@ -2098,6 +2287,10 @@ impl<G: Group> ServerHalf<G> {
                 }
             }
             self.agree_cohort(&mut outcomes)?;
+            self.trace.end(up_span, Phase::Upload, self.side(), None);
+            // Applying hints derives the epoch's fresh key material from
+            // the retained sets — the server-side share of "keygen".
+            let kg = self.trace.begin();
             let old = std::mem::take(&mut self.udpf);
             let old_links = std::mem::take(&mut self.udpf_links);
             for ((mut retained, link), hints) in
@@ -2112,6 +2305,7 @@ impl<G: Group> ServerHalf<G> {
                     self.udpf_links.push(link);
                 }
             }
+            self.trace.end(kg, Phase::Keygen, self.side(), None);
             return self.udpf_aggregate(epoch, outcomes);
         }
         ensure!(
@@ -2120,7 +2314,9 @@ impl<G: Group> ServerHalf<G> {
             self.party,
             self.udpf.len()
         );
-        for (ep, retained) in self.eps[..n].iter().zip(&mut self.udpf) {
+        let up_span = self.trace.begin();
+        let mut all_hints = Vec::with_capacity(n);
+        for (ep, retained) in self.eps[..n].iter().zip(&self.udpf) {
             let hints = msg::decode_hints::<G>(&ep.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S{}: bad hint upload", self.party))?;
             ensure!(
@@ -2135,8 +2331,14 @@ impl<G: Group> ServerHalf<G> {
                 "S{}: hint epoch mismatch (expected {epoch})",
                 self.party
             );
-            retained.apply_hints(&hints);
+            all_hints.push(hints);
         }
+        self.trace.end(up_span, Phase::Upload, self.side(), None);
+        let kg = self.trace.begin();
+        for (retained, hints) in self.udpf.iter_mut().zip(&all_hints) {
+            retained.apply_hints(hints);
+        }
+        self.trace.end(kg, Phase::Keygen, self.side(), None);
         self.udpf_aggregate(epoch, Vec::new())
     }
 
@@ -2151,21 +2353,30 @@ impl<G: Group> ServerHalf<G> {
         let acc = udpf_ssa::server_aggregate(&self.agg, &self.session, &self.udpf, epoch);
         let server_time = t.elapsed();
         if self.party == 1 {
+            let rp = self.trace.begin();
             self.inter()?.send(msg::encode_shares(&acc))?;
+            self.trace.end(rp, Phase::Reply, self.side(), None);
             Ok(ServerReply::Round {
                 server_time,
                 delta: None,
                 inter_sent: 0,
                 outcomes,
+                spans: Vec::new(),
             })
         } else {
+            let mg = self.trace.begin();
             let share1 = msg::decode_shares::<G>(&self.inter()?.recv_timeout(self.timeout)?)
                 .ok_or_else(|| anyhow!("S0: bad share vector"))?;
+            let delta = ssa::reconstruct(&acc, &share1);
+            self.trace.end(mg, Phase::Merge, self.side(), None);
+            let rp = self.trace.begin();
+            self.trace.end(rp, Phase::Reply, self.side(), None);
             Ok(ServerReply::Round {
                 server_time,
-                delta: Some(ssa::reconstruct(&acc, &share1)),
+                delta: Some(delta),
                 inter_sent: 0,
                 outcomes,
+                spans: Vec::new(),
             })
         }
     }
@@ -2210,6 +2421,7 @@ impl<G: Group> ServerHalf<G> {
             delta: None,
             inter_sent: 0,
             outcomes: Vec::new(),
+            spans: Vec::new(),
         })
     }
 }
@@ -2280,5 +2492,72 @@ mod tests {
         let mut rt = FslRuntimeBuilder::new(params(256, 8)).build::<u64>().unwrap();
         let err = rt.set_weights(vec![0u64; 100]).unwrap_err().to_string();
         assert!(err.contains("m = 256"), "{err}");
+    }
+
+    /// Regression: an explicit `upload_deadline(Duration::ZERO)` used to
+    /// travel the wire as the strict-round sentinel `deadline_nanos = 0`
+    /// and silently come out as "no deadline".
+    #[test]
+    fn zero_upload_deadline_is_rejected_at_build_and_connect() {
+        let err = FslRuntimeBuilder::new(params(256, 8))
+            .upload_deadline(Duration::ZERO)
+            .build::<u64>()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("upload_deadline"), "{err}");
+        let err = FslRuntimeBuilder::new(params(256, 8))
+            .upload_deadline(Duration::ZERO)
+            .connect::<u64>("127.0.0.1:1", "127.0.0.1:1")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("upload_deadline"), "{err}");
+        // A positive deadline still builds.
+        let rt = FslRuntimeBuilder::new(params(256, 8))
+            .upload_deadline(Duration::from_millis(50))
+            .build::<u64>()
+            .unwrap();
+        rt.shutdown().unwrap();
+    }
+
+    #[test]
+    fn wire_u32_rejects_overflow_instead_of_truncating() {
+        assert_eq!(wire_u32(7, "x").unwrap(), 7);
+        let big = u32::MAX as usize + 1;
+        let err = wire_u32(big, "max_clients").unwrap_err().to_string();
+        assert!(err.contains("max_clients"), "{err}");
+        assert!(err.contains("u32"), "{err}");
+    }
+
+    /// Golden output: the machine-readable report line is a stable,
+    /// schema-versioned contract (CI's python asserts parse it).
+    #[test]
+    fn round_report_json_golden() {
+        let report = RoundReport {
+            kind: RoundKind::Ssa,
+            clients: 3,
+            client_upload_bytes: 100,
+            client_download_bytes: 0,
+            server_exchange_bytes: 42,
+            gen_time: Duration::from_micros(1500),
+            server_time: Duration::from_micros(2500),
+            wall_time: Duration::from_millis(5),
+            outcomes: vec![ClientOutcome::Completed, ClientOutcome::Dropped],
+            spans: vec![Span {
+                phase: Phase::Eval,
+                party: Party::S0,
+                worker: Some(0),
+                start_ns: 0,
+                dur_ns: 10,
+            }],
+        };
+        assert_eq!(
+            report.to_json(),
+            "{\"schema\":1,\"kind\":\"ssa\",\"clients\":3,\"client_upload_bytes\":100,\
+             \"client_download_bytes\":0,\"server_exchange_bytes\":42,\"gen_ms\":1.500,\
+             \"server_ms\":2.500,\"wall_ms\":5.000,\
+             \"outcomes\":[\"completed\",\"dropped\"],\"spans\":1}"
+        );
+        assert!(json::validate(&report.to_json()));
+        assert!(json::validate(&report.trace_json()));
     }
 }

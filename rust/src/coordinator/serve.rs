@@ -21,6 +21,7 @@ use super::runtime::ServerHalf;
 use super::snapshot::ServerSnapshot;
 use super::wire::{self, ServerCmd, ServerReply};
 use crate::group::Group;
+use crate::metrics::trace::{self, Party, TraceRecorder, TraceSink};
 use crate::net::transport::tcp::{TcpAcceptor, TcpOptions, TcpTransport};
 use crate::net::transport::{BoxTransport, Hello, HelloAck, Role};
 use crate::protocol::{udpf_ssa, AggregationEngine, RetrievalEngine, Sharding};
@@ -146,11 +147,17 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
     } else {
         Sharding::new(opts.threads)
     };
+    // One recorder per server process; `ServerHalf::handle` resets it at
+    // round start and drains it into the round reply, so remote rounds
+    // ship the same span stream the in-process runtime collects directly.
+    let rec = TraceRecorder::shared(trace::DEFAULT_TRACE_CAPACITY);
+    let sink = TraceSink::new(rec.clone(), Party::server(usize::from(opts.party)));
     let mut server = ServerHalf::<G> {
         party: opts.party,
         session,
-        agg: AggregationEngine::with_sharding(sharding),
-        ret: RetrievalEngine::with_sharding(sharding),
+        agg: AggregationEngine::with_sharding(sharding).with_trace(sink.clone()),
+        ret: RetrievalEngine::with_sharding(sharding).with_trace(sink),
+        trace: rec,
         eps,
         inter,
         weights: None,

@@ -18,6 +18,7 @@ use crate::crypto::field::Fp;
 use crate::dpf::MasterKeyBatch;
 use crate::group::Group;
 use crate::hashing::CuckooParams;
+use crate::metrics::trace::{Party, Phase, Span};
 use crate::protocol::{msg, Session, SessionParams};
 use anyhow::{anyhow, bail, ensure, Result};
 use std::sync::Arc;
@@ -113,11 +114,15 @@ pub enum ServerReply<G: Group> {
     /// reads its own inter-link meters and leaves this 0). `outcomes` is
     /// one entry per client from a tolerant round (empty from strict
     /// rounds — every client completed or the round failed).
+    /// `spans` is the server's per-phase trace for this round
+    /// ([`crate::metrics::trace`]), drained by the command loop so remote
+    /// rounds produce the same span stream as in-process ones.
     Round {
         server_time: Duration,
         delta: Option<Vec<G>>,
         inter_sent: u64,
         outcomes: Vec<ClientOutcome>,
+        spans: Vec<Span>,
     },
     /// Verified round served (leader only).
     Verified {
@@ -173,8 +178,19 @@ fn get_slice<'a>(bytes: &'a [u8], off: &mut usize, len: usize) -> Result<&'a [u8
     Ok(s)
 }
 
+/// Encode a count or length as the wire's u32. Every count routed here
+/// is structurally bounded far below `u32::MAX` (cohort sizes are
+/// validated into u32 range by the driver's `wire_u32`, span lists are
+/// truncated to [`MAX_WIRE_SPANS`], blocks fit the transport frame cap),
+/// so the saturating `min` is a belt-and-braces guard that keeps the
+/// encoder infallible rather than a path that ever fires.
+fn put_count(out: &mut Vec<u8>, n: usize) {
+    // lint: allow(cast-truncation) — n is clamped to u32::MAX on the previous expression, so the cast cannot truncate.
+    put_u32(out, n.min(u32::MAX as usize) as u32);
+}
+
 fn put_block(out: &mut Vec<u8>, block: &[u8]) {
-    put_u32(out, block.len() as u32);
+    put_count(out, block.len());
     out.extend_from_slice(block);
 }
 
@@ -236,6 +252,12 @@ pub const MAX_WIRE_BINS: usize = 1 << 22;
 /// upload counts, per-client outcome lists) — far above any deployment
 /// here, far below an attacker-sized allocation.
 pub const MAX_WIRE_COHORT: usize = 1 << 20;
+/// Ceiling on the trace spans one round reply may carry. The recorder's
+/// ring ([`crate::metrics::trace::DEFAULT_TRACE_CAPACITY`]) already bounds
+/// what a server *produces* per round; this is the decode-side guard
+/// against a hostile reply declaring an attacker-sized span list. The
+/// encoder truncates to the same bound, so honest peers never hit it.
+pub const MAX_WIRE_SPANS: usize = 1 << 16;
 
 /// Rebuild a [`Session`] from [`encode_session`] output (rebuilds the
 /// simple table; union domains re-run the [`Session::new_union`]
@@ -329,17 +351,17 @@ pub fn encode_cmd<G: Group>(cmd: &ServerCmd<G>) -> Vec<u8> {
     match cmd {
         ServerCmd::Ssa { n, deadline_nanos } => {
             out.push(CMD_SSA);
-            put_u32(&mut out, *n as u32);
+            put_count(&mut out, *n);
             put_u64(&mut out, *deadline_nanos);
         }
         ServerCmd::Psr { n, deadline_nanos } => {
             out.push(CMD_PSR);
-            put_u32(&mut out, *n as u32);
+            put_count(&mut out, *n);
             put_u64(&mut out, *deadline_nanos);
         }
         ServerCmd::UdpfSetup { n, deadline_nanos } => {
             out.push(CMD_UDPF_SETUP);
-            put_u32(&mut out, *n as u32);
+            put_count(&mut out, *n);
             put_u64(&mut out, *deadline_nanos);
         }
         ServerCmd::UdpfEpoch {
@@ -348,21 +370,21 @@ pub fn encode_cmd<G: Group>(cmd: &ServerCmd<G>) -> Vec<u8> {
             deadline_nanos,
         } => {
             out.push(CMD_UDPF_EPOCH);
-            put_u32(&mut out, *n as u32);
+            put_count(&mut out, *n);
             put_u64(&mut out, *epoch);
             put_u64(&mut out, *deadline_nanos);
         }
         ServerCmd::VerifiedSsa { uploads, seed } => {
             out.push(CMD_VERIFIED);
             put_u64(&mut out, *seed);
-            put_u32(&mut out, uploads.len() as u32);
+            put_count(&mut out, uploads.len());
             for batch in uploads.iter() {
                 put_block(&mut out, &msg::encode_master_batch(batch));
             }
         }
         ServerCmd::PsuAlign { n, shuffle_seed } => {
             out.push(CMD_PSU);
-            put_u32(&mut out, *n as u32);
+            put_count(&mut out, *n);
             put_u64(&mut out, *shuffle_seed);
         }
         ServerCmd::SetWeights(w) => {
@@ -486,14 +508,30 @@ pub fn encode_reply<G: Group>(reply: &ServerReply<G>) -> Vec<u8> {
             delta,
             inter_sent,
             outcomes,
+            spans,
         } => {
             out.push(REP_ROUND);
             put_u64(&mut out, duration_nanos(*server_time));
             put_u64(&mut out, *inter_sent);
-            // Outcomes precede the delta: the delta encoding consumes the
-            // rest of the message.
-            put_u32(&mut out, outcomes.len() as u32);
+            // Outcomes and spans precede the delta: the delta encoding
+            // consumes the rest of the message.
+            put_count(&mut out, outcomes.len());
             out.extend(outcomes.iter().map(|&o| outcome_byte(o)));
+            let spans = &spans[..spans.len().min(MAX_WIRE_SPANS)];
+            put_count(&mut out, spans.len());
+            for s in spans {
+                out.push(s.phase.to_byte());
+                out.push(s.party.to_byte());
+                match s.worker {
+                    None => out.push(0),
+                    Some(w) => {
+                        out.push(1);
+                        put_u32(&mut out, w);
+                    }
+                }
+                put_u64(&mut out, s.start_ns);
+                put_u64(&mut out, s.dur_ns);
+            }
             match delta {
                 None => out.push(0),
                 Some(d) => {
@@ -544,6 +582,34 @@ pub fn decode_reply<G: Group>(bytes: &[u8]) -> Result<ServerReply<G>> {
                 .iter()
                 .map(|&b| outcome_of(b))
                 .collect::<Result<Vec<_>>>()?;
+            let n_spans = get_u32(bytes, &mut off)? as usize;
+            ensure!(
+                n_spans <= MAX_WIRE_SPANS,
+                "round reply declares {n_spans} spans (wire cap {MAX_WIRE_SPANS})"
+            );
+            let mut spans = Vec::with_capacity(n_spans.min(bytes.len()));
+            for i in 0..n_spans {
+                let head = get_slice(bytes, &mut off, 3)?;
+                let (phase_b, party_b, worker_tag) = (head[0], head[1], head[2]);
+                let phase = Phase::from_byte(phase_b)
+                    .ok_or_else(|| anyhow!("unknown span phase byte {phase_b} (span {i})"))?;
+                let party = Party::from_byte(party_b)
+                    .ok_or_else(|| anyhow!("unknown span party byte {party_b} (span {i})"))?;
+                let worker = match worker_tag {
+                    0 => None,
+                    1 => Some(get_u32(bytes, &mut off)?),
+                    t => bail!("unknown span worker tag {t} (span {i})"),
+                };
+                let start_ns = get_u64(bytes, &mut off)?;
+                let dur_ns = get_u64(bytes, &mut off)?;
+                spans.push(Span {
+                    phase,
+                    party,
+                    worker,
+                    start_ns,
+                    dur_ns,
+                });
+            }
             let delta = match *bytes
                 .get(off)
                 .ok_or_else(|| anyhow!("truncated round reply"))?
@@ -559,6 +625,7 @@ pub fn decode_reply<G: Group>(bytes: &[u8]) -> Result<ServerReply<G>> {
                 delta,
                 inter_sent,
                 outcomes,
+                spans,
             }
         }
         REP_VERIFIED => {
@@ -701,6 +768,7 @@ mod tests {
                 delta: Some(vec![5u128, 6, 7]),
                 inter_sent: 999,
                 outcomes: vec![],
+                spans: vec![],
             },
             ServerReply::Round {
                 server_time: Duration::ZERO,
@@ -710,6 +778,22 @@ mod tests {
                     ClientOutcome::Completed,
                     ClientOutcome::Dropped,
                     ClientOutcome::StragglerCut,
+                ],
+                spans: vec![
+                    Span {
+                        phase: Phase::Upload,
+                        party: Party::S0,
+                        worker: None,
+                        start_ns: 17,
+                        dur_ns: 5_000,
+                    },
+                    Span {
+                        phase: Phase::Eval,
+                        party: Party::S1,
+                        worker: Some(3),
+                        start_ns: u64::MAX,
+                        dur_ns: 0,
+                    },
                 ],
             },
             ServerReply::Verified {
@@ -740,6 +824,13 @@ mod tests {
             delta: Some(vec![9]),
             inter_sent: 3,
             outcomes: vec![ClientOutcome::Completed, ClientOutcome::Dropped],
+            spans: vec![Span {
+                phase: Phase::Merge,
+                party: Party::S0,
+                worker: Some(1),
+                start_ns: 2,
+                dur_ns: 3,
+            }],
         };
         let enc = encode_reply(&reply);
         for cut in 0..enc.len() {
@@ -754,12 +845,57 @@ mod tests {
             delta: None,
             inter_sent: 0,
             outcomes: vec![ClientOutcome::StragglerCut],
+            spans: vec![],
         };
         let mut enc = encode_reply(&reply);
-        // The single outcome byte sits just before the trailing delta tag.
-        let pos = enc.len() - 2;
+        // The single outcome byte sits just before the empty span list
+        // (u32 count) and the trailing delta tag.
+        let pos = enc.len() - 6;
         assert_eq!(enc[pos], 2);
         enc[pos] = 9;
         assert!(decode_reply::<u64>(&enc).is_err());
+    }
+
+    #[test]
+    fn span_bytes_reject_unknowns_and_inflated_counts() {
+        let reply: ServerReply<u64> = ServerReply::Round {
+            server_time: Duration::ZERO,
+            delta: None,
+            inter_sent: 0,
+            outcomes: vec![],
+            spans: vec![Span {
+                phase: Phase::Eval,
+                party: Party::S1,
+                worker: Some(3),
+                start_ns: 10,
+                dur_ns: 20,
+            }],
+        };
+        let enc = encode_reply(&reply);
+        assert!(matches!(
+            decode_reply::<u64>(&enc).unwrap(),
+            ServerReply::Round { spans, .. } if spans == reply_spans(&reply)
+        ));
+        // First span byte: tag(1) + server_time(8) + inter(8) +
+        // outcome count(4) + span count(4).
+        let base = 25;
+        for (delta, what) in [(0, "phase"), (1, "party"), (2, "worker tag")] {
+            let mut bad = enc.clone();
+            bad[base + delta] = 99;
+            let err = decode_reply::<u64>(&bad).unwrap_err().to_string();
+            assert!(err.contains("span"), "{what}: {err}");
+        }
+        // Inflate the declared span count past the wire cap.
+        let mut bad = enc;
+        bad[base - 4..base].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = decode_reply::<u64>(&bad).unwrap_err().to_string();
+        assert!(err.contains("wire cap"), "{err}");
+    }
+
+    fn reply_spans<G: Group>(r: &ServerReply<G>) -> Vec<Span> {
+        match r {
+            ServerReply::Round { spans, .. } => spans.clone(),
+            _ => vec![],
+        }
     }
 }

@@ -13,9 +13,11 @@
 //! Arguments are `key=value` pairs, e.g.
 //! `fsl train rounds=30 clients=10 c=0.1 artifacts=artifacts`.
 //! `ssa`/`psr` accept `connect=S0_ADDR,S1_ADDR` to run the round against
-//! two `fsl serve` processes over TCP instead of in-process servers, and
+//! two `fsl serve` processes over TCP instead of in-process servers,
 //! `--json` to emit the round's [`fsl::coordinator::RoundReport`] as one
-//! JSON line on stdout (human logs move to stderr).
+//! JSON line on stdout (human logs move to stderr), and `trace=PATH` to
+//! write the round's per-phase spans as Chrome trace-event JSON (open the
+//! file in Perfetto / `chrome://tracing`).
 
 use anyhow::{anyhow, Result};
 use fsl::coordinator::{
@@ -206,6 +208,20 @@ fn emit_report(json: bool, report: &RoundReport) {
     if json {
         println!("{}", report.to_json());
     }
+}
+
+/// `trace=PATH`: write the round's per-phase spans as Chrome trace-event
+/// JSON, directly loadable in Perfetto / `chrome://tracing`. Multi-epoch
+/// runs rewrite the file each epoch, so it always holds the latest round.
+fn emit_trace(kv: &HashMap<String, String>, report: &RoundReport) -> Result<()> {
+    if let Some(path) = kv.get("trace") {
+        let path = std::path::Path::new(path);
+        report
+            .write_trace(path)
+            .map_err(|e| anyhow!("writing the round trace to {}: {e}", path.display()))?;
+        eprintln!("trace: {} spans → {}", report.spans.len(), path.display());
+    }
+    Ok(())
 }
 
 fn cmd_train(kv: &HashMap<String, String>) -> Result<()> {
@@ -411,6 +427,7 @@ fn cmd_ssa(kv: &HashMap<String, String>, json: bool) -> Result<()> {
                 } else {
                     emit_epoch(json, epoch, recovered, verified, &res.report);
                 }
+                emit_trace(kv, &res.report)?;
                 anyhow::ensure!(
                     verified,
                     "epoch {epoch}: reconstructed delta does not match the surviving cohort"
@@ -491,6 +508,7 @@ fn cmd_psr(kv: &HashMap<String, String>, json: bool) -> Result<()> {
         mb(res.report.client_download_bytes) / n as f64,
     );
     emit_report(json, &res.report);
+    emit_trace(kv, &res.report)?;
     rt.shutdown()?;
     Ok(())
 }

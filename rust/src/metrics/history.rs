@@ -1,0 +1,112 @@
+//! Append-only bench history: one JSON line per datapoint in
+//! `artifacts/HISTORY.jsonl`, so perf trajectories persist across PRs
+//! instead of evaporating as loose `BENCH_*.json` files in the CWD.
+//!
+//! Line schema (version [`HISTORY_SCHEMA`]):
+//!
+//! ```json
+//! {"schema":1,"bench":"psr_serving","git_rev":"d3a33d3","unix_ts":1754610000,
+//!  "metrics":{"serial_ms":12.3,...}}
+//! ```
+//!
+//! `cargo run -p xtask -- bench-diff` compares the two newest datapoints
+//! per bench and fails CI on compute or wire-byte regressions.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::metrics::json::JsonObj;
+
+/// Version stamp on every history line; bump on any breaking change to
+/// the line layout so `bench-diff` can refuse mixed-schema comparisons.
+pub const HISTORY_SCHEMA: u64 = 1;
+
+/// Where datapoints land: `$FSL_HISTORY` if set, else
+/// `artifacts/HISTORY.jsonl` under the current directory (the repo root
+/// for `cargo bench`).
+pub fn default_path() -> PathBuf {
+    match std::env::var_os("FSL_HISTORY") {
+        Some(p) if !p.is_empty() => PathBuf::from(p),
+        _ => PathBuf::from("artifacts/HISTORY.jsonl"),
+    }
+}
+
+/// Append one schema-versioned datapoint for `bench` to `path`,
+/// creating parent directories as needed. `fill` adds the bench's
+/// metric fields; the envelope (schema, bench name, git rev, unix
+/// timestamp) is stamped here so every producer agrees on it. Returns
+/// the appended line.
+pub fn append_with(
+    path: &Path,
+    bench: &str,
+    fill: impl FnOnce(&mut JsonObj),
+) -> std::io::Result<String> {
+    let mut metrics = JsonObj::new();
+    fill(&mut metrics);
+    let mut line = JsonObj::new();
+    line.field_u64("schema", HISTORY_SCHEMA)
+        .field_str("bench", bench)
+        .field_str("git_rev", &git_rev())
+        .field_u64("unix_ts", unix_ts())
+        .field_raw("metrics", &metrics.finish());
+    let line = line.finish();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{line}")?;
+    Ok(line)
+}
+
+fn git_rev() -> String {
+    let out = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output();
+    match out {
+        Ok(o) if o.status.success() => {
+            let rev = String::from_utf8_lossy(&o.stdout).trim().to_string();
+            if rev.is_empty() {
+                "unknown".into()
+            } else {
+                rev
+            }
+        }
+        _ => "unknown".into(),
+    }
+}
+
+fn unix_ts() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0, |d| d.as_secs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::json;
+
+    #[test]
+    fn append_writes_valid_schema_versioned_lines() {
+        let dir = std::env::temp_dir().join(format!("fsl_history_{}", std::process::id()));
+        let path = dir.join("HISTORY.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let l1 = append_with(&path, "bench_a", |m| {
+            m.field_f64("wall_ms", 12.5, 3);
+        })
+        .unwrap();
+        let l2 = append_with(&path, "bench_a", |m| {
+            m.field_f64("wall_ms", 13.5, 3);
+        })
+        .unwrap();
+        assert!(json::validate(&l1), "{l1}");
+        assert!(l1.starts_with("{\"schema\":1,\"bench\":\"bench_a\""), "{l1}");
+        assert!(l1.contains("\"git_rev\":"), "{l1}");
+        assert!(l1.contains("\"metrics\":{\"wall_ms\":12.500}"), "{l1}");
+        let on_disk = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(on_disk, format!("{l1}\n{l2}\n"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

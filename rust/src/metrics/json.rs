@@ -1,0 +1,348 @@
+//! A minimal hand-rolled JSON writer shared by `RoundReport::to_json`,
+//! the bench datapoints, and the `artifacts/HISTORY.jsonl` history file.
+//!
+//! The repo vendors no serde; every JSON producer used to interpolate
+//! strings straight into `format!` which silently breaks on quotes,
+//! backslashes or control characters. `JsonObj` centralises the escaping
+//! so every emitter produces valid JSON by construction, and [`validate`]
+//! gives tests a dependency-free syntax check for whole documents.
+
+use std::fmt::Write as _;
+
+/// Escape a string for inclusion inside a JSON string literal (the
+/// surrounding quotes are the caller's).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Incremental JSON object writer. Fields appear in insertion order;
+/// string values are escaped, numeric values are written verbatim.
+#[derive(Debug, Default)]
+pub struct JsonObj {
+    buf: String,
+    any: bool,
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        JsonObj {
+            buf: String::from("{"),
+            any: false,
+        }
+    }
+
+    fn key(&mut self, name: &str) {
+        if self.any {
+            self.buf.push(',');
+        }
+        self.any = true;
+        let _ = write!(self.buf, "\"{}\":", escape(name));
+    }
+
+    pub fn field_str(&mut self, name: &str, value: &str) -> &mut Self {
+        self.key(name);
+        let _ = write!(self.buf, "\"{}\"", escape(value));
+        self
+    }
+
+    pub fn field_u64(&mut self, name: &str, value: u64) -> &mut Self {
+        self.key(name);
+        let _ = write!(self.buf, "{value}");
+        self
+    }
+
+    /// A float with a fixed number of decimals (JSON has no NaN/Inf:
+    /// non-finite values are clamped to 0 rather than corrupting the
+    /// document).
+    pub fn field_f64(&mut self, name: &str, value: f64, decimals: usize) -> &mut Self {
+        self.key(name);
+        let v = if value.is_finite() { value } else { 0.0 };
+        let _ = write!(self.buf, "{v:.decimals$}");
+        self
+    }
+
+    pub fn field_bool(&mut self, name: &str, value: bool) -> &mut Self {
+        self.key(name);
+        let _ = write!(self.buf, "{value}");
+        self
+    }
+
+    /// A pre-rendered JSON value (nested object, array, …). The caller
+    /// vouches that `raw` is itself valid JSON.
+    pub fn field_raw(&mut self, name: &str, raw: &str) -> &mut Self {
+        self.key(name);
+        self.buf.push_str(raw);
+        self
+    }
+
+    pub fn finish(&mut self) -> String {
+        let mut out = std::mem::take(&mut self.buf);
+        out.push('}');
+        self.any = false;
+        out
+    }
+}
+
+/// Render a list of pre-rendered JSON values as a JSON array.
+pub fn array(items: impl IntoIterator<Item = String>) -> String {
+    let mut out = String::from("[");
+    for (i, item) in items.into_iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&item);
+    }
+    out.push(']');
+    out
+}
+
+/// Render a quoted, escaped JSON string literal.
+pub fn string(s: &str) -> String {
+    format!("\"{}\"", escape(s))
+}
+
+/// Check that `s` is one complete, syntactically valid JSON value.
+/// Recursive-descent over the grammar; used by tests to guard every
+/// hand-rolled emitter in the repo.
+pub fn validate(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut pos = 0;
+    if !value(b, &mut pos) {
+        return false;
+    }
+    skip_ws(b, &mut pos);
+    pos == b.len()
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while b.get(*pos).is_some_and(|c| c.is_ascii_whitespace()) {
+        *pos += 1;
+    }
+}
+
+fn value(b: &[u8], pos: &mut usize) -> bool {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        Some(b'{') => object(b, pos),
+        Some(b'[') => array_val(b, pos),
+        Some(b'"') => string_val(b, pos),
+        Some(b't') => literal(b, pos, b"true"),
+        Some(b'f') => literal(b, pos, b"false"),
+        Some(b'n') => literal(b, pos, b"null"),
+        Some(c) if *c == b'-' || c.is_ascii_digit() => number(b, pos),
+        _ => false,
+    }
+}
+
+fn literal(b: &[u8], pos: &mut usize, word: &[u8]) -> bool {
+    if b[*pos..].starts_with(word) {
+        *pos += word.len();
+        true
+    } else {
+        false
+    }
+}
+
+fn object(b: &[u8], pos: &mut usize) -> bool {
+    *pos += 1; // '{'
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return true;
+    }
+    loop {
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b'"') || !string_val(b, pos) {
+            return false;
+        }
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            return false;
+        }
+        *pos += 1;
+        if !value(b, pos) {
+            return false;
+        }
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return true;
+            }
+            _ => return false,
+        }
+    }
+}
+
+fn array_val(b: &[u8], pos: &mut usize) -> bool {
+    *pos += 1; // '['
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return true;
+    }
+    loop {
+        if !value(b, pos) {
+            return false;
+        }
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return true;
+            }
+            _ => return false,
+        }
+    }
+}
+
+fn string_val(b: &[u8], pos: &mut usize) -> bool {
+    *pos += 1; // '"'
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'"' => {
+                *pos += 1;
+                return true;
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => *pos += 1,
+                    Some(b'u') => {
+                        *pos += 1;
+                        for _ in 0..4 {
+                            if !b.get(*pos).is_some_and(u8::is_ascii_hexdigit) {
+                                return false;
+                            }
+                            *pos += 1;
+                        }
+                    }
+                    _ => return false,
+                }
+            }
+            c if c < 0x20 => return false,
+            _ => *pos += 1,
+        }
+    }
+    false
+}
+
+fn number(b: &[u8], pos: &mut usize) -> bool {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let int_start = *pos;
+    while b.get(*pos).is_some_and(u8::is_ascii_digit) {
+        *pos += 1;
+    }
+    if *pos == int_start {
+        return false;
+    }
+    if b.get(*pos) == Some(&b'.') {
+        *pos += 1;
+        let frac_start = *pos;
+        while b.get(*pos).is_some_and(u8::is_ascii_digit) {
+            *pos += 1;
+        }
+        if *pos == frac_start {
+            return false;
+        }
+    }
+    if matches!(b.get(*pos), Some(b'e' | b'E')) {
+        *pos += 1;
+        if matches!(b.get(*pos), Some(b'+' | b'-')) {
+            *pos += 1;
+        }
+        let exp_start = *pos;
+        while b.get(*pos).is_some_and(u8::is_ascii_digit) {
+            *pos += 1;
+        }
+        if *pos == exp_start {
+            return false;
+        }
+    }
+    *pos > start
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_every_risky_character() {
+        assert_eq!(escape("a\"b"), "a\\\"b");
+        assert_eq!(escape("a\\b"), "a\\\\b");
+        assert_eq!(escape("a\nb\tc\r"), "a\\nb\\tc\\r");
+        assert_eq!(escape("\u{01}"), "\\u0001");
+        assert_eq!(escape("plain"), "plain");
+    }
+
+    #[test]
+    fn builder_emits_valid_json_with_hostile_strings() {
+        let mut o = JsonObj::new();
+        o.field_str("kind", "a\"b\\c\nd")
+            .field_u64("n", 42)
+            .field_f64("ms", 1.23456, 3)
+            .field_bool("ok", true)
+            .field_raw("list", &array(vec![string("x\"y"), "7".into()]));
+        let s = o.finish();
+        assert!(validate(&s), "{s}");
+        assert!(s.contains("\"ms\":1.235"), "{s}");
+    }
+
+    #[test]
+    fn empty_object_and_nonfinite_floats() {
+        let s = JsonObj::new().finish();
+        assert_eq!(s, "{}");
+        let mut o = JsonObj::new();
+        o.field_f64("bad", f64::NAN, 2);
+        let s = o.finish();
+        assert!(validate(&s), "{s}");
+        assert!(s.contains("0.00"), "{s}");
+    }
+
+    #[test]
+    fn validator_accepts_and_rejects() {
+        for good in [
+            "{}",
+            "[]",
+            "null",
+            "-1.5e-3",
+            r#"{"a":[1,2,{"b":"c\n"}],"d":false}"#,
+            "  {  \"x\" : 1 }  ",
+        ] {
+            assert!(validate(good), "{good}");
+        }
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "{'a':1}",
+            "1 2",
+            "{\"a\":1,}",
+            "\"unterminated",
+            "01e",
+            "nul",
+        ] {
+            assert!(!validate(bad), "{bad}");
+        }
+    }
+}

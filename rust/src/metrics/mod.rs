@@ -9,6 +9,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+pub mod history;
+pub mod json;
+pub mod trace;
+
 /// Direction-tagged byte counters for one party.
 #[derive(Debug, Default)]
 pub struct CommMeter {
@@ -32,6 +36,7 @@ impl CommMeter {
     /// Record an incoming message.
     pub fn record_recv(&self, bytes: usize) {
         self.recv_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Total uploaded bytes.
@@ -44,7 +49,9 @@ impl CommMeter {
         self.recv_bytes.load(Ordering::Relaxed)
     }
 
-    /// Total messages sent.
+    /// Total messages in *both* directions: `record_send` and
+    /// `record_recv` each count one. (A long-standing bug counted sends
+    /// only, so recv-heavy endpoints under-reported traffic.)
     pub fn messages(&self) -> u64 {
         self.messages.load(Ordering::Relaxed)
     }
@@ -116,6 +123,18 @@ mod tests {
         assert_eq!(m.recv(), 7);
         m.reset();
         assert_eq!(m.sent(), 0);
+        assert_eq!(m.messages(), 0);
+    }
+
+    /// Regression: `record_recv` used to skip the message counter, so
+    /// `messages()` silently reflected sends only.
+    #[test]
+    fn meter_counts_messages_in_both_directions() {
+        let m = CommMeter::shared();
+        m.record_send(10);
+        m.record_recv(20);
+        m.record_recv(30);
+        assert_eq!(m.messages(), 3);
     }
 
     #[test]

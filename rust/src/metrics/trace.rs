@@ -1,0 +1,435 @@
+//! Per-phase round tracing: a lock-cheap span recorder with a bounded
+//! ring buffer, shared by the protocol engines, both server halves and
+//! the round driver.
+//!
+//! Every round phase — keygen / upload / eval / merge / reply — records
+//! one [`Span`] tagged with the [`Party`] that did the work and (for
+//! sharded evaluation) the shard worker that ran it. Span timestamps are
+//! nanoseconds since the recorder's last [`TraceRecorder::reset`], i.e.
+//! relative to that party's round start; the three processes of a TCP
+//! deployment do not share a clock, so cross-party offsets are relative,
+//! not absolute (see docs/ARCHITECTURE.md § Observability).
+//!
+//! The recorder owns the clock: callers obtain a [`SpanStart`] from
+//! [`TraceRecorder::begin`] and close it with [`TraceRecorder::end`], so
+//! instrumented protocol code itself contains no time source (keeping
+//! the `determinism` lint's no-clocks rule intact for `protocol/`).
+//! Recording is a short `Mutex` critical section around a `VecDeque`
+//! push — no allocation once the ring is warm — and overflow evicts the
+//! oldest span while counting the loss in [`TraceRecorder::dropped`].
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::metrics::json;
+
+/// Default ring capacity: generous for any realistic round (a 128-way
+/// sharded eval across five phases is still well under 1k spans).
+pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
+
+/// The round phase a span measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Client-side DPF/U-DPF key generation (or server-side hint work).
+    Keygen,
+    /// Receiving the cohort's uploads (server) / sending them (driver).
+    Upload,
+    /// DPF evaluation over the weight domain, per shard worker.
+    Eval,
+    /// Combining shard partials (and, on `S_0`, share reconstruction).
+    Merge,
+    /// Shipping the round result: share exchange and reply assembly.
+    Reply,
+}
+
+impl Phase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::Keygen => "keygen",
+            Phase::Upload => "upload",
+            Phase::Eval => "eval",
+            Phase::Merge => "merge",
+            Phase::Reply => "reply",
+        }
+    }
+
+    pub(crate) fn to_byte(self) -> u8 {
+        match self {
+            Phase::Keygen => 0,
+            Phase::Upload => 1,
+            Phase::Eval => 2,
+            Phase::Merge => 3,
+            Phase::Reply => 4,
+        }
+    }
+
+    pub(crate) fn from_byte(b: u8) -> Option<Self> {
+        Some(match b {
+            0 => Phase::Keygen,
+            1 => Phase::Upload,
+            2 => Phase::Eval,
+            3 => Phase::Merge,
+            4 => Phase::Reply,
+            _ => return None,
+        })
+    }
+}
+
+/// Which participant recorded a span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Party {
+    /// The round driver acting for the client cohort.
+    Client,
+    /// The leader server.
+    S0,
+    /// The worker server.
+    S1,
+}
+
+impl Party {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Party::Client => "client",
+            Party::S0 => "s0",
+            Party::S1 => "s1",
+        }
+    }
+
+    /// Chrome trace-event `pid` lane for this party.
+    pub fn pid(self) -> u64 {
+        match self {
+            Party::Client => 0,
+            Party::S0 => 1,
+            Party::S1 => 2,
+        }
+    }
+
+    pub(crate) fn to_byte(self) -> u8 {
+        match self {
+            Party::Client => 0,
+            Party::S0 => 1,
+            Party::S1 => 2,
+        }
+    }
+
+    pub(crate) fn from_byte(b: u8) -> Option<Self> {
+        Some(match b {
+            0 => Party::Client,
+            1 => Party::S0,
+            2 => Party::S1,
+            _ => return None,
+        })
+    }
+
+    /// The party enum for a server index (0 = leader, 1 = worker).
+    pub fn server(party: usize) -> Self {
+        if party == 0 {
+            Party::S0
+        } else {
+            Party::S1
+        }
+    }
+}
+
+/// One timed phase of one round, tagged with who did the work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub phase: Phase,
+    pub party: Party,
+    /// Shard worker (Eval) or client index (Keygen); `None` for
+    /// whole-phase spans.
+    pub worker: Option<u32>,
+    /// Nanoseconds since the recorder's round epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+/// An open span: the instant work began, relative to the recorder's
+/// round epoch. Closed by [`TraceRecorder::end`].
+#[derive(Debug, Clone, Copy)]
+pub struct SpanStart {
+    at_ns: u64,
+}
+
+struct Inner {
+    epoch: Instant,
+    spans: VecDeque<Span>,
+    dropped: u64,
+}
+
+/// Bounded multi-producer span ring. Cheap enough to leave on
+/// permanently: recording is one short mutex hold, and a full ring
+/// evicts oldest-first rather than blocking or growing.
+pub struct TraceRecorder {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder")
+            .field("capacity", &self.capacity)
+            .field("len", &self.len())
+            .finish()
+    }
+}
+
+impl TraceRecorder {
+    pub fn new(capacity: usize) -> Self {
+        TraceRecorder {
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner {
+                epoch: Instant::now(),
+                spans: VecDeque::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    pub fn shared(capacity: usize) -> Arc<Self> {
+        Arc::new(Self::new(capacity))
+    }
+
+    /// A poisoned mutex only means another recorder panicked mid-push;
+    /// the span data itself stays coherent, so tracing keeps working.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Start a new round: clear the ring, zero the loss counter and
+    /// re-base the span clock at "now".
+    pub fn reset(&self) {
+        let mut g = self.lock();
+        g.epoch = Instant::now();
+        g.spans.clear();
+        g.dropped = 0;
+    }
+
+    /// Open a span at "now".
+    pub fn begin(&self) -> SpanStart {
+        let g = self.lock();
+        SpanStart {
+            at_ns: g.epoch.elapsed().as_nanos() as u64,
+        }
+    }
+
+    /// Close `start` as a `phase` span for `party` and record it.
+    pub fn end(&self, start: SpanStart, phase: Phase, party: Party, worker: Option<u32>) {
+        let mut g = self.lock();
+        let now = g.epoch.elapsed().as_nanos() as u64;
+        let span = Span {
+            phase,
+            party,
+            worker,
+            start_ns: start.at_ns,
+            dur_ns: now.saturating_sub(start.at_ns),
+        };
+        push(&mut g, self.capacity, span);
+    }
+
+    /// Record a pre-built span (used when replaying spans received from
+    /// a remote party into the driver's stream).
+    pub fn record(&self, span: Span) {
+        let mut g = self.lock();
+        push(&mut g, self.capacity, span);
+    }
+
+    /// Remove and return every recorded span, oldest first. The loss
+    /// counter survives (see [`Self::dropped`]); `reset` zeroes it.
+    pub fn drain(&self) -> Vec<Span> {
+        self.lock().spans.drain(..).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Spans evicted by ring overflow since the last `reset`.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+}
+
+fn push(g: &mut Inner, capacity: usize, span: Span) {
+    if g.spans.len() == capacity {
+        g.spans.pop_front();
+        g.dropped += 1;
+    }
+    g.spans.push_back(span);
+}
+
+/// Clamp a worker/client index into the span tag domain (indices are
+/// bounded well below `u32::MAX` everywhere, but a span tag is never
+/// worth a truncation error).
+pub fn worker(i: usize) -> Option<u32> {
+    Some(u32::try_from(i).unwrap_or(u32::MAX))
+}
+
+/// A recorder handle pre-tagged with the recording party, handed to the
+/// protocol engines so they need neither a clock nor knowledge of which
+/// server they run inside.
+#[derive(Clone)]
+pub struct TraceSink {
+    rec: Arc<TraceRecorder>,
+    party: Party,
+}
+
+impl std::fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceSink").field("party", &self.party).finish()
+    }
+}
+
+impl TraceSink {
+    pub fn new(rec: Arc<TraceRecorder>, party: Party) -> Self {
+        TraceSink { rec, party }
+    }
+
+    pub fn begin(&self) -> SpanStart {
+        self.rec.begin()
+    }
+
+    pub fn end(&self, start: SpanStart, phase: Phase, worker: Option<u32>) {
+        self.rec.end(start, phase, self.party, worker);
+    }
+
+    pub fn party(&self) -> Party {
+        self.party
+    }
+}
+
+/// Render spans as a Chrome trace-event JSON document (the `[{…},…]`
+/// array form), directly loadable in Perfetto / `chrome://tracing`.
+///
+/// Lanes: `pid` is the party (0 = client driver, 1 = `S_0`, 2 = `S_1`),
+/// `tid` is the shard worker + 1 (0 for whole-phase spans). Timestamps
+/// are microseconds from each party's own round start — parties share a
+/// time base only in-proc, so compare phase *durations* across parties,
+/// not absolute offsets.
+pub fn chrome_trace_json(spans: &[Span]) -> String {
+    let mut events: Vec<String> = Vec::with_capacity(spans.len() + 3);
+    for party in [Party::Client, Party::S0, Party::S1] {
+        let mut meta = json::JsonObj::new();
+        meta.field_str("ph", "M")
+            .field_str("name", "process_name")
+            .field_u64("pid", party.pid())
+            .field_u64("tid", 0)
+            .field_raw(
+                "args",
+                &json::JsonObj::new().field_str("name", party.as_str()).finish(),
+            );
+        events.push(meta.finish());
+    }
+    for s in spans {
+        let mut ev = json::JsonObj::new();
+        ev.field_str("name", s.phase.as_str())
+            .field_str("ph", "X")
+            .field_str("cat", "fsl")
+            .field_f64("ts", s.start_ns as f64 / 1_000.0, 3)
+            .field_f64("dur", s.dur_ns as f64 / 1_000.0, 3)
+            .field_u64("pid", s.party.pid())
+            .field_u64("tid", s.worker.map_or(0, |w| u64::from(w) + 1));
+        events.push(ev.finish());
+    }
+    json::array(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_round_trip_through_recorder() {
+        let rec = TraceRecorder::new(16);
+        let a = rec.begin();
+        rec.end(a, Phase::Eval, Party::S0, Some(3));
+        let b = rec.begin();
+        rec.end(b, Phase::Merge, Party::S0, None);
+        let spans = rec.drain();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].phase, Phase::Eval);
+        assert_eq!(spans[0].worker, Some(3));
+        assert!(spans[1].start_ns >= spans[0].start_ns);
+        assert!(rec.is_empty());
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overflow_evicts_oldest_and_counts_losses() {
+        let rec = TraceRecorder::new(4);
+        for i in 0..10u32 {
+            rec.record(Span {
+                phase: Phase::Eval,
+                party: Party::S1,
+                worker: Some(i),
+                start_ns: u64::from(i),
+                dur_ns: 1,
+            });
+        }
+        assert_eq!(rec.len(), 4);
+        assert_eq!(rec.dropped(), 6);
+        let kept: Vec<u32> = rec.drain().iter().map(|s| s.worker.unwrap()).collect();
+        assert_eq!(kept, vec![6, 7, 8, 9]);
+        rec.reset();
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn reset_rebases_the_clock() {
+        let rec = TraceRecorder::new(8);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        rec.reset();
+        let s = rec.begin();
+        rec.end(s, Phase::Keygen, Party::Client, None);
+        let spans = rec.drain();
+        // Well under the 2ms pre-reset sleep: the epoch moved.
+        assert!(spans[0].start_ns < 2_000_000, "{}", spans[0].start_ns);
+    }
+
+    #[test]
+    fn phase_and_party_bytes_round_trip() {
+        for p in [Phase::Keygen, Phase::Upload, Phase::Eval, Phase::Merge, Phase::Reply] {
+            assert_eq!(Phase::from_byte(p.to_byte()), Some(p));
+        }
+        for p in [Party::Client, Party::S0, Party::S1] {
+            assert_eq!(Party::from_byte(p.to_byte()), Some(p));
+        }
+        assert_eq!(Phase::from_byte(9), None);
+        assert_eq!(Party::from_byte(9), None);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_expected_lanes() {
+        let spans = vec![
+            Span {
+                phase: Phase::Eval,
+                party: Party::S1,
+                worker: Some(2),
+                start_ns: 1_500,
+                dur_ns: 2_000,
+            },
+            Span {
+                phase: Phase::Reply,
+                party: Party::Client,
+                worker: None,
+                start_ns: 4_000,
+                dur_ns: 500,
+            },
+        ];
+        let doc = chrome_trace_json(&spans);
+        assert!(json::validate(&doc), "{doc}");
+        assert!(doc.contains("\"name\":\"eval\""), "{doc}");
+        assert!(doc.contains("\"ph\":\"X\""), "{doc}");
+        assert!(doc.contains("\"ts\":1.500"), "{doc}");
+        assert!(doc.contains("\"pid\":2,\"tid\":3"), "{doc}");
+        assert!(doc.contains("process_name"), "{doc}");
+    }
+}

@@ -82,7 +82,8 @@ pub struct MeterSnapshot {
     pub sent: u64,
     /// Bytes received since the last reset.
     pub recv: u64,
-    /// Messages sent since the last reset.
+    /// Messages transferred in either direction since the last reset
+    /// (each send and each recv counts one).
     pub messages: u64,
 }
 

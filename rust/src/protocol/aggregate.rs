@@ -33,6 +33,7 @@ use super::session::Session;
 use crate::crypto::prg::{prf_seed, Seed};
 use crate::dpf::{self, DpfKey, EvalWorkspace, KeyView, MasterKeyBatch, PublicPart};
 use crate::group::Group;
+use crate::metrics::trace::{self, Phase, TraceSink};
 
 /// The shard planner shared by the write-path [`AggregationEngine`] and
 /// the read-path [`super::retrieve::RetrievalEngine`]: a worker-count
@@ -108,19 +109,21 @@ impl Sharding {
     /// Run `work` over the flattened unit space `0..units`, split into at
     /// most `min(threads, units)` contiguous non-empty ranges — one
     /// scoped thread each (no thread is spawned for a single shard).
-    /// Per-shard results come back in unit order, so contiguous per-unit
-    /// outputs can simply be concatenated.
+    /// `work` receives its shard index (`0..busy`) and unit range; the
+    /// index tags per-worker trace spans. Per-shard results come back in
+    /// unit order, so contiguous per-unit outputs can simply be
+    /// concatenated.
     pub fn run<R: Send>(
         &self,
         units: usize,
-        work: impl Fn(std::ops::Range<usize>) -> R + Sync,
+        work: impl Fn(usize, std::ops::Range<usize>) -> R + Sync,
     ) -> Vec<R> {
         if units == 0 {
             return Vec::new();
         }
         let shards = self.threads.min(units);
         if shards <= 1 {
-            return vec![work(0..units)];
+            return vec![work(0, 0..units)];
         }
         let chunk = units.div_ceil(shards);
         // div_ceil chunking can leave trailing shards empty (units = 9,
@@ -133,7 +136,7 @@ impl Sharding {
                     let work = &work;
                     let lo = (t * chunk).min(units);
                     let hi = ((t + 1) * chunk).min(units);
-                    scope.spawn(move || work(lo..hi))
+                    scope.spawn(move || work(t, lo..hi))
                 })
                 .collect();
             handles
@@ -299,9 +302,10 @@ pub fn uploads_of<G: Group>(batches: &[MasterKeyBatch<G>], party: u8) -> Vec<Pub
 
 /// The unified, sharded server-aggregation engine (the paper enables
 /// multi-threading for all experiments, §7.2).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct AggregationEngine {
     sharding: Sharding,
+    trace: Option<TraceSink>,
 }
 
 impl AggregationEngine {
@@ -312,7 +316,17 @@ impl AggregationEngine {
 
     /// Engine over an existing shard plan.
     pub fn with_sharding(sharding: Sharding) -> Self {
-        AggregationEngine { sharding }
+        AggregationEngine {
+            sharding,
+            trace: None,
+        }
+    }
+
+    /// Attach a trace sink: every aggregation records one `eval` span per
+    /// shard worker and one `merge` span for the partial-sum fold.
+    pub fn with_trace(mut self, sink: TraceSink) -> Self {
+        self.trace = Some(sink);
+        self
     }
 
     /// Single-threaded engine (deterministic microbenches, tests).
@@ -381,18 +395,33 @@ impl AggregationEngine {
             return;
         }
         if self.sharding.threads().min(units) <= 1 {
+            let s = self.trace.as_ref().map(|t| t.begin());
             Worker::new(session, source).run_range(0, units, acc);
+            if let (Some(t), Some(s)) = (&self.trace, s) {
+                t.end(s, Phase::Eval, trace::worker(0));
+                // Zero-duration merge keeps the serial span stream the
+                // same shape as the sharded one.
+                t.end(t.begin(), Phase::Merge, None);
+            }
             return;
         }
-        let partials = self.sharding.run(units, |range| {
+        let partials = self.sharding.run(units, |w, range| {
+            let s = self.trace.as_ref().map(|t| t.begin());
             let mut part = vec![G::zero(); session.domain_size()];
             Worker::new(session, source).run_range(range.start, range.end, &mut part);
+            if let (Some(t), Some(s)) = (&self.trace, s) {
+                t.end(s, Phase::Eval, trace::worker(w));
+            }
             part
         });
+        let s = self.trace.as_ref().map(|t| t.begin());
         for part in &partials {
             for (a, v) in acc.iter_mut().zip(part) {
                 a.add_assign(v);
             }
+        }
+        if let (Some(t), Some(s)) = (&self.trace, s) {
+            t.end(s, Phase::Merge, None);
         }
     }
 

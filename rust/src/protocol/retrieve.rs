@@ -29,12 +29,14 @@ use super::aggregate::{
 use super::session::Session;
 use crate::dpf::{DpfKey, EvalWorkspace};
 use crate::group::Group;
+use crate::metrics::trace::{self, Phase, TraceSink};
 
 /// The unified, sharded PSR answer engine — the read-path twin of
 /// [`super::aggregate::AggregationEngine`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RetrievalEngine {
     sharding: Sharding,
+    trace: Option<TraceSink>,
 }
 
 impl RetrievalEngine {
@@ -46,7 +48,17 @@ impl RetrievalEngine {
     /// Engine over an existing shard plan (e.g. the one the co-located
     /// aggregation engine already uses).
     pub fn with_sharding(sharding: Sharding) -> Self {
-        RetrievalEngine { sharding }
+        RetrievalEngine {
+            sharding,
+            trace: None,
+        }
+    }
+
+    /// Attach a trace sink: every answered batch records one `eval` span
+    /// per shard worker and one `merge` span for the row re-assembly.
+    pub fn with_trace(mut self, sink: TraceSink) -> Self {
+        self.trace = Some(sink);
+        self
     }
 
     /// Single-threaded engine (deterministic microbenches, tests).
@@ -107,16 +119,21 @@ impl RetrievalEngine {
         if units == 0 {
             return vec![Vec::new(); clients];
         }
-        let shard_outputs = self.sharding.run(units, |range| {
+        let shard_outputs = self.sharding.run(units, |w, range| {
+            let s = self.trace.as_ref().map(|t| t.begin());
             let mut worker = AnswerWorker::new(session, weights, source);
             let mut out = Vec::with_capacity(range.len());
             for unit in range {
                 out.push(worker.answer_unit(unit));
             }
+            if let (Some(t), Some(s)) = (&self.trace, s) {
+                t.end(s, Phase::Eval, trace::worker(w));
+            }
             out
         });
         // Shards are contiguous unit ranges in order: concatenate, then
         // cut the flat answer vector back into per-client rows.
+        let s = self.trace.as_ref().map(|t| t.begin());
         let mut flat = Vec::with_capacity(units);
         for shard in shard_outputs {
             flat.extend(shard);
@@ -125,6 +142,9 @@ impl RetrievalEngine {
         let mut it = flat.into_iter();
         for _ in 0..clients {
             rows.push(it.by_ref().take(slots).collect());
+        }
+        if let (Some(t), Some(s)) = (&self.trace, s) {
+            t.end(s, Phase::Merge, None);
         }
         rows
     }

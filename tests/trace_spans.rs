@@ -1,0 +1,238 @@
+//! End-to-end checks on the per-phase round tracing: every party of an
+//! SSA round emits the expected span stream, the TCP transport reports
+//! the same span shape as the in-process one, the recorder ring stays
+//! bounded under span pressure, and the Chrome trace export is valid
+//! JSON with the documented lane layout.
+
+use fsl::coordinator::{serve, FslRuntimeBuilder, RoundReport, ServeOptions};
+use fsl::crypto::rng::Rng;
+use fsl::hashing::CuckooParams;
+use fsl::metrics::json;
+use fsl::metrics::trace::{Party, Phase, Span, TraceRecorder, TraceSink};
+use fsl::net::transport::tcp::{TcpAcceptor, TcpOptions};
+use fsl::protocol::{psr, RetrievalEngine, Session, SessionParams};
+use std::net::TcpListener;
+
+const THREADS: usize = 4;
+const CLIENTS: usize = 3;
+
+fn session() -> Session {
+    Session::new_full(SessionParams {
+        m: 1 << 12,
+        k: 64,
+        cuckoo: CuckooParams::default().with_seed(0x7AC3),
+    })
+}
+
+/// One strict SSA round through the given runtime, identical inputs for
+/// every caller (fixed rng seed).
+fn run_ssa(mut rt: fsl::coordinator::FslRuntime<u64>) -> (RoundReport, Vec<u64>) {
+    let mut rng = Rng::new(0xDECAF);
+    let m = 1u64 << 12;
+    let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+    rt.set_weights(weights).expect("set_weights");
+    let updates: Vec<(Vec<u64>, Vec<u64>)> = (0..CLIENTS)
+        .map(|c| {
+            let sel = rng.sample_distinct(64, m);
+            let dl = sel.iter().map(|&x| x * 7 + c as u64 + 1).collect();
+            (sel, dl)
+        })
+        .collect();
+    let out = rt.ssa(&updates, &mut rng).expect("ssa round");
+    rt.shutdown().expect("shutdown");
+    (out.report, out.delta)
+}
+
+fn inproc_runtime() -> fsl::coordinator::FslRuntime<u64> {
+    FslRuntimeBuilder::from_session(session())
+        .threads(THREADS)
+        .max_clients(CLIENTS)
+        .build::<u64>()
+        .expect("in-proc build")
+}
+
+fn of_party(spans: &[Span], party: Party) -> Vec<Span> {
+    spans.iter().copied().filter(|s| s.party == party).collect()
+}
+
+fn of_phase(spans: &[Span], phase: Phase) -> Vec<Span> {
+    spans.iter().copied().filter(|s| s.phase == phase).collect()
+}
+
+fn end_ns(s: &Span) -> u64 {
+    s.start_ns + s.dur_ns
+}
+
+#[test]
+fn inproc_ssa_round_traces_every_phase_for_every_party() {
+    let (report, _) = run_ssa(inproc_runtime());
+    assert!(!report.spans.is_empty(), "round produced no spans");
+
+    // Driver lane: one keygen per client (worker = client index), then
+    // the upload and the reply wait (SSA has no driver-side merge — the
+    // leader returns the reconstructed delta whole).
+    let client = of_party(&report.spans, Party::Client);
+    let keygens = of_phase(&client, Phase::Keygen);
+    let mut client_ids: Vec<Option<u32>> = keygens.iter().map(|s| s.worker).collect();
+    client_ids.sort();
+    let want: Vec<Option<u32>> = (0..CLIENTS as u32).map(Some).collect();
+    assert_eq!(client_ids, want, "driver keygen spans must cover the cohort");
+    for phase in [Phase::Upload, Phase::Reply] {
+        assert_eq!(
+            of_phase(&client, phase).len(),
+            1,
+            "driver should record exactly one {} span",
+            phase.as_str()
+        );
+    }
+
+    // Server lanes: upload → keygen → per-worker evals → merges → reply,
+    // in that order on each server's own clock.
+    for party in [Party::S0, Party::S1] {
+        let spans = of_party(&report.spans, party);
+        let tag = party.as_str();
+        let uploads = of_phase(&spans, Phase::Upload);
+        let evals = of_phase(&spans, Phase::Eval);
+        let merges = of_phase(&spans, Phase::Merge);
+        let replies = of_phase(&spans, Phase::Reply);
+        assert_eq!(uploads.len(), 1, "{tag}: one upload span");
+        assert_eq!(replies.len(), 1, "{tag}: one reply span");
+        assert!(!merges.is_empty(), "{tag}: at least one merge span");
+
+        // Every shard worker shows up in the eval lane.
+        let mut workers: Vec<Option<u32>> = evals.iter().map(|s| s.worker).collect();
+        workers.sort();
+        workers.dedup();
+        let want: Vec<Option<u32>> = (0..THREADS as u32).map(Some).collect();
+        assert_eq!(workers, want, "{tag}: eval spans must cover all {THREADS} workers");
+
+        // Phase ordering within the party's own monotonic clock.
+        let upload_end = end_ns(&uploads[0]);
+        for e in &evals {
+            assert!(
+                e.start_ns >= upload_end,
+                "{tag}: eval starts before the upload finished"
+            );
+        }
+        let last_eval_end = evals.iter().map(end_ns).max().expect("evals nonempty");
+        for m in &merges {
+            assert!(
+                end_ns(m) >= last_eval_end,
+                "{tag}: a merge ends before the last eval"
+            );
+        }
+        let last_merge_end = merges.iter().map(end_ns).max().expect("merges nonempty");
+        assert!(
+            end_ns(&replies[0]) >= last_merge_end,
+            "{tag}: the reply ends before the last merge"
+        );
+    }
+}
+
+#[test]
+fn tcp_round_reports_the_same_span_shape_as_inproc() {
+    let (inproc_report, inproc_delta) = run_ssa(inproc_runtime());
+
+    let spawn = |party: u8| {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let handle = std::thread::spawn(move || {
+            let acceptor = TcpAcceptor::new(listener, TcpOptions::default());
+            let mut opts = ServeOptions::new(party);
+            opts.threads = THREADS;
+            serve::<u64>(&acceptor, &opts).expect("serve");
+        });
+        (addr, handle)
+    };
+    let (addr0, h0) = spawn(0);
+    let (addr1, h1) = spawn(1);
+    let rt = FslRuntimeBuilder::from_session(session())
+        .max_clients(CLIENTS)
+        .connect::<u64>(&addr0, &addr1)
+        .expect("tcp connect");
+    let (tcp_report, tcp_delta) = run_ssa(rt);
+    h0.join().expect("S0 thread");
+    h1.join().expect("S1 thread");
+
+    assert_eq!(inproc_delta, tcp_delta, "transport must not change the result");
+
+    // Same spans, modulo timing: the (party, phase, worker) multiset is
+    // identical whether the servers run in-thread or behind sockets.
+    let shape = |report: &RoundReport| {
+        let mut v: Vec<(u64, u8, Option<u32>)> = report
+            .spans
+            .iter()
+            .map(|s| (s.party.pid(), s.phase as u8, s.worker))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(
+        shape(&inproc_report),
+        shape(&tcp_report),
+        "TCP and in-proc rounds must report the same span stream"
+    );
+}
+
+#[test]
+fn recorder_ring_stays_bounded_under_engine_pressure() {
+    // A deliberately tiny ring behind a real sharded engine: the round
+    // still completes, the ring never exceeds its capacity, and the
+    // recorder owns up to what it evicted.
+    let session = session();
+    let mut rng = Rng::new(0x0B0B);
+    let m = 1u64 << 12;
+    let weights: Vec<u64> = (0..m).map(|_| rng.next_u64()).collect();
+    let keys: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let sel = rng.sample_distinct(64, m);
+            let (_ctx, batch) =
+                psr::client_query::<u64>(&session, &sel, &mut rng).expect("cuckoo build");
+            batch.server_keys(0)
+        })
+        .collect();
+
+    let rec = TraceRecorder::shared(2);
+    let engine = RetrievalEngine::new(THREADS)
+        .with_trace(TraceSink::new(rec.clone(), Party::S0));
+    let sharded = engine.answer_batch_keys(&session, &weights, &keys);
+    let serial = RetrievalEngine::serial().answer_batch_keys(&session, &weights, &keys);
+    assert_eq!(sharded, serial, "tracing must not change answers");
+
+    // 4 eval spans + 1 merge span went in; only 2 fit.
+    assert_eq!(rec.len(), 2);
+    assert_eq!(rec.dropped(), 3);
+    let spans = rec.drain();
+    assert!(spans.iter().all(|s| s.party == Party::S0));
+}
+
+#[test]
+fn trace_export_is_valid_chrome_json() {
+    let (report, _) = run_ssa(inproc_runtime());
+    let trace = report.trace_json();
+    assert!(json::validate(&trace), "trace export must be valid JSON");
+
+    // The documented lane layout: one process_name metadata record per
+    // party, and X-events for the round phases on the right pids.
+    for party in ["client", "s0", "s1"] {
+        assert!(
+            trace.contains(&format!("\"name\":\"{party}\"")),
+            "missing process_name lane for {party}"
+        );
+    }
+    for phase in ["keygen", "upload", "eval", "merge", "reply"] {
+        assert!(
+            trace.contains(&format!("\"name\":\"{phase}\"")),
+            "missing {phase} X-event"
+        );
+    }
+    assert!(trace.contains("\"ph\":\"X\""));
+    assert!(trace.contains("\"ph\":\"M\""));
+
+    // write_trace produces the same document on disk.
+    let path = std::env::temp_dir().join(format!("fsl_trace_{}.json", std::process::id()));
+    report.write_trace(&path).expect("write trace");
+    let on_disk = std::fs::read_to_string(&path).expect("read trace back");
+    assert_eq!(on_disk, trace);
+    let _ = std::fs::remove_file(&path);
+}

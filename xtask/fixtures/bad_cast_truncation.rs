@@ -1,0 +1,12 @@
+//! Rule-6 fixture: a bare narrowing cast in a wire-scoped file. The
+//! bad count wraps at 2^32 and writes a corrupt frame; the clamped
+//! variant below carries a justification marker and must pass.
+
+pub fn encode_count(out: &mut Vec<u8>, n: usize) {
+    out.extend_from_slice(&(n as u32).to_be_bytes());
+}
+
+pub fn encode_count_clamped(out: &mut Vec<u8>, n: usize) {
+    // lint: allow(cast-truncation) — n is clamped to u32::MAX on the same expression.
+    out.extend_from_slice(&(n.min(u32::MAX as usize) as u32).to_be_bytes());
+}

@@ -1,0 +1,507 @@
+//! `bench-diff`: the perf-trajectory gate over `artifacts/HISTORY.jsonl`.
+//!
+//! Every bench run appends one schema-versioned datapoint per bench (see
+//! `fsl::metrics::history`). This command groups the file by `bench`,
+//! compares the newest datapoint against the one before it, and fails
+//! (exit 1) when a `_ms` metric regresses by more than [`MS_TOLERANCE`]
+//! (with an [`MS_FLOOR`] absolute floor so microsecond jitter on tiny
+//! timings cannot trip it) or when any `_bytes` metric grows at all —
+//! wire bytes are deterministic, so any increase is a real protocol
+//! regression, not noise. Benches with fewer than two datapoints are
+//! skipped with a note; a missing history file is exit 2 (run the
+//! benches first). Parsing is done by the self-contained JSON reader
+//! below — the workspace stays dependency-free.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::process::ExitCode;
+
+/// Relative slowdown tolerated on `_ms` metrics before it counts as a
+/// regression: new > old × (1 + 0.20).
+const MS_TOLERANCE: f64 = 0.20;
+
+/// Absolute floor (milliseconds): a `_ms` metric must also grow by more
+/// than this for the relative check to trip, so a 0.3 ms → 0.5 ms blip
+/// on a trivial timing does not fail CI.
+const MS_FLOOR: f64 = 2.0;
+
+// ---- minimal JSON value parser -----------------------------------------
+
+/// The subset of JSON the history file uses. Arrays are parsed (so the
+/// reader is total over JSON) but nothing in the envelope emits them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { b: s.as_bytes(), i: 0 }
+    }
+
+    fn err(&self, what: &str) -> String {
+        format!("{what} at byte {}", self.i)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.b.get(self.i).is_some_and(|c| c.is_ascii_whitespace()) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        self.skip_ws();
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected `{}`", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.b.get(self.i) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(_) => self.number(),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected `{word}`")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self
+            .b
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| self.err("malformed number"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let esc = *self.b.get(self.i).ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
+                            self.i += 4;
+                            // Surrogates never appear in the envelope; map
+                            // them to the replacement char rather than err.
+                            out.push(char::from_u32(hex).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                Some(&c) if c < 0x80 => {
+                    out.push(c as char);
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Multi-byte UTF-8: copy the whole scalar.
+                    let s = std::str::from_utf8(&self.b[self.i..])
+                        .map_err(|_| self.err("invalid utf-8"))?;
+                    let ch = s.chars().next().ok_or_else(|| self.err("empty"))?;
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected `,` or `]`")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected `,` or `}`")),
+            }
+        }
+    }
+}
+
+/// Parse one complete JSON value (trailing whitespace allowed).
+pub fn parse_json(s: &str) -> Result<Json, String> {
+    let mut p = Parser::new(s);
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.b.len() {
+        return Err(p.err("trailing garbage after JSON value"));
+    }
+    Ok(v)
+}
+
+// ---- the diff itself ---------------------------------------------------
+
+/// One history line: the bench it belongs to plus its numeric metrics
+/// (non-numeric metrics are ignored — only `_ms`/`_bytes` trends gate).
+struct Datapoint {
+    bench: String,
+    git_rev: String,
+    metrics: BTreeMap<String, f64>,
+}
+
+fn parse_line(line_no: usize, line: &str) -> Result<Option<Datapoint>, String> {
+    let v = parse_json(line).map_err(|e| format!("line {line_no}: {e}"))?;
+    let schema = v.get("schema").and_then(Json::as_f64);
+    if schema != Some(1.0) {
+        // Forward compatibility: a future schema is a skip, not a failure.
+        eprintln!(
+            "bench-diff: line {line_no}: unknown schema {schema:?}, skipping"
+        );
+        return Ok(None);
+    }
+    let bench = v
+        .get("bench")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("line {line_no}: missing \"bench\""))?
+        .to_string();
+    let git_rev = v
+        .get("git_rev")
+        .and_then(Json::as_str)
+        .unwrap_or("unknown")
+        .to_string();
+    let mut metrics = BTreeMap::new();
+    if let Some(Json::Obj(fields)) = v.get("metrics") {
+        for (k, val) in fields {
+            if let Some(n) = val.as_f64() {
+                metrics.insert(k.clone(), n);
+            }
+        }
+    }
+    Ok(Some(Datapoint { bench, git_rev, metrics }))
+}
+
+/// Compare the newest datapoint against the previous one. Returns the
+/// regression messages (empty = pass).
+fn compare(prev: &Datapoint, new: &Datapoint) -> Vec<String> {
+    let mut regressions = Vec::new();
+    for (key, &new_v) in &new.metrics {
+        let Some(&old_v) = prev.metrics.get(key) else {
+            continue;
+        };
+        if key.ends_with("_ms") {
+            let over_rel = new_v > old_v * (1.0 + MS_TOLERANCE);
+            let over_abs = new_v - old_v > MS_FLOOR;
+            if over_rel && over_abs {
+                regressions.push(format!(
+                    "{}: {key} regressed {old_v:.3} ms -> {new_v:.3} ms \
+                     (+{:.1}%, tolerance {:.0}%) [{} -> {}]",
+                    new.bench,
+                    (new_v / old_v - 1.0) * 100.0,
+                    MS_TOLERANCE * 100.0,
+                    prev.git_rev,
+                    new.git_rev,
+                ));
+            }
+        } else if key.ends_with("_bytes") && new_v > old_v {
+            regressions.push(format!(
+                "{}: {key} grew {old_v:.0} -> {new_v:.0} bytes — wire sizes are \
+                 deterministic, any growth is a protocol change [{} -> {}]",
+                new.bench, prev.git_rev, new.git_rev,
+            ));
+        }
+    }
+    regressions
+}
+
+/// Diff the raw history text. Returns `Ok(regressions)` or a parse error.
+fn diff_history(text: &str) -> Result<Vec<String>, String> {
+    let mut by_bench: BTreeMap<String, Vec<Datapoint>> = BTreeMap::new();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(dp) = parse_line(idx + 1, line)? {
+            by_bench.entry(dp.bench.clone()).or_default().push(dp);
+        }
+    }
+    if by_bench.is_empty() {
+        println!("bench-diff: no datapoints yet — nothing to compare");
+        return Ok(Vec::new());
+    }
+    let mut regressions = Vec::new();
+    for (bench, points) in &by_bench {
+        if points.len() < 2 {
+            println!(
+                "bench-diff: {bench}: only {} datapoint(s), skipping (need 2)",
+                points.len()
+            );
+            continue;
+        }
+        let new = &points[points.len() - 1];
+        let prev = &points[points.len() - 2];
+        let found = compare(prev, new);
+        if found.is_empty() {
+            println!(
+                "bench-diff: {bench}: ok ({} metrics, {} -> {})",
+                new.metrics.len(),
+                prev.git_rev,
+                new.git_rev
+            );
+        }
+        regressions.extend(found);
+    }
+    Ok(regressions)
+}
+
+/// Entry point for `cargo run -p xtask -- bench-diff`.
+pub fn run(path: &Path) -> ExitCode {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!(
+                "bench-diff: cannot read {}: {e} (run the benches first — they \
+                 append datapoints there)",
+                path.display()
+            );
+            return ExitCode::from(2);
+        }
+    };
+    match diff_history(&text) {
+        Err(e) => {
+            eprintln!("bench-diff: {}: {e}", path.display());
+            ExitCode::from(2)
+        }
+        Ok(regressions) if regressions.is_empty() => {
+            println!("bench-diff: no regressions");
+            ExitCode::SUCCESS
+        }
+        Ok(regressions) => {
+            for r in &regressions {
+                eprintln!("bench-diff: REGRESSION: {r}");
+            }
+            eprintln!("bench-diff: {} regression(s)", regressions.len());
+            ExitCode::from(1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(bench: &str, rev: &str, metrics: &[(&str, f64)]) -> String {
+        let body: Vec<String> = metrics
+            .iter()
+            .map(|(k, v)| format!("\"{k}\":{v}"))
+            .collect();
+        format!(
+            "{{\"schema\":1,\"bench\":\"{bench}\",\"git_rev\":\"{rev}\",\
+             \"unix_ts\":1700000000,\"metrics\":{{{}}}}}",
+            body.join(",")
+        )
+    }
+
+    #[test]
+    fn json_parser_roundtrips_the_envelope() {
+        let v = parse_json(
+            "{\"schema\":1,\"bench\":\"x\",\"git_rev\":\"abc\",\"unix_ts\":2,\
+             \"metrics\":{\"a_ms\":1.5,\"s\":\"e\\u00e9\\n\",\"arr\":[1,true,null]}}",
+        )
+        .expect("parse");
+        assert_eq!(v.get("schema").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(v.get("bench").and_then(Json::as_str), Some("x"));
+        let m = v.get("metrics").expect("metrics");
+        assert_eq!(m.get("a_ms").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(m.get("s").and_then(Json::as_str), Some("eé\n"));
+        assert_eq!(
+            m.get("arr"),
+            Some(&Json::Arr(vec![Json::Num(1.0), Json::Bool(true), Json::Null]))
+        );
+        assert!(parse_json("{\"a\":1} junk").is_err());
+        assert!(parse_json("{\"a\":}").is_err());
+    }
+
+    #[test]
+    fn injected_ms_regression_fails() {
+        let hist = [
+            line("psr", "aaa", &[("serial_ms", 100.0)]),
+            line("psr", "bbb", &[("serial_ms", 130.0)]),
+        ]
+        .join("\n");
+        let regs = diff_history(&hist).expect("parse");
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("serial_ms"), "{regs:?}");
+    }
+
+    #[test]
+    fn within_tolerance_and_jitter_floor_pass() {
+        // +19% — under the 20% relative tolerance.
+        let hist = [
+            line("psr", "aaa", &[("serial_ms", 100.0)]),
+            line("psr", "bbb", &[("serial_ms", 119.0)]),
+        ]
+        .join("\n");
+        assert!(diff_history(&hist).expect("parse").is_empty());
+        // +100% but only +0.5 ms — under the absolute jitter floor.
+        let hist = [
+            line("psr", "aaa", &[("tiny_ms", 0.5)]),
+            line("psr", "bbb", &[("tiny_ms", 1.0)]),
+        ]
+        .join("\n");
+        assert!(diff_history(&hist).expect("parse").is_empty());
+    }
+
+    #[test]
+    fn any_byte_growth_fails_but_equal_passes() {
+        let hist = [
+            line("tx", "aaa", &[("up_bytes", 100.0)]),
+            line("tx", "bbb", &[("up_bytes", 101.0)]),
+        ]
+        .join("\n");
+        let regs = diff_history(&hist).expect("parse");
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("up_bytes"), "{regs:?}");
+
+        let hist = [
+            line("tx", "aaa", &[("up_bytes", 100.0), ("down_bytes", 7.0)]),
+            line("tx", "bbb", &[("up_bytes", 100.0), ("down_bytes", 6.0)]),
+        ]
+        .join("\n");
+        assert!(diff_history(&hist).expect("parse").is_empty());
+    }
+
+    #[test]
+    fn single_datapoint_is_skipped_and_only_last_pair_counts() {
+        let hist = line("solo", "aaa", &[("x_ms", 5.0)]);
+        assert!(diff_history(&hist).expect("parse").is_empty());
+        // An old regression that has since recovered must not fail.
+        let hist = [
+            line("psr", "aaa", &[("serial_ms", 100.0)]),
+            line("psr", "bbb", &[("serial_ms", 200.0)]),
+            line("psr", "ccc", &[("serial_ms", 100.0)]),
+        ]
+        .join("\n");
+        assert!(diff_history(&hist).expect("parse").is_empty());
+    }
+
+    #[test]
+    fn malformed_lines_are_hard_errors() {
+        assert!(diff_history("{not json").is_err());
+    }
+
+    #[test]
+    fn non_overlapping_metrics_are_ignored() {
+        let hist = [
+            line("psr", "aaa", &[("old_only_ms", 1.0)]),
+            line("psr", "bbb", &[("new_only_ms", 900.0)]),
+        ]
+        .join("\n");
+        assert!(diff_history(&hist).expect("parse").is_empty());
+    }
+}

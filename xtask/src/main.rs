@@ -1,6 +1,7 @@
-//! fsl-lint: the repo's invariant static-analysis pass.
+//! fsl-lint: the repo's invariant static-analysis pass, plus the
+//! `bench-diff` trajectory gate over `artifacts/HISTORY.jsonl`.
 //!
-//! Run as `cargo run -p xtask -- lint` (or `make lint`). Five rules over
+//! Run as `cargo run -p xtask -- lint` (or `make lint`). Six rules over
 //! `rust/src/**`, enforced token-wise on comment/string-stripped source
 //! with `#[cfg(test)]` items excised:
 //!
@@ -20,6 +21,11 @@
 //!    tests).
 //! 5. **deprecated** — no `#[allow(deprecated)]` outside test items;
 //!    legacy APIs live on only inside labelled equivalence tests.
+//! 6. **cast-truncation** — no bare `as u32`/`as u16`/`as u8` in the
+//!    [`CAST_TRUNCATION_FILES`] (the runtime and its wire codec): a
+//!    count that silently wraps on encode corrupts the frame three
+//!    layers away. Use `try_from` (or the codec's clamped `put_count`)
+//!    and justify the rare intentional narrowing with an allow marker.
 //!
 //! Escape hatch: a `// lint: allow(<rule>) — <justification>` comment on
 //! the flagged line or within the [`ALLOW_WINDOW`] lines above it
@@ -29,6 +35,8 @@
 use std::fmt;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+
+mod bench_diff;
 
 /// Types that carry DPF key material (root/master/leaf seeds). Nothing in
 /// this manifest may derive or implement `Debug`/`Display`; their seed
@@ -57,6 +65,11 @@ const PANIC_FREE_COORDINATOR: &[&str] = &[
 
 /// The wire codecs whose decoders must cap before allocating.
 const DECODE_BOUND_FILES: &[&str] = &["protocol/msg.rs", "coordinator/wire.rs"];
+
+/// Files where a silently-wrapping numeric narrowing has corrupted (or
+/// would corrupt) wire frames: counts must go through `try_from` or the
+/// codec's clamped `put_count`, never a bare `as` cast.
+const CAST_TRUNCATION_FILES: &[&str] = &["coordinator/wire.rs", "coordinator/runtime.rs"];
 
 #[derive(Debug)]
 struct Violation {
@@ -392,7 +405,7 @@ fn flag(
     }
 }
 
-// ---- the five rules ----------------------------------------------------
+// ---- the six rules -----------------------------------------------------
 
 fn rule_panic(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
     let scoped = file.starts_with("protocol/")
@@ -598,6 +611,37 @@ fn rule_deprecated(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
     }
 }
 
+fn rule_cast_truncation(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
+    if !CAST_TRUNCATION_FILES.contains(&file) {
+        return;
+    }
+    let hay = pre.excised.as_bytes();
+    for tok in ["as u32", "as u16", "as u8"] {
+        let mut from = 0usize;
+        while let Some(pos) = find_sub(hay, tok.as_bytes(), from) {
+            from = pos + 1;
+            let end = pos + tok.len();
+            if prev_ident(hay, pos) || (end < hay.len() && is_ident(hay[end])) {
+                continue;
+            }
+            let line = line_of(&pre.line_starts, pos);
+            flag(
+                out,
+                pre,
+                file,
+                line,
+                "cast-truncation",
+                format!(
+                    "bare `{tok}` cast — a value past the target's range wraps \
+                     silently and corrupts the wire frame; use `try_from` (or \
+                     `put_count` for encode-side counts), or add \
+                     `// lint: allow(cast-truncation) — <why it cannot truncate>`"
+                ),
+            );
+        }
+    }
+}
+
 // ---- driver ------------------------------------------------------------
 
 fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
@@ -608,6 +652,7 @@ fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
     rule_decode_bounds(rel, &pre, &mut out);
     rule_determinism(rel, &pre, &mut out);
     rule_deprecated(rel, &pre, &mut out);
+    rule_cast_truncation(rel, &pre, &mut out);
     out
 }
 
@@ -643,13 +688,25 @@ fn lint_tree(src_root: &Path) -> std::io::Result<Vec<Violation>> {
 
 fn usage() -> ExitCode {
     eprintln!("usage: cargo run -p xtask -- lint [--root <repo>]");
+    eprintln!("       cargo run -p xtask -- bench-diff [--history <path>]");
     ExitCode::from(2)
+}
+
+/// Repo root: `--root` if given, else the parent of the xtask manifest.
+fn repo_root(root: Option<PathBuf>) -> PathBuf {
+    root.unwrap_or_else(|| {
+        std::env::var_os("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .and_then(|d| d.parent().map(Path::to_path_buf))
+            .unwrap_or_else(|| PathBuf::from("."))
+    })
 }
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cmd: Option<&str> = None;
     let mut root: Option<PathBuf> = None;
+    let mut history: Option<PathBuf> = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -657,20 +714,24 @@ fn main() -> ExitCode {
                 Some(p) => root = Some(PathBuf::from(p)),
                 None => return usage(),
             },
+            "--history" => match it.next() {
+                Some(p) => history = Some(PathBuf::from(p)),
+                None => return usage(),
+            },
             "lint" if cmd.is_none() => cmd = Some("lint"),
+            "bench-diff" if cmd.is_none() => cmd = Some("bench-diff"),
             _ => return usage(),
         }
+    }
+    if cmd == Some("bench-diff") {
+        let path = history
+            .unwrap_or_else(|| repo_root(root).join("artifacts").join("HISTORY.jsonl"));
+        return bench_diff::run(&path);
     }
     if cmd != Some("lint") {
         return usage();
     }
-    let root = root.unwrap_or_else(|| {
-        std::env::var_os("CARGO_MANIFEST_DIR")
-            .map(PathBuf::from)
-            .and_then(|d| d.parent().map(Path::to_path_buf))
-            .unwrap_or_else(|| PathBuf::from("."))
-    });
-    let src = root.join("rust").join("src");
+    let src = repo_root(root).join("rust").join("src");
     if !src.is_dir() {
         eprintln!(
             "lint: {} is not a directory (run from the repo root or pass --root)",
@@ -684,7 +745,10 @@ fn main() -> ExitCode {
             ExitCode::from(2)
         }
         Ok(vs) if vs.is_empty() => {
-            println!("lint: rust/src clean (panic, secret-debug, decode-bounds, determinism, deprecated)");
+            println!(
+                "lint: rust/src clean (panic, secret-debug, decode-bounds, determinism, \
+                 deprecated, cast-truncation)"
+            );
             ExitCode::SUCCESS
         }
         Ok(vs) => {
@@ -796,6 +860,30 @@ mod tests {
     }
 
     #[test]
+    fn fixture_cast_truncation_is_rejected() {
+        let vs = lint_file(
+            "coordinator/wire.rs",
+            include_str!("../fixtures/bad_cast_truncation.rs"),
+        );
+        assert!(rules_of(&vs).contains(&"cast-truncation"), "{vs:?}");
+        // The justified clamp in the same fixture must NOT be flagged.
+        let flagged = vs.iter().filter(|v| v.rule == "cast-truncation").count();
+        assert_eq!(flagged, 1, "{vs:?}");
+    }
+
+    #[test]
+    fn cast_truncation_is_scoped_and_test_exempt() {
+        // Out of scope: the same cast is fine elsewhere.
+        let src = "fn f(n: usize) -> u32 { n as u32 }";
+        assert!(lint_file("metrics/report.rs", src).is_empty());
+        // In scope but inside a #[cfg(test)] item: excised, not flagged.
+        let test_only = "#[cfg(test)]\nmod tests {\n    fn f(n: usize) -> u32 { n as u32 }\n}\n";
+        assert!(lint_file("coordinator/runtime.rs", test_only).is_empty());
+        // In scope, live code: flagged.
+        assert!(rules_of(&lint_file("coordinator/runtime.rs", src)).contains(&"cast-truncation"));
+    }
+
+    #[test]
     fn fixture_clean_passes_every_rule() {
         let vs = lint_file("protocol/clean.rs", include_str!("../fixtures/clean.rs"));
         assert!(vs.is_empty(), "{vs:?}");
@@ -807,7 +895,7 @@ mod tests {
         assert!(vs.is_empty(), "{vs:?}");
     }
 
-    /// The acceptance gate: the real tree is clean under all five rules.
+    /// The acceptance gate: the real tree is clean under all six rules.
     #[test]
     fn repo_tree_is_clean() {
         let src = Path::new(env!("CARGO_MANIFEST_DIR"))

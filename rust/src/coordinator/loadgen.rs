@@ -1,0 +1,659 @@
+//! `fsl loadgen` — a scale harness that drives two standalone `fsl
+//! serve` processes with 10^4–10^6 *virtual* clients multiplexed over a
+//! bounded pool of [`Role::ClientMux`] lane sockets.
+//!
+//! One lane socket carries the uploads of a contiguous virtual-id range
+//! `[lo, lo + count)`; each upload frame is `[vid u32 LE][key upload]`,
+//! exactly what the servers' readiness loop
+//! (`ServerHalf::ssa_mux`) ingests. Every virtual client is
+//! deterministic in `(seed, vid)`: its selections, deltas, straggle
+//! decision and key material all derive from one seeded [`Rng`], so the
+//! harness can regenerate the *expected* aggregate for the surviving
+//! cohort after the round and check the reconstructed delta
+//! bit-for-bit — no per-client state is retained while driving, which
+//! is what lets a single driver process push a million clients.
+//!
+//! Fault injection reuses [`FaultPlan`]: `jitter` delays each lane's
+//! sends on a deterministic per-lane spread, `drop_lanes` severs the
+//! first N lanes mid-range (their tails become `Dropped`), and
+//! `straggle` silences a deterministic fraction of virtual clients
+//! (they become `StragglerCut` at the servers' upload deadline).
+//!
+//! The optional history hook appends one schema-versioned `loadgen`
+//! datapoint (wall/gen/server times in `_ms` fields, peak driver RSS in
+//! MB) to `artifacts/HISTORY.jsonl`, where `cargo xtask bench-diff`
+//! gates regressions.
+
+use super::runtime::{dial_with_retry, merge_outcomes, ClientOutcome, FslRuntimeBuilder};
+use super::wire::{self, ServerCmd, ServerReply};
+use crate::crypto::rng::Rng;
+use crate::hashing::CuckooParams;
+use crate::metrics::history;
+use crate::metrics::json::JsonObj;
+use crate::net::transport::tcp::{TcpOptions, TcpTransport};
+use crate::net::transport::{BoxTransport, FaultPlan, Hello, Role, Transport};
+use crate::protocol::{msg, ssa, Session, SessionParams};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How (and whether) the reconstructed delta is checked after the round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadgenVerify {
+    /// No correctness check (huge cohorts where the O(completed · k)
+    /// regeneration pass is the bottleneck).
+    None,
+    /// Regenerate every completed client's sparse update from `(seed,
+    /// vid)` and compare the summed expectation to the delta (default).
+    Expected,
+    /// `Expected`, plus replay the completed cohort through an
+    /// in-process [`FslRuntime`](super::FslRuntime) and require the two
+    /// deployments' deltas to be bit-identical.
+    Inproc,
+}
+
+/// Everything `fsl loadgen` needs to drive one multiplexed SSA round.
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// S0's listen address.
+    pub s0: String,
+    /// S1's listen address (must be able to dial `s0` for the peer link).
+    pub s1: String,
+    /// Virtual cohort size.
+    pub clients: usize,
+    /// Lane sockets per server (clamped to `[1, clients]`). Each lane
+    /// gets a contiguous share of the virtual-id space.
+    pub lanes: usize,
+    /// Model size (the session domain).
+    pub m: u64,
+    /// Submodel size (selections per client).
+    pub k: usize,
+    /// Seeds the session's cuckoo table and every virtual client.
+    pub seed: u64,
+    /// The servers' upload deadline: stragglers are cut, not waited on.
+    pub deadline: Duration,
+    /// Extra wait (beyond `deadline`) for the servers' round replies.
+    pub reply_timeout: Duration,
+    /// How long to keep retrying the initial dials.
+    pub connect_window: Duration,
+    /// Per-send delay, spread deterministically across lanes (lane `i`
+    /// sleeps `jitter · (i + 1) / lanes` before each upload).
+    pub jitter: Duration,
+    /// Fraction of virtual clients that never upload (deterministic in
+    /// `(seed, vid)`).
+    pub straggle: f64,
+    /// Sever the first N lanes mid-range (dropout injection).
+    pub drop_lanes: usize,
+    /// Post-round correctness check.
+    pub verify: LoadgenVerify,
+    /// Append a `loadgen` datapoint to this history file.
+    pub history: Option<PathBuf>,
+}
+
+impl LoadgenOptions {
+    pub fn new(s0: impl Into<String>, s1: impl Into<String>) -> Self {
+        LoadgenOptions {
+            s0: s0.into(),
+            s1: s1.into(),
+            clients: 10_000,
+            lanes: 64,
+            m: 1 << 15,
+            k: 64,
+            seed: 7,
+            deadline: Duration::from_secs(30),
+            reply_timeout: Duration::from_secs(600),
+            connect_window: Duration::from_secs(10),
+            jitter: Duration::ZERO,
+            straggle: 0.0,
+            drop_lanes: 0,
+            verify: LoadgenVerify::Expected,
+            history: None,
+        }
+    }
+}
+
+/// What one loadgen round measured.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub lanes: usize,
+    /// Cohort-agreement outcome counts (both servers merged).
+    pub completed: usize,
+    pub straggler_cut: usize,
+    pub dropped: usize,
+    /// Uploads the lane threads actually wrote (an injected disconnect
+    /// truncates its lane's range).
+    pub sent: usize,
+    /// Client key generation, summed over virtual clients (the paper's
+    /// per-client Table-5 convention, scaled by the cohort).
+    pub gen_time: Duration,
+    /// S0's reported in-round server time.
+    pub server_time: Duration,
+    /// Round command → both round replies decoded.
+    pub wall_time: Duration,
+    /// Payload bytes handed to the lane sockets.
+    pub upload_bytes: u64,
+    /// Peak resident set of the *driver* process (VmHWM). The servers'
+    /// O(shard) bound is asserted separately by the streaming-ingest
+    /// unit tests against their byte-accounted high-water marks.
+    pub peak_rss_mb: f64,
+    /// Whether the requested verification passed (`true` when skipped).
+    pub verified: bool,
+}
+
+impl LoadgenReport {
+    /// One JSON line for `--json` scripting.
+    pub fn to_json(&self) -> String {
+        let mut o = JsonObj::new();
+        o.field_str("kind", "loadgen")
+            .field_u64("clients", self.clients as u64)
+            .field_u64("lanes", self.lanes as u64)
+            .field_u64("completed", self.completed as u64)
+            .field_u64("straggler_cut", self.straggler_cut as u64)
+            .field_u64("dropped", self.dropped as u64)
+            .field_u64("sent", self.sent as u64)
+            .field_f64("gen_ms", ms(self.gen_time), 3)
+            .field_f64("server_ms", ms(self.server_time), 3)
+            .field_f64("wall_ms", ms(self.wall_time), 3)
+            .field_f64("upload_mb", self.upload_bytes as f64 / 1e6, 3)
+            .field_f64("peak_rss_mb", self.peak_rss_mb, 1)
+            .field_bool("verified", self.verified);
+        o.finish()
+    }
+}
+
+fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// One lane pair: the `[lo, lo + count)` range and its two sockets.
+struct Lane {
+    lo: u32,
+    count: u32,
+    s0: BoxTransport,
+    s1: BoxTransport,
+}
+
+struct LaneStats {
+    gen_nanos: u64,
+    bytes: u64,
+    sent: usize,
+}
+
+/// Every virtual client's randomness derives from `(seed, vid)` alone —
+/// the golden-ratio multiply decorrelates adjacent ids.
+fn client_rng(seed: u64, vid: u64) -> Rng {
+    Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(vid.wrapping_add(1)))
+}
+
+/// Regenerate virtual client `vid`'s sparse update. Draw order must
+/// match [`run_lane`] exactly: selections first, then everything else.
+fn client_inputs(session: &Session, seed: u64, vid: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = client_rng(seed, vid);
+    let sel = rng.sample_distinct(session.params.k, session.params.m);
+    let deltas = sel.iter().map(|&x| x.wrapping_add(1)).collect();
+    (sel, deltas)
+}
+
+/// The straggle decision burns exactly one draw whether or not it
+/// triggers, so the upload stream stays deterministic for the verifier.
+fn is_straggler(rng: &mut Rng, frac: f64) -> bool {
+    let draw = rng.gen_range(1 << 20);
+    if frac <= 0.0 {
+        return false;
+    }
+    draw < (frac.min(1.0) * (1u64 << 20) as f64) as u64
+}
+
+/// `[vid u32 LE][payload]` — the mux lanes' framing contract.
+fn lane_frame(vid: u32, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&vid.to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Generate and send one lane's range. Returns the lane so its sockets
+/// stay open (and its silent tail classifies as straggler, not dropout)
+/// until the round replies are in.
+fn run_lane(session: &Session, opts: &LoadgenOptions, lane: Lane) -> Result<(Lane, LaneStats)> {
+    let mut stats = LaneStats { gen_nanos: 0, bytes: 0, sent: 0 };
+    for vid in lane.lo..lane.lo.saturating_add(lane.count) {
+        let mut rng = client_rng(opts.seed, u64::from(vid));
+        let sel = rng.sample_distinct(session.params.k, session.params.m);
+        let deltas: Vec<u64> = sel.iter().map(|&x| x.wrapping_add(1)).collect();
+        if is_straggler(&mut rng, opts.straggle) {
+            continue;
+        }
+        let t = Instant::now();
+        let batch = ssa::client_update(session, &sel, &deltas, &mut rng)
+            .map_err(|e| anyhow!("virtual client {vid}: {e}"))?;
+        stats.gen_nanos = stats
+            .gen_nanos
+            .saturating_add(u64::try_from(t.elapsed().as_nanos()).unwrap_or(u64::MAX));
+        // Short (msk-only) half to S1 first, then the long half to S0 —
+        // the servers commit a client only once both halves landed, and
+        // S1's acknowledgement stream is what lets S0 drain its held
+        // window, so the msk half must never trail by a full lane.
+        let short = lane_frame(vid, msg::encode_key_upload(&batch, 1, false));
+        let long = lane_frame(vid, msg::encode_key_upload(&batch, 0, true));
+        stats.bytes = stats.bytes.saturating_add((short.len() + long.len()) as u64);
+        if lane.s1.send(short).is_err() || lane.s0.send(long).is_err() {
+            // Severed (injected dropout or a dead server): the rest of
+            // this range can never land — leave classification to the
+            // servers and keep what sockets remain open.
+            break;
+        }
+        stats.sent += 1;
+    }
+    Ok((lane, stats))
+}
+
+/// Drive one multiplexed SSA round end-to-end. See the module docs for
+/// the wire shapes; the ordering mirrors the in-process driver: connect
+/// everything, install the session on S1, let S1 dial the peer link,
+/// install the session on S0, then command the round on both.
+pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenReport> {
+    let n = opts.clients;
+    ensure!(n >= 1, "loadgen needs at least one virtual client");
+    ensure!(
+        n <= wire::MAX_WIRE_COHORT,
+        "clients = {n} exceeds the wire cohort cap of {}",
+        wire::MAX_WIRE_COHORT
+    );
+    let k = opts.k.max(1);
+    ensure!(
+        k as u64 <= opts.m,
+        "submodel k = {k} cannot exceed the model size m = {}",
+        opts.m
+    );
+    ensure!(
+        !opts.deadline.is_zero(),
+        "loadgen rounds need a positive deadline (stragglers are cut, not waited on)"
+    );
+    let lanes = opts.lanes.clamp(1, n);
+    ensure!(
+        opts.drop_lanes <= lanes,
+        "drop_lanes = {} exceeds the {lanes} lanes",
+        opts.drop_lanes
+    );
+    let n_wire = u32::try_from(n).map_err(|_| anyhow!("clients = {n} overflows the wire"))?;
+    let session = Session::new_full(SessionParams {
+        m: opts.m,
+        k,
+        cuckoo: CuckooParams::default().with_seed(opts.seed),
+    });
+
+    // Control links (these drive the command loop), then the lane pool.
+    let tcp = TcpOptions::default();
+    let group = std::any::type_name::<u64>().to_string();
+    let hello_ctrl = |party: u8| Hello {
+        party,
+        role: Role::Control {
+            max_clients: n_wire,
+            m: opts.m,
+            k: k as u64,
+            group: group.clone(),
+        },
+    };
+    let ctrl0 = dial_with_retry(&opts.s0, &hello_ctrl(0), &tcp, opts.connect_window)?;
+    let ctrl1 = dial_with_retry(&opts.s1, &hello_ctrl(1), &tcp, opts.connect_window)?;
+
+    // Lane writes must not outlive the round: a server that cut its
+    // stragglers stops reading, so a blocked lane send has to fail (the
+    // lane breaks out, the socket stays open) instead of stalling the
+    // driver behind the global 600 s default.
+    let lane_tcp = TcpOptions {
+        handshake_timeout: tcp.handshake_timeout,
+        write_timeout: Some(opts.deadline + Duration::from_secs(5)),
+    };
+    let mut pairs = Vec::with_capacity(lanes);
+    let mut lo = 0u32;
+    for li in 0..lanes {
+        let count_us = n / lanes + usize::from(li < n % lanes);
+        let count = u32::try_from(count_us)
+            .map_err(|_| anyhow!("lane {li} range of {count_us} clients overflows the wire"))?;
+        let hello_lane = |party: u8| Hello {
+            party,
+            role: Role::ClientMux { lo, count },
+        };
+        let t0 = dial_with_retry(&opts.s0, &hello_lane(0), &lane_tcp, opts.connect_window)?;
+        let t1 = dial_with_retry(&opts.s1, &hello_lane(1), &lane_tcp, opts.connect_window)?;
+        let (mut b0, mut b1): (BoxTransport, BoxTransport) = (Box::new(t0), Box::new(t1));
+        let mut plan = FaultPlan::new();
+        let mut faulted = false;
+        if !opts.jitter.is_zero() {
+            plan = plan.delay(opts.jitter.mul_f64((li + 1) as f64 / lanes as f64));
+            faulted = true;
+        }
+        if li < opts.drop_lanes {
+            // One injector per dropped lane, budget shared across both
+            // sockets: at two messages per upload it severs mid-range,
+            // leaving a committed head and a dropped tail.
+            plan = plan.disconnect_after_messages(u64::from(count));
+            faulted = true;
+        }
+        if faulted {
+            let inj = plan.injector();
+            b0 = inj.wrap(b0);
+            b1 = inj.wrap(b1);
+        }
+        pairs.push(Lane { lo, count, s0: b0, s1: b1 });
+        lo = lo.saturating_add(count);
+    }
+
+    // Session install + peer link, in the in-process driver's order.
+    let expect_ack = |ctrl: &TcpTransport, what: &str| -> Result<()> {
+        let raw = ctrl
+            .recv_timeout(opts.reply_timeout)
+            .map_err(|e| e.context(format!("no reply while {what}")))?;
+        match wire::decode_reply::<u64>(&raw)? {
+            ServerReply::Ack => Ok(()),
+            ServerReply::Failed(msg) => bail!("{what}: server refused: {msg}"),
+            _ => bail!("{what}: unexpected reply type"),
+        }
+    };
+    let arc = Arc::new(session.clone());
+    ctrl1.send(wire::encode_cmd(&ServerCmd::<u64>::SetSession(arc.clone())))?;
+    expect_ack(&ctrl1, "installing the session on S1")?;
+    ctrl1.send(wire::encode_cmd(&ServerCmd::<u64>::DialPeer {
+        addr: opts.s0.clone(),
+    }))?;
+    expect_ack(&ctrl1, "establishing the S0<->S1 peer link")?;
+    ctrl0.send(wire::encode_cmd(&ServerCmd::<u64>::SetSession(arc)))?;
+    expect_ack(&ctrl0, "installing the session on S0")?;
+
+    // The round: command both servers, then let the lane threads race
+    // the deadline. Worker (S1) first so its acknowledgement stream is
+    // live by the time S0 starts committing.
+    let deadline_nanos =
+        u64::try_from(opts.deadline.as_nanos()).map_err(|_| anyhow!("deadline overflows u64"))?;
+    let round_cmd = ServerCmd::<u64>::Ssa { n, deadline_nanos };
+    let wall0 = Instant::now();
+    ctrl1.send(wire::encode_cmd(&round_cmd))?;
+    ctrl0.send(wire::encode_cmd(&round_cmd))?;
+
+    let session_ref = &session;
+    let mut kept: Vec<Lane> = Vec::with_capacity(lanes);
+    let mut gen_nanos = 0u64;
+    let mut upload_bytes = 0u64;
+    let mut sent = 0usize;
+    let mut lane_err: Option<anyhow::Error> = None;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(pairs.len());
+        for lane in pairs {
+            handles.push(scope.spawn(move || run_lane(session_ref, opts, lane)));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(Ok((lane, stats))) => {
+                    gen_nanos = gen_nanos.saturating_add(stats.gen_nanos);
+                    upload_bytes = upload_bytes.saturating_add(stats.bytes);
+                    sent += stats.sent;
+                    kept.push(lane);
+                }
+                Ok(Err(e)) => lane_err = Some(e),
+                Err(_) => lane_err = Some(anyhow!("a loadgen lane thread panicked")),
+            }
+        }
+    });
+    if let Some(e) = lane_err {
+        return Err(e);
+    }
+
+    // Round replies. S0 reconstructs, S1 only reports outcomes; a
+    // client survives only when *both* servers completed it.
+    let reply_window = opts.deadline + opts.reply_timeout;
+    let round_reply = |ctrl: &TcpTransport,
+                       who: &str|
+     -> Result<(Duration, Option<Vec<u64>>, Vec<ClientOutcome>)> {
+        let raw = ctrl
+            .recv_timeout(reply_window)
+            .map_err(|e| e.context(format!("waiting for {who}'s round reply")))?;
+        match wire::decode_reply::<u64>(&raw)? {
+            ServerReply::Round {
+                server_time,
+                delta,
+                outcomes,
+                ..
+            } => Ok((server_time, delta, outcomes)),
+            ServerReply::Failed(msg) => bail!("{who} failed the round: {msg}"),
+            _ => bail!("{who}: unexpected round reply type"),
+        }
+    };
+    let (server_time, delta0, o0) = round_reply(&ctrl0, "S0")?;
+    let (_s1_time, _d1, o1) = round_reply(&ctrl1, "S1")?;
+    let wall_time = wall0.elapsed();
+    // The lanes may drop now: the round is over, classification is done.
+    drop(kept);
+    let delta = delta0.ok_or_else(|| anyhow!("S0's round reply carried no delta"))?;
+    ensure!(
+        delta.len() == opts.m as usize,
+        "S0 reconstructed {} entries for an m = {} domain",
+        delta.len(),
+        opts.m
+    );
+    let merged = merge_outcomes(n, &o0, &o1);
+    let (mut completed, mut straggler_cut, mut dropped) = (0usize, 0usize, 0usize);
+    for o in &merged {
+        match o {
+            ClientOutcome::Completed => completed += 1,
+            ClientOutcome::StragglerCut => straggler_cut += 1,
+            ClientOutcome::Dropped => dropped += 1,
+        }
+    }
+
+    let verified = match opts.verify {
+        LoadgenVerify::None => true,
+        LoadgenVerify::Expected => {
+            verify_expected(&session, opts, &merged, &delta)?;
+            true
+        }
+        LoadgenVerify::Inproc => {
+            verify_expected(&session, opts, &merged, &delta)?;
+            verify_inproc(&session, opts, &merged, &delta)?;
+            true
+        }
+    };
+
+    let _ = ctrl1.send(wire::encode_cmd(&ServerCmd::<u64>::Shutdown));
+    let _ = ctrl0.send(wire::encode_cmd(&ServerCmd::<u64>::Shutdown));
+
+    let report = LoadgenReport {
+        clients: n,
+        lanes,
+        completed,
+        straggler_cut,
+        dropped,
+        sent,
+        gen_time: Duration::from_nanos(gen_nanos),
+        server_time,
+        wall_time,
+        upload_bytes,
+        peak_rss_mb: peak_rss_mb(),
+        verified,
+    };
+    if let Some(path) = &opts.history {
+        history::append_with(path, "loadgen", |o| {
+            o.field_u64("clients", report.clients as u64)
+                .field_u64("lanes", report.lanes as u64)
+                .field_u64("completed", report.completed as u64)
+                .field_u64("straggler_cut", report.straggler_cut as u64)
+                .field_u64("dropped", report.dropped as u64)
+                .field_f64("gen_ms", ms(report.gen_time), 3)
+                .field_f64("server_ms", ms(report.server_time), 3)
+                .field_f64("wall_ms", ms(report.wall_time), 3)
+                .field_f64("peak_rss_mb", report.peak_rss_mb, 1);
+        })
+        .map_err(|e| anyhow!("appending the loadgen datapoint to {}: {e}", path.display()))?;
+    }
+    Ok(report)
+}
+
+/// Regenerate every completed client's sparse update and require the
+/// reconstructed delta to equal their exact wrapping sum.
+fn verify_expected(
+    session: &Session,
+    opts: &LoadgenOptions,
+    outcomes: &[ClientOutcome],
+    delta: &[u64],
+) -> Result<()> {
+    let mut expected = vec![0u64; session.params.m as usize];
+    for (vid, o) in outcomes.iter().enumerate() {
+        if *o != ClientOutcome::Completed {
+            continue;
+        }
+        let (sel, dl) = client_inputs(session, opts.seed, vid as u64);
+        for (&x, &d) in sel.iter().zip(&dl) {
+            expected[x as usize] = expected[x as usize].wrapping_add(d);
+        }
+    }
+    let mismatches = expected
+        .iter()
+        .zip(delta)
+        .filter(|(e, d)| e != d)
+        .count();
+    ensure!(
+        mismatches == 0,
+        "reconstructed delta differs from the completed cohort's expected sum at \
+         {mismatches} of {} positions",
+        expected.len()
+    );
+    Ok(())
+}
+
+/// Replay the completed cohort through an in-process runtime and require
+/// a bit-identical delta — the TCP deployment and the single-process
+/// reference must compute the same aggregate.
+fn verify_inproc(
+    session: &Session,
+    opts: &LoadgenOptions,
+    outcomes: &[ClientOutcome],
+    delta: &[u64],
+) -> Result<()> {
+    let survivors: Vec<(Vec<u64>, Vec<u64>)> = outcomes
+        .iter()
+        .enumerate()
+        .filter(|(_, o)| **o == ClientOutcome::Completed)
+        .map(|(vid, _)| client_inputs(session, opts.seed, vid as u64))
+        .collect();
+    if survivors.is_empty() {
+        ensure!(
+            delta.iter().all(|&x| x == 0),
+            "no client completed, yet the reconstructed delta is non-zero"
+        );
+        return Ok(());
+    }
+    let mut rt = FslRuntimeBuilder::from_session(session.clone())
+        .max_clients(survivors.len())
+        .build::<u64>()?;
+    let mut rng = Rng::new(opts.seed ^ 0x5EED);
+    let res = rt.ssa(&survivors, &mut rng)?;
+    rt.shutdown()?;
+    ensure!(
+        res.delta == delta,
+        "the in-process runtime disagrees with the TCP deployment's delta for the same cohort"
+    );
+    Ok(())
+}
+
+/// Peak resident set of this process in MB (`VmHWM`, Linux); 0.0 where
+/// procfs is unavailable.
+fn peak_rss_mb() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            if let Some(tok) = rest.split_whitespace().next() {
+                if let Ok(kb) = tok.parse::<f64>() {
+                    return kb / 1024.0;
+                }
+            }
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_streams_are_deterministic() {
+        let session = Session::new_full(SessionParams {
+            m: 256,
+            k: 8,
+            cuckoo: CuckooParams::default().with_seed(3),
+        });
+        let (sel_a, dl_a) = client_inputs(&session, 42, 7);
+        let (sel_b, dl_b) = client_inputs(&session, 42, 7);
+        assert_eq!(sel_a, sel_b);
+        assert_eq!(dl_a, dl_b);
+        assert_eq!(sel_a.len(), 8);
+        assert!(sel_a.iter().all(|&x| x < 256));
+        assert!(dl_a.iter().zip(&sel_a).all(|(&d, &x)| d == x + 1));
+        // Distinct clients must diverge (golden-ratio decorrelation).
+        let (sel_c, _) = client_inputs(&session, 42, 8);
+        assert_ne!(sel_a, sel_c);
+    }
+
+    #[test]
+    fn straggle_decision_burns_one_draw_either_way() {
+        // Same seed, different fractions: the *post-decision* stream
+        // must be identical so the verifier can regenerate uploads.
+        let mut a = client_rng(9, 4);
+        let mut b = client_rng(9, 4);
+        let _ = is_straggler(&mut a, 0.0);
+        let _ = is_straggler(&mut b, 1.0);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn straggle_fraction_is_roughly_honoured() {
+        let n = 10_000u64;
+        let hits = (0..n)
+            .filter(|&vid| {
+                let mut rng = client_rng(1234, vid);
+                is_straggler(&mut rng, 0.25)
+            })
+            .count();
+        let frac = hits as f64 / n as f64;
+        assert!(
+            (0.2..0.3).contains(&frac),
+            "straggle=0.25 silenced {frac:.3} of the cohort"
+        );
+    }
+
+    #[test]
+    fn lane_frames_lead_with_the_vid() {
+        let f = lane_frame(0xDEAD_BEEF, vec![1, 2, 3]);
+        assert_eq!(&f[..4], &0xDEAD_BEEFu32.to_le_bytes());
+        assert_eq!(&f[4..], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn report_json_is_valid_and_ungated_on_bytes() {
+        let report = LoadgenReport {
+            clients: 10,
+            lanes: 2,
+            completed: 8,
+            straggler_cut: 1,
+            dropped: 1,
+            sent: 9,
+            gen_time: Duration::from_millis(12),
+            server_time: Duration::from_millis(34),
+            wall_time: Duration::from_millis(56),
+            upload_bytes: 1_000,
+            peak_rss_mb: 12.5,
+            verified: true,
+        };
+        let json = report.to_json();
+        crate::metrics::json::validate(&json).expect("loadgen JSON must parse");
+        assert!(json.contains("\"wall_ms\":56.000"));
+        // The bench-diff gate fails any growth in `_bytes` metrics; a
+        // scale report must never emit one (RSS is reported in MB).
+        assert!(!json.contains("_bytes\""));
+    }
+}

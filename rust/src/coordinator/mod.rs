@@ -23,6 +23,7 @@
 
 mod client;
 mod config;
+mod loadgen;
 mod psr_round;
 mod round;
 mod runtime;
@@ -35,6 +36,7 @@ pub mod wire;
 
 pub use client::{local_train, sparse_delta, ClientRoundOutput};
 pub use config::FslConfig;
+pub use loadgen::{run_loadgen, LoadgenOptions, LoadgenReport, LoadgenVerify};
 pub use serve::{serve, serve_addr, ServeOptions};
 // lint: allow(deprecated) — re-export keeps the legacy round API importable
 #[allow(deprecated)]

@@ -57,6 +57,7 @@ use crate::metrics::json::{self, JsonObj};
 use crate::metrics::trace::{self, Party, Phase, Span, TraceRecorder, TraceSink};
 use crate::metrics::CommMeter;
 use crate::net::{self, LinkProfile};
+use crate::net::reactor::{FramePump, PumpEvent};
 use crate::net::transport::tcp::{TcpOptions, TcpTransport};
 use crate::net::transport::{
     BoxTransport, FaultPlan, Hello, InProc, Role, Transport, TransportError,
@@ -68,6 +69,8 @@ use crate::protocol::{
 };
 use anyhow::{anyhow, bail, ensure, Result};
 use crate::crypto::Sensitive;
+use std::io::Write as _;
+use std::net::TcpStream;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -543,6 +546,7 @@ impl FslRuntimeBuilder {
                     .map(|e| Box::new(InProc(e)) as BoxTransport)
                     .collect(),
                 inter: Some(Box::new(InProc(inter)) as BoxTransport),
+                mux: None,
                 weights: None,
                 udpf: Vec::new(),
                 udpf_links: Vec::new(),
@@ -713,7 +717,7 @@ fn wire_u32(value: usize, what: &str) -> Result<u32> {
 /// exponential backoff for up to `window` (`ZERO` = single attempt).
 /// A typed handshake rejection is permanent — retrying a wrong-party or
 /// wrong-group dial can never succeed, so it fails immediately.
-fn dial_with_retry(
+pub(crate) fn dial_with_retry(
     addr: &str,
     hello: &Hello,
     opts: &TcpOptions,
@@ -1657,7 +1661,7 @@ impl<G: Group> UdpfDriverState<G> {
 /// only if both servers agreed it did; an explicit `Dropped` from either
 /// side wins over `StragglerCut`. Strict rounds reply with empty vectors,
 /// which merge to all-`Completed`.
-fn merge_outcomes(
+pub(crate) fn merge_outcomes(
     n: usize,
     o0: &[ClientOutcome],
     o1: &[ClientOutcome],
@@ -1709,6 +1713,11 @@ pub(crate) struct ServerHalf<G: Group> {
     /// The `S_0 ↔ S_1` exchange link. Always `Some` in-process; a
     /// standalone `S_1` starts without one until the driver's `DialPeer`.
     pub(crate) inter: Option<BoxTransport>,
+    /// Multiplexed client lanes (a scale deployment accepted by
+    /// [`super::serve`]). When set, `eps` is empty and SSA rounds ingest
+    /// `[vid || upload]` frames from the lanes through a [`FramePump`]
+    /// instead of one blocking receive per client link.
+    pub(crate) mux: Option<MuxCohort>,
     /// Installed PSR database (global-model-indexed).
     pub(crate) weights: Option<Arc<Vec<G>>>,
     /// Retained U-DPF key sets, one per *surviving* client (U-DPF mode).
@@ -1730,6 +1739,161 @@ pub(crate) struct ServerHalf<G: Group> {
     /// `Round` reply so driver-side reports carry both servers' spans
     /// over either transport.
     pub(crate) trace: Arc<TraceRecorder>,
+}
+
+/// One accepted multiplexed lane: a single socket carrying the uploads
+/// of virtual clients `lo .. lo + count`, each as a `[vid u32 LE ||
+/// upload]` frame. `stream` goes `None` when the lane dies (closed,
+/// expired, or protocol-violating mid-round); its range stays recorded
+/// so later rounds report those ids `Dropped` instead of waiting on
+/// them.
+pub(crate) struct MuxLane {
+    pub(crate) stream: Option<TcpStream>,
+    pub(crate) lo: u32,
+    pub(crate) count: u32,
+}
+
+/// A multiplexed deployment's client side: the lanes covering the
+/// cohort, the reactor's byte budget, and a raw clone of the `S_0 ↔ S_1`
+/// stream (the round's pump must own the only reader of that socket).
+pub(crate) struct MuxCohort {
+    pub(crate) lanes: Vec<MuxLane>,
+    /// The control handshake's `max_clients`: how many virtual ids the
+    /// lanes address.
+    pub(crate) cohort: usize,
+    /// Byte budget shared by the pump's partial frames and the leader's
+    /// held-upload window — the round's working-memory bound.
+    pub(crate) budget: usize,
+    /// Raw clone of the peer exchange stream (same socket the boxed
+    /// [`ServerHalf::inter`] transport wraps). `S_0` gets it at accept
+    /// time, `S_1` when `DialPeer` lands.
+    pub(crate) inter_stream: Option<TcpStream>,
+    /// High-water mark of leader-held upload bytes awaiting the peer's
+    /// `HAVE`, across rounds — what the streaming-ingest bound tests
+    /// assert against.
+    pub(crate) peak_held_bytes: usize,
+    /// High-water mark of the round pumps' partial-frame bytes.
+    pub(crate) peak_pump_bytes: usize,
+}
+
+/// Pump tag of the `S_0 ↔ S_1` stream in a multiplexed round (lanes use
+/// their index as tag, so the sentinel can never collide).
+const MUX_INTER_TAG: u64 = u64::MAX;
+
+/// `S_1 → S_0`: "this client's short upload (master seed) is in" — the
+/// leader may commit the client and forward its publics.
+const MUX_HAVE: u8 = 1;
+/// `S_0 → S_1`: a committed client's forwarded publics (zeroed seed,
+/// same two-server privacy rule as the direct path).
+const MUX_FWD: u8 = 2;
+/// `S_0 → S_1`: the round's committed id list; TCP ordering guarantees
+/// every forward precedes it.
+const MUX_DONE: u8 = 3;
+/// `S_1 → S_0`: the aggregated share vector, ending the round.
+const MUX_SHARES: u8 = 4;
+
+/// Outgoing peer bytes for a multiplexed round. The round's pump owns
+/// the only reader of every socket and must keep polling, so peer sends
+/// must never block: frames queue here and drain with non-blocking
+/// writes each loop iteration (registering the shared socket with the
+/// pump put it in non-blocking mode).
+struct TxQueue {
+    buf: Vec<u8>,
+    off: usize,
+}
+
+impl TxQueue {
+    fn new() -> Self {
+        TxQueue { buf: Vec::new(), off: 0 }
+    }
+
+    /// Frame `payload` and append it to the backlog.
+    fn queue(&mut self, payload: &[u8]) {
+        self.buf.extend_from_slice(&msg::frame(payload));
+    }
+
+    /// Bytes queued but not yet accepted by the socket.
+    fn backlog(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    /// Write as much of the backlog as the socket accepts right now.
+    fn flush(&mut self, stream: &mut TcpStream) -> Result<()> {
+        while self.off < self.buf.len() {
+            match stream.write(&self.buf[self.off..]) {
+                Ok(0) => bail!("peer closed the exchange link mid-round"),
+                Ok(wrote) => self.off += wrote,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => bail!("peer exchange write failed: {e}"),
+            }
+        }
+        if self.off == self.buf.len() {
+            self.buf.clear();
+            self.off = 0;
+        } else if self.off > (1 << 20) {
+            // Reclaim the drained prefix so a long round's queue stays
+            // lean even when the peer reads slowly.
+            self.buf.drain(..self.off);
+            self.off = 0;
+        }
+        Ok(())
+    }
+}
+
+/// One multiplexed round's reactor state, torn down (lanes handed back,
+/// peer stream restored to blocking) whether the round succeeds or not.
+struct MuxRound {
+    pump: FramePump,
+    tx_stream: TcpStream,
+    tx: TxQueue,
+    lane_dead: Vec<bool>,
+    lane_of: Vec<Option<usize>>,
+    budget: usize,
+    held_peak: usize,
+}
+
+/// Parse one `[vid u32 LE || upload]` lane frame, validating the vid
+/// against the cohort and the lane that announced it. `want_publics`
+/// selects the leader's long decode (publics required) over the
+/// worker's short one. `None` = protocol violation; the caller kills
+/// the whole lane.
+fn mux_lane_frame<G: Group>(
+    payload: &[u8],
+    n: usize,
+    lane_of: &[Option<usize>],
+    li: usize,
+    want_publics: bool,
+) -> Option<(usize, msg::KeyUpload<G>)> {
+    let vid = match payload.get(..4) {
+        Some(&[a, b, c, d]) => u32::from_le_bytes([a, b, c, d]) as usize,
+        _ => return None,
+    };
+    if vid >= n || lane_of.get(vid).copied().flatten() != Some(li) {
+        return None;
+    }
+    let up = msg::decode_key_upload::<G>(payload.get(4..)?)?;
+    if want_publics && up.publics.is_none() {
+        return None;
+    }
+    Some((vid, up))
+}
+
+/// Parse the `vid` field of a peer `HAVE`/`FWD` frame.
+fn mux_vid(bytes: Option<&[u8]>) -> Result<usize> {
+    match bytes {
+        Some(&[a, b, c, d]) => Ok(u32::from_le_bytes([a, b, c, d]) as usize),
+        _ => bail!("malformed peer frame: truncated client id"),
+    }
+}
+
+/// Pause or resume every live lane (the peer stream never pauses).
+fn set_lanes_paused(pump: &mut FramePump, lane_dead: &[bool], paused: bool) {
+    for (li, dead) in lane_dead.iter().enumerate() {
+        if !dead {
+            pump.set_paused(li as u64, paused);
+        }
+    }
 }
 
 impl<G: Group> ServerHalf<G> {
@@ -1760,10 +1924,10 @@ impl<G: Group> ServerHalf<G> {
         // reply `Failed`, never panic the server.
         if let Some(n) = cmd.client_count() {
             ensure!(
-                n <= self.eps.len(),
-                "S{}: round brings {n} clients but only {} client links are connected",
+                n <= self.cohort_capacity(),
+                "S{}: round brings {n} clients but this deployment's capacity is {}",
                 self.party,
-                self.eps.len()
+                self.cohort_capacity()
             );
         }
         // One span stream per command: round handlers (and the engines
@@ -1778,7 +1942,26 @@ impl<G: Group> ServerHalf<G> {
         Ok(reply)
     }
 
+    /// How many clients one round may bring: the announced multiplexed
+    /// cohort, or the number of direct per-client links.
+    fn cohort_capacity(&self) -> usize {
+        match &self.mux {
+            Some(mux) => mux.cohort,
+            None => self.eps.len(),
+        }
+    }
+
     fn dispatch(&mut self, cmd: ServerCmd<G>) -> Result<ServerReply<G>> {
+        // Multiplexed deployments carry uploads as `[vid || upload]` lane
+        // frames, which only the SSA ingest loop understands. Every other
+        // round shape still requires direct per-client links.
+        if self.mux.is_some() && cmd.is_round() && !matches!(cmd, ServerCmd::Ssa { .. }) {
+            bail!(
+                "S{}: only SSA rounds are supported over multiplexed client \
+                 lanes (dial direct per-client links for PSR/PSU/U-DPF)",
+                self.party
+            );
+        }
         match cmd {
             ServerCmd::Shutdown => Err(anyhow!(
                 "S{}: shutdown is handled by the command loop",
@@ -1806,7 +1989,13 @@ impl<G: Group> ServerHalf<G> {
                 self.weights = Some(w);
                 Ok(ServerReply::Ack)
             }
-            ServerCmd::Ssa { n, deadline_nanos } => self.ssa(n, opt_deadline(deadline_nanos)),
+            ServerCmd::Ssa { n, deadline_nanos } => {
+                if self.mux.is_some() {
+                    self.ssa_mux(n, opt_deadline(deadline_nanos))
+                } else {
+                    self.ssa(n, opt_deadline(deadline_nanos))
+                }
+            }
             ServerCmd::Psr { n, deadline_nanos } => self.psr(n, opt_deadline(deadline_nanos)),
             ServerCmd::UdpfSetup { n, deadline_nanos } => {
                 self.udpf_setup(n, opt_deadline(deadline_nanos))
@@ -2118,6 +2307,503 @@ impl<G: Group> ServerHalf<G> {
                 spans: Vec::new(),
             })
         }
+    }
+
+    /// Fresh-key SSA over multiplexed lanes, readiness-driven: both
+    /// servers pump `[vid || upload]` frames off the lanes as they
+    /// complete. `S_1` stores each short upload's seed (O(cohort · 16 B))
+    /// and tells `S_0` with a `HAVE`; `S_0` holds a long upload only
+    /// until the matching `HAVE` arrives, then *commits* the client —
+    /// forwards the publics (zeroed seed) and streams the batch into its
+    /// running aggregate — so working memory stays O(domain + budget)
+    /// instead of O(cohort · upload). At the deadline `S_0` cuts the
+    /// stragglers, ships the committed id list (`DONE`), and `S_1`
+    /// answers with its share vector.
+    ///
+    /// A deadline is mandatory: a scale round must cut its stragglers,
+    /// never wait on 10⁵ sockets one by one.
+    fn ssa_mux(&mut self, n: usize, deadline: Option<Duration>) -> Result<ServerReply<G>> {
+        let deadline = deadline.ok_or_else(|| {
+            anyhow!(
+                "S{}: multiplexed rounds require an upload deadline \
+                 (stragglers must be cut, not waited on)",
+                self.party
+            )
+        })?;
+        // Take the cohort out so the round can mutate lane bookkeeping
+        // while borrowing `self`'s engines; always put it back — a failed
+        // round must keep the deployment's lane state.
+        let mut mux = self
+            .mux
+            .take()
+            .ok_or_else(|| anyhow!("S{}: no multiplexed cohort", self.party))?;
+        let round_deadline = Instant::now() + deadline;
+        let result = match self.mux_round(n, &mut mux, round_deadline) {
+            Ok(mut round) => {
+                let out = if self.party == 0 {
+                    self.ssa_mux_leader(n, round_deadline, &mut round)
+                } else {
+                    self.ssa_mux_worker(n, round_deadline, &mut round)
+                };
+                Self::mux_teardown(&mut mux, &mut round);
+                out
+            }
+            Err(e) => Err(e),
+        };
+        self.mux = Some(mux);
+        result
+    }
+
+    /// Register the live lanes (tag = lane index) and the peer stream
+    /// (tag = [`MUX_INTER_TAG`]) into a fresh pump for one round.
+    fn mux_round(
+        &self,
+        n: usize,
+        mux: &mut MuxCohort,
+        round_deadline: Instant,
+    ) -> Result<MuxRound> {
+        // The budget must always admit the round's largest frame — the
+        // share vector (which dwarfs any single forwarded upload) — or
+        // the exchange itself would park forever.
+        let shares_frame = 64 + self.session.domain_size().saturating_mul(G::byte_len());
+        let budget = mux.budget.max(2 * shares_frame).max(1 << 16);
+        let mut pump = FramePump::new(budget);
+        let inter = mux.inter_stream.as_ref().ok_or_else(|| {
+            anyhow!("S{}: no peer stream for the multiplexed round", self.party)
+        })?;
+        let rx = inter
+            .try_clone()
+            .map_err(|e| anyhow!("cloning the peer stream for the pump: {e}"))?;
+        let tx_stream = inter
+            .try_clone()
+            .map_err(|e| anyhow!("cloning the peer stream for sends: {e}"))?;
+        // The peer stream registers *first*: sweeps visit sources in
+        // registration order and stop at the per-batch emission cap, so
+        // a lane flood must never be able to starve the exchange frames
+        // (HAVE / FWD / DONE / SHARES) that drain the commit window.
+        // Registering `rx` also flips the shared socket non-blocking —
+        // exactly what the TxQueue's writes on `tx_stream` expect.
+        pump.register(rx, MUX_INTER_TAG, None)
+            .map_err(|e| e.context("registering the peer stream with the round pump"))?;
+        let mut lane_dead = vec![true; mux.lanes.len()];
+        let mut lane_of: Vec<Option<usize>> = vec![None; n];
+        for (li, lane) in mux.lanes.iter_mut().enumerate() {
+            let Some(stream) = lane.stream.take() else { continue };
+            pump.register(stream, li as u64, Some(round_deadline))
+                .map_err(|e| e.context("registering a client lane with the round pump"))?;
+            lane_dead[li] = false;
+            let lo = lane.lo as usize;
+            for slot in lane_of.iter_mut().skip(lo).take(lane.count as usize) {
+                *slot = Some(li);
+            }
+        }
+        Ok(MuxRound {
+            pump,
+            tx_stream,
+            tx: TxQueue::new(),
+            lane_dead,
+            lane_of,
+            budget,
+            held_peak: 0,
+        })
+    }
+
+    /// Hand surviving lanes back to the cohort, restore the peer stream
+    /// to blocking, and record the round's high-water marks.
+    fn mux_teardown(mux: &mut MuxCohort, r: &mut MuxRound) {
+        for (li, lane) in mux.lanes.iter_mut().enumerate() {
+            if let Some(stream) = r.pump.deregister(li as u64) {
+                lane.stream = Some(stream);
+            }
+        }
+        drop(r.pump.deregister(MUX_INTER_TAG));
+        mux.peak_held_bytes = mux.peak_held_bytes.max(r.held_peak);
+        mux.peak_pump_bytes = mux.peak_pump_bytes.max(r.pump.peak_in_flight());
+    }
+
+    fn ssa_mux_leader(
+        &mut self,
+        n: usize,
+        round_deadline: Instant,
+        r: &mut MuxRound,
+    ) -> Result<ServerReply<G>> {
+        let up_span = self.trace.begin();
+        let mut acc0 = vec![G::zero(); self.session.domain_size()];
+        let mut server_time = Duration::ZERO;
+        let mut peer_has = vec![false; n];
+        let mut held: Vec<Option<(msg::KeyUpload<G>, usize)>> = (0..n).map(|_| None).collect();
+        let mut committed = vec![false; n];
+        let mut committed_count = 0usize;
+        let mut held_bytes = 0usize;
+        let mut held_count = 0usize;
+        // Clients whose upload is held *and* whose `HAVE` arrived: ready
+        // to commit as soon as the outgoing backlog has room.
+        let mut pending: Vec<usize> = Vec::new();
+        let mut paused = false;
+        let mut ready: Vec<MasterKeyBatch<G>> = Vec::new();
+
+        // Ingest until the whole cohort committed or the deadline cuts
+        // the stragglers.
+        loop {
+            r.tx.flush(&mut r.tx_stream)?;
+            let now = Instant::now();
+            if now >= round_deadline || committed_count == n {
+                break;
+            }
+            // Only the peer stream left and nothing holdable in flight:
+            // no upload can ever commit, so don't wait out the deadline.
+            if r.pump.len() <= 1 && held_count == 0 && pending.is_empty() {
+                break;
+            }
+            let wait = Duration::from_millis(5).min(round_deadline - now);
+            for ev in r.pump.poll(wait) {
+                match ev {
+                    PumpEvent::Frame { tag: MUX_INTER_TAG, payload } => {
+                        match payload.first() {
+                            Some(&MUX_HAVE) => {
+                                let vid = mux_vid(payload.get(1..5))?;
+                                ensure!(vid < n, "S0: peer HAVE for out-of-range client {vid}");
+                                if !peer_has[vid] {
+                                    peer_has[vid] = true;
+                                    if held[vid].is_some() && !committed[vid] {
+                                        pending.push(vid);
+                                    }
+                                }
+                            }
+                            _ => bail!("S0: unexpected peer frame during ingest"),
+                        }
+                    }
+                    PumpEvent::Frame { tag, payload } => {
+                        let li = tag as usize;
+                        let Some((vid, up)) =
+                            mux_lane_frame::<G>(&payload, n, &r.lane_of, li, true)
+                        else {
+                            // Malformed frame or a vid outside the lane's
+                            // range: a protocol violation kills the lane.
+                            r.lane_dead[li] = true;
+                            drop(r.pump.deregister(tag));
+                            continue;
+                        };
+                        if committed[vid] || held[vid].is_some() {
+                            continue; // duplicate upload: first one wins
+                        }
+                        let size = payload.len();
+                        held_bytes += size;
+                        held_count += 1;
+                        r.held_peak = r.held_peak.max(held_bytes);
+                        held[vid] = Some((up, size));
+                        if peer_has[vid] {
+                            pending.push(vid);
+                        }
+                    }
+                    PumpEvent::Closed { tag } | PumpEvent::Expired { tag } => {
+                        if tag == MUX_INTER_TAG {
+                            bail!("S0: lost the peer exchange link mid-round");
+                        }
+                        r.lane_dead[tag as usize] = true;
+                    }
+                }
+            }
+            // Commit every peer-confirmed held upload while the outgoing
+            // backlog stays within budget (the bound that keeps a slow
+            // peer from turning held uploads into unbounded queued
+            // forwards).
+            while let Some(&vid) = pending.last() {
+                if r.tx.backlog() > r.budget {
+                    break;
+                }
+                pending.pop();
+                let Some((up, size)) = held[vid].take() else { continue };
+                held_bytes -= size;
+                held_count -= 1;
+                let publics = up
+                    .publics
+                    .ok_or_else(|| anyhow!("S0: held upload lost its publics"))?;
+                // Forward only the *public* parts: the client's S_0
+                // master seed must never reach S_1 (two-server privacy),
+                // so the forwarded envelope carries a zeroed seed.
+                let mut batch = MasterKeyBatch::<G> {
+                    msk: [Sensitive::new([0u8; 16]), Sensitive::new([0u8; 16])],
+                    publics,
+                };
+                let mut fwd = vec![MUX_FWD];
+                fwd.extend_from_slice(&wire_u32(vid, "client index")?.to_le_bytes());
+                fwd.extend(msg::encode_key_upload(&batch, 0, true));
+                if let Some(inter) = &self.inter {
+                    inter.meter().record_send(fwd.len());
+                }
+                r.tx.queue(&fwd);
+                batch.msk = [Sensitive::new(up.msk), Sensitive::new(up.msk)];
+                ready.push(batch);
+                committed[vid] = true;
+                committed_count += 1;
+            }
+            // Stream this batch's commits into the running aggregate: one
+            // engine pass per poll iteration, so the shard threads fan
+            // out once per batch instead of once per client.
+            if !ready.is_empty() {
+                let ig = self.trace.begin();
+                let t = Instant::now();
+                let ups = uploads_of(&ready, 0);
+                self.agg.aggregate_publics_into(&self.session, 0, &ups, &mut acc0);
+                server_time += t.elapsed();
+                self.trace.end(ig, Phase::Ingest, self.side(), None);
+                ready.clear();
+            }
+            // Lane backpressure: a full held window stops reading new
+            // uploads (kernel flow control pushes back on the senders);
+            // reading resumes once commits drain half of it.
+            if !paused && held_bytes >= r.budget {
+                paused = true;
+                set_lanes_paused(&mut r.pump, &r.lane_dead, true);
+            } else if paused && held_bytes <= r.budget / 2 {
+                paused = false;
+                set_lanes_paused(&mut r.pump, &r.lane_dead, false);
+            }
+        }
+        self.trace.end(up_span, Phase::Upload, self.side(), None);
+
+        // The cut: stop reading lanes (a straggler's late bytes stay in
+        // the kernel buffer) and tell the peer which clients committed —
+        // TCP ordering guarantees it sees every forward first.
+        set_lanes_paused(&mut r.pump, &r.lane_dead, true);
+        let committed_ids: Vec<u64> = committed
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c)
+            .map(|(i, _)| i as u64)
+            .collect();
+        let mut done = vec![MUX_DONE];
+        done.extend(msg::encode_indices(&committed_ids));
+        if let Some(inter) = &self.inter {
+            inter.meter().record_send(done.len());
+        }
+        r.tx.queue(&done);
+
+        // Await the share vector through the pump — it owns the only
+        // reader of the peer socket, and a blocking read around it could
+        // split a frame.
+        let mg = self.trace.begin();
+        let shares_deadline = Instant::now() + self.timeout;
+        let share1: Vec<G> = 'shares: loop {
+            r.tx.flush(&mut r.tx_stream)?;
+            ensure!(
+                Instant::now() < shares_deadline,
+                "S0: timed out waiting for the peer's share vector"
+            );
+            for ev in r.pump.poll(Duration::from_millis(5)) {
+                match ev {
+                    PumpEvent::Frame { tag: MUX_INTER_TAG, payload } => {
+                        match payload.first() {
+                            Some(&MUX_SHARES) => {
+                                break 'shares msg::decode_shares::<G>(&payload[1..])
+                                    .ok_or_else(|| anyhow!("S0: bad share vector"))?;
+                            }
+                            // A seed that landed after the cut: too late.
+                            Some(&MUX_HAVE) => {}
+                            _ => bail!("S0: unexpected peer frame while awaiting shares"),
+                        }
+                    }
+                    PumpEvent::Closed { tag } | PumpEvent::Expired { tag } => {
+                        if tag == MUX_INTER_TAG {
+                            bail!("S0: lost the peer exchange link awaiting shares");
+                        }
+                        r.lane_dead[tag as usize] = true;
+                    }
+                    PumpEvent::Frame { .. } => {} // paused lanes emit none
+                }
+            }
+        };
+        ensure!(
+            share1.len() == acc0.len(),
+            "S0: peer share vector has {} elements, expected {}",
+            share1.len(),
+            acc0.len()
+        );
+        let delta = ssa::reconstruct(&acc0, &share1);
+        self.trace.end(mg, Phase::Merge, self.side(), None);
+
+        let outcomes: Vec<ClientOutcome> = (0..n)
+            .map(|vid| {
+                if committed[vid] {
+                    ClientOutcome::Completed
+                } else {
+                    match r.lane_of[vid] {
+                        Some(li) if !r.lane_dead[li] => ClientOutcome::StragglerCut,
+                        _ => ClientOutcome::Dropped,
+                    }
+                }
+            })
+            .collect();
+        let rp = self.trace.begin();
+        self.trace.end(rp, Phase::Reply, self.side(), None);
+        Ok(ServerReply::Round {
+            server_time,
+            delta: Some(delta),
+            inter_sent: 0,
+            outcomes,
+            spans: Vec::new(),
+        })
+    }
+
+    fn ssa_mux_worker(
+        &mut self,
+        n: usize,
+        round_deadline: Instant,
+        r: &mut MuxRound,
+    ) -> Result<ServerReply<G>> {
+        let up_span = self.trace.begin();
+        let mut acc1 = vec![G::zero(); self.session.domain_size()];
+        let mut server_time = Duration::ZERO;
+        // The worker's only per-client state: the short upload's seed.
+        let mut msks: Vec<Option<[u8; 16]>> = vec![None; n];
+        let mut committed = vec![false; n];
+        let mut ready: Vec<MasterKeyBatch<G>> = Vec::new();
+        // The leader's DONE only ships after its deadline; allow the
+        // reply timeout on top before declaring the peer lost.
+        let give_up = round_deadline + self.timeout;
+        let mut done: Option<Vec<u64>> = None;
+        let done_ids = loop {
+            r.tx.flush(&mut r.tx_stream)?;
+            ensure!(
+                Instant::now() < give_up,
+                "S1: never received the peer's commit list"
+            );
+            for ev in r.pump.poll(Duration::from_millis(5)) {
+                match ev {
+                    PumpEvent::Frame { tag: MUX_INTER_TAG, payload } => {
+                        match payload.first() {
+                            Some(&MUX_FWD) => {
+                                let vid = mux_vid(payload.get(1..5))?;
+                                ensure!(
+                                    vid < n,
+                                    "S1: forwarded publics for out-of-range client {vid}"
+                                );
+                                let up = msg::decode_key_upload::<G>(&payload[5..])
+                                    .ok_or_else(|| anyhow!("S1: bad forwarded publics"))?;
+                                let publics = up.publics.ok_or_else(|| {
+                                    anyhow!("S1: forwarded upload has no publics")
+                                })?;
+                                // The leader commits only after our HAVE,
+                                // so the seed must already be stored.
+                                let msk = msks[vid].ok_or_else(|| {
+                                    anyhow!(
+                                        "S1: forward for client {vid} whose seed never arrived"
+                                    )
+                                })?;
+                                if !committed[vid] {
+                                    committed[vid] = true;
+                                    ready.push(MasterKeyBatch {
+                                        msk: [Sensitive::new(msk), Sensitive::new(msk)],
+                                        publics,
+                                    });
+                                }
+                            }
+                            Some(&MUX_DONE) => {
+                                done = Some(
+                                    msg::decode_indices(&payload[1..]).ok_or_else(|| {
+                                        anyhow!("S1: bad commit list from peer")
+                                    })?,
+                                );
+                            }
+                            _ => bail!("S1: unexpected peer frame during ingest"),
+                        }
+                    }
+                    PumpEvent::Frame { tag, payload } => {
+                        let li = tag as usize;
+                        let Some((vid, up)) =
+                            mux_lane_frame::<G>(&payload, n, &r.lane_of, li, false)
+                        else {
+                            r.lane_dead[li] = true;
+                            drop(r.pump.deregister(tag));
+                            continue;
+                        };
+                        if msks[vid].is_none() {
+                            msks[vid] = Some(up.msk);
+                            let mut have = vec![MUX_HAVE];
+                            have.extend_from_slice(
+                                &wire_u32(vid, "client index")?.to_le_bytes(),
+                            );
+                            if let Some(inter) = &self.inter {
+                                inter.meter().record_send(have.len());
+                            }
+                            r.tx.queue(&have);
+                        }
+                    }
+                    PumpEvent::Closed { tag } | PumpEvent::Expired { tag } => {
+                        if tag == MUX_INTER_TAG {
+                            bail!("S1: lost the peer exchange link mid-round");
+                        }
+                        r.lane_dead[tag as usize] = true;
+                    }
+                }
+            }
+            // Aggregate this batch's forwards before honouring DONE: the
+            // commit list only ever names already-forwarded clients.
+            if !ready.is_empty() {
+                let ig = self.trace.begin();
+                let t = Instant::now();
+                let ups = uploads_of(&ready, 1);
+                self.agg.aggregate_publics_into(&self.session, 1, &ups, &mut acc1);
+                server_time += t.elapsed();
+                self.trace.end(ig, Phase::Ingest, self.side(), None);
+                ready.clear();
+            }
+            if let Some(ids) = done.take() {
+                break ids;
+            }
+        };
+        self.trace.end(up_span, Phase::Upload, self.side(), None);
+        let mut listed = vec![false; n];
+        for &id in &done_ids {
+            let id = id as usize;
+            ensure!(
+                id < n && committed[id],
+                "S1: peer committed client {id} it never forwarded"
+            );
+            listed[id] = true;
+        }
+
+        // Ship the share vector and drain it fully — the round ends here.
+        let rp = self.trace.begin();
+        let mut shares = vec![MUX_SHARES];
+        shares.extend(msg::encode_shares(&acc1));
+        if let Some(inter) = &self.inter {
+            inter.meter().record_send(shares.len());
+        }
+        r.tx.queue(&shares);
+        let flush_deadline = Instant::now() + self.timeout;
+        while r.tx.backlog() > 0 {
+            ensure!(
+                Instant::now() < flush_deadline,
+                "S1: timed out shipping the share vector"
+            );
+            r.tx.flush(&mut r.tx_stream)?;
+            if r.tx.backlog() > 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        self.trace.end(rp, Phase::Reply, self.side(), None);
+
+        let outcomes: Vec<ClientOutcome> = (0..n)
+            .map(|vid| {
+                if listed[vid] {
+                    ClientOutcome::Completed
+                } else {
+                    match r.lane_of[vid] {
+                        Some(li) if !r.lane_dead[li] => ClientOutcome::StragglerCut,
+                        _ => ClientOutcome::Dropped,
+                    }
+                }
+            })
+            .collect();
+        Ok(ServerReply::Round {
+            server_time,
+            delta: None,
+            inter_sent: 0,
+            outcomes,
+            spans: Vec::new(),
+        })
     }
 
     /// PSR: decode the whole batch, answer it through one shard plan,

@@ -3,7 +3,7 @@
 //! (the `fsl serve` CLI subcommand is a thin wrapper around [`serve`]).
 //!
 //! One call to [`serve`] hosts one *deployment*: it accepts the driver's
-//! control channel, the per-client data links, and (for `S_0`) the peer
+//! control channel, the client data links, and (for `S_0`) the peer
 //! server's exchange link, installs the driver's session, and then runs
 //! the same command dispatch as the in-process server threads
 //! ([`super::runtime`]'s `ServerHalf::handle`) until the driver shuts the
@@ -11,23 +11,38 @@
 //! server address, payload-group mismatch, stale binary — are rejected at
 //! the handshake with a readable reason sent back to the dialler.
 //!
-//! Accept order is driven by the dialler (every handshake is individually
-//! acked before the driver opens the next connection): control first
-//! (which announces how many client links follow), then the client links,
-//! then — for `S_0` only — the peer link that `S_1` dials when the driver
-//! commands it to.
+//! The accept phase is readiness-driven: every incoming connection is
+//! registered with a [`FramePump`] and its handshake frame is collected
+//! as it completes, so links may arrive concurrently and **in any
+//! order**. The only ordering constraint is semantic: a data link can
+//! only be *admitted* once the control handshake has announced the
+//! deployment's shape, so early data links are parked and admitted the
+//! moment control lands. A connection that stalls mid-handshake, sends
+//! garbage, or cannot be acked loses only itself — the deployment keeps
+//! accepting.
+//!
+//! Client links come in two shapes, never mixed within one deployment:
+//!
+//! * **direct** ([`Role::Client`]) — one socket per client, the
+//!   historical per-client topology;
+//! * **multiplexed** ([`Role::ClientMux`]) — one socket carries a
+//!   contiguous range of virtual clients (`fsl loadgen`'s topology),
+//!   letting a cohort of 10⁵–10⁶ clients ride on a bounded socket pool.
 
-use super::runtime::ServerHalf;
+use super::runtime::{MuxCohort, MuxLane, ServerHalf};
 use super::snapshot::ServerSnapshot;
 use super::wire::{self, ServerCmd, ServerReply};
 use crate::group::Group;
 use crate::metrics::trace::{self, Party, TraceRecorder, TraceSink};
+use crate::net::reactor::{Backoff, FramePump, PumpEvent};
 use crate::net::transport::tcp::{TcpAcceptor, TcpOptions, TcpTransport};
 use crate::net::transport::{BoxTransport, Hello, HelloAck, Role};
-use crate::protocol::{udpf_ssa, AggregationEngine, RetrievalEngine, Sharding};
+use crate::protocol::{msg, udpf_ssa, AggregationEngine, RetrievalEngine, Sharding};
 use anyhow::{bail, ensure, Result};
+use std::io::Write as _;
+use std::net::TcpStream;
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Knobs for one standalone server.
 #[derive(Debug, Clone)]
@@ -49,10 +64,24 @@ pub struct ServeOptions {
     /// file exists — a corrupt snapshot is a typed startup error, never a
     /// partial restore.
     pub snapshot: Option<PathBuf>,
+    /// Ceiling on this deployment's *sockets* (direct client links, or
+    /// multiplexed lanes). Clamped at accept time against the process's
+    /// file-descriptor soft limit (with headroom for the control, peer,
+    /// snapshot, and engine fds), so a driver asking for more links than
+    /// the OS will grant is rejected with a reasoned ack instead of
+    /// failing mid-deployment on `EMFILE`.
+    pub max_client_links: u32,
+    /// Per-round ingest budget in bytes: the bound on upload payloads
+    /// held in memory awaiting commit plus frames in flight through the
+    /// pump. Backpressure pauses lane reads at the bound, so a server's
+    /// working memory stays O(domain + budget) regardless of cohort
+    /// size.
+    pub ingest_budget: usize,
 }
 
 impl ServeOptions {
-    /// Defaults for `party` (auto engine width, 600 s data timeout).
+    /// Defaults for `party` (auto engine width, 600 s data timeout,
+    /// 4096-link ceiling, 64 MiB ingest budget).
     pub fn new(party: u8) -> Self {
         ServeOptions {
             party,
@@ -60,6 +89,8 @@ impl ServeOptions {
             data_timeout: Duration::from_secs(600),
             tcp: TcpOptions::default(),
             snapshot: None,
+            max_client_links: 4096,
+            ingest_budget: 64 << 20,
         }
     }
 }
@@ -70,13 +101,6 @@ struct ControlInfo {
     m: u64,
     k: u64,
 }
-
-/// Ceiling on a deployment's client links. The handshake is
-/// unauthenticated, so its `max_clients` must be bounded *before* it
-/// sizes any allocation (the same invariant the frame and message
-/// decoders enforce) — and each link is a real socket, so anything near
-/// this is file-descriptor-bound anyway.
-const MAX_CLIENT_LINKS: u32 = 4096;
 
 /// Host one deployment on `acceptor` and serve it to completion.
 /// Returns when the driver commands shutdown or its control channel
@@ -110,13 +134,8 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
         }
         _ => None,
     };
-    let (ctrl, control) = accept_control::<G>(acceptor, opts)?;
-    let eps = accept_clients(acceptor, opts, control.max_clients)?;
-    let inter = if opts.party == 0 {
-        Some(accept_peer(acceptor, opts)?)
-    } else {
-        None
-    };
+    let dep = accept_deployment::<G>(acceptor, opts)?;
+    let Deployment { ctrl, control, eps, mux, inter } = dep;
 
     // The driver's first command installs the session it announced in the
     // control handshake (System Setup, Fig. 4 — run at deploy time).
@@ -160,6 +179,7 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
         trace: rec,
         eps,
         inter,
+        mux,
         weights: None,
         udpf: Vec::new(),
         udpf_links: Vec::new(),
@@ -222,6 +242,12 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
                 };
                 match TcpTransport::connect(addr.as_str(), &hello, &opts.tcp) {
                     Ok(conn) => {
+                        // Multiplexed rounds drive the exchange through
+                        // the readiness pump, which needs its own OS
+                        // handle on the peer socket.
+                        if let Some(mux) = &mut server.mux {
+                            mux.inter_stream = conn.stream_clone().ok();
+                        }
                         server.inter = Some(Box::new(conn));
                         ServerReply::Ack
                     }
@@ -288,51 +314,458 @@ fn snapshot_of<G: Group>(server: &ServerHalf<G>) -> ServerSnapshot<G> {
     }
 }
 
-/// Accept the next connection that completes a handshake, bounded by
-/// `opts.data_timeout` overall. Per-connection failures (a dropped
-/// liveness probe, a stray port scan, a stale-binary hello) are
-/// tolerated — the deployment must survive them — but the bound means a
-/// driver that died mid-connect leaves the server with an error after
-/// the timeout, never parked on a blocking accept forever.
-fn next_conn(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<(BoxTransport, Hello)> {
-    let deadline = std::time::Instant::now() + opts.data_timeout;
+/// A fully accepted deployment, ready to serve.
+struct Deployment {
+    ctrl: BoxTransport,
+    control: ControlInfo,
+    /// Direct per-client links (empty for a multiplexed deployment).
+    eps: Vec<BoxTransport>,
+    /// Multiplexed lane cohort (`None` for a direct deployment).
+    mux: Option<MuxCohort>,
+    /// The peer exchange link (`S_0` only, and only if it arrived during
+    /// the accept phase — the driver may instead command `DialPeer`
+    /// later, which is the normal path).
+    inter: Option<BoxTransport>,
+}
+
+/// Which client-link shape this deployment committed to. The first
+/// admitted data link decides; mixing is a wiring error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LinkMode {
+    Direct,
+    Mux,
+}
+
+/// Accumulator for the accept phase: connections land in any order and
+/// fill this in until [`complete`] says the deployment is whole.
+struct PendingDeployment {
+    ctrl: Option<BoxTransport>,
+    control: Option<ControlInfo>,
+    direct: Vec<Option<BoxTransport>>,
+    filled: usize,
+    lanes: Vec<MuxLane>,
+    /// Per-virtual-client coverage map for multiplexed lanes (overlap
+    /// detection without sorting lane ranges).
+    covered: Vec<bool>,
+    covered_count: usize,
+    mode: Option<LinkMode>,
+    inter: Option<BoxTransport>,
+    inter_raw: Option<TcpStream>,
+    /// Data links that arrived before the control handshake announced
+    /// the deployment's shape: admitted the moment control lands.
+    parked: Vec<(TcpStream, Hello)>,
+}
+
+/// The process's soft file-descriptor limit, if the platform exposes it
+/// (`/proc/self/limits`; `None` elsewhere or for "unlimited").
+fn fd_soft_limit() -> Option<u64> {
+    let limits = std::fs::read_to_string("/proc/self/limits").ok()?;
+    let line = limits.lines().find(|l| l.starts_with("Max open files"))?;
+    line["Max open files".len()..]
+        .split_whitespace()
+        .next()?
+        .parse()
+        .ok()
+}
+
+/// The link ceiling this deployment actually enforces: the configured
+/// [`ServeOptions::max_client_links`], clamped to what the process's fd
+/// soft limit can honour (keeping 64 fds of headroom for the control
+/// link, peer link, listener, snapshot file, and engine internals).
+fn effective_link_ceiling(opts: &ServeOptions) -> u32 {
+    let requested = opts.max_client_links.max(1);
+    match fd_soft_limit() {
+        Some(fds) => {
+            let headroom = fds.saturating_sub(64).max(16);
+            requested.min(u32::try_from(headroom).unwrap_or(u32::MAX))
+        }
+        None => requested,
+    }
+}
+
+/// Deliver a handshake ack on a raw accepted stream. Returns the stream
+/// only for a successful *accepting* ack: a rejection closes the
+/// connection, and a client whose ack cannot be delivered (it hung up,
+/// its buffer is wedged) loses only its own connection — the accept
+/// loop keeps serving everyone else.
+fn ack_stream(
+    mut stream: TcpStream,
+    party: u8,
+    error: Option<String>,
+    tcp: &TcpOptions,
+) -> Option<TcpStream> {
+    let rejecting = error.is_some();
+    let ack = HelloAck { party, error };
+    if stream
+        .set_write_timeout(Some(tcp.handshake_timeout))
+        .is_err()
+    {
+        return None;
+    }
+    if stream.write_all(&msg::frame(&ack.encode())).is_err() {
+        return None;
+    }
+    if rejecting {
+        None
+    } else {
+        Some(stream)
+    }
+}
+
+/// Reject a handshake with a reasoned ack and drop the connection.
+fn reject(stream: TcpStream, party: u8, reason: String, tcp: &TcpOptions) {
+    drop(ack_stream(stream, party, Some(reason), tcp));
+}
+
+/// Park a pre-control data link, bounded so a flood of early dials
+/// cannot balloon memory while the control handshake is missing.
+fn park(
+    pend: &mut PendingDeployment,
+    ceiling: u32,
+    stream: TcpStream,
+    hello: Hello,
+    opts: &ServeOptions,
+) {
+    if pend.parked.len() >= ceiling as usize + 16 {
+        reject(
+            stream,
+            opts.party,
+            "server busy: too many connections waiting ahead of the control handshake".into(),
+            &opts.tcp,
+        );
+    } else {
+        pend.parked.push((stream, hello));
+    }
+}
+
+/// Admit one handshaken connection into the pending deployment, acking
+/// or rejecting it. Per-connection failures never propagate: a link
+/// that cannot be acked or wrapped is dropped and the phase continues.
+fn admit<G: Group>(
+    pend: &mut PendingDeployment,
+    ceiling: u32,
+    stream: TcpStream,
+    hello: Hello,
+    opts: &ServeOptions,
+) {
+    if hello.party != opts.party {
+        reject(
+            stream,
+            opts.party,
+            format!(
+                "party mismatch: dialled S{} but this process serves S{}",
+                hello.party, opts.party
+            ),
+            &opts.tcp,
+        );
+        return;
+    }
+    match hello.role.clone() {
+        Role::Control { .. } => {
+            if pend.control.is_some() {
+                reject(
+                    stream,
+                    opts.party,
+                    "a control connection is already driving this deployment".into(),
+                    &opts.tcp,
+                );
+                return;
+            }
+            let info = match validate_control::<G>(&hello, opts) {
+                Ok(info) => info,
+                Err(reason) => {
+                    reject(stream, opts.party, reason, &opts.tcp);
+                    return;
+                }
+            };
+            let Some(stream) = ack_stream(stream, opts.party, None, &opts.tcp) else {
+                return;
+            };
+            let Ok(conn) = TcpTransport::from_stream(stream, &opts.tcp) else {
+                return;
+            };
+            pend.direct = (0..info.max_clients).map(|_| None).collect();
+            pend.covered = vec![false; info.max_clients];
+            pend.ctrl = Some(Box::new(conn));
+            pend.control = Some(info);
+            // Control has announced the shape: everything parked ahead
+            // of it can now be judged (parked never holds a Control, so
+            // this recursion is one level deep).
+            for (s, h) in std::mem::take(&mut pend.parked) {
+                admit::<G>(pend, ceiling, s, h, opts);
+            }
+        }
+        Role::Client { id } => {
+            if pend.control.is_none() {
+                park(pend, ceiling, stream, hello, opts);
+                return;
+            }
+            if pend.mode == Some(LinkMode::Mux) {
+                reject(
+                    stream,
+                    opts.party,
+                    "this deployment already uses multiplexed lanes — direct client \
+                     links cannot join it"
+                        .into(),
+                    &opts.tcp,
+                );
+                return;
+            }
+            let n = pend.direct.len();
+            if n as u64 > u64::from(ceiling) {
+                reject(
+                    stream,
+                    opts.party,
+                    format!(
+                        "a direct link per client would need {n} sockets, over this \
+                         server's link ceiling of {ceiling} — use multiplexed lanes \
+                         or raise links="
+                    ),
+                    &opts.tcp,
+                );
+                return;
+            }
+            let id = id as usize;
+            let reason = match pend.direct.get(id) {
+                None => Some(format!("client id {id} out of range (capacity {n})")),
+                Some(Some(_)) => Some(format!("client id {id} already connected")),
+                Some(None) => None,
+            };
+            if let Some(reason) = reason {
+                reject(stream, opts.party, reason, &opts.tcp);
+                return;
+            }
+            let Some(stream) = ack_stream(stream, opts.party, None, &opts.tcp) else {
+                return;
+            };
+            let Ok(conn) = TcpTransport::from_stream(stream, &opts.tcp) else {
+                return;
+            };
+            pend.direct[id] = Some(Box::new(conn));
+            pend.filled += 1;
+            pend.mode = Some(LinkMode::Direct);
+        }
+        Role::ClientMux { lo, count } => {
+            if pend.control.is_none() {
+                park(pend, ceiling, stream, hello, opts);
+                return;
+            }
+            if pend.mode == Some(LinkMode::Direct) {
+                reject(
+                    stream,
+                    opts.party,
+                    "this deployment already uses direct client links — multiplexed \
+                     lanes cannot join it"
+                        .into(),
+                    &opts.tcp,
+                );
+                return;
+            }
+            let n = pend.covered.len();
+            let lo_us = lo as usize;
+            let count_us = count as usize;
+            let reason = if count == 0 {
+                Some("a multiplexed lane must carry at least one client".to_string())
+            } else if u64::from(lo) + u64::from(count) > n as u64 {
+                Some(format!(
+                    "lane [{lo}, {}) exceeds the announced cohort of {n}",
+                    u64::from(lo) + u64::from(count)
+                ))
+            } else if pend.lanes.len() >= ceiling as usize {
+                Some(format!(
+                    "lane count exceeds this server's link ceiling of {ceiling}"
+                ))
+            } else if pend.covered.iter().skip(lo_us).take(count_us).any(|c| *c) {
+                Some(format!(
+                    "lane [{lo}, {}) overlaps an already-connected lane",
+                    u64::from(lo) + u64::from(count)
+                ))
+            } else {
+                None
+            };
+            if let Some(reason) = reason {
+                reject(stream, opts.party, reason, &opts.tcp);
+                return;
+            }
+            let Some(stream) = ack_stream(stream, opts.party, None, &opts.tcp) else {
+                return;
+            };
+            pend.lanes.push(MuxLane {
+                stream: Some(stream),
+                lo,
+                count,
+            });
+            for slot in pend.covered.iter_mut().skip(lo_us).take(count_us) {
+                *slot = true;
+            }
+            pend.covered_count += count_us;
+            pend.mode = Some(LinkMode::Mux);
+        }
+        Role::Peer => {
+            if opts.party == 1 {
+                reject(
+                    stream,
+                    opts.party,
+                    "S_1 dials the peer link itself — only S_0 accepts one".into(),
+                    &opts.tcp,
+                );
+                return;
+            }
+            if pend.inter.is_some() {
+                reject(
+                    stream,
+                    opts.party,
+                    "a peer exchange link is already connected".into(),
+                    &opts.tcp,
+                );
+                return;
+            }
+            let Some(stream) = ack_stream(stream, opts.party, None, &opts.tcp) else {
+                return;
+            };
+            let Ok(conn) = TcpTransport::from_stream(stream, &opts.tcp) else {
+                return;
+            };
+            pend.inter_raw = conn.stream_clone().ok();
+            pend.inter = Some(Box::new(conn));
+        }
+    }
+}
+
+/// Is the pending deployment whole? Control must have landed, every
+/// announced client must be reachable (each direct link connected, or
+/// every lane range covered), and `S_0` must hold its peer link.
+fn complete(pend: &PendingDeployment, party: u8) -> bool {
+    let Some(control) = &pend.control else {
+        return false;
+    };
+    let n = control.max_clients;
+    let links_done = match pend.mode {
+        Some(LinkMode::Direct) => pend.filled == n,
+        Some(LinkMode::Mux) => pend.covered_count == n,
+        None => n == 0,
+    };
+    links_done && (party != 0 || pend.inter.is_some())
+}
+
+/// Accept one whole deployment, readiness-driven: raw connections are
+/// registered with a [`FramePump`] and admitted as their handshake
+/// frames complete, in whatever order they arrive. Bounded overall by
+/// `opts.data_timeout` (a driver that died mid-connect leaves this
+/// server with an error, never parked forever); accept-level errors are
+/// retried under a capped exponential backoff that respects that same
+/// bound.
+fn accept_deployment<G: Group>(
+    acceptor: &TcpAcceptor,
+    opts: &ServeOptions,
+) -> Result<Deployment> {
+    let overall = Instant::now() + opts.data_timeout;
+    let ceiling = effective_link_ceiling(opts);
+    let mut pump = FramePump::new(opts.ingest_budget.max(1 << 16));
+    let mut backoff = Backoff::new(Duration::from_millis(5), Duration::from_secs(1));
+    let mut next_tag: u64 = 0;
+    let mut pend = PendingDeployment {
+        ctrl: None,
+        control: None,
+        direct: Vec::new(),
+        filled: 0,
+        lanes: Vec::new(),
+        covered: Vec::new(),
+        covered_count: 0,
+        mode: None,
+        inter: None,
+        inter_raw: None,
+        parked: Vec::new(),
+    };
     loop {
-        let remaining = deadline.saturating_duration_since(std::time::Instant::now());
-        if remaining.is_zero() {
+        if complete(&pend, opts.party) {
+            break;
+        }
+        if Instant::now() >= overall {
             bail!(
                 "gave up waiting for the deployment's connections after {:?} \
                  (did the driver die mid-connect?)",
                 opts.data_timeout
             );
         }
-        match acceptor.accept_timeout(remaining) {
-            Ok(Some(pair)) => return Ok(pair),
-            Ok(None) => {} // deadline trips on the next iteration
-            Err(_probe) => std::thread::sleep(Duration::from_millis(50)),
-        }
-    }
-}
-
-/// Accept until a valid control connection arrives (rejecting strays
-/// with a reasoned ack).
-fn accept_control<G: Group>(
-    acceptor: &TcpAcceptor,
-    opts: &ServeOptions,
-) -> Result<(BoxTransport, ControlInfo)> {
-    loop {
-        let (conn, hello) = next_conn(acceptor, opts)?;
-        match validate_control::<G>(&hello, opts) {
-            Ok(info) => {
-                conn.send(HelloAck { party: opts.party, error: None }.encode())?;
-                return Ok((conn, info));
-            }
-            Err(reason) => {
-                let _ = conn.send(
-                    HelloAck { party: opts.party, error: Some(reason) }.encode(),
-                );
+        // Drain every connection the listener has queued, then sweep the
+        // pump for completed handshake frames.
+        loop {
+            match acceptor.accept_raw() {
+                Ok(Some((stream, _from))) => {
+                    backoff.reset(Duration::from_millis(5));
+                    let deadline = Instant::now() + opts.tcp.handshake_timeout;
+                    if pump.register(stream, next_tag, Some(deadline)).is_ok() {
+                        next_tag = next_tag.wrapping_add(1);
+                    }
+                }
+                Ok(None) => break,
+                Err(_probe) => {
+                    // Transient accept errors (EMFILE, a reset mid-queue)
+                    // back off exponentially — capped, and never past the
+                    // overall deadline — instead of hammering the
+                    // listener or sleeping a fixed beat.
+                    backoff.sleep(overall.saturating_duration_since(Instant::now()));
+                    break;
+                }
             }
         }
+        if pump.is_empty() {
+            // Nothing mid-handshake: the pump would return immediately,
+            // so pace the accept polling ourselves.
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        for ev in pump.poll(Duration::from_millis(25)) {
+            match ev {
+                PumpEvent::Frame { tag, payload } => {
+                    let Some(stream) = pump.deregister(tag) else {
+                        continue;
+                    };
+                    match Hello::decode(&payload) {
+                        Ok(hello) => admit::<G>(&mut pend, ceiling, stream, hello, opts),
+                        // Foreign traffic (port scan, wrong protocol):
+                        // not even a well-formed hello — drop silently.
+                        Err(_) => {}
+                    }
+                }
+                // A connection that hung up or stalled out mid-handshake
+                // was already dropped by the pump.
+                PumpEvent::Closed { .. } | PumpEvent::Expired { .. } => {}
+            }
+        }
     }
+    let (Some(ctrl), Some(control)) = (pend.ctrl.take(), pend.control.take()) else {
+        bail!("accept loop finished without a control connection");
+    };
+    let eps: Vec<BoxTransport> = pend.direct.into_iter().flatten().collect();
+    if pend.mode == Some(LinkMode::Direct) {
+        ensure!(
+            eps.len() == control.max_clients,
+            "accept loop finished with {}/{} client links connected",
+            eps.len(),
+            control.max_clients
+        );
+    }
+    let mux = if pend.mode == Some(LinkMode::Mux) {
+        Some(MuxCohort {
+            lanes: pend.lanes,
+            cohort: control.max_clients,
+            budget: opts.ingest_budget,
+            inter_stream: pend.inter_raw,
+            peak_held_bytes: 0,
+            peak_pump_bytes: 0,
+        })
+    } else {
+        None
+    };
+    Ok(Deployment {
+        ctrl,
+        control,
+        eps,
+        mux,
+        inter: pend.inter,
+    })
 }
 
 fn validate_control<G: Group>(
@@ -354,10 +787,16 @@ fn validate_control<G: Group>(
                      (start it with the matching group=)"
                 ));
             }
-            if *max_clients > MAX_CLIENT_LINKS {
+            // The handshake is unauthenticated, so its `max_clients`
+            // must be bounded *before* it sizes any allocation (the
+            // same invariant the frame and message decoders enforce).
+            // Socket pressure is bounded separately, per link shape, by
+            // the fd-derived ceiling in `admit`.
+            if *max_clients as usize > wire::MAX_WIRE_COHORT {
                 return Err(format!(
-                    "max_clients {max_clients} exceeds this server's ceiling of \
-                     {MAX_CLIENT_LINKS} client links"
+                    "max_clients {max_clients} exceeds this server's cohort ceiling of \
+                     {} clients",
+                    wire::MAX_WIRE_COHORT
                 ));
             }
             Ok(ControlInfo {
@@ -372,77 +811,6 @@ fn validate_control<G: Group>(
     }
 }
 
-/// Accept exactly `n` client links, slotted by their handshake id
-/// (rejecting strays and duplicates with a reasoned ack).
-fn accept_clients(
-    acceptor: &TcpAcceptor,
-    opts: &ServeOptions,
-    n: usize,
-) -> Result<Vec<BoxTransport>> {
-    let mut slots: Vec<Option<BoxTransport>> = (0..n).map(|_| None).collect();
-    let mut filled = 0;
-    while filled < n {
-        let (conn, hello) = next_conn(acceptor, opts)?;
-        let reason = match (&hello.role, hello.party == opts.party) {
-            (_, false) => Some(format!(
-                "party mismatch: dialled S{} but this process serves S{}",
-                hello.party, opts.party
-            )),
-            (Role::Client { id }, true) => {
-                let id = *id as usize;
-                match slots.get_mut(id) {
-                    None => Some(format!("client id {id} out of range (capacity {n})")),
-                    Some(slot) => {
-                        if slot.is_some() {
-                            Some(format!("client id {id} already connected"))
-                        } else {
-                            conn.send(HelloAck { party: opts.party, error: None }.encode())?;
-                            *slot = Some(conn);
-                            filled += 1;
-                            continue;
-                        }
-                    }
-                }
-            }
-            (other, true) => Some(format!(
-                "expected a client link ({filled}/{n} connected), got {other:?}"
-            )),
-        };
-        let _ = conn.send(HelloAck { party: opts.party, error: reason }.encode());
-    }
-    // The loop above only exits once `filled == n`, so every slot is
-    // `Some` — but a logic slip here must fail the accept loop with a
-    // typed error, not panic the server process.
-    let links: Vec<BoxTransport> = slots.into_iter().flatten().collect();
-    ensure!(
-        links.len() == n,
-        "accept loop finished with {}/{n} client links connected",
-        links.len()
-    );
-    Ok(links)
-}
-
-/// Accept the peer server's exchange link (S_0 side).
-fn accept_peer(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<BoxTransport> {
-    loop {
-        let (conn, hello) = next_conn(acceptor, opts)?;
-        if hello.party == opts.party && hello.role == Role::Peer {
-            conn.send(HelloAck { party: opts.party, error: None }.encode())?;
-            return Ok(conn);
-        }
-        let _ = conn.send(
-            HelloAck {
-                party: opts.party,
-                error: Some(format!(
-                    "expected the peer server's exchange link, got {:?}",
-                    hello.role
-                )),
-            }
-            .encode(),
-        );
-    }
-}
-
 /// Convenience wrapper: bind `addr`, host one deployment, return when it
 /// ends. This is what `fsl serve` calls.
 pub fn serve_addr<G: Group>(addr: &str, opts: &ServeOptions) -> Result<()> {
@@ -454,7 +822,216 @@ pub fn serve_addr<G: Group>(addr: &str, opts: &ServeOptions) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::transport::TRANSPORT_VERSION;
+    use crate::coordinator::ClientOutcome;
+    use crate::crypto::rng::Rng;
+    use crate::hashing::CuckooParams;
+    use crate::net::transport::{Transport as _, TRANSPORT_VERSION};
+    use crate::protocol::{ssa, Session, SessionParams};
+    use std::sync::Arc;
+
+    /// The streaming-ingest bound (acceptance criterion): a multiplexed
+    /// SSA round's working memory is O(budget), not O(cohort). The whole
+    /// cohort's uploads dwarf the ingest budget, the peer stays silent
+    /// long enough that nothing can commit — so the held window must
+    /// fill, pause the lanes, and never exceed the budget plus one
+    /// pump batch. Asserted against the cohort's byte-accounted
+    /// high-water marks, not RSS. Accept-phase noise connections ride
+    /// along: each must lose only itself.
+    #[test]
+    fn mux_ingest_memory_is_bounded_by_the_budget_not_the_cohort() {
+        let m = 2048u64;
+        let k = 32usize;
+        let session = Session::new_full(SessionParams {
+            m,
+            k,
+            cuckoo: CuckooParams::default().with_seed(11),
+        });
+
+        // Pre-generate every virtual client's long (publics-bearing)
+        // upload so the lane threads only move bytes; size the cohort
+        // from a probe upload so the total is ~6x the budget.
+        let budget = 1usize << 16;
+        let gen = |vid: u32| {
+            let mut rng = Rng::new(1000 + u64::from(vid));
+            let sel = rng.sample_distinct(k, m);
+            let deltas: Vec<u64> = sel.iter().map(|&x| x.wrapping_add(1)).collect();
+            let batch = ssa::client_update(&session, &sel, &deltas, &mut rng).unwrap();
+            let mut f = vid.to_le_bytes().to_vec();
+            f.extend(msg::encode_key_upload(&batch, 0, true));
+            f
+        };
+        let n = (6 * budget / gen(0).len()).clamp(16, 512);
+        let n_wire = n as u32;
+        let mut total_upload = 0usize;
+        let mut max_frame = 0usize;
+        let mut frames: Vec<Vec<u8>> = Vec::with_capacity(n);
+        for vid in 0..n_wire {
+            let f = gen(vid);
+            total_upload += f.len();
+            max_frame = max_frame.max(f.len());
+            frames.push(f);
+        }
+        assert!(total_upload > 4 * budget, "cohort too small to stress the budget");
+
+        let mut opts = ServeOptions::new(0);
+        opts.threads = 1;
+        opts.ingest_budget = budget;
+        opts.data_timeout = Duration::from_secs(30);
+        let acceptor = TcpAcceptor::bind("127.0.0.1:0", opts.tcp.clone()).unwrap();
+        let addr = acceptor.local_addr().unwrap();
+        let tcp = TcpOptions::default();
+
+        // Accept-phase noise: a port-scan connection spewing unframed
+        // garbage and a dialler that hangs up mid-handshake. Each loses
+        // only itself — the deployment below must still assemble.
+        let noise = std::thread::spawn(move || {
+            let mut junk = std::net::TcpStream::connect(addr).unwrap();
+            junk.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+            drop(std::net::TcpStream::connect(addr).unwrap());
+            junk
+        });
+
+        let group = std::any::type_name::<u64>().to_string();
+        let ctrl = std::thread::spawn({
+            let tcp = tcp.clone();
+            move || {
+                TcpTransport::connect(
+                    addr,
+                    &Hello {
+                        party: 0,
+                        role: Role::Control { max_clients: n_wire, m, k: k as u64, group },
+                    },
+                    &tcp,
+                )
+                .unwrap()
+            }
+        });
+        let cut = n / 2;
+        let hi = frames.split_off(cut);
+        let lanes: Vec<_> = [
+            (0u32, cut as u32, frames),
+            (cut as u32, (n - cut) as u32, hi),
+        ]
+        .into_iter()
+        .map(|(lo, count, payloads)| {
+            let tcp = tcp.clone();
+            std::thread::spawn(move || {
+                let conn = TcpTransport::connect(
+                    addr,
+                    &Hello { party: 0, role: Role::ClientMux { lo, count } },
+                    &tcp,
+                )
+                .unwrap();
+                for f in payloads {
+                    conn.send(f).unwrap();
+                }
+                conn // the socket must outlive the round
+            })
+        })
+        .collect();
+        // The fake S1: silent long enough that the leader's held window
+        // must fill (nothing can commit before a HAVE), then a HAVE
+        // burst for the whole cohort, then the forwarded publics drain
+        // and the commit list is answered with a share vector.
+        let domain = session.domain_size();
+        let peer = std::thread::spawn({
+            let tcp = tcp.clone();
+            move || {
+                let conn =
+                    TcpTransport::connect(addr, &Hello { party: 0, role: Role::Peer }, &tcp)
+                        .unwrap();
+                std::thread::sleep(Duration::from_millis(800));
+                for vid in 0..n_wire {
+                    let mut have = vec![1u8]; // MUX_HAVE
+                    have.extend_from_slice(&vid.to_le_bytes());
+                    conn.send(have).unwrap();
+                }
+                let mut forwards = 0usize;
+                loop {
+                    let f = conn.recv_timeout(Duration::from_secs(30)).unwrap();
+                    match f.first() {
+                        Some(&2) => forwards += 1, // MUX_FWD
+                        Some(&3) => break,         // MUX_DONE
+                        other => panic!("unexpected exchange frame tag {other:?}"),
+                    }
+                }
+                let mut shares = vec![4u8]; // MUX_SHARES
+                shares.extend(msg::encode_shares(&vec![0u64; domain]));
+                conn.send(shares).unwrap();
+                (conn, forwards)
+            }
+        });
+
+        let dep = accept_deployment::<u64>(&acceptor, &opts).unwrap();
+        assert!(dep.mux.is_some(), "mux lanes must assemble a multiplexed deployment");
+        let rec = TraceRecorder::shared(trace::DEFAULT_TRACE_CAPACITY);
+        let sink = TraceSink::new(rec.clone(), Party::server(0));
+        let sharding = Sharding::new(1);
+        let mut server = ServerHalf::<u64> {
+            party: 0,
+            session: Arc::new(session),
+            agg: AggregationEngine::with_sharding(sharding).with_trace(sink.clone()),
+            ret: RetrievalEngine::with_sharding(sharding).with_trace(sink),
+            trace: rec,
+            eps: dep.eps,
+            inter: dep.inter,
+            mux: dep.mux,
+            weights: None,
+            udpf: Vec::new(),
+            udpf_links: Vec::new(),
+            udpf_total: 0,
+            dead: Vec::new(),
+            timeout: opts.data_timeout,
+        };
+        let reply = server
+            .handle(ServerCmd::Ssa { n, deadline_nanos: 30_000_000_000 })
+            .unwrap();
+        match reply {
+            ServerReply::Round { delta: Some(delta), outcomes, .. } => {
+                assert_eq!(delta.len(), m as usize);
+                assert_eq!(outcomes.len(), n);
+                assert!(
+                    outcomes.iter().all(|o| *o == ClientOutcome::Completed),
+                    "every virtual client should commit before the deadline"
+                );
+            }
+            _ => panic!("expected a Round reply carrying S0's delta"),
+        }
+
+        let (_peer_conn, forwards) = peer.join().unwrap();
+        assert_eq!(forwards, n, "one forwarded publics frame per committed client");
+        for lane in lanes {
+            drop(lane.join().unwrap());
+        }
+        drop(ctrl.join().unwrap());
+        drop(noise.join().unwrap());
+
+        // The bound itself. The held window may overshoot the pause
+        // threshold by at most one poll batch, and a batch is capped by
+        // the pump's budget (plus the frame that crossed the cap); the
+        // pump's own in-flight accounting never exceeds the budget.
+        let mux = server.mux.take().unwrap();
+        assert!(
+            mux.peak_held_bytes >= budget,
+            "the held window never filled ({} of {budget} bytes) — the \
+             backpressure path went untested",
+            mux.peak_held_bytes
+        );
+        assert!(
+            mux.peak_held_bytes <= 2 * budget + 2 * max_frame,
+            "held window peaked at {} bytes against a {budget}-byte budget",
+            mux.peak_held_bytes
+        );
+        assert!(mux.peak_pump_bytes > 0, "the pump never accounted a frame");
+        assert!(
+            mux.peak_pump_bytes <= budget,
+            "pump in-flight peaked at {} bytes against a {budget}-byte budget",
+            mux.peak_pump_bytes
+        );
+        // And the bound meant something: the cohort shipped several
+        // budgets' worth of uploads through that window.
+        assert!(total_upload > 4 * budget);
+    }
 
     #[test]
     fn control_validation_catches_wiring_mistakes() {
@@ -509,7 +1086,129 @@ mod tests {
             .contains("ceiling"));
 
         // Sanity: the version constant exists and is what frames carry
-        // (version 2 added upload deadlines and per-client outcomes).
-        assert_eq!(TRANSPORT_VERSION, 2);
+        // (version 3 added multiplexed client lanes).
+        assert_eq!(TRANSPORT_VERSION, 3);
+    }
+
+    #[test]
+    fn link_ceiling_respects_fd_limit() {
+        // Whatever the platform reports, the effective ceiling never
+        // exceeds the configured one and never collapses to zero.
+        let mut opts = ServeOptions::new(0);
+        opts.max_client_links = 4096;
+        let eff = effective_link_ceiling(&opts);
+        assert!(eff >= 1 && eff <= 4096, "effective ceiling {eff}");
+
+        // A tiny configured ceiling passes through unchanged (every
+        // realistic fd limit is far above it).
+        opts.max_client_links = 2;
+        assert_eq!(effective_link_ceiling(&opts), 2);
+
+        // Zero is nonsense; it clamps up to one link.
+        opts.max_client_links = 0;
+        assert_eq!(effective_link_ceiling(&opts), 1);
+    }
+
+    #[test]
+    fn admit_orders_and_rejects() {
+        use std::net::{TcpListener, TcpStream};
+        // Real sockets only as fd carriers: admit() writes acks into
+        // them, the far ends just absorb the bytes.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut dial = || {
+            let far = TcpStream::connect(addr).unwrap();
+            let (near, _) = listener.accept().unwrap();
+            (near, far)
+        };
+        let opts = ServeOptions::new(0);
+        let mut pend = PendingDeployment {
+            ctrl: None,
+            control: None,
+            direct: Vec::new(),
+            filled: 0,
+            lanes: Vec::new(),
+            covered: Vec::new(),
+            covered_count: 0,
+            mode: None,
+            inter: None,
+            inter_raw: None,
+            parked: Vec::new(),
+        };
+
+        // A lane arriving before control parks rather than dying.
+        let (s, _keep1) = dial();
+        admit::<u64>(
+            &mut pend,
+            64,
+            s,
+            Hello { party: 0, role: Role::ClientMux { lo: 0, count: 2 } },
+            &opts,
+        );
+        assert_eq!(pend.parked.len(), 1);
+        assert!(!complete(&pend, 0));
+
+        // Control lands: the parked lane is admitted behind it.
+        let (s, _keep2) = dial();
+        admit::<u64>(
+            &mut pend,
+            64,
+            s,
+            Hello {
+                party: 0,
+                role: Role::Control {
+                    max_clients: 4,
+                    m: 1024,
+                    k: 16,
+                    group: std::any::type_name::<u64>().into(),
+                },
+            },
+            &opts,
+        );
+        assert!(pend.control.is_some());
+        assert_eq!(pend.parked.len(), 0);
+        assert_eq!(pend.lanes.len(), 1);
+        assert_eq!(pend.covered_count, 2);
+
+        // An overlapping lane is rejected; a disjoint one completes the
+        // cohort coverage.
+        let (s, _keep3) = dial();
+        admit::<u64>(
+            &mut pend,
+            64,
+            s,
+            Hello { party: 0, role: Role::ClientMux { lo: 1, count: 2 } },
+            &opts,
+        );
+        assert_eq!(pend.lanes.len(), 1, "overlap must be rejected");
+        let (s, _keep4) = dial();
+        admit::<u64>(
+            &mut pend,
+            64,
+            s,
+            Hello { party: 0, role: Role::ClientMux { lo: 2, count: 2 } },
+            &opts,
+        );
+        assert_eq!(pend.covered_count, 4);
+
+        // A direct client link cannot join a mux deployment.
+        let (s, _keep5) = dial();
+        admit::<u64>(
+            &mut pend,
+            64,
+            s,
+            Hello { party: 0, role: Role::Client { id: 0 } },
+            &opts,
+        );
+        assert_eq!(pend.filled, 0);
+        assert_eq!(pend.mode, Some(LinkMode::Mux));
+
+        // S_0 still waits on its peer link; once it lands, the
+        // deployment is whole.
+        assert!(!complete(&pend, 0));
+        assert!(complete(&pend, 1));
+        let (s, _keep6) = dial();
+        admit::<u64>(&mut pend, 64, s, Hello { party: 0, role: Role::Peer }, &opts);
+        assert!(complete(&pend, 0));
     }
 }

@@ -21,8 +21,8 @@
 
 use anyhow::{anyhow, Result};
 use fsl::coordinator::{
-    run_fsl_training, serve, ClientOutcome, FslConfig, FslRuntime, FslRuntimeBuilder, KeyMode,
-    RoundReport, ServeOptions,
+    run_fsl_training, run_loadgen, serve, ClientOutcome, FslConfig, FslRuntime,
+    FslRuntimeBuilder, KeyMode, LoadgenOptions, LoadgenVerify, RoundReport, ServeOptions,
 };
 use fsl::crypto::rng::Rng;
 use fsl::data::{partition_iid, ImageDataset, IMAGE_CLASSES};
@@ -58,9 +58,10 @@ fn main() -> Result<()> {
         "psr" => cmd_psr(&kv, json),
         "params" => cmd_params(&kv),
         "serve" => cmd_serve(&kv),
+        "loadgen" => cmd_loadgen(&kv, json),
         _ => {
             eprintln!(
-                "usage: fsl <train|ssa|psr|params|serve> [key=value ...] [--json]\n\
+                "usage: fsl <train|ssa|psr|params|serve|loadgen> [key=value ...] [--json]\n\
                  examples:\n\
                  \u{20}  fsl train rounds=20 clients=10 c=0.1\n\
                  \u{20}  fsl ssa m=32768 c=0.1 clients=4\n\
@@ -70,6 +71,9 @@ fn main() -> Result<()> {
                  \u{20}  fsl serve party=0 listen=127.0.0.1:7100\n\
                  \u{20}  fsl serve party=1 listen=127.0.0.1:7101\n\
                  \u{20}  fsl ssa m=32768 c=0.1 clients=4 \
+                 connect=127.0.0.1:7100,127.0.0.1:7101 --json\n\
+                 scale harness (10^4..10^6 virtual clients over mux lanes):\n\
+                 \u{20}  fsl loadgen clients=10000 lanes=64 m=16384 c=0.01 \
                  connect=127.0.0.1:7100,127.0.0.1:7101 --json"
             );
             Ok(())
@@ -93,6 +97,10 @@ fn cmd_serve(kv: &HashMap<String, String>) -> Result<()> {
     opts.threads = get(kv, "threads", 0);
     opts.data_timeout = Duration::from_millis(get(kv, "timeout_ms", 600_000u64));
     opts.snapshot = kv.get("snapshot").map(std::path::PathBuf::from);
+    // links= caps concurrent client sockets (clamped to the fd limit);
+    // budget_mb= bounds the multiplexed rounds' held-upload window.
+    opts.max_client_links = get(kv, "links", opts.max_client_links);
+    opts.ingest_budget = get(kv, "budget_mb", opts.ingest_budget >> 20).saturating_mul(1 << 20);
     let acceptor = TcpAcceptor::bind(listen.as_str(), opts.tcp.clone())
         .map_err(|e| e.context(format!("starting a server on {listen}")))?;
     let addr = acceptor.local_addr()?;
@@ -108,6 +116,68 @@ fn cmd_serve(kv: &HashMap<String, String>) -> Result<()> {
             "unknown payload group {other:?} (supported: u64, u128)"
         )),
     }
+}
+
+/// Drive a multiplexed scale round against two `fsl serve` processes:
+/// `clients=N` virtual clients over `lanes=L` mux sockets per server.
+/// `m=`/`c=` (or `k=`) shape the session, `deadline_ms=` arms the
+/// straggler cut, `jitter_ms=`/`straggle=`/`drop_lanes=` inject faults,
+/// `verify=expected|inproc|none` picks the post-round check, and
+/// `history=PATH|default` appends a bench-diff-gated datapoint.
+fn cmd_loadgen(kv: &HashMap<String, String>, json: bool) -> Result<()> {
+    let spec: String = get(kv, "connect", "127.0.0.1:7100,127.0.0.1:7101".to_string());
+    let (s0, s1) = spec
+        .split_once(',')
+        .ok_or_else(|| anyhow!("expected two addresses: connect=S0_ADDR,S1_ADDR (got {spec:?})"))?;
+    let mut opts = LoadgenOptions::new(s0.trim(), s1.trim());
+    opts.clients = get(kv, "clients", 10_000usize).max(1);
+    opts.lanes = get(kv, "lanes", 64usize).max(1);
+    opts.m = get(kv, "m", 1u64 << 14);
+    let c: f64 = get(kv, "c", 0.01);
+    opts.k = get(kv, "k", ((opts.m as f64 * c) as usize).max(1));
+    opts.seed = get(kv, "seed", 7);
+    opts.deadline = Duration::from_millis(get(kv, "deadline_ms", 30_000u64));
+    opts.reply_timeout = Duration::from_millis(get(kv, "reply_timeout_ms", 600_000u64));
+    opts.connect_window = Duration::from_millis(get(kv, "retry_ms", 10_000u64));
+    opts.jitter = Duration::from_millis(get(kv, "jitter_ms", 0u64));
+    opts.straggle = get(kv, "straggle", 0.0);
+    opts.drop_lanes = get(kv, "drop_lanes", 0);
+    opts.verify = match get(kv, "verify", "expected".to_string()).as_str() {
+        "none" => LoadgenVerify::None,
+        "expected" => LoadgenVerify::Expected,
+        "inproc" => LoadgenVerify::Inproc,
+        other => return Err(anyhow!("verify takes expected|inproc|none (got {other:?})")),
+    };
+    opts.history = kv.get("history").map(|p| {
+        if p == "default" {
+            fsl::metrics::history::default_path()
+        } else {
+            std::path::PathBuf::from(p)
+        }
+    });
+    wait_for_listeners(&[opts.s0.as_str(), opts.s1.as_str()], opts.connect_window)?;
+    eprintln!(
+        "loadgen: {} virtual clients over {} lane pairs (m={} k={}, deadline {:?})",
+        opts.clients, opts.lanes, opts.m, opts.k, opts.deadline
+    );
+    let report = run_loadgen(&opts)?;
+    eprintln!(
+        "loadgen: {}/{} completed ({} cut, {} dropped); wall {:?}, server {:?}, \
+         gen {:?}, upload {:.1} MB, driver peak RSS {:.1} MB",
+        report.completed,
+        report.clients,
+        report.straggler_cut,
+        report.dropped,
+        report.wall_time,
+        report.server_time,
+        report.gen_time,
+        report.upload_bytes as f64 / 1e6,
+        report.peak_rss_mb,
+    );
+    if json {
+        println!("{}", report.to_json());
+    }
+    Ok(())
 }
 
 /// The shared round-shape flags: `keymode=fresh|udpf` picks the SSA key

@@ -41,6 +41,12 @@ pub enum Phase {
     Merge,
     /// Shipping the round result: share exchange and reply assembly.
     Reply,
+    /// Accepting and handshaking a deployment's connections (server) /
+    /// dialling them (driver) — the reactor's concurrent accept loop.
+    Accept,
+    /// Streaming mux ingest: demultiplexing virtual-client frames and
+    /// absorbing committed uploads into the running accumulator.
+    Ingest,
 }
 
 impl Phase {
@@ -51,6 +57,8 @@ impl Phase {
             Phase::Eval => "eval",
             Phase::Merge => "merge",
             Phase::Reply => "reply",
+            Phase::Accept => "accept",
+            Phase::Ingest => "ingest",
         }
     }
 
@@ -61,6 +69,8 @@ impl Phase {
             Phase::Eval => 2,
             Phase::Merge => 3,
             Phase::Reply => 4,
+            Phase::Accept => 5,
+            Phase::Ingest => 6,
         }
     }
 
@@ -71,6 +81,8 @@ impl Phase {
             2 => Phase::Eval,
             3 => Phase::Merge,
             4 => Phase::Reply,
+            5 => Phase::Accept,
+            6 => Phase::Ingest,
             _ => return None,
         })
     }
@@ -396,7 +408,15 @@ mod tests {
 
     #[test]
     fn phase_and_party_bytes_round_trip() {
-        for p in [Phase::Keygen, Phase::Upload, Phase::Eval, Phase::Merge, Phase::Reply] {
+        for p in [
+            Phase::Keygen,
+            Phase::Upload,
+            Phase::Eval,
+            Phase::Merge,
+            Phase::Reply,
+            Phase::Accept,
+            Phase::Ingest,
+        ] {
             assert_eq!(Phase::from_byte(p.to_byte()), Some(p));
         }
         for p in [Party::Client, Party::S0, Party::S1] {

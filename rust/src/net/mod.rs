@@ -11,6 +11,7 @@
 //! [`Endpoint`] as the in-process implementation and
 //! [`transport::tcp`] as the real-socket one.
 
+pub mod reactor;
 pub mod transport;
 
 use crate::metrics::CommMeter;

@@ -1,0 +1,611 @@
+//! Readiness-driven connection multiplexer: the std-only reactor under
+//! the standalone server's accept loop and the streaming mux-SSA ingest.
+//!
+//! The container ships no epoll/kqueue binding, so "readiness" here is a
+//! level-triggered sweep over non-blocking sockets: every registered
+//! stream is drained until `WouldBlock`, and the pump sleeps in short
+//! increments only when a whole sweep moved nothing. That is the same
+//! poll discipline the old `accept_timeout` used for a single listener,
+//! generalised to any number of in-flight connections — one thread can
+//! carry a handshake burst or a 10^6-virtual-client upload fan-in
+//! without a thread (or an fd-sized buffer) per peer.
+//!
+//! Three properties the rounds lean on:
+//!
+//! * **Frame reassembly.** Each source owns a tiny state machine: a
+//!   7-byte [`msg`] frame header, then the payload. Partial reads park
+//!   mid-frame and resume on the next sweep, so interleaved slow writers
+//!   cost memory proportional to *their declared frames*, not time.
+//! * **Backpressure budget.** The sum of all in-progress payload buffers
+//!   is capped by the pump's byte budget. A source whose declared frame
+//!   does not fit waits (unread, in the kernel's receive buffer — TCP
+//!   flow control pushes back on the sender) until completed frames are
+//!   handed to the caller and their bytes release. A sweep also stops
+//!   *emitting* once a budget's worth of completed frames is out, so one
+//!   [`FramePump::poll`] batch hands the caller O(budget) bytes — a
+//!   caller that holds frames across batches (the mux ingest's commit
+//!   window) bounds its memory by reacting between batches, no matter
+//!   how much a flooding cohort has queued in the kernel. A slow-loris
+//!   cohort can therefore stall *itself*, never the server's memory.
+//! * **Deadlines.** Every source can carry a deadline; a source that has
+//!   not completed a frame by then yields [`PumpEvent::Expired`] and is
+//!   dropped. This is what cuts handshake slow-loris connections and
+//!   upload stragglers without per-connection timer threads.
+//!
+//! The pump is deliberately read-only: replies and forwards go out
+//! through the existing blocking [`crate::net::transport`] handles,
+//! whose peers always drain their own ends through a pump of their own.
+
+use crate::protocol::msg;
+use anyhow::{Context, Result};
+use std::io::Read;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// How long one idle sweep sleeps before re-polling its sources. Short
+/// enough that handshake latency stays imperceptible, long enough that
+/// an idle accept phase is not a hot spin.
+const SWEEP_SLEEP: Duration = Duration::from_millis(1);
+
+/// What a sweep observed on one source.
+#[derive(Debug)]
+pub enum PumpEvent {
+    /// One complete frame's payload (the frame header already stripped
+    /// and its bytes released from the budget — the caller owns them).
+    Frame { tag: u64, payload: Vec<u8> },
+    /// The source closed, reset, or sent bytes that do not parse as a
+    /// frame. The source has been dropped from the pump.
+    Closed { tag: u64 },
+    /// The source's deadline passed before a frame completed. The source
+    /// has been dropped from the pump.
+    Expired { tag: u64 },
+}
+
+impl PumpEvent {
+    /// The source the event belongs to.
+    pub fn tag(&self) -> u64 {
+        match self {
+            PumpEvent::Frame { tag, .. }
+            | PumpEvent::Closed { tag }
+            | PumpEvent::Expired { tag } => *tag,
+        }
+    }
+}
+
+/// Per-source frame-reassembly state.
+enum ReadState {
+    /// Collecting the fixed-size frame header.
+    Header { buf: [u8; msg::FRAME_HEADER_LEN], got: usize },
+    /// Header parsed but the payload does not fit the budget yet: the
+    /// bytes wait in the kernel buffer until the pump can afford them.
+    Parked { len: usize },
+    /// Collecting `buf.len()` payload bytes (charged against the budget).
+    Payload { buf: Vec<u8>, got: usize },
+}
+
+struct Source {
+    tag: u64,
+    stream: TcpStream,
+    state: ReadState,
+    deadline: Option<Instant>,
+    /// Paused sources are skipped by sweeps (the ingest layer's own
+    /// backpressure: stop reading uploads while its commit window is
+    /// full) but still expire on their deadline.
+    paused: bool,
+}
+
+/// The readiness pump: registered non-blocking streams in, completed
+/// frames out.
+pub struct FramePump {
+    sources: Vec<Source>,
+    budget: usize,
+    in_flight: usize,
+    peak_in_flight: usize,
+}
+
+impl FramePump {
+    /// A pump whose in-progress payload buffers never exceed `budget`
+    /// bytes in total. Frames larger than the whole budget can never
+    /// complete and close their source (a protocol violation, same as a
+    /// frame beyond [`msg::MAX_FRAME_LEN`]).
+    pub fn new(budget: usize) -> Self {
+        FramePump {
+            sources: Vec::new(),
+            budget: budget.max(msg::FRAME_HEADER_LEN),
+            in_flight: 0,
+            peak_in_flight: 0,
+        }
+    }
+
+    /// Register `stream` under `tag` (made non-blocking here). Tags are
+    /// caller-chosen and must be unique among live sources.
+    pub fn register(
+        &mut self,
+        stream: TcpStream,
+        tag: u64,
+        deadline: Option<Instant>,
+    ) -> Result<()> {
+        stream
+            .set_nonblocking(true)
+            .context("making a pump source non-blocking")?;
+        self.sources.push(Source {
+            tag,
+            stream,
+            state: ReadState::Header { buf: [0; msg::FRAME_HEADER_LEN], got: 0 },
+            deadline,
+            paused: false,
+        });
+        Ok(())
+    }
+
+    /// Remove `tag` and return its stream restored to blocking mode (for
+    /// wrapping in a regular transport once its handshake frame is in).
+    /// Any partial payload charge is refunded.
+    pub fn deregister(&mut self, tag: u64) -> Option<TcpStream> {
+        let at = self.sources.iter().position(|s| s.tag == tag)?;
+        let src = self.sources.swap_remove(at);
+        if let ReadState::Payload { buf, .. } = &src.state {
+            self.in_flight = self.in_flight.saturating_sub(buf.len());
+        }
+        let _ = src.stream.set_nonblocking(false);
+        Some(src.stream)
+    }
+
+    /// Replace `tag`'s deadline (`None` = no deadline).
+    pub fn set_deadline(&mut self, tag: u64, deadline: Option<Instant>) {
+        if let Some(src) = self.sources.iter_mut().find(|s| s.tag == tag) {
+            src.deadline = deadline;
+        }
+    }
+
+    /// Pause or resume sweeping `tag` (paused sources keep their kernel
+    /// buffer and their deadline, they are just not read).
+    pub fn set_paused(&mut self, tag: u64, paused: bool) {
+        if let Some(src) = self.sources.iter_mut().find(|s| s.tag == tag) {
+            src.paused = paused;
+        }
+    }
+
+    /// True when `tag` is still registered.
+    pub fn contains(&self, tag: u64) -> bool {
+        self.sources.iter().any(|s| s.tag == tag)
+    }
+
+    /// Number of live sources.
+    pub fn len(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// True when no sources remain.
+    pub fn is_empty(&self) -> bool {
+        self.sources.is_empty()
+    }
+
+    /// High-water mark of the summed in-progress payload buffers — the
+    /// streaming-ingest memory-bound tests assert on this.
+    pub fn peak_in_flight(&self) -> usize {
+        self.peak_in_flight
+    }
+
+    /// Sweep the sources until at least one event is ready or `max_wait`
+    /// passes; an empty vec means a quiet timeout. Sources that closed,
+    /// expired, or completed frames are reported once each; closed and
+    /// expired sources are dropped from the pump.
+    pub fn poll(&mut self, max_wait: Duration) -> Vec<PumpEvent> {
+        let deadline = Instant::now() + max_wait;
+        loop {
+            let events = self.sweep();
+            if !events.is_empty() {
+                return events;
+            }
+            if Instant::now() >= deadline || self.sources.is_empty() {
+                return events;
+            }
+            std::thread::sleep(SWEEP_SLEEP.min(max_wait));
+        }
+    }
+
+    /// One pass over every source: drain readable bytes, emit completed
+    /// frames, expire and drop dead sources.
+    fn sweep(&mut self) -> Vec<PumpEvent> {
+        let now = Instant::now();
+        let mut events = Vec::new();
+        let mut emitted = 0usize;
+        let mut i = 0;
+        while i < self.sources.len() {
+            // Budget-parked sources retry here: earlier handoffs in this
+            // same sweep may have freed room.
+            let parked_len = match &self.sources[i].state {
+                ReadState::Parked { len } => Some(*len),
+                _ => None,
+            };
+            if let Some(len) = parked_len {
+                if self.in_flight + len <= self.budget {
+                    self.sources[i].state =
+                        ReadState::Payload { buf: vec![0u8; len], got: 0 };
+                    self.in_flight += len;
+                    self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+                }
+            }
+            let fate = if self.sources[i].paused {
+                SourceFate::Keep
+            } else {
+                self.drain_source(i, &mut events, &mut emitted)
+            };
+            let expired = matches!(fate, SourceFate::Keep)
+                && self.sources[i].deadline.is_some_and(|d| now >= d);
+            match (fate, expired) {
+                (SourceFate::Keep, false) => i += 1,
+                (SourceFate::Keep, true) => {
+                    events.push(PumpEvent::Expired { tag: self.sources[i].tag });
+                    self.drop_source(i);
+                }
+                (SourceFate::Closed, _) => {
+                    events.push(PumpEvent::Closed { tag: self.sources[i].tag });
+                    self.drop_source(i);
+                }
+            }
+            if emitted >= self.budget {
+                // Batch cap: let the caller absorb (and release) what is
+                // already out before any source delivers more. Remaining
+                // sources keep their kernel buffers and are swept next
+                // pass.
+                break;
+            }
+        }
+        events
+    }
+
+    /// Read source `i` until `WouldBlock` or the sweep's emission cap,
+    /// pushing every completed frame. Each iteration takes the
+    /// reassembly state out of the source, works on the owned value, and
+    /// puts the successor state back.
+    fn drain_source(
+        &mut self,
+        i: usize,
+        events: &mut Vec<PumpEvent>,
+        emitted: &mut usize,
+    ) -> SourceFate {
+        loop {
+            let fresh = ReadState::Header { buf: [0; msg::FRAME_HEADER_LEN], got: 0 };
+            let state = std::mem::replace(&mut self.sources[i].state, fresh);
+            match state {
+                // Still over budget: revisit on the next sweep.
+                ReadState::Parked { len } => {
+                    self.sources[i].state = ReadState::Parked { len };
+                    return SourceFate::Keep;
+                }
+                ReadState::Header { mut buf, mut got } => {
+                    if got < buf.len() {
+                        match self.sources[i].stream.read(&mut buf[got..]) {
+                            Ok(0) => return SourceFate::Closed,
+                            Ok(n) => got += n,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                self.sources[i].state = ReadState::Header { buf, got };
+                                return SourceFate::Keep;
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                                self.sources[i].state = ReadState::Header { buf, got };
+                                continue;
+                            }
+                            Err(_) => return SourceFate::Closed,
+                        }
+                    }
+                    if got < buf.len() {
+                        self.sources[i].state = ReadState::Header { buf, got };
+                        continue;
+                    }
+                    let len = match msg::frame_payload_len(&buf[..]) {
+                        Ok(len) => len,
+                        // Bad magic/version/length: protocol violation.
+                        Err(_) => return SourceFate::Closed,
+                    };
+                    if len > self.budget {
+                        // Can never fit: treat like a malformed frame.
+                        return SourceFate::Closed;
+                    }
+                    if self.in_flight + len > self.budget {
+                        self.sources[i].state = ReadState::Parked { len };
+                        return SourceFate::Keep;
+                    }
+                    self.in_flight += len;
+                    self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+                    self.sources[i].state =
+                        ReadState::Payload { buf: vec![0u8; len], got: 0 };
+                }
+                ReadState::Payload { mut buf, mut got } => {
+                    if got < buf.len() {
+                        match self.sources[i].stream.read(&mut buf[got..]) {
+                            Ok(0) => {
+                                self.in_flight = self.in_flight.saturating_sub(buf.len());
+                                return SourceFate::Closed;
+                            }
+                            Ok(n) => got += n,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                self.sources[i].state = ReadState::Payload { buf, got };
+                                return SourceFate::Keep;
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                                self.sources[i].state = ReadState::Payload { buf, got };
+                                continue;
+                            }
+                            Err(_) => {
+                                self.in_flight = self.in_flight.saturating_sub(buf.len());
+                                return SourceFate::Closed;
+                            }
+                        }
+                    }
+                    // Zero-length frames complete without a payload read,
+                    // so this check runs even when no byte moved above.
+                    if got < buf.len() {
+                        self.sources[i].state = ReadState::Payload { buf, got };
+                        continue;
+                    }
+                    let len = buf.len();
+                    self.in_flight = self.in_flight.saturating_sub(len);
+                    *emitted += len;
+                    events.push(PumpEvent::Frame { tag: self.sources[i].tag, payload: buf });
+                    if *emitted >= self.budget {
+                        return SourceFate::Keep;
+                    }
+                    // The replacement state is already a fresh header.
+                }
+            }
+        }
+    }
+
+    fn drop_source(&mut self, i: usize) {
+        let src = self.sources.swap_remove(i);
+        if let ReadState::Payload { buf, .. } = &src.state {
+            self.in_flight = self.in_flight.saturating_sub(buf.len());
+        }
+    }
+}
+
+enum SourceFate {
+    Keep,
+    Closed,
+}
+
+/// Capped exponential backoff for accept-error loops: a port-scan burst
+/// or a transient `EMFILE` must not turn the accept loop into a hot
+/// spin, and must not sleep past the phase's overall deadline either.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    next: Duration,
+    cap: Duration,
+}
+
+impl Backoff {
+    /// Start at `base`, double per failure, never exceed `cap`.
+    pub fn new(base: Duration, cap: Duration) -> Self {
+        Backoff { next: base.max(Duration::from_millis(1)), cap }
+    }
+
+    /// Sleep for the current step (clamped to `remaining`) and escalate.
+    pub fn sleep(&mut self, remaining: Duration) {
+        std::thread::sleep(self.next.min(remaining));
+        self.next = (self.next * 2).min(self.cap);
+    }
+
+    /// The duration the next [`Backoff::sleep`] would wait.
+    pub fn peek(&self) -> Duration {
+        self.next
+    }
+
+    /// Drop back to fast polling after a success.
+    pub fn reset(&mut self, base: Duration) {
+        self.next = base.max(Duration::from_millis(1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn reassembles_interleaved_partial_frames() {
+        let (mut a_w, a_r) = pair();
+        let (mut b_w, b_r) = pair();
+        let mut pump = FramePump::new(1 << 20);
+        pump.register(a_r, 1, None).unwrap();
+        pump.register(b_r, 2, None).unwrap();
+
+        let fa = msg::frame(&vec![0xAA; 300]);
+        let fb = msg::frame(&vec![0xBB; 5]);
+        // Interleave partial writes: a's header, b's whole frame, a's rest.
+        a_w.write_all(&fa[..4]).unwrap();
+        b_w.write_all(&fb).unwrap();
+        let ev = pump.poll(Duration::from_secs(2));
+        assert!(
+            matches!(&ev[..], [PumpEvent::Frame { tag: 2, payload }] if payload == &vec![0xBB; 5]),
+            "{ev:?}"
+        );
+        a_w.write_all(&fa[4..]).unwrap();
+        let ev = pump.poll(Duration::from_secs(2));
+        assert!(
+            matches!(&ev[..], [PumpEvent::Frame { tag: 1, payload }] if payload.len() == 300),
+            "{ev:?}"
+        );
+        // Several frames queued on one source all surface.
+        a_w.write_all(&msg::frame(&[1])).unwrap();
+        a_w.write_all(&msg::frame(&[2, 2])).unwrap();
+        a_w.flush().unwrap();
+        let mut got = Vec::new();
+        while got.len() < 2 {
+            for e in pump.poll(Duration::from_secs(2)) {
+                if let PumpEvent::Frame { payload, .. } = e {
+                    got.push(payload);
+                }
+            }
+        }
+        assert_eq!(got, vec![vec![1], vec![2, 2]]);
+    }
+
+    #[test]
+    fn budget_parks_second_source_until_first_hands_off() {
+        let (mut a_w, a_r) = pair();
+        let (mut b_w, b_r) = pair();
+        let mut pump = FramePump::new(1000);
+        pump.register(a_r, 1, None).unwrap();
+        pump.register(b_r, 2, None).unwrap();
+
+        // a declares 800 bytes but stalls; b's full 800-byte frame must
+        // wait — together they would break the 1000-byte budget.
+        let fa = msg::frame(&vec![0xAA; 800]);
+        a_w.write_all(&fa[..msg::FRAME_HEADER_LEN + 10]).unwrap();
+        b_w.write_all(&msg::frame(&vec![0xBB; 800])).unwrap();
+        let ev = pump.poll(Duration::from_millis(120));
+        assert!(ev.is_empty(), "{ev:?}");
+        assert!(pump.peak_in_flight() <= 1000, "{}", pump.peak_in_flight());
+
+        // a completes → its buffer is handed off → b gets its turn.
+        a_w.write_all(&fa[msg::FRAME_HEADER_LEN + 10..]).unwrap();
+        let mut tags = Vec::new();
+        while tags.len() < 2 {
+            for e in pump.poll(Duration::from_secs(2)) {
+                match e {
+                    PumpEvent::Frame { tag, payload } => {
+                        assert_eq!(payload.len(), 800);
+                        tags.push(tag);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
+        assert_eq!(tags, vec![1, 2]);
+        assert!(pump.peak_in_flight() <= 1000, "{}", pump.peak_in_flight());
+    }
+
+    #[test]
+    fn one_poll_batch_never_emits_more_than_the_budget() {
+        let (mut w, r) = pair();
+        let mut pump = FramePump::new(1000);
+        pump.register(r, 1, None).unwrap();
+        // Ten 400-byte frames queued in the kernel at once: the cap
+        // trips at 1000 emitted bytes, so a batch carries at most three.
+        for _ in 0..10 {
+            w.write_all(&msg::frame(&vec![7u8; 400])).unwrap();
+        }
+        w.flush().unwrap();
+        let mut total = 0;
+        while total < 10 {
+            let ev = pump.poll(Duration::from_secs(2));
+            assert!(!ev.is_empty(), "frames are queued, the poll must move");
+            assert!(ev.len() <= 3, "{} frames in one batch", ev.len());
+            for e in ev {
+                match e {
+                    PumpEvent::Frame { tag: 1, payload } => {
+                        assert_eq!(payload.len(), 400);
+                        total += 1;
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_frame_closes_the_source() {
+        let (mut w, r) = pair();
+        let mut pump = FramePump::new(100);
+        pump.register(r, 7, None).unwrap();
+        w.write_all(&msg::frame(&vec![0; 101])).unwrap();
+        let ev = pump.poll(Duration::from_secs(2));
+        assert!(matches!(&ev[..], [PumpEvent::Closed { tag: 7 }]), "{ev:?}");
+        assert!(pump.is_empty());
+    }
+
+    #[test]
+    fn slow_loris_expires_on_deadline() {
+        let (mut w, r) = pair();
+        let mut pump = FramePump::new(1 << 16);
+        let deadline = Instant::now() + Duration::from_millis(50);
+        pump.register(r, 9, Some(deadline)).unwrap();
+        // A trickle that never completes a frame.
+        w.write_all(&[msg::FRAME_MAGIC[0]]).unwrap();
+        let t0 = Instant::now();
+        let ev = pump.poll(Duration::from_secs(5));
+        assert!(matches!(&ev[..], [PumpEvent::Expired { tag: 9 }]), "{ev:?}");
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(pump.is_empty());
+    }
+
+    #[test]
+    fn closed_peer_is_reported_once_and_dropped() {
+        let (w, r) = pair();
+        let mut pump = FramePump::new(1 << 16);
+        pump.register(r, 3, None).unwrap();
+        drop(w);
+        let ev = pump.poll(Duration::from_secs(2));
+        assert!(matches!(&ev[..], [PumpEvent::Closed { tag: 3 }]), "{ev:?}");
+        assert!(pump.is_empty());
+        assert!(pump.poll(Duration::from_millis(10)).is_empty());
+    }
+
+    #[test]
+    fn paused_sources_are_not_read() {
+        let (mut w, r) = pair();
+        let mut pump = FramePump::new(1 << 16);
+        pump.register(r, 4, None).unwrap();
+        pump.set_paused(4, true);
+        w.write_all(&msg::frame(&[5, 5, 5])).unwrap();
+        assert!(pump.poll(Duration::from_millis(60)).is_empty());
+        pump.set_paused(4, false);
+        let ev = pump.poll(Duration::from_secs(2));
+        assert!(
+            matches!(&ev[..], [PumpEvent::Frame { tag: 4, payload }] if payload == &[5, 5, 5]),
+            "{ev:?}"
+        );
+    }
+
+    #[test]
+    fn deregister_restores_blocking_and_refunds_budget() {
+        let (mut w, r) = pair();
+        let mut pump = FramePump::new(1000);
+        pump.register(r, 6, None).unwrap();
+        let f = msg::frame(&vec![1u8; 500]);
+        w.write_all(&f[..msg::FRAME_HEADER_LEN + 5]).unwrap();
+        assert!(pump.poll(Duration::from_millis(60)).is_empty());
+        let stream = pump.deregister(6).unwrap();
+        assert!(pump.is_empty());
+        // Budget refunded: a fresh source can use the whole budget again.
+        let (mut w2, r2) = pair();
+        pump.register(r2, 8, None).unwrap();
+        w2.write_all(&msg::frame(&vec![2u8; 900])).unwrap();
+        let ev = pump.poll(Duration::from_secs(2));
+        assert!(
+            matches!(&ev[..], [PumpEvent::Frame { tag: 8, payload }] if payload.len() == 900),
+            "{ev:?}"
+        );
+        drop(stream);
+    }
+
+    #[test]
+    fn backoff_escalates_and_caps() {
+        let mut b = Backoff::new(Duration::from_millis(1), Duration::from_millis(8));
+        let steps: Vec<Duration> = (0..6)
+            .map(|_| {
+                let s = b.peek();
+                b.sleep(Duration::ZERO); // clamped: no real sleeping in tests
+                s
+            })
+            .collect();
+        assert_eq!(
+            steps,
+            [1, 2, 4, 8, 8, 8].map(Duration::from_millis).to_vec()
+        );
+        b.reset(Duration::from_millis(1));
+        assert_eq!(b.peek(), Duration::from_millis(1));
+    }
+}

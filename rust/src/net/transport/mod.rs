@@ -148,8 +148,9 @@ pub const TRANSPORT_MAGIC: [u8; 4] = *b"FSLT";
 /// Handshake/transport protocol version. Bump on incompatible changes to
 /// the hello, ack, or control-plane encodings. Version 2 added per-round
 /// upload deadlines to round commands and per-client outcomes to round
-/// replies.
-pub const TRANSPORT_VERSION: u16 = 2;
+/// replies; version 3 added multiplexed client links ([`Role::ClientMux`])
+/// carrying a contiguous range of virtual clients over one socket.
+pub const TRANSPORT_VERSION: u16 = 3;
 
 /// What a dialling connection claims to be.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -171,6 +172,12 @@ pub enum Role {
     Client { id: u32 },
     /// The other server's `S_0 ↔ S_1` exchange link.
     Peer,
+    /// A multiplexed client link: one socket carrying the uploads of the
+    /// `count` virtual clients `[lo, lo + count)`. Every data frame on a
+    /// mux link is prefixed with the 4-byte LE virtual-client id it
+    /// belongs to. This is how a loadgen-scale cohort (10^4–10^6 virtual
+    /// clients) fits a bounded socket pool instead of one fd per client.
+    ClientMux { lo: u32, count: u32 },
 }
 
 /// The versioned handshake a dialler opens every connection with: magic,
@@ -209,6 +216,11 @@ impl Hello {
                 out.extend_from_slice(&id.to_le_bytes());
             }
             Role::Peer => out.push(2),
+            Role::ClientMux { lo, count } => {
+                out.push(3);
+                out.extend_from_slice(&lo.to_le_bytes());
+                out.extend_from_slice(&count.to_le_bytes());
+            }
         }
         out
     }
@@ -253,6 +265,10 @@ impl Hello {
                 id: read_u32(bytes, 8)?,
             },
             2 => Role::Peer,
+            3 => Role::ClientMux {
+                lo: read_u32(bytes, 8)?,
+                count: read_u32(bytes, 12)?,
+            },
             t => bail!("unknown handshake role tag {t}"),
         };
         Ok(Hello { party, role })
@@ -417,6 +433,7 @@ mod tests {
             },
             Hello { party: 1, role: Role::Client { id: 3 } },
             Hello { party: 0, role: Role::Peer },
+            Hello { party: 1, role: Role::ClientMux { lo: 4096, count: 1 << 16 } },
         ] {
             assert_eq!(Hello::decode(&hello.encode()).unwrap(), hello);
         }

@@ -67,6 +67,18 @@ impl TcpTransport {
         })
     }
 
+    /// A fresh OS-level clone of the underlying stream (another fd on the
+    /// same socket). The readiness reactor registers these clones so it
+    /// can poll a connection non-blockingly while the transport keeps its
+    /// own blocking handles for framed sends.
+    pub fn stream_clone(&self) -> Result<TcpStream> {
+        let stream = self
+            .reader
+            .lock()
+            .map_err(|_| anyhow::Error::new(TransportError::Closed).context("tcp reader poisoned"))?;
+        stream.try_clone().context("cloning stream for the reactor")
+    }
+
     /// Dial `addr`, run the `hello` handshake, and wait for the server's
     /// ack — every step (the TCP connection itself included: a
     /// black-holed address must not block for the OS's multi-minute SYN
@@ -236,6 +248,29 @@ impl TcpAcceptor {
         let hello = Hello::decode(&hello_bytes)
             .map_err(|e| e.context(format!("handshake from {from}")))?;
         Ok((Box::new(conn), hello))
+    }
+
+    /// Accept one raw stream without blocking and without running the
+    /// handshake: returns `Ok(None)` when no connection is pending. The
+    /// reactor-driven accept loop uses this so a dialler that connects
+    /// but never sends its hello (a slow-loris) parks in the frame pump
+    /// under its own deadline instead of wedging the accept thread.
+    pub fn accept_raw(&self) -> Result<Option<(TcpStream, std::net::SocketAddr)>> {
+        self.listener
+            .set_nonblocking(true)
+            .context("set_nonblocking")?;
+        let accepted = self.listener.accept();
+        let _ = self.listener.set_nonblocking(false);
+        match accepted {
+            Ok((stream, from)) => Ok(Some((stream, from))),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(anyhow::Error::new(e).context("tcp accept")),
+        }
+    }
+
+    /// The acceptor's socket options (shared with every accepted stream).
+    pub fn options(&self) -> &TcpOptions {
+        &self.opts
     }
 
     /// Like [`Listener::accept`] but bounded: returns `Ok(None)` if no

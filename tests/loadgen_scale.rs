@@ -1,0 +1,315 @@
+//! Scale-harness integration: the multiplexed server path end-to-end
+//! over real loopback sockets. Covers accept-phase churn (lanes dialed
+//! before control, strays, overlaps, duplicate uploads — the delta must
+//! be bit-identical to an orderly deployment), the `fsl loadgen` driver
+//! with in-process verification, and the two fault planes: a straggler
+//! cohort must be cut at the deadline rather than extend the round, and
+//! a severed lane must classify its unsent tail as dropped.
+
+use fsl::coordinator::wire::{self, ServerCmd, ServerReply};
+use fsl::coordinator::{
+    run_loadgen, serve, ClientOutcome, LoadgenOptions, LoadgenVerify, ServeOptions,
+};
+use fsl::crypto::rng::Rng;
+use fsl::hashing::CuckooParams;
+use fsl::net::transport::tcp::{TcpAcceptor, TcpOptions, TcpTransport};
+use fsl::net::transport::{Hello, Role, Transport};
+use fsl::protocol::{msg, ssa, Session, SessionParams};
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+fn session(m: u64, k: usize, seed: u64) -> Session {
+    Session::new_full(SessionParams {
+        m,
+        k,
+        cuckoo: CuckooParams::default().with_seed(seed),
+    })
+}
+
+/// Spawn one standalone server on an ephemeral loopback port, exactly as
+/// `fsl serve` would run it.
+fn spawn_server(party: u8) -> (String, JoinHandle<anyhow::Result<()>>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || {
+        let acceptor = TcpAcceptor::new(listener, TcpOptions::default());
+        let mut opts = ServeOptions::new(party);
+        opts.threads = 1;
+        serve::<u64>(&acceptor, &opts)
+    });
+    (addr, handle)
+}
+
+/// Per-virtual-client inputs, deterministic in `vid` alone so the two
+/// deployments of the churn test feed bit-identical uploads.
+fn churn_inputs(session: &Session, n: u32) -> Vec<(Vec<u64>, Vec<u64>)> {
+    (0..n)
+        .map(|vid| {
+            let mut rng = Rng::new(0xC0FFEE ^ u64::from(vid));
+            let sel = rng.sample_distinct(session.params.k, session.params.m);
+            let dl = sel.iter().map(|&x| x * 3 + 1).collect();
+            (sel, dl)
+        })
+        .collect()
+}
+
+fn expect_ack(ctrl: &TcpTransport, what: &str) {
+    let raw = ctrl
+        .recv_timeout(Duration::from_secs(30))
+        .unwrap_or_else(|e| panic!("{what}: {e:#}"));
+    match wire::decode_reply::<u64>(&raw).expect(what) {
+        ServerReply::Ack => {}
+        ServerReply::Failed(e) => panic!("{what}: server failed: {e}"),
+        _ => panic!("{what}: unexpected reply kind"),
+    }
+}
+
+fn round_reply(ctrl: &TcpTransport, who: &str) -> (Option<Vec<u64>>, Vec<ClientOutcome>) {
+    let raw = ctrl
+        .recv_timeout(Duration::from_secs(60))
+        .unwrap_or_else(|e| panic!("{who} round reply: {e:#}"));
+    match wire::decode_reply::<u64>(&raw).expect(who) {
+        ServerReply::Round { delta, outcomes, .. } => (delta, outcomes),
+        ServerReply::Failed(e) => panic!("{who} round failed: {e}"),
+        _ => panic!("{who}: unexpected reply kind"),
+    }
+}
+
+/// `[vid u32 LE][payload]` — the mux lanes' framing contract.
+fn lane_frame(vid: u32, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = vid.to_le_bytes().to_vec();
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Drive one full mux round against two freshly spawned servers and
+/// return S0's reconstructed delta. `scrambled` switches the deployment
+/// from an orderly one (control, then lanes in order, each upload once)
+/// to the churn path: lanes dialed before control (parked), a stray
+/// connection spraying garbage, an overlapping lane rejected mid-accept,
+/// uploads sent in reverse vid order and every frame twice.
+fn drive_mux_round(
+    session: &Session,
+    inputs: &[(Vec<u64>, Vec<u64>)],
+    scrambled: bool,
+) -> Vec<u64> {
+    let n = inputs.len();
+    let n_wire = u32::try_from(n).expect("cohort fits the wire");
+    let half = n_wire / 2;
+    let (addr0, h0) = spawn_server(0);
+    let (addr1, h1) = spawn_server(1);
+    let tcp = TcpOptions::default();
+    let control = || Role::Control {
+        max_clients: n_wire,
+        m: session.params.m,
+        k: session.params.k as u64,
+        group: std::any::type_name::<u64>().to_string(),
+    };
+    let dial = |addr: &str, party: u8, role: Role| -> TcpTransport {
+        TcpTransport::connect(addr, &Hello { party, role }, &TcpOptions::default())
+            .unwrap_or_else(|e| panic!("dialling S{party}: {e:#}"))
+    };
+    // A pre-control lane parks server-side and is only acked once the
+    // control link lands, so it must dial from its own thread.
+    let parked_dial = |addr: &str, party: u8, role: Role| -> JoinHandle<TcpTransport> {
+        let addr = addr.to_string();
+        std::thread::spawn(move || {
+            TcpTransport::connect(&addr[..], &Hello { party, role }, &TcpOptions::default())
+                .unwrap_or_else(|e| panic!("parked dial to S{party}: {e:#}"))
+        })
+    };
+
+    let (ctrl0, ctrl1, lane0_a, lane0_b, lane1_a, lane1_b);
+    if scrambled {
+        // Both of S1's lanes dial before its control link and park.
+        let p1a = parked_dial(&addr1, 1, Role::ClientMux { lo: 0, count: half });
+        let p1b = parked_dial(&addr1, 1, Role::ClientMux { lo: half, count: n_wire - half });
+        std::thread::sleep(Duration::from_millis(100));
+        ctrl1 = dial(&addr1, 1, control());
+        lane1_a = p1a.join().expect("parked S1 lane a");
+        lane1_b = p1b.join().expect("parked S1 lane b");
+
+        // S0: one lane parks pre-control, a stray connection sprays
+        // garbage (dropped silently), control lands, an overlapping lane
+        // is rejected with a reasoned ack, the last lane completes
+        // coverage.
+        let p0b = parked_dial(&addr0, 0, Role::ClientMux { lo: half, count: n_wire - half });
+        {
+            use std::io::Write as _;
+            let mut junk = std::net::TcpStream::connect(&addr0[..]).expect("stray connect");
+            junk.write_all(b"\x00\x01 junk").expect("stray write");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        ctrl0 = dial(&addr0, 0, control());
+        lane0_b = p0b.join().expect("parked S0 lane b");
+        let overlap = TcpTransport::connect(
+            &addr0[..],
+            &Hello { party: 0, role: Role::ClientMux { lo: half.saturating_sub(1), count: 2 } },
+            &tcp,
+        );
+        let err = match overlap {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("overlapping lane must be rejected"),
+        };
+        assert!(err.contains("overlap"), "unexpected rejection: {err}");
+        lane0_a = dial(&addr0, 0, Role::ClientMux { lo: 0, count: half });
+    } else {
+        ctrl1 = dial(&addr1, 1, control());
+        lane1_a = dial(&addr1, 1, Role::ClientMux { lo: 0, count: half });
+        lane1_b = dial(&addr1, 1, Role::ClientMux { lo: half, count: n_wire - half });
+        ctrl0 = dial(&addr0, 0, control());
+        lane0_a = dial(&addr0, 0, Role::ClientMux { lo: 0, count: half });
+        lane0_b = dial(&addr0, 0, Role::ClientMux { lo: half, count: n_wire - half });
+    }
+
+    // Session install and round command, in the loadgen driver's order:
+    // S1 first (it must be ready to dial the peer link), then the dial,
+    // then S0 — whose accept phase only completes once the peer link is
+    // in, so its ack doubles as a deployment barrier.
+    let arc = Arc::new(session.clone());
+    let set1 = wire::encode_cmd(&ServerCmd::<u64>::SetSession(Arc::clone(&arc)));
+    ctrl1.send(set1).expect("SetSession S1");
+    expect_ack(&ctrl1, "SetSession S1");
+    let peer = wire::encode_cmd(&ServerCmd::<u64>::DialPeer { addr: addr0.clone() });
+    ctrl1.send(peer).expect("DialPeer");
+    expect_ack(&ctrl1, "DialPeer");
+    let set0 = wire::encode_cmd(&ServerCmd::<u64>::SetSession(arc));
+    ctrl0.send(set0).expect("SetSession S0");
+    expect_ack(&ctrl0, "SetSession S0");
+    let cmd = ServerCmd::<u64>::Ssa { n, deadline_nanos: 20_000_000_000 };
+    ctrl1.send(wire::encode_cmd(&cmd)).expect("Ssa S1");
+    ctrl0.send(wire::encode_cmd(&cmd)).expect("Ssa S0");
+
+    // Uploads. The scrambled run sends each lane's range in reverse vid
+    // order and every frame twice — duplicates must be ignored.
+    let batches: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(vid, (sel, dl))| {
+            let mut rng = Rng::new(0x5EED ^ vid as u64);
+            ssa::client_update(session, sel, dl, &mut rng).expect("client update")
+        })
+        .collect();
+    let send_range = |s1: &TcpTransport, s0: &TcpTransport, lo: u32, hi: u32| {
+        let ids: Vec<u32> = if scrambled {
+            (lo..hi).rev().collect()
+        } else {
+            (lo..hi).collect()
+        };
+        let reps = if scrambled { 2 } else { 1 };
+        for _ in 0..reps {
+            for &vid in &ids {
+                let b = &batches[vid as usize];
+                let short = lane_frame(vid, msg::encode_key_upload(b, 1, false));
+                s1.send(short).expect("short upload");
+                let long = lane_frame(vid, msg::encode_key_upload(b, 0, true));
+                s0.send(long).expect("long upload");
+            }
+        }
+    };
+    send_range(&lane1_a, &lane0_a, 0, half);
+    send_range(&lane1_b, &lane0_b, half, n_wire);
+
+    let (delta0, out0) = round_reply(&ctrl0, "S0");
+    let (delta1, out1) = round_reply(&ctrl1, "S1");
+    assert!(out0.iter().all(|o| *o == ClientOutcome::Completed), "S0 outcomes: {out0:?}");
+    assert!(out1.iter().all(|o| *o == ClientOutcome::Completed), "S1 outcomes: {out1:?}");
+    assert!(delta1.is_none(), "only the leader reconstructs");
+    let delta = delta0.expect("S0 must carry the reconstructed delta");
+
+    let stop = wire::encode_cmd(&ServerCmd::<u64>::Shutdown);
+    ctrl1.send(stop.clone()).expect("Shutdown S1");
+    ctrl0.send(stop).expect("Shutdown S0");
+    drop((lane0_a, lane0_b, lane1_a, lane1_b, ctrl0, ctrl1));
+    h0.join().expect("S0 thread").expect("S0 serve");
+    h1.join().expect("S1 thread").expect("S1 serve");
+    delta
+}
+
+#[test]
+fn scrambled_dials_duplicates_and_strays_match_the_sequential_delta() {
+    let session = session(512, 16, 0xFEED);
+    let inputs = churn_inputs(&session, 24);
+    let sequential = drive_mux_round(&session, &inputs, false);
+    let scrambled = drive_mux_round(&session, &inputs, true);
+    assert_eq!(sequential, scrambled, "churn must not change the aggregate");
+
+    let mut expected = vec![0u64; 512];
+    for (sel, dl) in &inputs {
+        for (&x, &d) in sel.iter().zip(dl) {
+            expected[x as usize] = expected[x as usize].wrapping_add(d);
+        }
+    }
+    assert_eq!(sequential, expected, "the delta must be the cohort's exact sparse sum");
+}
+
+#[test]
+fn loadgen_round_trip_matches_the_in_process_runtime() {
+    let (addr0, h0) = spawn_server(0);
+    let (addr1, h1) = spawn_server(1);
+    let mut opts = LoadgenOptions::new(addr0, addr1);
+    opts.clients = 200;
+    opts.lanes = 8;
+    opts.m = 1024;
+    opts.k = 16;
+    opts.deadline = Duration::from_secs(20);
+    opts.verify = LoadgenVerify::Inproc;
+    let report = run_loadgen(&opts).expect("loadgen round");
+    assert_eq!(report.clients, 200);
+    assert_eq!(report.completed, 200, "a fault-free cohort completes fully");
+    assert_eq!(report.straggler_cut, 0);
+    assert_eq!(report.dropped, 0);
+    assert_eq!(report.sent, 200);
+    assert!(report.verified, "the delta must match the in-process replay bit-for-bit");
+    h0.join().expect("S0 thread").expect("S0 serve");
+    h1.join().expect("S1 thread").expect("S1 serve");
+}
+
+#[test]
+fn a_straggler_cohort_cannot_extend_the_round_past_its_deadline() {
+    let (addr0, h0) = spawn_server(0);
+    let (addr1, h1) = spawn_server(1);
+    let mut opts = LoadgenOptions::new(addr0, addr1);
+    opts.clients = 400;
+    opts.lanes = 8;
+    opts.m = 512;
+    opts.k = 16;
+    opts.straggle = 0.25;
+    opts.deadline = Duration::from_millis(1500);
+    let report = run_loadgen(&opts).expect("straggler round");
+    assert!(report.straggler_cut > 0, "a quarter of the cohort must be cut");
+    assert!(report.completed > 0, "the prompt clients must commit");
+    assert_eq!(report.dropped, 0, "silent clients are cut, not dropped — their lanes stay open");
+    assert_eq!(report.completed + report.straggler_cut, 400);
+    assert!(report.verified, "the surviving cohort's delta must verify");
+    assert!(
+        report.wall_time < Duration::from_secs(12),
+        "the round must end near the deadline, not wait out stragglers ({:?})",
+        report.wall_time
+    );
+    h0.join().expect("S0 thread").expect("S0 serve");
+    h1.join().expect("S1 thread").expect("S1 serve");
+}
+
+#[test]
+fn severed_lanes_classify_their_unsent_tail_as_dropped() {
+    let (addr0, h0) = spawn_server(0);
+    let (addr1, h1) = spawn_server(1);
+    let mut opts = LoadgenOptions::new(addr0, addr1);
+    opts.clients = 120;
+    opts.lanes = 6;
+    opts.m = 512;
+    opts.k = 16;
+    opts.drop_lanes = 2;
+    opts.deadline = Duration::from_secs(4);
+    let report = run_loadgen(&opts).expect("dropout round");
+    assert!(report.dropped > 0, "severed lanes must drop their tails");
+    assert!(report.completed > 0, "the heads and the surviving lanes must commit");
+    assert!(report.sent < 120, "the injected disconnect truncates its lanes' sends");
+    assert_eq!(report.completed + report.straggler_cut + report.dropped, 120);
+    assert!(report.verified, "the committed head's contribution must verify");
+    h0.join().expect("S0 thread").expect("S0 serve");
+    h1.join().expect("S1 thread").expect("S1 serve");
+}

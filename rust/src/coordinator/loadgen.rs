@@ -19,10 +19,20 @@
 //! `straggle` silences a deterministic fraction of virtual clients
 //! (they become `StragglerCut` at the servers' upload deadline).
 //!
+//! Soak mode (`rounds > 1`) re-commands the same deployment round after
+//! round, reusing the lane pool (the servers hand surviving lanes back
+//! after every round), and records each round's wall time in an
+//! `fsl_loadgen_round_seconds` histogram so the report carries
+//! p50/p95/p99 latency instead of a single sample. Soak rounds assume
+//! the deadline admits the whole cohort: a lane that is still buffered
+//! at the cut would bleed its unread frames into the next round (the
+//! final-round verification catches exactly that as a delta mismatch).
+//!
 //! The optional history hook appends one schema-versioned `loadgen`
 //! datapoint (wall/gen/server times in `_ms` fields, peak driver RSS in
-//! MB) to `artifacts/HISTORY.jsonl`, where `cargo xtask bench-diff`
-//! gates regressions.
+//! MB) plus one `loadgen_soak` datapoint (per-round p50/p95/p99, no
+//! byte fields) to `artifacts/HISTORY.jsonl`, where `cargo xtask
+//! bench-diff` gates regressions.
 
 use super::runtime::{dial_with_retry, merge_outcomes, ClientOutcome, FslRuntimeBuilder};
 use super::wire::{self, ServerCmd, ServerReply};
@@ -30,6 +40,7 @@ use crate::crypto::rng::Rng;
 use crate::hashing::CuckooParams;
 use crate::metrics::history;
 use crate::metrics::json::JsonObj;
+use crate::metrics::registry::{MetricsRegistry, Unit};
 use crate::net::transport::tcp::{TcpOptions, TcpTransport};
 use crate::net::transport::{BoxTransport, FaultPlan, Hello, Role, Transport};
 use crate::protocol::{msg, ssa, Session, SessionParams};
@@ -65,6 +76,10 @@ pub struct LoadgenOptions {
     /// Lane sockets per server (clamped to `[1, clients]`). Each lane
     /// gets a contiguous share of the virtual-id space.
     pub lanes: usize,
+    /// Rounds to drive back-to-back over the same lane pool (soak mode).
+    /// Every round re-uploads the full cohort; wall times feed the
+    /// report's p50/p95/p99. Verification runs on the final round.
+    pub rounds: usize,
     /// Model size (the session domain).
     pub m: u64,
     /// Submodel size (selections per client).
@@ -98,6 +113,7 @@ impl LoadgenOptions {
             s1: s1.into(),
             clients: 10_000,
             lanes: 64,
+            rounds: 1,
             m: 1 << 15,
             k: 64,
             seed: 7,
@@ -118,7 +134,10 @@ impl LoadgenOptions {
 pub struct LoadgenReport {
     pub clients: usize,
     pub lanes: usize,
-    /// Cohort-agreement outcome counts (both servers merged).
+    /// Rounds driven over the deployment.
+    pub rounds: usize,
+    /// Cohort-agreement outcome counts for the *final* round (both
+    /// servers merged).
     pub completed: usize,
     pub straggler_cut: usize,
     pub dropped: usize,
@@ -128,10 +147,16 @@ pub struct LoadgenReport {
     /// Client key generation, summed over virtual clients (the paper's
     /// per-client Table-5 convention, scaled by the cohort).
     pub gen_time: Duration,
-    /// S0's reported in-round server time.
+    /// S0's reported in-round server time (final round).
     pub server_time: Duration,
-    /// Round command → both round replies decoded.
+    /// Round command → both round replies decoded, summed over rounds.
     pub wall_time: Duration,
+    /// Per-round wall-time quantiles from the
+    /// `fsl_loadgen_round_seconds` histogram (for `rounds = 1` all
+    /// three read the single round, up to log2-bucket quantisation).
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
     /// Payload bytes handed to the lane sockets.
     pub upload_bytes: u64,
     /// Peak resident set of the *driver* process (VmHWM). The servers'
@@ -149,6 +174,7 @@ impl LoadgenReport {
         o.field_str("kind", "loadgen")
             .field_u64("clients", self.clients as u64)
             .field_u64("lanes", self.lanes as u64)
+            .field_u64("rounds", self.rounds as u64)
             .field_u64("completed", self.completed as u64)
             .field_u64("straggler_cut", self.straggler_cut as u64)
             .field_u64("dropped", self.dropped as u64)
@@ -156,6 +182,9 @@ impl LoadgenReport {
             .field_f64("gen_ms", ms(self.gen_time), 3)
             .field_f64("server_ms", ms(self.server_time), 3)
             .field_f64("wall_ms", ms(self.wall_time), 3)
+            .field_f64("p50_ms", self.p50_ms, 3)
+            .field_f64("p95_ms", self.p95_ms, 3)
+            .field_f64("p99_ms", self.p99_ms, 3)
             .field_f64("upload_mb", self.upload_bytes as f64 / 1e6, 3)
             .field_f64("peak_rss_mb", self.peak_rss_mb, 1)
             .field_bool("verified", self.verified);
@@ -272,6 +301,8 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenReport> {
         !opts.deadline.is_zero(),
         "loadgen rounds need a positive deadline (stragglers are cut, not waited on)"
     );
+    let rounds = opts.rounds;
+    ensure!(rounds >= 1, "loadgen needs at least one round to drive");
     let lanes = opts.lanes.clamp(1, n);
     ensure!(
         opts.drop_lanes <= lanes,
@@ -364,46 +395,21 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     ctrl0.send(wire::encode_cmd(&ServerCmd::<u64>::SetSession(arc)))?;
     expect_ack(&ctrl0, "installing the session on S0")?;
 
-    // The round: command both servers, then let the lane threads race
+    // The rounds: command both servers, then let the lane threads race
     // the deadline. Worker (S1) first so its acknowledgement stream is
-    // live by the time S0 starts committing.
+    // live by the time S0 starts committing. Soak mode repeats over the
+    // same lane pool — the servers hand surviving lanes back after each
+    // round. Replies: S0 reconstructs, S1 only reports outcomes; a
+    // client survives only when *both* servers completed it.
     let deadline_nanos =
         u64::try_from(opts.deadline.as_nanos()).map_err(|_| anyhow!("deadline overflows u64"))?;
     let round_cmd = ServerCmd::<u64>::Ssa { n, deadline_nanos };
-    let wall0 = Instant::now();
-    ctrl1.send(wire::encode_cmd(&round_cmd))?;
-    ctrl0.send(wire::encode_cmd(&round_cmd))?;
-
-    let session_ref = &session;
-    let mut kept: Vec<Lane> = Vec::with_capacity(lanes);
-    let mut gen_nanos = 0u64;
-    let mut upload_bytes = 0u64;
-    let mut sent = 0usize;
-    let mut lane_err: Option<anyhow::Error> = None;
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(pairs.len());
-        for lane in pairs {
-            handles.push(scope.spawn(move || run_lane(session_ref, opts, lane)));
-        }
-        for h in handles {
-            match h.join() {
-                Ok(Ok((lane, stats))) => {
-                    gen_nanos = gen_nanos.saturating_add(stats.gen_nanos);
-                    upload_bytes = upload_bytes.saturating_add(stats.bytes);
-                    sent += stats.sent;
-                    kept.push(lane);
-                }
-                Ok(Err(e)) => lane_err = Some(e),
-                Err(_) => lane_err = Some(anyhow!("a loadgen lane thread panicked")),
-            }
-        }
-    });
-    if let Some(e) = lane_err {
-        return Err(e);
-    }
-
-    // Round replies. S0 reconstructs, S1 only reports outcomes; a
-    // client survives only when *both* servers completed it.
+    let registry = MetricsRegistry::new();
+    let round_hist = registry.histogram(
+        "fsl_loadgen_round_seconds",
+        "wall time of one driven loadgen round, command to both replies",
+        Unit::Seconds,
+    );
     let reply_window = opts.deadline + opts.reply_timeout;
     let round_reply = |ctrl: &TcpTransport,
                        who: &str|
@@ -422,19 +428,66 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenReport> {
             _ => bail!("{who}: unexpected round reply type"),
         }
     };
-    let (server_time, delta0, o0) = round_reply(&ctrl0, "S0")?;
-    let (_s1_time, _d1, o1) = round_reply(&ctrl1, "S1")?;
-    let wall_time = wall0.elapsed();
-    // The lanes may drop now: the round is over, classification is done.
-    drop(kept);
-    let delta = delta0.ok_or_else(|| anyhow!("S0's round reply carried no delta"))?;
-    ensure!(
-        delta.len() == opts.m as usize,
-        "S0 reconstructed {} entries for an m = {} domain",
-        delta.len(),
-        opts.m
-    );
-    let merged = merge_outcomes(n, &o0, &o1);
+
+    let session_ref = &session;
+    let mut gen_nanos = 0u64;
+    let mut upload_bytes = 0u64;
+    let mut sent = 0usize;
+    let mut wall_total = Duration::ZERO;
+    let mut last_round: Option<(Duration, Vec<u64>, Vec<ClientOutcome>)> = None;
+    for round in 0..rounds {
+        let wall0 = Instant::now();
+        ctrl1.send(wire::encode_cmd(&round_cmd))?;
+        ctrl0.send(wire::encode_cmd(&round_cmd))?;
+
+        let mut kept: Vec<Lane> = Vec::with_capacity(lanes);
+        let mut lane_err: Option<anyhow::Error> = None;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(pairs.len());
+            for lane in pairs {
+                handles.push(scope.spawn(move || run_lane(session_ref, opts, lane)));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(Ok((lane, stats))) => {
+                        gen_nanos = gen_nanos.saturating_add(stats.gen_nanos);
+                        upload_bytes = upload_bytes.saturating_add(stats.bytes);
+                        sent += stats.sent;
+                        kept.push(lane);
+                    }
+                    Ok(Err(e)) => lane_err = Some(e),
+                    Err(_) => lane_err = Some(anyhow!("a loadgen lane thread panicked")),
+                }
+            }
+        });
+        if let Some(e) = lane_err {
+            return Err(e);
+        }
+
+        let (server_time, delta0, o0) = round_reply(&ctrl0, "S0")
+            .map_err(|e| e.context(format!("round {round}")))?;
+        let (_s1_time, _d1, o1) = round_reply(&ctrl1, "S1")
+            .map_err(|e| e.context(format!("round {round}")))?;
+        let wall = wall0.elapsed();
+        round_hist.observe_duration(wall);
+        wall_total = wall_total.saturating_add(wall);
+        let delta = delta0
+            .ok_or_else(|| anyhow!("S0's round {round} reply carried no delta"))?;
+        ensure!(
+            delta.len() == opts.m as usize,
+            "round {round}: S0 reconstructed {} entries for an m = {} domain",
+            delta.len(),
+            opts.m
+        );
+        last_round = Some((server_time, delta, merge_outcomes(n, &o0, &o1)));
+        pairs = kept;
+    }
+    // The lanes may drop now: the last round is over, classification is
+    // done.
+    drop(pairs);
+    let Some((server_time, delta, merged)) = last_round else {
+        bail!("loadgen drove zero rounds");
+    };
     let (mut completed, mut straggler_cut, mut dropped) = (0usize, 0usize, 0usize);
     for o in &merged {
         match o {
@@ -463,13 +516,17 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     let report = LoadgenReport {
         clients: n,
         lanes,
+        rounds,
         completed,
         straggler_cut,
         dropped,
         sent,
         gen_time: Duration::from_nanos(gen_nanos),
         server_time,
-        wall_time,
+        wall_time: wall_total,
+        p50_ms: round_hist.quantile_ms(0.50),
+        p95_ms: round_hist.quantile_ms(0.95),
+        p99_ms: round_hist.quantile_ms(0.99),
         upload_bytes,
         peak_rss_mb: peak_rss_mb(),
         verified,
@@ -487,6 +544,20 @@ pub fn run_loadgen(opts: &LoadgenOptions) -> Result<LoadgenReport> {
                 .field_f64("peak_rss_mb", report.peak_rss_mb, 1);
         })
         .map_err(|e| anyhow!("appending the loadgen datapoint to {}: {e}", path.display()))?;
+        // The soak curve: per-round latency quantiles at this cohort
+        // size. Deliberately free of `_bytes` fields — bench-diff fails
+        // any byte growth, and a scale datapoint reports time, not
+        // payload.
+        history::append_with(path, "loadgen_soak", |o| {
+            o.field_u64("clients", report.clients as u64)
+                .field_u64("lanes", report.lanes as u64)
+                .field_u64("rounds", report.rounds as u64)
+                .field_u64("completed", report.completed as u64)
+                .field_f64("p50_ms", report.p50_ms, 3)
+                .field_f64("p95_ms", report.p95_ms, 3)
+                .field_f64("p99_ms", report.p99_ms, 3);
+        })
+        .map_err(|e| anyhow!("appending the soak datapoint to {}: {e}", path.display()))?;
     }
     Ok(report)
 }
@@ -638,6 +709,7 @@ mod tests {
         let report = LoadgenReport {
             clients: 10,
             lanes: 2,
+            rounds: 3,
             completed: 8,
             straggler_cut: 1,
             dropped: 1,
@@ -645,15 +717,38 @@ mod tests {
             gen_time: Duration::from_millis(12),
             server_time: Duration::from_millis(34),
             wall_time: Duration::from_millis(56),
+            p50_ms: 17.0,
+            p95_ms: 19.0,
+            p99_ms: 19.0,
             upload_bytes: 1_000,
             peak_rss_mb: 12.5,
             verified: true,
         };
         let json = report.to_json();
-        crate::metrics::json::validate(&json).expect("loadgen JSON must parse");
+        assert!(crate::metrics::json::validate(&json), "{json}");
         assert!(json.contains("\"wall_ms\":56.000"));
+        assert!(json.contains("\"rounds\":3"));
+        assert!(json.contains("\"p95_ms\":19.000"));
         // The bench-diff gate fails any growth in `_bytes` metrics; a
         // scale report must never emit one (RSS is reported in MB).
         assert!(!json.contains("_bytes\""));
+    }
+
+    #[test]
+    fn round_histogram_quantiles_cover_the_soak_fields() {
+        let registry = MetricsRegistry::new();
+        let h = registry.histogram(
+            "fsl_loadgen_round_seconds",
+            "wall time of one driven loadgen round, command to both replies",
+            Unit::Seconds,
+        );
+        for ms in [10u64, 12, 15, 20, 90] {
+            h.observe_duration(Duration::from_millis(ms));
+        }
+        let (p50, p95, p99) = (h.quantile_ms(0.50), h.quantile_ms(0.95), h.quantile_ms(0.99));
+        assert!(p50 > 0.0 && p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // The tail observation (90 ms) must pull the high quantiles at
+        // least one octave above the median's bucket.
+        assert!(p99 >= 2.0 * p50, "{p50} vs {p99}");
     }
 }

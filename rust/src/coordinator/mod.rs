@@ -44,7 +44,7 @@ pub use psr_round::{run_psr_round, run_psr_round_with, PsrRoundResult};
 pub use round::{run_fsl_training, run_plain_training, RoundStats, TrainingLog};
 pub use runtime::{
     ClientOutcome, FslRuntime, FslRuntimeBuilder, KeyMode, PsrOutcome, PsuOutcome, RoundKind,
-    RoundReport, SsaOutcome, UdpfDriverState, VerifiedSsaOutcome,
+    RoundReport, ServerStats, SsaOutcome, UdpfDriverState, VerifiedSsaOutcome,
 };
 // lint: allow(deprecated) — re-export keeps the legacy round API importable
 #[allow(deprecated)]

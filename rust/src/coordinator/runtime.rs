@@ -53,11 +53,13 @@ use crate::crypto::field::Fp;
 use crate::crypto::rng::Rng;
 use crate::dpf::MasterKeyBatch;
 use crate::group::Group;
+use crate::metrics::expo;
 use crate::metrics::json::{self, JsonObj};
-use crate::metrics::trace::{self, Party, Phase, Span, TraceRecorder, TraceSink};
+use crate::metrics::registry::{Counter, Gauge, MetricsRegistry};
+use crate::metrics::trace::{self, Party, Phase, PhaseMetrics, Span, TraceRecorder, TraceSink};
 use crate::metrics::CommMeter;
 use crate::net::{self, LinkProfile};
-use crate::net::reactor::{FramePump, PumpEvent};
+use crate::net::reactor::{FramePump, PumpEvent, PumpMetrics};
 use crate::net::transport::tcp::{TcpOptions, TcpTransport};
 use crate::net::transport::{
     BoxTransport, FaultPlan, Hello, InProc, Role, Transport, TransportError,
@@ -180,6 +182,11 @@ pub struct RoundReport {
     /// party-tagged. Export with [`RoundReport::trace_json`] /
     /// [`RoundReport::write_trace`].
     pub spans: Vec<Span>,
+    /// Spans the *driver-side* recorder discarded because its ring was
+    /// full. Server-side drops surface through each server's own
+    /// `fsl_trace_spans_dropped_count` registry gauge instead of the
+    /// wire. Non-zero means `spans` under-reports the round.
+    pub spans_dropped: u64,
 }
 
 impl RoundReport {
@@ -215,14 +222,23 @@ impl RoundReport {
                 "outcomes",
                 &json::array(self.outcomes.iter().map(|o| json::string(o.as_str()))),
             )
-            .field_u64("spans", self.spans.len() as u64);
+            .field_u64("spans", self.spans.len() as u64)
+            .field_u64("spans_dropped", self.spans_dropped);
         o.finish()
     }
 
     /// This round's spans as a Chrome trace-event JSON document —
-    /// loadable directly in Perfetto / `chrome://tracing`.
+    /// loadable directly in Perfetto / `chrome://tracing`. Includes
+    /// derived counter tracks (`ph:"C"`): per-party active-span depth
+    /// and the driver's dropped-span count.
     pub fn trace_json(&self) -> String {
-        trace::chrome_trace_json(&self.spans)
+        let dropped = trace::counter_event(
+            "fsl_trace_spans_dropped_count",
+            0.0,
+            Party::Client,
+            self.spans_dropped,
+        );
+        trace::chrome_trace_json_with(&self.spans, &[dropped])
     }
 
     /// Write [`RoundReport::trace_json`] to `path` (the CLI's
@@ -235,6 +251,18 @@ impl RoundReport {
         }
         std::fs::write(path, self.trace_json())
     }
+}
+
+/// One server's live-metrics snapshot, rendered server-side in both
+/// exposition formats (so the two renderings reflect the same atomic
+/// registry snapshot). Returned by [`FslRuntime::stats`] and the `fsl
+/// stats` CLI's scrape path.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    /// Prometheus text exposition format (0.0.4).
+    pub prom: String,
+    /// JSON document ([`crate::metrics::expo::render_json`]).
+    pub json: String,
 }
 
 /// A PSR round's payload + metering.
@@ -536,6 +564,9 @@ impl FslRuntimeBuilder {
             let (rtx, rrx) = channel::<ServerReply<G>>();
             let rec = TraceRecorder::shared(trace::DEFAULT_TRACE_CAPACITY);
             let sink = TraceSink::new(rec.clone(), Party::server(usize::from(party)));
+            let registry = MetricsRegistry::shared();
+            rec.attach_metrics(PhaseMetrics::register(&registry));
+            let metrics = ServerMetrics::register(&registry);
             let server = ServerHalf {
                 party,
                 session: session.clone(),
@@ -554,6 +585,8 @@ impl FslRuntimeBuilder {
                 dead: Vec::new(),
                 timeout: self.reply_timeout,
                 trace: rec,
+                registry,
+                metrics,
             };
             let handle = std::thread::Builder::new()
                 .name(format!("fsl-server-{party}"))
@@ -849,6 +882,42 @@ impl<G: Group> FslRuntime<G> {
     /// Client capacity the topology was built for.
     pub fn max_clients(&self) -> usize {
         self.links.len()
+    }
+
+    /// Snapshot both servers' live metric registries (index 0 = `S_0`,
+    /// 1 = `S_1`), each rendered server-side in both exposition formats.
+    /// Not a round: registry counters are read, never reset, so scraping
+    /// between rounds never perturbs the next [`RoundReport`].
+    pub fn stats(&mut self) -> Result<[ServerStats; 2]> {
+        self.check_healthy()?;
+        self.command_both(ServerCmd::Stats)?;
+        let mut out: [ServerStats; 2] = std::array::from_fn(|_| ServerStats {
+            prom: String::new(),
+            json: String::new(),
+        });
+        let mut failure: Option<anyhow::Error> = None;
+        // Drain BOTH replies even when the first fails (same invariant
+        // as `ack_both`: a half-read reply stream shifts later rounds).
+        for party in 0..2 {
+            match self.reply(party) {
+                Ok(ServerReply::Stats { prom, json }) => {
+                    out[party] = ServerStats { prom, json };
+                }
+                Ok(other) => {
+                    failure.get_or_insert(other.into_protocol_error("stats"));
+                }
+                Err(e) => {
+                    failure.get_or_insert(e);
+                }
+            }
+        }
+        match failure {
+            Some(e) => {
+                self.poison(&e);
+                Err(e)
+            }
+            None => Ok(out),
+        }
     }
 
     /// Install the servers' weight vector (the PSR database), indexed by
@@ -1559,6 +1628,9 @@ impl<G: Group> FslRuntime<G> {
         // concatenation order only affects readers of the raw list.
         let mut spans = self.trace.drain();
         spans.extend(server_spans);
+        // `drain` preserves the drop counter (only `reset` zeroes it),
+        // so this reads the whole round's overflow.
+        let spans_dropped = self.trace.dropped();
         RoundReport {
             kind,
             clients: n,
@@ -1583,6 +1655,7 @@ impl<G: Group> FslRuntime<G> {
             wall_time,
             outcomes,
             spans,
+            spans_dropped,
         }
     }
 
@@ -1697,6 +1770,73 @@ fn distinct_sorted(sel: &[u64]) -> Vec<u64> {
     s
 }
 
+/// Pre-registered handles for one server half's operational counters —
+/// round lifecycle, per-client fates, the mux leader's held-upload
+/// window, and trace-ring overflow. Registered once at server
+/// construction so round hot paths only touch atomics, never the
+/// registry lock.
+pub(crate) struct ServerMetrics {
+    pub(crate) rounds_started: Counter,
+    pub(crate) rounds_completed: Counter,
+    pub(crate) rounds_failed: Counter,
+    pub(crate) clients_completed: Counter,
+    pub(crate) clients_dropped: Counter,
+    pub(crate) clients_straggler_cut: Counter,
+    /// High-water mark of leader-held upload bytes awaiting `HAVE`
+    /// (mux SSA only; stays 0 on direct-link deployments and on `S_1`).
+    pub(crate) held_window_bytes: Gauge,
+    /// Spans this server's recorder discarded on ring overflow.
+    pub(crate) spans_dropped: Gauge,
+}
+
+impl ServerMetrics {
+    pub(crate) fn register(reg: &MetricsRegistry) -> Self {
+        let outcome = |val| {
+            reg.counter_with(
+                "fsl_client_outcomes_total",
+                &[("outcome", val)],
+                "Per-client round fates, by outcome",
+            )
+        };
+        ServerMetrics {
+            rounds_started: reg.counter(
+                "fsl_rounds_started_total",
+                "Round commands dispatched to this server",
+            ),
+            rounds_completed: reg.counter(
+                "fsl_rounds_completed_total",
+                "Round commands that replied successfully",
+            ),
+            rounds_failed: reg.counter(
+                "fsl_rounds_failed_total",
+                "Round commands that replied Failed",
+            ),
+            clients_completed: outcome("completed"),
+            clients_dropped: outcome("dropped"),
+            clients_straggler_cut: outcome("straggler_cut"),
+            held_window_bytes: reg.gauge(
+                "fsl_mux_held_window_bytes",
+                "High-water mark of leader-held upload bytes awaiting peer HAVE",
+            ),
+            spans_dropped: reg.gauge(
+                "fsl_trace_spans_dropped_count",
+                "Spans discarded by this server's trace ring on overflow",
+            ),
+        }
+    }
+
+    /// Bump the per-outcome counters for one round's client fates.
+    pub(crate) fn observe_outcomes(&self, outcomes: &[ClientOutcome]) {
+        for o in outcomes {
+            match o {
+                ClientOutcome::Completed => self.clients_completed.inc(),
+                ClientOutcome::Dropped => self.clients_dropped.inc(),
+                ClientOutcome::StragglerCut => self.clients_straggler_cut.inc(),
+            }
+        }
+    }
+}
+
 /// One server's state: its engines, data links, and retained
 /// round-spanning state (weights, U-DPF keys, session). Transport-
 /// agnostic: the in-process runtime spawns it on a thread over simulated
@@ -1739,6 +1879,13 @@ pub(crate) struct ServerHalf<G: Group> {
     /// `Round` reply so driver-side reports carry both servers' spans
     /// over either transport.
     pub(crate) trace: Arc<TraceRecorder>,
+    /// This server's live metric registry: phase histograms (teed from
+    /// `trace`), transport meters, pump gauges, round counters. Shared
+    /// with the scrape path ([`ServerCmd::Stats`], `Role::Stats`), which
+    /// only ever snapshots it.
+    pub(crate) registry: Arc<MetricsRegistry>,
+    /// Pre-registered round/outcome handles into `registry`.
+    pub(crate) metrics: ServerMetrics,
 }
 
 /// One accepted multiplexed lane: a single socket carrying the uploads
@@ -1930,16 +2077,49 @@ impl<G: Group> ServerHalf<G> {
                 self.cohort_capacity()
             );
         }
+        let is_round = cmd.is_round();
+        if is_round {
+            self.metrics.rounds_started.inc();
+        }
         // One span stream per command: round handlers (and the engines
         // they share the recorder with) record into a freshly reset ring,
         // and whatever they recorded rides back in the `Round` reply —
         // identically over typed channels and the TCP wire.
         self.trace.reset();
-        let mut reply = self.dispatch(cmd)?;
-        if let ServerReply::Round { spans, .. } = &mut reply {
-            *spans = self.trace.drain();
+        let result = self.dispatch(cmd);
+        // Gauge, not counter: `reset` above zeroed the ring's drop count,
+        // so this reads exactly the last command's overflow.
+        self.metrics.spans_dropped.set(self.trace.dropped());
+        match result {
+            Ok(mut reply) => {
+                if let ServerReply::Round { spans, outcomes, .. } = &mut reply {
+                    self.metrics.observe_outcomes(outcomes);
+                    *spans = self.trace.drain();
+                }
+                if is_round {
+                    self.metrics.rounds_completed.inc();
+                }
+                Ok(reply)
+            }
+            Err(e) => {
+                if is_round {
+                    self.metrics.rounds_failed.inc();
+                }
+                Err(e)
+            }
         }
-        Ok(reply)
+    }
+
+    /// Snapshot this server's registry, rendered both ways. The one
+    /// handler behind every scrape path: [`ServerCmd::Stats`] (in-process
+    /// and idle TCP command loop) and the out-of-band `Role::Stats`
+    /// responder a standalone server runs mid-round.
+    pub(crate) fn stats_reply(&self) -> ServerReply<G> {
+        let snaps = self.registry.snapshot();
+        ServerReply::Stats {
+            prom: expo::render_prom(&snaps),
+            json: expo::render_json(&snaps),
+        }
     }
 
     /// How many clients one round may bring: the announced multiplexed
@@ -1973,6 +2153,7 @@ impl<G: Group> ServerHalf<G> {
                 self.party
             )),
             ServerCmd::Ping => Ok(ServerReply::Ack),
+            ServerCmd::Stats => Ok(self.stats_reply()),
             ServerCmd::SetSession(s) => {
                 // Weights are indexed by global model index: a session
                 // with a different m invalidates them.
@@ -2368,6 +2549,9 @@ impl<G: Group> ServerHalf<G> {
         let shares_frame = 64 + self.session.domain_size().saturating_mul(G::byte_len());
         let budget = mux.budget.max(2 * shares_frame).max(1 << 16);
         let mut pump = FramePump::new(budget);
+        // Re-registration is idempotent, so per-round pumps keep feeding
+        // the same cumulative counters across rounds.
+        pump.set_metrics(PumpMetrics::register(&self.registry));
         let inter = mux.inter_stream.as_ref().ok_or_else(|| {
             anyhow!("S{}: no peer stream for the multiplexed round", self.party)
         })?;
@@ -2491,6 +2675,7 @@ impl<G: Group> ServerHalf<G> {
                         held_bytes += size;
                         held_count += 1;
                         r.held_peak = r.held_peak.max(held_bytes);
+                        self.metrics.held_window_bytes.set_max(held_bytes as u64);
                         held[vid] = Some((up, size));
                         if peer_has[vid] {
                             pending.push(vid);
@@ -3173,6 +3358,34 @@ mod tests {
         rt.shutdown().unwrap();
     }
 
+    /// In-process scrape: after one SSA round both servers' registries
+    /// expose round counters and phase histograms in valid Prometheus
+    /// exposition, and scraping never perturbs the next round.
+    #[test]
+    fn stats_snapshot_after_round_is_valid_exposition() {
+        let mut rt = FslRuntimeBuilder::new(params(256, 8))
+            .max_clients(2)
+            .build::<u64>()
+            .unwrap();
+        let mut rng = Rng::new(3);
+        let clients: Vec<(Vec<u64>, Vec<u64>)> =
+            (0..2).map(|c| (vec![c], vec![c + 1])).collect();
+        rt.ssa(&clients, &mut rng).unwrap();
+        let [s0, s1] = rt.stats().unwrap();
+        for stats in [&s0, &s1] {
+            expo::validate_prom(&stats.prom).unwrap();
+            assert!(stats.prom.contains("fsl_rounds_started_total 1"), "{}", stats.prom);
+            assert!(stats.prom.contains("fsl_rounds_completed_total 1"), "{}", stats.prom);
+            assert!(stats.prom.contains("fsl_phase_seconds"), "{}", stats.prom);
+            assert!(json::validate(&stats.json), "{}", stats.json);
+        }
+        // A second round after the scrape still works and accumulates.
+        rt.ssa(&clients, &mut rng).unwrap();
+        let [s0, _] = rt.stats().unwrap();
+        assert!(s0.prom.contains("fsl_rounds_completed_total 2"), "{}", s0.prom);
+        rt.shutdown().unwrap();
+    }
+
     #[test]
     fn weight_length_mismatch_is_an_error() {
         let mut rt = FslRuntimeBuilder::new(params(256, 8)).build::<u64>().unwrap();
@@ -3235,15 +3448,19 @@ mod tests {
                 start_ns: 0,
                 dur_ns: 10,
             }],
+            spans_dropped: 0,
         };
         assert_eq!(
             report.to_json(),
             "{\"schema\":1,\"kind\":\"ssa\",\"clients\":3,\"client_upload_bytes\":100,\
              \"client_download_bytes\":0,\"server_exchange_bytes\":42,\"gen_ms\":1.500,\
              \"server_ms\":2.500,\"wall_ms\":5.000,\
-             \"outcomes\":[\"completed\",\"dropped\"],\"spans\":1}"
+             \"outcomes\":[\"completed\",\"dropped\"],\"spans\":1,\"spans_dropped\":0}"
         );
         assert!(json::validate(&report.to_json()));
         assert!(json::validate(&report.trace_json()));
+        // The Chrome export carries the derived dropped-span counter
+        // track alongside the span events.
+        assert!(report.trace_json().contains("fsl_trace_spans_dropped_count"));
     }
 }

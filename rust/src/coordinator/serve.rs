@@ -29,19 +29,24 @@
 //!   contiguous range of virtual clients (`fsl loadgen`'s topology),
 //!   letting a cohort of 10⁵–10⁶ clients ride on a bounded socket pool.
 
-use super::runtime::{MuxCohort, MuxLane, ServerHalf};
+use super::runtime::{MuxCohort, MuxLane, ServerHalf, ServerMetrics};
 use super::snapshot::ServerSnapshot;
 use super::wire::{self, ServerCmd, ServerReply};
 use crate::group::Group;
-use crate::metrics::trace::{self, Party, TraceRecorder, TraceSink};
-use crate::net::reactor::{Backoff, FramePump, PumpEvent};
+use crate::metrics::expo;
+use crate::metrics::registry::{Counter, MetricsRegistry};
+use crate::metrics::trace::{self, Party, PhaseMetrics, TraceRecorder, TraceSink};
+use crate::metrics::CommMeter;
+use crate::net::reactor::{Backoff, FramePump, PumpEvent, PumpMetrics};
 use crate::net::transport::tcp::{TcpAcceptor, TcpOptions, TcpTransport};
-use crate::net::transport::{BoxTransport, Hello, HelloAck, Role};
+use crate::net::transport::{BoxTransport, Hello, HelloAck, Role, Transport as _};
 use crate::protocol::{msg, udpf_ssa, AggregationEngine, RetrievalEngine, Sharding};
 use anyhow::{bail, ensure, Result};
 use std::io::Write as _;
 use std::net::TcpStream;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Knobs for one standalone server.
@@ -107,6 +112,10 @@ struct ControlInfo {
 /// closes; handshake-phase failures (bind-level, not per-connection)
 /// return an error.
 pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()> {
+    // One registry per server process, created before the accept phase
+    // so the accept pump's frame counters and `Role::Stats` scrapes work
+    // from the very first connection.
+    let registry = MetricsRegistry::shared();
     // Load any prior snapshot *before* accepting connections: a corrupt
     // file must fail the restart loudly, not after a driver has dialled
     // in and committed to this process.
@@ -134,8 +143,17 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
         }
         _ => None,
     };
-    let dep = accept_deployment::<G>(acceptor, opts)?;
+    let dep = accept_deployment::<G>(acceptor, opts, &registry)?;
     let Deployment { ctrl, control, eps, mux, inter } = dep;
+    // Mirror every link meter into monotonic registry counters (the
+    // meters themselves reset per round; the mirrors never do).
+    mirror_link(&registry, "ctrl", ctrl.meter());
+    for ep in &eps {
+        mirror_link(&registry, "client", ep.meter());
+    }
+    if let Some(inter) = &inter {
+        mirror_link(&registry, "peer", inter.meter());
+    }
 
     // The driver's first command installs the session it announced in the
     // control handshake (System Setup, Fig. 4 — run at deploy time).
@@ -171,6 +189,8 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
     // ship the same span stream the in-process runtime collects directly.
     let rec = TraceRecorder::shared(trace::DEFAULT_TRACE_CAPACITY);
     let sink = TraceSink::new(rec.clone(), Party::server(usize::from(opts.party)));
+    rec.attach_metrics(PhaseMetrics::register(&registry));
+    let metrics = ServerMetrics::register(&registry);
     let mut server = ServerHalf::<G> {
         party: opts.party,
         session,
@@ -186,6 +206,8 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
         udpf_total: 0,
         dead: Vec::new(),
         timeout: opts.data_timeout,
+        registry: registry.clone(),
+        metrics,
     };
 
     // Adopt the snapshot's retained state — but only if the driver just
@@ -206,16 +228,72 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
             server.dead = snap.dead;
         }
     }
+    let snap_meter = SnapshotMeter::register(&registry);
     // Persist the adopted-or-fresh state before acking the install: from
     // the driver's point of view, an acked install is always recoverable.
     if let Some(path) = &opts.snapshot {
-        snapshot_of(&server).write(path).map_err(|e| {
+        write_snapshot(&server, path, &snap_meter).map_err(|e| {
             anyhow::Error::new(e).context(format!("persisting state to {}", path.display()))
         })?;
     }
     ctrl.send(wire::encode_reply::<G>(&ServerReply::Ack))?;
 
-    // The remote command loop — the TCP twin of `ServerHalf::run`.
+    // Run the command loop under a scoped sidecar that keeps answering
+    // `Role::Stats` scrapes on the listener: the loop blocks inside
+    // `handle` for a whole round, so a mid-round scrape can only be
+    // served out-of-band.
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        scope.spawn(|| stats_responder::<G>(acceptor, &registry, opts, &done));
+        let result = command_loop(&ctrl, &mut server, opts, &snap_meter);
+        done.store(true, Ordering::Relaxed);
+        result
+    })
+}
+
+/// Registry handles for snapshot-persistence metering.
+struct SnapshotMeter {
+    writes: Counter,
+    bytes: Counter,
+}
+
+impl SnapshotMeter {
+    fn register(reg: &MetricsRegistry) -> Self {
+        SnapshotMeter {
+            writes: reg.counter(
+                "fsl_snapshot_writes_total",
+                "Recovery snapshots persisted by this server",
+            ),
+            bytes: reg.counter(
+                "fsl_snapshot_bytes",
+                "Bytes written across all recovery snapshots",
+            ),
+        }
+    }
+}
+
+/// Persist `server`'s recovery snapshot to `path`, metering the write.
+fn write_snapshot<G: Group>(
+    server: &ServerHalf<G>,
+    path: &std::path::Path,
+    meter: &SnapshotMeter,
+) -> Result<(), super::snapshot::SnapshotError> {
+    snapshot_of(server).write(path)?;
+    meter.writes.inc();
+    if let Ok(md) = std::fs::metadata(path) {
+        meter.bytes.add(md.len());
+    }
+    Ok(())
+}
+
+/// The remote command loop — the TCP twin of `ServerHalf::run`. Returns
+/// when the driver commands shutdown or its control channel closes.
+fn command_loop<G: Group>(
+    ctrl: &BoxTransport,
+    server: &mut ServerHalf<G>,
+    opts: &ServeOptions,
+    snap_meter: &SnapshotMeter,
+) -> Result<()> {
     loop {
         let raw = match ctrl.recv() {
             Ok(raw) => raw,
@@ -248,6 +326,7 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
                         if let Some(mux) = &mut server.mux {
                             mux.inter_stream = conn.stream_clone().ok();
                         }
+                        mirror_link(&server.registry, "peer", conn.meter());
                         server.inter = Some(Box::new(conn));
                         ServerReply::Ack
                     }
@@ -280,7 +359,7 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
                 // never persists tainted state.
                 if changes_state && !matches!(reply, ServerReply::Failed(_)) {
                     if let Some(path) = &opts.snapshot {
-                        if let Err(e) = snapshot_of(&server).write(path) {
+                        if let Err(e) = write_snapshot(server, path, snap_meter) {
                             reply = ServerReply::Failed(format!(
                                 "persisting the recovery snapshot failed: {e}"
                             ));
@@ -295,6 +374,109 @@ pub fn serve<G: Group>(acceptor: &TcpAcceptor, opts: &ServeOptions) -> Result<()
         }
     }
     Ok(())
+}
+
+/// Mirror one link meter into the per-link-class transport counters.
+/// Registration is idempotent, so every link of a class feeds the same
+/// cumulative pair; the mirror survives the meters' per-round resets.
+fn mirror_link(reg: &MetricsRegistry, link: &'static str, meter: &CommMeter) {
+    meter.mirror_into(
+        reg.counter_with(
+            "fsl_transport_sent_bytes",
+            &[("link", link)],
+            "Bytes sent per link class, cumulative across rounds",
+        ),
+        reg.counter_with(
+            "fsl_transport_recv_bytes",
+            &[("link", link)],
+            "Bytes received per link class, cumulative across rounds",
+        ),
+    );
+}
+
+/// Answer one decoded command on a stats connection. Only `Stats` is
+/// served — the connection has no standing in the deployment, so any
+/// other command is refused without touching server state.
+fn stats_reply_of<G: Group>(registry: &MetricsRegistry, raw: &[u8]) -> ServerReply<G> {
+    match wire::decode_cmd::<G>(raw) {
+        Ok(ServerCmd::Stats) => {
+            let snaps = registry.snapshot();
+            ServerReply::Stats {
+                prom: expo::render_prom(&snaps),
+                json: expo::render_json(&snaps),
+            }
+        }
+        _ => ServerReply::Failed("only Stats is served on a stats connection".into()),
+    }
+}
+
+/// Serve one already-handshaken `Role::Stats` connection: ack it
+/// (echoing the *dialler's* party byte — a scraper doesn't have to know
+/// which server it dialled), answer one `Stats` command, drop. Runs on
+/// its own short-lived thread so a stalling scraper can never hold up
+/// an accept loop; every read is bounded by the handshake timeout.
+fn serve_stats_handshaken<G: Group>(
+    stream: TcpStream,
+    dialler_party: u8,
+    registry: Arc<MetricsRegistry>,
+    tcp: TcpOptions,
+) {
+    let Some(stream) = ack_stream(stream, dialler_party, None, &tcp) else {
+        return;
+    };
+    let Ok(conn) = TcpTransport::from_stream(stream, &tcp) else {
+        return;
+    };
+    let Ok(raw) = conn.recv_timeout(tcp.handshake_timeout) else {
+        return;
+    };
+    let _ = conn.send(wire::encode_reply(&stats_reply_of::<G>(&registry, &raw)));
+}
+
+/// The post-accept listener sidecar: once the deployment has assembled,
+/// nothing else accepts on the bound address, so this loop keeps serving
+/// `Role::Stats` scrapes (mid-round included — the command loop blocks
+/// inside `handle` for a whole round) until the deployment ends. Any
+/// non-stats dialler is rejected with a reasoned ack.
+fn stats_responder<G: Group>(
+    acceptor: &TcpAcceptor,
+    registry: &Arc<MetricsRegistry>,
+    opts: &ServeOptions,
+    done: &AtomicBool,
+) {
+    while !done.load(Ordering::Relaxed) {
+        match acceptor.accept_raw() {
+            Ok(Some((stream, _from))) => {
+                // Read the framed hello directly: one connection at a
+                // time here, each read bounded by the handshake timeout.
+                let hello = TcpTransport::from_stream(stream, &opts.tcp)
+                    .and_then(|conn| {
+                        let raw = conn.recv_timeout(opts.tcp.handshake_timeout)?;
+                        Ok((conn.stream_clone()?, Hello::decode(&raw)?))
+                    });
+                let Ok((stream, hello)) = hello else { continue };
+                match hello.role {
+                    Role::Stats => {
+                        let registry = registry.clone();
+                        let tcp = opts.tcp.clone();
+                        std::thread::spawn(move || {
+                            serve_stats_handshaken::<G>(stream, hello.party, registry, tcp);
+                        });
+                    }
+                    _ => reject(
+                        stream,
+                        opts.party,
+                        "this deployment is already assembled — only stats \
+                         connections are accepted now"
+                            .into(),
+                        &opts.tcp,
+                    ),
+                }
+            }
+            Ok(None) => std::thread::sleep(Duration::from_millis(25)),
+            Err(_) => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
 }
 
 /// The snapshot of one server's current round-spanning state.
@@ -601,6 +783,17 @@ fn admit<G: Group>(
             pend.covered_count += count_us;
             pend.mode = Some(LinkMode::Mux);
         }
+        Role::Stats => {
+            // Stats connections are intercepted ahead of `admit` by both
+            // accept paths (and served off-thread against the registry);
+            // reaching here means the caller had none to serve from.
+            reject(
+                stream,
+                hello.party,
+                "stats are not served on this path".into(),
+                &opts.tcp,
+            );
+        }
         Role::Peer => {
             if opts.party == 1 {
                 reject(
@@ -658,10 +851,12 @@ fn complete(pend: &PendingDeployment, party: u8) -> bool {
 fn accept_deployment<G: Group>(
     acceptor: &TcpAcceptor,
     opts: &ServeOptions,
+    registry: &Arc<MetricsRegistry>,
 ) -> Result<Deployment> {
     let overall = Instant::now() + opts.data_timeout;
     let ceiling = effective_link_ceiling(opts);
     let mut pump = FramePump::new(opts.ingest_budget.max(1 << 16));
+    pump.set_metrics(PumpMetrics::register(registry));
     let mut backoff = Backoff::new(Duration::from_millis(5), Duration::from_secs(1));
     let mut next_tag: u64 = 0;
     let mut pend = PendingDeployment {
@@ -723,6 +918,22 @@ fn accept_deployment<G: Group>(
                         continue;
                     };
                     match Hello::decode(&payload) {
+                        // Stats scrapes have no standing in the deployment
+                        // and are answered off-thread even during the
+                        // accept phase — a monitoring loop that starts
+                        // before the driver must not be rejected.
+                        Ok(hello) if matches!(hello.role, Role::Stats) => {
+                            let registry = registry.clone();
+                            let tcp = opts.tcp.clone();
+                            std::thread::spawn(move || {
+                                serve_stats_handshaken::<G>(
+                                    stream,
+                                    hello.party,
+                                    registry,
+                                    tcp,
+                                );
+                            });
+                        }
                         Ok(hello) => admit::<G>(&mut pend, ceiling, stream, hello, opts),
                         // Foreign traffic (port scan, wrong protocol):
                         // not even a well-formed hello — drop silently.
@@ -962,10 +1173,12 @@ mod tests {
             }
         });
 
-        let dep = accept_deployment::<u64>(&acceptor, &opts).unwrap();
+        let registry = MetricsRegistry::shared();
+        let dep = accept_deployment::<u64>(&acceptor, &opts, &registry).unwrap();
         assert!(dep.mux.is_some(), "mux lanes must assemble a multiplexed deployment");
         let rec = TraceRecorder::shared(trace::DEFAULT_TRACE_CAPACITY);
         let sink = TraceSink::new(rec.clone(), Party::server(0));
+        let metrics = ServerMetrics::register(&registry);
         let sharding = Sharding::new(1);
         let mut server = ServerHalf::<u64> {
             party: 0,
@@ -982,6 +1195,8 @@ mod tests {
             udpf_total: 0,
             dead: Vec::new(),
             timeout: opts.data_timeout,
+            registry: registry.clone(),
+            metrics,
         };
         let reply = server
             .handle(ServerCmd::Ssa { n, deadline_nanos: 30_000_000_000 })
@@ -1031,6 +1246,91 @@ mod tests {
         // And the bound meant something: the cohort shipped several
         // budgets' worth of uploads through that window.
         assert!(total_upload > 4 * budget);
+
+        // The same high-water marks are live on the scrape path, in
+        // valid exposition.
+        let prom = expo::render_prom(&registry.snapshot());
+        expo::validate_prom(&prom).unwrap();
+        assert!(prom.contains("fsl_mux_held_window_bytes"), "{prom}");
+        assert!(prom.contains("fsl_pump_frames_total"), "{prom}");
+        assert!(prom.contains("fsl_rounds_completed_total 1"), "{prom}");
+    }
+
+    /// A `Role::Stats` dialler is served over TCP while the accept loop
+    /// is still assembling the deployment: the scrape needs no knowledge
+    /// of the server's party (the ack echoes the dialler's), costs the
+    /// deployment nothing, and renders valid exposition. The deployment
+    /// then still completes normally.
+    #[test]
+    fn stats_scrape_is_served_over_tcp_without_joining_the_deployment() {
+        let mut opts = ServeOptions::new(1);
+        opts.data_timeout = Duration::from_secs(20);
+        let acceptor = TcpAcceptor::bind("127.0.0.1:0", opts.tcp.clone()).unwrap();
+        let addr = acceptor.local_addr().unwrap();
+        let registry = MetricsRegistry::shared();
+        registry
+            .counter("fsl_rounds_started_total", "rounds dispatched")
+            .add(3);
+        let tcp = TcpOptions::default();
+        std::thread::scope(|scope| {
+            let accept =
+                scope.spawn(|| accept_deployment::<u64>(&acceptor, &opts, &registry));
+
+            // Scrape mid-accept, dialling as party 0 even though this
+            // server is S1 — the stats ack echoes the dialler.
+            let conn = TcpTransport::connect(
+                addr,
+                &Hello { party: 0, role: Role::Stats },
+                &tcp,
+            )
+            .unwrap();
+            conn.send(wire::encode_cmd::<u64>(&ServerCmd::Stats)).unwrap();
+            let raw = conn.recv_timeout(Duration::from_secs(10)).unwrap();
+            match wire::decode_reply::<u64>(&raw).unwrap() {
+                ServerReply::Stats { prom, json } => {
+                    expo::validate_prom(&prom).unwrap();
+                    assert!(prom.contains("fsl_rounds_started_total 3"), "{prom}");
+                    // The accept pump itself is instrumented: our own
+                    // hello frame is already on the counters.
+                    assert!(prom.contains("fsl_pump_frames_total"), "{prom}");
+                    assert!(crate::metrics::json::validate(&json), "{json}");
+                }
+                other => panic!("expected a Stats reply, got {:?} tag", wire_tag(&other)),
+            }
+
+            // An empty-cohort control handshake completes the deployment
+            // (S1 needs no peer link), proving the scrape cost nothing.
+            let ctrl = TcpTransport::connect(
+                addr,
+                &Hello {
+                    party: 1,
+                    role: Role::Control {
+                        max_clients: 0,
+                        m: 1024,
+                        k: 16,
+                        group: std::any::type_name::<u64>().into(),
+                    },
+                },
+                &tcp,
+            )
+            .unwrap();
+            let dep = accept.join().unwrap().unwrap();
+            assert!(dep.eps.is_empty());
+            assert!(dep.mux.is_none());
+            drop(ctrl);
+        });
+    }
+
+    /// Debug-print helper for unexpected reply variants (ServerReply has
+    /// no Debug bound on G's payloads).
+    fn wire_tag(reply: &ServerReply<u64>) -> &'static str {
+        match reply {
+            ServerReply::Ack => "Ack",
+            ServerReply::Round { .. } => "Round",
+            ServerReply::Verified { .. } => "Verified",
+            ServerReply::Failed(_) => "Failed",
+            ServerReply::Stats { .. } => "Stats",
+        }
     }
 
     #[test]

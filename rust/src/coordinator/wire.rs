@@ -64,6 +64,12 @@ pub enum ServerCmd<G: Group> {
     /// address and establish the `S_0 ↔ S_1` exchange link. The
     /// in-process runtime wires its topology directly and rejects this.
     DialPeer { addr: String },
+    /// Snapshot the server's live metrics registry; answered with
+    /// [`ServerReply::Stats`]. Not a round: the meters are read, never
+    /// reset. (Mid-round TCP scrapes use the out-of-band
+    /// `Role::Stats` responder instead — this command path serves the
+    /// in-process runtime and idle standalone servers.)
+    Stats,
     /// Exit the command loop.
     Shutdown,
 }
@@ -131,6 +137,16 @@ pub enum ServerReply<G: Group> {
     },
     /// The command failed server-side.
     Failed(String),
+    /// Live-metrics snapshot ([`ServerCmd::Stats`]): the registry
+    /// rendered both ways server-side, so the scraping CLI needs no
+    /// registry of its own and the two renderings are of one atomic
+    /// snapshot.
+    Stats {
+        /// Prometheus text exposition format.
+        prom: String,
+        /// JSON document ([`crate::metrics::expo::render_json`]).
+        json: String,
+    },
 }
 
 impl<G: Group> ServerReply<G> {
@@ -344,6 +360,7 @@ const CMD_SET_SESSION: u8 = 8;
 const CMD_PING: u8 = 9;
 const CMD_DIAL_PEER: u8 = 10;
 const CMD_SHUTDOWN: u8 = 11;
+const CMD_STATS: u8 = 12;
 
 /// Encode a command for the remote control plane.
 pub fn encode_cmd<G: Group>(cmd: &ServerCmd<G>) -> Vec<u8> {
@@ -400,6 +417,7 @@ pub fn encode_cmd<G: Group>(cmd: &ServerCmd<G>) -> Vec<u8> {
             out.push(CMD_DIAL_PEER);
             put_block(&mut out, addr.as_bytes());
         }
+        ServerCmd::Stats => out.push(CMD_STATS),
         ServerCmd::Shutdown => out.push(CMD_SHUTDOWN),
     }
     out
@@ -468,6 +486,7 @@ pub fn decode_cmd<G: Group>(bytes: &[u8]) -> Result<ServerCmd<G>> {
         CMD_DIAL_PEER => ServerCmd::DialPeer {
             addr: String::from_utf8_lossy(get_block(bytes, &mut off)?).into_owned(),
         },
+        CMD_STATS => ServerCmd::Stats,
         CMD_SHUTDOWN => ServerCmd::Shutdown,
         t => bail!("unknown control command tag {t}"),
     })
@@ -479,6 +498,7 @@ const REP_ACK: u8 = 1;
 const REP_ROUND: u8 = 2;
 const REP_VERIFIED: u8 = 3;
 const REP_FAILED: u8 = 4;
+const REP_STATS: u8 = 5;
 
 /// One byte per [`ClientOutcome`] on the wire.
 fn outcome_byte(o: ClientOutcome) -> u8 {
@@ -553,6 +573,11 @@ pub fn encode_reply<G: Group>(reply: &ServerReply<G>) -> Vec<u8> {
         ServerReply::Failed(e) => {
             out.push(REP_FAILED);
             put_block(&mut out, e.as_bytes());
+        }
+        ServerReply::Stats { prom, json } => {
+            out.push(REP_STATS);
+            put_block(&mut out, prom.as_bytes());
+            put_block(&mut out, json.as_bytes());
         }
     }
     out
@@ -645,6 +670,11 @@ pub fn decode_reply<G: Group>(bytes: &[u8]) -> Result<ServerReply<G>> {
         REP_FAILED => {
             ServerReply::Failed(String::from_utf8_lossy(get_block(bytes, &mut off)?).into_owned())
         }
+        REP_STATS => {
+            let prom = String::from_utf8_lossy(get_block(bytes, &mut off)?).into_owned();
+            let json = String::from_utf8_lossy(get_block(bytes, &mut off)?).into_owned();
+            ServerReply::Stats { prom, json }
+        }
         t => bail!("unknown server reply tag {t}"),
     })
 }
@@ -708,6 +738,7 @@ mod tests {
             ServerCmd::SetSession(Arc::new(session())),
             ServerCmd::Ping,
             ServerCmd::DialPeer { addr: "127.0.0.1:7100".into() },
+            ServerCmd::Stats,
             ServerCmd::Shutdown,
         ];
         for cmd in &cases {
@@ -804,6 +835,10 @@ mod tests {
                 server_time: Duration::from_millis(5),
             },
             ServerReply::Failed("bin count mismatch".into()),
+            ServerReply::Stats {
+                prom: "# HELP fsl_x_total h\n# TYPE fsl_x_total counter\nfsl_x_total 1\n".into(),
+                json: "{\"schema\":1,\"metrics\":[]}".into(),
+            },
         ];
         for reply in &cases {
             let enc = encode_reply(reply);

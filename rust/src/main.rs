@@ -9,6 +9,10 @@
 //! * `params` — print cuckoo/table diagnostics for (m, c) (Tables 3/4).
 //! * `serve`  — run one server (S0 or S1) as a standalone process bound
 //!   to an address; drive it from another process with `connect=`.
+//! * `stats`  — scrape a live `fsl serve` process's metrics registry
+//!   (Prometheus text by default, `--json` for the JSON document). The
+//!   scrape rides an out-of-band `Role::Stats` connection, so it works
+//!   mid-round without perturbing lanes.
 //!
 //! Arguments are `key=value` pairs, e.g.
 //! `fsl train rounds=30 clients=10 c=0.1 artifacts=artifacts`.
@@ -20,6 +24,7 @@
 //! file in Perfetto / `chrome://tracing`).
 
 use anyhow::{anyhow, Result};
+use fsl::coordinator::wire::{self, ServerCmd, ServerReply};
 use fsl::coordinator::{
     run_fsl_training, run_loadgen, serve, ClientOutcome, FslConfig, FslRuntime,
     FslRuntimeBuilder, KeyMode, LoadgenOptions, LoadgenVerify, RoundReport, ServeOptions,
@@ -28,8 +33,8 @@ use fsl::crypto::rng::Rng;
 use fsl::data::{partition_iid, ImageDataset, IMAGE_CLASSES};
 use fsl::hashing::{CuckooParams, SimpleTable};
 use fsl::metrics::{bits_to_mb, mb};
-use fsl::net::transport::tcp::TcpAcceptor;
-use fsl::net::transport::FaultPlan;
+use fsl::net::transport::tcp::{TcpAcceptor, TcpOptions, TcpTransport};
+use fsl::net::transport::{FaultPlan, Hello, Role, Transport as _};
 use fsl::protocol::{Session, SessionParams};
 use fsl::runtime::Executor;
 use std::collections::HashMap;
@@ -59,9 +64,10 @@ fn main() -> Result<()> {
         "params" => cmd_params(&kv),
         "serve" => cmd_serve(&kv),
         "loadgen" => cmd_loadgen(&kv, json),
+        "stats" => cmd_stats(&kv, json),
         _ => {
             eprintln!(
-                "usage: fsl <train|ssa|psr|params|serve|loadgen> [key=value ...] [--json]\n\
+                "usage: fsl <train|ssa|psr|params|serve|loadgen|stats> [key=value ...] [--json]\n\
                  examples:\n\
                  \u{20}  fsl train rounds=20 clients=10 c=0.1\n\
                  \u{20}  fsl ssa m=32768 c=0.1 clients=4\n\
@@ -73,8 +79,10 @@ fn main() -> Result<()> {
                  \u{20}  fsl ssa m=32768 c=0.1 clients=4 \
                  connect=127.0.0.1:7100,127.0.0.1:7101 --json\n\
                  scale harness (10^4..10^6 virtual clients over mux lanes):\n\
-                 \u{20}  fsl loadgen clients=10000 lanes=64 m=16384 c=0.01 \
-                 connect=127.0.0.1:7100,127.0.0.1:7101 --json"
+                 \u{20}  fsl loadgen clients=10000 lanes=64 rounds=1 m=16384 c=0.01 \
+                 connect=127.0.0.1:7100,127.0.0.1:7101 --json\n\
+                 scrape a live server's metrics (works mid-round):\n\
+                 \u{20}  fsl stats connect=127.0.0.1:7100 --prom"
             );
             Ok(())
         }
@@ -119,11 +127,14 @@ fn cmd_serve(kv: &HashMap<String, String>) -> Result<()> {
 }
 
 /// Drive a multiplexed scale round against two `fsl serve` processes:
-/// `clients=N` virtual clients over `lanes=L` mux sockets per server.
-/// `m=`/`c=` (or `k=`) shape the session, `deadline_ms=` arms the
-/// straggler cut, `jitter_ms=`/`straggle=`/`drop_lanes=` inject faults,
-/// `verify=expected|inproc|none` picks the post-round check, and
-/// `history=PATH|default` appends a bench-diff-gated datapoint.
+/// `clients=N` virtual clients over `lanes=L` mux sockets per server,
+/// `rounds=R` times back-to-back (soak mode; per-round wall times land
+/// as p50/p95/p99 in the report and in a `loadgen_soak` history
+/// datapoint). `m=`/`c=` (or `k=`) shape the session, `deadline_ms=`
+/// arms the straggler cut, `jitter_ms=`/`straggle=`/`drop_lanes=`
+/// inject faults, `verify=expected|inproc|none` picks the post-round
+/// check, and `history=PATH|default` appends bench-diff-gated
+/// datapoints.
 fn cmd_loadgen(kv: &HashMap<String, String>, json: bool) -> Result<()> {
     let spec: String = get(kv, "connect", "127.0.0.1:7100,127.0.0.1:7101".to_string());
     let (s0, s1) = spec
@@ -132,6 +143,9 @@ fn cmd_loadgen(kv: &HashMap<String, String>, json: bool) -> Result<()> {
     let mut opts = LoadgenOptions::new(s0.trim(), s1.trim());
     opts.clients = get(kv, "clients", 10_000usize).max(1);
     opts.lanes = get(kv, "lanes", 64usize).max(1);
+    // rounds>1 = soak mode: the same deployment is re-commanded over the
+    // same lane pool; the report carries p50/p95/p99 round walls.
+    opts.rounds = get(kv, "rounds", 1usize).max(1);
     opts.m = get(kv, "m", 1u64 << 14);
     let c: f64 = get(kv, "c", 0.01);
     opts.k = get(kv, "k", ((opts.m as f64 * c) as usize).max(1));
@@ -162,15 +176,20 @@ fn cmd_loadgen(kv: &HashMap<String, String>, json: bool) -> Result<()> {
     );
     let report = run_loadgen(&opts)?;
     eprintln!(
-        "loadgen: {}/{} completed ({} cut, {} dropped); wall {:?}, server {:?}, \
-         gen {:?}, upload {:.1} MB, driver peak RSS {:.1} MB",
+        "loadgen: {}/{} completed ({} cut, {} dropped) over {} round(s); wall {:?}, \
+         server {:?}, gen {:?}, round p50/p95/p99 {:.0}/{:.0}/{:.0} ms, \
+         upload {:.1} MB, driver peak RSS {:.1} MB",
         report.completed,
         report.clients,
         report.straggler_cut,
         report.dropped,
+        report.rounds,
         report.wall_time,
         report.server_time,
         report.gen_time,
+        report.p50_ms,
+        report.p95_ms,
+        report.p99_ms,
         report.upload_bytes as f64 / 1e6,
         report.peak_rss_mb,
     );
@@ -178,6 +197,40 @@ fn cmd_loadgen(kv: &HashMap<String, String>, json: bool) -> Result<()> {
         println!("{}", report.to_json());
     }
     Ok(())
+}
+
+/// Scrape one live `fsl serve` process at `connect=ADDR`: dial an
+/// out-of-band [`Role::Stats`] connection, send the Stats command, and
+/// print the reply — Prometheus text exposition by default (also with
+/// `--prom`), the JSON document with `--json`. The exposition text is
+/// validated before printing so a malformed scrape fails loudly instead
+/// of poisoning a collector. Works mid-round: the stats responder never
+/// enters the round state machine.
+fn cmd_stats(kv: &HashMap<String, String>, json: bool) -> Result<()> {
+    let addr: String = get(kv, "connect", "127.0.0.1:7100".to_string());
+    let window = Duration::from_millis(get(kv, "retry_ms", 10_000u64));
+    wait_for_listeners(&[addr.as_str()], window)?;
+    // A scraper addresses a socket, not a party: the stats ack echoes
+    // whatever party byte the dialler claims, so 0 always passes.
+    let hello = Hello { party: 0, role: Role::Stats };
+    let conn = TcpTransport::connect(addr.as_str(), &hello, &TcpOptions::default())
+        .map_err(|e| e.context(format!("dialling the stats endpoint at {addr}")))?;
+    conn.send(wire::encode_cmd(&ServerCmd::<u64>::Stats))?;
+    let raw = conn.recv_timeout(Duration::from_millis(get(kv, "reply_timeout_ms", 10_000u64)))?;
+    match wire::decode_reply::<u64>(&raw)? {
+        ServerReply::Stats { prom, json: doc } => {
+            fsl::metrics::expo::validate_prom(&prom)
+                .map_err(|e| anyhow!("{addr} returned invalid exposition text: {e}"))?;
+            if json {
+                println!("{doc}");
+            } else {
+                print!("{prom}");
+            }
+            Ok(())
+        }
+        ServerReply::Failed(msg) => Err(anyhow!("{addr} refused the scrape: {msg}")),
+        _ => Err(anyhow!("{addr}: unexpected reply to a stats scrape")),
+    }
 }
 
 /// The shared round-shape flags: `keymode=fresh|udpf` picks the SSA key

@@ -1,0 +1,507 @@
+//! Renderers for [`crate::metrics::registry`] snapshots: Prometheus
+//! text exposition format (`fsl stats --prom`, the scrape endpoint) and
+//! a JSON document (`fsl stats --json`), plus a dependency-free format
+//! validator tests and CI use to guard the exposition output.
+//!
+//! Exposition rules implemented (text format 0.0.4):
+//!
+//! - one `# HELP` / `# TYPE` pair per metric *family* (same name,
+//!   different label sets share one header);
+//! - label values escape `\`, `"`, and newline; HELP text escapes `\`
+//!   and newline;
+//! - histograms render cumulative `_bucket{le="..."}` series up to the
+//!   last non-empty bucket plus the mandatory `le="+Inf"`, then
+//!   `_sum` and `_count`;
+//! - [`Unit::Seconds`] histograms store nanoseconds; bucket bounds and
+//!   sums are scaled by 1e-9 here so scrapes read SI seconds.
+//!
+//! Snapshots arrive pre-sorted from `MetricsRegistry::snapshot`, so
+//! both renderings are deterministic — the golden test below pins the
+//! exact text.
+
+use super::json::{self, JsonObj};
+use super::registry::{bucket_bound, MetricSnapshot, SnapshotValue, Unit};
+use std::fmt::Write as _;
+
+/// Escape a HELP line: backslash and newline.
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value: backslash, double-quote, newline.
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\")
+        .replace('"', "\\\"")
+        .replace('\n', "\\n")
+}
+
+/// Render `{k="v",...}` for a label set, with `extra` appended last
+/// (the histogram `le` label). Empty label sets render as nothing.
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    let mut any = false;
+    for (k, v) in labels {
+        if any {
+            out.push(',');
+        }
+        any = true;
+        let _ = write!(out, "{k}=\"{}\"", escape_label(v));
+    }
+    if let Some((k, v)) = extra {
+        if any {
+            out.push(',');
+        }
+        let _ = write!(out, "{k}=\"{}\"", escape_label(v));
+    }
+    out.push('}');
+    out
+}
+
+/// Format an f64 the way Prometheus parsers expect (shortest
+/// round-trip representation; integral values keep no fraction).
+fn fmt_f64(v: f64) -> String {
+    format!("{v}")
+}
+
+/// Scale a raw histogram quantity into exposition units.
+fn scaled(v: u64, unit: Unit) -> String {
+    match unit {
+        Unit::Count => v.to_string(),
+        Unit::Seconds => fmt_f64(v as f64 / 1e9),
+    }
+}
+
+/// Render a snapshot list as Prometheus text exposition format.
+pub fn render_prom(snaps: &[MetricSnapshot]) -> String {
+    let mut out = String::new();
+    let mut last_family: Option<&str> = None;
+    for s in snaps {
+        let type_name = match &s.value {
+            SnapshotValue::Counter(_) => "counter",
+            SnapshotValue::Gauge(_) => "gauge",
+            SnapshotValue::Histogram { .. } => "histogram",
+        };
+        if last_family != Some(s.name.as_str()) {
+            let _ = writeln!(out, "# HELP {} {}", s.name, escape_help(&s.help));
+            let _ = writeln!(out, "# TYPE {} {}", s.name, type_name);
+            last_family = Some(s.name.as_str());
+        }
+        match &s.value {
+            SnapshotValue::Counter(v) | SnapshotValue::Gauge(v) => {
+                let _ = writeln!(out, "{}{} {}", s.name, label_block(&s.labels, None), v);
+            }
+            SnapshotValue::Histogram {
+                buckets,
+                sum,
+                count,
+                unit,
+            } => {
+                let last_used = buckets.iter().rposition(|&b| b > 0);
+                let mut cum = 0u64;
+                if let Some(last) = last_used {
+                    for (i, b) in buckets.iter().enumerate().take(last + 1) {
+                        cum += b;
+                        let le = match bucket_bound(i) {
+                            Some(hi) => scaled(hi, *unit),
+                            None => continue, // overflow bucket handled by +Inf below
+                        };
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{} {}",
+                            s.name,
+                            label_block(&s.labels, Some(("le", &le))),
+                            cum
+                        );
+                    }
+                }
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{} {}",
+                    s.name,
+                    label_block(&s.labels, Some(("le", "+Inf"))),
+                    count
+                );
+                let _ = writeln!(
+                    out,
+                    "{}_sum{} {}",
+                    s.name,
+                    label_block(&s.labels, None),
+                    scaled(*sum, *unit)
+                );
+                let _ = writeln!(
+                    out,
+                    "{}_count{} {}",
+                    s.name,
+                    label_block(&s.labels, None),
+                    count
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Schema version stamped into [`render_json`] documents.
+pub const JSON_SCHEMA: u64 = 1;
+
+/// Render a snapshot list as one JSON document:
+/// `{"schema":1,"metrics":[{...},...]}`. Histograms report `sum`,
+/// `count`, and p50/p95/p99 estimates (milliseconds for
+/// [`Unit::Seconds`], raw units otherwise) rather than raw buckets.
+pub fn render_json(snaps: &[MetricSnapshot]) -> String {
+    let metrics = snaps.iter().map(|s| {
+        let mut o = JsonObj::new();
+        o.field_str("name", &s.name);
+        if !s.labels.is_empty() {
+            let mut lo = JsonObj::new();
+            for (k, v) in &s.labels {
+                lo.field_str(k, v);
+            }
+            o.field_raw("labels", &lo.finish());
+        }
+        match &s.value {
+            SnapshotValue::Counter(v) => {
+                o.field_str("type", "counter").field_u64("value", *v);
+            }
+            SnapshotValue::Gauge(v) => {
+                o.field_str("type", "gauge").field_u64("value", *v);
+            }
+            SnapshotValue::Histogram {
+                buckets,
+                sum,
+                count,
+                unit,
+            } => {
+                o.field_str("type", "histogram")
+                    .field_u64("count", *count)
+                    .field_f64(
+                        "sum",
+                        match unit {
+                            Unit::Seconds => *sum as f64 / 1e9,
+                            Unit::Count => *sum as f64,
+                        },
+                        6,
+                    );
+                for (label, q) in [("p50", 0.5), ("p95", 0.95), ("p99", 0.99)] {
+                    o.field_f64(label, quantile_of(buckets, *count, *unit, q), 3);
+                }
+            }
+        }
+        o.finish()
+    });
+    let mut doc = JsonObj::new();
+    doc.field_u64("schema", JSON_SCHEMA)
+        .field_raw("metrics", &json::array(metrics));
+    doc.finish()
+}
+
+/// Quantile over a raw bucket snapshot (mirrors
+/// `Histogram::quantile`, but over copied cells). Seconds-unit values
+/// scale to fractional milliseconds.
+fn quantile_of(buckets: &[u64], total: u64, unit: Unit, q: f64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    let mut raw = 0.0;
+    for (i, &n) in buckets.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        if seen + n >= rank {
+            raw = match bucket_bound(i) {
+                Some(hi) if i == 0 => (rank - seen) as f64 / n as f64 * hi as f64,
+                Some(hi) => {
+                    let lo = (hi / 2) as f64;
+                    lo + (hi as f64 - lo) * ((rank - seen) as f64 / n as f64)
+                }
+                None => (1u64 << 62) as f64 * 2.0,
+            };
+            break;
+        }
+        seen += n;
+    }
+    match unit {
+        Unit::Seconds => raw / 1e6,
+        Unit::Count => raw,
+    }
+}
+
+/// Validate Prometheus text exposition format. Returns the first
+/// problem found, or `Ok(())`. Checks: line grammar (comments, sample
+/// lines `name{labels} value`), metric/label name charsets, every
+/// sample preceded by a `# TYPE` for its family, histogram families
+/// complete (`+Inf` bucket, `_sum`, `_count`), and parseable values.
+pub fn validate_prom(text: &str) -> Result<(), String> {
+    let mut typed: Vec<(String, String)> = Vec::new(); // (family, type)
+    let mut histo_parts: Vec<(String, [bool; 3])> = Vec::new(); // inf/sum/count
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            if let Some(spec) = rest.strip_prefix("TYPE ") {
+                let mut it = spec.splitn(2, ' ');
+                let fam = it.next().unwrap_or("");
+                let ty = it.next().unwrap_or("");
+                if !valid_name(fam) {
+                    return Err(format!("line {ln}: bad family name {fam:?}"));
+                }
+                if !matches!(ty, "counter" | "gauge" | "histogram") {
+                    return Err(format!("line {ln}: unknown type {ty:?}"));
+                }
+                typed.push((fam.to_string(), ty.to_string()));
+                if ty == "histogram" {
+                    histo_parts.push((fam.to_string(), [false; 3]));
+                }
+            } else if !rest.starts_with("HELP ") {
+                return Err(format!("line {ln}: unknown comment {line:?}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return Err(format!("line {ln}: malformed comment {line:?}"));
+        }
+        // Sample line: name[{labels}] value
+        let (name_labels, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {ln}: no value separator in {line:?}"))?;
+        if value.parse::<f64>().is_err() && value != "+Inf" && value != "-Inf" && value != "NaN" {
+            return Err(format!("line {ln}: unparseable value {value:?}"));
+        }
+        let name = match name_labels.split_once('{') {
+            Some((n, rest)) => {
+                let body = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| format!("line {ln}: unterminated label block"))?;
+                validate_labels(body).map_err(|e| format!("line {ln}: {e}"))?;
+                n
+            }
+            None => name_labels,
+        };
+        if !valid_name(name) {
+            return Err(format!("line {ln}: bad metric name {name:?}"));
+        }
+        // Resolve the family: histogram series carry suffixes.
+        let family = typed
+            .iter()
+            .rev()
+            .find(|(fam, ty)| {
+                name == fam
+                    || (ty == "histogram"
+                        && [
+                            format!("{fam}_bucket"),
+                            format!("{fam}_sum"),
+                            format!("{fam}_count"),
+                        ]
+                        .iter()
+                        .any(|s| s == name))
+            })
+            .ok_or_else(|| format!("line {ln}: sample {name:?} has no preceding # TYPE"))?
+            .0
+            .clone();
+        if let Some((_, parts)) = histo_parts.iter_mut().find(|(f, _)| *f == family) {
+            if name.ends_with("_bucket") && line.contains("le=\"+Inf\"") {
+                parts[0] = true;
+            }
+            if name == format!("{family}_sum") {
+                parts[1] = true;
+            }
+            if name == format!("{family}_count") {
+                parts[2] = true;
+            }
+        }
+    }
+    for (fam, [inf, sum, count]) in &histo_parts {
+        if !(inf && sum && count) {
+            return Err(format!(
+                "histogram {fam} incomplete: +Inf={inf} _sum={sum} _count={count}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn valid_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+fn validate_labels(body: &str) -> Result<(), String> {
+    // Split on commas outside quotes; validate k="v" with escape rules.
+    let b = body.as_bytes();
+    let mut pos = 0;
+    while pos < b.len() {
+        let eq = body[pos..]
+            .find('=')
+            .map(|i| pos + i)
+            .ok_or_else(|| format!("label without '=' in {body:?}"))?;
+        let key = &body[pos..eq];
+        if !valid_name(key) {
+            return Err(format!("bad label name {key:?}"));
+        }
+        if b.get(eq + 1) != Some(&b'"') {
+            return Err(format!("unquoted label value after {key:?}"));
+        }
+        let mut i = eq + 2;
+        loop {
+            match b.get(i) {
+                Some(b'\\') => i += 2,
+                Some(b'"') => break,
+                Some(_) => i += 1,
+                None => return Err(format!("unterminated label value for {key:?}")),
+            }
+        }
+        pos = i + 1;
+        match b.get(pos) {
+            Some(b',') => pos += 1,
+            None => break,
+            Some(c) => return Err(format!("unexpected {:?} after label value", *c as char)),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::registry::MetricsRegistry;
+
+    fn sample_registry() -> MetricsRegistry {
+        let reg = MetricsRegistry::new();
+        reg.counter("fsl_frames_total", "Frames pumped").add(42);
+        reg.gauge_with(
+            "fsl_held_window_bytes",
+            &[("party", "0")],
+            "Mux held-window occupancy",
+        )
+        .set(1024);
+        reg.gauge_with(
+            "fsl_held_window_bytes",
+            &[("party", "1")],
+            "Mux held-window occupancy",
+        )
+        .set(2048);
+        let h = reg.histogram("fsl_round_seconds", "Round wall time", Unit::Seconds);
+        h.observe(1_500_000_000); // 1.5 s → bucket le=2^31 ns
+        h.observe(1); // → bucket le=1 ns
+        reg.counter_with(
+            "fsl_odd_total",
+            &[("path", "a\\b\"c\nd")],
+            "Hostile\nhelp \\ text",
+        )
+        .inc();
+        reg
+    }
+
+    #[test]
+    fn exposition_golden() {
+        let text = render_prom(&sample_registry().snapshot());
+        let expected = "\
+# HELP fsl_frames_total Frames pumped
+# TYPE fsl_frames_total counter
+fsl_frames_total 42
+# HELP fsl_held_window_bytes Mux held-window occupancy
+# TYPE fsl_held_window_bytes gauge
+fsl_held_window_bytes{party=\"0\"} 1024
+fsl_held_window_bytes{party=\"1\"} 2048
+# HELP fsl_odd_total Hostile\\nhelp \\\\ text
+# TYPE fsl_odd_total counter
+fsl_odd_total{path=\"a\\\\b\\\"c\\nd\"} 1
+# HELP fsl_round_seconds Round wall time
+# TYPE fsl_round_seconds histogram
+fsl_round_seconds_bucket{le=\"0.000000001\"} 1
+fsl_round_seconds_bucket{le=\"0.000000002\"} 1
+fsl_round_seconds_bucket{le=\"0.000000004\"} 1
+fsl_round_seconds_bucket{le=\"0.000000008\"} 1
+fsl_round_seconds_bucket{le=\"0.000000016\"} 1
+fsl_round_seconds_bucket{le=\"0.000000032\"} 1
+fsl_round_seconds_bucket{le=\"0.000000064\"} 1
+fsl_round_seconds_bucket{le=\"0.000000128\"} 1
+fsl_round_seconds_bucket{le=\"0.000000256\"} 1
+fsl_round_seconds_bucket{le=\"0.000000512\"} 1
+fsl_round_seconds_bucket{le=\"0.000001024\"} 1
+fsl_round_seconds_bucket{le=\"0.000002048\"} 1
+fsl_round_seconds_bucket{le=\"0.000004096\"} 1
+fsl_round_seconds_bucket{le=\"0.000008192\"} 1
+fsl_round_seconds_bucket{le=\"0.000016384\"} 1
+fsl_round_seconds_bucket{le=\"0.000032768\"} 1
+fsl_round_seconds_bucket{le=\"0.000065536\"} 1
+fsl_round_seconds_bucket{le=\"0.000131072\"} 1
+fsl_round_seconds_bucket{le=\"0.000262144\"} 1
+fsl_round_seconds_bucket{le=\"0.000524288\"} 1
+fsl_round_seconds_bucket{le=\"0.001048576\"} 1
+fsl_round_seconds_bucket{le=\"0.002097152\"} 1
+fsl_round_seconds_bucket{le=\"0.004194304\"} 1
+fsl_round_seconds_bucket{le=\"0.008388608\"} 1
+fsl_round_seconds_bucket{le=\"0.016777216\"} 1
+fsl_round_seconds_bucket{le=\"0.033554432\"} 1
+fsl_round_seconds_bucket{le=\"0.067108864\"} 1
+fsl_round_seconds_bucket{le=\"0.134217728\"} 1
+fsl_round_seconds_bucket{le=\"0.268435456\"} 1
+fsl_round_seconds_bucket{le=\"0.536870912\"} 1
+fsl_round_seconds_bucket{le=\"1.073741824\"} 1
+fsl_round_seconds_bucket{le=\"2.147483648\"} 2
+fsl_round_seconds_bucket{le=\"+Inf\"} 2
+fsl_round_seconds_sum 1.500000001
+fsl_round_seconds_count 2
+";
+        assert_eq!(text, expected);
+        validate_prom(&text).expect("golden must self-validate");
+    }
+
+    #[test]
+    fn json_rendering_is_valid_and_quantiled() {
+        let doc = render_json(&sample_registry().snapshot());
+        assert!(json::validate(&doc), "{doc}");
+        assert!(doc.contains("\"schema\":1"), "{doc}");
+        assert!(doc.contains("\"name\":\"fsl_round_seconds\""), "{doc}");
+        assert!(doc.contains("\"p99\""), "{doc}");
+        // Hostile label value must be escaped into valid JSON.
+        assert!(doc.contains("a\\\\b\\\"c\\nd"), "{doc}");
+    }
+
+    #[test]
+    fn validator_rejects_malformed_exposition() {
+        for (bad, why) in [
+            ("fsl_x_total 1\n", "sample without TYPE"),
+            ("# TYPE fsl_x_total counter\nfsl_x_total\n", "no value"),
+            (
+                "# TYPE fsl_x_total counter\nfsl_x_total abc\n",
+                "bad value",
+            ),
+            (
+                "# TYPE fsl_x_total wibble\nfsl_x_total 1\n",
+                "unknown type",
+            ),
+            (
+                "# TYPE fsl_x_total counter\nfsl_x_total{p=\"1\" 2\n",
+                "unterminated labels",
+            ),
+            (
+                "# TYPE fsl_h_seconds histogram\nfsl_h_seconds_count 1\n",
+                "incomplete histogram",
+            ),
+        ] {
+            assert!(validate_prom(bad).is_err(), "accepted {why}: {bad:?}");
+        }
+        let ok = "# HELP fsl_ok_total fine\n# TYPE fsl_ok_total counter\nfsl_ok_total{a=\"b\",c=\"d\\\"e\"} 3\n";
+        validate_prom(ok).expect("valid sample rejected");
+    }
+
+    #[test]
+    fn empty_snapshot_renders_empty_but_valid() {
+        let text = render_prom(&[]);
+        assert!(text.is_empty());
+        validate_prom(&text).unwrap();
+        let doc = render_json(&[]);
+        assert!(json::validate(&doc), "{doc}");
+    }
+}

@@ -6,19 +6,28 @@
 //! report both and show they agree.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
+pub mod expo;
 pub mod history;
 pub mod json;
+pub mod registry;
 pub mod trace;
 
 /// Direction-tagged byte counters for one party.
+///
+/// A meter can additionally *mirror* into live registry counters (see
+/// [`CommMeter::mirror_into`]): meters themselves are reset at the
+/// start of every round so each [`crate::coordinator::RoundReport`]
+/// covers exactly one round, while the mirrored registry counters stay
+/// monotonic across rounds — the shape a scrape endpoint needs.
 #[derive(Debug, Default)]
 pub struct CommMeter {
     pub sent_bytes: AtomicU64,
     pub recv_bytes: AtomicU64,
     pub messages: AtomicU64,
+    mirror: OnceLock<(registry::Counter, registry::Counter)>,
 }
 
 impl CommMeter {
@@ -27,16 +36,29 @@ impl CommMeter {
         Arc::new(Self::default())
     }
 
+    /// Additionally feed every future `record_send` / `record_recv`
+    /// into a pair of registry counters. First call wins; the mirror
+    /// survives [`CommMeter::reset`] so scraped totals stay monotonic.
+    pub fn mirror_into(&self, sent: registry::Counter, recv: registry::Counter) {
+        let _ = self.mirror.set((sent, recv));
+    }
+
     /// Record an outgoing message.
     pub fn record_send(&self, bytes: usize) {
         self.sent_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.messages.fetch_add(1, Ordering::Relaxed);
+        if let Some((sent, _)) = self.mirror.get() {
+            sent.add(bytes as u64);
+        }
     }
 
     /// Record an incoming message.
     pub fn record_recv(&self, bytes: usize) {
         self.recv_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.messages.fetch_add(1, Ordering::Relaxed);
+        if let Some((_, recv)) = self.mirror.get() {
+            recv.add(bytes as u64);
+        }
     }
 
     /// Total uploaded bytes.
@@ -65,11 +87,19 @@ impl CommMeter {
 }
 
 /// Simple named stopwatch accumulator (per-phase round timings).
+#[deprecated(
+    since = "0.10.0",
+    note = "superseded by `trace::TraceRecorder` spans and \
+            `registry::Histogram` latency metrics; see the equivalence \
+            test `timer_equivalent_to_histogram`"
+)]
 #[derive(Debug, Default, Clone)]
 pub struct PhaseTimer {
     phases: Vec<(String, Duration)>,
 }
 
+// lint: allow(deprecated) — the deprecated timer's own inherent impl
+#[allow(deprecated)]
 impl PhaseTimer {
     /// Time a closure under a phase name.
     pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
@@ -137,14 +167,58 @@ mod tests {
         assert_eq!(m.messages(), 3);
     }
 
+    /// Labelled equivalence for the deprecated `PhaseTimer`: the same
+    /// durations recorded into a per-phase-labelled registry histogram
+    /// yield identical totals, so migrating callers lose nothing.
     #[test]
-    fn timer_accumulates_by_name() {
+    #[allow(deprecated)]
+    fn timer_equivalent_to_histogram() {
         let mut t = PhaseTimer::default();
-        t.record("gen", Duration::from_millis(5));
-        t.record("gen", Duration::from_millis(7));
-        t.record("eval", Duration::from_millis(1));
+        let reg = registry::MetricsRegistry::new();
+        let gen = reg.histogram_with(
+            "fsl_phase_seconds",
+            &[("phase", "gen")],
+            "h",
+            registry::Unit::Seconds,
+        );
+        let eval = reg.histogram_with(
+            "fsl_phase_seconds",
+            &[("phase", "eval")],
+            "h",
+            registry::Unit::Seconds,
+        );
+        for (name, ms) in [("gen", 5), ("gen", 7), ("eval", 1)] {
+            let d = Duration::from_millis(ms);
+            t.record(name, d);
+            match name {
+                "gen" => gen.observe_duration(d),
+                _ => eval.observe_duration(d),
+            }
+        }
         assert_eq!(t.total("gen"), Duration::from_millis(12));
         assert_eq!(t.phases().len(), 3);
+        assert_eq!(gen.sum(), 12_000_000); // ns, same total as the timer
+        assert_eq!(gen.count(), 2);
+        assert_eq!(eval.sum(), 1_000_000);
+    }
+
+    /// Mirrored registry counters keep accumulating across the
+    /// per-round `reset()` that zeroes the meter itself.
+    #[test]
+    fn meter_mirror_survives_reset() {
+        let reg = registry::MetricsRegistry::new();
+        let m = CommMeter::shared();
+        m.mirror_into(
+            reg.counter("fsl_transport_sent_bytes", "h"),
+            reg.counter("fsl_transport_recv_bytes", "h"),
+        );
+        m.record_send(100);
+        m.record_recv(40);
+        m.reset();
+        m.record_send(1);
+        assert_eq!(m.sent(), 1);
+        assert_eq!(reg.counter("fsl_transport_sent_bytes", "h").get(), 101);
+        assert_eq!(reg.counter("fsl_transport_recv_bytes", "h").get(), 40);
     }
 
     #[test]

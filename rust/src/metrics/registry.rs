@@ -1,0 +1,599 @@
+//! Live operational metrics: a dependency-free registry of named
+//! counters, gauges, and log2-bucketed histograms.
+//!
+//! Design goals, in order:
+//!
+//! 1. **Lock-cheap hot paths.** Every metric hands out a pre-registered
+//!    handle ([`Counter`], [`Gauge`], [`Histogram`]) wrapping
+//!    `Arc<AtomicU64>` cells. Recording is a relaxed atomic op — no
+//!    hashing, no map lookup, no lock. The registry's `Mutex` is taken
+//!    only at registration time and when a scrape snapshots.
+//! 2. **Idempotent registration.** Registering the same `(name, labels)`
+//!    pair twice returns a handle onto the *same* cells, so per-round
+//!    re-instrumentation (a fresh `FramePump` every mux round, say)
+//!    keeps counters cumulative instead of resetting them.
+//! 3. **No dependencies.** Cells are `std::sync::atomic`; snapshots are
+//!    plain structs rendered by [`crate::metrics::expo`].
+//!
+//! Naming convention (enforced by the `metric-naming` fsl-lint rule):
+//! every registered name matches `fsl_[a-z0-9_]+` and ends in a unit
+//! suffix — `_bytes`, `_total` (monotonic event counts), `_seconds`
+//! (histograms observed in nanoseconds, scaled at render time), or
+//! `_count` (dimensionless gauges/instantaneous counts).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of histogram buckets: bucket `i < 63` covers observations
+/// `<= 2^i`; bucket 63 is the overflow (+Inf) bucket.
+pub const HISTOGRAM_BUCKETS: usize = 64;
+
+/// What a histogram's raw `u64` observations mean, for rendering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    /// Dimensionless counts (bytes, items). Rendered as-is.
+    Count,
+    /// Observations are **nanoseconds**; exposition scales bucket
+    /// bounds and sums by 1e-9 so scrapes read SI seconds.
+    Seconds,
+}
+
+/// Which kind of cells a registry entry owns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+/// A monotonically increasing counter handle. Cheap to clone; all
+/// clones (and all registrations of the same name+labels) share cells.
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// A counter not attached to any registry (records go nowhere
+    /// visible). Used as the mismatched-kind fallback and in tests.
+    pub fn detached() -> Self {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins gauge handle.
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// A gauge not attached to any registry.
+    pub fn detached() -> Self {
+        Gauge(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if `v` is larger (high-water marks).
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement (concurrent saturation may transiently
+    /// undershoot; gauges here track approximate occupancy).
+    pub fn sub(&self, v: u64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(v);
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared histogram cells: 64 log2 buckets plus exact sum and count.
+#[derive(Debug)]
+pub struct HistoCells {
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl HistoCells {
+    fn new() -> Self {
+        HistoCells {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Index of the log2 bucket covering `v`: bucket `i` holds
+/// observations in `(2^(i-1), 2^i]` (bucket 0 holds `0..=1`), clamped
+/// into the final overflow bucket.
+pub fn bucket_index(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        (64 - (v - 1).leading_zeros() as usize).min(HISTOGRAM_BUCKETS - 1)
+    }
+}
+
+/// The inclusive upper bound of bucket `i`, or `None` for the overflow
+/// (+Inf) bucket.
+pub fn bucket_bound(i: usize) -> Option<u64> {
+    if i >= HISTOGRAM_BUCKETS - 1 {
+        None
+    } else {
+        Some(1u64 << i)
+    }
+}
+
+/// A log2-bucketed histogram handle.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    cells: Arc<HistoCells>,
+    unit: Unit,
+}
+
+impl Histogram {
+    /// A histogram not attached to any registry.
+    pub fn detached(unit: Unit) -> Self {
+        Histogram {
+            cells: Arc::new(HistoCells::new()),
+            unit,
+        }
+    }
+
+    /// Record one observation (raw units; nanoseconds for
+    /// [`Unit::Seconds`] histograms).
+    pub fn observe(&self, v: u64) {
+        let c = &self.cells;
+        c.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        c.sum.fetch_add(v, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a wall-clock duration (only meaningful for
+    /// [`Unit::Seconds`] histograms).
+    pub fn observe_duration(&self, d: std::time::Duration) {
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        self.observe(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.cells.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.cells.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn unit(&self) -> Unit {
+        self.unit
+    }
+
+    /// Estimate the `q`-quantile (`0.0..=1.0`) in raw units by a
+    /// nearest-rank walk over the buckets with linear interpolation
+    /// inside the landing bucket. Returns 0 for an empty histogram.
+    /// Accuracy is bounded by the log2 geometry: at most one octave.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.cells.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            if seen + n >= rank {
+                let (lo, hi) = match bucket_bound(i) {
+                    Some(hi) if i == 0 => (0.0, hi as f64),
+                    Some(hi) => ((hi / 2) as f64, hi as f64),
+                    // Overflow bucket: no upper bound; report its floor.
+                    None => return (1u64 << (HISTOGRAM_BUCKETS - 2)) as f64,
+                };
+                let into = (rank - seen) as f64 / n as f64;
+                return lo + (hi - lo) * into;
+            }
+            seen += n;
+        }
+        // Unreachable if count/buckets are consistent; be safe anyway.
+        0.0
+    }
+
+    /// Like [`Histogram::quantile`] but scaled to fractional
+    /// milliseconds for [`Unit::Seconds`] histograms.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        match self.unit {
+            Unit::Seconds => self.quantile(q) / 1e6,
+            Unit::Count => self.quantile(q),
+        }
+    }
+
+    fn snapshot_buckets(&self) -> [u64; HISTOGRAM_BUCKETS] {
+        std::array::from_fn(|i| self.cells.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+enum Cells {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    help: String,
+    cells: Cells,
+}
+
+/// The value half of a [`MetricSnapshot`].
+#[derive(Debug, Clone)]
+pub enum SnapshotValue {
+    Counter(u64),
+    Gauge(u64),
+    Histogram {
+        buckets: [u64; HISTOGRAM_BUCKETS],
+        sum: u64,
+        count: u64,
+        unit: Unit,
+    },
+}
+
+/// A point-in-time copy of one registry entry, ready for rendering by
+/// [`crate::metrics::expo`]. Snapshots are value copies — rendering
+/// never holds the registry lock.
+#[derive(Debug, Clone)]
+pub struct MetricSnapshot {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub help: String,
+    pub value: SnapshotValue,
+}
+
+/// A registry of named metrics. See the module docs for the design.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A fresh registry behind an `Arc`, the shape every holder wants.
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::new())
+    }
+
+    /// Register (or look up) an unlabelled counter.
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, &[], help)
+    }
+
+    /// Register (or look up) a labelled counter.
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Counter {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = find(&inner, name, labels) {
+            if let Cells::Counter(c) = &e.cells {
+                return c.clone();
+            }
+            // Kind mismatch: hand back detached cells rather than
+            // panicking in instrumentation code.
+            return Counter::detached();
+        }
+        let c = Counter::detached();
+        inner.push(entry(name, labels, help, Cells::Counter(c.clone())));
+        c
+    }
+
+    /// Register (or look up) an unlabelled gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, &[], help)
+    }
+
+    /// Register (or look up) a labelled gauge.
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)], help: &str) -> Gauge {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = find(&inner, name, labels) {
+            if let Cells::Gauge(g) = &e.cells {
+                return g.clone();
+            }
+            return Gauge::detached();
+        }
+        let g = Gauge::detached();
+        inner.push(entry(name, labels, help, Cells::Gauge(g.clone())));
+        g
+    }
+
+    /// Register (or look up) an unlabelled histogram.
+    pub fn histogram(&self, name: &str, help: &str, unit: Unit) -> Histogram {
+        self.histogram_with(name, &[], help, unit)
+    }
+
+    /// Register (or look up) a labelled histogram.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        unit: Unit,
+    ) -> Histogram {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = find(&inner, name, labels) {
+            if let Cells::Histogram(h) = &e.cells {
+                return h.clone();
+            }
+            return Histogram::detached(unit);
+        }
+        let h = Histogram::detached(unit);
+        inner.push(entry(name, labels, help, Cells::Histogram(h.clone())));
+        h
+    }
+
+    /// Copy every entry's current value out. Sorted by (name, labels)
+    /// so renderings are deterministic regardless of registration
+    /// order.
+    pub fn snapshot(&self) -> Vec<MetricSnapshot> {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out: Vec<MetricSnapshot> = inner
+            .iter()
+            .map(|e| MetricSnapshot {
+                name: e.name.clone(),
+                labels: e.labels.clone(),
+                help: e.help.clone(),
+                value: match &e.cells {
+                    Cells::Counter(c) => SnapshotValue::Counter(c.get()),
+                    Cells::Gauge(g) => SnapshotValue::Gauge(g.get()),
+                    Cells::Histogram(h) => SnapshotValue::Histogram {
+                        buckets: h.snapshot_buckets(),
+                        sum: h.sum(),
+                        count: h.count(),
+                        unit: h.unit(),
+                    },
+                },
+            })
+            .collect();
+        out.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+        out
+    }
+
+    /// Number of registered entries (test/diagnostic aid).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn find<'a>(entries: &'a [Entry], name: &str, labels: &[(&str, &str)]) -> Option<&'a Entry> {
+    entries.iter().find(|e| {
+        e.name == name
+            && e.labels.len() == labels.len()
+            && e.labels
+                .iter()
+                .zip(labels)
+                .all(|((k, v), (lk, lv))| k == lk && v == lv)
+    })
+}
+
+fn entry(name: &str, labels: &[(&str, &str)], help: &str, cells: Cells) -> Entry {
+    Entry {
+        name: name.to_string(),
+        labels: labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect(),
+        help: help.to_string(),
+        cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_exact_at_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1 << 20), 20);
+        assert_eq!(bucket_index((1 << 20) + 1), 21);
+        assert_eq!(bucket_index(u64::MAX), HISTOGRAM_BUCKETS - 1);
+        // Every value lands in the bucket whose bound covers it.
+        for v in [0u64, 1, 2, 7, 100, 4096, 1 << 40] {
+            let i = bucket_index(v);
+            if let Some(hi) = bucket_bound(i) {
+                assert!(v <= hi, "v={v} above bound of bucket {i}");
+            }
+            if i > 0 {
+                let lo = bucket_bound(i - 1).unwrap();
+                assert!(v > lo, "v={v} below bucket {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn registration_is_idempotent_and_shares_cells() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("fsl_test_frames_total", "help");
+        let b = reg.counter("fsl_test_frames_total", "other help ignored");
+        a.add(3);
+        b.add(4);
+        assert_eq!(a.get(), 7);
+        assert_eq!(reg.len(), 1);
+
+        let g1 = reg.gauge_with("fsl_test_held_bytes", &[("party", "0")], "h");
+        let g2 = reg.gauge_with("fsl_test_held_bytes", &[("party", "1")], "h");
+        g1.set(10);
+        g2.set(20);
+        assert_eq!(g1.get(), 10);
+        assert_eq!(g2.get(), 20);
+        assert_eq!(reg.len(), 3);
+
+        // Kind mismatch hands back detached cells, never panics.
+        let wrong = reg.gauge("fsl_test_frames_total", "h");
+        wrong.set(999);
+        assert_eq!(a.get(), 7);
+    }
+
+    #[test]
+    fn gauge_ops() {
+        let g = Gauge::detached();
+        g.set(5);
+        g.add(3);
+        assert_eq!(g.get(), 8);
+        g.sub(10);
+        assert_eq!(g.get(), 0);
+        g.set_max(4);
+        g.set_max(2);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn histogram_quantiles_walk_buckets() {
+        let h = Histogram::detached(Unit::Count);
+        // 100 observations of 100 (bucket 7: (64,128]).
+        for _ in 0..100 {
+            h.observe(100);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 10_000);
+        let p50 = h.quantile(0.5);
+        assert!((64.0..=128.0).contains(&p50), "p50={p50}");
+        // Bimodal: add 100 observations of 1000 (bucket 10: (512,1024]).
+        for _ in 0..100 {
+            h.observe(1000);
+        }
+        let p25 = h.quantile(0.25);
+        let p99 = h.quantile(0.99);
+        assert!((64.0..=128.0).contains(&p25), "p25={p25}");
+        assert!((512.0..=1024.0).contains(&p99), "p99={p99}");
+        assert_eq!(h.quantile(0.0), h.quantile(0.001));
+        // Empty histogram.
+        assert_eq!(Histogram::detached(Unit::Count).quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn quantile_ms_scales_seconds_unit() {
+        let h = Histogram::detached(Unit::Seconds);
+        h.observe(2_000_000); // 2 ms in ns, bucket (2^20, 2^21]
+        let p50 = h.quantile_ms(0.5);
+        assert!((1.0..=2.2).contains(&p50), "p50_ms={p50}");
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_complete() {
+        let reg = MetricsRegistry::new();
+        reg.counter("fsl_z_last_total", "z").inc();
+        reg.gauge("fsl_a_first_count", "a").set(7);
+        let h = reg.histogram("fsl_m_mid_seconds", "m", Unit::Seconds);
+        h.observe(5);
+        let snaps = reg.snapshot();
+        let names: Vec<&str> = snaps.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["fsl_a_first_count", "fsl_m_mid_seconds", "fsl_z_last_total"]
+        );
+        match &snaps[1].value {
+            SnapshotValue::Histogram {
+                sum, count, unit, ..
+            } => {
+                assert_eq!(*sum, 5);
+                assert_eq!(*count, 1);
+                assert_eq!(*unit, Unit::Seconds);
+            }
+            other => panic!("expected histogram, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn concurrent_hammering_keeps_exact_totals() {
+        const THREADS: usize = 8;
+        const PER_THREAD: u64 = 10_000;
+        let reg = MetricsRegistry::shared();
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let reg = reg.clone();
+                s.spawn(move || {
+                    // Half the threads register their own handles to
+                    // exercise idempotent lookup under contention.
+                    let c = reg.counter("fsl_conc_events_total", "h");
+                    let h = reg.histogram("fsl_conc_lat_seconds", "h", Unit::Seconds);
+                    let g = reg.gauge("fsl_conc_peak_count", "h");
+                    for i in 0..PER_THREAD {
+                        c.inc();
+                        h.observe(i % 1024);
+                        g.set_max(t as u64 * PER_THREAD + i);
+                    }
+                });
+            }
+        });
+        let total = THREADS as u64 * PER_THREAD;
+        let snaps = reg.snapshot();
+        let counter = snaps
+            .iter()
+            .find(|s| s.name == "fsl_conc_events_total")
+            .unwrap();
+        match counter.value {
+            SnapshotValue::Counter(v) => assert_eq!(v, total),
+            ref other => panic!("expected counter, got {other:?}"),
+        }
+        let histo = snaps
+            .iter()
+            .find(|s| s.name == "fsl_conc_lat_seconds")
+            .unwrap();
+        match &histo.value {
+            SnapshotValue::Histogram { buckets, count, .. } => {
+                assert_eq!(*count, total);
+                assert_eq!(buckets.iter().sum::<u64>(), total);
+            }
+            other => panic!("expected histogram, got {other:?}"),
+        }
+        let peak = snaps
+            .iter()
+            .find(|s| s.name == "fsl_conc_peak_count")
+            .unwrap();
+        match peak.value {
+            SnapshotValue::Gauge(v) => assert_eq!(v, total - 1),
+            ref other => panic!("expected gauge, got {other:?}"),
+        }
+    }
+}

@@ -19,10 +19,11 @@
 //! oldest span while counting the loss in [`TraceRecorder::dropped`].
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::metrics::json;
+use crate::metrics::registry::{Histogram, MetricsRegistry, Unit};
 
 /// Default ring capacity: generous for any realistic round (a 128-way
 /// sharded eval across five phases is still well under 1k spans).
@@ -164,6 +165,93 @@ pub struct SpanStart {
     at_ns: u64,
 }
 
+/// All phases, indexed by [`Phase::to_byte`]. Keep in sync with the
+/// byte codec above.
+const ALL_PHASES: [Phase; 7] = [
+    Phase::Keygen,
+    Phase::Upload,
+    Phase::Eval,
+    Phase::Merge,
+    Phase::Reply,
+    Phase::Accept,
+    Phase::Ingest,
+];
+
+/// Ceiling on distinct `worker` labels for the per-worker eval
+/// histogram — indices beyond this clamp into the last slot, bounding
+/// scrape cardinality regardless of engine width.
+const MAX_WORKER_LABELS: usize = 128;
+
+/// Registry histograms fed from span completions: one per-phase
+/// latency histogram family (`fsl_phase_seconds{phase=...}`) plus a
+/// lazily grown per-shard-worker family for Eval spans
+/// (`fsl_eval_worker_seconds{worker=N}`).
+///
+/// The span recorder owns the clock, so attaching this to a
+/// [`TraceRecorder`] is how the protocol engines' latencies reach the
+/// scrape endpoint without `protocol/` ever calling a time source —
+/// the `determinism` lint's no-clocks rule stays intact.
+#[derive(Clone)]
+pub struct PhaseMetrics {
+    registry: Arc<MetricsRegistry>,
+    phases: [Histogram; ALL_PHASES.len()],
+    eval_workers: Arc<Mutex<Vec<Option<Histogram>>>>,
+}
+
+impl std::fmt::Debug for PhaseMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PhaseMetrics").finish()
+    }
+}
+
+impl PhaseMetrics {
+    /// Register the per-phase histogram family on `registry` and hand
+    /// back the recording handle set.
+    pub fn register(registry: &Arc<MetricsRegistry>) -> Self {
+        let phases = std::array::from_fn(|i| {
+            registry.histogram_with(
+                "fsl_phase_seconds",
+                &[("phase", ALL_PHASES[i].as_str())],
+                "Span latency per round phase",
+                Unit::Seconds,
+            )
+        });
+        PhaseMetrics {
+            registry: registry.clone(),
+            phases,
+            eval_workers: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Feed one completed span into the histograms.
+    fn observe(&self, span: &Span) {
+        self.phases[span.phase.to_byte() as usize].observe(span.dur_ns);
+        if span.phase == Phase::Eval {
+            if let Some(w) = span.worker {
+                self.observe_worker(w as usize, span.dur_ns);
+            }
+        }
+    }
+
+    fn observe_worker(&self, worker: usize, dur_ns: u64) {
+        let idx = worker.min(MAX_WORKER_LABELS - 1);
+        let mut cache = self.eval_workers.lock().unwrap_or_else(|e| e.into_inner());
+        if cache.len() <= idx {
+            cache.resize(idx + 1, None);
+        }
+        let h = cache[idx].get_or_insert_with(|| {
+            let label = idx.to_string();
+            self.registry.histogram_with(
+                "fsl_eval_worker_seconds",
+                &[("worker", label.as_str())],
+                "Eval span latency per shard worker",
+                Unit::Seconds,
+            )
+        });
+        h.observe(dur_ns);
+    }
+}
+
 struct Inner {
     epoch: Instant,
     spans: VecDeque<Span>,
@@ -176,6 +264,10 @@ struct Inner {
 pub struct TraceRecorder {
     capacity: usize,
     inner: Mutex<Inner>,
+    /// Optional live-metrics tap: when attached, every completed span
+    /// also lands in the registry histograms. Cumulative across rounds
+    /// ([`TraceRecorder::reset`] does not touch it).
+    metrics: OnceLock<PhaseMetrics>,
 }
 
 impl std::fmt::Debug for TraceRecorder {
@@ -196,7 +288,14 @@ impl TraceRecorder {
                 spans: VecDeque::new(),
                 dropped: 0,
             }),
+            metrics: OnceLock::new(),
         }
+    }
+
+    /// Tee every future span into `metrics` histograms (first call
+    /// wins). See [`PhaseMetrics`].
+    pub fn attach_metrics(&self, metrics: PhaseMetrics) {
+        let _ = self.metrics.set(metrics);
     }
 
     pub fn shared(capacity: usize) -> Arc<Self> {
@@ -231,23 +330,34 @@ impl TraceRecorder {
 
     /// Close `start` as a `phase` span for `party` and record it.
     pub fn end(&self, start: SpanStart, phase: Phase, party: Party, worker: Option<u32>) {
-        let mut g = self.lock();
-        let now = g.epoch.elapsed().as_nanos() as u64;
-        let span = Span {
-            phase,
-            party,
-            worker,
-            start_ns: start.at_ns,
-            dur_ns: now.saturating_sub(start.at_ns),
+        let span = {
+            let mut g = self.lock();
+            let now = g.epoch.elapsed().as_nanos() as u64;
+            let span = Span {
+                phase,
+                party,
+                worker,
+                start_ns: start.at_ns,
+                dur_ns: now.saturating_sub(start.at_ns),
+            };
+            push(&mut g, self.capacity, span);
+            span
         };
-        push(&mut g, self.capacity, span);
+        if let Some(m) = self.metrics.get() {
+            m.observe(&span);
+        }
     }
 
     /// Record a pre-built span (used when replaying spans received from
     /// a remote party into the driver's stream).
     pub fn record(&self, span: Span) {
-        let mut g = self.lock();
-        push(&mut g, self.capacity, span);
+        {
+            let mut g = self.lock();
+            push(&mut g, self.capacity, span);
+        }
+        if let Some(m) = self.metrics.get() {
+            m.observe(&span);
+        }
     }
 
     /// Remove and return every recorded span, oldest first. The loss
@@ -327,7 +437,14 @@ impl TraceSink {
 /// time base only in-proc, so compare phase *durations* across parties,
 /// not absolute offsets.
 pub fn chrome_trace_json(spans: &[Span]) -> String {
-    let mut events: Vec<String> = Vec::with_capacity(spans.len() + 3);
+    chrome_trace_json_with(spans, &[])
+}
+
+/// [`chrome_trace_json`] with caller-supplied extra events appended
+/// (pre-rendered JSON objects, e.g. [`counter_event`] points for
+/// registry gauges).
+pub fn chrome_trace_json_with(spans: &[Span], extra: &[String]) -> String {
+    let mut events: Vec<String> = Vec::with_capacity(spans.len() + extra.len() + 3);
     for party in [Party::Client, Party::S0, Party::S1] {
         let mut meta = json::JsonObj::new();
         meta.field_str("ph", "M")
@@ -351,7 +468,59 @@ pub fn chrome_trace_json(spans: &[Span]) -> String {
             .field_u64("tid", s.worker.map_or(0, |w| u64::from(w) + 1));
         events.push(ev.finish());
     }
+    events.extend(active_span_counters(spans));
+    events.extend(extra.iter().cloned());
     json::array(events)
+}
+
+/// One Perfetto counter-track point: `{"ph":"C"}` with a single
+/// `value` series, on the party's `pid` lane. `ts_us` is microseconds
+/// from that party's round epoch, like the span events.
+pub fn counter_event(name: &str, ts_us: f64, party: Party, value: u64) -> String {
+    let mut ev = json::JsonObj::new();
+    ev.field_str("name", name)
+        .field_str("ph", "C")
+        .field_str("cat", "fsl")
+        .field_f64("ts", ts_us, 3)
+        .field_u64("pid", party.pid())
+        .field_u64("tid", 0)
+        .field_raw(
+            "args",
+            &json::JsonObj::new().field_u64("value", value).finish(),
+        );
+    ev.finish()
+}
+
+/// Derive a per-party "active spans" counter track from the span list:
+/// +1 at each span start, -1 at each end, emitted as cumulative
+/// [`counter_event`] points so gauge timelines render alongside the
+/// phase spans without any extra wire traffic.
+fn active_span_counters(spans: &[Span]) -> Vec<String> {
+    let mut out = Vec::new();
+    for party in [Party::Client, Party::S0, Party::S1] {
+        // (ts_ns, delta), end edges before start edges at equal ts so
+        // the track never over-counts at span boundaries.
+        let mut edges: Vec<(u64, i64)> = Vec::new();
+        for s in spans.iter().filter(|s| s.party == party) {
+            edges.push((s.start_ns, 1));
+            edges.push((s.start_ns.saturating_add(s.dur_ns), -1));
+        }
+        if edges.is_empty() {
+            continue;
+        }
+        edges.sort_by_key(|&(ts, delta)| (ts, delta));
+        let mut active: i64 = 0;
+        for (ts, delta) in edges {
+            active += delta;
+            out.push(counter_event(
+                "fsl_active_spans_count",
+                ts as f64 / 1_000.0,
+                party,
+                u64::try_from(active).unwrap_or(0),
+            ));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -451,5 +620,87 @@ mod tests {
         assert!(doc.contains("\"ts\":1.500"), "{doc}");
         assert!(doc.contains("\"pid\":2,\"tid\":3"), "{doc}");
         assert!(doc.contains("process_name"), "{doc}");
+    }
+
+    /// Counter-track events ride the same document: one active-spans
+    /// step track per party plus caller-appended gauge points.
+    #[test]
+    fn chrome_trace_includes_counter_tracks() {
+        let spans = vec![
+            Span {
+                phase: Phase::Eval,
+                party: Party::S0,
+                worker: Some(0),
+                start_ns: 1_000,
+                dur_ns: 4_000,
+            },
+            Span {
+                phase: Phase::Eval,
+                party: Party::S0,
+                worker: Some(1),
+                start_ns: 2_000,
+                dur_ns: 1_000,
+            },
+        ];
+        let extra = vec![counter_event(
+            "fsl_trace_spans_dropped_count",
+            0.0,
+            Party::Client,
+            7,
+        )];
+        let doc = chrome_trace_json_with(&spans, &extra);
+        assert!(json::validate(&doc), "{doc}");
+        assert!(doc.contains("\"ph\":\"C\""), "{doc}");
+        assert!(doc.contains("\"name\":\"fsl_active_spans_count\""), "{doc}");
+        // Overlap window [2000,3000]ns has two active spans.
+        assert!(doc.contains("\"args\":{\"value\":2}"), "{doc}");
+        // All spans closed: the track returns to zero.
+        assert!(doc.contains("\"args\":{\"value\":0}"), "{doc}");
+        assert!(
+            doc.contains("\"name\":\"fsl_trace_spans_dropped_count\""),
+            "{doc}"
+        );
+        assert!(doc.contains("\"args\":{\"value\":7}"), "{doc}");
+    }
+
+    /// Spans teed into an attached `PhaseMetrics` land in the phase and
+    /// per-worker histograms; `reset` leaves them cumulative.
+    #[test]
+    fn attached_metrics_observe_spans() {
+        let reg = MetricsRegistry::shared();
+        let rec = TraceRecorder::new(16);
+        rec.attach_metrics(PhaseMetrics::register(&reg));
+        let s = rec.begin();
+        rec.end(s, Phase::Eval, Party::S0, Some(2));
+        rec.record(Span {
+            phase: Phase::Merge,
+            party: Party::S0,
+            worker: None,
+            start_ns: 0,
+            dur_ns: 5_000,
+        });
+        rec.reset();
+        let eval = reg.histogram_with(
+            "fsl_phase_seconds",
+            &[("phase", "eval")],
+            "",
+            Unit::Seconds,
+        );
+        let merge = reg.histogram_with(
+            "fsl_phase_seconds",
+            &[("phase", "merge")],
+            "",
+            Unit::Seconds,
+        );
+        let w2 = reg.histogram_with(
+            "fsl_eval_worker_seconds",
+            &[("worker", "2")],
+            "",
+            Unit::Seconds,
+        );
+        assert_eq!(eval.count(), 1);
+        assert_eq!(merge.count(), 1);
+        assert_eq!(merge.sum(), 5_000);
+        assert_eq!(w2.count(), 1);
     }
 }

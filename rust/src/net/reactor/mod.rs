@@ -36,11 +36,55 @@
 //! through the existing blocking [`crate::net::transport`] handles,
 //! whose peers always drain their own ends through a pump of their own.
 
+use crate::metrics::registry::{Counter, Gauge, MetricsRegistry};
 use crate::protocol::msg;
 use anyhow::{Context, Result};
 use std::io::Read;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
+
+/// Live-registry handles for one pump, attached via
+/// [`FramePump::set_metrics`]. Registration is idempotent per
+/// registry, so re-attaching each mux round keeps the counters
+/// cumulative while gauges track the current pump.
+#[derive(Clone)]
+pub struct PumpMetrics {
+    open_sources: Gauge,
+    parked_bytes: Gauge,
+    inflight_peak: Gauge,
+    frames: Counter,
+    frame_bytes: Counter,
+    polls: Counter,
+}
+
+impl PumpMetrics {
+    /// Register (or look up) the pump metric family on `registry`.
+    pub fn register(registry: &MetricsRegistry) -> Self {
+        PumpMetrics {
+            open_sources: registry.gauge(
+                "fsl_pump_open_sources_count",
+                "Streams currently registered on the frame pump",
+            ),
+            parked_bytes: registry.gauge(
+                "fsl_pump_parked_bytes",
+                "Declared payload bytes waiting for budget headroom",
+            ),
+            inflight_peak: registry.gauge(
+                "fsl_pump_inflight_peak_bytes",
+                "High-water mark of summed in-progress payload buffers",
+            ),
+            frames: registry.counter(
+                "fsl_pump_frames_total",
+                "Completed frames handed to the caller",
+            ),
+            frame_bytes: registry.counter(
+                "fsl_pump_frame_bytes",
+                "Payload bytes of completed frames",
+            ),
+            polls: registry.counter("fsl_pump_polls_total", "Pump poll batches"),
+        }
+    }
+}
 
 /// How long one idle sweep sleeps before re-polling its sources. Short
 /// enough that handshake latency stays imperceptible, long enough that
@@ -101,6 +145,7 @@ pub struct FramePump {
     budget: usize,
     in_flight: usize,
     peak_in_flight: usize,
+    metrics: Option<PumpMetrics>,
 }
 
 impl FramePump {
@@ -114,6 +159,36 @@ impl FramePump {
             budget: budget.max(msg::FRAME_HEADER_LEN),
             in_flight: 0,
             peak_in_flight: 0,
+            metrics: None,
+        }
+    }
+
+    /// Attach live-registry instrumentation (see [`PumpMetrics`]).
+    pub fn set_metrics(&mut self, metrics: PumpMetrics) {
+        metrics.open_sources.set(self.sources.len() as u64);
+        metrics.inflight_peak.set_max(self.peak_in_flight as u64);
+        self.metrics = Some(metrics);
+    }
+
+    fn note_sources(&self) {
+        if let Some(m) = &self.metrics {
+            m.open_sources.set(self.sources.len() as u64);
+        }
+    }
+
+    fn note_parked(&self, len: usize, entering: bool) {
+        if let Some(m) = &self.metrics {
+            if entering {
+                m.parked_bytes.add(len as u64);
+            } else {
+                m.parked_bytes.sub(len as u64);
+            }
+        }
+    }
+
+    fn note_peak(&self) {
+        if let Some(m) = &self.metrics {
+            m.inflight_peak.set_max(self.peak_in_flight as u64);
         }
     }
 
@@ -135,6 +210,7 @@ impl FramePump {
             deadline,
             paused: false,
         });
+        self.note_sources();
         Ok(())
     }
 
@@ -144,9 +220,14 @@ impl FramePump {
     pub fn deregister(&mut self, tag: u64) -> Option<TcpStream> {
         let at = self.sources.iter().position(|s| s.tag == tag)?;
         let src = self.sources.swap_remove(at);
-        if let ReadState::Payload { buf, .. } = &src.state {
-            self.in_flight = self.in_flight.saturating_sub(buf.len());
+        match &src.state {
+            ReadState::Payload { buf, .. } => {
+                self.in_flight = self.in_flight.saturating_sub(buf.len());
+            }
+            ReadState::Parked { len } => self.note_parked(*len, false),
+            ReadState::Header { .. } => {}
         }
+        self.note_sources();
         let _ = src.stream.set_nonblocking(false);
         Some(src.stream)
     }
@@ -192,6 +273,9 @@ impl FramePump {
     /// expired, or completed frames are reported once each; closed and
     /// expired sources are dropped from the pump.
     pub fn poll(&mut self, max_wait: Duration) -> Vec<PumpEvent> {
+        if let Some(m) = &self.metrics {
+            m.polls.inc();
+        }
         let deadline = Instant::now() + max_wait;
         loop {
             let events = self.sweep();
@@ -225,6 +309,8 @@ impl FramePump {
                         ReadState::Payload { buf: vec![0u8; len], got: 0 };
                     self.in_flight += len;
                     self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+                    self.note_parked(len, false);
+                    self.note_peak();
                 }
             }
             let fate = if self.sources[i].paused {
@@ -306,10 +392,12 @@ impl FramePump {
                     }
                     if self.in_flight + len > self.budget {
                         self.sources[i].state = ReadState::Parked { len };
+                        self.note_parked(len, true);
                         return SourceFate::Keep;
                     }
                     self.in_flight += len;
                     self.peak_in_flight = self.peak_in_flight.max(self.in_flight);
+                    self.note_peak();
                     self.sources[i].state =
                         ReadState::Payload { buf: vec![0u8; len], got: 0 };
                 }
@@ -344,6 +432,10 @@ impl FramePump {
                     let len = buf.len();
                     self.in_flight = self.in_flight.saturating_sub(len);
                     *emitted += len;
+                    if let Some(m) = &self.metrics {
+                        m.frames.inc();
+                        m.frame_bytes.add(len as u64);
+                    }
                     events.push(PumpEvent::Frame { tag: self.sources[i].tag, payload: buf });
                     if *emitted >= self.budget {
                         return SourceFate::Keep;
@@ -356,9 +448,14 @@ impl FramePump {
 
     fn drop_source(&mut self, i: usize) {
         let src = self.sources.swap_remove(i);
-        if let ReadState::Payload { buf, .. } = &src.state {
-            self.in_flight = self.in_flight.saturating_sub(buf.len());
+        match &src.state {
+            ReadState::Payload { buf, .. } => {
+                self.in_flight = self.in_flight.saturating_sub(buf.len());
+            }
+            ReadState::Parked { len } => self.note_parked(*len, false),
+            ReadState::Header { .. } => {}
         }
+        self.note_sources();
     }
 }
 
@@ -589,6 +686,47 @@ mod tests {
             "{ev:?}"
         );
         drop(stream);
+    }
+
+    /// Attached `PumpMetrics` track sources, frames, bytes, and the
+    /// parked/peak gauges across a park-and-release cycle.
+    #[test]
+    fn pump_metrics_follow_register_park_and_frames() {
+        let reg = MetricsRegistry::shared();
+        let (mut a_w, a_r) = pair();
+        let (mut b_w, b_r) = pair();
+        let mut pump = FramePump::new(1000);
+        pump.set_metrics(PumpMetrics::register(&reg));
+        pump.register(a_r, 1, None).unwrap();
+        pump.register(b_r, 2, None).unwrap();
+        assert_eq!(reg.gauge("fsl_pump_open_sources_count", "").get(), 2);
+
+        // a stalls mid-frame holding 800 budget bytes; b's 800-byte
+        // frame must park.
+        let fa = msg::frame(&vec![0xAA; 800]);
+        a_w.write_all(&fa[..msg::FRAME_HEADER_LEN + 10]).unwrap();
+        b_w.write_all(&msg::frame(&vec![0xBB; 800])).unwrap();
+        assert!(pump.poll(Duration::from_millis(120)).is_empty());
+        assert_eq!(reg.gauge("fsl_pump_parked_bytes", "").get(), 800);
+
+        a_w.write_all(&fa[msg::FRAME_HEADER_LEN + 10..]).unwrap();
+        let mut frames = 0;
+        while frames < 2 {
+            for e in pump.poll(Duration::from_secs(2)) {
+                assert!(matches!(e, PumpEvent::Frame { .. }), "{e:?}");
+                frames += 1;
+            }
+        }
+        assert_eq!(reg.counter("fsl_pump_frames_total", "").get(), 2);
+        assert_eq!(reg.counter("fsl_pump_frame_bytes", "").get(), 1600);
+        assert_eq!(reg.gauge("fsl_pump_parked_bytes", "").get(), 0);
+        let peak = reg.gauge("fsl_pump_inflight_peak_bytes", "").get();
+        assert!((800..=1000).contains(&peak), "{peak}");
+        assert!(reg.counter("fsl_pump_polls_total", "").get() >= 2);
+
+        let _ = pump.deregister(1);
+        let _ = pump.deregister(2);
+        assert_eq!(reg.gauge("fsl_pump_open_sources_count", "").get(), 0);
     }
 
     #[test]

@@ -150,6 +150,9 @@ pub const TRANSPORT_MAGIC: [u8; 4] = *b"FSLT";
 /// upload deadlines to round commands and per-client outcomes to round
 /// replies; version 3 added multiplexed client links ([`Role::ClientMux`])
 /// carrying a contiguous range of virtual clients over one socket.
+/// (The [`Role::Stats`] scrape role was added under version 3 without a
+/// bump: it introduces a new role *tag*, which old servers already
+/// reject cleanly as unknown, and changes no existing encoding.)
 pub const TRANSPORT_VERSION: u16 = 3;
 
 /// What a dialling connection claims to be.
@@ -178,6 +181,12 @@ pub enum Role {
     /// belongs to. This is how a loadgen-scale cohort (10^4–10^6 virtual
     /// clients) fits a bounded socket pool instead of one fd per client.
     ClientMux { lo: u32, count: u32 },
+    /// A metrics scrape connection (`fsl stats`). Served out-of-band by
+    /// the standalone server's stats responder — never enters the round
+    /// state machine, so a scrape cannot perturb lanes mid-round. The
+    /// ack echoes the *dialler's* `party` byte (a scraper addresses a
+    /// socket, not a party).
+    Stats,
 }
 
 /// The versioned handshake a dialler opens every connection with: magic,
@@ -221,6 +230,7 @@ impl Hello {
                 out.extend_from_slice(&lo.to_le_bytes());
                 out.extend_from_slice(&count.to_le_bytes());
             }
+            Role::Stats => out.push(4),
         }
         out
     }
@@ -269,6 +279,7 @@ impl Hello {
                 lo: read_u32(bytes, 8)?,
                 count: read_u32(bytes, 12)?,
             },
+            4 => Role::Stats,
             t => bail!("unknown handshake role tag {t}"),
         };
         Ok(Hello { party, role })
@@ -434,6 +445,7 @@ mod tests {
             Hello { party: 1, role: Role::Client { id: 3 } },
             Hello { party: 0, role: Role::Peer },
             Hello { party: 1, role: Role::ClientMux { lo: 4096, count: 1 << 16 } },
+            Hello { party: 0, role: Role::Stats },
         ] {
             assert_eq!(Hello::decode(&hello.encode()).unwrap(), hello);
         }

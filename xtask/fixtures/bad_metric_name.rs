@@ -1,0 +1,18 @@
+//! Lint fixture: metric registration literals that violate the naming
+//! convention (`fsl_[a-z0-9_]+` plus a `_bytes|_total|_seconds|_count`
+//! unit suffix), alongside one compliant name and one justified legacy
+//! escape hatch.
+
+pub fn register(reg: &Registry) -> Handles {
+    Handles {
+        // Wrong prefix: every family is namespaced under `fsl_`.
+        frames: reg.counter("frames_total", "frames moved through the pump"),
+        // No unit suffix: a reader cannot tell bytes from counts.
+        held: reg.gauge("fsl_held_window", "bytes parked in the commit window"),
+        // Uppercase breaks the `fsl_[a-z0-9_]+` shape.
+        rounds: reg.histogram("fsl_Round_seconds", "round wall time", Unit::Seconds),
+        // lint: allow(metric-naming) — grandfathered dashboard family, renamed when the collector migrates
+        legacy: reg.counter("legacy_frames", "pre-convention family"),
+        ok: reg.counter("fsl_frames_total", "frames moved through the pump"),
+    }
+}

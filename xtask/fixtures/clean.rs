@@ -16,6 +16,11 @@ pub fn decode_items(bytes: &[u8]) -> Option<Vec<u8>> {
     Some(out)
 }
 
+pub fn register_metrics(reg: &Registry) -> Counter {
+    // Convention-clean: `fsl_` prefix, lowercase body, unit suffix.
+    reg.counter("fsl_clean_frames_total", "frames moved by the fixture")
+}
+
 pub fn checked_head(v: &[u8]) -> u8 {
     // lint: allow(panic) — fixture demonstrating a justified escape hatch.
     v.first().copied().expect("fixture invariant: non-empty input")

@@ -5,7 +5,10 @@
 //! compares the newest datapoint against the one before it, and fails
 //! (exit 1) when a `_ms` metric regresses by more than [`MS_TOLERANCE`]
 //! (with an [`MS_FLOOR`] absolute floor so microsecond jitter on tiny
-//! timings cannot trip it) or when any `_bytes` metric grows at all —
+//! timings cannot trip it; quantile fields like the `loadgen_soak`
+//! curve's `p50_ms`/`p95_ms`/`p99_ms` get the wider
+//! [`QUANTILE_TOLERANCE`] because log2-bucketed quantiles move in whole
+//! octaves) or when any `_bytes` metric grows at all —
 //! wire bytes are deterministic, so any increase is a real protocol
 //! regression, not noise. Benches with fewer than two datapoints are
 //! skipped with a note; a missing history file is exit 2 (run the
@@ -24,6 +27,16 @@ const MS_TOLERANCE: f64 = 0.20;
 /// than this for the relative check to trip, so a 0.3 ms → 0.5 ms blip
 /// on a trivial timing does not fail CI.
 const MS_FLOOR: f64 = 2.0;
+
+/// Histogram-quantile fields ride a log2-bucket geometry: a reading sits
+/// on a bucket bound, so ordinary jitter can flip it a whole octave
+/// (×2) with no real regression underneath. These fields tolerate one
+/// octave plus the usual noise margin before gating.
+const QUANTILE_FIELDS: &[&str] = &["p50_ms", "p95_ms", "p99_ms"];
+
+/// Relative slowdown tolerated on [`QUANTILE_FIELDS`]: new > old × 2.2
+/// fails — anything past a clean octave flip.
+const QUANTILE_TOLERANCE: f64 = 1.2;
 
 // ---- minimal JSON value parser -----------------------------------------
 
@@ -295,7 +308,12 @@ fn compare(prev: &Datapoint, new: &Datapoint) -> Vec<String> {
             continue;
         };
         if key.ends_with("_ms") {
-            let over_rel = new_v > old_v * (1.0 + MS_TOLERANCE);
+            let tolerance = if QUANTILE_FIELDS.contains(&key.as_str()) {
+                QUANTILE_TOLERANCE
+            } else {
+                MS_TOLERANCE
+            };
+            let over_rel = new_v > old_v * (1.0 + tolerance);
             let over_abs = new_v - old_v > MS_FLOOR;
             if over_rel && over_abs {
                 regressions.push(format!(
@@ -303,7 +321,7 @@ fn compare(prev: &Datapoint, new: &Datapoint) -> Vec<String> {
                      (+{:.1}%, tolerance {:.0}%) [{} -> {}]",
                     new.bench,
                     (new_v / old_v - 1.0) * 100.0,
-                    MS_TOLERANCE * 100.0,
+                    tolerance * 100.0,
                     prev.git_rev,
                     new.git_rev,
                 ));
@@ -488,6 +506,34 @@ mod tests {
         ]
         .join("\n");
         assert!(diff_history(&hist).expect("parse").is_empty());
+    }
+
+    #[test]
+    fn soak_quantiles_tolerate_an_octave_but_not_more() {
+        // A clean bucket flip (×2) on a quantile field is quantisation,
+        // not regression — the wall_ms next to it still gates at 20%.
+        let hist = [
+            line("loadgen_soak", "aaa", &[("p95_ms", 40.0), ("p50_ms", 20.0)]),
+            line("loadgen_soak", "bbb", &[("p95_ms", 80.0), ("p50_ms", 40.0)]),
+        ]
+        .join("\n");
+        assert!(diff_history(&hist).expect("parse").is_empty());
+        // Past an octave (×2.3) the quantile gate trips.
+        let hist = [
+            line("loadgen_soak", "aaa", &[("p99_ms", 40.0)]),
+            line("loadgen_soak", "bbb", &[("p99_ms", 92.0)]),
+        ]
+        .join("\n");
+        let regs = diff_history(&hist).expect("parse");
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("p99_ms"), "{regs:?}");
+        // Non-quantile `_ms` fields on the same bench keep the tight gate.
+        let hist = [
+            line("loadgen_soak", "aaa", &[("wall_ms", 40.0)]),
+            line("loadgen_soak", "bbb", &[("wall_ms", 80.0)]),
+        ]
+        .join("\n");
+        assert_eq!(diff_history(&hist).expect("parse").len(), 1);
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! fsl-lint: the repo's invariant static-analysis pass, plus the
 //! `bench-diff` trajectory gate over `artifacts/HISTORY.jsonl`.
 //!
-//! Run as `cargo run -p xtask -- lint` (or `make lint`). Six rules over
-//! `rust/src/**`, enforced token-wise on comment/string-stripped source
-//! with `#[cfg(test)]` items excised:
+//! Run as `cargo run -p xtask -- lint` (or `make lint`). Seven rules
+//! over `rust/src/**`, enforced token-wise on comment/string-stripped
+//! source with `#[cfg(test)]` items excised:
 //!
 //! 1. **panic** — no `.unwrap()` / `.expect(` / `panic!(` /
 //!    `unreachable!(` in `protocol/`, `net/`, or the server-path
@@ -26,6 +26,12 @@
 //!    count that silently wraps on encode corrupts the frame three
 //!    layers away. Use `try_from` (or the codec's clamped `put_count`)
 //!    and justify the rare intentional narrowing with an allow marker.
+//! 7. **metric-naming** — every literal name handed to a
+//!    `MetricsRegistry` registration call (`.counter(` / `.gauge(` /
+//!    `.histogram(` and their `_with` forms) must match
+//!    `fsl_[a-z0-9_]+` and end in a unit suffix
+//!    (`_bytes`/`_total`/`_seconds`/`_count`), so scrape families stay
+//!    greppable and unit-honest across the whole tree.
 //!
 //! Escape hatch: a `// lint: allow(<rule>) — <justification>` comment on
 //! the flagged line or within the [`ALLOW_WINDOW`] lines above it
@@ -70,6 +76,22 @@ const DECODE_BOUND_FILES: &[&str] = &["protocol/msg.rs", "coordinator/wire.rs"];
 /// would corrupt) wire frames: counts must go through `try_from` or the
 /// codec's clamped `put_count`, never a bare `as` cast.
 const CAST_TRUNCATION_FILES: &[&str] = &["coordinator/wire.rs", "coordinator/runtime.rs"];
+
+/// Registration-call tokens whose first argument is a metric name. The
+/// `_with` forms are separate tokens because `.counter(` requires the
+/// opening paren immediately after the method name.
+const METRIC_REGISTRATION_TOKENS: &[&str] = &[
+    ".counter(",
+    ".counter_with(",
+    ".gauge(",
+    ".gauge_with(",
+    ".histogram(",
+    ".histogram_with(",
+];
+
+/// Every registered metric name must end with one of these, so a scrape
+/// reader can tell a byte meter from a latency histogram by name alone.
+const METRIC_UNIT_SUFFIXES: &[&str] = &["_bytes", "_total", "_seconds", "_count"];
 
 #[derive(Debug)]
 struct Violation {
@@ -405,7 +427,7 @@ fn flag(
     }
 }
 
-// ---- the six rules -----------------------------------------------------
+// ---- the seven rules ---------------------------------------------------
 
 fn rule_panic(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
     let scoped = file.starts_with("protocol/")
@@ -642,6 +664,63 @@ fn rule_cast_truncation(file: &str, pre: &Pre, out: &mut Vec<Violation>) {
     }
 }
 
+/// Why `name` violates the metric-naming convention, if it does.
+fn metric_name_error(name: &str) -> Option<String> {
+    let body_ok = name
+        .bytes()
+        .all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_');
+    if !name.starts_with("fsl_") || name.len() <= "fsl_".len() || !body_ok {
+        return Some(format!("metric name {name:?} must match `fsl_[a-z0-9_]+`"));
+    }
+    if !METRIC_UNIT_SUFFIXES.iter().any(|s| name.ends_with(s)) {
+        return Some(format!(
+            "metric name {name:?} lacks a unit suffix (_bytes|_total|_seconds|_count)"
+        ));
+    }
+    None
+}
+
+/// Rule 7: registration literals must follow the naming convention. Call
+/// sites are located in the excised text (so comments, strings and test
+/// items cannot fake one); the literal itself is read back from the raw
+/// source, which the preprocessing kept byte-aligned. Non-literal first
+/// arguments are skipped — a dynamic name flows through a helper whose
+/// own literal call sites are linted instead.
+fn rule_metric_naming(file: &str, src: &str, pre: &Pre, out: &mut Vec<Violation>) {
+    let hay = pre.excised.as_bytes();
+    let raw = src.as_bytes();
+    for tok in METRIC_REGISTRATION_TOKENS {
+        let mut from = 0usize;
+        while let Some(pos) = find_sub(hay, tok.as_bytes(), from) {
+            from = pos + 1;
+            let mut j = pos + tok.len();
+            while j < raw.len() && raw[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if raw.get(j) != Some(&b'"') {
+                continue;
+            }
+            let start = j + 1;
+            let mut end = start;
+            while end < raw.len() && raw[end] != b'"' && raw[end] != b'\n' {
+                end += 1;
+            }
+            let name = String::from_utf8_lossy(&raw[start..end]);
+            if let Some(msg) = metric_name_error(&name) {
+                let line = line_of(&pre.line_starts, pos);
+                flag(
+                    out,
+                    pre,
+                    file,
+                    line,
+                    "metric-naming",
+                    format!("{msg} — rename it, or add `// lint: allow(metric-naming) — <why>`"),
+                );
+            }
+        }
+    }
+}
+
 // ---- driver ------------------------------------------------------------
 
 fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
@@ -653,6 +732,7 @@ fn lint_file(rel: &str, src: &str) -> Vec<Violation> {
     rule_determinism(rel, &pre, &mut out);
     rule_deprecated(rel, &pre, &mut out);
     rule_cast_truncation(rel, &pre, &mut out);
+    rule_metric_naming(rel, src, &pre, &mut out);
     out
 }
 
@@ -747,7 +827,7 @@ fn main() -> ExitCode {
         Ok(vs) if vs.is_empty() => {
             println!(
                 "lint: rust/src clean (panic, secret-debug, decode-bounds, determinism, \
-                 deprecated, cast-truncation)"
+                 deprecated, cast-truncation, metric-naming)"
             );
             ExitCode::SUCCESS
         }
@@ -884,6 +964,37 @@ mod tests {
     }
 
     #[test]
+    fn fixture_bad_metric_names_are_rejected() {
+        let vs = lint_file(
+            "metrics/example.rs",
+            include_str!("../fixtures/bad_metric_name.rs"),
+        );
+        let flagged: Vec<_> = vs.iter().filter(|v| v.rule == "metric-naming").collect();
+        assert_eq!(flagged.len(), 3, "{vs:?}");
+        assert!(
+            flagged.iter().any(|v| v.msg.contains("unit suffix")),
+            "{vs:?}"
+        );
+        // The compliant name and the justified legacy allow are silent.
+        assert!(!vs.iter().any(|v| v.msg.contains("fsl_frames_total")), "{vs:?}");
+    }
+
+    #[test]
+    fn metric_naming_skips_dynamic_names_and_test_items() {
+        // A non-literal first argument cannot be checked here; the
+        // helper's own literal call sites are linted instead.
+        let dynamic = "fn f(reg: &R, name: &str) { reg.counter(name, \"h\"); }";
+        assert!(lint_file("metrics/example.rs", dynamic).is_empty());
+        // Registrations inside #[cfg(test)] items are excised.
+        let test_only =
+            "#[cfg(test)]\nmod tests {\n    fn f(reg: &R) { reg.gauge(\"nope\", \"h\"); }\n}\n";
+        assert!(lint_file("metrics/example.rs", test_only).is_empty());
+        // A literal in live code is held to the convention everywhere.
+        let live = "fn f(reg: &R) { reg.gauge(\"nope\", \"h\"); }";
+        assert!(rules_of(&lint_file("dpf/anywhere.rs", live)).contains(&"metric-naming"));
+    }
+
+    #[test]
     fn fixture_clean_passes_every_rule() {
         let vs = lint_file("protocol/clean.rs", include_str!("../fixtures/clean.rs"));
         assert!(vs.is_empty(), "{vs:?}");
@@ -895,7 +1006,7 @@ mod tests {
         assert!(vs.is_empty(), "{vs:?}");
     }
 
-    /// The acceptance gate: the real tree is clean under all six rules.
+    /// The acceptance gate: the real tree is clean under all seven rules.
     #[test]
     fn repo_tree_is_clean() {
         let src = Path::new(env!("CARGO_MANIFEST_DIR"))
